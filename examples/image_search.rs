@@ -1,0 +1,111 @@
+//! End-to-end CBMR serving driver (the paper's motivating application): an
+//! image search engine answering descriptor queries against a large
+//! reference collection.
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!   * synthetic "Web image" SIFT corpus (clustered 128-d, [0,255]);
+//!   * distorted-query workload (the Yahoo dataset protocol);
+//!   * distributed index build through the IR→BI/DP dataflow;
+//!   * **threaded** serving through QR→BI→DP→AG — one thread per stage
+//!     copy, the paper's asynchronous design;
+//!   * PJRT-compiled JAX/Pallas kernels on the hash + rank hot paths;
+//!   * recall@10 against exact ground truth, latency percentiles,
+//!     throughput, and communication metrics.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example image_search
+//! ```
+
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index, threaded::search_threaded};
+use parlsh::data::recall::recall_at_k;
+use parlsh::experiments::{backends, env_usize, world};
+use parlsh::metrics::latency_stats;
+use parlsh::util::timer::Timer;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.data.n = env_usize("PARLSH_N", 200_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 500);
+    cfg.data.clusters = (cfg.data.n / 100).max(100);
+    cfg.lsh.t = 30;
+
+    println!("== image-search e2e ==");
+    println!(
+        "corpus: {} SIFT-like descriptors; workload: {} distorted queries",
+        cfg.data.n, cfg.data.queries
+    );
+    let w = world(&cfg);
+    let b = backends(&cfg, w.data.dim);
+    println!(
+        "compute path: {} | LSH L={} M={} T={} w={}",
+        if b.engine_path { "PJRT artifacts (JAX/Pallas AOT)" } else { "scalar fallback" },
+        cfg.lsh.l,
+        cfg.lsh.m,
+        cfg.lsh.t,
+        cfg.lsh.w
+    );
+
+    // Build.
+    let t = Timer::start();
+    let mut cluster = build_index(&cfg, &w.data, b.hasher.as_ref());
+    let build_secs = t.secs();
+    println!(
+        "index: built in {:.1}s ({:.0} vec/s) — {} BI copies / {} DP copies",
+        build_secs,
+        w.data.len() as f64 / build_secs,
+        cluster.bis.len(),
+        cluster.dps.len()
+    );
+    let imb = parlsh::partition::imbalance(&cluster.dp_object_counts());
+    println!(
+        "partition ({}): imbalance {:.2}%",
+        cfg.stream.obj_map.name(),
+        imb.max_over_mean_pct
+    );
+
+    // Serve (threaded, open-loop).
+    let t = Timer::start();
+    let out = search_threaded(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref());
+    let secs = t.secs();
+    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+    let lat = latency_stats(&out.per_query_secs);
+
+    println!("== serving results ==");
+    println!(
+        "throughput: {:.1} queries/s ({} queries in {:.2}s, threaded executor)",
+        w.queries.len() as f64 / secs,
+        w.queries.len(),
+        secs
+    );
+    println!("recall@{}: {:.3}", cfg.lsh.k, recall);
+    println!(
+        "completion latency ms (open loop): mean {:.1} p50 {:.1} p90 {:.1} p99 {:.1}",
+        lat.mean_ms, lat.p50_ms, lat.p90_ms, lat.p99_ms
+    );
+    println!(
+        "traffic: {} logical msgs ({} intra-node), {} packets, {:.2} MB",
+        out.meter.logical_msgs,
+        out.meter.local_msgs,
+        out.meter.total_packets(),
+        out.meter.payload_bytes as f64 / 1e6
+    );
+    let dists: u64 = out.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+    let dups: u64 = out.work.iter().map(|(_, _, w)| w.dup_skipped).sum();
+    println!(
+        "work: {:.0} distance computations/query, {} duplicate candidates eliminated",
+        dists as f64 / w.queries.len() as f64,
+        dups
+    );
+
+    // A couple of qualitative answers.
+    for qi in 0..2usize {
+        let r = &out.results[qi];
+        println!(
+            "query {qi}: top-3 = {:?}",
+            &r[..r.len().min(3)]
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Quickstart: build a distributed multi-probe LSH index over a synthetic
+//! SIFT-like dataset and answer a few queries.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index, search};
+use parlsh::data::recall::recall_at_k;
+use parlsh::experiments::{backends, world};
+use parlsh::util::timer::Timer;
+
+fn main() {
+    // 1. Configure. Defaults follow the paper: L=6 tables, M=32 hash
+    //    functions/table, T=30 probes/table, k=10 neighbors, and the
+    //    paper's 51-node topology (10 BI nodes : 40 DP nodes : 1 head).
+    let mut cfg = Config::default();
+    cfg.data.n = 50_000; // keep the quickstart snappy
+    cfg.data.queries = 100;
+
+    // 2. Data: a clustered synthetic stand-in for BIGANN SIFT descriptors
+    //    plus distorted queries and cached exact ground truth.
+    let w = world(&cfg);
+    println!("dataset: {} x {}d, {} queries", w.data.len(), w.data.dim, w.queries.len());
+
+    // 3. Compute backends: the AOT-compiled JAX/Pallas artifacts via PJRT
+    //    when `artifacts/` exists, pure-rust scalar fallback otherwise.
+    let b = backends(&cfg, w.data.dim);
+    println!("compute path: {}", if b.engine_path { "PJRT artifacts" } else { "scalar" });
+
+    // 4. Build the distributed index (IR → BI/DP dataflow).
+    let t = Timer::start();
+    let mut cluster = build_index(&cfg, &w.data, b.hasher.as_ref());
+    println!(
+        "index built in {:.2}s: {} objects on {} DP copies, {} refs on {} BI copies",
+        t.secs(),
+        cluster.stored_objects(),
+        cluster.dps.len(),
+        cluster.bucket_references(),
+        cluster.bis.len()
+    );
+
+    // 5. Search (QR → BI → DP → AG dataflow) and score recall.
+    let t = Timer::start();
+    let out = search(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref());
+    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+    println!(
+        "searched {} queries in {:.2}s — recall@{} = {:.3}",
+        w.queries.len(),
+        t.secs(),
+        cfg.lsh.k,
+        recall
+    );
+    println!(
+        "traffic: {} logical messages, {} packets after aggregation, {:.2} MB",
+        out.meter.logical_msgs,
+        out.meter.total_packets(),
+        out.meter.payload_bytes as f64 / 1e6
+    );
+
+    // 6. Inspect one answer.
+    let q0 = &out.results[0];
+    println!("query 0 nearest neighbors (sqdist, id): {:?}", &q0[..q0.len().min(5)]);
+}

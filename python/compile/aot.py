@@ -1,0 +1,101 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out ../artifacts`` (from ``python/``).
+Emits one ``<name>.hlo.txt`` per shape variant plus ``manifest.txt`` that the
+rust artifact registry parses:
+
+    hash  <file>  b=<B> d=<D> p=<P>
+    rank  <file>  bq=<Bq> n=<N> d=<D> k=<K>
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+D = 128          # SIFT dimensionality (fixed across the paper)
+P = 256          # projection bank capacity: supports L*M <= 256 (e.g. 8x32)
+K = 16           # top-k capacity (paper uses k=10; 16 is the padded slot)
+
+HASH_BATCHES = [64, 256, 1024, 4096]
+PROJ_BATCHES = [64, 256]
+RANK_SHAPES = [(1, 256), (1, 1024), (1, 4096), (8, 1024), (16, 4096)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_hash(batch: int):
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    return jax.jit(model.hash_batch_graph).lower(
+        spec(batch, D), spec(D, P), spec(P), spec(1, 1)
+    )
+
+
+def lower_proj(batch: int):
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    return jax.jit(model.proj_batch_graph).lower(
+        spec(batch, D), spec(D, P), spec(P), spec(1, 1)
+    )
+
+
+def lower_rank(bq: int, n: int):
+    f32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    i32 = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+    fn = functools.partial(model.rank_graph, k=K)
+    return jax.jit(fn).lower(f32(bq, D), f32(n, D), i32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for b in HASH_BATCHES:
+        name = f"hash_b{b}_p{P}.hlo.txt"
+        text = to_hlo_text(lower_hash(b))
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest.append(f"hash {name} b={b} d={D} p={P}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for b in PROJ_BATCHES:
+        name = f"proj_b{b}_p{P}.hlo.txt"
+        text = to_hlo_text(lower_proj(b))
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest.append(f"proj {name} b={b} d={D} p={P}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for bq, n in RANK_SHAPES:
+        name = f"rank_q{bq}_n{n}_k{K}.hlo.txt"
+        text = to_hlo_text(lower_rank(bq, n))
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest.append(f"rank {name} bq={bq} n={n} d={D} k={K}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

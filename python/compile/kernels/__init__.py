@@ -1,0 +1,14 @@
+# L1: Pallas kernels for the LSH hot spots.
+#
+# Two kernels cover the paper's compute-intensive inner loops:
+#   * lsh_hash   - p-stable projection + quantization: floor((X @ A + b) / w)
+#   * l2_distance - blocked squared-Euclidean distances via the
+#                   ||q||^2 + ||c||^2 - 2 q.c matmul form (MXU-friendly)
+#
+# Both are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+# custom-calls); block shapes are still chosen as if targeting TPU VMEM/MXU
+# and the estimate is documented in DESIGN.md / EXPERIMENTS.md SS Perf.
+from .lsh_hash import hash_batch, proj_batch
+from .l2_distance import sqdist
+
+__all__ = ["hash_batch", "proj_batch", "sqdist"]

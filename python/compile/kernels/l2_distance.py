@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: blocked squared-Euclidean distance matrix.
+
+Computes ``D[i, j] = ||Q[i] - C[j]||^2`` using the MXU-friendly expansion
+``||q||^2 + ||c||^2 - 2 q.c`` so the dominant cost is a single matmul
+``Q @ C^T`` per candidate tile instead of the paper's per-core scalar loop.
+
+TPU mapping: candidates stream through VMEM in ``TN``-row tiles (BlockSpec
+drives the HBM->VMEM schedule the paper implemented with per-node blocking);
+the query block stays resident across the whole grid. Row norms are
+recomputed per tile on the VPU - they are O(TN*D) against the O(Bq*TN*D)
+matmul, a <1/Bq relative overhead, and recomputing avoids a second input
+stream.
+
+VMEM at the default tile (Bq<=16, TN=512, D=128, f32):
+    Q 8 KiB + C tile 256 KiB + out 32 KiB ~= 296 KiB << 16 MiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate-tile height.
+DEFAULT_TN = 512
+
+
+def _sqdist_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]
+    c = c_ref[...]
+    qn = jnp.sum(q * q, axis=1, keepdims=True)          # [Bq, 1]
+    cn = jnp.sum(c * c, axis=1, keepdims=True)          # [TN, 1]
+    dot = jnp.dot(q, c.T, preferred_element_type=jnp.float32)  # MXU
+    o_ref[...] = qn + cn.T - 2.0 * dot
+
+
+def sqdist(q, c, *, tn=DEFAULT_TN):
+    """Squared L2 distances between every query and every candidate.
+
+    Args:
+      q: ``[Bq, D]`` float32 queries.
+      c: ``[N, D]`` float32 candidates.
+
+    Returns:
+      ``[Bq, N]`` float32 squared distances.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    bq, d = q.shape
+    n = c.shape[0]
+
+    tn = min(tn, n)
+    pad = (-n) % tn
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    padded = n + pad
+
+    out = pl.pallas_call(
+        _sqdist_kernel,
+        grid=(padded // tn,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (0, 0)),
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bq, padded), jnp.float32),
+        interpret=True,
+    )(q, c)
+    return out[:, :n]

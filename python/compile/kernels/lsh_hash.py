@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: p-stable LSH projection + quantization.
+
+Computes ``H[i, j] = floor((X[i, :] . A[:, j] + b[j]) * inv_w)`` for a batch
+of vectors ``X [B, D]`` against a bank of ``P`` projection directions
+``A [D, P]`` (already transposed so the contraction is a plain matmul).
+
+TPU mapping (see DESIGN.md SS Hardware-Adaptation): the paper's per-core
+scalar dot-product loop becomes one MXU matmul per (row-tile x full bank);
+the ``floor((. + b) * inv_w)`` quantization is a VPU epilogue fused into the
+same kernel, so the projected values never round-trip to HBM.
+
+VMEM budget at the default tile (TB=128, D=128, P=256, f32):
+    X tile 64 KiB + A 128 KiB + b 1 KiB + out 128 KiB  ~= 321 KiB  << 16 MiB.
+The grid walks row tiles only; A and b are re-used across all grid steps
+(constant index_map), which a TPU backend keeps resident in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height: one MXU pass worth of rows.
+DEFAULT_TB = 128
+
+
+def _hash_kernel(x_ref, a_ref, b_ref, inv_w_ref, o_ref):
+    x = x_ref[...]
+    a = a_ref[...]
+    # MXU matmul with f32 accumulation.
+    acc = jnp.dot(x, a, preferred_element_type=jnp.float32)
+    inv_w = inv_w_ref[0, 0]
+    o_ref[...] = jnp.floor((acc + b_ref[...]) * inv_w).astype(jnp.int32)
+
+
+def _proj_kernel(x_ref, a_ref, b_ref, inv_w_ref, o_ref):
+    # Same projection, no quantization: the Query Receiver needs the raw
+    # (a.v + b)/w values because their fractional parts drive the
+    # multi-probe perturbation sequence (Lv et al. SS4).
+    x = x_ref[...]
+    a = a_ref[...]
+    acc = jnp.dot(x, a, preferred_element_type=jnp.float32)
+    inv_w = inv_w_ref[0, 0]
+    o_ref[...] = (acc + b_ref[...]) * inv_w
+
+
+def _call_bank_kernel(kernel, out_dtype, x, a, b, inv_w, tb):
+    x = jnp.asarray(x, jnp.float32)
+    a = jnp.asarray(a, jnp.float32)
+    b2 = jnp.asarray(b, jnp.float32).reshape(1, -1)
+    inv_w2 = jnp.asarray(inv_w, jnp.float32).reshape(1, 1)
+    bsz, d = x.shape
+    p = a.shape[1]
+
+    tb = min(tb, bsz)
+    pad = (-bsz) % tb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    padded = bsz + pad
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, p), out_dtype),
+        interpret=True,
+    )(x, a, b2, inv_w2)
+    return out[:bsz]
+
+
+def hash_batch(x, a, b, inv_w, *, tb=DEFAULT_TB):
+    """Quantized p-stable projections for a batch of vectors.
+
+    Args:
+      x: ``[B, D]`` float32 batch of data/query vectors.
+      a: ``[D, P]`` float32 projection bank (each column one sampled ``a``).
+      b: ``[P]`` float32 per-projection offsets, pre-sampled from U(0, w).
+      inv_w: scalar (or ``[1, 1]``) float32, reciprocal of the bucket width.
+
+    Returns:
+      ``[B, P]`` int32 quantized hash coordinates ``h_j(x_i)``.
+    """
+    return _call_bank_kernel(_hash_kernel, jnp.int32, x, a, b, inv_w, tb)
+
+
+def proj_batch(x, a, b, inv_w, *, tb=DEFAULT_TB):
+    """Raw (un-floored) projections ``(x @ a + b) * inv_w`` — same shapes as
+    :func:`hash_batch` but float32 output; `floor` gives the coordinates and
+    the fractional parts drive multi-probe."""
+    return _call_bank_kernel(_proj_kernel, jnp.float32, x, a, b, inv_w, tb)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+
+import jax.numpy as jnp
+
+
+def hash_batch_ref(x, a, b, inv_w):
+    """Reference p-stable quantized projections: floor((x @ a + b) * inv_w)."""
+    x = jnp.asarray(x, jnp.float32)
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    inv_w = jnp.float32(inv_w) if jnp.ndim(inv_w) == 0 else jnp.asarray(
+        inv_w, jnp.float32
+    ).reshape(())
+    return jnp.floor((x @ a + b[None, :]) * inv_w).astype(jnp.int32)
+
+
+def sqdist_ref(q, c):
+    """Reference squared L2 distance matrix, direct (q - c)^2 form."""
+    q = jnp.asarray(q, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    diff = q[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def rank_ref(q, c, n_valid, k):
+    """Reference top-k: indices+distances of the k nearest valid candidates."""
+    d = sqdist_ref(q, c)
+    n = c.shape[0]
+    mask = jnp.arange(n)[None, :] >= n_valid
+    d = jnp.where(mask, jnp.float32(jnp.inf), d)
+    idx = jnp.argsort(d, axis=1)[:, :k]
+    vals = jnp.take_along_axis(d, idx, axis=1)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,57 @@
+"""L2: the jax compute graphs the rust coordinator executes via PJRT.
+
+Two entry points, both built on the L1 Pallas kernels:
+
+  * ``hash_batch_graph``  - quantized p-stable projections for a batch of
+    vectors against the full projection bank (all L tables' M functions
+    concatenated into one ``P = L*M``-column matmul).
+  * ``rank_graph``        - candidate ranking: masked squared distances +
+    ``top_k`` selection, returning (distances, indices) of the k nearest
+    *valid* candidates (rust pads candidate tiles to the artifact shape and
+    passes the true count in ``n_valid``).
+
+These are lowered once by ``aot.py`` per (shape-variant) and never traced at
+serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hash_batch, proj_batch, sqdist
+
+
+def hash_batch_graph(x, a, b, inv_w):
+    """[B, D] x [D, P] -> [B, P] int32 quantized hash coordinates."""
+    return (hash_batch(x, a, b, inv_w),)
+
+
+def proj_batch_graph(x, a, b, inv_w):
+    """[B, D] x [D, P] -> [B, P] float32 raw projections (multi-probe path)."""
+    return (proj_batch(x, a, b, inv_w),)
+
+
+def rank_graph(q, c, n_valid, k: int):
+    """Rank candidates for a query batch.
+
+    Args:
+      q: ``[Bq, D]`` queries.
+      c: ``[N, D]`` candidate vectors (rows >= n_valid are padding).
+      n_valid: ``[1, 1]`` int32 count of real candidate rows.
+      k: static top-k size baked into the artifact.
+
+    Returns:
+      ``(dists [Bq, k] f32, idx [Bq, k] i32)`` ascending by distance; padded
+      slots (when n_valid < k) carry +inf / arbitrary indices.
+    """
+    d = sqdist(q, c)
+    n = c.shape[0]
+    nv = n_valid.reshape(()).astype(jnp.int32)
+    mask = jnp.arange(n, dtype=jnp.int32)[None, :] >= nv
+    d = jnp.where(mask, jnp.float32(jnp.inf), d)
+    # NOTE: lax.top_k lowers to the `topk` HLO instruction, which the xla
+    # crate's xla_extension 0.5.1 text parser rejects; a full lax.sort lowers
+    # to plain `sort` HLO that round-trips. N <= 4096, so the O(N log N)
+    # sort is noise next to the distance matmul.
+    idx = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    sorted_d, sorted_i = jax.lax.sort((d, idx), dimension=1, num_keys=1)
+    return sorted_d[:, :k], sorted_i[:, :k]

@@ -1,0 +1,162 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+hypothesis sweeps shapes; fixed-seed numpy supplies the data. Tolerances:
+the kernels accumulate in f32 like the references, so allclose is tight for
+distances; hash outputs are integers and must match *exactly* except at
+quantization-boundary ties, which we exclude by construction (see
+``_safe_offsets``).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hash_batch, sqdist
+from compile.kernels.ref import hash_batch_ref, rank_ref, sqdist_ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _vectors(rng, n, d, scale=1.0):
+    return (rng.standard_normal((n, d)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- lsh_hash
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    d=st.sampled_from([4, 32, 128]),
+    p=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hash_matches_ref(b, d, p, seed):
+    rng = _rng(seed)
+    x = _vectors(rng, b, d)
+    a = _vectors(rng, d, p)
+    w = 4.0
+    off = rng.uniform(0, w, size=p).astype(np.float32)
+    got = np.asarray(hash_batch(x, a, off, 1.0 / w))
+    want = np.asarray(hash_batch_ref(x, a, off, 1.0 / w))
+    # floor() may legitimately differ by 1 when the projection lands within
+    # f32 rounding of a bucket boundary; require <0.1% such ties.
+    diff = got != want
+    assert diff.mean() < 1e-3, f"{diff.sum()} mismatches of {diff.size}"
+
+
+def test_hash_exact_on_aligned_batch():
+    rng = _rng(7)
+    x = _vectors(rng, 256, 128)
+    a = _vectors(rng, 128, 256)
+    off = rng.uniform(0, 4.0, size=256).astype(np.float32)
+    got = np.asarray(hash_batch(x, a, off, 0.25))
+    want = np.asarray(hash_batch_ref(x, a, off, 0.25))
+    assert (got != want).mean() < 1e-3
+
+
+def test_hash_is_translation_covariant():
+    # h(v) = floor((a.v + b)/w): shifting v by w * a / ||a||^2 along a single
+    # projection direction shifts that coordinate by exactly 1.
+    rng = _rng(3)
+    d = 16
+    a = _vectors(rng, d, 1)
+    x = _vectors(rng, 8, d)
+    w = 2.0
+    off = np.zeros(1, np.float32)
+    shifted = x + (w * a / (a * a).sum()).T
+    h0 = np.asarray(hash_batch(x, a, off, 1.0 / w))
+    h1 = np.asarray(hash_batch(shifted, a, off, 1.0 / w))
+    assert np.abs((h1 - h0) - 1).max() <= 1  # exact 1 except boundary ties
+
+
+def test_hash_batch_of_one():
+    rng = _rng(11)
+    x = _vectors(rng, 1, 128)
+    a = _vectors(rng, 128, 256)
+    off = rng.uniform(0, 4.0, size=256).astype(np.float32)
+    got = np.asarray(hash_batch(x, a, off, 0.25))
+    assert got.shape == (1, 256)
+
+
+# ------------------------------------------------------------- l2_distance
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bq=st.integers(1, 17),
+    n=st.integers(1, 1200),
+    d=st.sampled_from([4, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sqdist_matches_ref(bq, n, d, seed):
+    rng = _rng(seed)
+    q = _vectors(rng, bq, d)
+    c = _vectors(rng, n, d)
+    got = np.asarray(sqdist(q, c))
+    want = np.asarray(sqdist_ref(q, c))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_sqdist_zero_diagonal():
+    rng = _rng(5)
+    v = _vectors(rng, 64, 128)
+    d = np.asarray(sqdist(v, v))
+    assert np.abs(np.diag(d)).max() < 1e-2
+    assert (d + 1e-2 >= 0).all()
+
+
+def test_sqdist_sift_scale():
+    # SIFT-like magnitudes (0..255) stress f32 cancellation in the
+    # ||q||^2+||c||^2-2qc form; tolerance is relative to the ~1e6 scale.
+    rng = _rng(9)
+    q = rng.uniform(0, 255, (4, 128)).astype(np.float32)
+    c = rng.uniform(0, 255, (700, 128)).astype(np.float32)
+    got = np.asarray(sqdist(q, c))
+    want = np.asarray(sqdist_ref(q, c))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1.0)
+
+
+# ------------------------------------------------------------------ model
+
+
+def test_rank_graph_matches_ref():
+    from compile import model
+
+    rng = _rng(13)
+    q = _vectors(rng, 2, 128)
+    c = _vectors(rng, 256, 128)
+    n_valid = np.array([[200]], np.int32)
+    k = 10
+    dists, idx = model.rank_graph(q, c, n_valid, k)
+    rvals, ridx = rank_ref(q, c, 200, k)
+    np.testing.assert_allclose(np.asarray(dists), np.asarray(rvals), rtol=1e-4, atol=1e-3)
+    # indices may differ on exact ties; compare by distance values instead.
+    assert np.asarray(idx).max() < 200
+
+
+def test_rank_graph_respects_n_valid():
+    from compile import model
+
+    rng = _rng(17)
+    q = _vectors(rng, 1, 128)
+    c = np.zeros((64, 128), np.float32)  # padding rows are all-zero = near q?
+    c[:4] = _vectors(rng, 4, 128) + 10.0  # only 4 valid, far away
+    n_valid = np.array([[4]], np.int32)
+    dists, idx = model.rank_graph(q, c, n_valid, 10)
+    idx = np.asarray(idx)
+    dists = np.asarray(dists)
+    assert (idx[0, :4] < 4).all()
+    assert np.isinf(dists[0, 4:]).all()  # only 4 valid candidates exist
+
+
+def test_rank_graph_n_valid_zero():
+    from compile import model
+
+    rng = _rng(19)
+    q = _vectors(rng, 1, 128)
+    c = _vectors(rng, 32, 128)
+    dists, _ = model.rank_graph(q, c, np.array([[0]], np.int32), 10)
+    assert np.isinf(np.asarray(dists)).all()

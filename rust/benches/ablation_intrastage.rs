@@ -1,0 +1,17 @@
+//! Bench: §V-B ablation — intra-stage parallelism (one multithreaded copy
+//! per node) vs classic one-process-per-core MPI topology.
+//! Run via `cargo bench --bench ablation_intrastage`.
+
+fn main() {
+    println!("== Ablation: intra-stage parallelism (paper §V-B) ==");
+    println!("(paper: per-node copies exchange >6x fewer messages than per-core)");
+    let t = std::time::Instant::now();
+    parlsh::experiments::ablation_intrastage().print();
+    println!();
+    println!("== Ablation: labeled-stream message aggregation ==");
+    parlsh::experiments::ablation_aggregation().print();
+    println!();
+    println!("== Ablation: async comm/compute overlap (cluster model) ==");
+    parlsh::experiments::ablation_async().print();
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

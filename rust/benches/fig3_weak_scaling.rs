@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Figure 3 (weak-scaling efficiency).
+//! Run via `cargo bench --bench fig3_weak_scaling`.
+
+fn main() {
+    println!("== Fig. 3: weak-scaling efficiency (modeled 51-node cluster) ==");
+    println!("(paper: ~0.90 efficiency at 801 cores / 51 nodes)");
+    let t = std::time::Instant::now();
+    parlsh::experiments::fig3_weak_scaling().print();
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Figure 4 (execution time & recall vs probes T).
+//! Run via `cargo bench --bench fig4_multiprobe`.
+
+fn main() {
+    println!("== Fig. 4: multi-probe trade-off (time & recall vs T) ==");
+    println!("(paper: T 60→120 costs only 1.35x time; recall keeps rising)");
+    let t = std::time::Instant::now();
+    let pts = parlsh::experiments::multiprobe_sweep(&[1, 30, 60, 90, 120]);
+    parlsh::experiments::fig4_table(&pts).print();
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

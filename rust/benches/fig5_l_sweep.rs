@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Figure 5 (hash-table count L at iso-recall).
+//! Run via `cargo bench --bench fig5_l_sweep`.
+
+fn main() {
+    println!("== Fig. 5: L sweep at iso-recall (~0.74) ==");
+    println!("(paper: more tables → lower time at matched recall, more memory)");
+    let t = std::time::Instant::now();
+    parlsh::experiments::fig5_l_sweep(&[4, 6, 8], 0.74).print();
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

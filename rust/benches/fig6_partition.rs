@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Figure 6 + §V-E (partition strategies).
+//! Run via `cargo bench --bench fig6_partition`.
+
+fn main() {
+    println!("== Fig. 6: partition strategies (L=6 M=32 T=60) ==");
+    println!("(paper: mod 246s ≈ zorder 242s; LSH ≥1.68x faster, fewer msgs;");
+    println!(" imbalance: mod 0%, zorder 0.01%, lsh 1.80%)");
+    let t = std::time::Instant::now();
+    parlsh::experiments::fig6_partition().print();
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

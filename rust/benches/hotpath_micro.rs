@@ -1,0 +1,116 @@
+//! Microbenchmarks of the serving hot paths (the criterion substitute):
+//! scalar vs PJRT-artifact hashing and ranking, bucket lookups, probe
+//! generation, top-k. Used by the §Perf optimization pass.
+//! Run via `cargo bench --bench hotpath_micro`.
+
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::core::multiprobe::probe_sequence;
+use parlsh::core::topk::TopK;
+use parlsh::data::sqdist;
+use parlsh::metrics::Table;
+use parlsh::runtime::{Hasher, Ranker, ScalarHasher, ScalarRanker};
+use parlsh::util::rng::Rng;
+use parlsh::util::timer::bench_loop;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let dim = 128;
+    let mut table = Table::new(&["op", "batch", "ns/item", "items/s"]);
+    let mut row = |op: &str, batch: usize, secs_per_iter: f64, items: usize| {
+        let ns = secs_per_iter * 1e9 / items as f64;
+        table.row(&[
+            op.into(),
+            format!("{batch}"),
+            format!("{ns:.0}"),
+            format!("{:.2e}", 1e9 / ns),
+        ]);
+    };
+
+    // --- scalar distance ---
+    let pool: Vec<f32> = (0..1024 * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
+    let q: Vec<f32> = (0..dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
+    let mut acc = 0f32;
+    let mut i = 0usize;
+    let per = bench_loop(0.3, 16, || {
+        for c in 0..1024 {
+            acc += sqdist(&q, &pool[((i + c) % 1024) * dim..((i + c) % 1024 + 1) * dim]);
+        }
+        i += 7;
+    });
+    std::hint::black_box(acc);
+    row("sqdist (scalar)", 1024, per, 1024);
+
+    // --- hashing: scalar vs engine ---
+    let params = LshParams { l: 6, m: 32, w: 900.0, k: 10, t: 30, seed: 1 };
+    let family = HashFamily::sample(dim, params);
+    let scalar_hasher = ScalarHasher { family: family.clone() };
+    for rows in [64usize, 1024] {
+        let x: Vec<f32> = (0..rows * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
+        let per = bench_loop(0.3, 4, || {
+            std::hint::black_box(scalar_hasher.hash_batch(&x, rows));
+        });
+        row("hash_batch (scalar)", rows, per, rows);
+    }
+
+    let engine = parlsh::experiments::engine();
+    if let Some(e) = &engine {
+        e.set_family(&family).unwrap();
+        let hasher = parlsh::runtime::engine::EngineHasher {
+            engine: e.clone(),
+            p_used: params.projections(),
+        };
+        for rows in [64usize, 1024, 4096] {
+            let x: Vec<f32> =
+                (0..rows * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
+            let per = bench_loop(0.3, 4, || {
+                std::hint::black_box(hasher.hash_batch(&x, rows));
+            });
+            row("hash_batch (PJRT)", rows, per, rows);
+        }
+    } else {
+        println!("(no artifacts: engine rows skipped)");
+    }
+
+    // --- ranking: scalar vs engine ---
+    let scalar_ranker = ScalarRanker { dim };
+    for n in [256usize, 4096] {
+        let c: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
+        let per = bench_loop(0.3, 4, || {
+            std::hint::black_box(scalar_ranker.rank(&q, &c, n, 10));
+        });
+        row("rank (scalar)", n, per, n);
+    }
+    if let Some(e) = &engine {
+        let ranker = parlsh::runtime::engine::EngineRanker { engine: e.clone() };
+        for n in [256usize, 4096] {
+            let c: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
+            let per = bench_loop(0.3, 4, || {
+                std::hint::black_box(ranker.rank(&q, &c, n, 10));
+            });
+            row("rank (PJRT)", n, per, n);
+        }
+    }
+
+    // --- probe-sequence generation ---
+    let fracs: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+    for t in [30usize, 120] {
+        let per = bench_loop(0.2, 16, || {
+            std::hint::black_box(probe_sequence(&fracs, t));
+        });
+        row("probe_sequence", t, per, 1);
+    }
+
+    // --- top-k ---
+    let vals: Vec<f32> = (0..10_000).map(|_| rng.f32()).collect();
+    let per = bench_loop(0.2, 8, || {
+        let mut tk = TopK::new(10);
+        for (i, &v) in vals.iter().enumerate() {
+            tk.push(v, i as u32);
+        }
+        std::hint::black_box(tk.len());
+    });
+    row("topk push", 10_000, per, 10_000);
+
+    println!("== hot-path microbenchmarks ==");
+    table.print();
+}

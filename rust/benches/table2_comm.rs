@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Table II (data volume & messages vs probes T).
+//! Run via `cargo bench --bench table2_comm`.
+
+fn main() {
+    println!("== Table II: communication vs T ==");
+    println!("(paper: T 60→120 grows volume 1.22x and messages 1.29x — sublinear)");
+    let t = std::time::Instant::now();
+    let pts = parlsh::experiments::multiprobe_sweep(&[1, 30, 60, 90, 120]);
+    parlsh::experiments::table2(&pts).print();
+    // the paper's headline ratios
+    if pts.len() >= 2 {
+        let t60 = pts.iter().find(|p| p.t == 60);
+        let t120 = pts.iter().find(|p| p.t == 120);
+        if let (Some(a), Some(b)) = (t60, t120) {
+            println!(
+                "T 60→120: volume x{:.2}, messages x{:.2} (paper: x1.22, x1.29)",
+                b.payload_gb / a.payload_gb,
+                b.logical_msgs as f64 / a.logical_msgs as f64
+            );
+        }
+    }
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

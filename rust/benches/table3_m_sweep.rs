@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table III (hash-function count M vs time/recall).
+//! Run via `cargo bench --bench table3_m_sweep`.
+
+fn main() {
+    println!("== Table III: M sweep (T=30, L=6) ==");
+    println!("(paper: M=28 → 3463s/.80, M=30 → 265s/.73, M=32 → 262s/.66)");
+    let t = std::time::Instant::now();
+    parlsh::experiments::table3_m_sweep(&[28, 30, 32]).print();
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

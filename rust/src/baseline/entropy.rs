@@ -1,0 +1,122 @@
+//! Entropy-based probing (Panigrahy, SODA'06) — the precursor the paper's
+//! §III-C describes: instead of deriving probe buckets from boundary
+//! distances (multi-probe), sample random points in the query's
+//! neighborhood and visit the buckets *they* hash to.
+//!
+//! Multi-probe LSH (Lv et al.) was introduced precisely because it reaches
+//! the same recall with fewer bucket accesses; `rust/tests` +
+//! `examples/multiprobe_sweep.rs` reproduce that comparison on this
+//! implementation.
+
+use crate::core::lsh::HashFamily;
+use crate::util::rng::Rng;
+
+/// Entropy prober: perturbation sampling around the query.
+pub struct EntropyProber<'a> {
+    pub family: &'a HashFamily,
+    /// Std-dev of the Gaussian neighborhood samples (≈ target NN radius).
+    pub perturb_std: f32,
+    /// Cap on sampling attempts per requested probe (distinct buckets can
+    /// be slow to find once the neighborhood is exhausted).
+    pub max_attempts_factor: usize,
+}
+
+impl<'a> EntropyProber<'a> {
+    pub fn new(family: &'a HashFamily, perturb_std: f32) -> Self {
+        EntropyProber { family, perturb_std, max_attempts_factor: 16 }
+    }
+
+    /// Up to `t` distinct probe buckets per table (home bucket first),
+    /// derived from hashed neighborhood samples. Deterministic in `seed`.
+    pub fn probes(&self, q: &[f32], t: usize, seed: u64) -> Vec<(u8, u64)> {
+        let l = self.family.params.l;
+        let mut rng = Rng::new(seed ^ 0xE17120);
+        let mut out = Vec::with_capacity(l * t);
+        let home = self.family.bucket_keys(q);
+        let mut per_table: Vec<Vec<u64>> = home.iter().map(|&k| vec![k]).collect();
+        let mut need: usize = per_table.iter().map(|v| t.saturating_sub(v.len())).sum();
+        let mut attempts = 0usize;
+        let budget = self.max_attempts_factor * l * t;
+        let mut sample = vec![0f32; q.len()];
+        while need > 0 && attempts < budget {
+            attempts += 1;
+            for (slot, &x) in sample.iter_mut().zip(q) {
+                *slot = x + self.perturb_std * rng.gaussian_f32();
+            }
+            let keys = self.family.bucket_keys(&sample);
+            for (table, key) in keys.into_iter().enumerate() {
+                let bucket_list = &mut per_table[table];
+                if bucket_list.len() < t && !bucket_list.contains(&key) {
+                    bucket_list.push(key);
+                    need -= 1;
+                }
+            }
+        }
+        for (table, keys) in per_table.into_iter().enumerate() {
+            for key in keys {
+                out.push((table as u8, key));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::lsh::LshParams;
+    use crate::util::rng::Rng;
+
+    fn family() -> HashFamily {
+        HashFamily::sample(
+            32,
+            LshParams { l: 4, m: 6, w: 8.0, k: 5, t: 1, seed: 5 },
+        )
+    }
+
+    fn query(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..32).map(|_| rng.gaussian_f32() * 10.0).collect()
+    }
+
+    #[test]
+    fn includes_home_buckets_and_distinct_keys() {
+        let fam = family();
+        let prober = EntropyProber::new(&fam, 1.0);
+        let q = query(3);
+        let probes = prober.probes(&q, 8, 7);
+        let home = fam.bucket_keys(&q);
+        for (t, &h) in home.iter().enumerate() {
+            assert!(probes.contains(&(t as u8, h)), "home bucket missing");
+        }
+        // distinct within each table
+        for t in 0..4u8 {
+            let keys: Vec<u64> = probes
+                .iter()
+                .filter(|(tt, _)| *tt == t)
+                .map(|&(_, k)| k)
+                .collect();
+            let set: std::collections::HashSet<_> = keys.iter().collect();
+            assert_eq!(set.len(), keys.len());
+            assert!(keys.len() <= 8);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let fam = family();
+        let prober = EntropyProber::new(&fam, 1.0);
+        let q = query(5);
+        assert_eq!(prober.probes(&q, 6, 1), prober.probes(&q, 6, 1));
+        assert_ne!(prober.probes(&q, 6, 1), prober.probes(&q, 6, 2));
+    }
+
+    #[test]
+    fn larger_std_reaches_more_buckets() {
+        let fam = family();
+        let q = query(9);
+        let near = EntropyProber::new(&fam, 0.01).probes(&q, 16, 3).len();
+        let far = EntropyProber::new(&fam, 4.0).probes(&q, 16, 3).len();
+        assert!(far >= near, "far {far} < near {near}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Exact brute-force search (the quality upper bound).
+
+use crate::core::topk::TopK;
+use crate::data::{sqdist, Dataset};
+
+/// Linear-scan exact k-NN.
+pub struct ExactSearch<'a> {
+    pub data: &'a Dataset,
+}
+
+impl<'a> ExactSearch<'a> {
+    pub fn new(data: &'a Dataset) -> Self {
+        ExactSearch { data }
+    }
+
+    pub fn search(&self, q: &[f32], k: usize) -> Vec<(f32, u32)> {
+        let mut tk = TopK::new(k);
+        for i in 0..self.data.len() {
+            tk.push(sqdist(q, self.data.get(i)), i as u32);
+        }
+        tk.into_sorted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synthesize, SynthSpec};
+
+    #[test]
+    fn exact_is_exact() {
+        let ds = synthesize(SynthSpec { n: 300, dim: 16, clusters: 5, ..Default::default() });
+        let ex = ExactSearch::new(&ds);
+        let q = ds.get(7).to_vec();
+        let res = ex.search(&q, 3);
+        assert_eq!(res[0], (0.0, 7)); // itself
+        // monotone distances
+        assert!(res[0].0 <= res[1].0 && res[1].0 <= res[2].0);
+    }
+}

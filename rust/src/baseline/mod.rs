@@ -1,0 +1,18 @@
+//! Comparators: the sequential in-memory multi-probe LSH the paper
+//! parallelizes (§III), and exact brute-force search.
+//!
+//! The sequential baseline shares the hash family, bucket keying, and probe
+//! generation with the distributed pipeline, so a distributed search must
+//! return *identical* results — the strongest correctness signal we have
+//! (`rust/tests/integration_pipeline.rs`). It is also the reference point
+//! for the ablation benches.
+
+pub mod entropy;
+pub mod exact;
+pub mod sequential;
+pub mod tune;
+
+pub use entropy::EntropyProber;
+pub use exact::ExactSearch;
+pub use sequential::SequentialLsh;
+pub use tune::{suggest_w, tune_m, tune_t};

@@ -1,0 +1,167 @@
+//! Sequential multi-probe LSH (the algorithm of §III in one address space).
+
+use crate::core::lsh::{HashFamily, LshParams};
+use crate::core::topk::TopK;
+use crate::data::{sqdist, Dataset};
+use std::collections::HashMap;
+
+/// Classic single-process LSH index: L hash tables over one dataset copy.
+pub struct SequentialLsh {
+    pub family: HashFamily,
+    /// One bucket map per table: key → object ids.
+    tables: Vec<HashMap<u64, Vec<u32>>>,
+    data: Dataset,
+}
+
+impl SequentialLsh {
+    /// Build the index (hashes every object into all L tables).
+    pub fn build(dataset: &Dataset, params: LshParams) -> SequentialLsh {
+        let family = HashFamily::sample(dataset.dim, params);
+        let mut tables: Vec<HashMap<u64, Vec<u32>>> =
+            (0..params.l).map(|_| HashMap::new()).collect();
+        for i in 0..dataset.len() {
+            let coords = family.hash_coords(dataset.get(i));
+            for (t, table) in tables.iter_mut().enumerate() {
+                let key = family.bucket_key(t, &coords);
+                table.entry(key).or_default().push(i as u32);
+            }
+        }
+        SequentialLsh { family, tables, data: dataset.clone() }
+    }
+
+    /// Total stored references (n · L).
+    pub fn reference_count(&self) -> usize {
+        self.tables
+            .iter()
+            .map(|t| t.values().map(|v| v.len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Search with `t_probes` probes per table; returns global top-k
+    /// `(sqdist, id)` ascending, plus the number of distance computations.
+    pub fn search(&self, q: &[f32], t_probes: usize, k: usize) -> (Vec<(f32, u32)>, usize) {
+        let raw = self.family.raw_projections(q);
+        let probes = self.family.query_probes(&raw, t_probes);
+        let mut seen = std::collections::HashSet::new();
+        let mut tk = TopK::new(k);
+        let mut dists = 0usize;
+        for (table, key) in probes {
+            if let Some(ids) = self.tables[table as usize].get(&key) {
+                for &id in ids {
+                    if !seen.insert(id) {
+                        continue;
+                    }
+                    tk.push(sqdist(q, self.data.get(id as usize)), id);
+                    dists += 1;
+                }
+            }
+        }
+        (tk.into_sorted(), dists)
+    }
+
+    /// Search over an explicit probe set (prober comparisons: multi-probe
+    /// vs entropy-based probing share this ranking path).
+    pub fn search_with_probes(
+        &self,
+        q: &[f32],
+        probes: &[(u8, u64)],
+        k: usize,
+    ) -> (Vec<(f32, u32)>, usize) {
+        let mut seen = std::collections::HashSet::new();
+        let mut tk = TopK::new(k);
+        let mut dists = 0usize;
+        for &(table, key) in probes {
+            if let Some(ids) = self.tables[table as usize].get(&key) {
+                for &id in ids {
+                    if !seen.insert(id) {
+                        continue;
+                    }
+                    tk.push(sqdist(q, self.data.get(id as usize)), id);
+                    dists += 1;
+                }
+            }
+        }
+        (tk.into_sorted(), dists)
+    }
+
+    /// Candidate ids a query retrieves (pre-ranking) — used to compare
+    /// bucket-visit behaviour with the distributed version.
+    pub fn candidates(&self, q: &[f32], t_probes: usize) -> Vec<u32> {
+        let raw = self.family.raw_projections(q);
+        let probes = self.family.query_probes(&raw, t_probes);
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for (table, key) in probes {
+            if let Some(ids) = self.tables[table as usize].get(&key) {
+                for &id in ids {
+                    if seen.insert(id) {
+                        out.push(id);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
+
+    fn params() -> LshParams {
+        LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 }
+    }
+
+    #[test]
+    fn indexes_all_objects() {
+        let ds = synthesize(SynthSpec { n: 500, clusters: 20, ..Default::default() });
+        let idx = SequentialLsh::build(&ds, params());
+        assert_eq!(idx.reference_count(), 500 * 4);
+    }
+
+    #[test]
+    fn finds_near_duplicates() {
+        let ds = synthesize(SynthSpec { n: 3_000, clusters: 60, ..Default::default() });
+        let idx = SequentialLsh::build(&ds, params());
+        let (qs, bases) = distorted_queries(&ds, 40, 2.0, 5);
+        let mut hits = 0;
+        for i in 0..qs.len() {
+            let (res, _) = idx.search(qs.get(i), 8, 5);
+            if res.iter().any(|&(_, id)| id == bases[i]) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 28, "sequential recall too low: {hits}/40");
+    }
+
+    #[test]
+    fn more_probes_never_fewer_candidates() {
+        let ds = synthesize(SynthSpec { n: 2_000, clusters: 40, ..Default::default() });
+        let idx = SequentialLsh::build(&ds, params());
+        let (qs, _) = distorted_queries(&ds, 10, 4.0, 9);
+        for i in 0..qs.len() {
+            let c1 = idx.candidates(qs.get(i), 1).len();
+            let c8 = idx.candidates(qs.get(i), 8).len();
+            let c32 = idx.candidates(qs.get(i), 32).len();
+            assert!(c8 >= c1);
+            assert!(c32 >= c8);
+        }
+    }
+
+    #[test]
+    fn results_sorted_and_deduped() {
+        let ds = synthesize(SynthSpec { n: 1_000, clusters: 10, ..Default::default() });
+        let idx = SequentialLsh::build(&ds, params());
+        let (qs, _) = distorted_queries(&ds, 5, 4.0, 1);
+        for i in 0..qs.len() {
+            let (res, _) = idx.search(qs.get(i), 16, 10);
+            for w in res.windows(2) {
+                assert!(w[0].0 <= w[1].0);
+            }
+            let ids: std::collections::HashSet<u32> =
+                res.iter().map(|&(_, id)| id).collect();
+            assert_eq!(ids.len(), res.len(), "duplicate ids in results");
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! LSH parameter tuning (the paper's §V-D "tuning phase": M and L are tuned
+//! on the sequential version over a small partition of the dataset before
+//! large-scale runs; w likewise needs to match the data scale).
+//!
+//! * [`suggest_w`] picks a quantization width from the data's near-neighbor
+//!   distance scale (sampled, no ground truth needed).
+//! * [`tune_t`] finds the smallest probe count T reaching a target recall
+//!   on a sample, using the sequential baseline.
+//! * [`tune_m`] scans M around a starting point and reports the best
+//!   (time-proxy, recall) trade-off subject to a recall floor.
+
+use crate::baseline::sequential::SequentialLsh;
+use crate::core::lsh::LshParams;
+use crate::data::groundtruth::ground_truth_scalar;
+use crate::data::recall::recall_at_k;
+use crate::data::{sqdist, Dataset};
+use crate::util::rng::Rng;
+
+/// Suggest w from the sampled distance scale: the median distance between a
+/// point and its nearest neighbor within a random sample, scaled so an
+/// M-function concatenation keeps near pairs co-bucketed with useful
+/// probability (empirically ≈ 3× the median sampled NN distance / √M...
+/// the constant is calibrated on the synthetic stand-in; treat as a
+/// starting point, then refine with [`tune_t`]).
+pub fn suggest_w(data: &Dataset, sample: usize, seed: u64) -> f32 {
+    assert!(data.len() >= 2);
+    let mut rng = Rng::new(seed);
+    let n = data.len();
+    let s = sample.clamp(2, n).min(512);
+    let idx = rng.sample_indices(n, s);
+    // NN distance within the sample (upper bound of the true NN distance).
+    let mut nn = Vec::with_capacity(s);
+    for (a, &i) in idx.iter().enumerate() {
+        let mut best = f32::INFINITY;
+        for (b, &j) in idx.iter().enumerate() {
+            if a != b {
+                best = best.min(sqdist(data.get(i), data.get(j)));
+            }
+        }
+        nn.push(best.sqrt());
+    }
+    nn.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = nn[nn.len() / 2];
+    (median * 2.0).max(1.0)
+}
+
+/// Result of a tuning sweep step.
+#[derive(Clone, Copy, Debug)]
+pub struct TunePoint {
+    pub t: usize,
+    pub m: usize,
+    pub recall: f64,
+    /// Distance computations per query (the execution-time proxy).
+    pub dists_per_query: f64,
+}
+
+/// Smallest T (doubling search, capped) whose recall on the sample reaches
+/// `target`. Returns the full sweep trace; the last point is the answer.
+pub fn tune_t(
+    data: &Dataset,
+    queries: &Dataset,
+    params: LshParams,
+    target: f64,
+    t_cap: usize,
+) -> Vec<TunePoint> {
+    let gt = ground_truth_scalar(data, queries, params.k, 2);
+    let index = SequentialLsh::build(data, params);
+    let mut out = Vec::new();
+    let mut t = 1usize;
+    loop {
+        let mut retrieved = Vec::with_capacity(queries.len());
+        let mut dists = 0usize;
+        for qi in 0..queries.len() {
+            let (res, d) = index.search(queries.get(qi), t, params.k);
+            dists += d;
+            retrieved.push(res.into_iter().map(|(_, id)| id).collect::<Vec<_>>());
+        }
+        let recall = recall_at_k(&retrieved, &gt);
+        out.push(TunePoint {
+            t,
+            m: params.m,
+            recall,
+            dists_per_query: dists as f64 / queries.len() as f64,
+        });
+        if recall >= target || t >= t_cap {
+            return out;
+        }
+        t *= 2;
+    }
+}
+
+/// Scan M over `ms` at fixed T; return points (caller picks the cheapest
+/// one above its recall floor — the paper's Table III decision).
+pub fn tune_m(
+    data: &Dataset,
+    queries: &Dataset,
+    base: LshParams,
+    ms: &[usize],
+) -> Vec<TunePoint> {
+    let gt = ground_truth_scalar(data, queries, base.k, 2);
+    let mut out = Vec::new();
+    for &m in ms {
+        let params = LshParams { m, ..base };
+        let index = SequentialLsh::build(data, params);
+        let mut retrieved = Vec::with_capacity(queries.len());
+        let mut dists = 0usize;
+        for qi in 0..queries.len() {
+            let (res, d) = index.search(queries.get(qi), params.t, params.k);
+            dists += d;
+            retrieved.push(res.into_iter().map(|(_, id)| id).collect::<Vec<_>>());
+        }
+        out.push(TunePoint {
+            t: params.t,
+            m,
+            recall: recall_at_k(&retrieved, &gt),
+            dists_per_query: dists as f64 / queries.len() as f64,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
+
+    fn world() -> (Dataset, Dataset) {
+        let ds = synthesize(SynthSpec { n: 3_000, clusters: 60, ..Default::default() });
+        let (qs, _) = distorted_queries(&ds, 25, 5.0, 7);
+        (ds, qs)
+    }
+
+    #[test]
+    fn suggest_w_positive_and_scales() {
+        let (ds, _) = world();
+        let w = suggest_w(&ds, 256, 1);
+        assert!(w > 10.0 && w < 10_000.0, "w={w}");
+        // doubling the data scale roughly doubles w
+        let mut scaled = Dataset::new(ds.dim);
+        for i in 0..500 {
+            let v: Vec<f32> = ds.get(i).iter().map(|x| x * 2.0).collect();
+            scaled.push(&v);
+        }
+        let w2 = suggest_w(&scaled, 256, 1);
+        assert!(w2 > w * 1.3, "w={w} w2={w2}");
+    }
+
+    #[test]
+    fn tune_t_reaches_target_monotonically() {
+        let (ds, qs) = world();
+        let params = LshParams { l: 4, m: 8, w: 700.0, k: 5, t: 1, seed: 3 };
+        let trace = tune_t(&ds, &qs, params, 0.8, 256);
+        for w in trace.windows(2) {
+            assert!(w[1].t > w[0].t);
+            assert!(w[1].recall >= w[0].recall - 0.05, "recall regressed: {trace:?}");
+        }
+        let last = trace.last().unwrap();
+        assert!(
+            last.recall >= 0.8 || last.t >= 256,
+            "tuning neither converged nor hit the cap: {trace:?}"
+        );
+    }
+
+    #[test]
+    fn tune_m_tradeoff_direction() {
+        let (ds, qs) = world();
+        let base = LshParams { l: 4, m: 8, w: 700.0, k: 5, t: 8, seed: 3 };
+        let pts = tune_m(&ds, &qs, base, &[6, 8, 10]);
+        assert_eq!(pts.len(), 3);
+        // higher M → higher selectivity → fewer distance computations
+        assert!(pts[0].dists_per_query >= pts[2].dists_per_query);
+    }
+}

@@ -1,0 +1,299 @@
+//! Configuration system: typed config structs parsed from a TOML-subset file
+//! (`parlsh.toml`) plus `--set section.key=value` CLI overrides.
+
+use crate::core::lsh::LshParams;
+use crate::util::cli::Args;
+use crate::util::configfile::Doc;
+use anyhow::{anyhow, Result};
+
+/// Partition strategy for `obj_map` (paper §IV-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjMapStrategy {
+    /// `obj_id mod n_dp` — perfectly balanced, locality-blind.
+    Mod,
+    /// Z-order curve key, range-scaled onto copies — locality preserving.
+    ZOrder,
+    /// An independent LSH g-function — hashes co-located points together.
+    Lsh,
+}
+
+impl ObjMapStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "mod" => Ok(ObjMapStrategy::Mod),
+            "zorder" | "z-order" => Ok(ObjMapStrategy::ZOrder),
+            "lsh" => Ok(ObjMapStrategy::Lsh),
+            _ => Err(anyhow!("unknown obj_map strategy `{s}` (mod|zorder|lsh)")),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjMapStrategy::Mod => "mod",
+            ObjMapStrategy::ZOrder => "zorder",
+            ObjMapStrategy::Lsh => "lsh",
+        }
+    }
+}
+
+/// Cluster topology (the paper's testbed shape).
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Nodes hosting Bucket Index copies (paper: 10).
+    pub bi_nodes: usize,
+    /// Nodes hosting Data Points copies (paper: 40; BI:DP = 1:4).
+    pub dp_nodes: usize,
+    /// CPU cores per node (paper: 16).
+    pub cores_per_node: usize,
+    /// Aggregator copies (paper: 1 CPU core).
+    pub ag_copies: usize,
+    /// Ablation: one stage copy per *core* instead of per node (classic
+    /// MPI-style). Multiplies copy counts by `cores_per_node` and removes
+    /// intra-stage parallelism.
+    pub per_core_copies: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            bi_nodes: 10,
+            dp_nodes: 40,
+            cores_per_node: 16,
+            ag_copies: 1,
+            per_core_copies: false,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn bi_copies(&self) -> usize {
+        if self.per_core_copies {
+            self.bi_nodes * self.cores_per_node
+        } else {
+            self.bi_nodes
+        }
+    }
+    pub fn dp_copies(&self) -> usize {
+        if self.per_core_copies {
+            self.dp_nodes * self.cores_per_node
+        } else {
+            self.dp_nodes
+        }
+    }
+    pub fn total_nodes(&self) -> usize {
+        // +1 head node hosting QR/IR/AG.
+        self.bi_nodes + self.dp_nodes + 1
+    }
+    pub fn total_cores(&self) -> usize {
+        (self.bi_nodes + self.dp_nodes) * self.cores_per_node + self.ag_copies
+    }
+}
+
+/// Network model constants (FDR InfiniBand defaults, paper §V-A).
+#[derive(Clone, Copy, Debug)]
+pub struct NetParams {
+    /// Per-packet latency, microseconds.
+    pub latency_us: f64,
+    /// Link bandwidth, GB/s (FDR 4x ≈ 6.8 GB/s payload).
+    pub bandwidth_gbps: f64,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        NetParams { latency_us: 1.7, bandwidth_gbps: 6.8 }
+    }
+}
+
+/// Dataset configuration.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// "synth" or a path to `.fvecs`/`.bvecs`.
+    pub source: String,
+    pub n: usize,
+    pub queries: usize,
+    pub dim: usize,
+    pub clusters: usize,
+    pub cluster_std: f32,
+    pub distortion_std: f32,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            source: "synth".into(),
+            n: 100_000,
+            queries: 500,
+            dim: 128,
+            clusters: 2_000,
+            cluster_std: 12.0,
+            distortion_std: 8.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Stream/partition behaviour.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    pub obj_map: ObjMapStrategy,
+    /// Message aggregation buffer per destination (bytes; 0 = off).
+    pub agg_bytes: usize,
+    /// Dedup duplicate candidates at DP (paper's duplicate elimination).
+    pub dedup: bool,
+    /// Cap on candidates per query per DP message batch (0 = unlimited).
+    pub max_candidates: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            obj_map: ObjMapStrategy::Mod,
+            agg_bytes: 64 * 1024,
+            dedup: true,
+            max_candidates: 0,
+        }
+    }
+}
+
+/// Runtime (PJRT artifact) configuration.
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: String,
+    /// Use the compiled HLO path when artifacts are present.
+    pub use_engine: bool,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { artifacts_dir: "artifacts".into(), use_engine: true }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub lsh: LshParams,
+    pub cluster: ClusterConfig,
+    pub net: NetParams,
+    pub data: DataConfig,
+    pub stream: StreamConfig,
+    pub runtime: RuntimeConfig,
+}
+
+impl Config {
+    /// Build from a parsed document (all keys optional, defaults per paper).
+    pub fn from_doc(doc: &Doc) -> Result<Config> {
+        let mut c = Config::default();
+        c.lsh = LshParams {
+            l: doc.usize_or("lsh.l", c.lsh.l),
+            m: doc.usize_or("lsh.m", c.lsh.m),
+            w: doc.f64_or("lsh.w", c.lsh.w as f64) as f32,
+            k: doc.usize_or("lsh.k", c.lsh.k),
+            t: doc.usize_or("lsh.t", c.lsh.t),
+            seed: doc.i64_or("lsh.seed", c.lsh.seed as i64) as u64,
+        };
+        c.cluster = ClusterConfig {
+            bi_nodes: doc.usize_or("cluster.bi_nodes", c.cluster.bi_nodes),
+            dp_nodes: doc.usize_or("cluster.dp_nodes", c.cluster.dp_nodes),
+            cores_per_node: doc.usize_or("cluster.cores_per_node", c.cluster.cores_per_node),
+            ag_copies: doc.usize_or("cluster.ag_copies", c.cluster.ag_copies),
+            per_core_copies: doc.bool_or("cluster.per_core_copies", false),
+        };
+        c.net = NetParams {
+            latency_us: doc.f64_or("net.latency_us", c.net.latency_us),
+            bandwidth_gbps: doc.f64_or("net.bandwidth_gbps", c.net.bandwidth_gbps),
+        };
+        c.data = DataConfig {
+            source: doc.str_or("data.source", &c.data.source),
+            n: doc.usize_or("data.n", c.data.n),
+            queries: doc.usize_or("data.queries", c.data.queries),
+            dim: doc.usize_or("data.dim", c.data.dim),
+            clusters: doc.usize_or("data.clusters", c.data.clusters),
+            cluster_std: doc.f64_or("data.cluster_std", c.data.cluster_std as f64) as f32,
+            distortion_std: doc.f64_or("data.distortion_std", c.data.distortion_std as f64)
+                as f32,
+            seed: doc.i64_or("data.seed", c.data.seed as i64) as u64,
+        };
+        c.stream = StreamConfig {
+            obj_map: ObjMapStrategy::parse(&doc.str_or("stream.obj_map", "mod"))?,
+            agg_bytes: doc.usize_or("stream.agg_bytes", c.stream.agg_bytes),
+            dedup: doc.bool_or("stream.dedup", c.stream.dedup),
+            max_candidates: doc.usize_or("stream.max_candidates", 0),
+        };
+        c.runtime = RuntimeConfig {
+            artifacts_dir: doc.str_or("runtime.artifacts_dir", &c.runtime.artifacts_dir),
+            use_engine: doc.bool_or("runtime.use_engine", true),
+        };
+        if c.lsh.projections() > 256 {
+            return Err(anyhow!(
+                "L*M = {} exceeds the artifact projection bank (256)",
+                c.lsh.projections()
+            ));
+        }
+        Ok(c)
+    }
+
+    /// Load from optional file + CLI `--set` overrides.
+    pub fn load(args: &Args) -> Result<Config> {
+        let mut doc = match args.opt("config") {
+            Some(path) => Doc::load(path).map_err(|e| anyhow!(e))?,
+            None => Doc::default(),
+        };
+        for (k, v) in &args.overrides {
+            doc.set(k, v).map_err(|e| anyhow!(e))?;
+        }
+        Config::from_doc(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.lsh.l, 6);
+        assert_eq!(c.lsh.m, 32);
+        assert_eq!(c.cluster.bi_nodes, 10);
+        assert_eq!(c.cluster.dp_nodes, 40);
+        assert_eq!(c.cluster.cores_per_node, 16);
+        // 801 = (10+40)*16 + 1 AG core
+        assert_eq!(c.cluster.total_cores(), 801);
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = Doc::parse(
+            "[lsh]\nl = 8\nt = 120\n[stream]\nobj_map = \"lsh\"\nagg_bytes = 0\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.lsh.l, 8);
+        assert_eq!(c.lsh.t, 120);
+        assert_eq!(c.stream.obj_map, ObjMapStrategy::Lsh);
+        assert_eq!(c.stream.agg_bytes, 0);
+    }
+
+    #[test]
+    fn rejects_oversized_bank() {
+        let doc = Doc::parse("[lsh]\nl = 10\nm = 32\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn per_core_ablation_multiplies_copies() {
+        let mut c = Config::default();
+        assert_eq!(c.cluster.bi_copies(), 10);
+        assert_eq!(c.cluster.dp_copies(), 40);
+        c.cluster.per_core_copies = true;
+        assert_eq!(c.cluster.bi_copies(), 160);
+        assert_eq!(c.cluster.dp_copies(), 640);
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert!(ObjMapStrategy::parse("nope").is_err());
+        assert_eq!(ObjMapStrategy::parse("zorder").unwrap().name(), "zorder");
+    }
+}

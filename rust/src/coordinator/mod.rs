@@ -1,0 +1,441 @@
+//! The coordinator: wires the five stages into the index-build and search
+//! pipelines (paper §IV-A) and drives them with the deterministic inline
+//! executor.
+//!
+//! The executor processes messages in FIFO order, attributing network
+//! traffic via [`TrafficMeter`] using the stage placement (same-node
+//! deliveries are free, which is exactly how intra-stage parallelism cuts
+//! message counts). Results are bit-identical to the sequential baseline —
+//! that's the differential-testing contract (`rust/tests/
+//! integration_pipeline.rs`).
+
+pub mod persist;
+pub mod threaded;
+
+use crate::config::Config;
+use crate::core::lsh::HashFamily;
+use crate::data::Dataset;
+use crate::dataflow::message::{Dest, Msg, StageKind};
+use crate::dataflow::metrics::{TrafficMeter, WorkStats};
+use crate::dataflow::Placement;
+use crate::partition::ObjMapper;
+use crate::runtime::{Hasher, Ranker};
+use crate::stages::{AgState, BiState, DpState, InputReader, QueryReceiver};
+use crate::util::timer::Timer;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// A built distributed index: stage states + accounting.
+pub struct Cluster {
+    pub cfg: Config,
+    pub family: Arc<HashFamily>,
+    pub mapper: ObjMapper,
+    pub placement: Placement,
+    pub bis: Vec<BiState>,
+    pub dps: Vec<DpState>,
+    pub ags: Vec<AgState>,
+    /// Traffic of the index-build phase.
+    pub build_meter: TrafficMeter,
+    /// Head-node (IR) work during build.
+    pub build_head_work: WorkStats,
+    pub build_wall_secs: f64,
+}
+
+/// Output of a search phase.
+pub struct SearchOutput {
+    /// Per query (in input order): global top-k `(sqdist, id)` ascending.
+    pub results: Vec<Vec<(f32, u32)>>,
+    /// Traffic of the search phase.
+    pub meter: TrafficMeter,
+    /// Per-copy work: (stage, copy, work) — cost-model input.
+    pub work: Vec<(StageKind, u16, WorkStats)>,
+    /// Wall-clock per query (inline executor; single host core).
+    pub per_query_secs: Vec<f64>,
+    pub wall_secs: f64,
+}
+
+impl SearchOutput {
+    /// Retrieved neighbor ids per query (for recall scoring).
+    pub fn retrieved_ids(&self) -> Vec<Vec<u32>> {
+        self.results
+            .iter()
+            .map(|r| r.iter().map(|&(_, id)| id).collect())
+            .collect()
+    }
+}
+
+/// Build the distributed index over `dataset` (paper's index-build phase).
+pub fn build_index(cfg: &Config, dataset: &Dataset, hasher: &dyn Hasher) -> Cluster {
+    let timer = Timer::start();
+    let family = Arc::new(HashFamily::sample(dataset.dim, cfg.lsh));
+    let placement = Placement::new(&cfg.cluster);
+    let mapper = ObjMapper::new(
+        cfg.stream.obj_map,
+        placement.dp_copies,
+        dataset.dim,
+        cfg.lsh.seed,
+    );
+    let mut bis: Vec<BiState> = (0..placement.bi_copies)
+        .map(|c| BiState::new(c as u16, placement.ag_copies, cfg.stream.max_candidates))
+        .collect();
+    let mut dps: Vec<DpState> = (0..placement.dp_copies)
+        .map(|c| {
+            DpState::new(
+                c as u16,
+                dataset.dim,
+                cfg.lsh.k,
+                placement.ag_copies,
+                cfg.stream.dedup,
+            )
+        })
+        .collect();
+    let ags: Vec<AgState> = (0..placement.ag_copies)
+        .map(|c| AgState::new(c as u16, cfg.lsh.k))
+        .collect();
+
+    let mut meter = TrafficMeter::new(cfg.stream.agg_bytes);
+    let head = placement.head_node;
+
+    // IR streams the dataset in blocks; BI/DP consume (they emit nothing
+    // during build, so routing is single-hop).
+    let build_head_work = {
+        let mut ir = InputReader::new(&family, &mapper, placement.bi_copies);
+        let block = 8192.min(dataset.len().max(1));
+        let mut out: Vec<(Dest, Msg)> = Vec::new();
+        let mut done = 0usize;
+        while done < dataset.len() {
+            let take = (dataset.len() - done).min(block);
+            ir.index_block(
+                hasher,
+                dataset.slice_flat(done, done + take),
+                take,
+                done as u32,
+                &mut out,
+            );
+            for (dest, msg) in out.drain(..) {
+                let dst_node = placement.node_of(dest.stage, dest.copy);
+                meter.send(head, dst_node, msg.wire_size());
+                match (dest.stage, msg) {
+                    (StageKind::Bi, Msg::IndexRef { key, id, dp, .. }) => {
+                        bis[dest.copy as usize].on_index_ref(key, id, dp);
+                    }
+                    (StageKind::Dp, Msg::StoreObject { id, v }) => {
+                        dps[dest.copy as usize].on_store(id, &v);
+                    }
+                    (stage, msg) => {
+                        panic!("unexpected build message {msg:?} to {stage:?}")
+                    }
+                }
+            }
+            done += take;
+        }
+        ir.work
+    };
+    meter.flush();
+
+    Cluster {
+        cfg: cfg.clone(),
+        family,
+        mapper,
+        placement,
+        bis,
+        dps,
+        ags,
+        build_meter: meter,
+        build_head_work,
+        build_wall_secs: timer.secs(),
+    }
+}
+
+impl Cluster {
+    /// Total objects stored across DP copies (must equal dataset size —
+    /// the no-replication invariant).
+    pub fn stored_objects(&self) -> usize {
+        self.dps.iter().map(|d| d.object_count()).sum()
+    }
+
+    /// Total bucket references across BI copies (= n · L).
+    pub fn bucket_references(&self) -> usize {
+        self.bis.iter().map(|b| b.reference_count()).sum()
+    }
+
+    /// Per-DP object counts (load-imbalance reporting, paper §V-E).
+    pub fn dp_object_counts(&self) -> Vec<usize> {
+        self.dps.iter().map(|d| d.object_count()).collect()
+    }
+
+    /// Online insert (paper §IV-A: indexing and searching may overlap, e.g.
+    /// during an index update): index `rows` new vectors, assigning them
+    /// ids following the current maximum. Returns the assigned id range.
+    pub fn insert_objects(
+        &mut self,
+        flat: &[f32],
+        rows: usize,
+        hasher: &dyn Hasher,
+    ) -> std::ops::Range<u32> {
+        let id_base = self.stored_objects() as u32;
+        let placement = self.placement.clone();
+        let head = placement.head_node;
+        let mut ir = InputReader::new(&self.family, &self.mapper, placement.bi_copies);
+        let mut out: Vec<(Dest, Msg)> = Vec::new();
+        ir.index_block(hasher, flat, rows, id_base, &mut out);
+        for (dest, msg) in out.drain(..) {
+            let dst_node = placement.node_of(dest.stage, dest.copy);
+            self.build_meter.send(head, dst_node, msg.wire_size());
+            match (dest.stage, msg) {
+                (StageKind::Bi, Msg::IndexRef { key, id, dp, .. }) => {
+                    self.bis[dest.copy as usize].on_index_ref(key, id, dp);
+                }
+                (StageKind::Dp, Msg::StoreObject { id, v }) => {
+                    self.dps[dest.copy as usize].on_store(id, &v);
+                }
+                (stage, msg) => panic!("unexpected insert message {msg:?} to {stage:?}"),
+            }
+        }
+        self.build_meter.flush();
+        self.build_head_work.add(&ir.work);
+        id_base..id_base + rows as u32
+    }
+
+    /// Snapshot per-copy work counters and reset them (phase accounting).
+    pub fn take_work(&mut self, head_extra: &WorkStats) -> Vec<(StageKind, u16, WorkStats)> {
+        let mut out = Vec::new();
+        out.push((StageKind::Qr, 0, *head_extra));
+        for bi in &mut self.bis {
+            out.push((StageKind::Bi, bi.copy, std::mem::take(&mut bi.work)));
+        }
+        for dp in &mut self.dps {
+            out.push((StageKind::Dp, dp.copy, std::mem::take(&mut dp.work)));
+        }
+        for ag in &mut self.ags {
+            out.push((StageKind::Ag, ag.copy, std::mem::take(&mut ag.work)));
+        }
+        out
+    }
+}
+
+/// Run the search phase over `queries` (paper's search pipeline iii→v),
+/// returning per-query global top-k plus exact traffic and work accounting.
+pub fn search(
+    cluster: &mut Cluster,
+    queries: &Dataset,
+    hasher: &dyn Hasher,
+    ranker: &dyn Ranker,
+) -> SearchOutput {
+    let wall = Timer::start();
+    let placement = cluster.placement.clone();
+    let mut meter = TrafficMeter::new(cluster.cfg.stream.agg_bytes);
+    let family = cluster.family.clone();
+    let mut qr = QueryReceiver::new(&family, placement.bi_copies, placement.ag_copies);
+    let head = placement.head_node;
+    let mut queue: VecDeque<(u16, Dest, Msg)> = VecDeque::new();
+    let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+    let mut per_query_secs = Vec::with_capacity(queries.len());
+
+    // §Perf: hash the whole query batch through one artifact call instead
+    // of one padded call per query.
+    let p = hasher.p();
+    let raws = hasher.proj_batch(queries.as_flat(), queries.len());
+    qr.work.hash_vectors += queries.len() as u64;
+
+    for qid in 0..queries.len() as u32 {
+        let qt = Timer::start();
+        let raw = &raws[qid as usize * p..(qid as usize + 1) * p];
+        qr.dispatch_query_raw(raw, qid, queries.get(qid as usize), &mut emitted);
+        for (dest, msg) in emitted.drain(..) {
+            let dst = placement.node_of(dest.stage, dest.copy);
+            meter.send(head, dst, msg.wire_size());
+            queue.push_back((dst, dest, msg));
+        }
+        // Drain to completion (inline executor: FIFO, deterministic).
+        while let Some((_src_node, dest, msg)) = queue.pop_front() {
+            // The handler about to run lives on this node; messages it
+            // emits are charged from here.
+            let handler_node = placement.node_of(dest.stage, dest.copy);
+            match (dest.stage, msg) {
+                (StageKind::Bi, Msg::Query { qid, probes, v }) => {
+                    let bi = &mut cluster.bis[dest.copy as usize];
+                    bi.on_query(qid, &probes, &v, &mut emitted);
+                }
+                (StageKind::Dp, Msg::CandidateReq { qid, ids, v }) => {
+                    let dp = &mut cluster.dps[dest.copy as usize];
+                    dp.on_candidates(qid, &ids, &v, ranker, &mut emitted);
+                }
+                (StageKind::Ag, Msg::QueryMeta { qid, n_bi }) => {
+                    cluster.ags[dest.copy as usize].on_query_meta(qid, n_bi);
+                }
+                (StageKind::Ag, Msg::BiMeta { qid, n_dp }) => {
+                    cluster.ags[dest.copy as usize].on_bi_meta(qid, n_dp);
+                }
+                (StageKind::Ag, Msg::LocalTopK { qid, hits }) => {
+                    cluster.ags[dest.copy as usize].on_local_topk(qid, &hits);
+                }
+                (stage, msg) => panic!("unexpected search message {msg:?} to {stage:?}"),
+            }
+            for (d2, m2) in emitted.drain(..) {
+                let dst_node = placement.node_of(d2.stage, d2.copy);
+                meter.send(handler_node, dst_node, m2.wire_size());
+                queue.push_back((dst_node, d2, m2));
+            }
+        }
+        dps_finish(cluster, qid);
+        per_query_secs.push(qt.secs());
+    }
+    meter.flush();
+
+    // Collect results in qid order.
+    let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); queries.len()];
+    for ag in &mut cluster.ags {
+        for (qid, hits) in ag.results.drain(..) {
+            results[qid as usize] = hits;
+        }
+    }
+    let work = cluster.take_work(&std::mem::take(&mut qr.work));
+    SearchOutput {
+        results,
+        meter,
+        work,
+        per_query_secs,
+        wall_secs: wall.secs(),
+    }
+}
+
+fn dps_finish(cluster: &mut Cluster, qid: u32) {
+    for dp in &mut cluster.dps {
+        dp.finish_query(qid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
+    use crate::runtime::{ScalarHasher, ScalarRanker};
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.lsh = crate::core::lsh::LshParams {
+            l: 4,
+            m: 8,
+            w: 600.0,
+            k: 5,
+            t: 8,
+            seed: 3,
+        };
+        cfg.cluster.bi_nodes = 2;
+        cfg.cluster.dp_nodes = 4;
+        cfg.data.n = 2_000;
+        cfg
+    }
+
+    fn small_world(cfg: &Config) -> (Dataset, Dataset, ScalarHasher) {
+        let ds = synthesize(SynthSpec {
+            n: cfg.data.n,
+            clusters: 50,
+            ..Default::default()
+        });
+        let (qs, _) = distorted_queries(&ds, 20, 4.0, 7);
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        (ds, qs, ScalarHasher { family })
+    }
+
+    #[test]
+    fn build_stores_every_object_exactly_once() {
+        let cfg = small_cfg();
+        let (ds, _, hasher) = small_world(&cfg);
+        let cluster = build_index(&cfg, &ds, &hasher);
+        assert_eq!(cluster.stored_objects(), ds.len());
+        assert_eq!(cluster.bucket_references(), ds.len() * cfg.lsh.l);
+    }
+
+    #[test]
+    fn search_returns_k_results_per_query() {
+        let cfg = small_cfg();
+        let (ds, qs, hasher) = small_world(&cfg);
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let ranker = ScalarRanker { dim: ds.dim };
+        let out = search(&mut cluster, &qs, &hasher, &ranker);
+        assert_eq!(out.results.len(), qs.len());
+        for r in &out.results {
+            assert!(r.len() <= cfg.lsh.k);
+            // ascending distances
+            for w in r.windows(2) {
+                assert!(w[0].0 <= w[1].0);
+            }
+        }
+        // no query left pending
+        for ag in &cluster.ags {
+            assert_eq!(ag.pending_count(), 0);
+        }
+        // traffic flowed
+        assert!(out.meter.logical_msgs > 0);
+        assert!(out.meter.payload_bytes > 0);
+    }
+
+    #[test]
+    fn distorted_queries_find_their_base() {
+        // end-to-end sanity: with generous T, most distorted queries must
+        // retrieve their base point among the k nearest.
+        let cfg = small_cfg();
+        let (ds, _, hasher) = small_world(&cfg);
+        let (qs, bases) = distorted_queries(&ds, 30, 2.0, 11);
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let ranker = ScalarRanker { dim: ds.dim };
+        let out = search(&mut cluster, &qs, &hasher, &ranker);
+        let hits = out
+            .retrieved_ids()
+            .iter()
+            .zip(&bases)
+            .filter(|(r, b)| r.contains(b))
+            .count();
+        assert!(hits >= 20, "only {hits}/30 queries found their base point");
+    }
+
+    #[test]
+    fn online_insert_is_searchable() {
+        let cfg = small_cfg();
+        let (ds, _, hasher) = small_world(&cfg);
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let n0 = cluster.stored_objects();
+
+        // Insert fresh near-duplicates of existing rows; they must become
+        // retrievable without a rebuild.
+        let (extra, bases) =
+            crate::data::synth::distorted_queries(&ds, 25, 1.0, 99);
+        let range = cluster.insert_objects(extra.as_flat(), extra.len(), &hasher);
+        assert_eq!(range, n0 as u32..(n0 + 25) as u32);
+        assert_eq!(cluster.stored_objects(), n0 + 25);
+        assert_eq!(cluster.bucket_references(), (n0 + 25) * cfg.lsh.l);
+
+        // Querying with the *same* vectors must now find the inserted ids
+        // (distance 0 → always ranked first when retrieved at all).
+        let ranker = ScalarRanker { dim: ds.dim };
+        let out = search(&mut cluster, &extra, &hasher, &ranker);
+        let hits = out
+            .results
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| r.iter().any(|&(_, id)| id == n0 as u32 + *i as u32))
+            .count();
+        assert!(hits >= 24, "only {hits}/25 inserted objects retrievable");
+        let _ = bases;
+    }
+
+    #[test]
+    fn work_accounting_resets() {
+        let cfg = small_cfg();
+        let (ds, qs, hasher) = small_world(&cfg);
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let ranker = ScalarRanker { dim: ds.dim };
+        let out = search(&mut cluster, &qs, &hasher, &ranker);
+        let total_dists: u64 = out
+            .work
+            .iter()
+            .map(|(_, _, w)| w.dists_computed)
+            .sum();
+        assert!(total_dists > 0);
+        // second snapshot is zeroed
+        let again = cluster.take_work(&WorkStats::default());
+        assert!(again.iter().all(|(_, _, w)| w.dists_computed == 0));
+    }
+}

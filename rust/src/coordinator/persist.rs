@@ -1,0 +1,268 @@
+//! Index persistence: save a built cluster to disk and load it back.
+//!
+//! Binary little-endian format, versioned:
+//!
+//! ```text
+//! magic "PLSH" | version u32 | lsh{l,m,w,k,t,seed} | dim u32
+//! | n_bi u32 | per BI: n_buckets u32, then per bucket:
+//!     key u64, n_refs u32, (id u32, dp u16)*
+//! | n_dp u32 | per DP: n_objects u32, (id u32, vector f32*dim)*
+//! ```
+//!
+//! The hash family is *not* stored — it is deterministically resampled from
+//! the persisted `(dim, seed, params)`, which the loader verifies against
+//! the supplied [`Config`].
+
+use crate::config::Config;
+use crate::coordinator::Cluster;
+use crate::core::lsh::HashFamily;
+use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::Placement;
+use crate::partition::ObjMapper;
+use crate::stages::{AgState, BiState, DpState};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::sync::Arc;
+
+const MAGIC: &[u8; 4] = b"PLSH";
+const VERSION: u32 = 1;
+
+fn w_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+fn w_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+fn w_f32<W: Write>(w: &mut W, v: f32) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+fn r_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn r_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+fn r_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn r_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Persist a built index.
+pub fn save(cluster: &Cluster, path: &str) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    let p = cluster.family.params;
+    for v in [p.l as u32, p.m as u32] {
+        w_u32(&mut w, v)?;
+    }
+    w_f32(&mut w, p.w)?;
+    for v in [p.k as u32, p.t as u32] {
+        w_u32(&mut w, v)?;
+    }
+    w_u64(&mut w, p.seed)?;
+    w_u32(&mut w, cluster.family.dim as u32)?;
+
+    w_u32(&mut w, cluster.bis.len() as u32)?;
+    for bi in &cluster.bis {
+        let buckets = bi.buckets_snapshot();
+        w_u32(&mut w, buckets.len() as u32)?;
+        for (key, refs) in buckets {
+            w_u64(&mut w, key)?;
+            w_u32(&mut w, refs.len() as u32)?;
+            for &(id, dp) in refs {
+                w_u32(&mut w, id)?;
+                w.write_all(&dp.to_le_bytes())?;
+            }
+        }
+    }
+    w_u32(&mut w, cluster.dps.len() as u32)?;
+    for dp in &cluster.dps {
+        let objs = dp.objects_snapshot();
+        w_u32(&mut w, objs.len() as u32)?;
+        for (id, v) in objs {
+            w_u32(&mut w, id)?;
+            for &x in v {
+                w_f32(&mut w, x)?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a persisted index, validating it against `cfg` (topology comes from
+/// `cfg.cluster`; LSH params must match what was saved).
+pub fn load(path: &str, cfg: &Config) -> Result<Cluster> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path}: not a parlsh index");
+    }
+    let version = r_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{path}: unsupported index version {version}");
+    }
+    let (l, m) = (r_u32(&mut r)? as usize, r_u32(&mut r)? as usize);
+    let w = r_f32(&mut r)?;
+    let (k, t) = (r_u32(&mut r)? as usize, r_u32(&mut r)? as usize);
+    let seed = r_u64(&mut r)?;
+    let dim = r_u32(&mut r)? as usize;
+    let p = cfg.lsh;
+    if (l, m, seed) != (p.l, p.m, p.seed) || (w - p.w).abs() > 1e-6 {
+        bail!(
+            "{path}: index was built with L={l} M={m} w={w} seed={seed}, \
+             config has L={} M={} w={} seed={}",
+            p.l,
+            p.m,
+            p.w,
+            p.seed
+        );
+    }
+    let _ = (k, t); // k/t are query-time knobs; cfg wins.
+
+    let placement = Placement::new(&cfg.cluster);
+    let n_bi = r_u32(&mut r)? as usize;
+    if n_bi != placement.bi_copies {
+        bail!("{path}: saved with {n_bi} BI copies, config has {}", placement.bi_copies);
+    }
+    let mut bis = Vec::with_capacity(n_bi);
+    for copy in 0..n_bi {
+        let mut bi = BiState::new(copy as u16, placement.ag_copies, cfg.stream.max_candidates);
+        let n_buckets = r_u32(&mut r)? as usize;
+        for _ in 0..n_buckets {
+            let key = r_u64(&mut r)?;
+            let n_refs = r_u32(&mut r)? as usize;
+            for _ in 0..n_refs {
+                let id = r_u32(&mut r)?;
+                let dp = r_u16(&mut r)?;
+                bi.on_index_ref(key, id, dp);
+            }
+        }
+        bis.push(bi);
+    }
+    let n_dp = r_u32(&mut r)? as usize;
+    if n_dp != placement.dp_copies {
+        bail!("{path}: saved with {n_dp} DP copies, config has {}", placement.dp_copies);
+    }
+    let mut dps = Vec::with_capacity(n_dp);
+    let mut buf = vec![0f32; dim];
+    for copy in 0..n_dp {
+        let mut dp = DpState::new(
+            copy as u16,
+            dim,
+            cfg.lsh.k,
+            placement.ag_copies,
+            cfg.stream.dedup,
+        );
+        let n_objs = r_u32(&mut r)? as usize;
+        for _ in 0..n_objs {
+            let id = r_u32(&mut r)?;
+            for slot in buf.iter_mut() {
+                *slot = r_f32(&mut r)?;
+            }
+            dp.on_store(id, &buf);
+        }
+        dps.push(dp);
+    }
+
+    let family = Arc::new(HashFamily::sample(dim, cfg.lsh));
+    let mapper = ObjMapper::new(cfg.stream.obj_map, placement.dp_copies, dim, cfg.lsh.seed);
+    let ags = (0..placement.ag_copies)
+        .map(|c| AgState::new(c as u16, cfg.lsh.k))
+        .collect();
+    Ok(Cluster {
+        cfg: cfg.clone(),
+        family,
+        mapper,
+        placement,
+        bis,
+        dps,
+        ags,
+        build_meter: TrafficMeter::new(cfg.stream.agg_bytes),
+        build_head_work: Default::default(),
+        build_wall_secs: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{build_index, search};
+    use crate::core::lsh::LshParams;
+    use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
+    use crate::runtime::{ScalarHasher, ScalarRanker};
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("parlsh_persist");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.lsh = LshParams { l: 3, m: 6, w: 600.0, k: 5, t: 6, seed: 4 };
+        cfg.cluster.bi_nodes = 2;
+        cfg.cluster.dp_nodes = 3;
+        cfg
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_results() {
+        let cfg = cfg();
+        let ds = synthesize(SynthSpec { n: 1_200, clusters: 30, ..Default::default() });
+        let (qs, _) = distorted_queries(&ds, 12, 5.0, 9);
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let ranker = ScalarRanker { dim: ds.dim };
+
+        let mut built = build_index(&cfg, &ds, &hasher);
+        let path = tmp("round.plsh");
+        save(&built, &path).unwrap();
+        let mut loaded = load(&path, &cfg).unwrap();
+
+        assert_eq!(loaded.stored_objects(), built.stored_objects());
+        assert_eq!(loaded.bucket_references(), built.bucket_references());
+        let a = search(&mut built, &qs, &hasher, &ranker);
+        let b = search(&mut loaded, &qs, &hasher, &ranker);
+        assert_eq!(a.results, b.results);
+    }
+
+    #[test]
+    fn load_rejects_mismatched_params() {
+        let cfg1 = cfg();
+        let ds = synthesize(SynthSpec { n: 300, clusters: 10, ..Default::default() });
+        let family = HashFamily::sample(ds.dim, cfg1.lsh);
+        let hasher = ScalarHasher { family };
+        let built = build_index(&cfg1, &ds, &hasher);
+        let path = tmp("mismatch.plsh");
+        save(&built, &path).unwrap();
+
+        let mut cfg2 = cfg1.clone();
+        cfg2.lsh.m = 8;
+        assert!(load(&path, &cfg2).is_err());
+        let mut cfg3 = cfg1.clone();
+        cfg3.cluster.dp_nodes = 5;
+        assert!(load(&path, &cfg3).is_err());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = tmp("garbage.plsh");
+        std::fs::write(&path, b"not an index").unwrap();
+        assert!(load(&path, &cfg()).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! p-stable LSH hash family (Datar et al., SoCG'04) and bucket keying.
+//!
+//! A family member is `h_{a,b}(v) = floor((a·v + b) / w)` with `a ~ N(0, I)`
+//! and `b ~ U(0, w)`. An index uses `L` tables of `M` concatenated functions;
+//! all `P = L·M` projections are stored as one bank so a single matmul (the
+//! Pallas `lsh_hash` kernel) hashes a vector for every table at once.
+
+use crate::util::rng::{mix64, Rng};
+
+/// LSH index parameters (paper notation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LshParams {
+    /// Number of hash tables (paper: L, default 6).
+    pub l: usize,
+    /// Hash functions concatenated per table (paper: M, default 32).
+    pub m: usize,
+    /// Quantization width w of the p-stable family.
+    pub w: f32,
+    /// Neighbors to retrieve (paper: k = 10).
+    pub k: usize,
+    /// Probes per table for multi-probe LSH (paper: T; 1 = home bucket only).
+    pub t: usize,
+    /// Seed for sampling the family.
+    pub seed: u64,
+}
+
+impl Default for LshParams {
+    fn default() -> Self {
+        // w tuned on the synthetic SIFT stand-in so the default operating
+        // point (L=6, M=32, T=30) lands at recall ≈ 0.7 — the regime the
+        // paper's Table III / Fig. 4 explore (see EXPERIMENTS.md).
+        LshParams { l: 6, m: 32, w: 1200.0, k: 10, t: 30, seed: 42 }
+    }
+}
+
+impl LshParams {
+    pub fn projections(&self) -> usize {
+        self.l * self.m
+    }
+}
+
+/// A sampled p-stable family: the projection bank for all L tables.
+#[derive(Clone, Debug)]
+pub struct HashFamily {
+    pub dim: usize,
+    pub params: LshParams,
+    /// Projection directions, row-major `[P][dim]` (row p = a_p).
+    a: Vec<f32>,
+    /// Offsets `b_p ~ U(0, w)`, length P.
+    b: Vec<f32>,
+    /// Per-projection odd multipliers for bucket keying.
+    r: Vec<u64>,
+}
+
+impl HashFamily {
+    /// Sample a family; deterministic in `(dim, params.seed)`.
+    pub fn sample(dim: usize, params: LshParams) -> HashFamily {
+        let p = params.projections();
+        assert!(p > 0, "L*M must be positive");
+        let mut rng = Rng::new(params.seed);
+        let mut a = Vec::with_capacity(p * dim);
+        for _ in 0..p * dim {
+            a.push(rng.gaussian_f32());
+        }
+        let mut b = Vec::with_capacity(p);
+        for _ in 0..p {
+            b.push(rng.range_f32(0.0, params.w));
+        }
+        let r = (0..p).map(|_| rng.next_u64() | 1).collect();
+        HashFamily { dim, params, a, b, r }
+    }
+
+    /// Projection bank transposed to `[dim][P]` column-major-for-v layout —
+    /// the layout the AOT `hash` artifact expects (`X @ A`).
+    pub fn a_transposed(&self) -> Vec<f32> {
+        let p = self.params.projections();
+        let mut out = vec![0f32; p * self.dim];
+        for row in 0..p {
+            for d in 0..self.dim {
+                out[d * p + row] = self.a[row * self.dim + d];
+            }
+        }
+        out
+    }
+
+    pub fn offsets(&self) -> &[f32] {
+        &self.b
+    }
+
+    /// Raw (un-floored) projections `(a_p·v + b_p) / w` for all P functions.
+    /// The fractional parts drive the multi-probe sequence.
+    pub fn raw_projections(&self, v: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(v.len(), self.dim);
+        let p = self.params.projections();
+        let inv_w = 1.0 / self.params.w;
+        let mut out = Vec::with_capacity(p);
+        for row in 0..p {
+            let a_row = &self.a[row * self.dim..(row + 1) * self.dim];
+            let mut acc = 0f32;
+            for (x, y) in a_row.iter().zip(v) {
+                acc += x * y;
+            }
+            out.push((acc + self.b[row]) * inv_w);
+        }
+        out
+    }
+
+    /// Quantized hash coordinates `h_p(v)` for all P functions (scalar path;
+    /// the PJRT artifact computes the same thing batched).
+    pub fn hash_coords(&self, v: &[f32]) -> Vec<i32> {
+        self.raw_projections(v)
+            .into_iter()
+            .map(|f| f.floor() as i32)
+            .collect()
+    }
+
+    /// Bucket key for table `t` from the full P-length coordinate vector.
+    ///
+    /// The key folds the M coordinates of table `t` with per-projection odd
+    /// multipliers and finalizes with splitmix64 (a strong 64-bit identity;
+    /// collisions are ~2^-64, standing in for E2LSH's two-level scheme).
+    /// The table id is salted in so identical coordinate tuples in different
+    /// tables never alias.
+    #[inline]
+    pub fn bucket_key(&self, table: usize, coords: &[i32]) -> u64 {
+        let m = self.params.m;
+        debug_assert_eq!(coords.len(), self.params.projections());
+        self.bucket_key_of_slice(table, &coords[table * m..(table + 1) * m])
+    }
+
+    /// Bucket key from just the table's own M coordinates.
+    #[inline]
+    pub fn bucket_key_of_slice(&self, table: usize, coords_t: &[i32]) -> u64 {
+        let m = self.params.m;
+        debug_assert_eq!(coords_t.len(), m);
+        let mut acc = 0x9E3779B97F4A7C15u64 ^ (table as u64) << 56;
+        for (j, &c) in coords_t.iter().enumerate() {
+            acc = acc
+                .wrapping_add((c as i64 as u64).wrapping_mul(self.r[table * m + j]));
+            acc = acc.rotate_left(7);
+        }
+        mix64(acc)
+    }
+
+    /// All L bucket keys of a vector (home buckets).
+    pub fn bucket_keys(&self, v: &[f32]) -> Vec<u64> {
+        let coords = self.hash_coords(v);
+        (0..self.params.l)
+            .map(|t| self.bucket_key(t, &coords))
+            .collect()
+    }
+
+    /// All probe bucket keys for a query given its raw projections: per
+    /// table the home bucket followed by the `t-1` best multi-probe
+    /// perturbations (Lv et al. score order). Shared by the distributed
+    /// Query Receiver and the sequential baseline so both visit *exactly*
+    /// the same buckets.
+    pub fn query_probes(&self, raw: &[f32], t_probes: usize) -> Vec<(u8, u64)> {
+        use crate::core::multiprobe::{apply_set, probe_sequence};
+        let l = self.params.l;
+        let m = self.params.m;
+        let t_probes = t_probes.max(1);
+        let mut probes = Vec::with_capacity(l * t_probes);
+        for table in 0..l {
+            let raw_t = &raw[table * m..(table + 1) * m];
+            let coords_t: Vec<i32> = raw_t.iter().map(|f| f.floor() as i32).collect();
+            let fracs: Vec<f32> = raw_t
+                .iter()
+                .zip(&coords_t)
+                .map(|(f, c)| f - *c as f32)
+                .collect();
+            probes.push((table as u8, self.bucket_key_of_slice(table, &coords_t)));
+            for set in probe_sequence(&fracs, t_probes) {
+                let perturbed = apply_set(&coords_t, &set);
+                probes.push((table as u8, self.bucket_key_of_slice(table, &perturbed)));
+            }
+        }
+        probes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+
+    fn small_family() -> HashFamily {
+        HashFamily::sample(
+            16,
+            LshParams { l: 3, m: 4, w: 4.0, k: 5, t: 1, seed: 7 },
+        )
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let f1 = small_family();
+        let f2 = small_family();
+        let v: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        assert_eq!(f1.hash_coords(&v), f2.hash_coords(&v));
+        assert_eq!(f1.bucket_keys(&v), f2.bucket_keys(&v));
+    }
+
+    #[test]
+    fn different_seed_different_family() {
+        let f1 = small_family();
+        let f2 = HashFamily::sample(
+            16,
+            LshParams { seed: 8, ..f1.params },
+        );
+        let v: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        assert_ne!(f1.bucket_keys(&v), f2.bucket_keys(&v));
+    }
+
+    #[test]
+    fn coords_match_raw_floor() {
+        let f = small_family();
+        let v: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let raw = f.raw_projections(&v);
+        let coords = f.hash_coords(&v);
+        for (r, c) in raw.iter().zip(&coords) {
+            assert_eq!(r.floor() as i32, *c);
+        }
+    }
+
+    #[test]
+    fn nearby_points_collide_more() {
+        // LSH property smoke: near pairs share more per-table buckets than
+        // far pairs, averaged over samples.
+        let f = HashFamily::sample(
+            32,
+            LshParams { l: 8, m: 4, w: 4.0, k: 5, t: 1, seed: 3 },
+        );
+        let mut rng = Rng::new(11);
+        let (mut near_hits, mut far_hits) = (0usize, 0usize);
+        let trials = 200;
+        for _ in 0..trials {
+            let x: Vec<f32> = (0..32).map(|_| rng.gaussian_f32() * 5.0).collect();
+            let near: Vec<f32> = x.iter().map(|v| v + 0.05 * rng.gaussian_f32()).collect();
+            let far: Vec<f32> = (0..32).map(|_| rng.gaussian_f32() * 5.0).collect();
+            let kx = f.bucket_keys(&x);
+            let kn = f.bucket_keys(&near);
+            let kf = f.bucket_keys(&far);
+            near_hits += kx.iter().zip(&kn).filter(|(a, b)| a == b).count();
+            far_hits += kx.iter().zip(&kf).filter(|(a, b)| a == b).count();
+        }
+        assert!(
+            near_hits > far_hits * 3,
+            "near {near_hits} vs far {far_hits}"
+        );
+    }
+
+    #[test]
+    fn table_salt_prevents_cross_table_alias() {
+        let f = small_family();
+        let coords = vec![0i32; 12];
+        let k0 = f.bucket_key(0, &coords);
+        let k1 = f.bucket_key(1, &coords);
+        assert_ne!(k0, k1);
+    }
+
+    #[test]
+    fn bucket_key_slice_agrees_with_full() {
+        check("bucket-key-slice", 40, |g| {
+            let f = small_family();
+            let coords: Vec<i32> = (0..12).map(|_| g.i32_in(-100, 100)).collect();
+            for t in 0..3 {
+                assert_eq!(
+                    f.bucket_key(t, &coords),
+                    f.bucket_key_of_slice(t, &coords[t * 4..(t + 1) * 4])
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let f = small_family();
+        let at = f.a_transposed();
+        let p = f.params.projections();
+        for row in 0..p {
+            for d in 0..f.dim {
+                assert_eq!(at[d * p + row], f.a[row * f.dim + d]);
+            }
+        }
+    }
+
+    use crate::util::rng::Rng;
+}

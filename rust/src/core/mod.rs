@@ -1,0 +1,18 @@
+//! Core LSH machinery: p-stable hash families, bucket keying, the
+//! query-directed multi-probe sequence (Lv et al., VLDB'07), Z-order curves,
+//! and top-k selection.
+//!
+//! Everything here is deterministic given a seed and shared between the
+//! distributed pipeline, the sequential baseline, and the PJRT artifact path
+//! (the projection bank is uploaded to the runtime so scalar and compiled
+//! hashing agree bit-for-bit up to f32 boundary ties).
+
+pub mod lsh;
+pub mod multiprobe;
+pub mod topk;
+pub mod zorder;
+
+pub use lsh::{HashFamily, LshParams};
+pub use multiprobe::{probe_sequence, PerturbationSet};
+pub use topk::{OrderedF32, TopK};
+pub use zorder::zorder_key;

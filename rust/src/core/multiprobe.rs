@@ -1,0 +1,277 @@
+//! Query-directed multi-probe sequence generation (Lv et al., VLDB'07, §4).
+//!
+//! For one table, a query lands at coordinates `h_i = floor(f_i)`; its
+//! distance (in units of w) to the adjacent bucket in dimension `i` is
+//! `x_i(-1) = frac(f_i)` downward and `x_i(+1) = 1 - frac(f_i)` upward. A
+//! *perturbation set* picks a δ ∈ {−1,+1} for a subset of dimensions; its
+//! score is `Σ x_i(δ)²` — a monotone proxy for the probability the perturbed
+//! bucket holds near neighbors. Sets are enumerated in non-decreasing score
+//! order with the shift/expand min-heap over the 2M sorted boundary
+//! distances.
+
+use crate::core::topk::OrderedF32;
+use std::collections::BinaryHeap;
+
+/// One perturbation set: `(dimension, δ)` pairs, δ ∈ {−1, +1}.
+pub type PerturbationSet = Vec<(u16, i8)>;
+
+/// Candidate boundary move used during enumeration.
+#[derive(Clone, Copy, Debug)]
+struct Move {
+    dim: u16,
+    delta: i8,
+    score: f32, // x_i(δ)²
+}
+
+#[derive(Clone, Debug)]
+struct HeapSet {
+    /// Indices into the sorted move array; last element is the maximum.
+    idx: Vec<u16>,
+    score: f32,
+}
+
+impl PartialEq for HeapSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.idx == other.idx
+    }
+}
+impl Eq for HeapSet {}
+impl PartialOrd for HeapSet {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapSet {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; we want the *smallest* score on top.
+        OrderedF32(other.score)
+            .cmp(&OrderedF32(self.score))
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+/// Generate up to `t - 1` perturbation sets (the home bucket is probe #0) in
+/// non-decreasing score order for one table.
+///
+/// `fracs[i]` must be the fractional part of the raw projection `f_i` for
+/// each of the table's M dimensions.
+pub fn probe_sequence(fracs: &[f32], t: usize) -> Vec<PerturbationSet> {
+    let m = fracs.len();
+    if t <= 1 || m == 0 {
+        return Vec::new();
+    }
+    // Build the 2M candidate moves, sorted ascending by score.
+    let mut moves = Vec::with_capacity(2 * m);
+    for (i, &fr) in fracs.iter().enumerate() {
+        let fr = fr.clamp(0.0, 1.0);
+        moves.push(Move { dim: i as u16, delta: -1, score: fr * fr });
+        moves.push(Move { dim: i as u16, delta: 1, score: (1.0 - fr) * (1.0 - fr) });
+    }
+    moves.sort_unstable_by(|a, b| {
+        a.score
+            .total_cmp(&b.score)
+            .then(a.dim.cmp(&b.dim))
+            .then(a.delta.cmp(&b.delta))
+    });
+    let n = moves.len() as u16;
+
+    let mut heap = BinaryHeap::new();
+    heap.push(HeapSet { idx: vec![0], score: moves[0].score });
+    let mut out = Vec::with_capacity(t - 1);
+
+    while let Some(set) = heap.pop() {
+        if out.len() >= t - 1 {
+            break;
+        }
+        let max = *set.idx.last().unwrap();
+        if is_valid(&set.idx, &moves) {
+            out.push(
+                set.idx
+                    .iter()
+                    .map(|&j| (moves[j as usize].dim, moves[j as usize].delta))
+                    .collect(),
+            );
+        }
+        // shift: replace the max element with its successor.
+        // expand: additionally include the successor.
+        // (§Perf: the popped Vec is reused for the expand child — one
+        // allocation per pop instead of two.)
+        if max + 1 < n {
+            let mut shift_idx = Vec::with_capacity(set.idx.len());
+            shift_idx.extend_from_slice(&set.idx[..set.idx.len() - 1]);
+            shift_idx.push(max + 1);
+            let succ = moves[max as usize + 1].score;
+            heap.push(HeapSet {
+                idx: shift_idx,
+                score: set.score - moves[max as usize].score + succ,
+            });
+            let mut expand_idx = set.idx;
+            expand_idx.push(max + 1);
+            heap.push(HeapSet { idx: expand_idx, score: set.score + succ });
+        }
+    }
+    out
+}
+
+/// A set is valid iff it never perturbs the same dimension twice
+/// (i.e. never contains both (i,−1) and (i,+1)).
+fn is_valid(idx: &[u16], moves: &[Move]) -> bool {
+    for (a, &i) in idx.iter().enumerate() {
+        for &j in &idx[a + 1..] {
+            if moves[i as usize].dim == moves[j as usize].dim {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Score of a perturbation set against the fractional parts (test helper and
+/// the quantity the enumeration orders by).
+pub fn set_score(set: &PerturbationSet, fracs: &[f32]) -> f32 {
+    set.iter()
+        .map(|&(dim, delta)| {
+            let fr = fracs[dim as usize].clamp(0.0, 1.0);
+            let x = if delta < 0 { fr } else { 1.0 - fr };
+            x * x
+        })
+        .sum()
+}
+
+/// Apply a perturbation set to a table's home coordinates.
+pub fn apply_set(coords_t: &[i32], set: &PerturbationSet) -> Vec<i32> {
+    let mut out = coords_t.to_vec();
+    for &(dim, delta) in set {
+        out[dim as usize] += delta as i32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+
+    fn fracs_from_gen(g: &mut crate::util::minitest::Gen, m: usize) -> Vec<f32> {
+        (0..m).map(|_| g.f32_in(0.001, 0.999)).collect()
+    }
+
+    #[test]
+    fn t1_yields_no_perturbations() {
+        assert!(probe_sequence(&[0.5, 0.5], 1).is_empty());
+        assert!(probe_sequence(&[], 10).is_empty());
+    }
+
+    #[test]
+    fn first_probe_is_single_closest_boundary() {
+        let fracs = vec![0.9, 0.4, 0.05];
+        let seq = probe_sequence(&fracs, 2);
+        assert_eq!(seq.len(), 1);
+        // dim 2 lower boundary at distance 0.05 is the closest move.
+        assert_eq!(seq[0], vec![(2u16, -1i8)]);
+    }
+
+    #[test]
+    fn scores_nondecreasing_property() {
+        check("mp-scores-sorted", 50, |g| {
+            let m = g.usize_in(2, 12);
+            let t = g.usize_in(2, 40);
+            let fracs = fracs_from_gen(g, m);
+            let seq = probe_sequence(&fracs, t);
+            let scores: Vec<f32> = seq.iter().map(|s| set_score(s, &fracs)).collect();
+            for w in scores.windows(2) {
+                assert!(
+                    w[0] <= w[1] + 1e-5,
+                    "scores not sorted: {:?}",
+                    scores
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sets_are_valid_and_unique_property() {
+        check("mp-sets-valid-unique", 50, |g| {
+            let m = g.usize_in(2, 10);
+            let t = g.usize_in(2, 60);
+            let fracs = fracs_from_gen(g, m);
+            let seq = probe_sequence(&fracs, t);
+            let mut seen = std::collections::HashSet::new();
+            for set in &seq {
+                // no dim perturbed twice
+                let dims: std::collections::HashSet<_> =
+                    set.iter().map(|&(d, _)| d).collect();
+                assert_eq!(dims.len(), set.len(), "dim repeated in {set:?}");
+                // canonical form for uniqueness
+                let mut canon = set.clone();
+                canon.sort();
+                assert!(seen.insert(canon), "duplicate set {set:?}");
+                // deltas are ±1 and dims in range
+                for &(d, delta) in set {
+                    assert!((d as usize) < m);
+                    assert!(delta == 1 || delta == -1);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matches_bruteforce_enumeration_for_small_m() {
+        check("mp-matches-bruteforce", 20, |g| {
+            let m = g.usize_in(2, 5);
+            let fracs = fracs_from_gen(g, m);
+            let t = 16usize;
+            let seq = probe_sequence(&fracs, t);
+            // Brute force: all 3^m - 1 nonempty δ assignments, sorted by score.
+            let mut all: Vec<(f32, PerturbationSet)> = Vec::new();
+            let mut stack: Vec<(usize, PerturbationSet)> = vec![(0, vec![])];
+            while let Some((i, cur)) = stack.pop() {
+                if i == m {
+                    if !cur.is_empty() {
+                        all.push((set_score(&cur, &fracs), cur));
+                    }
+                    continue;
+                }
+                for opt in [None, Some(-1i8), Some(1i8)] {
+                    let mut next = cur.clone();
+                    if let Some(d) = opt {
+                        next.push((i as u16, d));
+                    }
+                    stack.push((i + 1, next));
+                }
+            }
+            all.sort_by(|a, b| OrderedF32(a.0).cmp(&OrderedF32(b.0)));
+            let want: Vec<f32> = all
+                .iter()
+                .take(seq.len())
+                .map(|(s, _)| *s)
+                .collect();
+            let got: Vec<f32> = seq.iter().map(|s| set_score(s, &fracs)).collect();
+            for (a, b) in got.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "probe scores diverge: got {got:?} want {want:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn apply_set_perturbs_coords() {
+        let coords = vec![10, 20, 30];
+        let set = vec![(0u16, -1i8), (2u16, 1i8)];
+        assert_eq!(apply_set(&coords, &set), vec![9, 20, 31]);
+    }
+
+    #[test]
+    fn requested_count_or_exhaustion() {
+        // For m dims there are finitely many valid sets; asking for more
+        // returns what exists, asking for few returns exactly t-1.
+        let fracs = vec![0.3, 0.7];
+        let seq = probe_sequence(&fracs, 5);
+        assert_eq!(seq.len(), 4);
+        let seq_all = probe_sequence(&fracs, 100);
+        // 3^2 - 1 = 8 valid nonempty sets
+        assert_eq!(seq_all.len(), 8);
+    }
+}

@@ -1,0 +1,197 @@
+//! Bounded top-k selection (k nearest by distance) over streaming candidates.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Total-ordered f32 wrapper (NaN sorts last; distances are never NaN on the
+/// hot path but robustness is cheap).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrderedF32(pub f32);
+
+impl Eq for OrderedF32 {}
+
+impl PartialOrd for OrderedF32 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrderedF32 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or_else(|| {
+            match (self.0.is_nan(), other.0.is_nan()) {
+                (true, true) => Ordering::Equal,
+                (true, false) => Ordering::Greater,
+                (false, true) => Ordering::Less,
+                _ => unreachable!(),
+            }
+        })
+    }
+}
+
+/// Keep the `k` smallest `(distance, id)` pairs seen so far.
+///
+/// Ties on distance are broken by id so results are deterministic across the
+/// distributed pipeline (where candidates arrive in arbitrary order) and the
+/// sequential baseline.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<(OrderedF32, u32)>, // max-heap: root = current worst
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        TopK { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((OrderedF32(dist), id));
+        } else {
+            // SAFETY of unwrap: heap non-empty because k > 0 and len == k.
+            let worst = *self.heap.peek().unwrap();
+            if (OrderedF32(dist), id) < worst {
+                self.heap.pop();
+                self.heap.push((OrderedF32(dist), id));
+            }
+        }
+    }
+
+    /// Current admission threshold (distance of the worst kept candidate),
+    /// or +inf while under-full. Lets callers skip work early.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap.peek().map(|(d, _)| d.0).unwrap_or(f32::INFINITY)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Merge another TopK into this one.
+    pub fn merge(&mut self, other: &TopK) {
+        for &(d, id) in other.heap.iter() {
+            self.push(d.0, id);
+        }
+    }
+
+    /// Extract results sorted ascending by (distance, id).
+    pub fn into_sorted(self) -> Vec<(f32, u32)> {
+        let mut v: Vec<(OrderedF32, u32)> = self.heap.into_vec();
+        v.sort_unstable();
+        v.into_iter().map(|(d, id)| (d.0, id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut tk = TopK::new(3);
+        for (i, d) in [9.0, 1.0, 5.0, 3.0, 7.0, 2.0].iter().enumerate() {
+            tk.push(*d, i as u32);
+        }
+        let out = tk.into_sorted();
+        assert_eq!(out.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn tie_break_by_id() {
+        let mut tk = TopK::new(2);
+        tk.push(1.0, 7);
+        tk.push(1.0, 3);
+        tk.push(1.0, 5);
+        let out = tk.into_sorted();
+        assert_eq!(out, vec![(1.0, 3), (1.0, 5)]);
+    }
+
+    #[test]
+    fn k_zero_is_noop() {
+        let mut tk = TopK::new(0);
+        tk.push(1.0, 1);
+        assert!(tk.is_empty());
+        assert!(tk.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn threshold_tracks_worst() {
+        let mut tk = TopK::new(2);
+        assert_eq!(tk.threshold(), f32::INFINITY);
+        tk.push(4.0, 0);
+        assert_eq!(tk.threshold(), f32::INFINITY);
+        tk.push(2.0, 1);
+        assert_eq!(tk.threshold(), 4.0);
+        tk.push(1.0, 2);
+        assert_eq!(tk.threshold(), 2.0);
+    }
+
+    #[test]
+    fn matches_full_sort_property() {
+        check("topk-matches-sort", 60, |g| {
+            let n = g.usize_in(0, 200);
+            let k = g.usize_in(1, 20);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let items: Vec<(f32, u32)> =
+                (0..n).map(|i| (rng.f32() * 100.0, i as u32)).collect();
+            let mut tk = TopK::new(k);
+            for &(d, id) in &items {
+                tk.push(d, id);
+            }
+            let got = tk.into_sorted();
+            let mut want = items.clone();
+            want.sort_by(|a, b| (OrderedF32(a.0), a.1).cmp(&(OrderedF32(b.0), b.1)));
+            want.truncate(k);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        check("topk-merge", 40, |g| {
+            let k = g.usize_in(1, 10);
+            let n1 = g.usize_in(0, 50);
+            let n2 = g.usize_in(0, 50);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let xs: Vec<(f32, u32)> =
+                (0..n1 + n2).map(|i| (rng.f32(), i as u32)).collect();
+            let (a_items, b_items) = xs.split_at(n1);
+            let mut a = TopK::new(k);
+            let mut b = TopK::new(k);
+            for &(d, id) in a_items {
+                a.push(d, id);
+            }
+            for &(d, id) in b_items {
+                b.push(d, id);
+            }
+            a.merge(&b);
+            let mut combined = TopK::new(k);
+            for &(d, id) in &xs {
+                combined.push(d, id);
+            }
+            assert_eq!(a.into_sorted(), combined.into_sorted());
+        });
+    }
+
+    #[test]
+    fn nan_sorts_last() {
+        assert!(OrderedF32(f32::NAN) > OrderedF32(f32::INFINITY));
+        assert_eq!(OrderedF32(f32::NAN).cmp(&OrderedF32(f32::NAN)), std::cmp::Ordering::Equal);
+    }
+}

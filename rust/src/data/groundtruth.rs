@@ -1,0 +1,138 @@
+//! Exact k-NN ground truth (brute force) with file caching.
+//!
+//! Experiments need true neighbors to score recall. Brute force over the
+//! scaled-down datasets is affordable once and cached as `.ivecs` keyed by a
+//! content fingerprint, so repeated experiment runs skip recomputation.
+
+use crate::core::topk::TopK;
+use crate::data::{io, sqdist, Dataset};
+use crate::util::threadpool::scope_chunks;
+use anyhow::Result;
+
+/// Brute-force exact k-NN for every query (scalar path, multithreaded).
+pub fn ground_truth_scalar(
+    reference: &Dataset,
+    queries: &Dataset,
+    k: usize,
+    workers: usize,
+) -> Vec<Vec<u32>> {
+    assert_eq!(reference.dim, queries.dim);
+    let results = scope_chunks(queries.len(), workers, |start, end| {
+        let mut out = Vec::with_capacity(end - start);
+        for qi in start..end {
+            let q = queries.get(qi);
+            let mut tk = TopK::new(k);
+            for i in 0..reference.len() {
+                tk.push(sqdist(reference.get(i), q), i as u32);
+            }
+            out.push(tk.into_sorted().into_iter().map(|(_, id)| id).collect());
+        }
+        out
+    });
+    results.into_iter().flatten().collect()
+}
+
+/// Cheap content fingerprint of the (reference, queries, k) triple.
+fn fingerprint(reference: &Dataset, queries: &Dataset, k: usize) -> u64 {
+    use crate::util::rng::mix64;
+    let mut h = mix64(
+        (reference.len() as u64) << 32 ^ queries.len() as u64 ^ (k as u64) << 16,
+    );
+    // Sample a few rows' bits — enough to key a local cache.
+    let sample = |ds: &Dataset, h: &mut u64| {
+        let n = ds.len();
+        if n == 0 {
+            return;
+        }
+        for i in [0, n / 2, n - 1] {
+            for &x in ds.get(i).iter().take(8) {
+                *h = mix64(*h ^ x.to_bits() as u64);
+            }
+        }
+    };
+    sample(reference, &mut h);
+    sample(queries, &mut h);
+    h
+}
+
+/// Ground truth with `.ivecs` caching under `cache_dir`.
+pub fn ground_truth_cached(
+    reference: &Dataset,
+    queries: &Dataset,
+    k: usize,
+    workers: usize,
+    cache_dir: &str,
+) -> Result<Vec<Vec<u32>>> {
+    std::fs::create_dir_all(cache_dir)?;
+    let key = fingerprint(reference, queries, k);
+    let path = format!("{cache_dir}/gt_{key:016x}_k{k}.ivecs");
+    if std::path::Path::new(&path).exists() {
+        let rows = io::read_ivecs(&path, 0)?;
+        if rows.len() == queries.len() {
+            return Ok(rows
+                .into_iter()
+                .map(|r| r.into_iter().map(|x| x as u32).collect())
+                .collect());
+        }
+    }
+    let gt = ground_truth_scalar(reference, queries, k, workers);
+    let rows: Vec<Vec<i32>> = gt
+        .iter()
+        .map(|r| r.iter().map(|&x| x as i32).collect())
+        .collect();
+    io::write_ivecs(&path, &rows)?;
+    Ok(gt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
+
+    #[test]
+    fn finds_exact_neighbors() {
+        let ds = synthesize(SynthSpec { n: 300, dim: 16, clusters: 5, ..Default::default() });
+        let (qs, bases) = distorted_queries(&ds, 10, 0.01, 3);
+        let gt = ground_truth_scalar(&ds, &qs, 3, 2);
+        for (i, row) in gt.iter().enumerate() {
+            assert_eq!(row.len(), 3);
+            // With near-zero distortion the base point must be the 1-NN.
+            assert_eq!(row[0], bases[i], "query {i}");
+        }
+    }
+
+    #[test]
+    fn neighbors_sorted_by_distance() {
+        let ds = synthesize(SynthSpec { n: 200, dim: 8, clusters: 4, ..Default::default() });
+        let (qs, _) = distorted_queries(&ds, 5, 5.0, 7);
+        let gt = ground_truth_scalar(&ds, &qs, 5, 1);
+        for (qi, row) in gt.iter().enumerate() {
+            let q = qs.get(qi);
+            let dists: Vec<f32> = row.iter().map(|&id| sqdist(ds.get(id as usize), q)).collect();
+            for w in dists.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir().join("parlsh_gt_cache");
+        let dir = dir.to_string_lossy();
+        let ds = synthesize(SynthSpec { n: 100, dim: 8, clusters: 4, ..Default::default() });
+        let (qs, _) = distorted_queries(&ds, 4, 2.0, 1);
+        let a = ground_truth_cached(&ds, &qs, 3, 1, &dir).unwrap();
+        let b = ground_truth_cached(&ds, &qs, 3, 1, &dir).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn workers_do_not_change_result() {
+        let ds = synthesize(SynthSpec { n: 150, dim: 8, clusters: 3, ..Default::default() });
+        let (qs, _) = distorted_queries(&ds, 6, 2.0, 2);
+        assert_eq!(
+            ground_truth_scalar(&ds, &qs, 4, 1),
+            ground_truth_scalar(&ds, &qs, 4, 4)
+        );
+    }
+}

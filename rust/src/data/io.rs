@@ -1,0 +1,209 @@
+//! BIGANN/TEXMEX file formats: `.fvecs`, `.bvecs`, `.ivecs`.
+//!
+//! Each record is a little-endian `i32` dimensionality followed by `dim`
+//! values (f32 / u8 / i32 respectively). When the real BIGANN files are
+//! present they plug straight into the experiment harness; otherwise the
+//! synthetic generator stands in (DESIGN.md §Substitutions).
+
+use crate::data::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+
+fn read_exact_opt<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    // Returns Ok(false) on clean EOF at a record boundary.
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(false);
+            }
+            bail!("truncated record: got {filled} of {} bytes", buf.len());
+        }
+        filled += n;
+    }
+    Ok(true)
+}
+
+fn read_dim<R: Read>(r: &mut R) -> Result<Option<usize>> {
+    let mut b = [0u8; 4];
+    if !read_exact_opt(r, &mut b)? {
+        return Ok(None);
+    }
+    let d = i32::from_le_bytes(b);
+    if d <= 0 || d > 1 << 20 {
+        bail!("implausible record dimension {d}");
+    }
+    Ok(Some(d as usize))
+}
+
+/// Read at most `limit` vectors from an `.fvecs` file (0 = all).
+pub fn read_fvecs(path: &str, limit: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut ds: Option<Dataset> = None;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut row: Vec<f32> = Vec::new();
+    let mut count = 0usize;
+    while limit == 0 || count < limit {
+        let Some(dim) = read_dim(&mut r)? else { break };
+        buf.resize(dim * 4, 0);
+        if !read_exact_opt(&mut r, &mut buf)? {
+            bail!("truncated fvecs record");
+        }
+        row.clear();
+        for c in buf.chunks_exact(4) {
+            row.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        let ds = ds.get_or_insert_with(|| Dataset::new(dim));
+        if ds.dim != dim {
+            bail!("inconsistent dims: {} vs {dim}", ds.dim);
+        }
+        ds.push(&row);
+        count += 1;
+    }
+    Ok(ds.unwrap_or_else(|| Dataset::new(1)))
+}
+
+/// Read at most `limit` vectors from a `.bvecs` file as f32 (0 = all).
+pub fn read_bvecs(path: &str, limit: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut ds: Option<Dataset> = None;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut row: Vec<f32> = Vec::new();
+    let mut count = 0usize;
+    while limit == 0 || count < limit {
+        let Some(dim) = read_dim(&mut r)? else { break };
+        buf.resize(dim, 0);
+        if !read_exact_opt(&mut r, &mut buf)? {
+            bail!("truncated bvecs record");
+        }
+        row.clear();
+        row.extend(buf.iter().map(|&b| b as f32));
+        let ds = ds.get_or_insert_with(|| Dataset::new(dim));
+        if ds.dim != dim {
+            bail!("inconsistent dims: {} vs {dim}", ds.dim);
+        }
+        ds.push(&row);
+        count += 1;
+    }
+    Ok(ds.unwrap_or_else(|| Dataset::new(1)))
+}
+
+/// Read `.ivecs` (e.g. BIGANN ground-truth files): rows of i32 ids.
+pub fn read_ivecs(path: &str, limit: usize) -> Result<Vec<Vec<i32>>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut out = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    while limit == 0 || out.len() < limit {
+        let Some(dim) = read_dim(&mut r)? else { break };
+        buf.resize(dim * 4, 0);
+        if !read_exact_opt(&mut r, &mut buf)? {
+            bail!("truncated ivecs record");
+        }
+        out.push(
+            buf.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
+    }
+    Ok(out)
+}
+
+/// Write a dataset as `.fvecs`.
+pub fn write_fvecs(path: &str, ds: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.len() {
+        w.write_all(&(ds.dim as i32).to_le_bytes())?;
+        for &x in ds.get(i) {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write ground-truth rows as `.ivecs`.
+pub fn write_ivecs(path: &str, rows: &[Vec<i32>]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+    let mut w = BufWriter::new(f);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes())?;
+        for &x in row {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synthesize, SynthSpec};
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("parlsh_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let ds = synthesize(SynthSpec { n: 37, dim: 16, clusters: 3, ..Default::default() });
+        let p = tmp("round.fvecs");
+        write_fvecs(&p, &ds).unwrap();
+        let back = read_fvecs(&p, 0).unwrap();
+        assert_eq!(back.len(), 37);
+        assert_eq!(back.as_flat(), ds.as_flat());
+    }
+
+    #[test]
+    fn fvecs_limit() {
+        let ds = synthesize(SynthSpec { n: 20, dim: 8, clusters: 2, ..Default::default() });
+        let p = tmp("limit.fvecs");
+        write_fvecs(&p, &ds).unwrap();
+        let back = read_fvecs(&p, 5).unwrap();
+        assert_eq!(back.len(), 5);
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let rows = vec![vec![1, 2, 3], vec![7, 8, 9]];
+        let p = tmp("round.ivecs");
+        write_ivecs(&p, &rows).unwrap();
+        assert_eq!(read_ivecs(&p, 0).unwrap(), rows);
+    }
+
+    #[test]
+    fn bvecs_reads_bytes() {
+        let p = tmp("mini.bvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(4i32.to_le_bytes());
+        bytes.extend([10u8, 20, 30, 255]);
+        std::fs::write(&p, &bytes).unwrap();
+        let ds = read_bvecs(&p, 0).unwrap();
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds.get(0), &[10.0, 20.0, 30.0, 255.0]);
+    }
+
+    #[test]
+    fn truncated_record_errors() {
+        let p = tmp("trunc.fvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(4i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes()); // only 1 of 4 values
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_fvecs(&p, 0).is_err());
+    }
+
+    #[test]
+    fn implausible_dim_errors() {
+        let p = tmp("baddim.fvecs");
+        std::fs::write(&p, (-3i32).to_le_bytes()).unwrap();
+        assert!(read_fvecs(&p, 0).is_err());
+    }
+}

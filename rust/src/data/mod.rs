@@ -1,0 +1,140 @@
+//! Datasets: flat vector storage, synthetic SIFT-like generation, BIGANN
+//! file formats, ground truth, and recall.
+
+pub mod groundtruth;
+pub mod io;
+pub mod recall;
+pub mod synth;
+
+pub use groundtruth::ground_truth_scalar;
+pub use recall::recall_at_k;
+pub use synth::{SynthSpec, synthesize, distorted_queries};
+
+/// A dense f32 dataset stored flat (row-major `[n][dim]`).
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub dim: usize,
+    data: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(dim: usize) -> Dataset {
+        assert!(dim > 0);
+        Dataset { dim, data: Vec::new() }
+    }
+
+    pub fn with_capacity(dim: usize, n: usize) -> Dataset {
+        assert!(dim > 0);
+        Dataset { dim, data: Vec::with_capacity(dim * n) }
+    }
+
+    pub fn from_flat(dim: usize, data: Vec<f32>) -> Dataset {
+        assert!(dim > 0 && data.len() % dim == 0);
+        Dataset { dim, data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn push(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.dim);
+        self.data.extend_from_slice(v);
+    }
+
+    pub fn as_flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Rows `[start, end)` as a borrowed sub-dataset view (flat slice).
+    pub fn slice_flat(&self, start: usize, end: usize) -> &[f32] {
+        &self.data[start * self.dim..end * self.dim]
+    }
+
+    /// Squared Euclidean distance between row `i` and an external vector.
+    #[inline]
+    pub fn sqdist_to(&self, i: usize, v: &[f32]) -> f32 {
+        sqdist(self.get(i), v)
+    }
+}
+
+/// Scalar squared L2 distance, 4-way unrolled (the pure-rust fallback the
+/// PJRT `rank` artifact is benchmarked against).
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc0 = 0f32;
+    let mut acc1 = 0f32;
+    let mut acc2 = 0f32;
+    let mut acc3 = 0f32;
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        acc0 += d0 * d0;
+        acc1 += d1 * d1;
+        acc2 += d2 * d2;
+        acc3 += d3 * d3;
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_roundtrip() {
+        let mut ds = Dataset::new(3);
+        ds.push(&[1.0, 2.0, 3.0]);
+        ds.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.get(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(ds.slice_flat(1, 2), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn sqdist_matches_naive() {
+        use crate::util::minitest::check;
+        check("sqdist-naive", 50, |g| {
+            let n = g.usize_in(1, 200);
+            let a = g.vec_f32(n, -10.0, 10.0);
+            let b = g.vec_f32(n, -10.0, 10.0);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let got = sqdist(&a, &b);
+            assert!((got - naive).abs() <= 1e-3 * naive.max(1.0));
+        });
+    }
+
+    #[test]
+    fn sqdist_zero_on_self() {
+        let v = vec![1.5f32; 128];
+        assert_eq!(sqdist(&v, &v), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_wrong_dim_panics() {
+        let mut ds = Dataset::new(3);
+        ds.push(&[1.0]);
+    }
+}

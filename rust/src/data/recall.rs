@@ -1,0 +1,58 @@
+//! Search-quality metric: recall@k (paper §V-A) — the fraction of the true
+//! k nearest neighbors the method actually retrieved, averaged over queries.
+
+/// recall@k for one query: |retrieved ∩ truth| / |truth|.
+pub fn recall_one(retrieved: &[u32], truth: &[u32]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let set: std::collections::HashSet<u32> = retrieved.iter().copied().collect();
+    truth.iter().filter(|id| set.contains(id)).count() as f64 / truth.len() as f64
+}
+
+/// Mean recall@k over a query batch. `retrieved[i]` may be shorter than k
+/// (LSH can return fewer candidates than requested).
+pub fn recall_at_k(retrieved: &[Vec<u32>], truth: &[Vec<u32>]) -> f64 {
+    assert_eq!(retrieved.len(), truth.len());
+    if truth.is_empty() {
+        return 1.0;
+    }
+    retrieved
+        .iter()
+        .zip(truth)
+        .map(|(r, t)| recall_one(r, t))
+        .sum::<f64>()
+        / truth.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_recall() {
+        assert_eq!(recall_one(&[1, 2, 3], &[3, 2, 1]), 1.0);
+    }
+
+    #[test]
+    fn partial_recall() {
+        assert!((recall_one(&[1, 2, 9], &[1, 2, 3]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_retrieved_is_zero() {
+        assert_eq!(recall_one(&[], &[1, 2]), 0.0);
+    }
+
+    #[test]
+    fn batch_mean() {
+        let r = vec![vec![1u32], vec![9u32]];
+        let t = vec![vec![1u32], vec![1u32]];
+        assert!((recall_at_k(&r, &t) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extra_retrieved_does_not_hurt() {
+        assert_eq!(recall_one(&[5, 4, 3, 2, 1], &[1, 2]), 1.0);
+    }
+}

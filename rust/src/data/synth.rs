@@ -1,0 +1,169 @@
+//! Synthetic SIFT-like data (the BIGANN/Yahoo stand-in; DESIGN.md
+//! §Substitutions).
+//!
+//! Real SIFT descriptors are 128-d, non-negative, bounded (≈[0,255]) and
+//! heavily clustered (patches from the same scene/structure). LSH recall
+//! behaviour depends on exactly that local density structure, so the
+//! generator draws cluster centers uniformly and points as clamped Gaussians
+//! around them. Queries follow the Yahoo protocol: *distorted* copies of
+//! reference points (geometric/photometric distortion ≈ additive noise) —
+//! so each query has near-duplicates in the reference set, like a real CBMR
+//! workload.
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Synthetic dataset specification.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthSpec {
+    pub n: usize,
+    pub dim: usize,
+    /// Number of Gaussian clusters ("scenes").
+    pub clusters: usize,
+    /// Per-coordinate std-dev within a cluster.
+    pub cluster_std: f32,
+    /// Value range [0, hi] (SIFT: 255).
+    pub hi: f32,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            n: 100_000,
+            dim: 128,
+            clusters: 2_000,
+            cluster_std: 12.0,
+            hi: 255.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate the reference dataset.
+pub fn synthesize(spec: SynthSpec) -> Dataset {
+    let mut rng = Rng::new(spec.seed);
+    let centers = gen_centers(&mut rng, spec);
+    let mut ds = Dataset::with_capacity(spec.dim, spec.n);
+    let mut v = vec![0f32; spec.dim];
+    for _ in 0..spec.n {
+        let c = rng.below(spec.clusters as u64) as usize;
+        let center = &centers[c * spec.dim..(c + 1) * spec.dim];
+        for (slot, &mu) in v.iter_mut().zip(center) {
+            *slot = (mu + spec.cluster_std * rng.gaussian_f32()).clamp(0.0, spec.hi);
+        }
+        ds.push(&v);
+    }
+    ds
+}
+
+fn gen_centers(rng: &mut Rng, spec: SynthSpec) -> Vec<f32> {
+    // Real SIFT descriptors are *sparse and bursty*: most of the 128
+    // orientation-histogram bins of a patch are near zero and a minority
+    // carry the energy. Centers therefore activate each dimension with
+    // probability ~0.4 (inactive bins sit near zero), which also keeps the
+    // generator honest for partition studies — a fixed-dimension subsample
+    // (like the Z-order curve's) often lands on inactive bins, exactly the
+    // failure mode real descriptors inflict on space-filling curves.
+    let margin = (2.0 * spec.cluster_std).min(spec.hi / 4.0);
+    let mut centers = Vec::with_capacity(spec.clusters * spec.dim);
+    for _ in 0..spec.clusters * spec.dim {
+        if rng.f32() < 0.4 {
+            centers.push(rng.range_f32(margin, spec.hi - margin));
+        } else {
+            centers.push(rng.range_f32(0.0, spec.cluster_std));
+        }
+    }
+    centers
+}
+
+/// Generate `q` distorted queries from random reference points.
+///
+/// Returns `(queries, base_ids)`; `base_ids[i]` is the reference row query
+/// `i` was distorted from (its likely — not guaranteed — nearest neighbor).
+pub fn distorted_queries(
+    reference: &Dataset,
+    q: usize,
+    distortion_std: f32,
+    seed: u64,
+) -> (Dataset, Vec<u32>) {
+    let mut rng = Rng::new(seed ^ 0xD15707);
+    let mut queries = Dataset::with_capacity(reference.dim, q);
+    let mut bases = Vec::with_capacity(q);
+    let n = reference.len();
+    assert!(n > 0, "reference dataset is empty");
+    let mut v = vec![0f32; reference.dim];
+    for _ in 0..q {
+        let base = rng.below(n as u64) as usize;
+        let x = reference.get(base);
+        for (slot, &val) in v.iter_mut().zip(x) {
+            *slot = (val + distortion_std * rng.gaussian_f32()).max(0.0);
+        }
+        queries.push(&v);
+        bases.push(base as u32);
+    }
+    (queries, bases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sqdist;
+
+    #[test]
+    fn shape_and_range() {
+        let spec = SynthSpec { n: 500, clusters: 10, ..Default::default() };
+        let ds = synthesize(spec);
+        assert_eq!(ds.len(), 500);
+        assert_eq!(ds.dim, 128);
+        for i in 0..ds.len() {
+            for &x in ds.get(i) {
+                assert!((0.0..=255.0).contains(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let spec = SynthSpec { n: 100, ..Default::default() };
+        let a = synthesize(spec);
+        let b = synthesize(spec);
+        assert_eq!(a.as_flat(), b.as_flat());
+        let c = synthesize(SynthSpec { seed: 2, ..spec });
+        assert_ne!(a.as_flat(), c.as_flat());
+    }
+
+    #[test]
+    fn clustered_structure_exists() {
+        // Same-cluster pairs must be far closer than random pairs: compare
+        // a query's distance to its base vs to a random row.
+        let spec = SynthSpec { n: 2_000, clusters: 50, ..Default::default() };
+        let ds = synthesize(spec);
+        let (qs, bases) = distorted_queries(&ds, 50, 4.0, 9);
+        let mut rng = Rng::new(123);
+        let mut closer = 0;
+        for i in 0..qs.len() {
+            let d_base = sqdist(qs.get(i), ds.get(bases[i] as usize));
+            let d_rand = sqdist(qs.get(i), ds.get(rng.below(2_000) as usize));
+            if d_base < d_rand {
+                closer += 1;
+            }
+        }
+        assert!(closer >= 48, "distorted queries not near their base: {closer}/50");
+    }
+
+    #[test]
+    fn distortion_scale_controls_distance() {
+        let spec = SynthSpec { n: 1_000, ..Default::default() };
+        let ds = synthesize(spec);
+        let (q_small, b_small) = distorted_queries(&ds, 20, 1.0, 5);
+        let (q_large, b_large) = distorted_queries(&ds, 20, 16.0, 5);
+        let mean = |qs: &Dataset, bs: &[u32]| -> f32 {
+            (0..qs.len())
+                .map(|i| sqdist(qs.get(i), ds.get(bs[i] as usize)))
+                .sum::<f32>()
+                / qs.len() as f32
+        };
+        assert!(mean(&q_small, &b_small) * 10.0 < mean(&q_large, &b_large));
+    }
+}

@@ -1,0 +1,117 @@
+//! Inter-stage messages (paper Figure 2) and their wire-size model.
+//!
+//! The five message kinds mirror the paper's i–v. Vectors travel by `Arc` in
+//! process, but `wire_size` charges the full serialized payload so traffic
+//! accounting matches what MPI would move.
+
+use std::sync::Arc;
+
+/// The five dataflow stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    Ir,
+    Qr,
+    Bi,
+    Dp,
+    Ag,
+}
+
+/// A destination: stage + copy index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Dest {
+    pub stage: StageKind,
+    pub copy: u16,
+}
+
+impl Dest {
+    pub fn bi(copy: u16) -> Dest {
+        Dest { stage: StageKind::Bi, copy }
+    }
+    pub fn dp(copy: u16) -> Dest {
+        Dest { stage: StageKind::Dp, copy }
+    }
+    pub fn ag(copy: u16) -> Dest {
+        Dest { stage: StageKind::Ag, copy }
+    }
+}
+
+/// Inter-stage message payloads.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// (i) IR → DP: store one reference object. No replication: exactly one
+    /// DP copy ever receives a given object.
+    StoreObject { id: u32, v: Arc<[f32]> },
+    /// (ii) IR → BI: index a reference `(bucket key, object id, dp copy)`.
+    IndexRef { table: u8, key: u64, id: u32, dp: u16 },
+    /// (iii) QR → BI: visit `probes` buckets for query `qid`. Only the
+    /// probes owned by the destination BI copy are included; the query
+    /// vector rides along for the downstream distance phase.
+    Query { qid: u32, probes: Vec<(u8, u64)>, v: Arc<[f32]> },
+    /// (iv) BI → DP: rank `ids` against the query.
+    CandidateReq { qid: u32, ids: Vec<u32>, v: Arc<[f32]> },
+    /// QR → AG control: how many BI copies were contacted for `qid`.
+    QueryMeta { qid: u32, n_bi: u32 },
+    /// BI → AG control: how many DP messages this BI emitted for `qid`.
+    BiMeta { qid: u32, n_dp: u32 },
+    /// (v) DP → AG: the DP-local k nearest `(sqdist, id)` pairs.
+    LocalTopK { qid: u32, hits: Vec<(f32, u32)> },
+}
+
+impl Msg {
+    /// Serialized payload size in bytes (MPI wire model: 4-byte ids/floats,
+    /// 8-byte keys, 1-byte table ids; headers charged by the packet layer).
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Msg::StoreObject { v, .. } => 4 + 4 * v.len(),
+            Msg::IndexRef { .. } => 1 + 8 + 4 + 2,
+            Msg::Query { probes, v, .. } => 4 + probes.len() * 9 + 4 * v.len(),
+            Msg::CandidateReq { ids, v, .. } => 4 + 4 * ids.len() + 4 * v.len(),
+            Msg::QueryMeta { .. } => 8,
+            Msg::BiMeta { .. } => 8,
+            Msg::LocalTopK { hits, .. } => 4 + 8 * hits.len(),
+        }
+    }
+
+    /// Query id if this message belongs to a query computation.
+    pub fn qid(&self) -> Option<u32> {
+        match self {
+            Msg::Query { qid, .. }
+            | Msg::CandidateReq { qid, .. }
+            | Msg::QueryMeta { qid, .. }
+            | Msg::BiMeta { qid, .. }
+            | Msg::LocalTopK { qid, .. } => Some(*qid),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arcv(n: usize) -> Arc<[f32]> {
+        vec![0f32; n].into()
+    }
+
+    #[test]
+    fn wire_sizes_scale_with_payload() {
+        let small = Msg::CandidateReq { qid: 0, ids: vec![1], v: arcv(128) };
+        let big = Msg::CandidateReq { qid: 0, ids: vec![1; 100], v: arcv(128) };
+        assert_eq!(big.wire_size() - small.wire_size(), 99 * 4);
+        assert_eq!(Msg::StoreObject { id: 0, v: arcv(128) }.wire_size(), 4 + 512);
+        assert_eq!(
+            Msg::IndexRef { table: 0, key: 0, id: 0, dp: 0 }.wire_size(),
+            15
+        );
+    }
+
+    #[test]
+    fn qid_extraction() {
+        assert_eq!(Msg::StoreObject { id: 3, v: arcv(4) }.qid(), None);
+        assert_eq!(Msg::QueryMeta { qid: 9, n_bi: 1 }.qid(), Some(9));
+        assert_eq!(
+            Msg::LocalTopK { qid: 7, hits: vec![] }.qid(),
+            Some(7)
+        );
+    }
+}

@@ -1,0 +1,262 @@
+//! Exact traffic and work accounting.
+//!
+//! [`TrafficMeter`] implements the labeled-stream buffering/aggregation
+//! policy: logical messages to the same destination node accumulate in a
+//! per-link buffer and are flushed as one network *packet* when the buffer
+//! reaches `agg_bytes` (or at phase end). Local (same-node) deliveries are
+//! counted separately and cost no network traffic — this is the mechanism
+//! behind the paper's >6× message reduction from intra-stage parallelism.
+//!
+//! [`WorkStats`] counts the per-copy compute operations the cluster cost
+//! model (simnet) converts into time.
+
+use std::collections::HashMap;
+
+/// Per-link (src node → dst node) counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkStats {
+    pub packets: u64,
+    pub bytes: u64,
+}
+
+/// Network traffic meter with message aggregation.
+#[derive(Clone, Debug)]
+pub struct TrafficMeter {
+    /// Aggregation threshold in bytes (0 disables aggregation: every
+    /// logical message is its own packet).
+    pub agg_bytes: usize,
+    /// Per-packet header overhead charged on flush (MPI envelope).
+    pub header_bytes: usize,
+    links: HashMap<(u16, u16), LinkStats>,
+    pending: HashMap<(u16, u16), usize>,
+    /// Logical message count (pre-aggregation, network-crossing only).
+    pub logical_msgs: u64,
+    /// Same-node deliveries (no network cost).
+    pub local_msgs: u64,
+    /// Total payload bytes crossing the network.
+    pub payload_bytes: u64,
+}
+
+impl TrafficMeter {
+    pub fn new(agg_bytes: usize) -> TrafficMeter {
+        TrafficMeter {
+            agg_bytes,
+            header_bytes: 64,
+            links: HashMap::new(),
+            pending: HashMap::new(),
+            logical_msgs: 0,
+            local_msgs: 0,
+            payload_bytes: 0,
+        }
+    }
+
+    /// Record one logical message of `size` bytes from node `src` to `dst`.
+    pub fn send(&mut self, src: u16, dst: u16, size: usize) {
+        if src == dst {
+            self.local_msgs += 1;
+            return;
+        }
+        self.logical_msgs += 1;
+        self.payload_bytes += size as u64;
+        if self.agg_bytes == 0 {
+            let link = self.links.entry((src, dst)).or_default();
+            link.packets += 1;
+            link.bytes += (size + self.header_bytes) as u64;
+            return;
+        }
+        let pend = self.pending.entry((src, dst)).or_default();
+        *pend += size;
+        if *pend >= self.agg_bytes {
+            let full = *pend;
+            *pend = 0;
+            let link = self.links.entry((src, dst)).or_default();
+            link.packets += 1;
+            link.bytes += (full + self.header_bytes) as u64;
+        }
+    }
+
+    /// Flush all partially filled aggregation buffers (phase boundary).
+    pub fn flush(&mut self) {
+        let pending = std::mem::take(&mut self.pending);
+        for ((src, dst), size) in pending {
+            if size == 0 {
+                continue;
+            }
+            let link = self.links.entry((src, dst)).or_default();
+            link.packets += 1;
+            link.bytes += (size + self.header_bytes) as u64;
+        }
+    }
+
+    pub fn total_packets(&self) -> u64 {
+        self.links.values().map(|l| l.packets).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.links.values().map(|l| l.bytes).sum()
+    }
+
+    pub fn links(&self) -> &HashMap<(u16, u16), LinkStats> {
+        &self.links
+    }
+
+    /// Per-node (tx, rx) byte and packet totals — the cost-model inputs.
+    pub fn per_node(&self, nodes: usize) -> Vec<NodeTraffic> {
+        let mut out = vec![NodeTraffic::default(); nodes];
+        for (&(src, dst), l) in &self.links {
+            let s = &mut out[src as usize];
+            s.tx_bytes += l.bytes;
+            s.tx_packets += l.packets;
+            let d = &mut out[dst as usize];
+            d.rx_bytes += l.bytes;
+            d.rx_packets += l.packets;
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: &TrafficMeter) {
+        for (&k, l) in &other.links {
+            let e = self.links.entry(k).or_default();
+            e.packets += l.packets;
+            e.bytes += l.bytes;
+        }
+        self.logical_msgs += other.logical_msgs;
+        self.local_msgs += other.local_msgs;
+        self.payload_bytes += other.payload_bytes;
+    }
+}
+
+/// Per-node traffic totals.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeTraffic {
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub tx_packets: u64,
+    pub rx_packets: u64,
+}
+
+/// Per-stage-copy compute counters (inputs to the simnet cost model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkStats {
+    /// Vectors pushed through the hash bank (P projections each).
+    pub hash_vectors: u64,
+    /// Multi-probe sequences generated.
+    pub probe_seqs: u64,
+    /// Bucket hash-table lookups.
+    pub bucket_lookups: u64,
+    /// Candidate references scanned/grouped at BI.
+    pub candidates_routed: u64,
+    /// Full distance computations at DP.
+    pub dists_computed: u64,
+    /// Candidates skipped by duplicate elimination.
+    pub dup_skipped: u64,
+    /// Vectors stored (index build).
+    pub objects_stored: u64,
+    /// Top-k reduction pushes at AG.
+    pub reduce_pushes: u64,
+}
+
+impl WorkStats {
+    pub fn add(&mut self, other: &WorkStats) {
+        self.hash_vectors += other.hash_vectors;
+        self.probe_seqs += other.probe_seqs;
+        self.bucket_lookups += other.bucket_lookups;
+        self.candidates_routed += other.candidates_routed;
+        self.dists_computed += other.dists_computed;
+        self.dup_skipped += other.dup_skipped;
+        self.objects_stored += other.objects_stored;
+        self.reduce_pushes += other.reduce_pushes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_messages_are_free() {
+        let mut m = TrafficMeter::new(0);
+        m.send(3, 3, 1000);
+        assert_eq!(m.local_msgs, 1);
+        assert_eq!(m.logical_msgs, 0);
+        assert_eq!(m.total_packets(), 0);
+    }
+
+    #[test]
+    fn no_aggregation_one_packet_per_msg() {
+        let mut m = TrafficMeter::new(0);
+        for _ in 0..10 {
+            m.send(0, 1, 100);
+        }
+        assert_eq!(m.total_packets(), 10);
+        assert_eq!(m.logical_msgs, 10);
+        assert_eq!(m.total_bytes(), 10 * (100 + 64));
+    }
+
+    #[test]
+    fn aggregation_coalesces() {
+        let mut m = TrafficMeter::new(1000);
+        for _ in 0..10 {
+            m.send(0, 1, 100);
+        }
+        // exactly one flush at 1000 bytes
+        assert_eq!(m.total_packets(), 1);
+        assert_eq!(m.logical_msgs, 10);
+        m.flush(); // nothing pending
+        assert_eq!(m.total_packets(), 1);
+        m.send(0, 1, 50);
+        m.flush();
+        assert_eq!(m.total_packets(), 2);
+    }
+
+    #[test]
+    fn flush_preserves_payload_total() {
+        let mut a = TrafficMeter::new(0);
+        let mut b = TrafficMeter::new(4096);
+        for i in 0..57 {
+            a.send(0, 1, 100 + i);
+            b.send(0, 1, 100 + i);
+        }
+        b.flush();
+        assert_eq!(a.payload_bytes, b.payload_bytes);
+        assert!(b.total_packets() < a.total_packets());
+    }
+
+    #[test]
+    fn per_node_totals() {
+        let mut m = TrafficMeter::new(0);
+        m.send(0, 1, 100);
+        m.send(0, 2, 100);
+        m.send(2, 0, 100);
+        let per = m.per_node(3);
+        assert_eq!(per[0].tx_packets, 2);
+        assert_eq!(per[0].rx_packets, 1);
+        assert_eq!(per[1].rx_packets, 1);
+        assert_eq!(per[2].tx_packets, 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = TrafficMeter::new(0);
+        a.send(0, 1, 10);
+        let mut b = TrafficMeter::new(0);
+        b.send(1, 0, 20);
+        b.send(2, 2, 5);
+        a.merge(&b);
+        assert_eq!(a.logical_msgs, 2);
+        assert_eq!(a.local_msgs, 1);
+        assert_eq!(a.total_packets(), 2);
+    }
+
+    #[test]
+    fn workstats_add() {
+        let mut w = WorkStats::default();
+        w.dists_computed = 5;
+        let mut o = WorkStats::default();
+        o.dists_computed = 7;
+        o.hash_vectors = 2;
+        w.add(&o);
+        assert_eq!(w.dists_computed, 12);
+        assert_eq!(w.hash_vectors, 2);
+    }
+}

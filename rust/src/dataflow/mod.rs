@@ -1,0 +1,89 @@
+//! The dataflow substrate (paper §IV-A): stages connected by labeled
+//! streams, with message buffering/aggregation and exact traffic accounting.
+//!
+//! The five stages are IR, QR, BI, DP, AG. Messages between stage *copies*
+//! carry a label (tag); a mapping function (`partition::{ObjMapper,
+//! bucket_map, ag_map}`) turns the tag into a destination copy. Copies are
+//! placed on cluster nodes by [`Placement`]; only messages crossing a node
+//! boundary count as network traffic, and the stream layer aggregates small
+//! messages into packets exactly as the paper's buffered labeled-streams do.
+
+pub mod message;
+pub mod metrics;
+
+pub use message::{Dest, Msg, StageKind};
+pub use metrics::{LinkStats, TrafficMeter, WorkStats};
+
+/// Maps each (stage, copy) to the cluster node hosting it.
+///
+/// Default topology mirrors the paper: dedicated BI nodes, dedicated DP
+/// nodes (1:4), and a head node hosting IR/QR/AG. In per-core-copies mode
+/// (the ablation of §V-B) several copies of a stage share each node.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub bi_copies: usize,
+    pub dp_copies: usize,
+    pub ag_copies: usize,
+    pub bi_nodes: usize,
+    pub dp_nodes: usize,
+    /// Node id of the head node (IR/QR/AG).
+    pub head_node: u16,
+}
+
+impl Placement {
+    pub fn new(cluster: &crate::config::ClusterConfig) -> Placement {
+        Placement {
+            bi_copies: cluster.bi_copies(),
+            dp_copies: cluster.dp_copies(),
+            ag_copies: cluster.ag_copies,
+            bi_nodes: cluster.bi_nodes,
+            dp_nodes: cluster.dp_nodes,
+            head_node: (cluster.bi_nodes + cluster.dp_nodes) as u16,
+        }
+    }
+
+    /// Node hosting a stage copy. Copies are striped across their stage's
+    /// nodes so per-core mode packs `cores_per_node` copies on each node.
+    pub fn node_of(&self, stage: StageKind, copy: u16) -> u16 {
+        match stage {
+            StageKind::Bi => (copy as usize % self.bi_nodes) as u16,
+            StageKind::Dp => (self.bi_nodes + copy as usize % self.dp_nodes) as u16,
+            StageKind::Ir | StageKind::Qr | StageKind::Ag => self.head_node,
+        }
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.bi_nodes + self.dp_nodes + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn paper_topology() {
+        let p = Placement::new(&ClusterConfig::default());
+        assert_eq!(p.bi_copies, 10);
+        assert_eq!(p.dp_copies, 40);
+        assert_eq!(p.node_of(StageKind::Bi, 3), 3);
+        assert_eq!(p.node_of(StageKind::Dp, 0), 10);
+        assert_eq!(p.node_of(StageKind::Dp, 39), 49);
+        assert_eq!(p.node_of(StageKind::Ag, 0), 50);
+        assert_eq!(p.total_nodes(), 51);
+    }
+
+    #[test]
+    fn per_core_mode_packs_copies() {
+        let mut c = ClusterConfig::default();
+        c.per_core_copies = true;
+        let p = Placement::new(&c);
+        assert_eq!(p.bi_copies, 160);
+        // copies 0, 10, 20... share node 0
+        assert_eq!(p.node_of(StageKind::Bi, 0), 0);
+        assert_eq!(p.node_of(StageKind::Bi, 10), 0);
+        assert_eq!(p.node_of(StageKind::Dp, 40), 10);
+        assert_eq!(p.total_nodes(), 51);
+    }
+}

@@ -1,0 +1,527 @@
+//! The experiment harness: one function per paper table/figure, shared by
+//! the `cargo bench` targets and the `parlsh experiment <id>` CLI.
+//!
+//! Every experiment runs the *functional* distributed pipeline (exact
+//! routing, messages, recall) on a scaled-down synthetic BIGANN/Yahoo
+//! stand-in, then converts the measured per-copy work + per-link traffic
+//! into cluster-scale time with the calibrated cost model (DESIGN.md
+//! §Substitutions). Scale knobs come from env vars so CI can shrink runs:
+//! `PARLSH_N` (reference size), `PARLSH_Q` (queries), `PARLSH_SCALAR=1`
+//! (force the scalar compute path instead of PJRT artifacts).
+
+use crate::config::{Config, ObjMapStrategy};
+use crate::coordinator::{build_index, search, Cluster, SearchOutput};
+use crate::core::lsh::HashFamily;
+use crate::data::groundtruth::ground_truth_cached;
+use crate::data::recall::recall_at_k;
+use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
+use crate::data::Dataset;
+use crate::metrics::Table;
+use crate::runtime::engine::{Engine, EngineHasher, EngineRanker};
+use crate::runtime::{Hasher, Ranker, ScalarHasher, ScalarRanker};
+use crate::simnet::cost::{CostModel, MakespanReport};
+use std::sync::{Arc, OnceLock};
+
+/// Scale knobs (env-overridable).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn force_scalar() -> bool {
+    std::env::var("PARLSH_SCALAR").map(|v| v == "1").unwrap_or(false)
+}
+
+static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+
+/// The process-wide PJRT engine (None if artifacts are unavailable).
+pub fn engine() -> Option<Arc<Engine>> {
+    ENGINE
+        .get_or_init(|| {
+            if force_scalar() {
+                return None;
+            }
+            let dir = std::env::var("PARLSH_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".to_string());
+            match Engine::load(&dir) {
+                Ok(e) => Some(Arc::new(e)),
+                Err(err) => {
+                    eprintln!(
+                        "[parlsh] artifacts unavailable ({err}); using scalar path"
+                    );
+                    None
+                }
+            }
+        })
+        .clone()
+}
+
+/// Compute backends for one run (engine-backed when artifacts exist).
+pub struct Backends {
+    pub hasher: Box<dyn Hasher>,
+    pub ranker: Box<dyn Ranker>,
+    pub engine_path: bool,
+}
+
+pub fn backends(cfg: &Config, dim: usize) -> Backends {
+    let family = HashFamily::sample(dim, cfg.lsh);
+    match engine() {
+        Some(e) if e.dim() == dim => {
+            e.set_family(&family).expect("set_family");
+            // §Perf: hashing always goes through the compiled artifact (the
+            // batched matmul wins by >10x); ranking is hybrid — scalar heap
+            // top-k for small candidate tiles, artifact for large ones (see
+            // HybridRanker docs + EXPERIMENTS.md §Perf).
+            let ranker = crate::runtime::HybridRanker {
+                scalar: ScalarRanker { dim },
+                engine: Box::new(EngineRanker { engine: e.clone() }),
+                threshold: crate::runtime::HybridRanker::threshold_from_env(8192),
+            };
+            Backends {
+                hasher: Box::new(EngineHasher {
+                    engine: e.clone(),
+                    p_used: cfg.lsh.projections(),
+                }),
+                ranker: Box::new(ranker),
+                engine_path: true,
+            }
+        }
+        _ => Backends {
+            hasher: Box::new(ScalarHasher { family }),
+            ranker: Box::new(ScalarRanker { dim }),
+            engine_path: false,
+        },
+    }
+}
+
+/// A synthetic experiment world: reference set, queries, ground truth.
+pub struct World {
+    pub data: Dataset,
+    pub queries: Dataset,
+    pub gt: Vec<Vec<u32>>,
+}
+
+/// Build the world for `cfg` (ground truth cached under `.cache/gt`).
+pub fn world(cfg: &Config) -> World {
+    // `data.source` selects the reference set: "synth" (default) or a path
+    // to a real `.fvecs`/`.bvecs` file (e.g. BIGANN base vectors), truncated
+    // to `data.n`. Queries are always the distorted-duplicate workload (the
+    // Yahoo protocol) so recall is meaningful without an external GT file.
+    let data = match cfg.data.source.as_str() {
+        "synth" => synthesize(SynthSpec {
+            n: cfg.data.n,
+            dim: cfg.data.dim,
+            clusters: cfg.data.clusters,
+            cluster_std: cfg.data.cluster_std,
+            hi: 255.0,
+            seed: cfg.data.seed,
+        }),
+        path if path.ends_with(".fvecs") => {
+            crate::data::io::read_fvecs(path, cfg.data.n).expect("read fvecs")
+        }
+        path if path.ends_with(".bvecs") => {
+            crate::data::io::read_bvecs(path, cfg.data.n).expect("read bvecs")
+        }
+        other => panic!("data.source `{other}` is neither synth nor .fvecs/.bvecs"),
+    };
+    let (queries, _) = distorted_queries(
+        &data,
+        cfg.data.queries,
+        cfg.data.distortion_std,
+        cfg.data.seed ^ 0x51EED,
+    );
+    let gt = ground_truth_cached(&data, &queries, cfg.lsh.k, 4, ".cache/gt")
+        .expect("ground truth");
+    World { data, queries, gt }
+}
+
+/// One full run: build + search + recall + modeled cluster time.
+pub struct RunResult {
+    pub recall: f64,
+    pub search_makespan: MakespanReport,
+    pub build_makespan: MakespanReport,
+    pub logical_msgs: u64,
+    pub packets: u64,
+    pub payload_bytes: u64,
+    pub local_msgs: u64,
+    pub wall_secs: f64,
+    pub dists_computed: u64,
+    pub dup_skipped: u64,
+    pub dp_counts: Vec<usize>,
+}
+
+pub fn run_once(cfg: &Config, w: &World, cost: &CostModel) -> RunResult {
+    let b = backends(cfg, w.data.dim);
+    let mut cluster = build_index(cfg, &w.data, b.hasher.as_ref());
+    let build_work = build_phase_work(&mut cluster);
+    let build_makespan = cost.makespan(
+        &cluster.placement,
+        cfg.cluster.cores_per_node,
+        &build_work,
+        &cluster.build_meter,
+        cfg.lsh.projections(),
+    );
+    let out: SearchOutput = search(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref());
+    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+    let search_makespan = cost.makespan(
+        &cluster.placement,
+        cfg.cluster.cores_per_node,
+        &out.work,
+        &out.meter,
+        cfg.lsh.projections(),
+    );
+    let dists: u64 = out.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+    let dups: u64 = out.work.iter().map(|(_, _, w)| w.dup_skipped).sum();
+    RunResult {
+        recall,
+        search_makespan,
+        build_makespan,
+        logical_msgs: out.meter.logical_msgs,
+        packets: out.meter.total_packets(),
+        payload_bytes: out.meter.payload_bytes,
+        local_msgs: out.meter.local_msgs,
+        wall_secs: out.wall_secs,
+        dists_computed: dists,
+        dup_skipped: dups,
+        dp_counts: cluster.dp_object_counts(),
+    }
+}
+
+/// Approximate the build phase's per-copy work from state contents
+/// (build handlers count into stage state; IR work is tracked separately).
+fn build_phase_work(
+    cluster: &mut Cluster,
+) -> Vec<(crate::dataflow::message::StageKind, u16, crate::dataflow::metrics::WorkStats)> {
+    let head = cluster.build_head_work;
+    cluster.take_work(&head)
+}
+
+// ------------------------------------------------------------------ fig 3
+
+/// Weak scaling (paper Fig. 3): nodes and dataset grow proportionally;
+/// efficiency = T(1 unit) / T(N units) with per-node work constant.
+pub fn fig3_weak_scaling() -> Table {
+    let cost = CostModel::default();
+    let per_node_n = env_usize("PARLSH_N", 120_000) / 12;
+    let q = env_usize("PARLSH_Q", 150);
+    // (BI nodes, DP nodes) preserving the paper's 1:4 ratio; the paper's
+    // largest point is (10, 40) = 51 nodes / 801 cores.
+    let points = [(1usize, 4usize), (2, 8), (4, 16), (6, 24), (8, 32), (10, 40)];
+    let mut table = Table::new(&["nodes", "cores", "n (scaled)", "modeled T(ms)", "efficiency"]);
+    let mut t1 = None;
+    for (bi, dp) in points {
+        let mut cfg = Config::default();
+        cfg.cluster.bi_nodes = bi;
+        cfg.cluster.dp_nodes = dp;
+        cfg.data.n = per_node_n * (bi + dp);
+        cfg.data.queries = q;
+        cfg.data.clusters = (cfg.data.n / 100).max(50);
+        let w = world(&cfg);
+        let r = run_once(&cfg, &w, &cost);
+        let t = r.search_makespan.makespan_secs;
+        let t1v = *t1.get_or_insert(t);
+        let eff = t1v / t;
+        table.row(&[
+            format!("{}", bi + dp + 1),
+            format!("{}", cfg.cluster.total_cores()),
+            format!("{}", cfg.data.n),
+            format!("{:.2}", t * 1e3),
+            format!("{eff:.3}"),
+        ]);
+    }
+    table
+}
+
+// ------------------------------------------------------- fig 4 + table II
+
+pub struct MultiprobePoint {
+    pub t: usize,
+    pub recall: f64,
+    pub modeled_secs: f64,
+    pub payload_gb: f64,
+    pub logical_msgs: u64,
+    pub dists: u64,
+    pub dups: u64,
+}
+
+/// Probe sweep (paper Fig. 4 + Table II): recall and time vs T, plus the
+/// communication volume and message counts.
+pub fn multiprobe_sweep(ts: &[usize]) -> Vec<MultiprobePoint> {
+    let cost = CostModel::default();
+    let mut cfg = Config::default();
+    cfg.data.n = env_usize("PARLSH_N", 200_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 200);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let mut out = Vec::new();
+    for &t in ts {
+        cfg.lsh.t = t;
+        let r = run_once(&cfg, &w, &cost);
+        out.push(MultiprobePoint {
+            t,
+            recall: r.recall,
+            modeled_secs: r.search_makespan.makespan_secs,
+            payload_gb: r.payload_bytes as f64 / 1e9,
+            logical_msgs: r.logical_msgs,
+            dists: r.dists_computed,
+            dups: r.dup_skipped,
+        });
+    }
+    out
+}
+
+pub fn fig4_table(points: &[MultiprobePoint]) -> Table {
+    let mut table = Table::new(&["T", "recall", "modeled T(ms)", "time ratio", "probe ratio"]);
+    let base = points.first().map(|p| (p.t, p.modeled_secs));
+    for p in points {
+        let (t0, s0) = base.unwrap();
+        table.row(&[
+            format!("{}", p.t),
+            format!("{:.3}", p.recall),
+            format!("{:.2}", p.modeled_secs * 1e3),
+            format!("{:.2}x", p.modeled_secs / s0),
+            format!("{:.2}x", p.t as f64 / t0 as f64),
+        ]);
+    }
+    table
+}
+
+pub fn table2(points: &[MultiprobePoint]) -> Table {
+    let mut table = Table::new(&["T", "volume (GB)", "# messages (x10^6)", "dists", "dup skipped"]);
+    for p in points {
+        table.row(&[
+            format!("{}", p.t),
+            format!("{:.4}", p.payload_gb),
+            format!("{:.4}", p.logical_msgs as f64 / 1e6),
+            format!("{}", p.dists),
+            format!("{}", p.dups),
+        ]);
+    }
+    table
+}
+
+// ----------------------------------------------------------- table III
+
+/// M sweep (paper Table III): selectivity vs time/recall at fixed T, L.
+pub fn table3_m_sweep(ms: &[usize]) -> Table {
+    let cost = CostModel::default();
+    let mut cfg = Config::default();
+    cfg.lsh.t = 30;
+    cfg.data.n = env_usize("PARLSH_N", 200_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 200);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let mut table = Table::new(&["M", "modeled T(ms)", "recall", "dists/query"]);
+    for &m in ms {
+        cfg.lsh.m = m;
+        let r = run_once(&cfg, &w, &cost);
+        table.row(&[
+            format!("{m}"),
+            format!("{:.2}", r.search_makespan.makespan_secs * 1e3),
+            format!("{:.3}", r.recall),
+            format!("{:.0}", r.dists_computed as f64 / cfg.data.queries as f64),
+        ]);
+    }
+    table
+}
+
+// -------------------------------------------------------------- fig 5
+
+/// L sweep at iso-recall (paper Fig. 5): for each L, grow T until recall
+/// reaches `target`, report the modeled time at that point.
+pub fn fig5_l_sweep(ls: &[usize], target: f64) -> Table {
+    let cost = CostModel::default();
+    let mut cfg = Config::default();
+    cfg.data.n = env_usize("PARLSH_N", 200_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 200);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let mut table = Table::new(&[
+        "L",
+        "T (tuned)",
+        "bucket visits (LxT)",
+        "recall",
+        "modeled T(ms)",
+        "dists/query",
+    ]);
+    for &l in ls {
+        cfg.lsh.l = l;
+        let mut t = 1usize;
+        let mut last = None;
+        while t <= 512 {
+            cfg.lsh.t = t;
+            let r = run_once(&cfg, &w, &cost);
+            let recall = r.recall;
+            last = Some((t, r));
+            if recall >= target {
+                break;
+            }
+            t = (t * 2).max(t + 1);
+        }
+        let (t, r) = last.unwrap();
+        table.row(&[
+            format!("{l}"),
+            format!("{t}"),
+            format!("{}", l * t),
+            format!("{:.3}", r.recall),
+            format!("{:.2}", r.search_makespan.makespan_secs * 1e3),
+            format!("{:.0}", r.dists_computed as f64 / cfg.data.queries as f64),
+        ]);
+    }
+    table
+}
+
+// -------------------------------------------------------------- fig 6
+
+/// Partition strategies (paper Fig. 6 + §V-E): time, messages, imbalance.
+pub fn fig6_partition() -> Table {
+    let cost = CostModel::default();
+    let mut cfg = Config::default();
+    cfg.lsh.t = 60;
+    cfg.data.n = env_usize("PARLSH_N", 200_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 200);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let mut table = Table::new(&[
+        "obj_map",
+        "modeled T(ms)",
+        "# messages (x10^6)",
+        "volume (GB)",
+        "imbalance %",
+        "recall",
+    ]);
+    for strat in [ObjMapStrategy::Mod, ObjMapStrategy::ZOrder, ObjMapStrategy::Lsh] {
+        cfg.stream.obj_map = strat;
+        let r = run_once(&cfg, &w, &cost);
+        let imb = crate::partition::imbalance(&r.dp_counts);
+        table.row(&[
+            strat.name().to_string(),
+            format!("{:.2}", r.search_makespan.makespan_secs * 1e3),
+            format!("{:.4}", r.logical_msgs as f64 / 1e6),
+            format!("{:.4}", r.payload_bytes as f64 / 1e9),
+            format!("{:.2}", imb.max_over_mean_pct),
+            format!("{:.3}", r.recall),
+        ]);
+    }
+    table
+}
+
+// ------------------------------------------------------------ ablation
+
+/// Intra-stage parallelism ablation (paper §V-B: one multithreaded copy per
+/// node vs one process per core → >6× fewer messages).
+pub fn ablation_intrastage() -> Table {
+    let cost = CostModel::default();
+    let mut cfg = Config::default();
+    // T=90 and coarser buckets so candidate lists reach paper-scale volume
+    // (thousands per query at 10^9 vectors); the partition-count effect on
+    // message counts only shows once candidates saturate the 640 per-core
+    // partitions.
+    cfg.lsh.t = 90;
+    cfg.lsh.w = 2000.0;
+    cfg.data.n = env_usize("PARLSH_N", 200_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 150);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let mut table = Table::new(&[
+        "topology",
+        "copies (BI+DP)",
+        "# messages (x10^6)",
+        "packets (x10^6)",
+        "modeled T(ms)",
+        "msg ratio",
+    ]);
+    let mut base_msgs = None;
+    for per_core in [false, true] {
+        cfg.cluster.per_core_copies = per_core;
+        let r = run_once(&cfg, &w, &cost);
+        let base = *base_msgs.get_or_insert(r.logical_msgs);
+        table.row(&[
+            if per_core { "per-core".into() } else { "per-node".to_string() },
+            format!(
+                "{}",
+                cfg.cluster.bi_copies() + cfg.cluster.dp_copies()
+            ),
+            format!("{:.4}", r.logical_msgs as f64 / 1e6),
+            format!("{:.4}", r.packets as f64 / 1e6),
+            format!("{:.2}", r.search_makespan.makespan_secs * 1e3),
+            format!("{:.2}x", r.logical_msgs as f64 / base as f64),
+        ]);
+    }
+    table
+}
+
+/// Ablation: labeled-stream message aggregation (DESIGN.md design choice).
+/// Aggregation leaves logical messages/bytes unchanged but collapses
+/// network packets — the per-packet latency term in the cluster model.
+pub fn ablation_aggregation() -> Table {
+    let cost = CostModel::default();
+    let mut cfg = Config::default();
+    cfg.data.n = env_usize("PARLSH_N", 100_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 150);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let mut table = Table::new(&[
+        "agg buffer",
+        "logical msgs",
+        "packets",
+        "modeled T(ms)",
+    ]);
+    for agg in [0usize, 4 * 1024, 64 * 1024] {
+        cfg.stream.agg_bytes = agg;
+        let r = run_once(&cfg, &w, &cost);
+        table.row(&[
+            if agg == 0 { "off".into() } else { format!("{} KiB", agg / 1024) },
+            format!("{}", r.logical_msgs),
+            format!("{}", r.packets),
+            format!("{:.2}", r.search_makespan.makespan_secs * 1e3),
+        ]);
+    }
+    table
+}
+
+/// Ablation: asynchronous overlap of communication and computation (the
+/// paper's design (iv)) vs a synchronous model (node time = comp + net).
+pub fn ablation_async() -> Table {
+    let mut cfg = Config::default();
+    cfg.data.n = env_usize("PARLSH_N", 100_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 150);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    cfg.stream.agg_bytes = 0; // stress the per-packet term
+    let w = world(&cfg);
+    let mut table = Table::new(&["overlap", "modeled T(ms)"]);
+    for overlap in [true, false] {
+        let mut cost = CostModel::default();
+        cost.async_overlap = overlap;
+        let r = run_once(&cfg, &w, &cost);
+        table.row(&[
+            if overlap { "async (max)".into() } else { "sync (sum)".to_string() },
+            format!("{:.2}", r.search_makespan.makespan_secs * 1e3),
+        ]);
+    }
+    table
+}
+
+/// Table I stand-in: the synthetic dataset inventory.
+pub fn datasets_table() -> Table {
+    let mut table = Table::new(&["name", "reference size", "queries", "dim", "stands in for"]);
+    let n = env_usize("PARLSH_N", 200_000);
+    let q = env_usize("PARLSH_Q", 200);
+    table.row(&[
+        "bigann-mini".into(),
+        format!("{n}"),
+        format!("{q}"),
+        "128".into(),
+        "BIGANN (10^9 SIFT)".into(),
+    ]);
+    table.row(&[
+        "yahoo-mini".into(),
+        format!("{}", n / 2),
+        format!("{q}"),
+        "128".into(),
+        "Yahoo (1.3x10^8 SIFT)".into(),
+    ]);
+    table
+}

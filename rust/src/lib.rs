@@ -1,0 +1,52 @@
+//! # parlsh — distributed multi-probe LSH for billion-scale similarity search
+//!
+//! Reproduction of *"Scalable Locality-Sensitive Hashing for Similarity Search
+//! in High-Dimensional, Large-Scale Multimedia Datasets"* (Teixeira, Teodoro,
+//! Valle, Saltz — 2013).
+//!
+//! The paper parallelizes (multi-probe) LSH over a distributed-memory cluster
+//! as an asynchronous dataflow of five stages — Input Reader (IR), Query
+//! Receiver (QR), Bucket Index (BI), Data Points (DP), Aggregator (AG) —
+//! connected by *labeled streams* whose tags route messages to stage copies.
+//! Buckets store `(object id, DP copy)` references only (no data
+//! replication); one multithreaded stage copy runs per node (intra-stage
+//! parallelism) so the dataset is partitioned per *node*, not per core.
+//!
+//! This crate implements the full system:
+//!
+//! * [`core`] — p-stable hashing, bucket keying, multi-probe sequences,
+//!   Z-order curves, top-k;
+//! * [`data`] — synthetic clustered SIFT-like datasets, BIGANN file IO,
+//!   ground truth and recall;
+//! * [`dataflow`] — stages, labeled streams, message aggregation, exact
+//!   per-link traffic accounting;
+//! * [`stages`] + [`coordinator`] — the five paper stages and the
+//!   build/search drivers;
+//! * [`partition`] — mod / Z-order / LSH `obj_map` + `bucket_map` strategies;
+//! * [`simnet`] — the calibrated cluster cost model standing in for the
+//!   paper's 60-node InfiniBand testbed (see DESIGN.md §Substitutions);
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (hashing + candidate ranking) on the serving hot path;
+//! * [`baseline`] — sequential LSH and exact search comparators.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); serving is pure
+//! rust + compiled HLO.
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod dataflow;
+pub mod experiments;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod simnet;
+pub mod stages;
+pub mod util;
+
+pub use config::Config;
+pub use core::lsh::{HashFamily, LshParams};
+pub use coordinator::{build_index, search, Cluster};
+pub use data::Dataset;

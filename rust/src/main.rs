@@ -1,0 +1,240 @@
+//! `parlsh` CLI — the Layer-3 leader entrypoint.
+//!
+//! ```text
+//! parlsh build   [--config=FILE] [--set k=v]...   build index, print stats
+//! parlsh search  [--config=FILE] [--set k=v]...   build + search + recall
+//! parlsh serve   [--config=FILE] [--set k=v]...   threaded serving run
+//! parlsh experiment <id>                          regenerate a paper table
+//!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation all
+//! parlsh calibrate                                measure cost-model consts
+//! ```
+
+use anyhow::{bail, Result};
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index, search, threaded::search_threaded};
+use parlsh::data::recall::recall_at_k;
+use parlsh::experiments as exp;
+use parlsh::metrics::latency_stats;
+use parlsh::simnet::calibrate;
+use parlsh::util::cli::Args;
+use parlsh::util::timer::Timer;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "build" => cmd_build(args),
+        "search" => cmd_search(args, false),
+        "serve" => cmd_search(args, true),
+        "experiment" => cmd_experiment(args),
+        "tune" => cmd_tune(args),
+        "calibrate" => cmd_calibrate(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `parlsh help`)"),
+    }
+}
+
+const HELP: &str = "\
+parlsh — distributed multi-probe LSH (Teixeira et al. 2013 reproduction)
+
+USAGE:
+  parlsh build      [--config=FILE] [--set section.key=value]...
+  parlsh search     [--config=FILE] [--set ...]      inline executor
+  parlsh serve      [--config=FILE] [--set ...]      threaded executor
+  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|all>
+  parlsh tune       [--target=0.8] [--set ...]    suggest w, tune T (and M)
+  parlsh calibrate
+
+Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
+scalar path; PARLSH_ARTIFACTS points at the AOT artifact dir.
+";
+
+fn cmd_build(args: &Args) -> Result<()> {
+    let cfg = Config::load(args)?;
+    let w = exp::world(&cfg);
+    let b = exp::backends(&cfg, w.data.dim);
+    println!(
+        "building index: n={} L={} M={} T={} w={} ({} path)",
+        w.data.len(),
+        cfg.lsh.l,
+        cfg.lsh.m,
+        cfg.lsh.t,
+        cfg.lsh.w,
+        if b.engine_path { "PJRT artifact" } else { "scalar" },
+    );
+    let t = Timer::start();
+    let cluster = build_index(&cfg, &w.data, b.hasher.as_ref());
+    println!(
+        "built in {:.2}s: {} objects across {} DPs, {} bucket refs across {} BIs",
+        t.secs(),
+        cluster.stored_objects(),
+        cluster.dps.len(),
+        cluster.bucket_references(),
+        cluster.bis.len(),
+    );
+    let imb = parlsh::partition::imbalance(&cluster.dp_object_counts());
+    println!(
+        "partition: {} | load imbalance {:.2}% (cv {:.2}%)",
+        cfg.stream.obj_map.name(),
+        imb.max_over_mean_pct,
+        imb.cv_pct
+    );
+    println!(
+        "build traffic: {} logical msgs, {} packets, {:.3} GB",
+        cluster.build_meter.logical_msgs,
+        cluster.build_meter.total_packets(),
+        cluster.build_meter.payload_bytes as f64 / 1e9,
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args, threaded: bool) -> Result<()> {
+    let cfg = Config::load(args)?;
+    let w = exp::world(&cfg);
+    let b = exp::backends(&cfg, w.data.dim);
+    let mut cluster = build_index(&cfg, &w.data, b.hasher.as_ref());
+    let t = Timer::start();
+    let out = if threaded {
+        search_threaded(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref())
+    } else {
+        search(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref())
+    };
+    let secs = t.secs();
+    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+    let lat = latency_stats(&out.per_query_secs);
+    println!(
+        "searched {} queries in {:.2}s ({:.1} q/s, {} executor, {} path)",
+        w.queries.len(),
+        secs,
+        w.queries.len() as f64 / secs,
+        if threaded { "threaded" } else { "inline" },
+        if b.engine_path { "PJRT artifact" } else { "scalar" },
+    );
+    println!("recall@{} = {recall:.3}", cfg.lsh.k);
+    println!(
+        "latency ms: mean {:.2} p50 {:.2} p90 {:.2} p99 {:.2} max {:.2}",
+        lat.mean_ms, lat.p50_ms, lat.p90_ms, lat.p99_ms, lat.max_ms
+    );
+    println!(
+        "traffic: {} logical msgs ({} local), {} packets, {:.3} GB",
+        out.meter.logical_msgs,
+        out.meter.local_msgs,
+        out.meter.total_packets(),
+        out.meter.payload_bytes as f64 / 1e9,
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let run = |id: &str| -> Result<()> {
+        match id {
+            "datasets" => {
+                println!("== Table I (datasets, scaled stand-ins) ==");
+                exp::datasets_table().print();
+            }
+            "fig3" => {
+                println!("== Fig. 3 (weak-scaling efficiency) ==");
+                exp::fig3_weak_scaling().print();
+            }
+            "fig4" | "table2" => {
+                let pts = exp::multiprobe_sweep(&[1, 30, 60, 90, 120]);
+                println!("== Fig. 4 (time & recall vs T) ==");
+                exp::fig4_table(&pts).print();
+                println!("== Table II (traffic vs T) ==");
+                exp::table2(&pts).print();
+            }
+            "table3" => {
+                println!("== Table III (M sweep) ==");
+                exp::table3_m_sweep(&[28, 30, 32]).print();
+            }
+            "fig5" => {
+                println!("== Fig. 5 (L sweep at iso-recall) ==");
+                exp::fig5_l_sweep(&[4, 6, 8], 0.74).print();
+            }
+            "fig6" => {
+                println!("== Fig. 6 (partition strategies) ==");
+                exp::fig6_partition().print();
+            }
+            "ablation" => {
+                println!("== §V-B ablation (intra-stage parallelism) ==");
+                exp::ablation_intrastage().print();
+            }
+            other => bail!("unknown experiment `{other}`"),
+        }
+        Ok(())
+    };
+    if id == "all" {
+        for id in ["datasets", "fig3", "fig4", "table3", "fig5", "fig6", "ablation"] {
+            run(id)?;
+            println!();
+        }
+        Ok(())
+    } else {
+        run(id)
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    // The paper's tuning phase (§V-D): run the sequential baseline over a
+    // small partition of the dataset to pick w, T (and inspect M).
+    let mut cfg = Config::load(args)?;
+    let target = args
+        .opt_f64("target", 0.8)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    cfg.data.n = cfg.data.n.min(20_000); // small partition, as in the paper
+    cfg.data.queries = cfg.data.queries.min(100);
+    let w = exp::world(&cfg);
+    let suggested = parlsh::baseline::suggest_w(&w.data, 256, cfg.lsh.seed);
+    println!(
+        "suggested w from NN-distance scale: {suggested:.0} (config: {})",
+        cfg.lsh.w
+    );
+    println!("tuning T to recall >= {target} at L={} M={}:", cfg.lsh.l, cfg.lsh.m);
+    let trace = parlsh::baseline::tune_t(&w.data, &w.queries, cfg.lsh, target, 512);
+    for p in &trace {
+        println!("  T={:<4} recall={:.3} dists/query={:.0}", p.t, p.recall, p.dists_per_query);
+    }
+    let best = trace.last().unwrap();
+    println!("-> use T={} (recall {:.3})", best.t, best.recall);
+    println!("M scan at T={} (paper Table III decision):", best.t);
+    let base = parlsh::core::lsh::LshParams { t: best.t, ..cfg.lsh };
+    let ms = [cfg.lsh.m.saturating_sub(4).max(2), cfg.lsh.m, cfg.lsh.m + 4];
+    for p in parlsh::baseline::tune_m(&w.data, &w.queries, base, &ms) {
+        println!("  M={:<3} recall={:.3} dists/query={:.0}", p.m, p.recall, p.dists_per_query);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    println!("calibrating cost model on this host...");
+    let m = calibrate();
+    println!("ns_per_dist      = {:.1}", m.ns_per_dist);
+    println!("ns_per_proj      = {:.1}", m.ns_per_proj);
+    println!("ns_per_probe_seq = {:.1}", m.ns_per_probe_seq);
+    println!("ns_per_lookup    = {:.1}", m.ns_per_lookup);
+    println!("ns_per_cand      = {:.1}", m.ns_per_cand);
+    println!("ns_per_store     = {:.1}", m.ns_per_store);
+    println!("ns_per_reduce    = {:.1}", m.ns_per_reduce);
+    println!("(paste into CostModel::default() to pin; see EXPERIMENTS.md)");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Serving metrics: latency percentiles and throughput reporting.
+
+use crate::util::timer::percentile;
+
+/// Latency summary over a sample of per-query seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+pub fn latency_stats(samples: &[f64]) -> LatencyStats {
+    if samples.is_empty() {
+        return LatencyStats::default();
+    }
+    let mut s: Vec<f64> = samples.to_vec();
+    let mean = s.iter().sum::<f64>() / s.len() as f64;
+    LatencyStats {
+        mean_ms: mean * 1e3,
+        p50_ms: percentile(&mut s, 50.0) * 1e3,
+        p90_ms: percentile(&mut s, 90.0) * 1e3,
+        p99_ms: percentile(&mut s, 99.0) * 1e3,
+        max_ms: s.last().copied().unwrap_or(0.0) * 1e3,
+    }
+}
+
+/// Fixed-width table printer used by the experiment harness so every bench
+/// emits the paper's rows in a uniform format.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:>w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_stats_basic() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        let st = latency_stats(&samples);
+        assert!((st.p50_ms - 50.0).abs() < 1.0);
+        assert!((st.p99_ms - 99.0).abs() < 1.0);
+        assert!((st.max_ms - 100.0).abs() < 1e-9);
+        assert!((st.mean_ms - 50.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn latency_stats_empty() {
+        let st = latency_stats(&[]);
+        assert_eq!(st.mean_ms, 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["T", "time(s)"]);
+        t.row(&["1".into(), "2.5".into()]);
+        t.row(&["30".into(), "10.25".into()]);
+        let s = t.to_string();
+        assert!(s.contains(" T |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

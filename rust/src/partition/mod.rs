@@ -1,0 +1,201 @@
+//! Data partition strategies (paper §IV-C): the labeled-stream mapping
+//! functions `obj_map` (object → DP copy) and `bucket_map` (bucket key → BI
+//! copy), plus load-imbalance accounting.
+//!
+//! * `mod` — `obj_id mod n_dp`; perfectly balanced, ignores locality.
+//! * `zorder` — Z-order curve key range-scaled onto copies; points close in
+//!   space land on the same copy with high probability.
+//! * `lsh` — an *independent* LSH g-function (different seed from the index
+//!   tables); points that tend to co-occur in index buckets tend to map to
+//!   the same DP copy, which is exactly what shrinks BI→DP fan-out.
+
+use crate::config::ObjMapStrategy;
+use crate::core::lsh::{HashFamily, LshParams};
+use crate::core::zorder::zorder_key;
+use crate::util::rng::mix64;
+
+/// Partition function for objects (the `obj_map` of the labeled stream
+/// IR→DP, reused by QR→BI routing for probe ownership).
+pub struct ObjMapper {
+    strategy: ObjMapStrategy,
+    n_dp: usize,
+    /// Value range for z-order quantization.
+    zlo: f32,
+    zhi: f32,
+    /// Small independent family for the `lsh` strategy.
+    part_family: Option<HashFamily>,
+}
+
+impl ObjMapper {
+    pub fn new(strategy: ObjMapStrategy, n_dp: usize, dim: usize, seed: u64) -> ObjMapper {
+        assert!(n_dp > 0);
+        let part_family = if strategy == ObjMapStrategy::Lsh {
+            // One table whose granularity targets the *cluster* scale: each
+            // partition bucket should hold one tight neighborhood (so
+            // co-retrieved points share a DP copy) while the number of
+            // distinct buckets stays >> n_dp (so `key mod n_dp` balances by
+            // the law of large numbers — the paper's 1.8% imbalance at 10^9
+            // points is exactly this effect at scale). w ≈ the projection
+            // spread of a SIFT neighborhood (σ≈12/coord × √128 ≈ 135,
+            // times a few) and m=4 keeps per-bucket populations small
+            // without shattering neighborhoods.
+            Some(HashFamily::sample(
+                dim,
+                LshParams { l: 1, m: 6, w: 700.0, k: 0, t: 1, seed: seed ^ 0x9A27_71 },
+            ))
+        } else {
+            None
+        };
+        ObjMapper { strategy, n_dp, zlo: 0.0, zhi: 256.0, part_family }
+    }
+
+    pub fn strategy(&self) -> ObjMapStrategy {
+        self.strategy
+    }
+
+    /// DP copy for object `(id, v)`.
+    #[inline]
+    pub fn map(&self, id: u32, v: &[f32]) -> u16 {
+        let copy = match self.strategy {
+            ObjMapStrategy::Mod => id as usize % self.n_dp,
+            ObjMapStrategy::ZOrder => {
+                let z = zorder_key(v, self.zlo, self.zhi);
+                ((z as u128 * self.n_dp as u128) >> 64) as usize
+            }
+            ObjMapStrategy::Lsh => {
+                let fam = self.part_family.as_ref().unwrap();
+                let key = fam.bucket_keys(v)[0];
+                (key % self.n_dp as u64) as usize
+            }
+        };
+        copy as u16
+    }
+}
+
+/// `bucket_map`: bucket key → BI copy. Keys are already uniformly mixed
+/// (splitmix64-finalized), so a plain mod is both balanced and deterministic
+/// — this matches the paper's `bucket value mod copies`.
+#[inline]
+pub fn bucket_map(key: u64, n_bi: usize) -> u16 {
+    debug_assert!(n_bi > 0);
+    (key % n_bi as u64) as u16
+}
+
+/// `ag_map`: query id → AG copy (paper: label = query id so all messages of
+/// one query reduce at the same copy).
+#[inline]
+pub fn ag_map(qid: u32, n_ag: usize) -> u16 {
+    debug_assert!(n_ag > 0);
+    (mix64(qid as u64) % n_ag as u64) as u16
+}
+
+/// Load-imbalance report for a partition assignment (paper §V-E: deviation
+/// of per-copy object counts from the mean).
+#[derive(Clone, Debug)]
+pub struct ImbalanceReport {
+    pub counts: Vec<usize>,
+    /// (max - mean) / mean, in percent — the paper's headline number.
+    pub max_over_mean_pct: f64,
+    /// Coefficient of variation, percent (stddev / mean).
+    pub cv_pct: f64,
+}
+
+pub fn imbalance(counts: &[usize]) -> ImbalanceReport {
+    assert!(!counts.is_empty());
+    let n: usize = counts.iter().sum();
+    let mean = n as f64 / counts.len() as f64;
+    let max = *counts.iter().max().unwrap() as f64;
+    let var = counts
+        .iter()
+        .map(|&c| (c as f64 - mean).powi(2))
+        .sum::<f64>()
+        / counts.len() as f64;
+    ImbalanceReport {
+        counts: counts.to_vec(),
+        max_over_mean_pct: if mean > 0.0 { (max - mean) / mean * 100.0 } else { 0.0 },
+        cv_pct: if mean > 0.0 { var.sqrt() / mean * 100.0 } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synthesize, SynthSpec};
+    use crate::data::sqdist;
+
+    #[test]
+    fn mod_is_perfectly_balanced() {
+        let mapper = ObjMapper::new(ObjMapStrategy::Mod, 8, 128, 1);
+        let v = vec![0f32; 128];
+        let mut counts = vec![0usize; 8];
+        for id in 0..8000u32 {
+            counts[mapper.map(id, &v) as usize] += 1;
+        }
+        let rep = imbalance(&counts);
+        assert_eq!(rep.max_over_mean_pct, 0.0);
+    }
+
+    #[test]
+    fn all_strategies_in_range() {
+        let ds = synthesize(SynthSpec { n: 2_000, ..Default::default() });
+        for strat in [ObjMapStrategy::Mod, ObjMapStrategy::ZOrder, ObjMapStrategy::Lsh] {
+            let mapper = ObjMapper::new(strat, 7, 128, 3);
+            for i in 0..ds.len() {
+                let c = mapper.map(i as u32, ds.get(i));
+                assert!((c as usize) < 7, "{strat:?} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn locality_strategies_group_near_points() {
+        // Near-duplicate pairs should land on the same DP copy far more
+        // often under zorder/lsh than under mod.
+        let ds = synthesize(SynthSpec { n: 4_000, clusters: 100, ..Default::default() });
+        let (qs, bases) = crate::data::synth::distorted_queries(&ds, 400, 2.0, 5);
+        let score = |strat: ObjMapStrategy| -> usize {
+            let mapper = ObjMapper::new(strat, 8, 128, 3);
+            (0..qs.len())
+                .filter(|&i| {
+                    let b = bases[i] as usize;
+                    // sanity: the pair really is near
+                    debug_assert!(sqdist(qs.get(i), ds.get(b)) < 1e6);
+                    mapper.map(u32::MAX, qs.get(i)) == mapper.map(bases[i], ds.get(b))
+                })
+                .count()
+        };
+        let m = score(ObjMapStrategy::Mod);
+        let z = score(ObjMapStrategy::ZOrder);
+        let l = score(ObjMapStrategy::Lsh);
+        // mod: ~1/8 chance (id-based, near-random for random id pairing)
+        assert!(z > m, "zorder {z} <= mod {m}");
+        assert!(l > m * 2, "lsh {l} <= 2*mod {m}");
+    }
+
+    #[test]
+    fn bucket_map_balanced_on_mixed_keys() {
+        let mut counts = vec![0usize; 10];
+        for i in 0..100_000u64 {
+            counts[bucket_map(mix64(i), 10) as usize] += 1;
+        }
+        let rep = imbalance(&counts);
+        assert!(rep.max_over_mean_pct < 2.0, "{:?}", rep.max_over_mean_pct);
+    }
+
+    #[test]
+    fn ag_map_spreads_queries() {
+        let mut counts = vec![0usize; 4];
+        for q in 0..10_000u32 {
+            counts[ag_map(q, 4) as usize] += 1;
+        }
+        assert!(imbalance(&counts).max_over_mean_pct < 5.0);
+    }
+
+    #[test]
+    fn imbalance_math() {
+        let rep = imbalance(&[10, 10, 10, 10]);
+        assert_eq!(rep.max_over_mean_pct, 0.0);
+        let rep = imbalance(&[20, 10, 10, 0]);
+        assert!((rep.max_over_mean_pct - 100.0).abs() < 1e-9);
+    }
+}

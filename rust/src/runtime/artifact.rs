@@ -1,0 +1,125 @@
+//! Artifact manifest: the shape-variant registry written by
+//! `python/compile/aot.py` (`artifacts/manifest.txt`).
+//!
+//! Format, one artifact per line:
+//! ```text
+//! hash hash_b64_p256.hlo.txt b=64 d=128 p=256
+//! proj proj_b64_p256.hlo.txt b=64 d=128 p=256
+//! rank rank_q1_n1024_k16.hlo.txt bq=1 n=1024 d=128 k=16
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub kind: String,
+    pub file: String,
+    pub attrs: HashMap<String, usize>,
+}
+
+impl ArtifactEntry {
+    pub fn attr(&self, name: &str) -> Result<usize> {
+        self.attrs
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("artifact {} missing attr {name}", self.file))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts
+                .next()
+                .ok_or_else(|| anyhow!("line {}: empty", i + 1))?
+                .to_string();
+            let file = parts
+                .next()
+                .ok_or_else(|| anyhow!("line {}: missing file", i + 1))?
+                .to_string();
+            let mut attrs = HashMap::new();
+            for kv in parts {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("line {}: bad attr `{kv}`", i + 1))?;
+                let v: usize = v
+                    .parse()
+                    .with_context(|| format!("line {}: attr `{kv}`", i + 1))?;
+                attrs.insert(k.to_string(), v);
+            }
+            entries.push(ArtifactEntry { kind, file, attrs });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.txt");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+hash hash_b64_p256.hlo.txt b=64 d=128 p=256
+proj proj_b64_p256.hlo.txt b=64 d=128 p=256
+rank rank_q1_n1024_k16.hlo.txt bq=1 n=1024 d=128 k=16
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let h = &m.entries[0];
+        assert_eq!(h.kind, "hash");
+        assert_eq!(h.attr("b").unwrap(), 64);
+        assert_eq!(h.attr("p").unwrap(), 256);
+        assert!(h.attr("zz").is_err());
+    }
+
+    #[test]
+    fn filters_by_kind() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.of_kind("rank").count(), 1);
+        assert_eq!(m.of_kind("hash").count(), 1);
+        assert_eq!(m.of_kind("nope").count(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("hash").is_err());
+        assert!(Manifest::parse("hash f.hlo b=x").is_err());
+        assert!(Manifest::parse("hash f.hlo b").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# hi\n\nhash f.hlo b=1\n").unwrap();
+        assert_eq!(m.entries.len(), 1);
+    }
+}

@@ -1,0 +1,385 @@
+//! The PJRT engine: compiled HLO artifacts on the serving hot path.
+//!
+//! Loads every artifact listed in `artifacts/manifest.txt`, compiles it once
+//! on the CPU PJRT client, and dispatches [`Hasher`]/[`Ranker`] calls to the
+//! smallest shape variant that fits (padding inputs as needed; oversized
+//! candidate sets are tiled over the largest `rank` variant and merged).
+//!
+//! The projection bank `(A, b, 1/w)` is uploaded to device **once** per
+//! family (`set_family`) and reused across every hash/proj call via
+//! `execute_b` — only the data batch crosses the host↔device boundary per
+//! call. This is the artifact-path analogue of the paper keeping hash
+//! tables resident.
+
+use crate::core::lsh::HashFamily;
+use crate::core::topk::TopK;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::{Hasher, Ranker};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Mutex;
+
+struct BankBuffers {
+    a: xla::PjRtBuffer,
+    b: xla::PjRtBuffer,
+    inv_w: xla::PjRtBuffer,
+    dim: usize,
+    p: usize,
+}
+
+struct Variants {
+    /// (batch rows, executable), ascending by rows.
+    hash: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    proj: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    /// (bq, n, executable), ascending by (bq, n).
+    rank: Vec<(usize, usize, xla::PjRtLoadedExecutable)>,
+    /// top-k capacity of the rank artifacts.
+    k_cap: usize,
+    dim: usize,
+    p: usize,
+}
+
+/// Compiled-artifact engine. Interior mutability via a single mutex: the
+/// PJRT CPU client is used from whichever thread holds the lock.
+pub struct Engine {
+    client: xla::PjRtClient,
+    variants: Variants,
+    bank: Mutex<Option<BankBuffers>>,
+    /// Execution counters (perf accounting).
+    pub stats: Mutex<EngineStats>,
+}
+
+// SAFETY: the underlying PJRT CPU client is thread-compatible; all mutable
+// use is serialized through the `bank`/`stats` mutexes and `&self` execute
+// calls do not share unsynchronized host state. The engine is only ever
+// driven while wrapped in `Arc<Engine>` with locking on the callers' side
+// for anything stateful.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub hash_calls: u64,
+    pub hash_rows: u64,
+    pub hash_padded_rows: u64,
+    pub rank_calls: u64,
+    pub rank_rows: u64,
+    pub rank_padded_rows: u64,
+}
+
+impl Engine {
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = format!("{dir}/{file}");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path}: {e}"))
+        };
+
+        let mut hash = Vec::new();
+        let mut proj = Vec::new();
+        let mut rank = Vec::new();
+        let (mut dim, mut p, mut k_cap) = (0usize, 0usize, 0usize);
+        for e in &manifest.entries {
+            match e.kind.as_str() {
+                "hash" | "proj" => {
+                    let b = e.attr("b")?;
+                    dim = e.attr("d")?;
+                    p = e.attr("p")?;
+                    let exe = compile(&e.file)?;
+                    if e.kind == "hash" {
+                        hash.push((b, exe));
+                    } else {
+                        proj.push((b, exe));
+                    }
+                }
+                "rank" => {
+                    let bq = e.attr("bq")?;
+                    let n = e.attr("n")?;
+                    dim = e.attr("d")?;
+                    k_cap = e.attr("k")?;
+                    rank.push((bq, n, compile(&e.file)?));
+                }
+                other => bail!("unknown artifact kind `{other}`"),
+            }
+        }
+        hash.sort_by_key(|(b, _)| *b);
+        proj.sort_by_key(|(b, _)| *b);
+        rank.sort_by_key(|(bq, n, _)| (*bq, *n));
+        if hash.is_empty() || rank.is_empty() {
+            bail!("manifest must contain hash and rank artifacts");
+        }
+        Ok(Engine {
+            client,
+            variants: Variants { hash, proj, rank, k_cap, dim, p },
+            bank: Mutex::new(None),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.variants.dim
+    }
+
+    pub fn k_cap(&self) -> usize {
+        self.variants.k_cap
+    }
+
+    /// Upload the projection bank for `family` (device-resident thereafter).
+    ///
+    /// The family's L·M projections are padded to the artifact bank width P
+    /// with zero rows; the extra columns produce garbage coordinates that
+    /// callers slice away (`hash_batch` returns only the first L·M columns
+    /// per row... actually the full P — the caller indexes `row*P + j`).
+    pub fn set_family(&self, family: &HashFamily) -> Result<()> {
+        if family.dim != self.variants.dim {
+            bail!(
+                "family dim {} != artifact dim {}",
+                family.dim,
+                self.variants.dim
+            );
+        }
+        let p_used = family.params.projections();
+        if p_used > self.variants.p {
+            bail!("family needs P={} > artifact bank {}", p_used, self.variants.p);
+        }
+        let p = self.variants.p;
+        let dim = self.variants.dim;
+        // a_transposed is [dim][p_used]; pad columns to P.
+        let at = family.a_transposed();
+        let mut a_pad = vec![0f32; dim * p];
+        for d in 0..dim {
+            a_pad[d * p..d * p + p_used]
+                .copy_from_slice(&at[d * p_used..(d + 1) * p_used]);
+        }
+        let mut b_pad = vec![0f32; p];
+        b_pad[..p_used].copy_from_slice(family.offsets());
+        let inv_w = [1.0f32 / family.params.w];
+
+        let a = self
+            .client
+            .buffer_from_host_buffer(&a_pad, &[dim, p], None)
+            .map_err(|e| anyhow!("upload A: {e}"))?;
+        let b = self
+            .client
+            .buffer_from_host_buffer(&b_pad, &[p], None)
+            .map_err(|e| anyhow!("upload b: {e}"))?;
+        let inv_w = self
+            .client
+            .buffer_from_host_buffer(&inv_w, &[1, 1], None)
+            .map_err(|e| anyhow!("upload inv_w: {e}"))?;
+        *self.bank.lock().unwrap() = Some(BankBuffers { a, b, inv_w, dim, p });
+        Ok(())
+    }
+
+    fn pick_batch(variants: &[(usize, xla::PjRtLoadedExecutable)], rows: usize) -> usize {
+        for (i, (b, _)) in variants.iter().enumerate() {
+            if *b >= rows {
+                return i;
+            }
+        }
+        variants.len() - 1
+    }
+
+    /// Run one bank kernel (hash or proj) over `rows` vectors, tiling by the
+    /// largest variant when needed. `collect` receives (literal, rows_in_tile).
+    fn run_bank<T: xla::ArrayElement + Clone + Default>(
+        &self,
+        proj: bool,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<T>> {
+        let variants = if proj { &self.variants.proj } else { &self.variants.hash };
+        if variants.is_empty() {
+            bail!("no {} artifacts loaded", if proj { "proj" } else { "hash" });
+        }
+        let bank = self.bank.lock().unwrap();
+        let bank = bank
+            .as_ref()
+            .ok_or_else(|| anyhow!("set_family() must be called before hashing"))?;
+        let dim = bank.dim;
+        let p = bank.p;
+        debug_assert!(x.len() >= rows * dim);
+
+        let mut out: Vec<T> = Vec::with_capacity(rows * p);
+        let mut done = 0usize;
+        while done < rows {
+            let remaining = rows - done;
+            let vi = Self::pick_batch(variants, remaining);
+            let (vb, exe) = (&variants[vi].0, &variants[vi].1);
+            let take = remaining.min(*vb);
+            // Pad the tile to the variant's batch size.
+            let mut tile = vec![0f32; vb * dim];
+            tile[..take * dim].copy_from_slice(&x[done * dim..(done + take) * dim]);
+            let xbuf = self
+                .client
+                .buffer_from_host_buffer(&tile, &[*vb, dim], None)
+                .map_err(|e| anyhow!("upload batch: {e}"))?;
+            let res = exe
+                .execute_b(&[&xbuf, &bank.a, &bank.b, &bank.inv_w])
+                .map_err(|e| anyhow!("execute bank kernel: {e}"))?;
+            let lit = res[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e}"))?
+                .to_tuple1()
+                .map_err(|e| anyhow!("untuple: {e}"))?;
+            let vals: Vec<T> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e}"))?;
+            out.extend_from_slice(&vals[..take * p]);
+            {
+                let mut s = self.stats.lock().unwrap();
+                s.hash_calls += 1;
+                s.hash_rows += take as u64;
+                s.hash_padded_rows += (*vb - take) as u64;
+            }
+            done += take;
+        }
+        Ok(out)
+    }
+
+    /// Rank `n` candidates against one query; `(sqdist, local_idx)` ascending.
+    pub fn rank_one(
+        &self,
+        q: &[f32],
+        cands: &[f32],
+        n: usize,
+        k: usize,
+    ) -> Result<Vec<(f32, u32)>> {
+        let dim = self.variants.dim;
+        if k > self.variants.k_cap {
+            bail!("k={k} exceeds artifact top-k capacity {}", self.variants.k_cap);
+        }
+        // Use bq=1 variants; tile if n exceeds the largest.
+        let ones: Vec<&(usize, usize, xla::PjRtLoadedExecutable)> = self
+            .variants
+            .rank
+            .iter()
+            .filter(|(bq, _, _)| *bq == 1)
+            .collect();
+        if ones.is_empty() {
+            bail!("no bq=1 rank artifacts");
+        }
+        let qlit = self
+            .client
+            .buffer_from_host_buffer(q, &[1, dim], None)
+            .map_err(|e| anyhow!("upload q: {e}"))?;
+
+        let mut tk = TopK::new(k);
+        let mut done = 0usize;
+        while done < n {
+            let remaining = n - done;
+            let (_, vn, exe) = ones
+                .iter()
+                .find(|(_, vn, _)| *vn >= remaining)
+                .copied()
+                .unwrap_or_else(|| *ones.last().unwrap());
+            let take = remaining.min(*vn);
+            let mut tile = vec![0f32; vn * dim];
+            tile[..take * dim]
+                .copy_from_slice(&cands[done * dim..(done + take) * dim]);
+            let cbuf = self
+                .client
+                .buffer_from_host_buffer(&tile, &[*vn, dim], None)
+                .map_err(|e| anyhow!("upload candidates: {e}"))?;
+            let nv = [take as i32];
+            let nvbuf = self
+                .client
+                .buffer_from_host_buffer(&nv, &[1, 1], None)
+                .map_err(|e| anyhow!("upload n_valid: {e}"))?;
+            let res = exe
+                .execute_b(&[&qlit, &cbuf, &nvbuf])
+                .map_err(|e| anyhow!("execute rank: {e}"))?;
+            let lit = res[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch rank result: {e}"))?;
+            let (dl, il) = lit.to_tuple2().map_err(|e| anyhow!("untuple rank: {e}"))?;
+            let dists: Vec<f32> = dl.to_vec().map_err(|e| anyhow!("dists: {e}"))?;
+            let idx: Vec<i32> = il.to_vec().map_err(|e| anyhow!("idx: {e}"))?;
+            for (d, i) in dists.iter().zip(&idx).take(self.variants.k_cap) {
+                if d.is_finite() {
+                    tk.push(*d, done as u32 + *i as u32);
+                }
+            }
+            {
+                let mut s = self.stats.lock().unwrap();
+                s.rank_calls += 1;
+                s.rank_rows += take as u64;
+                s.rank_padded_rows += (*vn - take) as u64;
+            }
+            done += take;
+        }
+        Ok(tk.into_sorted())
+    }
+}
+
+/// [`Hasher`] over the engine (set_family must have been called).
+pub struct EngineHasher {
+    pub engine: std::sync::Arc<Engine>,
+    /// L·M — callers only consume this many of the P bank columns.
+    pub p_used: usize,
+}
+
+impl Hasher for EngineHasher {
+    fn dim(&self) -> usize {
+        self.engine.dim()
+    }
+    fn p(&self) -> usize {
+        self.p_used
+    }
+    fn hash_batch(&self, x: &[f32], rows: usize) -> Vec<i32> {
+        let full: Vec<i32> = self
+            .engine
+            .run_bank(false, x, rows)
+            .expect("engine hash failed");
+        extract_columns(&full, rows, self.engine.variants.p, self.p_used)
+    }
+    fn proj_batch(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let full: Vec<f32> = self
+            .engine
+            .run_bank(true, x, rows)
+            .expect("engine proj failed");
+        extract_columns(&full, rows, self.engine.variants.p, self.p_used)
+    }
+}
+
+/// [`Ranker`] over the engine.
+pub struct EngineRanker {
+    pub engine: std::sync::Arc<Engine>,
+}
+
+impl Ranker for EngineRanker {
+    fn rank(&self, q: &[f32], cands: &[f32], n: usize, k: usize) -> Vec<(f32, u32)> {
+        self.engine
+            .rank_one(q, cands, n, k)
+            .expect("engine rank failed")
+    }
+}
+
+fn extract_columns<T: Copy>(full: &[T], rows: usize, p_full: usize, p_used: usize) -> Vec<T> {
+    if p_full == p_used {
+        return full.to_vec();
+    }
+    let mut out = Vec::with_capacity(rows * p_used);
+    for r in 0..rows {
+        out.extend_from_slice(&full[r * p_full..r * p_full + p_used]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need compiled artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`).
+    use super::extract_columns;
+
+    #[test]
+    fn extract_columns_slices_rows() {
+        let full = vec![1, 2, 3, 4, 5, 6];
+        assert_eq!(extract_columns(&full, 2, 3, 2), vec![1, 2, 4, 5]);
+        assert_eq!(extract_columns(&full, 2, 3, 3), full);
+    }
+}

@@ -1,0 +1,165 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and exposes the two
+//! compute hot-spots — hashing and candidate ranking — behind the
+//! [`Hasher`] / [`Ranker`] traits the stages program against.
+//!
+//! Two implementations of each trait:
+//! * `Scalar*` — pure rust; the differential-testing oracle and the
+//!   fallback when `artifacts/` is absent;
+//! * [`engine::Engine`] — compiled HLO via `PjRtClient::cpu()`; artifacts
+//!   come in fixed shape variants (see `python/compile/aot.py`) and inputs
+//!   are padded up to the nearest variant.
+
+pub mod artifact;
+pub mod engine;
+
+use crate::core::lsh::HashFamily;
+use crate::core::topk::TopK;
+use crate::data::sqdist;
+
+/// Batched LSH projection/quantization.
+pub trait Hasher: Send + Sync {
+    fn dim(&self) -> usize;
+    /// Projection count P.
+    fn p(&self) -> usize;
+    /// Quantized coordinates for `rows` vectors (flat `[rows*dim]` input,
+    /// flat `[rows*P]` output).
+    fn hash_batch(&self, x: &[f32], rows: usize) -> Vec<i32>;
+    /// Raw projections (the multi-probe path needs fractional parts).
+    fn proj_batch(&self, x: &[f32], rows: usize) -> Vec<f32>;
+}
+
+/// Candidate ranking: squared distances + top-k.
+pub trait Ranker: Send + Sync {
+    /// Rank `n` candidate vectors (flat `[n*dim]`) against query `q`;
+    /// return up to `k` `(sqdist, local_index)` pairs ascending.
+    fn rank(&self, q: &[f32], cands: &[f32], n: usize, k: usize) -> Vec<(f32, u32)>;
+}
+
+/// Scalar hasher backed by the sampled family (same math as the artifact).
+pub struct ScalarHasher {
+    pub family: HashFamily,
+}
+
+impl Hasher for ScalarHasher {
+    fn dim(&self) -> usize {
+        self.family.dim
+    }
+    fn p(&self) -> usize {
+        self.family.params.projections()
+    }
+    fn hash_batch(&self, x: &[f32], rows: usize) -> Vec<i32> {
+        let dim = self.family.dim;
+        let mut out = Vec::with_capacity(rows * self.p());
+        for r in 0..rows {
+            out.extend(self.family.hash_coords(&x[r * dim..(r + 1) * dim]));
+        }
+        out
+    }
+    fn proj_batch(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let dim = self.family.dim;
+        let mut out = Vec::with_capacity(rows * self.p());
+        for r in 0..rows {
+            out.extend(self.family.raw_projections(&x[r * dim..(r + 1) * dim]));
+        }
+        out
+    }
+}
+
+/// Scalar ranker (4-way unrolled sqdist + heap top-k).
+pub struct ScalarRanker {
+    pub dim: usize,
+}
+
+impl Ranker for ScalarRanker {
+    fn rank(&self, q: &[f32], cands: &[f32], n: usize, k: usize) -> Vec<(f32, u32)> {
+        debug_assert!(cands.len() >= n * self.dim);
+        let mut tk = TopK::new(k);
+        for i in 0..n {
+            let c = &cands[i * self.dim..(i + 1) * self.dim];
+            tk.push(sqdist(q, c), i as u32);
+        }
+        tk.into_sorted()
+    }
+}
+
+/// Hybrid ranker: scalar heap top-k below `threshold` candidates, compiled
+/// PJRT `rank` artifact at or above it.
+///
+/// §Perf rationale (EXPERIMENTS.md): the artifact path pays a fixed PJRT
+/// dispatch plus a full `sort` (the only top-k lowering xla_extension 0.5.1
+/// parses), so on the CPU backend the scalar heap wins until candidate
+/// tiles are large; on a real TPU the MXU matmul moves the crossover far
+/// left. The threshold is env-tunable (`PARLSH_RANK_THRESHOLD`).
+pub struct HybridRanker {
+    pub scalar: ScalarRanker,
+    pub engine: Box<dyn Ranker>,
+    pub threshold: usize,
+}
+
+impl HybridRanker {
+    pub fn threshold_from_env(default: usize) -> usize {
+        std::env::var("PARLSH_RANK_THRESHOLD")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+impl Ranker for HybridRanker {
+    fn rank(&self, q: &[f32], cands: &[f32], n: usize, k: usize) -> Vec<(f32, u32)> {
+        if n < self.threshold {
+            self.scalar.rank(q, cands, n, k)
+        } else {
+            self.engine.rank(q, cands, n, k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::lsh::LshParams;
+
+    fn hasher() -> ScalarHasher {
+        ScalarHasher {
+            family: HashFamily::sample(
+                16,
+                LshParams { l: 2, m: 4, w: 4.0, k: 5, t: 1, seed: 3 },
+            ),
+        }
+    }
+
+    #[test]
+    fn scalar_hash_matches_family() {
+        let h = hasher();
+        let x: Vec<f32> = (0..32).map(|i| (i as f32).cos()).collect();
+        let batch = h.hash_batch(&x, 2);
+        assert_eq!(batch.len(), 16);
+        assert_eq!(&batch[..8], h.family.hash_coords(&x[..16]).as_slice());
+        assert_eq!(&batch[8..], h.family.hash_coords(&x[16..]).as_slice());
+    }
+
+    #[test]
+    fn proj_floor_equals_hash() {
+        let h = hasher();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32).sin() * 3.0).collect();
+        let proj = h.proj_batch(&x, 1);
+        let hash = h.hash_batch(&x, 1);
+        for (p, c) in proj.iter().zip(&hash) {
+            assert_eq!(p.floor() as i32, *c);
+        }
+    }
+
+    #[test]
+    fn scalar_ranker_orders() {
+        let r = ScalarRanker { dim: 4 };
+        let q = [0f32; 4];
+        let cands = [
+            1.0, 0.0, 0.0, 0.0, // d=1
+            3.0, 0.0, 0.0, 0.0, // d=9
+            2.0, 0.0, 0.0, 0.0, // d=4
+        ];
+        let out = r.rank(&q, &cands, 3, 2);
+        assert_eq!(out, vec![(1.0, 0), (4.0, 2)]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Cost-model calibration: measures the per-op constants on this host so
+//! the cluster model's compute:communication ratio tracks real hardware.
+
+use crate::core::lsh::{HashFamily, LshParams};
+use crate::core::topk::TopK;
+use crate::data::sqdist;
+use crate::simnet::cost::CostModel;
+use crate::util::rng::Rng;
+use crate::util::timer::bench_loop;
+use std::collections::HashMap;
+
+/// Measure per-op costs (takes ~1 s). Network constants stay at their
+/// configured values (they describe the modeled fabric, not this host).
+pub fn calibrate() -> CostModel {
+    let mut model = CostModel::default();
+    let mut rng = Rng::new(0xCA11B);
+    let dim = 128;
+
+    // Distance: 128-d sqdist over a pool (defeats cache-resident best case).
+    let pool: Vec<f32> = (0..256 * dim).map(|_| rng.gaussian_f32()).collect();
+    let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32()).collect();
+    let mut i = 0usize;
+    let mut acc = 0f32;
+    let per = bench_loop(0.08, 64, || {
+        for c in 0..64 {
+            let row = (i + c) % 256;
+            acc += sqdist(&q, &pool[row * dim..(row + 1) * dim]);
+        }
+        i += 64;
+    });
+    model.ns_per_dist = per * 1e9 / 64.0;
+    std::hint::black_box(acc);
+
+    // Projection: one row of the bank (dim MACs) via raw_projections/P.
+    let family = HashFamily::sample(
+        dim,
+        LshParams { l: 6, m: 32, w: 1000.0, k: 10, t: 1, seed: 1 },
+    );
+    let p = family.params.projections();
+    let per = bench_loop(0.08, 16, || {
+        std::hint::black_box(family.raw_projections(&q));
+    });
+    model.ns_per_proj = per * 1e9 / p as f64;
+
+    // Probe-sequence generation (M=32, T=30).
+    let fracs: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+    let per = bench_loop(0.05, 16, || {
+        std::hint::black_box(crate::core::multiprobe::probe_sequence(&fracs, 30));
+    });
+    model.ns_per_probe_seq = per * 1e9;
+
+    // Bucket lookup: HashMap<u64, Vec<..>> hit.
+    let mut buckets: HashMap<u64, Vec<(u32, u16)>> = HashMap::new();
+    for k in 0..10_000u64 {
+        buckets.insert(crate::util::rng::mix64(k), vec![(k as u32, 0)]);
+    }
+    let keys: Vec<u64> = (0..10_000u64).map(crate::util::rng::mix64).collect();
+    let mut j = 0usize;
+    let per = bench_loop(0.05, 64, || {
+        for c in 0..64 {
+            std::hint::black_box(buckets.get(&keys[(j + c) % keys.len()]));
+        }
+        j += 64;
+    });
+    model.ns_per_lookup = per * 1e9 / 64.0;
+
+    // Candidate routing: HashSet insert + Vec push.
+    let per = bench_loop(0.05, 16, || {
+        let mut seen = std::collections::HashSet::new();
+        let mut v = Vec::new();
+        for id in 0..1000u32 {
+            if seen.insert(id) {
+                v.push(id);
+            }
+        }
+        std::hint::black_box(v);
+    });
+    model.ns_per_cand = per * 1e9 / 1000.0;
+
+    // Store: vector copy + map insert.
+    let src = vec![0f32; dim];
+    let per = bench_loop(0.05, 16, || {
+        let mut store: Vec<f32> = Vec::with_capacity(1000 * dim);
+        let mut map = HashMap::new();
+        for id in 0..1000u32 {
+            store.extend_from_slice(&src);
+            map.insert(id, id);
+        }
+        std::hint::black_box((store, map));
+    });
+    model.ns_per_store = per * 1e9 / 1000.0;
+
+    // Reduce: top-k push.
+    let vals: Vec<f32> = (0..1000).map(|_| rng.f32()).collect();
+    let per = bench_loop(0.05, 16, || {
+        let mut tk = TopK::new(10);
+        for (i, &v) in vals.iter().enumerate() {
+            tk.push(v, i as u32);
+        }
+        std::hint::black_box(tk.len());
+    });
+    model.ns_per_reduce = per * 1e9 / 1000.0;
+
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_sane_constants() {
+        let m = calibrate();
+        // All positive, none absurd (< 1 µs per scalar op on any host).
+        for (name, v) in [
+            ("dist", m.ns_per_dist),
+            ("proj", m.ns_per_proj),
+            ("lookup", m.ns_per_lookup),
+            ("cand", m.ns_per_cand),
+            ("store", m.ns_per_store),
+            ("reduce", m.ns_per_reduce),
+        ] {
+            assert!(v > 0.0 && v < 100_000.0, "{name} = {v} ns");
+        }
+        assert!(m.ns_per_probe_seq > 0.0 && m.ns_per_probe_seq < 1e8);
+        // a distance (128 subs+mults) must cost more than a topk push
+        assert!(m.ns_per_dist > m.ns_per_reduce * 0.5);
+    }
+}

@@ -1,0 +1,218 @@
+//! Makespan computation from work counters + traffic.
+
+use crate::config::NetParams;
+use crate::dataflow::message::StageKind;
+use crate::dataflow::metrics::{TrafficMeter, WorkStats};
+use crate::dataflow::Placement;
+
+/// Calibrated per-operation costs (nanoseconds) + network constants.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// One full d-dimensional squared-distance computation.
+    pub ns_per_dist: f64,
+    /// One projection (d MACs) of the hash bank.
+    pub ns_per_proj: f64,
+    /// One multi-probe sequence generation (per table).
+    pub ns_per_probe_seq: f64,
+    /// One bucket hash-table lookup.
+    pub ns_per_lookup: f64,
+    /// Routing one candidate reference at BI (dedup+group).
+    pub ns_per_cand: f64,
+    /// Storing one object at DP (copy + map insert).
+    pub ns_per_store: f64,
+    /// One top-k push at AG.
+    pub ns_per_reduce: f64,
+    pub net: NetParams,
+    /// Overlap communication with computation (the paper's asynchronous
+    /// design). `false` models a synchronous implementation (ablation).
+    pub async_overlap: bool,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Constants measured on the dev host via `parlsh calibrate`
+        // (see EXPERIMENTS.md §Calibration); FDR-IB network.
+        CostModel {
+            ns_per_dist: 112.5,
+            ns_per_proj: 77.7,
+            ns_per_probe_seq: 4983.0,
+            ns_per_lookup: 16.8,
+            ns_per_cand: 37.2,
+            ns_per_store: 48.4,
+            ns_per_reduce: 2.0,
+            net: NetParams::default(),
+            async_overlap: true,
+        }
+    }
+}
+
+/// Modeled execution-time breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct MakespanReport {
+    /// Modeled wall time, seconds.
+    pub makespan_secs: f64,
+    /// Slowest node's compute seconds.
+    pub max_compute_secs: f64,
+    /// Slowest node's network seconds.
+    pub max_network_secs: f64,
+    /// Node id of the bottleneck.
+    pub bottleneck_node: usize,
+    /// Per-node modeled seconds.
+    pub node_secs: Vec<f64>,
+}
+
+impl CostModel {
+    /// Service time (ns) for one copy's work.
+    pub fn work_ns(&self, w: &WorkStats, projections: usize) -> f64 {
+        w.hash_vectors as f64 * projections as f64 * self.ns_per_proj
+            + w.probe_seqs as f64 * self.ns_per_probe_seq
+            + w.bucket_lookups as f64 * self.ns_per_lookup
+            + w.candidates_routed as f64 * self.ns_per_cand
+            + w.dists_computed as f64 * self.ns_per_dist
+            + w.objects_stored as f64 * self.ns_per_store
+            + w.reduce_pushes as f64 * self.ns_per_reduce
+    }
+
+    /// Modeled makespan for a phase.
+    ///
+    /// `per_copy` work is mapped onto nodes via `placement`; copies on a
+    /// node share its cores (one multi-threaded copy per node uses all
+    /// `cores_per_node`; per-core mode gives each copy one core). The AG
+    /// stage is pinned to a single core (paper §V-B). The head node also
+    /// runs QR/IR work on its remaining cores.
+    pub fn makespan(
+        &self,
+        placement: &Placement,
+        cores_per_node: usize,
+        per_copy: &[(StageKind, u16, WorkStats)],
+        meter: &TrafficMeter,
+        projections: usize,
+    ) -> MakespanReport {
+        let nodes = placement.total_nodes();
+        // Copies per node for each stage (per-core packing).
+        let bi_per_node = placement.bi_copies.div_ceil(placement.bi_nodes.max(1));
+        let dp_per_node = placement.dp_copies.div_ceil(placement.dp_nodes.max(1));
+        let mut compute_ns = vec![0f64; nodes];
+        for &(stage, copy, ref w) in per_copy {
+            let node = placement.node_of(stage, copy) as usize;
+            let service = self.work_ns(w, projections);
+            let cores = match stage {
+                // One copy per node → all cores; k copies per node → split.
+                StageKind::Bi => (cores_per_node / bi_per_node).max(1),
+                StageKind::Dp => (cores_per_node / dp_per_node).max(1),
+                // AG is pinned to one core; QR/IR use the head's remainder.
+                StageKind::Ag => 1,
+                StageKind::Qr | StageKind::Ir => (cores_per_node - 1).max(1),
+            };
+            compute_ns[node] += service / cores as f64;
+        }
+
+        let traffic = meter.per_node(nodes);
+        let alpha_s = self.net.latency_us * 1e-6;
+        let beta = self.net.bandwidth_gbps * 1e9; // bytes/sec
+        let mut report = MakespanReport {
+            node_secs: vec![0f64; nodes],
+            ..Default::default()
+        };
+        for node in 0..nodes {
+            let comp = compute_ns[node] * 1e-9;
+            let t = &traffic[node];
+            let net = (t.tx_bytes + t.rx_bytes) as f64 / beta
+                + (t.tx_packets + t.rx_packets) as f64 * alpha_s;
+            let total = if self.async_overlap { comp.max(net) } else { comp + net };
+            report.node_secs[node] = total;
+            if total > report.makespan_secs {
+                report.makespan_secs = total;
+                report.bottleneck_node = node;
+            }
+            report.max_compute_secs = report.max_compute_secs.max(comp);
+            report.max_network_secs = report.max_network_secs.max(net);
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn placement(bi: usize, dp: usize) -> Placement {
+        Placement::new(&ClusterConfig {
+            bi_nodes: bi,
+            dp_nodes: dp,
+            cores_per_node: 4,
+            ag_copies: 1,
+            per_core_copies: false,
+        })
+    }
+
+    fn dp_work(dists: u64) -> WorkStats {
+        WorkStats { dists_computed: dists, ..Default::default() }
+    }
+
+    #[test]
+    fn work_scales_with_ops() {
+        let m = CostModel::default();
+        let w1 = dp_work(1000);
+        let w2 = dp_work(2000);
+        assert!((m.work_ns(&w2, 192) - 2.0 * m.work_ns(&w1, 192)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn intra_stage_parallelism_divides_by_cores() {
+        let m = CostModel::default();
+        let p = placement(1, 2);
+        let per_copy = vec![(StageKind::Dp, 0u16, dp_work(1_000_000))];
+        let meter = TrafficMeter::new(0);
+        let r4 = m.makespan(&p, 4, &per_copy, &meter, 192);
+        let r1 = m.makespan(&p, 1, &per_copy, &meter, 192);
+        assert!((r1.makespan_secs / r4.makespan_secs - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn network_bottleneck_dominates_when_async() {
+        let mut m = CostModel::default();
+        m.async_overlap = true;
+        let p = placement(1, 1);
+        let mut meter = TrafficMeter::new(0);
+        // 1 GB from node 0 to node 1 ≈ 0.147 s at 6.8 GB/s
+        meter.send(0, 1, 1_000_000_000);
+        let per_copy = vec![(StageKind::Bi, 0u16, dp_work(10))];
+        let r = m.makespan(&p, 4, &per_copy, &meter, 192);
+        assert!(r.makespan_secs > 0.1);
+        assert!(r.max_network_secs > r.max_compute_secs);
+    }
+
+    #[test]
+    fn sync_mode_adds_instead_of_max() {
+        let p = placement(1, 1);
+        let mut meter = TrafficMeter::new(0);
+        meter.send(0, 1, 680_000_000); // 0.1 s serialization
+        let per_copy = vec![(StageKind::Bi, 0u16, {
+            let mut w = WorkStats::default();
+            // 0.1 s of compute on 4 cores => 4*0.1s service
+            w.dists_computed = (0.4e9 / CostModel::default().ns_per_dist) as u64;
+            w
+        })];
+        let mut m = CostModel::default();
+        m.async_overlap = true;
+        let r_async = m.makespan(&p, 4, &per_copy, &meter, 192);
+        m.async_overlap = false;
+        let r_sync = m.makespan(&p, 4, &per_copy, &meter, 192);
+        assert!(r_sync.makespan_secs > r_async.makespan_secs * 1.7);
+    }
+
+    #[test]
+    fn ag_is_serial() {
+        let m = CostModel::default();
+        let p = placement(1, 1);
+        let meter = TrafficMeter::new(0);
+        let w = WorkStats { reduce_pushes: 1_000_000, ..Default::default() };
+        let per_copy = vec![(StageKind::Ag, 0u16, w)];
+        let r = m.makespan(&p, 16, &per_copy, &meter, 192);
+        // 1e6 * ns_per_reduce regardless of node cores (AG is 1 core)
+        let want = 1e6 * m.ns_per_reduce * 1e-9;
+        assert!((r.makespan_secs - want).abs() < want * 0.01);
+    }
+}

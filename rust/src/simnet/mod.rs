@@ -1,0 +1,22 @@
+//! The cluster cost model — the stand-in for the paper's 60-node FDR
+//! InfiniBand testbed (DESIGN.md §Substitutions).
+//!
+//! The functional pipeline runs for real in this process and produces
+//! *exact* per-copy work counters and per-link traffic. This module converts
+//! those into cluster-scale time: each stage copy is a server whose service
+//! time is `Σ op_count · cost(op)`, divided by the cores available to it
+//! (intra-stage parallelism); each node pays `α` per packet plus
+//! `bytes / β` of serialization. The paper's asynchronous design overlaps
+//! communication with computation, so a node's time is
+//! `max(compute, network)` (an ablation flag models the synchronous
+//! alternative as the sum).
+//!
+//! Per-op costs are measured on this host (`calibrate`), so the modeled
+//! compute:communication ratio — which is what the efficiency and crossover
+//! *shapes* depend on — tracks real hardware.
+
+pub mod calibrate;
+pub mod cost;
+
+pub use calibrate::calibrate;
+pub use cost::{CostModel, MakespanReport};

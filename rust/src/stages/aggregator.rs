@@ -1,0 +1,179 @@
+//! Aggregator (AG): reduces DP-local top-k results into the global k
+//! nearest neighbors per query.
+//!
+//! Completion accounting: QR announces how many BI copies a query touched
+//! (`QueryMeta`), each BI announces how many DP messages it emitted
+//! (`BiMeta`), and the query completes when all announced `LocalTopK`
+//! messages arrived. The query id labels every message, so one AG copy sees
+//! a query's entire reduction (paper: label = query id).
+
+use crate::core::topk::TopK;
+use crate::dataflow::metrics::WorkStats;
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct QueryAgg {
+    expect_bi: Option<u32>,
+    bi_seen: u32,
+    expect_dp: u64,
+    dp_seen: u64,
+    topk: TopK,
+}
+
+/// A finished query: global top-k `(sqdist, id)` ascending.
+pub type QueryResult = (u32, Vec<(f32, u32)>);
+
+pub struct AgState {
+    pub copy: u16,
+    k: usize,
+    pending: HashMap<u32, QueryAgg>,
+    pub results: Vec<QueryResult>,
+    pub work: WorkStats,
+}
+
+impl AgState {
+    pub fn new(copy: u16, k: usize) -> AgState {
+        AgState {
+            copy,
+            k,
+            pending: HashMap::new(),
+            results: Vec::new(),
+            work: WorkStats::default(),
+        }
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn entry(&mut self, qid: u32) -> &mut QueryAgg {
+        let k = self.k;
+        self.pending.entry(qid).or_insert_with(|| QueryAgg {
+            expect_bi: None,
+            bi_seen: 0,
+            expect_dp: 0,
+            dp_seen: 0,
+            topk: TopK::new(k),
+        })
+    }
+
+    pub fn on_query_meta(&mut self, qid: u32, n_bi: u32) {
+        let agg = self.entry(qid);
+        assert!(agg.expect_bi.is_none(), "duplicate QueryMeta for {qid}");
+        agg.expect_bi = Some(n_bi);
+        self.maybe_complete(qid);
+    }
+
+    pub fn on_bi_meta(&mut self, qid: u32, n_dp: u32) {
+        let agg = self.entry(qid);
+        agg.bi_seen += 1;
+        agg.expect_dp += n_dp as u64;
+        self.maybe_complete(qid);
+    }
+
+    pub fn on_local_topk(&mut self, qid: u32, hits: &[(f32, u32)]) {
+        let agg = self.entry(qid);
+        for &(d, id) in hits {
+            agg.topk.push(d, id);
+        }
+        agg.dp_seen += 1;
+        self.work.reduce_pushes += hits.len() as u64;
+        self.maybe_complete(qid);
+    }
+
+    fn maybe_complete(&mut self, qid: u32) {
+        let done = {
+            let agg = &self.pending[&qid];
+            match agg.expect_bi {
+                Some(nb) => agg.bi_seen == nb && agg.dp_seen == agg.expect_dp,
+                None => false,
+            }
+        };
+        if done {
+            let agg = self.pending.remove(&qid).unwrap();
+            self.results.push((qid, agg.topk.into_sorted()));
+        }
+    }
+
+    /// Queries stuck waiting (diagnostics / failure injection tests).
+    pub fn stuck_queries(&self) -> Vec<u32> {
+        self.pending.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completes_after_all_messages() {
+        let mut ag = AgState::new(0, 2);
+        ag.on_query_meta(1, 2);
+        ag.on_bi_meta(1, 1);
+        assert_eq!(ag.results.len(), 0);
+        ag.on_bi_meta(1, 2);
+        assert_eq!(ag.results.len(), 0);
+        ag.on_local_topk(1, &[(4.0, 7)]);
+        ag.on_local_topk(1, &[(1.0, 8), (9.0, 9)]);
+        assert_eq!(ag.results.len(), 0);
+        ag.on_local_topk(1, &[(2.0, 10)]);
+        assert_eq!(ag.results.len(), 1);
+        let (qid, hits) = &ag.results[0];
+        assert_eq!(*qid, 1);
+        assert_eq!(hits.as_slice(), &[(1.0, 8), (2.0, 10)]);
+        assert_eq!(ag.pending_count(), 0);
+    }
+
+    #[test]
+    fn out_of_order_messages_ok() {
+        let mut ag = AgState::new(0, 3);
+        // results can arrive before the metas
+        ag.on_local_topk(5, &[(1.0, 1)]);
+        ag.on_bi_meta(5, 1);
+        assert!(ag.results.is_empty());
+        ag.on_query_meta(5, 1);
+        assert_eq!(ag.results.len(), 1);
+    }
+
+    #[test]
+    fn zero_candidate_query_completes() {
+        let mut ag = AgState::new(0, 3);
+        ag.on_query_meta(2, 1);
+        ag.on_bi_meta(2, 0); // BI found nothing
+        assert_eq!(ag.results.len(), 1);
+        assert!(ag.results[0].1.is_empty());
+    }
+
+    #[test]
+    fn interleaved_queries_isolated() {
+        let mut ag = AgState::new(0, 1);
+        ag.on_query_meta(1, 1);
+        ag.on_query_meta(2, 1);
+        ag.on_bi_meta(1, 1);
+        ag.on_bi_meta(2, 1);
+        ag.on_local_topk(2, &[(5.0, 50)]);
+        assert_eq!(ag.results.len(), 1);
+        ag.on_local_topk(1, &[(3.0, 30)]);
+        assert_eq!(ag.results.len(), 2);
+        let by_qid: HashMap<u32, Vec<(f32, u32)>> =
+            ag.results.iter().cloned().collect();
+        assert_eq!(by_qid[&1], vec![(3.0, 30)]);
+        assert_eq!(by_qid[&2], vec![(5.0, 50)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate QueryMeta")]
+    fn duplicate_meta_detected() {
+        let mut ag = AgState::new(0, 1);
+        ag.on_query_meta(1, 1);
+        ag.on_query_meta(1, 1);
+    }
+
+    #[test]
+    fn stuck_queries_reported() {
+        let mut ag = AgState::new(0, 1);
+        ag.on_query_meta(9, 2);
+        ag.on_bi_meta(9, 1);
+        assert_eq!(ag.stuck_queries(), vec![9]);
+    }
+}

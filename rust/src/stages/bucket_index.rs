@@ -1,0 +1,220 @@
+//! Bucket Index (BI): stores the distributed hash tables as
+//! `bucket key → [(object id, DP copy)]` and, per query, turns probe visits
+//! into per-DP candidate requests — paper message (iv).
+//!
+//! Buckets hold *references only* (id + DP copy); the data objects live in
+//! exactly one DP copy each, which is the paper's no-replication invariant.
+//! Candidate ids retrieved from multiple probed buckets are deduplicated
+//! and grouped per DP copy so each DP receives at most one message per
+//! (query, BI) pair — the BI-side half of duplicate elimination.
+
+use crate::dataflow::message::{Dest, Msg};
+use crate::dataflow::metrics::WorkStats;
+use crate::partition::ag_map;
+use crate::stages::Emit;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+#[derive(Default)]
+pub struct BiState {
+    pub copy: u16,
+    /// The shard of every hash table whose bucket keys map here.
+    buckets: HashMap<u64, Vec<(u32, u16)>>,
+    pub n_ag: usize,
+    /// Cap on candidates routed per query at this BI (0 = unlimited).
+    pub max_candidates: usize,
+    pub work: WorkStats,
+    /// §Perf: per-query scratch reused across queries — dedup set plus a
+    /// dense per-DP grouping (indexed by DP copy) so the hot path allocates
+    /// only the outgoing id vectors it actually sends.
+    seen_scratch: std::collections::HashSet<u32>,
+    by_dp_scratch: Vec<Vec<u32>>,
+    touched_dps: Vec<u16>,
+}
+
+impl BiState {
+    pub fn new(copy: u16, n_ag: usize, max_candidates: usize) -> BiState {
+        BiState {
+            copy,
+            buckets: HashMap::new(),
+            n_ag,
+            max_candidates,
+            work: WorkStats::default(),
+            seen_scratch: std::collections::HashSet::new(),
+            by_dp_scratch: Vec::new(),
+            touched_dps: Vec::new(),
+        }
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn reference_count(&self) -> usize {
+        self.buckets.values().map(|v| v.len()).sum()
+    }
+
+    /// Index-build message (ii).
+    pub fn on_index_ref(&mut self, key: u64, id: u32, dp: u16) {
+        self.buckets.entry(key).or_default().push((id, dp));
+    }
+
+    /// Deterministic snapshot of all buckets (persistence); sorted by key.
+    pub fn buckets_snapshot(&self) -> Vec<(u64, &Vec<(u32, u16)>)> {
+        let mut out: Vec<_> = self.buckets.iter().map(|(k, v)| (*k, v)).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+
+    /// Search message (iii) → emits (iv) + AG completion meta.
+    pub fn on_query(
+        &mut self,
+        qid: u32,
+        probes: &[(u8, u64)],
+        v: &Arc<[f32]>,
+        out: Emit,
+    ) {
+        // Gather candidates over all probed buckets, dedup by id, group by
+        // DP copy. Scratch structures are reused across queries (§Perf).
+        self.seen_scratch.clear();
+        self.touched_dps.clear();
+        let mut routed = 0usize;
+        'outer: for &(_table, key) in probes {
+            self.work.bucket_lookups += 1;
+            if let Some(refs) = self.buckets.get(&key) {
+                for &(id, dp) in refs {
+                    if !self.seen_scratch.insert(id) {
+                        self.work.dup_skipped += 1;
+                        continue;
+                    }
+                    let slot = dp as usize;
+                    if slot >= self.by_dp_scratch.len() {
+                        self.by_dp_scratch.resize_with(slot + 1, Vec::new);
+                    }
+                    if self.by_dp_scratch[slot].is_empty() {
+                        self.touched_dps.push(dp);
+                    }
+                    self.by_dp_scratch[slot].push(id);
+                    routed += 1;
+                    if self.max_candidates > 0 && routed >= self.max_candidates {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        self.work.candidates_routed += routed as u64;
+        self.touched_dps.sort_unstable();
+        let n_dp = self.touched_dps.len() as u32;
+        for &dp in &self.touched_dps {
+            let ids = std::mem::take(&mut self.by_dp_scratch[dp as usize]);
+            out.push((
+                Dest::dp(dp),
+                Msg::CandidateReq { qid, ids, v: v.clone() },
+            ));
+        }
+        out.push((
+            Dest::ag(ag_map(qid, self.n_ag)),
+            Msg::BiMeta { qid, n_dp },
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::message::StageKind;
+
+    fn arcv() -> Arc<[f32]> {
+        vec![0f32; 8].into()
+    }
+
+    #[test]
+    fn indexes_and_retrieves() {
+        let mut bi = BiState::new(0, 1, 0);
+        bi.on_index_ref(100, 1, 0);
+        bi.on_index_ref(100, 2, 1);
+        bi.on_index_ref(200, 3, 0);
+        assert_eq!(bi.bucket_count(), 2);
+        assert_eq!(bi.reference_count(), 3);
+
+        let mut out = Vec::new();
+        bi.on_query(7, &[(0, 100)], &arcv(), &mut out);
+        // two DPs involved → 2 CandidateReq + 1 BiMeta
+        assert_eq!(out.len(), 3);
+        let reqs: Vec<_> = out
+            .iter()
+            .filter_map(|(d, m)| match m {
+                Msg::CandidateReq { ids, .. } => Some((d.copy, ids.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(reqs, vec![(0, vec![1]), (1, vec![2])]);
+        match out.last().unwrap() {
+            (d, Msg::BiMeta { qid, n_dp }) => {
+                assert_eq!(d.stage, StageKind::Ag);
+                assert_eq!((*qid, *n_dp), (7, 2));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_probe_still_reports_meta() {
+        let mut bi = BiState::new(0, 1, 0);
+        let mut out = Vec::new();
+        bi.on_query(1, &[(0, 999)], &arcv(), &mut out);
+        assert_eq!(out.len(), 1);
+        match &out[0].1 {
+            Msg::BiMeta { n_dp, .. } => assert_eq!(*n_dp, 0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn dedups_across_probed_buckets() {
+        let mut bi = BiState::new(0, 1, 0);
+        // same object indexed under two different keys (two tables)
+        bi.on_index_ref(100, 9, 2);
+        bi.on_index_ref(200, 9, 2);
+        let mut out = Vec::new();
+        bi.on_query(1, &[(0, 100), (1, 200)], &arcv(), &mut out);
+        let ids: Vec<u32> = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::CandidateReq { ids, .. } => Some(ids.clone()),
+                _ => None,
+            })
+            .flatten()
+            .collect();
+        assert_eq!(ids, vec![9]);
+        assert_eq!(bi.work.dup_skipped, 1);
+        assert_eq!(bi.work.candidates_routed, 1);
+    }
+
+    #[test]
+    fn max_candidates_caps_routing() {
+        let mut bi = BiState::new(0, 1, 3);
+        for id in 0..10 {
+            bi.on_index_ref(100, id, 0);
+        }
+        let mut out = Vec::new();
+        bi.on_query(1, &[(0, 100)], &arcv(), &mut out);
+        let ids: usize = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::CandidateReq { ids, .. } => Some(ids.len()),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(ids, 3);
+    }
+
+    #[test]
+    fn work_counters_track_lookups() {
+        let mut bi = BiState::new(0, 1, 0);
+        bi.on_index_ref(5, 1, 0);
+        let mut out = Vec::new();
+        bi.on_query(1, &[(0, 5), (1, 6), (2, 7)], &arcv(), &mut out);
+        assert_eq!(bi.work.bucket_lookups, 3);
+    }
+}

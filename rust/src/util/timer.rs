@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers (the criterion substitute's building block).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.secs())
+}
+
+/// Repeat a closure until at least `min_time` seconds and `min_iters`
+/// iterations have elapsed; returns mean seconds/iter. Used by the bench
+/// harness for microbenchmarks and cost-model calibration.
+pub fn bench_loop(min_time: f64, min_iters: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    f();
+    let t = Timer::start();
+    let mut iters = 0usize;
+    loop {
+        f();
+        iters += 1;
+        if iters >= min_iters && t.secs() >= min_time {
+            break;
+        }
+    }
+    t.secs() / iters as f64
+}
+
+/// Percentile of a sample (nearest-rank, p in [0,100]).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * samples.len() as f64).ceil().max(1.0) as usize - 1;
+    samples[rank.min(samples.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_runs_min_iters() {
+        let mut count = 0;
+        let per = bench_loop(0.0, 10, || count += 1);
+        assert!(count >= 11); // warmup + 10
+        assert!(per >= 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&mut xs, 50.0), 3.0);
+        assert_eq!(percentile(&mut xs, 100.0), 5.0);
+        assert_eq!(percentile(&mut xs, 1.0), 1.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Failure injection: what happens when the dataflow's invariants are
+//! violated — messages lost, state corrupted, configs out of range. The
+//! system must fail loudly (panic with a diagnostic or report stuck
+//! queries), never silently return wrong answers.
+
+use parlsh::config::Config;
+use parlsh::core::lsh::LshParams;
+use parlsh::stages::{AgState, BiState, DpState};
+use parlsh::runtime::ScalarRanker;
+use std::sync::Arc;
+
+#[test]
+fn lost_dp_message_leaves_query_stuck_not_wrong() {
+    // Simulate a lost LocalTopK: AG knows (via BiMeta counts) that a DP
+    // message is missing and keeps the query pending instead of emitting a
+    // partial result.
+    let mut ag = AgState::new(0, 10);
+    ag.on_query_meta(1, 1);
+    ag.on_bi_meta(1, 2); // two DP messages expected
+    ag.on_local_topk(1, &[(1.0, 5)]);
+    // second LocalTopK "lost"
+    assert!(ag.results.is_empty(), "AG emitted a partial result");
+    assert_eq!(ag.stuck_queries(), vec![1]);
+}
+
+#[test]
+fn lost_bi_message_detected() {
+    let mut ag = AgState::new(0, 10);
+    ag.on_query_meta(7, 3); // three BIs contacted
+    ag.on_bi_meta(7, 0);
+    ag.on_bi_meta(7, 0);
+    // third BiMeta lost
+    assert!(ag.results.is_empty());
+    assert_eq!(ag.stuck_queries(), vec![7]);
+}
+
+#[test]
+#[should_panic(expected = "unknown object")]
+fn misrouted_candidate_panics() {
+    // A BI routing a candidate to the wrong DP is a partition-invariant
+    // violation and must crash loudly.
+    let mut dp = DpState::new(0, 4, 5, 1, true);
+    dp.on_store(1, &[0.0; 4]);
+    let ranker = ScalarRanker { dim: 4 };
+    let q: Arc<[f32]> = vec![0f32; 4].into();
+    let mut out = Vec::new();
+    dp.on_candidates(0, &[999], &q, &ranker, &mut out);
+}
+
+#[test]
+#[should_panic(expected = "stored twice")]
+fn replicated_store_panics() {
+    let mut dp = DpState::new(0, 4, 5, 1, true);
+    dp.on_store(1, &[0.0; 4]);
+    dp.on_store(1, &[1.0; 4]);
+}
+
+#[test]
+fn oversized_projection_bank_rejected() {
+    let doc = parlsh::util::configfile::Doc::parse("[lsh]\nl = 16\nm = 32\n").unwrap();
+    assert!(Config::from_doc(&doc).is_err());
+}
+
+#[test]
+fn empty_bucket_index_answers_gracefully() {
+    // Query against a BI with no buckets: zero candidates, empty results,
+    // completion still reached.
+    let mut bi = BiState::new(0, 1, 0);
+    let mut ag = AgState::new(0, 10);
+    let q: Arc<[f32]> = vec![0f32; 4].into();
+    let mut out = Vec::new();
+    bi.on_query(0, &[(0, 12345)], &q, &mut out);
+    // forward only AG messages
+    ag.on_query_meta(0, 1);
+    for (_, msg) in out {
+        if let parlsh::dataflow::message::Msg::BiMeta { qid, n_dp } = msg {
+            ag.on_bi_meta(qid, n_dp);
+        }
+    }
+    assert_eq!(ag.results.len(), 1);
+    assert!(ag.results[0].1.is_empty());
+}
+
+#[test]
+fn bad_config_values_surface_errors() {
+    use parlsh::util::cli::Args;
+    // malformed config file
+    let dir = std::env::temp_dir().join("parlsh_failure_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.toml");
+    std::fs::write(&path, "lsh.l = = 3").unwrap();
+    let args = Args::parse(vec![
+        "search".to_string(),
+        format!("--config={}", path.display()),
+    ])
+    .unwrap();
+    assert!(Config::load(&args).is_err());
+    // unknown strategy
+    let doc =
+        parlsh::util::configfile::Doc::parse("[stream]\nobj_map = \"fancy\"\n").unwrap();
+    assert!(Config::from_doc(&doc).is_err());
+}
+
+#[test]
+fn ranker_on_zero_candidates_is_empty() {
+    let ranker = ScalarRanker { dim: 4 };
+    use parlsh::runtime::Ranker;
+    assert!(ranker.rank(&[0.0; 4], &[], 0, 5).is_empty());
+}

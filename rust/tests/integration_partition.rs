@@ -1,0 +1,109 @@
+//! Partition-strategy integration (paper §IV-C/§V-E): all three `obj_map`
+//! strategies must return identical search *results* while differing in
+//! where objects live — and the locality-aware strategies must cut BI→DP
+//! fan-out on clustered data.
+
+use parlsh::config::{Config, ObjMapStrategy};
+use parlsh::coordinator::{build_index, search};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::partition::imbalance;
+use parlsh::runtime::{ScalarHasher, ScalarRanker};
+
+fn cfg_with(strategy: ObjMapStrategy) -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 8, w: 700.0, k: 10, t: 16, seed: 9 };
+    cfg.cluster.bi_nodes = 3;
+    cfg.cluster.dp_nodes = 6;
+    cfg.stream.obj_map = strategy;
+    cfg
+}
+
+struct Run {
+    results: Vec<Vec<(f32, u32)>>,
+    logical_msgs: u64,
+    payload: u64,
+    dp_counts: Vec<usize>,
+}
+
+fn run(strategy: ObjMapStrategy, ds: &parlsh::data::Dataset, qs: &parlsh::data::Dataset) -> Run {
+    let cfg = cfg_with(strategy);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = ScalarHasher { family };
+    let ranker = ScalarRanker { dim: ds.dim };
+    let mut cluster = build_index(&cfg, ds, &hasher);
+    let out = search(&mut cluster, qs, &hasher, &ranker);
+    Run {
+        results: out.results,
+        logical_msgs: out.meter.logical_msgs,
+        payload: out.meter.payload_bytes,
+        dp_counts: cluster.dp_object_counts(),
+    }
+}
+
+#[test]
+fn strategies_return_identical_results() {
+    let ds = synthesize(SynthSpec { n: 5_000, clusters: 100, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 30, 5.0, 11);
+    let m = run(ObjMapStrategy::Mod, &ds, &qs);
+    let z = run(ObjMapStrategy::ZOrder, &ds, &qs);
+    let l = run(ObjMapStrategy::Lsh, &ds, &qs);
+    assert_eq!(m.results, z.results, "zorder changed search results");
+    assert_eq!(m.results, l.results, "lsh partition changed search results");
+    let _ = (m.payload, z.payload, l.payload);
+}
+
+#[test]
+fn lsh_partition_reduces_messages_on_clustered_data() {
+    let ds = synthesize(SynthSpec { n: 8_000, clusters: 80, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 50, 4.0, 13);
+    let m = run(ObjMapStrategy::Mod, &ds, &qs);
+    let l = run(ObjMapStrategy::Lsh, &ds, &qs);
+    assert!(
+        l.logical_msgs < m.logical_msgs,
+        "lsh partition did not reduce messages: {} vs {}",
+        l.logical_msgs,
+        m.logical_msgs
+    );
+}
+
+#[test]
+fn mod_is_balanced_lsh_is_modest() {
+    let ds = synthesize(SynthSpec { n: 8_000, clusters: 200, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 5, 4.0, 1);
+    let m = run(ObjMapStrategy::Mod, &ds, &qs);
+    let z = run(ObjMapStrategy::ZOrder, &ds, &qs);
+    let l = run(ObjMapStrategy::Lsh, &ds, &qs);
+    let im = imbalance(&m.dp_counts);
+    let iz = imbalance(&z.dp_counts);
+    let il = imbalance(&l.dp_counts);
+    // mod: near-perfect balance (round-robin ids)
+    assert!(im.max_over_mean_pct < 0.1, "mod imbalance {}", im.max_over_mean_pct);
+    // LSH pays a bounded imbalance (paper: 1.8% at 10^9 points; the
+    // relative deviation shrinks with points-per-partition, so it is much
+    // larger at this scale but must stay within one order of the mean).
+    assert!(il.max_over_mean_pct < 200.0, "lsh imbalance {}", il.max_over_mean_pct);
+    // Z-order over sparse descriptors collapses (its fixed dimension
+    // subsample lands on inactive bins) — the paper's real-SIFT behaviour;
+    // we only require it to be *worse* than LSH here.
+    assert!(
+        iz.max_over_mean_pct > il.max_over_mean_pct,
+        "zorder {} should be more imbalanced than lsh {}",
+        iz.max_over_mean_pct,
+        il.max_over_mean_pct
+    );
+}
+
+#[test]
+fn all_objects_stored_under_every_strategy() {
+    let ds = synthesize(SynthSpec { n: 3_000, clusters: 30, ..Default::default() });
+    for strategy in [ObjMapStrategy::Mod, ObjMapStrategy::ZOrder, ObjMapStrategy::Lsh] {
+        let cfg = cfg_with(strategy);
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let cluster = build_index(&cfg, &ds, &hasher);
+        assert_eq!(cluster.stored_objects(), ds.len(), "{strategy:?}");
+        let counts = cluster.dp_object_counts();
+        assert_eq!(counts.iter().sum::<usize>(), ds.len());
+    }
+}

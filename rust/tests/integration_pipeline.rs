@@ -1,0 +1,178 @@
+//! Differential test: the distributed pipeline must return *identical*
+//! results to the sequential multi-probe LSH baseline (same family, same
+//! probes, same tie-breaks), and recall must be sane against ground truth.
+
+use parlsh::baseline::SequentialLsh;
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index, search, threaded::search_threaded};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::groundtruth::ground_truth_scalar;
+use parlsh::data::recall::recall_at_k;
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::runtime::{ScalarHasher, ScalarRanker};
+
+fn config(l: usize, m: usize, t: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l, m, w: 700.0, k: 10, t, seed: 9 };
+    cfg.cluster.bi_nodes = 3;
+    cfg.cluster.dp_nodes = 5;
+    cfg
+}
+
+#[test]
+fn distributed_equals_sequential() {
+    let cfg = config(4, 8, 12);
+    let ds = synthesize(SynthSpec { n: 4_000, clusters: 80, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 40, 6.0, 3);
+
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = ScalarHasher { family };
+    let ranker = ScalarRanker { dim: ds.dim };
+    let mut cluster = build_index(&cfg, &ds, &hasher);
+    let out = search(&mut cluster, &qs, &hasher, &ranker);
+
+    let seq = SequentialLsh::build(&ds, cfg.lsh);
+    for qi in 0..qs.len() {
+        let (seq_res, _) = seq.search(qs.get(qi), cfg.lsh.t, cfg.lsh.k);
+        let dist_res = &out.results[qi];
+        assert_eq!(
+            dist_res.len(),
+            seq_res.len(),
+            "query {qi}: result count differs"
+        );
+        for (a, b) in dist_res.iter().zip(&seq_res) {
+            assert_eq!(a.1, b.1, "query {qi}: ids differ");
+            assert!((a.0 - b.0).abs() <= 1e-3 * a.0.max(1.0), "query {qi}: dists differ");
+        }
+    }
+}
+
+#[test]
+fn distributed_candidates_equal_sequential_distance_count() {
+    // Duplicate elimination must make the distributed pipeline compute
+    // exactly as many distances as the sequential dedup does.
+    let cfg = config(4, 8, 16);
+    let ds = synthesize(SynthSpec { n: 3_000, clusters: 60, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 25, 5.0, 17);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = ScalarHasher { family };
+    let ranker = ScalarRanker { dim: ds.dim };
+    let mut cluster = build_index(&cfg, &ds, &hasher);
+    let out = search(&mut cluster, &qs, &hasher, &ranker);
+    let dist_total: u64 = out.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+
+    let seq = SequentialLsh::build(&ds, cfg.lsh);
+    let seq_total: usize = (0..qs.len())
+        .map(|qi| seq.search(qs.get(qi), cfg.lsh.t, cfg.lsh.k).1)
+        .sum();
+    assert_eq!(dist_total, seq_total as u64);
+}
+
+#[test]
+fn recall_improves_with_probes_and_reaches_target() {
+    let ds = synthesize(SynthSpec { n: 6_000, clusters: 120, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 40, 6.0, 5);
+    let gt = ground_truth_scalar(&ds, &qs, 10, 2);
+
+    let mut recalls = Vec::new();
+    for t in [1usize, 8, 32] {
+        let cfg = config(6, 8, t);
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let ranker = ScalarRanker { dim: ds.dim };
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let out = search(&mut cluster, &qs, &hasher, &ranker);
+        recalls.push(recall_at_k(&out.retrieved_ids(), &gt));
+    }
+    assert!(recalls[1] >= recalls[0], "recall fell with more probes: {recalls:?}");
+    assert!(recalls[2] >= recalls[1], "recall fell with more probes: {recalls:?}");
+    assert!(recalls[2] > 0.5, "T=32 recall too low: {recalls:?}");
+}
+
+#[test]
+fn threaded_executor_differential() {
+    let cfg = config(3, 8, 8);
+    let ds = synthesize(SynthSpec { n: 2_000, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 20, 5.0, 21);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = ScalarHasher { family };
+    let ranker = ScalarRanker { dim: ds.dim };
+
+    let mut cluster = build_index(&cfg, &ds, &hasher);
+    let out = search_threaded(&mut cluster, &qs, &hasher, &ranker);
+
+    let seq = SequentialLsh::build(&ds, cfg.lsh);
+    for qi in 0..qs.len() {
+        let (seq_res, _) = seq.search(qs.get(qi), cfg.lsh.t, cfg.lsh.k);
+        let ids: Vec<u32> = out.results[qi].iter().map(|&(_, id)| id).collect();
+        let want: Vec<u32> = seq_res.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids, want, "query {qi}");
+    }
+}
+
+#[test]
+fn no_replication_invariants() {
+    let cfg = config(5, 6, 4);
+    let ds = synthesize(SynthSpec { n: 3_500, clusters: 70, ..Default::default() });
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = ScalarHasher { family };
+    let cluster = build_index(&cfg, &ds, &hasher);
+    // every object stored exactly once across DPs
+    assert_eq!(cluster.stored_objects(), ds.len());
+    // every object referenced exactly L times across BIs
+    assert_eq!(cluster.bucket_references(), ds.len() * cfg.lsh.l);
+}
+
+#[test]
+fn results_survive_multiple_search_phases() {
+    // The index is reusable: two search phases over the same cluster give
+    // identical answers (state isn't corrupted by a pass).
+    let cfg = config(4, 8, 8);
+    let ds = synthesize(SynthSpec { n: 2_000, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 10, 5.0, 2);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = ScalarHasher { family };
+    let ranker = ScalarRanker { dim: ds.dim };
+    let mut cluster = build_index(&cfg, &ds, &hasher);
+    let out1 = search(&mut cluster, &qs, &hasher, &ranker);
+    let out2 = search(&mut cluster, &qs, &hasher, &ranker);
+    assert_eq!(out1.results, out2.results);
+    assert_eq!(out1.meter.logical_msgs, out2.meter.logical_msgs);
+}
+
+#[test]
+fn multiprobe_beats_entropy_probing_at_equal_budget() {
+    // Paper §III-C: multi-probe LSH "typically results, for the same
+    // recall, in less bucket accesses per hash table" than entropy-based
+    // probing. Equivalent statement at a fixed probe budget: multi-probe's
+    // recall is at least competitive. Reproduced here against ground truth.
+    use parlsh::baseline::EntropyProber;
+    use parlsh::core::lsh::HashFamily;
+
+    let params = LshParams { l: 4, m: 8, w: 700.0, k: 10, t: 12, seed: 9 };
+    let ds = synthesize(SynthSpec { n: 6_000, clusters: 120, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 50, 6.0, 5);
+    let gt = ground_truth_scalar(&ds, &qs, 10, 2);
+    let index = SequentialLsh::build(&ds, params);
+    let family = HashFamily::sample(ds.dim, params);
+    // Entropy samples at the distortion radius (a favorable setting for it).
+    let prober = EntropyProber::new(&family, 6.0);
+
+    let mut mp_hits = Vec::new();
+    let mut en_hits = Vec::new();
+    for qi in 0..qs.len() {
+        let q = qs.get(qi);
+        let (mp, _) = index.search(q, params.t, params.k);
+        mp_hits.push(mp.into_iter().map(|(_, id)| id).collect::<Vec<_>>());
+        let probes = prober.probes(q, params.t, qi as u64);
+        let (en, _) = index.search_with_probes(q, &probes, params.k);
+        en_hits.push(en.into_iter().map(|(_, id)| id).collect::<Vec<_>>());
+    }
+    let mp_recall = parlsh::data::recall::recall_at_k(&mp_hits, &gt);
+    let en_recall = parlsh::data::recall::recall_at_k(&en_hits, &gt);
+    assert!(
+        mp_recall >= en_recall - 0.02,
+        "multi-probe {mp_recall:.3} should not lose to entropy {en_recall:.3}"
+    );
+    assert!(mp_recall > 0.3, "multi-probe recall implausibly low: {mp_recall}");
+}

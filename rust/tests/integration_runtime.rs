@@ -1,0 +1,166 @@
+//! PJRT artifact-path integration: compiled HLO vs the scalar oracle.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! loud message) when `artifacts/manifest.txt` is absent so `cargo test`
+//! stays runnable from a fresh checkout.
+
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index, search};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::runtime::engine::{Engine, EngineHasher, EngineRanker};
+use parlsh::runtime::{Hasher, Ranker, ScalarHasher, ScalarRanker};
+use parlsh::util::rng::Rng;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("PARLSH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir}/ (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine() -> Option<Arc<Engine>> {
+    artifacts_dir().map(|d| Arc::new(Engine::load(&d).expect("engine load")))
+}
+
+fn family() -> HashFamily {
+    HashFamily::sample(
+        128,
+        LshParams { l: 6, m: 32, w: 900.0, k: 10, t: 8, seed: 5 },
+    )
+}
+
+#[test]
+fn engine_hash_matches_scalar() {
+    let Some(e) = engine() else { return };
+    let fam = family();
+    e.set_family(&fam).unwrap();
+    let hasher = EngineHasher { engine: e, p_used: fam.params.projections() };
+    let scalar = ScalarHasher { family: fam.clone() };
+
+    let mut rng = Rng::new(7);
+    for rows in [1usize, 3, 64, 200] {
+        let x: Vec<f32> = (0..rows * 128)
+            .map(|_| rng.range_f32(0.0, 255.0))
+            .collect();
+        let got = hasher.hash_batch(&x, rows);
+        let want = scalar.hash_batch(&x, rows);
+        assert_eq!(got.len(), want.len());
+        let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+        // f32 boundary ties only
+        assert!(
+            mismatches * 1000 < got.len(),
+            "rows={rows}: {mismatches}/{} coords differ",
+            got.len()
+        );
+    }
+}
+
+#[test]
+fn engine_proj_matches_scalar() {
+    let Some(e) = engine() else { return };
+    let fam = family();
+    e.set_family(&fam).unwrap();
+    let hasher = EngineHasher { engine: e, p_used: fam.params.projections() };
+    let scalar = ScalarHasher { family: fam.clone() };
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..5 * 128).map(|_| rng.range_f32(0.0, 255.0)).collect();
+    let got = hasher.proj_batch(&x, 5);
+    let want = scalar.proj_batch(&x, 5);
+    for (g, w) in got.iter().zip(&want) {
+        assert!(
+            (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+            "proj diverged: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn engine_rank_matches_scalar() {
+    let Some(e) = engine() else { return };
+    let fam = family();
+    e.set_family(&fam).unwrap();
+    let ranker = EngineRanker { engine: e };
+    let scalar = ScalarRanker { dim: 128 };
+    let mut rng = Rng::new(11);
+    for n in [1usize, 10, 255, 256, 300, 1024, 5000] {
+        let q: Vec<f32> = (0..128).map(|_| rng.range_f32(0.0, 255.0)).collect();
+        let c: Vec<f32> = (0..n * 128).map(|_| rng.range_f32(0.0, 255.0)).collect();
+        let got = ranker.rank(&q, &c, n, 10);
+        let want = scalar.rank(&q, &c, n, 10);
+        assert_eq!(got.len(), want.len(), "n={n}");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.1, w.1, "n={n}: ids differ ({got:?} vs {want:?})");
+            assert!((g.0 - w.0).abs() <= 1e-2 * w.0.max(1.0), "n={n}: dist differs");
+        }
+    }
+}
+
+#[test]
+fn engine_rank_handles_fewer_candidates_than_k() {
+    let Some(e) = engine() else { return };
+    let fam = family();
+    e.set_family(&fam).unwrap();
+    let ranker = EngineRanker { engine: e };
+    let mut rng = Rng::new(13);
+    let q: Vec<f32> = (0..128).map(|_| rng.range_f32(0.0, 255.0)).collect();
+    let c: Vec<f32> = (0..3 * 128).map(|_| rng.range_f32(0.0, 255.0)).collect();
+    let got = ranker.rank(&q, &c, 3, 10);
+    assert_eq!(got.len(), 3);
+}
+
+#[test]
+fn full_pipeline_engine_equals_scalar_path() {
+    let Some(e) = engine() else { return };
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 16, w: 900.0, k: 10, t: 8, seed: 5 };
+    cfg.cluster.bi_nodes = 2;
+    cfg.cluster.dp_nodes = 4;
+    let ds = synthesize(SynthSpec { n: 3_000, clusters: 60, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 15, 5.0, 3);
+
+    let fam = HashFamily::sample(ds.dim, cfg.lsh);
+    e.set_family(&fam).unwrap();
+    let eng_hasher = EngineHasher { engine: e.clone(), p_used: cfg.lsh.projections() };
+    let eng_ranker = EngineRanker { engine: e };
+    let mut c_eng = build_index(&cfg, &ds, &eng_hasher);
+    let out_eng = search(&mut c_eng, &qs, &eng_hasher, &eng_ranker);
+
+    let sc_hasher = ScalarHasher { family: fam };
+    let sc_ranker = ScalarRanker { dim: ds.dim };
+    let mut c_sc = build_index(&cfg, &ds, &sc_hasher);
+    let out_sc = search(&mut c_sc, &qs, &sc_hasher, &sc_ranker);
+
+    // Hash boundary ties can move an object to a neighboring bucket, so a
+    // tiny per-query result divergence is tolerated; require >=95% id
+    // agreement overall and identical result counts.
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (a, b) in out_eng.results.iter().zip(&out_sc.results) {
+        let bs: std::collections::HashSet<u32> = b.iter().map(|&(_, id)| id).collect();
+        total += b.len();
+        agree += a.iter().filter(|&&(_, id)| bs.contains(&id)).count();
+    }
+    assert!(
+        agree * 100 >= total * 95,
+        "engine/scalar agreement too low: {agree}/{total}"
+    );
+}
+
+#[test]
+fn engine_stats_track_calls() {
+    let Some(e) = engine() else { return };
+    let fam = family();
+    e.set_family(&fam).unwrap();
+    let before = *e.stats.lock().unwrap();
+    let hasher = EngineHasher { engine: e.clone(), p_used: fam.params.projections() };
+    let x = vec![1.0f32; 10 * 128];
+    let _ = hasher.hash_batch(&x, 10);
+    let after = *e.stats.lock().unwrap();
+    assert!(after.hash_calls > before.hash_calls);
+    assert_eq!(after.hash_rows - before.hash_rows, 10);
+}

@@ -1,0 +1,159 @@
+//! Cross-module property tests (mini-proptest harness): randomized configs
+//! and data, invariants that must hold for any of them.
+
+use parlsh::baseline::SequentialLsh;
+use parlsh::config::{Config, ObjMapStrategy};
+use parlsh::coordinator::{build_index, search};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::runtime::{ScalarHasher, ScalarRanker};
+use parlsh::util::minitest::{check, Gen};
+
+fn random_cfg(g: &mut Gen) -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams {
+        l: g.usize_in(1, 6),
+        m: g.usize_in(2, 12),
+        w: g.f32_in(200.0, 1500.0),
+        k: g.usize_in(1, 10),
+        t: g.usize_in(1, 24),
+        seed: g.rng.next_u64(),
+    };
+    cfg.cluster.bi_nodes = g.usize_in(1, 4);
+    cfg.cluster.dp_nodes = g.usize_in(1, 6);
+    cfg.cluster.ag_copies = g.usize_in(1, 3);
+    cfg.stream.obj_map = *g.pick(&[
+        ObjMapStrategy::Mod,
+        ObjMapStrategy::ZOrder,
+        ObjMapStrategy::Lsh,
+    ]);
+    cfg.stream.agg_bytes = *g.pick(&[0usize, 1024, 65536]);
+    cfg
+}
+
+#[test]
+fn pipeline_equals_sequential_for_random_configs() {
+    check("pipeline-vs-sequential", 8, |g| {
+        let cfg = random_cfg(g);
+        let n = g.usize_in(300, 1500);
+        let ds = synthesize(SynthSpec {
+            n,
+            clusters: g.usize_in(5, 50),
+            cluster_std: g.f32_in(4.0, 20.0),
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        });
+        let (qs, _) = distorted_queries(&ds, 8, 5.0, g.rng.next_u64());
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let ranker = ScalarRanker { dim: ds.dim };
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let out = search(&mut cluster, &qs, &hasher, &ranker);
+        let seq = SequentialLsh::build(&ds, cfg.lsh);
+        for qi in 0..qs.len() {
+            let (want, _) = seq.search(qs.get(qi), cfg.lsh.t, cfg.lsh.k);
+            let got: Vec<u32> = out.results[qi].iter().map(|&(_, id)| id).collect();
+            let want_ids: Vec<u32> = want.iter().map(|&(_, id)| id).collect();
+            assert_eq!(got, want_ids, "cfg={:?}", cfg.lsh);
+        }
+    });
+}
+
+#[test]
+fn traffic_accounting_conserved() {
+    // logical = 2*(Query msgs) + 2*(CandidateReq msgs) minus local
+    // deliveries is hard to predict exactly, but conservation holds:
+    // packets <= logical, payload > 0 iff logical > 0, and aggregation
+    // never changes logical/payload.
+    check("traffic-conservation", 6, |g| {
+        let mut cfg = random_cfg(g);
+        let ds = synthesize(SynthSpec {
+            n: g.usize_in(200, 800),
+            clusters: 20,
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        });
+        let (qs, _) = distorted_queries(&ds, 5, 5.0, 3);
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let ranker = ScalarRanker { dim: ds.dim };
+
+        cfg.stream.agg_bytes = 0;
+        let mut c1 = build_index(&cfg, &ds, &hasher);
+        let o1 = search(&mut c1, &qs, &hasher, &ranker);
+        cfg.stream.agg_bytes = 32 * 1024;
+        let mut c2 = build_index(&cfg, &ds, &hasher);
+        let o2 = search(&mut c2, &qs, &hasher, &ranker);
+
+        assert_eq!(o1.meter.logical_msgs, o2.meter.logical_msgs);
+        assert_eq!(o1.meter.payload_bytes, o2.meter.payload_bytes);
+        assert!(o2.meter.total_packets() <= o1.meter.total_packets());
+        assert_eq!(o1.meter.total_packets(), o1.meter.logical_msgs);
+        if o1.meter.logical_msgs > 0 {
+            assert!(o1.meter.payload_bytes > 0);
+        }
+    });
+}
+
+#[test]
+fn results_sorted_unique_and_within_k() {
+    check("results-wellformed", 6, |g| {
+        let cfg = random_cfg(g);
+        let ds = synthesize(SynthSpec {
+            n: g.usize_in(200, 1000),
+            clusters: 10,
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        });
+        let (qs, _) = distorted_queries(&ds, 6, 6.0, g.rng.next_u64());
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let ranker = ScalarRanker { dim: ds.dim };
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let out = search(&mut cluster, &qs, &hasher, &ranker);
+        for r in &out.results {
+            assert!(r.len() <= cfg.lsh.k);
+            for w in r.windows(2) {
+                assert!(w[0].0 <= w[1].0, "unsorted results");
+            }
+            let ids: std::collections::HashSet<u32> =
+                r.iter().map(|&(_, id)| id).collect();
+            assert_eq!(ids.len(), r.len(), "duplicate ids");
+            for &(d, id) in r {
+                assert!(d >= 0.0 && (id as usize) < ds.len());
+            }
+        }
+    });
+}
+
+#[test]
+fn per_core_topology_same_results_more_messages() {
+    check("per-core-ablation", 4, |g| {
+        let mut cfg = random_cfg(g);
+        cfg.cluster.cores_per_node = 4;
+        cfg.lsh.t = g.usize_in(4, 16);
+        let ds = synthesize(SynthSpec {
+            n: 800,
+            clusters: 20,
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        });
+        let (qs, _) = distorted_queries(&ds, 6, 5.0, 3);
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let ranker = ScalarRanker { dim: ds.dim };
+
+        cfg.cluster.per_core_copies = false;
+        let mut c1 = build_index(&cfg, &ds, &hasher);
+        let o1 = search(&mut c1, &qs, &hasher, &ranker);
+        cfg.cluster.per_core_copies = true;
+        let mut c2 = build_index(&cfg, &ds, &hasher);
+        let o2 = search(&mut c2, &qs, &hasher, &ranker);
+
+        // identical answers
+        assert_eq!(o1.results, o2.results);
+        // per-core topology partitions state 4x finer => never fewer
+        // messages (usually many more).
+        assert!(o2.meter.logical_msgs >= o1.meter.logical_msgs);
+    });
+}
