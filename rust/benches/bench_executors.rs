@@ -1,0 +1,13 @@
+//! Bench: the executor seam — inline FIFO vs threaded (open loop) vs
+//! threaded with closed-loop batched admission, same build + search
+//! workload on each. Scale with PARLSH_N / PARLSH_Q; the admission window
+//! with PARLSH_INFLIGHT. Run via `cargo bench --bench bench_executors`.
+
+fn main() {
+    println!("== Executor comparison (DESIGN.md §Executor seam) ==");
+    println!("(results identical across rows by the differential tests; only");
+    println!(" build wall time, throughput and completion latency move)");
+    let t = std::time::Instant::now();
+    parlsh::experiments::executor_comparison().print();
+    println!("[bench wall time: {:.1}s]", t.elapsed().as_secs_f64());
+}

@@ -142,6 +142,9 @@ pub struct StreamConfig {
     pub dedup: bool,
     /// Cap on candidates per query per DP message batch (0 = unlimited).
     pub max_candidates: usize,
+    /// Closed-loop admission window for the threaded executor: max queries
+    /// in flight at once (0 = open loop, submit everything up front).
+    pub inflight: usize,
 }
 
 impl Default for StreamConfig {
@@ -151,6 +154,7 @@ impl Default for StreamConfig {
             agg_bytes: 64 * 1024,
             dedup: true,
             max_candidates: 0,
+            inflight: 0,
         }
     }
 }
@@ -219,6 +223,7 @@ impl Config {
             agg_bytes: doc.usize_or("stream.agg_bytes", c.stream.agg_bytes),
             dedup: doc.bool_or("stream.dedup", c.stream.dedup),
             max_candidates: doc.usize_or("stream.max_candidates", 0),
+            inflight: doc.usize_or("stream.inflight", c.stream.inflight),
         };
         c.runtime = RuntimeConfig {
             artifacts_dir: doc.str_or("runtime.artifacts_dir", &c.runtime.artifacts_dir),
@@ -265,7 +270,7 @@ mod tests {
     #[test]
     fn from_doc_overrides() {
         let doc = Doc::parse(
-            "[lsh]\nl = 8\nt = 120\n[stream]\nobj_map = \"lsh\"\nagg_bytes = 0\n",
+            "[lsh]\nl = 8\nt = 120\n[stream]\nobj_map = \"lsh\"\nagg_bytes = 0\ninflight = 16\n",
         )
         .unwrap();
         let c = Config::from_doc(&doc).unwrap();
@@ -273,6 +278,9 @@ mod tests {
         assert_eq!(c.lsh.t, 120);
         assert_eq!(c.stream.obj_map, ObjMapStrategy::Lsh);
         assert_eq!(c.stream.agg_bytes, 0);
+        assert_eq!(c.stream.inflight, 16);
+        // default stays open loop
+        assert_eq!(Config::default().stream.inflight, 0);
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! The coordinator: wires the five stages into the index-build and search
-//! pipelines (paper §IV-A) and drives them with the deterministic inline
-//! executor.
+//! pipelines (paper §IV-A) and drives them through the transport-agnostic
+//! executor seam (DESIGN.md §Executor seam).
 //!
-//! The executor processes messages in FIFO order, attributing network
-//! traffic via [`TrafficMeter`] using the stage placement (same-node
-//! deliveries are free, which is exactly how intra-stage parallelism cuts
-//! message counts). Results are bit-identical to the sequential baseline —
-//! that's the differential-testing contract (`rust/tests/
-//! integration_pipeline.rs`).
+//! Both phases run on *any* [`Executor`]: [`build_index`]/[`search`] use the
+//! deterministic [`InlineExecutor`] (FIFO delivery, results bit-identical to
+//! the sequential baseline — the differential-testing contract in
+//! `rust/tests/integration_pipeline.rs`), while [`build_index_on`]/
+//! [`search_on`] accept the threaded executor (or any future transport).
+//! Network traffic is attributed by the executor via [`TrafficMeter`] using
+//! the stage placement — same-node deliveries are free, which is exactly how
+//! intra-stage parallelism cuts message counts.
 
 pub mod persist;
 pub mod threaded;
@@ -15,14 +17,16 @@ pub mod threaded;
 use crate::config::Config;
 use crate::core::lsh::HashFamily;
 use crate::data::Dataset;
-use crate::dataflow::message::{Dest, Msg, StageKind};
+use crate::dataflow::exec::{
+    bind_stages, Executor, InlineExecutor, IrHandler, QrHandler, Workload,
+};
+use crate::dataflow::message::{Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::partition::ObjMapper;
 use crate::runtime::{Hasher, Ranker};
 use crate::stages::{AgState, BiState, DpState, InputReader, QueryReceiver};
 use crate::util::timer::Timer;
-use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// A built distributed index: stage states + accounting.
@@ -49,7 +53,7 @@ pub struct SearchOutput {
     pub meter: TrafficMeter,
     /// Per-copy work: (stage, copy, work) — cost-model input.
     pub work: Vec<(StageKind, u16, WorkStats)>,
-    /// Wall-clock per query (inline executor; single host core).
+    /// Wall-clock admission-to-completion per query.
     pub per_query_secs: Vec<f64>,
     pub wall_secs: f64,
 }
@@ -64,8 +68,56 @@ impl SearchOutput {
     }
 }
 
-/// Build the distributed index over `dataset` (paper's index-build phase).
+/// IR ingest block size: streamed so build memory stays bounded and the
+/// threaded executor can overlap hashing with BI/DP insertion.
+const BUILD_BLOCK: usize = 8192;
+
+/// Ingress workload for an index phase: one [`Msg::IndexBlock`] per block.
+///
+/// Each block is copied into its own `Arc` (~`BUILD_BLOCK`·dim·4 bytes
+/// transient). That is one extra memcpy pass over the dataset per build —
+/// deliberate: it keeps `Msg` `'static` (required to cross executor
+/// threads) without restructuring `Dataset`'s owned storage, and it is
+/// noise next to the hashing matmul that reads the same bytes.
+fn build_items<'a>(
+    dataset: &'a Dataset,
+    id_base: u32,
+) -> impl Iterator<Item = Msg> + 'a {
+    let len = dataset.len();
+    let block = BUILD_BLOCK.min(len.max(1));
+    let mut off = 0usize;
+    std::iter::from_fn(move || {
+        if off >= len {
+            return None;
+        }
+        let take = (len - off).min(block);
+        let flat: Arc<[f32]> = dataset.slice_flat(off, off + take).into();
+        let msg = Msg::IndexBlock {
+            id_base: id_base + off as u32,
+            rows: take as u32,
+            flat,
+        };
+        off += take;
+        Some(msg)
+    })
+}
+
+/// Build the distributed index over `dataset` with the deterministic inline
+/// executor (paper's index-build phase).
 pub fn build_index(cfg: &Config, dataset: &Dataset, hasher: &dyn Hasher) -> Cluster {
+    build_index_on(&InlineExecutor, cfg, dataset, hasher)
+}
+
+/// Build the distributed index on any [`Executor`]. IR streams the dataset
+/// in blocks; BI/DP consume (they emit nothing during build, so routing is
+/// single-hop). Stage state is executor-independent: BI/DP copies receive
+/// their messages from the single IR source in emission order either way.
+pub fn build_index_on(
+    exec: &dyn Executor,
+    cfg: &Config,
+    dataset: &Dataset,
+    hasher: &dyn Hasher,
+) -> Cluster {
     let timer = Timer::start();
     let family = Arc::new(HashFamily::sample(dataset.dim, cfg.lsh));
     let placement = Placement::new(&cfg.cluster);
@@ -89,50 +141,34 @@ pub fn build_index(cfg: &Config, dataset: &Dataset, hasher: &dyn Hasher) -> Clus
             )
         })
         .collect();
-    let ags: Vec<AgState> = (0..placement.ag_copies)
+    let mut ags: Vec<AgState> = (0..placement.ag_copies)
         .map(|c| AgState::new(c as u16, cfg.lsh.k))
         .collect();
 
-    let mut meter = TrafficMeter::new(cfg.stream.agg_bytes);
-    let head = placement.head_node;
-
-    // IR streams the dataset in blocks; BI/DP consume (they emit nothing
-    // during build, so routing is single-hop).
-    let build_head_work = {
-        let mut ir = InputReader::new(&family, &mapper, placement.bi_copies);
-        let block = 8192.min(dataset.len().max(1));
-        let mut out: Vec<(Dest, Msg)> = Vec::new();
-        let mut done = 0usize;
-        while done < dataset.len() {
-            let take = (dataset.len() - done).min(block);
-            ir.index_block(
-                hasher,
-                dataset.slice_flat(done, done + take),
-                take,
-                done as u32,
-                &mut out,
-            );
-            for (dest, msg) in out.drain(..) {
-                let dst_node = placement.node_of(dest.stage, dest.copy);
-                meter.send(head, dst_node, msg.wire_size());
-                match (dest.stage, msg) {
-                    (StageKind::Bi, Msg::IndexRef { key, id, dp, .. }) => {
-                        bis[dest.copy as usize].on_index_ref(key, id, dp);
-                    }
-                    (StageKind::Dp, Msg::StoreObject { id, v }) => {
-                        dps[dest.copy as usize].on_store(id, &v);
-                    }
-                    (stage, msg) => {
-                        panic!("unexpected build message {msg:?} to {stage:?}")
-                    }
-                }
-            }
-            done += take;
-        }
-        ir.work
+    let mut ir = InputReader::new(&family, &mapper, placement.bi_copies);
+    let report = {
+        let stages = bind_stages(
+            Box::new(IrHandler { ir: &mut ir, hasher }),
+            &mut bis,
+            &mut dps,
+            &mut ags,
+            None,
+        );
+        let mut items = build_items(dataset, 0);
+        exec.run(
+            &placement,
+            stages,
+            Workload {
+                items: &mut items,
+                n_queries: 0,
+                window: 0,
+                agg_bytes: cfg.stream.agg_bytes,
+            },
+        )
     };
-    meter.flush();
 
+    // `ir` borrows `family`/`mapper`; read its counters before moving them.
+    let build_head_work = ir.work;
     Cluster {
         cfg: cfg.clone(),
         family,
@@ -141,7 +177,7 @@ pub fn build_index(cfg: &Config, dataset: &Dataset, hasher: &dyn Hasher) -> Clus
         bis,
         dps,
         ags,
-        build_meter: meter,
+        build_meter: report.meter,
         build_head_work,
         build_wall_secs: timer.secs(),
     }
@@ -175,24 +211,34 @@ impl Cluster {
     ) -> std::ops::Range<u32> {
         let id_base = self.stored_objects() as u32;
         let placement = self.placement.clone();
-        let head = placement.head_node;
-        let mut ir = InputReader::new(&self.family, &self.mapper, placement.bi_copies);
-        let mut out: Vec<(Dest, Msg)> = Vec::new();
-        ir.index_block(hasher, flat, rows, id_base, &mut out);
-        for (dest, msg) in out.drain(..) {
-            let dst_node = placement.node_of(dest.stage, dest.copy);
-            self.build_meter.send(head, dst_node, msg.wire_size());
-            match (dest.stage, msg) {
-                (StageKind::Bi, Msg::IndexRef { key, id, dp, .. }) => {
-                    self.bis[dest.copy as usize].on_index_ref(key, id, dp);
-                }
-                (StageKind::Dp, Msg::StoreObject { id, v }) => {
-                    self.dps[dest.copy as usize].on_store(id, &v);
-                }
-                (stage, msg) => panic!("unexpected insert message {msg:?} to {stage:?}"),
-            }
-        }
-        self.build_meter.flush();
+        let family = self.family.clone();
+        let agg_bytes = self.cfg.stream.agg_bytes;
+        let mut ir = InputReader::new(&family, &self.mapper, placement.bi_copies);
+        let report = {
+            let stages = bind_stages(
+                Box::new(IrHandler { ir: &mut ir, hasher }),
+                &mut self.bis,
+                &mut self.dps,
+                &mut self.ags,
+                None,
+            );
+            let mut items = std::iter::once(Msg::IndexBlock {
+                id_base,
+                rows: rows as u32,
+                flat: flat.into(),
+            });
+            InlineExecutor.run(
+                &placement,
+                stages,
+                Workload {
+                    items: &mut items,
+                    n_queries: 0,
+                    window: 0,
+                    agg_bytes,
+                },
+            )
+        };
+        self.build_meter.merge(&report.meter);
         self.build_head_work.add(&ir.work);
         id_base..id_base + rows as u32
     }
@@ -214,9 +260,23 @@ impl Cluster {
     }
 }
 
-/// Run the search phase over `queries` (paper's search pipeline iii→v),
-/// returning per-query global top-k plus exact traffic and work accounting.
+/// Run the search phase over `queries` with the deterministic inline
+/// executor (paper's search pipeline iii→v), returning per-query global
+/// top-k plus exact traffic and work accounting.
 pub fn search(
+    cluster: &mut Cluster,
+    queries: &Dataset,
+    hasher: &dyn Hasher,
+    ranker: &dyn Ranker,
+) -> SearchOutput {
+    search_on(&InlineExecutor, cluster, queries, hasher, ranker)
+}
+
+/// Run the search phase on any [`Executor`]. The admission window comes
+/// from `Config::stream.inflight` (0 = open loop); the inline executor is
+/// sequential regardless, so the knob only shapes threaded serving.
+pub fn search_on(
+    exec: &dyn Executor,
     cluster: &mut Cluster,
     queries: &Dataset,
     hasher: &dyn Hasher,
@@ -224,86 +284,68 @@ pub fn search(
 ) -> SearchOutput {
     let wall = Timer::start();
     let placement = cluster.placement.clone();
-    let mut meter = TrafficMeter::new(cluster.cfg.stream.agg_bytes);
+    let agg_bytes = cluster.cfg.stream.agg_bytes;
+    let window = cluster.cfg.stream.inflight;
     let family = cluster.family.clone();
     let mut qr = QueryReceiver::new(&family, placement.bi_copies, placement.ag_copies);
-    let head = placement.head_node;
-    let mut queue: VecDeque<(u16, Dest, Msg)> = VecDeque::new();
-    let mut emitted: Vec<(Dest, Msg)> = Vec::new();
-    let mut per_query_secs = Vec::with_capacity(queries.len());
 
     // §Perf: hash the whole query batch through one artifact call instead
-    // of one padded call per query.
+    // of one padded call per query (the QR handler accounts per query).
     let p = hasher.p();
     let raws = hasher.proj_batch(queries.as_flat(), queries.len());
-    qr.work.hash_vectors += queries.len() as u64;
 
-    for qid in 0..queries.len() as u32 {
-        let qt = Timer::start();
-        let raw = &raws[qid as usize * p..(qid as usize + 1) * p];
-        qr.dispatch_query_raw(raw, qid, queries.get(qid as usize), &mut emitted);
-        for (dest, msg) in emitted.drain(..) {
-            let dst = placement.node_of(dest.stage, dest.copy);
-            meter.send(head, dst, msg.wire_size());
-            queue.push_back((dst, dest, msg));
-        }
-        // Drain to completion (inline executor: FIFO, deterministic).
-        while let Some((_src_node, dest, msg)) = queue.pop_front() {
-            // The handler about to run lives on this node; messages it
-            // emits are charged from here.
-            let handler_node = placement.node_of(dest.stage, dest.copy);
-            match (dest.stage, msg) {
-                (StageKind::Bi, Msg::Query { qid, probes, v }) => {
-                    let bi = &mut cluster.bis[dest.copy as usize];
-                    bi.on_query(qid, &probes, &v, &mut emitted);
-                }
-                (StageKind::Dp, Msg::CandidateReq { qid, ids, v }) => {
-                    let dp = &mut cluster.dps[dest.copy as usize];
-                    dp.on_candidates(qid, &ids, &v, ranker, &mut emitted);
-                }
-                (StageKind::Ag, Msg::QueryMeta { qid, n_bi }) => {
-                    cluster.ags[dest.copy as usize].on_query_meta(qid, n_bi);
-                }
-                (StageKind::Ag, Msg::BiMeta { qid, n_dp }) => {
-                    cluster.ags[dest.copy as usize].on_bi_meta(qid, n_dp);
-                }
-                (StageKind::Ag, Msg::LocalTopK { qid, hits }) => {
-                    cluster.ags[dest.copy as usize].on_local_topk(qid, &hits);
-                }
-                (stage, msg) => panic!("unexpected search message {msg:?} to {stage:?}"),
-            }
-            for (d2, m2) in emitted.drain(..) {
-                let dst_node = placement.node_of(d2.stage, d2.copy);
-                meter.send(handler_node, dst_node, m2.wire_size());
-                queue.push_back((dst_node, d2, m2));
-            }
-        }
-        dps_finish(cluster, qid);
-        per_query_secs.push(qt.secs());
-    }
-    meter.flush();
+    let report = {
+        let stages = bind_stages(
+            Box::new(QrHandler { qr: &mut qr }),
+            &mut cluster.bis,
+            &mut cluster.dps,
+            &mut cluster.ags,
+            Some(ranker),
+        );
+        let mut items = (0..queries.len() as u32).map(|qid| {
+            let raw: Arc<[f32]> = raws[qid as usize * p..(qid as usize + 1) * p].into();
+            let v: Arc<[f32]> = queries.get(qid as usize).into();
+            Msg::QueryVec { qid, raw, v }
+        });
+        exec.run(
+            &placement,
+            stages,
+            Workload {
+                items: &mut items,
+                n_queries: queries.len(),
+                window,
+                agg_bytes,
+            },
+        )
+    };
 
-    // Collect results in qid order.
-    let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); queries.len()];
-    for ag in &mut cluster.ags {
-        for (qid, hits) in ag.results.drain(..) {
-            results[qid as usize] = hits;
-        }
-    }
     let work = cluster.take_work(&std::mem::take(&mut qr.work));
     SearchOutput {
-        results,
-        meter,
+        results: report.results,
+        meter: report.meter,
         work,
-        per_query_secs,
+        per_query_secs: report.per_query_secs,
         wall_secs: wall.secs(),
     }
 }
 
-fn dps_finish(cluster: &mut Cluster, qid: u32) {
-    for dp in &mut cluster.dps {
-        dp.finish_query(qid);
-    }
+/// Shared differential-test fixture (small world: 2 BI / 4 DP nodes),
+/// used by this module's tests and by `threaded`'s — tune it in one place.
+#[cfg(test)]
+pub(crate) fn small_test_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = crate::core::lsh::LshParams {
+        l: 4,
+        m: 8,
+        w: 600.0,
+        k: 5,
+        t: 8,
+        seed: 3,
+    };
+    cfg.cluster.bi_nodes = 2;
+    cfg.cluster.dp_nodes = 4;
+    cfg.data.n = 2_000;
+    cfg
 }
 
 #[cfg(test)]
@@ -313,19 +355,7 @@ mod tests {
     use crate::runtime::{ScalarHasher, ScalarRanker};
 
     fn small_cfg() -> Config {
-        let mut cfg = Config::default();
-        cfg.lsh = crate::core::lsh::LshParams {
-            l: 4,
-            m: 8,
-            w: 600.0,
-            k: 5,
-            t: 8,
-            seed: 3,
-        };
-        cfg.cluster.bi_nodes = 2;
-        cfg.cluster.dp_nodes = 4;
-        cfg.data.n = 2_000;
-        cfg
+        small_test_cfg()
     }
 
     fn small_world(cfg: &Config) -> (Dataset, Dataset, ScalarHasher) {
@@ -437,5 +467,57 @@ mod tests {
         // second snapshot is zeroed
         let again = cluster.take_work(&WorkStats::default());
         assert!(again.iter().all(|(_, _, w)| w.dists_computed == 0));
+    }
+
+    #[test]
+    fn build_on_both_executors_yields_identical_state() {
+        use crate::dataflow::exec::ThreadedExecutor;
+        let cfg = small_cfg();
+        let (ds, _, hasher) = small_world(&cfg);
+        let inline_cluster = build_index(&cfg, &ds, &hasher);
+        let threaded_cluster = build_index_on(&ThreadedExecutor, &cfg, &ds, &hasher);
+
+        assert_eq!(
+            inline_cluster.stored_objects(),
+            threaded_cluster.stored_objects()
+        );
+        assert_eq!(
+            inline_cluster.bucket_references(),
+            threaded_cluster.bucket_references()
+        );
+        // Bucket-level identity, including per-bucket insertion order: each
+        // BI copy consumes the single IR source in emission order on either
+        // transport.
+        for (a, b) in inline_cluster.bis.iter().zip(&threaded_cluster.bis) {
+            let sa: Vec<(u64, Vec<(u32, u16)>)> = a
+                .buckets_snapshot()
+                .into_iter()
+                .map(|(k, v)| (k, v.clone()))
+                .collect();
+            let sb: Vec<(u64, Vec<(u32, u16)>)> = b
+                .buckets_snapshot()
+                .into_iter()
+                .map(|(k, v)| (k, v.clone()))
+                .collect();
+            assert_eq!(sa, sb, "BI copy {} diverged", a.copy);
+        }
+        for (a, b) in inline_cluster.dps.iter().zip(&threaded_cluster.dps) {
+            assert_eq!(
+                a.objects_snapshot(),
+                b.objects_snapshot(),
+                "DP copy {} diverged",
+                a.copy
+            );
+        }
+        // Traffic counters agree exactly: build messages flow from the
+        // single IR thread on either executor.
+        assert_eq!(
+            inline_cluster.build_meter.logical_msgs,
+            threaded_cluster.build_meter.logical_msgs
+        );
+        assert_eq!(
+            inline_cluster.build_meter.payload_bytes,
+            threaded_cluster.build_meter.payload_bytes
+        );
     }
 }

@@ -1,276 +1,61 @@
-//! Threaded executor: the paper's widely-asynchronous design, for real.
+//! Threaded serving entry point — a thin shim over the transport-agnostic
+//! [`ThreadedExecutor`](crate::dataflow::exec::ThreadedExecutor).
 //!
-//! Every BI/DP/AG copy runs as its own thread consuming an mpsc channel —
-//! task parallelism (QR dispatch overlaps BI lookups), pipeline parallelism
-//! (query `n+1` hashes while query `n` is still ranking) and replicated
-//! parallelism (copies of a stage run concurrently). Stage *logic* is the
-//! same handler code the inline executor drives; only the transport differs.
+//! The per-stage dispatch logic that used to live here is gone: stage
+//! routing, per-thread traffic metering, shutdown cascade and closed-loop
+//! admission are all owned by `dataflow::exec`, shared with the inline
+//! executor. This module keeps the historical `search_threaded` signature
+//! for the serving drivers and hosts the inline-vs-threaded differential
+//! tests.
 //!
-//! Sender ownership encodes shutdown: main holds the BI and AG senders, BI
-//! threads hold DP+AG senders, DP threads hold AG senders. When main drops
-//! its senders after dispatching the workload, closure cascades
-//! QR→BI→DP→AG and the result channel closes once the last AG exits.
-//!
-//! Per-thread traffic meters are merged at join, so counters equal the
-//! inline executor's (aggregation flush boundaries aside — packets are
-//! flushed per thread).
+//! Admission policy comes from `Config::stream.inflight`: 0 submits the
+//! whole workload up front (open loop — per-query latency includes
+//! queueing, as in a saturated serving scenario), W > 0 keeps at most W
+//! queries in flight (closed loop — latency reflects pipeline service
+//! time).
 
-use crate::coordinator::{Cluster, SearchOutput};
+use crate::coordinator::{search_on, Cluster, SearchOutput};
 use crate::data::Dataset;
-use crate::dataflow::message::{Msg, StageKind};
-use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::exec::ThreadedExecutor;
 use crate::runtime::{Hasher, Ranker};
-use crate::stages::QueryReceiver;
-use crate::util::timer::Timer;
-use std::sync::mpsc;
-use std::time::Instant;
 
-enum AgIn {
-    Meta { qid: u32, n_bi: u32 },
-    BiMeta { qid: u32, n_dp: u32 },
-    TopK { qid: u32, hits: Vec<(f32, u32)> },
-}
-
-/// Search with one thread per stage copy (open-loop dispatch: all queries
-/// are submitted up front; per-query latency includes queueing, as in a
-/// saturated serving scenario). Accounting matches the inline `search`.
+/// Search with one thread per stage copy. Accounting matches the inline
+/// `search` (per-thread traffic meters are merged at join).
 pub fn search_threaded(
     cluster: &mut Cluster,
     queries: &Dataset,
     hasher: &dyn Hasher,
     ranker: &dyn Ranker,
 ) -> SearchOutput {
-    let wall = Timer::start();
-    let placement = cluster.placement.clone();
-    let agg = cluster.cfg.stream.agg_bytes;
-    let n_queries = queries.len();
-
-    // Channels.
-    let (mut bi_tx, bi_rx): (Vec<_>, Vec<_>) =
-        (0..placement.bi_copies).map(|_| mpsc::channel::<Msg>()).unzip();
-    let (dp_tx, dp_rx): (Vec<_>, Vec<_>) =
-        (0..placement.dp_copies).map(|_| mpsc::channel::<Msg>()).unzip();
-    let (mut ag_tx, ag_rx): (Vec<_>, Vec<_>) =
-        (0..placement.ag_copies).map(|_| mpsc::channel::<AgIn>()).unzip();
-    let (res_tx, res_rx) = mpsc::channel::<(u32, Vec<(f32, u32)>, Instant)>();
-
-    // Move stage states into threads; they come back at join.
-    let bis = std::mem::take(&mut cluster.bis);
-    let dps = std::mem::take(&mut cluster.dps);
-    let ags = std::mem::take(&mut cluster.ags);
-    let family = cluster.family.clone();
-
-    let mut meters: Vec<TrafficMeter> = Vec::new();
-    let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); n_queries];
-    let mut per_query_secs = vec![0f64; n_queries];
-    let mut qr_work = crate::dataflow::metrics::WorkStats::default();
-
-    std::thread::scope(|s| {
-        // --- AG threads (hold res_tx clones) ---
-        let ag_handles: Vec<_> = ags
-            .into_iter()
-            .zip(ag_rx)
-            .map(|(mut ag, rx)| {
-                let res_tx = res_tx.clone();
-                s.spawn(move || {
-                    while let Ok(m) = rx.recv() {
-                        match m {
-                            AgIn::Meta { qid, n_bi } => ag.on_query_meta(qid, n_bi),
-                            AgIn::BiMeta { qid, n_dp } => ag.on_bi_meta(qid, n_dp),
-                            AgIn::TopK { qid, hits } => ag.on_local_topk(qid, &hits),
-                        }
-                        // Stream completions out as they happen.
-                        for (qid, hits) in ag.results.drain(..) {
-                            res_tx.send((qid, hits, Instant::now())).expect("channel closed");
-                        }
-                    }
-                    ag
-                })
-            })
-            .collect();
-        drop(res_tx);
-
-        // --- DP threads (hold ag_tx clones) ---
-        let dp_handles: Vec<_> = dps
-            .into_iter()
-            .zip(dp_rx)
-            .map(|(mut dp, rx)| {
-                let ag_tx = ag_tx.clone();
-                let placement = placement.clone();
-                s.spawn(move || {
-                    let mut meter = TrafficMeter::new(agg);
-                    let my_node = placement.node_of(StageKind::Dp, dp.copy);
-                    let mut out = Vec::new();
-                    while let Ok(m) = rx.recv() {
-                        match m {
-                            Msg::StoreObject { id, v } => dp.on_store(id, &v),
-                            Msg::CandidateReq { qid, ids, v } => {
-                                dp.on_candidates(qid, &ids, &v, ranker, &mut out);
-                                for (dest, msg) in out.drain(..) {
-                                    let dst = placement.node_of(dest.stage, dest.copy);
-                                    meter.send(my_node, dst, msg.wire_size());
-                                    if let Msg::LocalTopK { qid, hits } = msg {
-                                        ag_tx[dest.copy as usize]
-                                            .send(AgIn::TopK { qid, hits })
-                                            .expect("channel closed");
-                                    }
-                                }
-                            }
-                            other => panic!("DP got {other:?}"),
-                        }
-                    }
-                    meter.flush();
-                    (dp, meter)
-                })
-            })
-            .collect();
-
-        // --- BI threads (hold dp_tx + ag_tx clones) ---
-        let bi_handles: Vec<_> = bis
-            .into_iter()
-            .zip(bi_rx)
-            .map(|(mut bi, rx)| {
-                let dp_tx = dp_tx.clone();
-                let ag_tx = ag_tx.clone();
-                let placement = placement.clone();
-                s.spawn(move || {
-                    let mut meter = TrafficMeter::new(agg);
-                    let my_node = placement.node_of(StageKind::Bi, bi.copy);
-                    let mut out = Vec::new();
-                    while let Ok(m) = rx.recv() {
-                        match m {
-                            Msg::Query { qid, probes, v } => {
-                                bi.on_query(qid, &probes, &v, &mut out);
-                                for (dest, msg) in out.drain(..) {
-                                    let dst = placement.node_of(dest.stage, dest.copy);
-                                    meter.send(my_node, dst, msg.wire_size());
-                                    match msg {
-                                        Msg::CandidateReq { .. } => {
-                                            dp_tx[dest.copy as usize].send(msg).expect("channel closed");
-                                        }
-                                        Msg::BiMeta { qid, n_dp } => {
-                                            ag_tx[dest.copy as usize]
-                                                .send(AgIn::BiMeta { qid, n_dp })
-                                                .expect("channel closed");
-                                        }
-                                        other => panic!("BI emitted {other:?}"),
-                                    }
-                                }
-                            }
-                            other => panic!("BI got {other:?}"),
-                        }
-                    }
-                    meter.flush();
-                    (bi, meter)
-                })
-            })
-            .collect();
-        // Main keeps only its own senders alive.
-        drop(dp_tx);
-
-        // --- QR on the main thread ---
-        let mut qr =
-            QueryReceiver::new(&family, placement.bi_copies, placement.ag_copies);
-        let mut qr_meter = TrafficMeter::new(agg);
-        let head = placement.head_node;
-        let mut emitted = Vec::new();
-        let mut dispatch_ts: Vec<Instant> = Vec::with_capacity(n_queries);
-        // §Perf: one batched artifact call for the whole query set.
-        let p = hasher.p();
-        let raws = hasher.proj_batch(queries.as_flat(), n_queries);
-        qr.work.hash_vectors += n_queries as u64;
-        for qid in 0..n_queries as u32 {
-            let raw = &raws[qid as usize * p..(qid as usize + 1) * p];
-            qr.dispatch_query_raw(raw, qid, queries.get(qid as usize), &mut emitted);
-            dispatch_ts.push(Instant::now());
-            for (dest, msg) in emitted.drain(..) {
-                let dst = placement.node_of(dest.stage, dest.copy);
-                qr_meter.send(head, dst, msg.wire_size());
-                match (dest.stage, msg) {
-                    (StageKind::Bi, msg) => {
-                        bi_tx[dest.copy as usize].send(msg).expect("channel closed");
-                    }
-                    (StageKind::Ag, Msg::QueryMeta { qid, n_bi }) => {
-                        ag_tx[dest.copy as usize].send(AgIn::Meta { qid, n_bi }).expect("channel closed");
-                    }
-                    (stage, msg) => panic!("QR emitted {msg:?} to {stage:?}"),
-                }
-            }
-        }
-        qr_meter.flush();
-        qr_work = std::mem::take(&mut qr.work);
-        // Cascade shutdown.
-        bi_tx.clear();
-        ag_tx.clear();
-
-        // Collect results until every AG exits.
-        while let Ok((qid, hits, done_at)) = res_rx.recv() {
-            per_query_secs[qid as usize] =
-                done_at.duration_since(dispatch_ts[qid as usize]).as_secs_f64();
-            results[qid as usize] = hits;
-        }
-
-        meters.push(qr_meter);
-        for h in bi_handles {
-            let (bi, meter) = h.join().unwrap();
-            meters.push(meter);
-            cluster.bis.push(bi);
-        }
-        for h in dp_handles {
-            let (dp, meter) = h.join().unwrap();
-            meters.push(meter);
-            cluster.dps.push(dp);
-        }
-        for h in ag_handles {
-            cluster.ags.push(h.join().unwrap());
-        }
-    });
-
-    // Restore deterministic copy order (threads joined in spawn order, so
-    // this is already sorted, but make it explicit).
-    cluster.bis.sort_by_key(|b| b.copy);
-    cluster.dps.sort_by_key(|d| d.copy);
-    cluster.ags.sort_by_key(|a| a.copy);
-
-    let mut meter = TrafficMeter::new(agg);
-    for m in &meters {
-        meter.merge(m);
-    }
-    let work = cluster.take_work(&qr_work);
-    SearchOutput {
-        results,
-        meter,
-        work,
-        per_query_secs,
-        wall_secs: wall.secs(),
-    }
+    search_on(&ThreadedExecutor, cluster, queries, hasher, ranker)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::Config;
-    use crate::coordinator::{build_index, search};
-    use crate::core::lsh::LshParams;
+    use crate::coordinator::{build_index, search, small_test_cfg};
     use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
     use crate::runtime::{ScalarHasher, ScalarRanker};
 
-    #[test]
-    fn threaded_matches_inline_results() {
-        let mut cfg = Config::default();
-        cfg.lsh = LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 };
-        cfg.cluster.bi_nodes = 2;
-        cfg.cluster.dp_nodes = 4;
-        let ds = synthesize(SynthSpec { n: 1_500, clusters: 40, ..Default::default() });
-        let (qs, _) = distorted_queries(&ds, 15, 4.0, 7);
+    fn world(
+        cfg: &Config,
+        n: usize,
+        queries: usize,
+    ) -> (Dataset, Dataset, ScalarHasher, ScalarRanker) {
+        let ds = synthesize(SynthSpec { n, clusters: 40, ..Default::default() });
+        let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
         let family = crate::core::lsh::HashFamily::sample(ds.dim, cfg.lsh);
         let hasher = ScalarHasher { family };
         let ranker = ScalarRanker { dim: ds.dim };
+        (ds, qs, hasher, ranker)
+    }
 
-        let mut c1 = build_index(&cfg, &ds, &hasher);
+    fn assert_matches_inline(cfg: &Config, n: usize, queries: usize) {
+        let (ds, qs, hasher, ranker) = world(cfg, n, queries);
+        let mut c1 = build_index(cfg, &ds, &hasher);
         let inline_out = search(&mut c1, &qs, &hasher, &ranker);
-
-        let mut c2 = build_index(&cfg, &ds, &hasher);
+        let mut c2 = build_index(cfg, &ds, &hasher);
         let threaded_out = search_threaded(&mut c2, &qs, &hasher, &ranker);
 
         assert_eq!(inline_out.results, threaded_out.results);
@@ -289,9 +74,59 @@ mod tests {
         );
         assert!((a - b).abs() / a < 0.01, "payload diverged: {a} vs {b}");
         // states returned intact
-        assert_eq!(c2.bis.len(), 2);
-        assert_eq!(c2.dps.len(), 4);
-        assert_eq!(c2.ags.len(), 1);
+        assert_eq!(c2.bis.len(), cfg.cluster.bi_copies());
+        assert_eq!(c2.dps.len(), cfg.cluster.dp_copies());
+        assert_eq!(c2.ags.len(), cfg.cluster.ag_copies);
         assert!(threaded_out.per_query_secs.iter().all(|&s| s > 0.0));
+    }
+
+    fn small_cfg() -> Config {
+        small_test_cfg()
+    }
+
+    #[test]
+    fn threaded_matches_inline_results() {
+        assert_matches_inline(&small_cfg(), 1_500, 15);
+    }
+
+    #[test]
+    fn threaded_matches_inline_under_batched_admission() {
+        for window in [1usize, 3] {
+            let mut cfg = small_cfg();
+            cfg.stream.inflight = window;
+            assert_matches_inline(&cfg, 1_500, 15);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_inline_with_multiple_aggregators() {
+        let mut cfg = small_cfg();
+        cfg.cluster.ag_copies = 3;
+        assert_matches_inline(&cfg, 1_500, 20);
+        let mut cfg = small_cfg();
+        cfg.cluster.ag_copies = 2;
+        cfg.stream.inflight = 2;
+        assert_matches_inline(&cfg, 1_200, 18);
+    }
+
+    #[test]
+    fn threaded_build_then_threaded_search_matches_inline_pipeline() {
+        use crate::coordinator::build_index_on;
+        use crate::dataflow::exec::ThreadedExecutor;
+        let mut cfg = small_cfg();
+        cfg.stream.inflight = 4;
+        let (ds, qs, hasher, ranker) = world(&cfg, 1_500, 15);
+
+        let mut inline_cluster = build_index(&cfg, &ds, &hasher);
+        let inline_out = search(&mut inline_cluster, &qs, &hasher, &ranker);
+
+        let mut threaded_cluster = build_index_on(&ThreadedExecutor, &cfg, &ds, &hasher);
+        let threaded_out = search_threaded(&mut threaded_cluster, &qs, &hasher, &ranker);
+
+        assert_eq!(inline_out.results, threaded_out.results);
+        assert_eq!(
+            inline_cluster.build_meter.logical_msgs,
+            threaded_cluster.build_meter.logical_msgs
+        );
     }
 }

@@ -1,0 +1,852 @@
+//! The transport-agnostic dataflow runtime (DESIGN.md §Executor seam).
+//!
+//! The paper's five stages (IR/QR/BI/DP/AG) are *message handlers*; how
+//! messages move between them — inline FIFO, threads and channels, or some
+//! future simnet-timed/RPC transport — is an [`Executor`]. Every driver
+//! (index build, search, online insert, experiments, benches) goes through
+//! this one seam, so stage-routing logic exists exactly once.
+//!
+//! * [`StageHandler`] — uniform `on_msg(&mut self, Msg, &mut Emit)` handler
+//!   bound to each stage state ([`IrHandler`], [`QrHandler`], [`BiHandler`],
+//!   [`DpHandler`], [`AgHandler`]). Completion signalling (AG → executor)
+//!   and per-query teardown (executor → DP dedup state) are part of the
+//!   trait so no executor needs stage-specific knowledge.
+//! * [`InlineExecutor`] — deterministic single-threaded FIFO: each workload
+//!   item is delivered to the head stage and the message queue drained to
+//!   completion before the next item. Bit-identical to the sequential
+//!   baseline; the differential-testing oracle.
+//! * [`ThreadedExecutor`] — the paper's widely-asynchronous design: one
+//!   thread per BI/DP/AG copy consuming an mpsc channel, head stage and
+//!   admission on the calling thread. Supports *closed-loop batched
+//!   admission*: with `Workload::window = W`, at most W queries are
+//!   in flight at once (open loop when 0), so queueing delay no longer
+//!   dominates per-query latency under load.
+//!
+//! Traffic accounting is executor-owned: a delivery from stage copy A to
+//! stage copy B is charged on the meter from `placement.node_of(A)` to
+//! `placement.node_of(B)` (same-node deliveries are free). The threaded
+//! executor meters per thread and merges at join, so counters match the
+//! inline executor's (aggregation flush boundaries aside). Workload ingress
+//! (driver → head stage) and control deliveries (shutdown, query teardown)
+//! are not metered — they never cross the modeled network.
+//!
+//! Shutdown in the threaded executor is typed, not panicking: a send to a
+//! dropped receiver makes the sender *stop and drain* (and every thread
+//! owns a drop-guard that notifies the admission loop), so a dying stage
+//! copy cascades into a clean join instead of aborting the process; the
+//! original panic, if any, is resurfaced at join.
+
+use crate::dataflow::message::{Dest, Msg, StageKind};
+use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::Placement;
+use crate::runtime::{Hasher, Ranker};
+use crate::stages::aggregator::QueryResult;
+use crate::stages::{AgState, BiState, DpState, Emit, InputReader, QueryReceiver};
+use crate::util::timer::Timer;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Uniform message-handling seam implemented by every stage binding.
+///
+/// A handler owns (a mutable borrow of) one stage copy's state. It must be
+/// `Send` so the threaded executor can move it onto the copy's thread.
+pub trait StageHandler: Send {
+    /// Handle one message, pushing emitted `(Dest, Msg)` pairs onto `out`.
+    /// A message the stage cannot handle is a routing-invariant violation
+    /// and panics loudly (never silently wrong answers).
+    fn on_msg(&mut self, msg: Msg, out: Emit);
+
+    /// Drain queries completed since the last call (AG only).
+    fn take_completions(&mut self, _out: &mut Vec<QueryResult>) {}
+
+    /// A query has fully completed downstream (DP drops its per-query
+    /// dedup state). Delivered out-of-band; never metered.
+    fn on_query_done(&mut self, _qid: u32) {}
+}
+
+/// IR bound to a hasher: consumes [`Msg::IndexBlock`] ingress items.
+pub struct IrHandler<'a, 'f> {
+    pub ir: &'a mut InputReader<'f>,
+    pub hasher: &'a dyn Hasher,
+}
+
+impl StageHandler for IrHandler<'_, '_> {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        match msg {
+            Msg::IndexBlock { id_base, rows, flat } => {
+                self.ir.index_block(self.hasher, &flat, rows as usize, id_base, out)
+            }
+            other => panic!("IR got unexpected {other:?}"),
+        }
+    }
+}
+
+/// QR: consumes [`Msg::QueryVec`] ingress items (raw projections are
+/// precomputed by the driver's batched hash call).
+pub struct QrHandler<'a, 'f> {
+    pub qr: &'a mut QueryReceiver<'f>,
+}
+
+impl StageHandler for QrHandler<'_, '_> {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        match msg {
+            Msg::QueryVec { qid, raw, v } => {
+                // The driver hashed this vector in its batched proj call;
+                // account for it here so work totals match either way.
+                self.qr.work.hash_vectors += 1;
+                self.qr.dispatch_query_arc(&raw, qid, v, out);
+            }
+            other => panic!("QR got unexpected {other:?}"),
+        }
+    }
+}
+
+/// BI: index references during build, probe visits during search.
+pub struct BiHandler<'a> {
+    pub bi: &'a mut BiState,
+}
+
+impl StageHandler for BiHandler<'_> {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        match msg {
+            Msg::IndexRef { key, id, dp, .. } => self.bi.on_index_ref(key, id, dp),
+            Msg::Query { qid, probes, v } => self.bi.on_query(qid, &probes, &v, out),
+            other => panic!("BI {} got unexpected {other:?}", self.bi.copy),
+        }
+    }
+}
+
+/// DP: object stores during build, candidate ranking during search. The
+/// ranker is optional because the build phase never ranks.
+pub struct DpHandler<'a> {
+    pub dp: &'a mut DpState,
+    pub ranker: Option<&'a dyn Ranker>,
+}
+
+impl StageHandler for DpHandler<'_> {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        match msg {
+            Msg::StoreObject { id, v } => self.dp.on_store(id, &v),
+            Msg::CandidateReq { qid, ids, v } => {
+                let ranker = self
+                    .ranker
+                    .expect("DP received CandidateReq in a phase started without a ranker");
+                self.dp.on_candidates(qid, &ids, &v, ranker, out);
+            }
+            other => panic!("DP {} got unexpected {other:?}", self.dp.copy),
+        }
+    }
+
+    fn on_query_done(&mut self, qid: u32) {
+        self.dp.finish_query(qid);
+    }
+}
+
+/// AG: reduces LocalTopK streams; completed queries surface through
+/// [`StageHandler::take_completions`].
+pub struct AgHandler<'a> {
+    pub ag: &'a mut AgState,
+}
+
+impl StageHandler for AgHandler<'_> {
+    fn on_msg(&mut self, msg: Msg, _out: Emit) {
+        match msg {
+            Msg::QueryMeta { qid, n_bi } => self.ag.on_query_meta(qid, n_bi),
+            Msg::BiMeta { qid, n_dp } => self.ag.on_bi_meta(qid, n_dp),
+            Msg::LocalTopK { qid, hits } => self.ag.on_local_topk(qid, &hits),
+            other => panic!("AG {} got unexpected {other:?}", self.ag.copy),
+        }
+    }
+
+    fn take_completions(&mut self, out: &mut Vec<QueryResult>) {
+        out.append(&mut self.ag.results);
+    }
+}
+
+/// The stage copies of one pipeline run, as boxed handlers. The head slot
+/// holds the ingress stage (IR for build, QR for search) living on the
+/// head node; `bis`/`dps`/`ags` are indexed by copy id.
+pub struct StageHandlers<'a> {
+    pub head: Box<dyn StageHandler + 'a>,
+    pub bis: Vec<Box<dyn StageHandler + 'a>>,
+    pub dps: Vec<Box<dyn StageHandler + 'a>>,
+    pub ags: Vec<Box<dyn StageHandler + 'a>>,
+}
+
+/// Bind a cluster's stage states (plus the head stage) into handlers.
+pub fn bind_stages<'a>(
+    head: Box<dyn StageHandler + 'a>,
+    bis: &'a mut [BiState],
+    dps: &'a mut [DpState],
+    ags: &'a mut [AgState],
+    ranker: Option<&'a dyn Ranker>,
+) -> StageHandlers<'a> {
+    StageHandlers {
+        head,
+        bis: bis
+            .iter_mut()
+            .map(|bi| Box::new(BiHandler { bi }) as Box<dyn StageHandler + 'a>)
+            .collect(),
+        dps: dps
+            .iter_mut()
+            .map(|dp| Box::new(DpHandler { dp, ranker }) as Box<dyn StageHandler + 'a>)
+            .collect(),
+        ags: ags
+            .iter_mut()
+            .map(|ag| Box::new(AgHandler { ag }) as Box<dyn StageHandler + 'a>)
+            .collect(),
+    }
+}
+
+/// One phase's worth of ingress messages plus its admission policy.
+pub struct Workload<'a> {
+    /// Ingress messages, delivered to the head stage in order (not metered).
+    pub items: &'a mut dyn Iterator<Item = Msg>,
+    /// How many items carry a qid (i.e. expect an AG completion). Results
+    /// and latencies are indexed by qid, which drivers assign as `0..n`.
+    pub n_queries: usize,
+    /// Closed-loop admission window: max queries in flight (0 = open loop).
+    /// Items without a qid (index blocks) are never windowed.
+    pub window: usize,
+    /// Traffic-meter aggregation buffer (from `Config::stream.agg_bytes`).
+    pub agg_bytes: usize,
+}
+
+/// What an executor hands back: per-qid results and latencies, plus the
+/// merged traffic meter for the phase. (Phase wall time is the driver's to
+/// measure — it includes work outside the executor, e.g. batch hashing.)
+pub struct ExecReport {
+    /// Global top-k per qid (empty for build phases).
+    pub results: Vec<Vec<(f32, u32)>>,
+    /// Admission-to-completion seconds per qid.
+    pub per_query_secs: Vec<f64>,
+    pub meter: TrafficMeter,
+}
+
+/// A transport for the five-stage dataflow.
+pub trait Executor {
+    fn run(
+        &self,
+        placement: &Placement,
+        stages: StageHandlers<'_>,
+        workload: Workload<'_>,
+    ) -> ExecReport;
+}
+
+// ------------------------------------------------------------------ inline
+
+/// Deterministic single-threaded FIFO executor: delivers one workload item,
+/// drains the message queue to quiescence, then admits the next. The
+/// differential-testing oracle — results are bit-identical to the
+/// sequential baseline.
+pub struct InlineExecutor;
+
+fn stage_mut<'x, 'a>(
+    stages: &'x mut StageHandlers<'a>,
+    dest: Dest,
+) -> &'x mut (dyn StageHandler + 'a) {
+    match dest.stage {
+        StageKind::Bi => stages.bis[dest.copy as usize].as_mut(),
+        StageKind::Dp => stages.dps[dest.copy as usize].as_mut(),
+        StageKind::Ag => stages.ags[dest.copy as usize].as_mut(),
+        // The head stage is fed by workload ingress only; an emission
+        // addressed upstream is a routing bug (same invariant as the
+        // threaded router).
+        StageKind::Ir | StageKind::Qr => {
+            panic!("message routed upstream to {:?}", dest.stage)
+        }
+    }
+}
+
+impl Executor for InlineExecutor {
+    fn run(
+        &self,
+        placement: &Placement,
+        mut stages: StageHandlers<'_>,
+        workload: Workload<'_>,
+    ) -> ExecReport {
+        let mut meter = TrafficMeter::new(workload.agg_bytes);
+        let head_node = placement.head_node;
+        let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); workload.n_queries];
+        let mut per_query_secs = vec![0f64; workload.n_queries];
+        let mut queue: VecDeque<(Dest, Msg)> = VecDeque::new();
+        let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+        let mut comps: Vec<QueryResult> = Vec::new();
+
+        for item in workload.items {
+            let qt = Timer::start();
+            let item_qid = item.qid();
+            stages.head.on_msg(item, &mut emitted);
+            for (dest, msg) in emitted.drain(..) {
+                meter.send(
+                    head_node,
+                    placement.node_of(dest.stage, dest.copy),
+                    msg.wire_size(),
+                );
+                queue.push_back((dest, msg));
+            }
+            // Drain to quiescence (FIFO, deterministic). Messages a handler
+            // emits are charged from its node.
+            while let Some((dest, msg)) = queue.pop_front() {
+                let handler_node = placement.node_of(dest.stage, dest.copy);
+                stage_mut(&mut stages, dest).on_msg(msg, &mut emitted);
+                for (d2, m2) in emitted.drain(..) {
+                    meter.send(
+                        handler_node,
+                        placement.node_of(d2.stage, d2.copy),
+                        m2.wire_size(),
+                    );
+                    queue.push_back((d2, m2));
+                }
+            }
+            for ag in stages.ags.iter_mut() {
+                ag.take_completions(&mut comps);
+            }
+            for (qid, hits) in comps.drain(..) {
+                for dp in stages.dps.iter_mut() {
+                    dp.on_query_done(qid);
+                }
+                results[qid as usize] = hits;
+            }
+            if let Some(qid) = item_qid {
+                per_query_secs[qid as usize] = qt.secs();
+            }
+        }
+        meter.flush();
+        ExecReport { results, per_query_secs, meter }
+    }
+}
+
+// ---------------------------------------------------------------- threaded
+
+/// What travels over a stage copy's channel: a routed message or the
+/// out-of-band per-query teardown control.
+enum Delivery {
+    Msg(Msg),
+    Done(u32),
+}
+
+/// Events flowing back to the admission loop.
+enum Event {
+    /// AG finished a query (completion instant taken on the AG thread).
+    Done(u32, Vec<(f32, u32)>, Instant),
+    /// A stage thread exited (normal cascade *or* unwind — sent from a
+    /// drop guard). Seeing this mid-phase means the pipeline is dying;
+    /// the admission loop stops and drains instead of blocking forever.
+    Stopped,
+}
+
+/// Downstream senders available to one stage copy. Following the dataflow
+/// DAG (head → BI → DP → AG) keeps sender ownership acyclic, which is what
+/// makes shutdown a clean cascade of channel closures.
+#[derive(Default)]
+struct Router {
+    bi: Vec<mpsc::Sender<Delivery>>,
+    dp: Vec<mpsc::Sender<Delivery>>,
+    ag: Vec<mpsc::Sender<Delivery>>,
+}
+
+impl Router {
+    /// Deliver to a stage copy. `false` means the receiver is gone
+    /// (shutdown or a died thread): the caller stops and drains.
+    fn send(&self, dest: Dest, d: Delivery) -> bool {
+        let txs = match dest.stage {
+            StageKind::Bi => &self.bi,
+            StageKind::Dp => &self.dp,
+            StageKind::Ag => &self.ag,
+            StageKind::Ir | StageKind::Qr => {
+                panic!("message routed upstream to {:?}", dest.stage)
+            }
+        };
+        match txs.get(dest.copy as usize) {
+            Some(tx) => tx.send(d).is_ok(),
+            None => panic!("no channel for {:?} copy {}", dest.stage, dest.copy),
+        }
+    }
+}
+
+/// Notifies the admission loop when its thread exits — including by panic,
+/// since `Drop` runs during unwinding.
+struct StopGuard {
+    tx: mpsc::Sender<Event>,
+}
+
+impl Drop for StopGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Event::Stopped);
+    }
+}
+
+/// Per-thread context for one stage copy.
+struct StageCtx {
+    rx: mpsc::Receiver<Delivery>,
+    router: Router,
+    events: mpsc::Sender<Event>,
+    my_node: u16,
+    agg_bytes: usize,
+}
+
+fn stage_thread(
+    handler: &mut (dyn StageHandler + '_),
+    placement: &Placement,
+    ctx: StageCtx,
+) -> TrafficMeter {
+    let _guard = StopGuard { tx: ctx.events.clone() };
+    let mut meter = TrafficMeter::new(ctx.agg_bytes);
+    let mut out: Vec<(Dest, Msg)> = Vec::new();
+    let mut comps: Vec<QueryResult> = Vec::new();
+    'recv: while let Ok(d) = ctx.rx.recv() {
+        match d {
+            Delivery::Msg(msg) => {
+                handler.on_msg(msg, &mut out);
+                for (dest, m) in out.drain(..) {
+                    meter.send(
+                        ctx.my_node,
+                        placement.node_of(dest.stage, dest.copy),
+                        m.wire_size(),
+                    );
+                    if !ctx.router.send(dest, Delivery::Msg(m)) {
+                        break 'recv;
+                    }
+                }
+                handler.take_completions(&mut comps);
+                for (qid, hits) in comps.drain(..) {
+                    if ctx
+                        .events
+                        .send(Event::Done(qid, hits, Instant::now()))
+                        .is_err()
+                    {
+                        break 'recv;
+                    }
+                }
+            }
+            Delivery::Done(qid) => handler.on_query_done(qid),
+        }
+    }
+    meter.flush();
+    meter
+}
+
+/// One thread per BI/DP/AG copy; head stage + admission on the calling
+/// thread. `Workload::window` selects closed-loop batched admission.
+pub struct ThreadedExecutor;
+
+impl Executor for ThreadedExecutor {
+    fn run(
+        &self,
+        placement: &Placement,
+        stages: StageHandlers<'_>,
+        workload: Workload<'_>,
+    ) -> ExecReport {
+        let agg = workload.agg_bytes;
+        let n_queries = workload.n_queries;
+        let window = workload.window;
+        let StageHandlers { mut head, bis, dps, ags } = stages;
+
+        let (bi_tx, bi_rx): (Vec<_>, Vec<_>) =
+            bis.iter().map(|_| mpsc::channel::<Delivery>()).unzip();
+        let (dp_tx, dp_rx): (Vec<_>, Vec<_>) =
+            dps.iter().map(|_| mpsc::channel::<Delivery>()).unzip();
+        let (ag_tx, ag_rx): (Vec<_>, Vec<_>) =
+            ags.iter().map(|_| mpsc::channel::<Delivery>()).unzip();
+        let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+
+        let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); n_queries];
+        let mut per_query_secs = vec![0f64; n_queries];
+        let mut merged = TrafficMeter::new(agg);
+
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (copy, (mut h, rx)) in ags.into_iter().zip(ag_rx).enumerate() {
+                let ctx = StageCtx {
+                    rx,
+                    router: Router::default(),
+                    events: ev_tx.clone(),
+                    my_node: placement.node_of(StageKind::Ag, copy as u16),
+                    agg_bytes: agg,
+                };
+                handles.push(s.spawn(move || stage_thread(h.as_mut(), placement, ctx)));
+            }
+            for (copy, (mut h, rx)) in dps.into_iter().zip(dp_rx).enumerate() {
+                let ctx = StageCtx {
+                    rx,
+                    router: Router { ag: ag_tx.clone(), ..Router::default() },
+                    events: ev_tx.clone(),
+                    my_node: placement.node_of(StageKind::Dp, copy as u16),
+                    agg_bytes: agg,
+                };
+                handles.push(s.spawn(move || stage_thread(h.as_mut(), placement, ctx)));
+            }
+            for (copy, (mut h, rx)) in bis.into_iter().zip(bi_rx).enumerate() {
+                let ctx = StageCtx {
+                    rx,
+                    router: Router {
+                        dp: dp_tx.clone(),
+                        ag: ag_tx.clone(),
+                        ..Router::default()
+                    },
+                    events: ev_tx.clone(),
+                    my_node: placement.node_of(StageKind::Bi, copy as u16),
+                    agg_bytes: agg,
+                };
+                handles.push(s.spawn(move || stage_thread(h.as_mut(), placement, ctx)));
+            }
+            drop(ev_tx);
+
+            // --- head stage + admission on this thread ---
+            let router = Router { bi: bi_tx, dp: dp_tx, ag: ag_tx };
+            let mut meter = TrafficMeter::new(agg);
+            let head_node = placement.head_node;
+            let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+            let mut dispatch_ts: Vec<Instant> = vec![Instant::now(); n_queries];
+            let mut items = workload.items.peekable();
+            let mut items_done = false;
+            let mut in_flight = 0usize;
+            let mut completed = 0usize;
+            let mut dying = false;
+
+            'admission: loop {
+                // Admit while the window allows. Items without a qid (index
+                // blocks) bypass the window entirely — only queries are
+                // throttled by the closed loop.
+                while !items_done && !dying {
+                    let next_is_query = match items.peek() {
+                        None => {
+                            items_done = true;
+                            break;
+                        }
+                        Some(m) => m.qid().is_some(),
+                    };
+                    if next_is_query && window != 0 && in_flight >= window {
+                        break; // wait for a completion before admitting
+                    }
+                    let item = items.next().expect("peeked non-empty");
+                    let item_qid = item.qid();
+                    head.on_msg(item, &mut emitted);
+                    if let Some(qid) = item_qid {
+                        dispatch_ts[qid as usize] = Instant::now();
+                        in_flight += 1;
+                    }
+                    for (dest, msg) in emitted.drain(..) {
+                        meter.send(
+                            head_node,
+                            placement.node_of(dest.stage, dest.copy),
+                            msg.wire_size(),
+                        );
+                        if !router.send(dest, Delivery::Msg(msg)) {
+                            dying = true;
+                            break;
+                        }
+                    }
+                }
+                if dying || (items_done && completed >= n_queries) {
+                    break 'admission;
+                }
+                match ev_rx.recv() {
+                    Ok(Event::Done(qid, hits, at)) => {
+                        per_query_secs[qid as usize] = at
+                            .duration_since(dispatch_ts[qid as usize])
+                            .as_secs_f64();
+                        results[qid as usize] = hits;
+                        completed += 1;
+                        in_flight = in_flight.saturating_sub(1);
+                        // Per-query teardown: DPs drop their dedup state.
+                        // Closed channels are fine here — those DPs are
+                        // already gone along with their state.
+                        for tx in &router.dp {
+                            let _ = tx.send(Delivery::Done(qid));
+                        }
+                    }
+                    Ok(Event::Stopped) => dying = true,
+                    Err(_) => break 'admission,
+                }
+            }
+            meter.flush();
+            merged.merge(&meter);
+
+            // Cascade shutdown: dropping the head's senders closes BI
+            // channels; BI exits drop DP senders; DP exits drop AG senders.
+            drop(router);
+
+            // Drain late completions while threads wind down.
+            while let Ok(ev) = ev_rx.recv() {
+                if let Event::Done(qid, hits, at) = ev {
+                    per_query_secs[qid as usize] = at
+                        .duration_since(dispatch_ts[qid as usize])
+                        .as_secs_f64();
+                    results[qid as usize] = hits;
+                }
+            }
+
+            for h in handles {
+                match h.join() {
+                    Ok(m) => merged.merge(&m),
+                    Err(panic) => std::panic::resume_unwind(panic),
+                }
+            }
+        });
+
+        ExecReport { results, per_query_secs, meter: merged }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn tiny_placement() -> Placement {
+        Placement {
+            bi_copies: 1,
+            dp_copies: 1,
+            ag_copies: 1,
+            bi_nodes: 1,
+            dp_nodes: 1,
+            head_node: 2,
+        }
+    }
+
+    fn qv(qid: u32) -> Msg {
+        let a: Arc<[f32]> = vec![0f32; 1].into();
+        Msg::QueryVec { qid, raw: a.clone(), v: a }
+    }
+
+    /// Head that fans each query out to DP 0 (payload) and AG 0 (trigger).
+    struct RelayHead;
+    impl StageHandler for RelayHead {
+        fn on_msg(&mut self, msg: Msg, out: Emit) {
+            let qid = msg.qid().expect("RelayHead only takes queries");
+            let v: Arc<[f32]> = vec![0f32; 1].into();
+            out.push((Dest::dp(0), Msg::CandidateReq { qid, ids: Vec::new(), v }));
+            out.push((Dest::ag(0), Msg::QueryMeta { qid, n_bi: 0 }));
+        }
+    }
+
+    /// DP that tracks how many queries are in flight (msg seen, no Done yet).
+    struct CountingDp {
+        in_flight: usize,
+        max_in_flight: usize,
+        done_seen: usize,
+    }
+    impl StageHandler for CountingDp {
+        fn on_msg(&mut self, _msg: Msg, _out: Emit) {
+            self.in_flight += 1;
+            self.max_in_flight = self.max_in_flight.max(self.in_flight);
+        }
+        fn on_query_done(&mut self, _qid: u32) {
+            self.in_flight -= 1;
+            self.done_seen += 1;
+        }
+    }
+
+    /// AG that completes every query on sight.
+    struct InstantAg {
+        finished: Vec<QueryResult>,
+    }
+    impl StageHandler for InstantAg {
+        fn on_msg(&mut self, msg: Msg, _out: Emit) {
+            let qid = msg.qid().unwrap();
+            self.finished.push((qid, vec![(0.0, qid)]));
+        }
+        fn take_completions(&mut self, out: &mut Vec<QueryResult>) {
+            out.append(&mut self.finished);
+        }
+    }
+
+    /// BI that dies on the first message (shutdown-path test).
+    struct PanicBi;
+    impl StageHandler for PanicBi {
+        fn on_msg(&mut self, _msg: Msg, _out: Emit) {
+            panic!("injected BI failure");
+        }
+    }
+
+    struct NoopStage;
+    impl StageHandler for NoopStage {
+        fn on_msg(&mut self, _msg: Msg, _out: Emit) {}
+    }
+
+    /// Forwarding impl so tests can keep ownership of a handler's state
+    /// while the executor drives it.
+    impl<H: StageHandler> StageHandler for &mut H {
+        fn on_msg(&mut self, msg: Msg, out: Emit) {
+            (**self).on_msg(msg, out)
+        }
+        fn take_completions(&mut self, out: &mut Vec<QueryResult>) {
+            (**self).take_completions(out)
+        }
+        fn on_query_done(&mut self, qid: u32) {
+            (**self).on_query_done(qid)
+        }
+    }
+
+    fn boxed<'a, H: StageHandler + 'a>(h: H) -> Box<dyn StageHandler + 'a> {
+        Box::new(h)
+    }
+
+    fn run_counting(
+        exec: &dyn Executor,
+        n: usize,
+        window: usize,
+    ) -> (usize, usize, ExecReport) {
+        let placement = tiny_placement();
+        let mut dp = CountingDp { in_flight: 0, max_in_flight: 0, done_seen: 0 };
+        let mut items = (0..n as u32).map(qv);
+        let report = {
+            let stages = StageHandlers {
+                head: boxed(RelayHead),
+                bis: vec![boxed(NoopStage)],
+                dps: vec![boxed(&mut dp)],
+                ags: vec![boxed(InstantAg { finished: Vec::new() })],
+            };
+            exec.run(
+                &placement,
+                stages,
+                Workload { items: &mut items, n_queries: n, window, agg_bytes: 0 },
+            )
+        };
+        (dp.max_in_flight, dp.done_seen, report)
+    }
+
+    #[test]
+    fn batched_admission_bounds_in_flight_queries() {
+        for window in [1usize, 3] {
+            let (max_if, done, report) = run_counting(&ThreadedExecutor, 12, window);
+            assert_eq!(done, 12, "window {window}: all queries torn down");
+            assert!(
+                max_if <= window,
+                "window {window}: {max_if} queries were in flight"
+            );
+            assert_eq!(report.results.len(), 12);
+            for (qid, r) in report.results.iter().enumerate() {
+                assert_eq!(r.as_slice(), &[(0.0, qid as u32)]);
+            }
+            assert!(report.per_query_secs.iter().all(|&s| s > 0.0));
+        }
+    }
+
+    #[test]
+    fn open_loop_and_inline_complete_everything() {
+        let (_, done, report) = run_counting(&ThreadedExecutor, 8, 0);
+        assert_eq!(done, 8);
+        assert_eq!(report.results.len(), 8);
+        let (max_if, done, report) = run_counting(&InlineExecutor, 8, 0);
+        // Inline drains each query before admitting the next.
+        assert_eq!((max_if, done), (1, 8));
+        assert_eq!(report.results.len(), 8);
+    }
+
+    #[test]
+    fn threaded_empty_workload_shuts_down_cleanly() {
+        let placement = tiny_placement();
+        let mut items = std::iter::empty::<Msg>();
+        let stages = StageHandlers {
+            head: boxed(RelayHead),
+            bis: vec![boxed(NoopStage)],
+            dps: vec![boxed(NoopStage)],
+            ags: vec![boxed(NoopStage)],
+        };
+        let report = ThreadedExecutor.run(
+            &placement,
+            stages,
+            Workload { items: &mut items, n_queries: 0, window: 4, agg_bytes: 0 },
+        );
+        assert_eq!(report.meter.logical_msgs, 0);
+        assert!(report.results.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "injected BI failure")]
+    fn dead_stage_thread_resurfaces_its_panic_instead_of_hanging() {
+        struct BiHead;
+        impl StageHandler for BiHead {
+            fn on_msg(&mut self, msg: Msg, out: Emit) {
+                let qid = msg.qid().unwrap();
+                let v: Arc<[f32]> = vec![0f32; 1].into();
+                out.push((Dest::bi(0), Msg::Query { qid, probes: Vec::new(), v }));
+            }
+        }
+        let placement = tiny_placement();
+        // Window 1 forces the admission loop to *wait* on a completion that
+        // can never arrive; the StopGuard event is what unblocks it.
+        let mut items = (0..4u32).map(qv);
+        let stages = StageHandlers {
+            head: boxed(BiHead),
+            bis: vec![boxed(PanicBi)],
+            dps: vec![boxed(NoopStage)],
+            ags: vec![boxed(NoopStage)],
+        };
+        ThreadedExecutor.run(
+            &placement,
+            stages,
+            Workload { items: &mut items, n_queries: 4, window: 1, agg_bytes: 0 },
+        );
+    }
+
+    #[test]
+    fn non_query_items_bypass_the_admission_window() {
+        // Head: queries register at AG; non-qid items tell AG to flush
+        // (complete) everything pending. A query can therefore only
+        // complete after the non-qid item *behind it* is admitted — under
+        // a window that wrongly gated non-qid items this would deadlock.
+        struct FlushHead;
+        impl StageHandler for FlushHead {
+            fn on_msg(&mut self, msg: Msg, out: Emit) {
+                match msg.qid() {
+                    Some(qid) => out.push((Dest::ag(0), Msg::QueryMeta { qid, n_bi: 0 })),
+                    None => out.push((Dest::ag(0), Msg::BiMeta { qid: 0, n_dp: 0 })),
+                }
+            }
+        }
+        struct GatedAg {
+            pending: Vec<u32>,
+            finished: Vec<QueryResult>,
+        }
+        impl StageHandler for GatedAg {
+            fn on_msg(&mut self, msg: Msg, _out: Emit) {
+                match msg {
+                    Msg::QueryMeta { qid, .. } => self.pending.push(qid),
+                    Msg::BiMeta { .. } => {
+                        for qid in self.pending.drain(..) {
+                            self.finished.push((qid, Vec::new()));
+                        }
+                    }
+                    other => panic!("GatedAg got {other:?}"),
+                }
+            }
+            fn take_completions(&mut self, out: &mut Vec<QueryResult>) {
+                out.append(&mut self.finished);
+            }
+        }
+
+        let placement = tiny_placement();
+        let flush = || {
+            let flat: Arc<[f32]> = Vec::new().into();
+            Msg::IndexBlock { id_base: 0, rows: 0, flat }
+        };
+        let mut items = vec![qv(0), flush(), qv(1), flush()].into_iter();
+        let stages = StageHandlers {
+            head: boxed(FlushHead),
+            bis: vec![boxed(NoopStage)],
+            dps: vec![boxed(NoopStage)],
+            ags: vec![boxed(GatedAg { pending: Vec::new(), finished: Vec::new() })],
+        };
+        let report = ThreadedExecutor.run(
+            &placement,
+            stages,
+            Workload { items: &mut items, n_queries: 2, window: 1, agg_bytes: 0 },
+        );
+        assert_eq!(report.results.len(), 2);
+        assert!(report.per_query_secs.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn inline_meters_cross_node_traffic_only() {
+        // RelayHead emits from the head node to DP node 1 and AG on the
+        // head node itself: one metered hop + one local delivery per query.
+        let (_, _, report) = run_counting(&InlineExecutor, 5, 0);
+        assert_eq!(report.meter.logical_msgs, 5);
+        assert_eq!(report.meter.local_msgs, 5);
+    }
+}

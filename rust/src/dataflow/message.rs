@@ -36,8 +36,19 @@ impl Dest {
 }
 
 /// Inter-stage message payloads.
+///
+/// The first two variants are *ingress* messages: the executor delivers
+/// them to the head stage (IR for build, QR for search) straight from the
+/// workload, so they never cross the network and are not metered.
 #[derive(Clone, Debug)]
 pub enum Msg {
+    /// Driver → IR: index a block of `rows` vectors (flat `[rows*dim]`)
+    /// with global ids starting at `id_base`.
+    IndexBlock { id_base: u32, rows: u32, flat: Arc<[f32]> },
+    /// Driver → QR: dispatch one query. `raw` holds the precomputed raw
+    /// projections (the drivers hash the whole query set through one
+    /// batched artifact call); `v` is the query vector itself.
+    QueryVec { qid: u32, raw: Arc<[f32]>, v: Arc<[f32]> },
     /// (i) IR → DP: store one reference object. No replication: exactly one
     /// DP copy ever receives a given object.
     StoreObject { id: u32, v: Arc<[f32]> },
@@ -62,6 +73,8 @@ impl Msg {
     /// 8-byte keys, 1-byte table ids; headers charged by the packet layer).
     pub fn wire_size(&self) -> usize {
         match self {
+            Msg::IndexBlock { flat, .. } => 8 + 4 * flat.len(),
+            Msg::QueryVec { raw, v, .. } => 4 + 4 * raw.len() + 4 * v.len(),
             Msg::StoreObject { v, .. } => 4 + 4 * v.len(),
             Msg::IndexRef { .. } => 1 + 8 + 4 + 2,
             Msg::Query { probes, v, .. } => 4 + probes.len() * 9 + 4 * v.len(),
@@ -75,7 +88,8 @@ impl Msg {
     /// Query id if this message belongs to a query computation.
     pub fn qid(&self) -> Option<u32> {
         match self {
-            Msg::Query { qid, .. }
+            Msg::QueryVec { qid, .. }
+            | Msg::Query { qid, .. }
             | Msg::CandidateReq { qid, .. }
             | Msg::QueryMeta { qid, .. }
             | Msg::BiMeta { qid, .. }
@@ -103,6 +117,15 @@ mod tests {
             Msg::IndexRef { table: 0, key: 0, id: 0, dp: 0 }.wire_size(),
             15
         );
+    }
+
+    #[test]
+    fn ingress_messages_carry_qid_only_for_queries() {
+        let ib = Msg::IndexBlock { id_base: 0, rows: 2, flat: arcv(8) };
+        assert_eq!(ib.qid(), None);
+        assert_eq!(ib.wire_size(), 8 + 32);
+        let qv = Msg::QueryVec { qid: 4, raw: arcv(2), v: arcv(4) };
+        assert_eq!(qv.qid(), Some(4));
     }
 
     #[test]

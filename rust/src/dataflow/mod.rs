@@ -7,10 +7,16 @@
 //! placed on cluster nodes by [`Placement`]; only messages crossing a node
 //! boundary count as network traffic, and the stream layer aggregates small
 //! messages into packets exactly as the paper's buffered labeled-streams do.
+//!
+//! How messages *move* between copies is the [`exec`] module's concern: the
+//! transport-agnostic [`exec::Executor`] seam with its inline (deterministic
+//! FIFO) and threaded (channels + batched admission) implementations.
 
+pub mod exec;
 pub mod message;
 pub mod metrics;
 
+pub use exec::{Executor, InlineExecutor, StageHandler, ThreadedExecutor};
 pub use message::{Dest, Msg, StageKind};
 pub use metrics::{LinkStats, TrafficMeter, WorkStats};
 

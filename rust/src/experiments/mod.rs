@@ -504,6 +504,71 @@ pub fn ablation_async() -> Table {
     table
 }
 
+// ---------------------------------------------------- executor comparison
+
+/// Inline vs threaded (open loop) vs threaded (batched admission): the same
+/// build + search workload through each transport of the executor seam
+/// (DESIGN.md §Executor seam). Reports build wall time, search throughput
+/// and completion-latency percentiles; results must agree across rows (the
+/// differential tests assert it), only the time axis moves.
+pub fn executor_comparison() -> Table {
+    use crate::coordinator::{build_index_on, search_on};
+    use crate::dataflow::exec::{Executor, InlineExecutor, ThreadedExecutor};
+    use crate::metrics::latency_stats;
+
+    let mut cfg = Config::default();
+    cfg.cluster.bi_nodes = 2;
+    cfg.cluster.dp_nodes = 8;
+    cfg.lsh.t = 16;
+    cfg.data.n = env_usize("PARLSH_N", 60_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 300);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let window = env_usize("PARLSH_INFLIGHT", 8);
+    let w = world(&cfg);
+    let b = backends(&cfg, w.data.dim);
+
+    let mut table = Table::new(&[
+        "executor",
+        "build (s)",
+        "search q/s",
+        "mean ms",
+        "p99 ms",
+        "recall",
+    ]);
+    let rows: [(&str, &dyn Executor, usize); 3] = [
+        ("inline", &InlineExecutor, 0),
+        ("threaded (open loop)", &ThreadedExecutor, 0),
+        ("threaded (batched)", &ThreadedExecutor, window),
+    ];
+    for (name, exec, inflight) in rows {
+        cfg.stream.inflight = inflight;
+        let mut cluster = build_index_on(exec, &cfg, &w.data, b.hasher.as_ref());
+        let out = search_on(
+            exec,
+            &mut cluster,
+            &w.queries,
+            b.hasher.as_ref(),
+            b.ranker.as_ref(),
+        );
+        let lat = latency_stats(&out.per_query_secs);
+        let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+        let label = if inflight > 0 {
+            format!("{name} W={inflight}")
+        } else {
+            name.to_string()
+        };
+        table.row(&[
+            label,
+            format!("{:.2}", cluster.build_wall_secs),
+            format!("{:.1}", w.queries.len() as f64 / out.wall_secs),
+            format!("{:.2}", lat.mean_ms),
+            format!("{:.2}", lat.p99_ms),
+            format!("{recall:.3}"),
+        ]);
+    }
+    table
+}
+
 /// Table I stand-in: the synthetic dataset inventory.
 pub fn datasets_table() -> Table {
     let mut table = Table::new(&["name", "reference size", "queries", "dim", "stands in for"]);

@@ -18,10 +18,15 @@
 //!   Z-order curves, top-k;
 //! * [`data`] — synthetic clustered SIFT-like datasets, BIGANN file IO,
 //!   ground truth and recall;
-//! * [`dataflow`] — stages, labeled streams, message aggregation, exact
-//!   per-link traffic accounting;
+//! * [`dataflow`] — labeled streams, message aggregation, exact per-link
+//!   traffic accounting, and the transport-agnostic executor seam
+//!   ([`dataflow::exec`]): the same five stage handlers run on the
+//!   deterministic inline FIFO executor (the differential-testing oracle)
+//!   or the threaded executor (thread per stage copy, typed shutdown,
+//!   closed-loop batched query admission via `Config::stream.inflight`) —
+//!   for **both** index build and search (DESIGN.md §Executor seam);
 //! * [`stages`] + [`coordinator`] — the five paper stages and the
-//!   build/search drivers;
+//!   build/search drivers (`build_index[_on]`, `search[_on]`);
 //! * [`partition`] — mod / Z-order / LSH `obj_map` + `bucket_map` strategies;
 //! * [`simnet`] — the calibrated cluster cost model standing in for the
 //!   paper's 60-node InfiniBand testbed (see DESIGN.md §Substitutions);

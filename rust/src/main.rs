@@ -5,7 +5,8 @@
 //! parlsh search  [--config=FILE] [--set k=v]...   build + search + recall
 //! parlsh serve   [--config=FILE] [--set k=v]...   threaded serving run
 //! parlsh experiment <id>                          regenerate a paper table
-//!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation all
+//!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation
+//!             executors all
 //! parlsh calibrate                                measure cost-model consts
 //! ```
 
@@ -56,12 +57,17 @@ USAGE:
   parlsh build      [--config=FILE] [--set section.key=value]...
   parlsh search     [--config=FILE] [--set ...]      inline executor
   parlsh serve      [--config=FILE] [--set ...]      threaded executor
-  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|all>
+  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|all>
   parlsh tune       [--target=0.8] [--set ...]    suggest w, tune T (and M)
   parlsh calibrate
 
+`serve` admission: --set stream.inflight=W bounds in-flight queries
+(closed loop); 0 = open loop (default).
+
 Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
-scalar path; PARLSH_ARTIFACTS points at the AOT artifact dir.
+scalar path; PARLSH_ARTIFACTS points at the AOT artifact dir;
+PARLSH_INFLIGHT sets the batched-admission window of `experiment
+executors`.
 ";
 
 fn cmd_build(args: &Args) -> Result<()> {
@@ -117,8 +123,13 @@ fn cmd_search(args: &Args, threaded: bool) -> Result<()> {
     let secs = t.secs();
     let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
     let lat = latency_stats(&out.per_query_secs);
+    let admission = match (threaded, cfg.stream.inflight) {
+        (false, _) => String::new(),
+        (true, 0) => ", open loop".to_string(),
+        (true, w) => format!(", closed loop W={w}"),
+    };
     println!(
-        "searched {} queries in {:.2}s ({:.1} q/s, {} executor, {} path)",
+        "searched {} queries in {:.2}s ({:.1} q/s, {} executor{admission}, {} path)",
         w.queries.len(),
         secs,
         w.queries.len() as f64 / secs,
@@ -179,12 +190,19 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 println!("== §V-B ablation (intra-stage parallelism) ==");
                 exp::ablation_intrastage().print();
             }
+            "executors" => {
+                println!("== Executor comparison (inline / threaded / batched) ==");
+                exp::executor_comparison().print();
+            }
             other => bail!("unknown experiment `{other}`"),
         }
         Ok(())
     };
     if id == "all" {
-        for id in ["datasets", "fig3", "fig4", "table3", "fig5", "fig6", "ablation"] {
+        for id in [
+            "datasets", "fig3", "fig4", "table3", "fig5", "fig6", "ablation",
+            "executors",
+        ] {
             run(id)?;
             println!();
         }

@@ -1,0 +1,76 @@
+//! Stub for [`crate::runtime::engine`] when the `pjrt` feature is off.
+//!
+//! The real engine compiles AOT HLO artifacts through the `xla` bindings,
+//! which are not available in every build environment. This stub keeps the
+//! API surface (`Engine`, `EngineHasher`, `EngineRanker`, `EngineStats`)
+//! so callers compile unchanged: [`Engine::load`] always returns an error,
+//! the drivers print "artifacts unavailable" and use the scalar path, and
+//! the artifact-path integration tests skip themselves.
+
+use crate::core::lsh::HashFamily;
+use crate::runtime::{Hasher, Ranker};
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// Execution counters (mirrors the real engine's accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub hash_calls: u64,
+    pub hash_rows: u64,
+    pub hash_padded_rows: u64,
+    pub rank_calls: u64,
+    pub rank_rows: u64,
+    pub rank_padded_rows: u64,
+}
+
+/// Unconstructible stand-in for the PJRT engine.
+pub struct Engine {
+    pub stats: Mutex<EngineStats>,
+    _private: (),
+}
+
+impl Engine {
+    pub fn load(_dir: &str) -> Result<Engine> {
+        bail!("built without the `pjrt` feature: the xla bindings are not vendored here; rebuild with `--features pjrt` on a machine that has them")
+    }
+
+    pub fn dim(&self) -> usize {
+        unreachable!("stub Engine cannot be constructed")
+    }
+
+    pub fn set_family(&self, _family: &HashFamily) -> Result<()> {
+        unreachable!("stub Engine cannot be constructed")
+    }
+}
+
+/// Stub of the artifact-backed [`Hasher`].
+pub struct EngineHasher {
+    pub engine: Arc<Engine>,
+    pub p_used: usize,
+}
+
+impl Hasher for EngineHasher {
+    fn dim(&self) -> usize {
+        unreachable!("stub Engine cannot be constructed")
+    }
+    fn p(&self) -> usize {
+        self.p_used
+    }
+    fn hash_batch(&self, _x: &[f32], _rows: usize) -> Vec<i32> {
+        unreachable!("stub Engine cannot be constructed")
+    }
+    fn proj_batch(&self, _x: &[f32], _rows: usize) -> Vec<f32> {
+        unreachable!("stub Engine cannot be constructed")
+    }
+}
+
+/// Stub of the artifact-backed [`Ranker`].
+pub struct EngineRanker {
+    pub engine: Arc<Engine>,
+}
+
+impl Ranker for EngineRanker {
+    fn rank(&self, _q: &[f32], _cands: &[f32], _n: usize, _k: usize) -> Vec<(f32, u32)> {
+        unreachable!("stub Engine cannot be constructed")
+    }
+}

@@ -10,6 +10,13 @@
 //!   are padded up to the nearest variant.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
+pub mod engine;
+/// Stub engine when built without the `pjrt` feature (no `xla` crate):
+/// `Engine::load` always errors, so every driver falls back to the scalar
+/// path. The API surface matches the real engine.
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 use crate::core::lsh::HashFamily;

@@ -1,10 +1,12 @@
 //! The five dataflow stages (paper Figure 2).
 //!
 //! Stage logic is written as pure message handlers — `handle(msg, emit)` —
-//! so the same code runs under the deterministic inline executor used by the
-//! experiment harness and under the threaded executor used by the serving
-//! example. `emit` collects `(Dest, Msg)` pairs; the executor routes them
-//! and charges the traffic meter.
+//! so the same code runs under any [`crate::dataflow::exec::Executor`]:
+//! the deterministic inline executor and the threaded executor both drive
+//! these states through the uniform
+//! [`StageHandler`](crate::dataflow::exec::StageHandler) bindings, for
+//! index build and search alike. `emit` collects `(Dest, Msg)` pairs; the
+//! executor routes them and charges the traffic meter.
 
 pub mod aggregator;
 pub mod bucket_index;

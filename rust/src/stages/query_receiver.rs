@@ -63,6 +63,19 @@ impl<'a> QueryReceiver<'a> {
         q: &[f32],
         out: Emit,
     ) -> usize {
+        self.dispatch_query_arc(raw, qid, q.into(), out)
+    }
+
+    /// `Arc`-taking variant of [`Self::dispatch_query_raw`]: the executor
+    /// workload already carries the query vector behind an `Arc`
+    /// ([`Msg::QueryVec`]), so dispatching it re-uses that allocation.
+    pub fn dispatch_query_arc(
+        &mut self,
+        raw: &[f32],
+        qid: u32,
+        v: Arc<[f32]>,
+        out: Emit,
+    ) -> usize {
         let probes = self.probe_keys(raw);
         let mut by_bi: HashMap<u16, Vec<(u8, u64)>> = HashMap::new();
         for (table, key) in probes {
@@ -72,7 +85,6 @@ impl<'a> QueryReceiver<'a> {
                 .push((table, key));
         }
         let n_bi = by_bi.len();
-        let v: Arc<[f32]> = q.into();
         // Deterministic dispatch order (BTreeMap-like): sort by copy.
         let mut entries: Vec<_> = by_bi.into_iter().collect();
         entries.sort_by_key(|(copy, _)| *copy);

@@ -1,9 +1,11 @@
 //! Hand-rolled substrates: PRNG, CLI parsing, config files, threadpool,
 //! timers, and a miniature property-testing harness.
 //!
-//! This environment has no crate registry access beyond the vendored
-//! `xla`/`anyhow` set, so the usual suspects (rand, clap, serde/toml, rayon,
-//! criterion, proptest) are implemented here at the scale this project needs.
+//! This environment has no crate registry access: `anyhow` is vendored as a
+//! path crate (`rust/vendor/anyhow`), the `xla` PJRT bindings are gated
+//! behind the `pjrt` feature, and the usual suspects (rand, clap,
+//! serde/toml, rayon, criterion, proptest) are implemented here at the
+//! scale this project needs.
 
 pub mod cli;
 pub mod configfile;

@@ -4,7 +4,8 @@
 
 use parlsh::baseline::SequentialLsh;
 use parlsh::config::Config;
-use parlsh::coordinator::{build_index, search, threaded::search_threaded};
+use parlsh::coordinator::{build_index, build_index_on, search, threaded::search_threaded};
+use parlsh::dataflow::exec::ThreadedExecutor;
 use parlsh::core::lsh::{HashFamily, LshParams};
 use parlsh::data::groundtruth::ground_truth_scalar;
 use parlsh::data::recall::recall_at_k;
@@ -108,6 +109,36 @@ fn threaded_executor_differential() {
         let want: Vec<u32> = seq_res.iter().map(|&(_, id)| id).collect();
         assert_eq!(ids, want, "query {qi}");
     }
+}
+
+#[test]
+fn threaded_build_and_batched_search_equal_sequential() {
+    // The whole pipeline on the threaded executor — build *and* search —
+    // with closed-loop admission and multiple aggregators must still equal
+    // the sequential oracle.
+    let mut cfg = config(3, 8, 8);
+    cfg.cluster.ag_copies = 2;
+    cfg.stream.inflight = 4;
+    let ds = synthesize(SynthSpec { n: 2_000, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 20, 5.0, 21);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = ScalarHasher { family };
+    let ranker = ScalarRanker { dim: ds.dim };
+
+    let mut cluster = build_index_on(&ThreadedExecutor, &cfg, &ds, &hasher);
+    assert_eq!(cluster.stored_objects(), ds.len());
+    assert_eq!(cluster.bucket_references(), ds.len() * cfg.lsh.l);
+    let out = search_threaded(&mut cluster, &qs, &hasher, &ranker);
+
+    let seq = SequentialLsh::build(&ds, cfg.lsh);
+    for qi in 0..qs.len() {
+        let (seq_res, _) = seq.search(qs.get(qi), cfg.lsh.t, cfg.lsh.k);
+        let ids: Vec<u32> = out.results[qi].iter().map(|&(_, id)| id).collect();
+        let want: Vec<u32> = seq_res.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids, want, "query {qi}");
+    }
+    // every query got a completion latency
+    assert!(out.per_query_secs.iter().all(|&s| s > 0.0));
 }
 
 #[test]

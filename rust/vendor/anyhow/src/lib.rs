@@ -1,0 +1,130 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! This environment has no crate-registry access, so the exact `anyhow`
+//! surface the workspace uses — [`Error`], [`Result`], [`anyhow!`],
+//! [`bail!`], [`Context`] — is implemented here as a path dependency.
+//! Errors are a flattened message chain (context prepends, `:`-separated),
+//! which matches how the callers format them (`{e}` / `{e:#}`).
+
+use std::fmt;
+
+/// A flattened error: the message chain, outermost context first.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context, mirroring `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real `anyhow`, this relies on `Error` NOT implementing
+// `std::error::Error`, which keeps the blanket impl coherent with the
+// std identity `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` (any displayable error type).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("boom"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = io_err().with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: boom");
+        let e2 = io_err().context("open").unwrap_err();
+        assert_eq!(e2.to_string(), "open: boom");
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "x";
+        let e = anyhow!("missing {name} at {}", 7);
+        assert_eq!(e.to_string(), "missing x at 7");
+        let e = anyhow!("plain {name}");
+        assert_eq!(e.to_string(), "plain x");
+        let s = String::from("from-expr");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "from-expr");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+    }
+}
