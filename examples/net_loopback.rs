@@ -1,0 +1,83 @@
+//! Real multi-process distribution demo: the same build + search pipeline
+//! the other examples run in-process, here spread across OS processes over
+//! loopback TCP (DESIGN.md §Transports) — one `parlsh worker` per BI/DP
+//! node, this process as the paper's head node.
+//!
+//! Needs the `parlsh` binary for the workers, so build it first:
+//!
+//! ```bash
+//! cargo build --release && cargo run --release --example net_loopback
+//! ```
+
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index_on, search_on};
+use parlsh::data::recall::recall_at_k;
+use parlsh::experiments::{backends, env_usize, world};
+use parlsh::net::NetSession;
+
+fn main() {
+    let mut cfg = Config::default();
+    // 1 BI node + 2 DP nodes = 3 worker processes + this driver.
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.lsh.t = 16;
+    cfg.stream.inflight = 8; // closed-loop admission over the wire
+    cfg.data.n = env_usize("PARLSH_N", 20_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 100);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+
+    let w = world(&cfg);
+    let b = backends(&cfg, w.data.dim);
+
+    // Examples are their own binaries, so point the launcher at `parlsh`
+    // (built into the same target directory) unless the caller already set
+    // PARLSH_WORKER_BIN.
+    if std::env::var("PARLSH_WORKER_BIN").is_err() {
+        let bin = std::env::current_exe()
+            .ok()
+            .and_then(|p| Some(p.parent()?.parent()?.join("parlsh")))
+            .filter(|p| p.exists());
+        match bin {
+            Some(p) => std::env::set_var("PARLSH_WORKER_BIN", p),
+            None => {
+                eprintln!("parlsh binary not found next to this example;");
+                eprintln!("run `cargo build --release` first (or set PARLSH_WORKER_BIN)");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let sess = NetSession::launch(&cfg, w.data.dim).expect("launch workers");
+    println!(
+        "cluster up: {} worker processes + driver (head node)",
+        cfg.cluster.bi_nodes + cfg.cluster.dp_nodes
+    );
+
+    let mut cluster = build_index_on(sess.executor(), &cfg, &w.data, b.hasher.as_ref());
+    println!(
+        "built {} vectors across the wire in {:.2}s — {:.3} MB of real frames",
+        w.data.len(),
+        cluster.build_wall_secs,
+        cluster.build_meter.total_bytes() as f64 / 1e6,
+    );
+
+    let out = search_on(
+        sess.executor(),
+        &mut cluster,
+        &w.queries,
+        b.hasher.as_ref(),
+        b.ranker.as_ref(),
+    );
+    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+    println!(
+        "searched {} queries: recall@{} = {recall:.3}, {:.3} MB on the wire ({} tcp packets)",
+        w.queries.len(),
+        cfg.lsh.k,
+        out.meter.total_bytes() as f64 / 1e6,
+        out.meter.total_packets(),
+    );
+    print!("{}", out.meter.link_report());
+
+    sess.shutdown().expect("clean shutdown");
+    println!("all workers exited cleanly");
+}

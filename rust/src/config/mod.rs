@@ -103,6 +103,33 @@ impl Default for NetParams {
     }
 }
 
+/// Socket-transport settings (`crate::net`, DESIGN.md §Transports). Shares
+/// the `[net]` config section with the simnet model constants above: those
+/// describe the *modeled* network, these the *real* one.
+#[derive(Clone, Debug)]
+pub struct SocketConfig {
+    /// Listen address for `parlsh worker` (port 0 = OS-assigned; the worker
+    /// prints the bound address so the launcher can connect).
+    pub listen: String,
+    /// Connection attempts before giving up (driver→worker, worker→worker).
+    pub connect_retries: usize,
+    /// Backoff between connection attempts, milliseconds.
+    pub retry_ms: u64,
+    /// Cap on a single decoded frame (corrupted-length guard).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        SocketConfig {
+            listen: "127.0.0.1:0".into(),
+            connect_retries: 40,
+            retry_ms: 25,
+            max_frame_bytes: 64 << 20,
+        }
+    }
+}
+
 /// Dataset configuration.
 #[derive(Clone, Debug)]
 pub struct DataConfig {
@@ -179,6 +206,7 @@ pub struct Config {
     pub lsh: LshParams,
     pub cluster: ClusterConfig,
     pub net: NetParams,
+    pub sock: SocketConfig,
     pub data: DataConfig,
     pub stream: StreamConfig,
     pub runtime: RuntimeConfig,
@@ -206,6 +234,12 @@ impl Config {
         c.net = NetParams {
             latency_us: doc.f64_or("net.latency_us", c.net.latency_us),
             bandwidth_gbps: doc.f64_or("net.bandwidth_gbps", c.net.bandwidth_gbps),
+        };
+        c.sock = SocketConfig {
+            listen: doc.str_or("net.listen", &c.sock.listen),
+            connect_retries: doc.usize_or("net.connect_retries", c.sock.connect_retries),
+            retry_ms: doc.usize_or("net.retry_ms", c.sock.retry_ms as usize) as u64,
+            max_frame_bytes: doc.usize_or("net.max_frame_bytes", c.sock.max_frame_bytes),
         };
         c.data = DataConfig {
             source: doc.str_or("data.source", &c.data.source),
@@ -281,6 +315,23 @@ mod tests {
         assert_eq!(c.stream.inflight, 16);
         // default stays open loop
         assert_eq!(Config::default().stream.inflight, 0);
+    }
+
+    #[test]
+    fn socket_config_parses() {
+        let c = Config::default();
+        assert_eq!(c.sock.listen, "127.0.0.1:0");
+        assert_eq!(c.sock.max_frame_bytes, 64 << 20);
+        let doc = Doc::parse(
+            "[net]\nlisten = \"0.0.0.0:7400\"\nconnect_retries = 5\nmax_frame_bytes = 1024\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.sock.listen, "0.0.0.0:7400");
+        assert_eq!(c.sock.connect_retries, 5);
+        assert_eq!(c.sock.max_frame_bytes, 1024);
+        // the simnet model constants share the section and keep their keys
+        assert!((c.net.latency_us - 1.7).abs() < 1e-9);
     }
 
     #[test]

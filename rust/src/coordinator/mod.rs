@@ -6,7 +6,12 @@
 //! deterministic [`InlineExecutor`] (FIFO delivery, results bit-identical to
 //! the sequential baseline — the differential-testing contract in
 //! `rust/tests/integration_pipeline.rs`), while [`build_index_on`]/
-//! [`search_on`] accept the threaded executor (or any future transport).
+//! [`search_on`] accept the threaded executor or the multi-process socket
+//! executor (`crate::net::SocketExecutor`). Under the socket transport the
+//! placement handed to each phase is the launch-time placement: BI/DP state
+//! lives in the worker processes, so this `Cluster`'s `bis`/`dps` stay
+//! empty — snapshot workers with `NetSession::fetch_state` instead
+//! (`rust/tests/integration_net.rs` is that differential contract).
 //! Network traffic is attributed by the executor via [`TrafficMeter`] using
 //! the stage placement — same-node deliveries are free, which is exactly how
 //! intra-stage parallelism cuts message counts.

@@ -1,8 +1,9 @@
 //! The transport-agnostic dataflow runtime (DESIGN.md §Executor seam).
 //!
 //! The paper's five stages (IR/QR/BI/DP/AG) are *message handlers*; how
-//! messages move between them — inline FIFO, threads and channels, or some
-//! future simnet-timed/RPC transport — is an [`Executor`]. Every driver
+//! messages move between them — inline FIFO, threads and channels, or real
+//! TCP sockets across OS processes (`crate::net::SocketExecutor`, DESIGN.md
+//! §Transports) — is an [`Executor`]. Every driver
 //! (index build, search, online insert, experiments, benches) goes through
 //! this one seam, so stage-routing logic exists exactly once.
 //!

@@ -23,6 +23,30 @@ pub struct Dest {
     pub copy: u16,
 }
 
+impl StageKind {
+    /// Canonical one-byte code used by the socket wire format (`net::wire`).
+    pub fn code(self) -> u8 {
+        match self {
+            StageKind::Ir => 0,
+            StageKind::Qr => 1,
+            StageKind::Bi => 2,
+            StageKind::Dp => 3,
+            StageKind::Ag => 4,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<StageKind> {
+        match code {
+            0 => Some(StageKind::Ir),
+            1 => Some(StageKind::Qr),
+            2 => Some(StageKind::Bi),
+            3 => Some(StageKind::Dp),
+            4 => Some(StageKind::Ag),
+            _ => None,
+        }
+    }
+}
+
 impl Dest {
     pub fn bi(copy: u16) -> Dest {
         Dest { stage: StageKind::Bi, copy }
@@ -126,6 +150,14 @@ mod tests {
         assert_eq!(ib.wire_size(), 8 + 32);
         let qv = Msg::QueryVec { qid: 4, raw: arcv(2), v: arcv(4) };
         assert_eq!(qv.qid(), Some(4));
+    }
+
+    #[test]
+    fn stage_codes_roundtrip() {
+        for s in [StageKind::Ir, StageKind::Qr, StageKind::Bi, StageKind::Dp, StageKind::Ag] {
+            assert_eq!(StageKind::from_code(s.code()), Some(s));
+        }
+        assert_eq!(StageKind::from_code(5), None);
     }
 
     #[test]

@@ -114,6 +114,34 @@ impl TrafficMeter {
         out
     }
 
+    /// Add an externally-measured per-link total (the socket transport
+    /// decodes worker meters from `FlushAck` frames into these).
+    pub fn add_link(&mut self, src: u16, dst: u16, packets: u64, bytes: u64) {
+        let l = self.links.entry((src, dst)).or_default();
+        l.packets += packets;
+        l.bytes += bytes;
+    }
+
+    /// Links in deterministic (src, dst) order — for reports and JSON.
+    pub fn sorted_links(&self) -> Vec<((u16, u16), LinkStats)> {
+        let mut out: Vec<_> = self.links.iter().map(|(&k, &v)| (k, v)).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+
+    /// Human-readable per-link breakdown (one line per link), shared by
+    /// every surface that reports real wire bytes.
+    pub fn link_report(&self) -> String {
+        let mut out = String::new();
+        for ((src, dst), l) in self.sorted_links() {
+            out.push_str(&format!(
+                "  link node {src:>2} -> node {dst:>2}: {:>12} bytes in {:>6} packets\n",
+                l.bytes, l.packets
+            ));
+        }
+        out
+    }
+
     pub fn merge(&mut self, other: &TrafficMeter) {
         for (&k, l) in &other.links {
             let e = self.links.entry(k).or_default();
@@ -246,6 +274,23 @@ mod tests {
         assert_eq!(a.logical_msgs, 2);
         assert_eq!(a.local_msgs, 1);
         assert_eq!(a.total_packets(), 2);
+    }
+
+    #[test]
+    fn add_link_accumulates() {
+        let mut m = TrafficMeter::new(0);
+        m.add_link(0, 1, 2, 300);
+        m.add_link(0, 1, 1, 100);
+        m.add_link(1, 0, 1, 50);
+        assert_eq!(m.total_packets(), 4);
+        assert_eq!(m.total_bytes(), 450);
+        assert_eq!(m.links()[&(0, 1)].bytes, 400);
+        let sorted = m.sorted_links();
+        assert_eq!(sorted[0].0, (0, 1));
+        assert_eq!(sorted[1].0, (1, 0));
+        let report = m.link_report();
+        assert!(report.contains("node  0 -> node  1"));
+        assert_eq!(report.lines().count(), 2);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!
 //! How messages *move* between copies is the [`exec`] module's concern: the
 //! transport-agnostic [`exec::Executor`] seam with its inline (deterministic
-//! FIFO) and threaded (channels + batched admission) implementations.
+//! FIFO) and threaded (channels + batched admission) implementations; the
+//! multi-process TCP transport lives in [`crate::net`] behind the same seam.
 
 pub mod exec;
 pub mod message;
@@ -25,7 +26,13 @@ pub use metrics::{LinkStats, TrafficMeter, WorkStats};
 /// Default topology mirrors the paper: dedicated BI nodes, dedicated DP
 /// nodes (1:4), and a head node hosting IR/QR/AG. In per-core-copies mode
 /// (the ablation of §V-B) several copies of a stage share each node.
-#[derive(Clone, Debug)]
+///
+/// Under the socket transport (`crate::net`) each non-head node is a real
+/// OS process (`parlsh worker`), so this mapping doubles as the process
+/// assignment table; `PartialEq` lets the socket driver check that the
+/// placement a phase runs with matches the one the workers were launched
+/// with.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Placement {
     pub bi_copies: usize,
     pub dp_copies: usize,

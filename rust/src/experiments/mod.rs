@@ -569,6 +569,101 @@ pub fn executor_comparison() -> Table {
     table
 }
 
+// ------------------------------------------------------------------ net
+
+/// Socket-transport partition comparison: the same build + search workload
+/// per `obj_map` strategy, run twice — in-process inline (the `wire_size`
+/// traffic *model*) and across real OS processes on loopback TCP (measured
+/// frame bytes from the `net` codec). This is the paper's Fig. 6 claim
+/// ("fewer messages") exercised over an actual wire. Returns the table and
+/// the `BENCH_net.json` document (table + per-strategy per-link bytes).
+///
+/// Topology is deliberately tiny (1 BI + 2 DP workers + this driver = 4 OS
+/// processes); scale the workload with `PARLSH_N` / `PARLSH_Q`.
+pub fn net_comparison() -> anyhow::Result<(Table, String)> {
+    use crate::coordinator::{build_index_on, search_on};
+    use crate::net::NetSession;
+
+    let mut cfg = Config::default();
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.lsh.t = 16;
+    cfg.data.n = env_usize("PARLSH_N", 30_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 100);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let b = backends(&cfg, w.data.dim);
+
+    let mut table = Table::new(&[
+        "obj_map",
+        "wire MB (tcp)",
+        "model MB",
+        "tcp packets",
+        "logical msgs",
+        "msgs/query",
+        "recall",
+    ]);
+    let mut strategies_json: Vec<String> = Vec::new();
+    for strat in [ObjMapStrategy::Mod, ObjMapStrategy::ZOrder, ObjMapStrategy::Lsh] {
+        cfg.stream.obj_map = strat;
+        // The wire_size model, for the same workload (inline executor).
+        let mut model_cluster = build_index(&cfg, &w.data, b.hasher.as_ref());
+        let model_out =
+            search(&mut model_cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref());
+        // The real thing: multi-process over loopback TCP.
+        let sess = NetSession::launch(&cfg, w.data.dim)?;
+        let mut cluster = build_index_on(sess.executor(), &cfg, &w.data, b.hasher.as_ref());
+        let out = search_on(
+            sess.executor(),
+            &mut cluster,
+            &w.queries,
+            b.hasher.as_ref(),
+            b.ranker.as_ref(),
+        );
+        sess.shutdown()?;
+        let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+
+        println!("per-link wire bytes, search phase ({}):", strat.name());
+        print!("{}", out.meter.link_report());
+        let link_objs: Vec<String> = out
+            .meter
+            .sorted_links()
+            .into_iter()
+            .map(|((src, dst), l)| {
+                format!(
+                    "{{\"src\":{src},\"dst\":{dst},\"packets\":{},\"bytes\":{}}}",
+                    l.packets, l.bytes
+                )
+            })
+            .collect();
+        strategies_json.push(format!(
+            "\"{}\":{{\"wire_bytes\":{},\"model_bytes\":{},\"tcp_packets\":{},\"logical_msgs\":{},\"recall\":{:.4},\"links\":[{}]}}",
+            strat.name(),
+            out.meter.total_bytes(),
+            model_out.meter.payload_bytes,
+            out.meter.total_packets(),
+            out.meter.logical_msgs,
+            recall,
+            link_objs.join(",")
+        ));
+        table.row(&[
+            strat.name().to_string(),
+            format!("{:.3}", out.meter.total_bytes() as f64 / 1e6),
+            format!("{:.3}", model_out.meter.payload_bytes as f64 / 1e6),
+            format!("{}", out.meter.total_packets()),
+            format!("{}", out.meter.logical_msgs),
+            format!("{:.1}", out.meter.logical_msgs as f64 / w.queries.len() as f64),
+            format!("{recall:.3}"),
+        ]);
+    }
+    let json = format!(
+        "{{\"experiment\":\"net\",\"table\":{},\"strategies\":{{{}}}}}\n",
+        table.to_json(),
+        strategies_json.join(",")
+    );
+    Ok((table, json))
+}
+
 /// Table I stand-in: the synthetic dataset inventory.
 pub fn datasets_table() -> Table {
     let mut table = Table::new(&["name", "reference size", "queries", "dim", "stands in for"]);

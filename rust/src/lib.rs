@@ -28,6 +28,10 @@
 //! * [`stages`] + [`coordinator`] — the five paper stages and the
 //!   build/search drivers (`build_index[_on]`, `search[_on]`);
 //! * [`partition`] — mod / Z-order / LSH `obj_map` + `bucket_map` strategies;
+//! * [`net`] — the socket transport: a `SocketExecutor` running the same
+//!   pipeline across real OS processes (`parlsh worker`) over TCP, with a
+//!   versioned wire codec and measured (not modeled) per-link bytes
+//!   (DESIGN.md §Transports);
 //! * [`simnet`] — the calibrated cluster cost model standing in for the
 //!   paper's 60-node InfiniBand testbed (see DESIGN.md §Substitutions);
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
@@ -45,6 +49,7 @@ pub mod data;
 pub mod dataflow;
 pub mod experiments;
 pub mod metrics;
+pub mod net;
 pub mod partition;
 pub mod runtime;
 pub mod simnet;

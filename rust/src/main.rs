@@ -4,18 +4,21 @@
 //! parlsh build   [--config=FILE] [--set k=v]...   build index, print stats
 //! parlsh search  [--config=FILE] [--set k=v]...   build + search + recall
 //! parlsh serve   [--config=FILE] [--set k=v]...   threaded serving run
+//! parlsh serve --net                              multi-process serving run
+//! parlsh worker  --listen=ADDR                    socket-transport worker
 //! parlsh experiment <id>                          regenerate a paper table
 //!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation
-//!             executors all
+//!             executors net all
 //! parlsh calibrate                                measure cost-model consts
 //! ```
 
 use anyhow::{bail, Result};
 use parlsh::config::Config;
-use parlsh::coordinator::{build_index, search, threaded::search_threaded};
+use parlsh::coordinator::{build_index, build_index_on, search, search_on, threaded::search_threaded};
 use parlsh::data::recall::recall_at_k;
 use parlsh::experiments as exp;
 use parlsh::metrics::latency_stats;
+use parlsh::net::NetSession;
 use parlsh::simnet::calibrate;
 use parlsh::util::cli::Args;
 use parlsh::util::timer::Timer;
@@ -39,6 +42,7 @@ fn run(args: &Args) -> Result<()> {
         "build" => cmd_build(args),
         "search" => cmd_search(args, false),
         "serve" => cmd_search(args, true),
+        "worker" => parlsh::net::worker::run(args),
         "experiment" => cmd_experiment(args),
         "tune" => cmd_tune(args),
         "calibrate" => cmd_calibrate(),
@@ -57,7 +61,17 @@ USAGE:
   parlsh build      [--config=FILE] [--set section.key=value]...
   parlsh search     [--config=FILE] [--set ...]      inline executor
   parlsh serve      [--config=FILE] [--set ...]      threaded executor
-  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|all>
+  parlsh serve --net [--set ...]     socket executor: one OS process per
+                                     BI/DP node over loopback TCP (keep
+                                     cluster.{bi,dp}_nodes small!)
+  parlsh worker --listen=ADDR        host a node's stage copies (spawned
+                                     by the socket driver; prints
+                                     `PARLSH_WORKER_LISTEN <addr>`)
+  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|net|all>
+                                     (`executors`/`net` also write
+                                     BENCH_executors.json / BENCH_net.json;
+                                     `net` spawns processes and is not part
+                                     of `all`)
   parlsh tune       [--target=0.8] [--set ...]    suggest w, tune T (and M)
   parlsh calibrate
 
@@ -67,7 +81,7 @@ USAGE:
 Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
 scalar path; PARLSH_ARTIFACTS points at the AOT artifact dir;
 PARLSH_INFLIGHT sets the batched-admission window of `experiment
-executors`.
+executors`; PARLSH_WORKER_BIN overrides the worker binary.
 ";
 
 fn cmd_build(args: &Args) -> Result<()> {
@@ -113,6 +127,12 @@ fn cmd_search(args: &Args, threaded: bool) -> Result<()> {
     let cfg = Config::load(args)?;
     let w = exp::world(&cfg);
     let b = exp::backends(&cfg, w.data.dim);
+    if args.has_flag("net") {
+        if !threaded {
+            bail!("--net is a serving transport: use `parlsh serve --net`");
+        }
+        return cmd_search_net(&cfg, &w, &b);
+    }
     let mut cluster = build_index(&cfg, &w.data, b.hasher.as_ref());
     let t = Timer::start();
     let out = if threaded {
@@ -148,6 +168,66 @@ fn cmd_search(args: &Args, threaded: bool) -> Result<()> {
         out.meter.total_packets(),
         out.meter.payload_bytes as f64 / 1e9,
     );
+    Ok(())
+}
+
+/// The acceptance path of DESIGN.md §Transports: the full build + search
+/// pipeline across one OS process per BI/DP node on loopback, with
+/// per-link wire bytes from the real codec and a typed shutdown.
+fn cmd_search_net(cfg: &Config, w: &exp::World, b: &exp::Backends) -> Result<()> {
+    let n_workers = cfg.cluster.bi_nodes + cfg.cluster.dp_nodes;
+    println!(
+        "spawning {n_workers} `parlsh worker` processes on loopback (+ this driver as head node)"
+    );
+    let sess = NetSession::launch(cfg, w.data.dim)?;
+    let mut cluster = build_index_on(sess.executor(), cfg, &w.data, b.hasher.as_ref());
+    println!(
+        "built in {:.2}s across {n_workers} workers: {} logical msgs, {} tcp packets, {:.3} MB on the wire",
+        cluster.build_wall_secs,
+        cluster.build_meter.logical_msgs,
+        cluster.build_meter.total_packets(),
+        cluster.build_meter.total_bytes() as f64 / 1e6,
+    );
+    let t = Timer::start();
+    let out = search_on(
+        sess.executor(),
+        &mut cluster,
+        &w.queries,
+        b.hasher.as_ref(),
+        b.ranker.as_ref(),
+    );
+    let secs = t.secs();
+    sess.shutdown()?;
+    println!("all {n_workers} workers exited cleanly");
+
+    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+    let lat = latency_stats(&out.per_query_secs);
+    let admission = match cfg.stream.inflight {
+        0 => "open loop".to_string(),
+        win => format!("closed loop W={win}"),
+    };
+    // Workers always rank with the scalar oracle (DESIGN.md §Transports);
+    // only driver-side hashing can take the artifact path.
+    println!(
+        "searched {} queries in {secs:.2}s ({:.1} q/s, socket executor, {admission}, {} hashing, scalar ranking in workers)",
+        w.queries.len(),
+        w.queries.len() as f64 / secs,
+        if b.engine_path { "PJRT-artifact" } else { "scalar" },
+    );
+    println!("recall@{} = {recall:.3}", cfg.lsh.k);
+    println!(
+        "latency ms: mean {:.2} p50 {:.2} p90 {:.2} p99 {:.2} max {:.2}",
+        lat.mean_ms, lat.p50_ms, lat.p90_ms, lat.p99_ms, lat.max_ms
+    );
+    println!(
+        "search wire traffic (real codec bytes, not the wire_size model): \
+         {} logical msgs ({} local), {} tcp packets, {:.3} MB",
+        out.meter.logical_msgs,
+        out.meter.local_msgs,
+        out.meter.total_packets(),
+        out.meter.total_bytes() as f64 / 1e6,
+    );
+    print!("{}", out.meter.link_report());
     Ok(())
 }
 
@@ -192,7 +272,17 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             }
             "executors" => {
                 println!("== Executor comparison (inline / threaded / batched) ==");
-                exp::executor_comparison().print();
+                let t = exp::executor_comparison();
+                t.print();
+                t.write_json("BENCH_executors.json", "executors")?;
+                println!("(wrote BENCH_executors.json)");
+            }
+            "net" => {
+                println!("== Socket transport: obj_map strategies by real wire bytes ==");
+                let (t, json) = exp::net_comparison()?;
+                t.print();
+                std::fs::write("BENCH_net.json", json)?;
+                println!("(wrote BENCH_net.json)");
             }
             other => bail!("unknown experiment `{other}`"),
         }

@@ -78,6 +78,52 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.to_string());
     }
+
+    /// The table as a JSON object: `{"headers": [...], "rows": [[...]]}`.
+    /// Hand-rolled (no serde in the offline-clean build); cells are
+    /// escaped, so arbitrary strings are safe.
+    pub fn to_json(&self) -> String {
+        let cells = |row: &[String]| -> String {
+            let quoted: Vec<String> =
+                row.iter().map(|c| format!("\"{}\"", json_escape(c))).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| cells(r)).collect();
+        format!(
+            "{{\"headers\":{},\"rows\":[{}]}}",
+            cells(&self.headers),
+            rows.join(",")
+        )
+    }
+
+    /// Write the table as `{"experiment": name, "table": {...}}` — the
+    /// machine-readable record the `BENCH_*.json` files keep so bench
+    /// trajectories are recorded instead of print-only.
+    pub fn write_json(&self, path: &str, experiment: &str) -> std::io::Result<()> {
+        let doc = format!(
+            "{{\"experiment\":\"{}\",\"table\":{}}}\n",
+            json_escape(experiment),
+            self.to_json()
+        );
+        std::fs::write(path, doc)
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -108,6 +154,18 @@ mod tests {
         let s = t.to_string();
         assert!(s.contains(" T |"));
         assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn table_to_json() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["with \"quote\"".into(), "1.5".into()]);
+        let j = t.to_json();
+        assert_eq!(
+            j,
+            "{\"headers\":[\"name\",\"value\"],\"rows\":[[\"with \\\"quote\\\"\",\"1.5\"]]}"
+        );
+        assert_eq!(json_escape("a\nb\\"), "a\\nb\\\\");
     }
 
     #[test]

@@ -1,0 +1,552 @@
+//! The socket-transport launcher and executor: spawns `parlsh worker`
+//! processes on loopback, handshakes them, and drives the five-stage
+//! pipeline across real OS processes through the transport-agnostic
+//! [`Executor`] seam.
+//!
+//! Topology follows the paper via the shared [`Placement`]: the *driver*
+//! process is the head node (IR/QR ingress + every AG copy, where global
+//! top-k reduction and completion accounting live), and each BI/DP node is
+//! one worker process. A [`NetSession`] outlives individual phases —
+//! worker-side BI/DP state persists between `build_index_on` and
+//! `search_on`, exactly like the in-process `Cluster` does — and ends with
+//! a typed `Shutdown` that joins every worker (no leaked processes).
+//!
+//! [`SocketExecutor::run`] mirrors the threaded executor's admission loop:
+//! closed-loop batched admission via `Workload::window`, completion events
+//! from the (local) AG copies, and per-query `Done` acks fanned out to the
+//! DP-hosting workers — the ack closes the `stream.inflight` loop and
+//! tears down remote dedup state. A worker that dies mid-phase surfaces as
+//! a typed `Stopped`/closed event and fails the phase loudly instead of
+//! hanging the admission loop. Traffic accounting is real: every encoded
+//! frame is charged with its actual on-wire length (header included) on
+//! the sender's meter, and worker meters come back in `FlushAck` barriers
+//! at phase end, so `ExecReport::meter` holds measured per-link TCP bytes,
+//! not the `wire_size` model.
+
+use crate::config::Config;
+use crate::dataflow::exec::{ExecReport, Executor, StageHandler, StageHandlers, Workload};
+use crate::dataflow::message::{Dest, Msg, StageKind};
+use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::Placement;
+use crate::net::peer::{connect_retry, PeerConn};
+use crate::net::wire::{self, FrameKind, Hello, NodeState};
+use crate::stages::aggregator::QueryResult;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader};
+use std::net::TcpStream;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// How long to wait on control responses (handshake, barriers, snapshots).
+const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long a phase may sit with no event at all before we call it wedged.
+const PHASE_STALL_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Events the per-worker reader threads feed the driver.
+enum DriverEv {
+    HelloOk { from: u16, node: u16, digest: u64 },
+    Msg { from: u16, dest: Dest, msg: Msg },
+    FlushAck { from: u16, seq: u32, meter: TrafficMeter },
+    State { from: u16, state: NodeState },
+    Stopped { from: u16, reason: String },
+    Closed { from: u16, err: String },
+}
+
+struct Session {
+    peers: Vec<PeerConn>,
+    ev_rx: Receiver<DriverEv>,
+    placement: Placement,
+    /// Worker nodes hosting at least one DP copy (get per-query `Done`s).
+    dp_hosts: Vec<u16>,
+    flush_seq: u32,
+}
+
+/// An [`Executor`] that runs BI/DP stages on remote worker processes. The
+/// local `bis`/`dps` handlers in [`StageHandlers`] are intentionally not
+/// driven — that state lives (and persists across phases) in the workers;
+/// fetch it with [`NetSession::fetch_state`].
+pub struct SocketExecutor {
+    inner: Mutex<Session>,
+}
+
+impl Executor for SocketExecutor {
+    fn run(
+        &self,
+        placement: &Placement,
+        stages: StageHandlers<'_>,
+        workload: Workload<'_>,
+    ) -> ExecReport {
+        let mut s = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        match s.run_phase(placement, stages, workload) {
+            Ok(report) => report,
+            // Mirror the threaded executor: a dead stage (here: worker)
+            // resurfaces loudly instead of wedging the admission loop.
+            Err(e) => panic!("socket phase failed: {e}"),
+        }
+    }
+}
+
+impl Session {
+    fn run_phase(
+        &mut self,
+        placement: &Placement,
+        stages: StageHandlers<'_>,
+        workload: Workload<'_>,
+    ) -> Result<ExecReport> {
+        if *placement != self.placement {
+            bail!("phase placement differs from the placement workers were launched with");
+        }
+        let Session { peers, ev_rx, dp_hosts, flush_seq, .. } = self;
+        let n_workers = peers.len();
+        let head = placement.head_node;
+        let n_queries = workload.n_queries;
+        let window = workload.window;
+
+        let StageHandlers { head: mut head_stage, bis, dps, mut ags } = stages;
+        drop(bis); // BI/DP state lives in the workers, not behind these
+        drop(dps);
+
+        let mut meter = TrafficMeter::new(workload.agg_bytes);
+        meter.header_bytes = 0; // frames carry their real header in len
+        let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); n_queries];
+        let mut per_query_secs = vec![0f64; n_queries];
+        let mut dispatch_ts: Vec<Instant> = vec![Instant::now(); n_queries];
+        let mut local_q: VecDeque<(Dest, Msg)> = VecDeque::new();
+        let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+        let mut comps: Vec<QueryResult> = Vec::new();
+        let mut completed = 0usize;
+        let mut in_flight = 0usize;
+        let mut items = workload.items.peekable();
+        let mut items_done = false;
+
+        loop {
+            // Admit while the window allows; items without a qid (index
+            // blocks) are never windowed — same policy as the threaded
+            // executor.
+            while !items_done {
+                let next_is_query = match items.peek() {
+                    None => {
+                        items_done = true;
+                        break;
+                    }
+                    Some(m) => m.qid().is_some(),
+                };
+                if next_is_query && window != 0 && in_flight >= window {
+                    break;
+                }
+                let item = items.next().expect("peeked non-empty");
+                let item_qid = item.qid();
+                head_stage.on_msg(item, &mut emitted);
+                if let Some(qid) = item_qid {
+                    dispatch_ts[qid as usize] = Instant::now();
+                    in_flight += 1;
+                }
+                for (dest, msg) in emitted.drain(..) {
+                    let node = placement.node_of(dest.stage, dest.copy);
+                    if node == head {
+                        meter.send(head, head, 0);
+                        local_q.push_back((dest, msg));
+                    } else {
+                        let frame = wire::stage_frame(dest, &msg);
+                        meter.send(head, node, frame.len());
+                        peers[node as usize].send(&frame)?;
+                    }
+                }
+                drain_local(
+                    &mut local_q,
+                    &mut ags,
+                    &mut comps,
+                    &mut results,
+                    &mut per_query_secs,
+                    &dispatch_ts,
+                    &mut completed,
+                    &mut in_flight,
+                    peers,
+                    dp_hosts,
+                )?;
+            }
+            if items_done && completed >= n_queries {
+                break;
+            }
+            // Block for remote events — but only after everything queued
+            // reached the wire, or the closed loop deadlocks.
+            for p in peers.iter_mut() {
+                p.flush()?;
+            }
+            match ev_rx.recv_timeout(PHASE_STALL_TIMEOUT) {
+                Ok(DriverEv::Msg { dest, msg, .. }) => {
+                    local_q.push_back((dest, msg));
+                    drain_local(
+                        &mut local_q,
+                        &mut ags,
+                        &mut comps,
+                        &mut results,
+                        &mut per_query_secs,
+                        &dispatch_ts,
+                        &mut completed,
+                        &mut in_flight,
+                        peers,
+                        dp_hosts,
+                    )?;
+                }
+                Ok(DriverEv::Stopped { from, reason }) => {
+                    bail!("worker {from} stopped mid-phase: {reason}")
+                }
+                Ok(DriverEv::Closed { from, err }) => {
+                    bail!("worker {from} connection lost mid-phase: {err}")
+                }
+                Ok(_) => bail!("unexpected control frame mid-phase"),
+                Err(RecvTimeoutError::Timeout) => bail!(
+                    "phase stalled: {completed}/{n_queries} queries after {}s of silence",
+                    PHASE_STALL_TIMEOUT.as_secs()
+                ),
+                Err(RecvTimeoutError::Disconnected) => bail!("all worker readers exited"),
+            }
+        }
+
+        // Phase barrier: collect every worker's real bytes-on-wire meter.
+        *flush_seq += 1;
+        let seq = *flush_seq;
+        let req = wire::encode_frame(FrameKind::FlushReq, &wire::encode_qid(seq));
+        for p in peers.iter_mut() {
+            p.send_now(&req)?;
+        }
+        meter.flush();
+        let mut acks = 0usize;
+        while acks < n_workers {
+            match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                Ok(DriverEv::FlushAck { seq: s, meter: m, from }) => {
+                    if s != seq {
+                        bail!("worker {from} acked barrier {s}, expected {seq}");
+                    }
+                    meter.merge(&m);
+                    acks += 1;
+                }
+                Ok(DriverEv::Stopped { from, reason }) => {
+                    bail!("worker {from} stopped at barrier: {reason}")
+                }
+                Ok(DriverEv::Closed { from, err }) => {
+                    bail!("worker {from} connection lost at barrier: {err}")
+                }
+                Ok(_) => bail!("unexpected frame at phase barrier"),
+                Err(e) => bail!("phase barrier: {e}"),
+            }
+        }
+        Ok(ExecReport { results, per_query_secs, meter })
+    }
+}
+
+/// Deliver queued head-node messages (always AG — the head hosts no BI/DP
+/// copy) and handle completions: record result + latency, shrink the
+/// admission window, and fan the `Done` ack to every DP-hosting worker.
+#[allow(clippy::too_many_arguments)]
+fn drain_local(
+    local_q: &mut VecDeque<(Dest, Msg)>,
+    ags: &mut [Box<dyn StageHandler + '_>],
+    comps: &mut Vec<QueryResult>,
+    results: &mut [Vec<(f32, u32)>],
+    per_query_secs: &mut [f64],
+    dispatch_ts: &[Instant],
+    completed: &mut usize,
+    in_flight: &mut usize,
+    peers: &mut [PeerConn],
+    dp_hosts: &[u16],
+) -> Result<()> {
+    let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+    while let Some((dest, msg)) = local_q.pop_front() {
+        if dest.stage != StageKind::Ag {
+            bail!("{:?} message addressed to the head node", dest.stage);
+        }
+        let ag = ags
+            .get_mut(dest.copy as usize)
+            .ok_or_else(|| anyhow!("no AG copy {}", dest.copy))?;
+        ag.on_msg(msg, &mut emitted);
+        debug_assert!(emitted.is_empty(), "AG emitted a message");
+        emitted.clear();
+        ag.take_completions(comps);
+        for (qid, hits) in comps.drain(..) {
+            per_query_secs[qid as usize] =
+                dispatch_ts[qid as usize].elapsed().as_secs_f64();
+            results[qid as usize] = hits;
+            *completed += 1;
+            *in_flight = in_flight.saturating_sub(1);
+            // The completion ack: closes the inflight loop and drops the
+            // remote per-query dedup state. Control — never metered.
+            let done = wire::encode_frame(FrameKind::Done, &wire::encode_qid(qid));
+            for &node in dp_hosts {
+                peers[node as usize].send(&done)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A running multi-process cluster: worker children + the socket executor.
+/// Shut it down explicitly with [`NetSession::shutdown`] for a typed exit;
+/// dropping the session kills any still-running workers (no leaks either
+/// way).
+pub struct NetSession {
+    children: Vec<Child>,
+    exec: SocketExecutor,
+}
+
+impl NetSession {
+    /// Launch workers using this very binary's `worker` subcommand (the
+    /// normal path for `parlsh` itself). Override the binary with the
+    /// `PARLSH_WORKER_BIN` env var when the current executable is not
+    /// `parlsh` (e.g. a test harness).
+    pub fn launch(cfg: &Config, dim: usize) -> Result<NetSession> {
+        let bin = match std::env::var("PARLSH_WORKER_BIN") {
+            Ok(p) => std::path::PathBuf::from(p),
+            Err(_) => std::env::current_exe().context("resolve current executable")?,
+        };
+        Self::launch_with_bin(&bin, cfg, dim)
+    }
+
+    /// Launch one worker process per BI/DP node of `cfg.cluster` from an
+    /// explicit binary path, connect, and handshake. `dim` is the dataset
+    /// dimensionality workers size their DP stores with.
+    pub fn launch_with_bin(bin: &Path, cfg: &Config, dim: usize) -> Result<NetSession> {
+        let placement = Placement::new(&cfg.cluster);
+        let n_workers = placement.total_nodes() - 1;
+        // Every worker binds the same configured address, so a fixed port
+        // can only ever host one worker — reject it up front instead of
+        // letting worker 1 die on EADDRINUSE before announcing itself.
+        if n_workers > 1 && !cfg.sock.listen.ends_with(":0") {
+            bail!(
+                "net.listen `{}` pins a port but {n_workers} workers must bind it; \
+                 use port 0 (OS-assigned) for local multi-worker launches",
+                cfg.sock.listen
+            );
+        }
+        let mut session = NetSession {
+            children: Vec::with_capacity(n_workers),
+            exec: SocketExecutor {
+                inner: Mutex::new(Session {
+                    peers: Vec::new(),
+                    ev_rx: mpsc::channel().1, // replaced below
+                    placement: placement.clone(),
+                    dp_hosts: (cfg.cluster.bi_nodes
+                        ..cfg.cluster.bi_nodes + cfg.cluster.dp_nodes)
+                        .map(|n| n as u16)
+                        .collect(),
+                    flush_seq: 0,
+                }),
+            },
+        };
+
+        // Spawn first, then read each announced listen address. Workers
+        // must not write anything else to stdout.
+        for node in 0..n_workers {
+            let child = Command::new(bin)
+                .arg("worker")
+                .arg(format!("--listen={}", cfg.sock.listen))
+                .arg("--set")
+                .arg(format!("net.max_frame_bytes={}", cfg.sock.max_frame_bytes))
+                .arg("--set")
+                .arg(format!("net.connect_retries={}", cfg.sock.connect_retries))
+                .arg("--set")
+                .arg(format!("net.retry_ms={}", cfg.sock.retry_ms))
+                .stdin(Stdio::null())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .with_context(|| format!("spawn worker {node} from {}", bin.display()))?;
+            session.children.push(child);
+        }
+        let mut addrs = Vec::with_capacity(n_workers);
+        for (node, child) in session.children.iter_mut().enumerate() {
+            let stdout = child.stdout.take().expect("piped stdout");
+            let mut line = String::new();
+            BufReader::new(stdout)
+                .read_line(&mut line)
+                .with_context(|| format!("read worker {node} listen line"))?;
+            let addr = line
+                .trim()
+                .strip_prefix("PARLSH_WORKER_LISTEN ")
+                .ok_or_else(|| anyhow!("worker {node} announced `{}`", line.trim()))?
+                .to_string();
+            addrs.push(addr);
+        }
+
+        // Connect + handshake each worker; reader threads feed one channel.
+        let digest = wire::config_digest(dim as u32, &cfg.lsh, &cfg.cluster, &cfg.stream);
+        let (ev_tx, ev_rx) = mpsc::channel::<DriverEv>();
+        let mut peers = Vec::with_capacity(n_workers);
+        for node in 0..n_workers {
+            let stream = connect_retry(
+                &addrs[node],
+                cfg.sock.connect_retries,
+                cfg.sock.retry_ms,
+            )
+            .with_context(|| format!("connect worker {node} at {}", addrs[node]))?;
+            let reader = stream.try_clone().context("clone worker conn")?;
+            spawn_reader(reader, node as u16, ev_tx.clone(), cfg.sock.max_frame_bytes);
+            let mut pc = PeerConn::new(stream, cfg.stream.agg_bytes);
+            let hello = Hello {
+                node: node as u16,
+                dim: dim as u32,
+                peers: addrs.clone(),
+                lsh: cfg.lsh,
+                cluster: cfg.cluster,
+                stream: cfg.stream,
+                digest,
+            };
+            pc.send_now(&wire::encode_frame(FrameKind::Hello, &wire::encode_hello(&hello)))?;
+            peers.push(pc);
+        }
+
+        // Every worker must accept the same config digest before any
+        // workload flows.
+        let mut ok = vec![false; n_workers];
+        let mut acked = 0usize;
+        while acked < n_workers {
+            match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                Ok(DriverEv::HelloOk { from, node, digest: d }) => {
+                    if node != from {
+                        bail!("worker on conn {from} claims node {node}");
+                    }
+                    if d != digest {
+                        bail!("worker {from} config digest mismatch");
+                    }
+                    if std::mem::replace(&mut ok[from as usize], true) {
+                        bail!("worker {from} acked twice");
+                    }
+                    acked += 1;
+                }
+                Ok(DriverEv::Stopped { from, reason }) => {
+                    bail!("worker {from} stopped during handshake: {reason}")
+                }
+                Ok(DriverEv::Closed { from, err }) => {
+                    bail!("worker {from} closed during handshake: {err}")
+                }
+                Ok(_) => bail!("unexpected frame during handshake"),
+                Err(e) => bail!("handshake: {e}"),
+            }
+        }
+
+        {
+            let inner = session.exec.inner.get_mut().unwrap_or_else(|p| p.into_inner());
+            inner.peers = peers;
+            inner.ev_rx = ev_rx;
+        }
+        Ok(session)
+    }
+
+    /// The executor to pass to `build_index_on` / `search_on`.
+    pub fn executor(&self) -> &SocketExecutor {
+        &self.exec
+    }
+
+    /// Snapshot every worker's BI buckets and DP objects (differential
+    /// tests; one `(node, state)` pair per worker, node-sorted).
+    pub fn fetch_state(&self) -> Result<Vec<(u16, NodeState)>> {
+        let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let Session { peers, ev_rx, .. } = &mut *s;
+        let req = wire::encode_frame(FrameKind::StateReq, &[]);
+        for p in peers.iter_mut() {
+            p.send_now(&req)?;
+        }
+        let mut out = Vec::with_capacity(peers.len());
+        while out.len() < peers.len() {
+            match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                Ok(DriverEv::State { from, state }) => out.push((from, state)),
+                Ok(DriverEv::Stopped { from, reason }) => {
+                    bail!("worker {from} stopped during snapshot: {reason}")
+                }
+                Ok(DriverEv::Closed { from, err }) => {
+                    bail!("worker {from} closed during snapshot: {err}")
+                }
+                Ok(_) => bail!("unexpected frame during snapshot"),
+                Err(e) => bail!("state snapshot: {e}"),
+            }
+        }
+        out.sort_by_key(|(node, _)| *node);
+        Ok(out)
+    }
+
+    /// Typed shutdown: ask every worker to exit, then join them all,
+    /// failing on any nonzero exit. Workers that ignore the request are
+    /// killed (and reported) rather than leaked.
+    pub fn shutdown(mut self) -> Result<()> {
+        {
+            let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+            let frame = wire::encode_frame(FrameKind::Shutdown, &[]);
+            for p in s.peers.iter_mut() {
+                p.send_now(&frame)?;
+            }
+        }
+        let mut children = std::mem::take(&mut self.children);
+        for (node, child) in children.iter_mut().enumerate() {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                match child.try_wait().with_context(|| format!("wait worker {node}"))? {
+                    Some(status) if status.success() => break,
+                    Some(status) => bail!("worker {node} exited with {status}"),
+                    None if Instant::now() >= deadline => {
+                        child.kill().ok();
+                        child.wait().ok();
+                        bail!("worker {node} ignored shutdown; killed");
+                    }
+                    None => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for NetSession {
+    fn drop(&mut self) {
+        // Error paths only: `shutdown` drains `children` first.
+        for child in &mut self.children {
+            child.kill().ok();
+            child.wait().ok();
+        }
+    }
+}
+
+fn spawn_reader(stream: TcpStream, from: u16, tx: Sender<DriverEv>, max_frame: usize) {
+    std::thread::spawn(move || reader_loop(stream, from, tx, max_frame));
+}
+
+fn reader_loop(mut stream: TcpStream, from: u16, tx: Sender<DriverEv>, max_frame: usize) {
+    loop {
+        let frame = match wire::read_frame(&mut stream, max_frame) {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = tx.send(DriverEv::Closed { from, err: e.to_string() });
+                return;
+            }
+        };
+        let ev = match frame.kind {
+            FrameKind::HelloOk => wire::decode_hello_ok(&frame.payload)
+                .map(|(node, digest)| DriverEv::HelloOk { from, node, digest }),
+            FrameKind::Stage => wire::decode_stage(&frame.payload)
+                .map(|(dest, msg)| DriverEv::Msg { from, dest, msg }),
+            FrameKind::FlushAck => wire::decode_flush_ack(&frame.payload)
+                .map(|(seq, meter)| DriverEv::FlushAck { from, seq, meter }),
+            FrameKind::StateDump => wire::decode_state_dump(&frame.payload)
+                .map(|state| DriverEv::State { from, state }),
+            FrameKind::Stopped => wire::decode_stopped(&frame.payload)
+                .map(|reason| DriverEv::Stopped { from, reason }),
+            other => Err(anyhow!("unexpected frame {other:?} from worker {from}")),
+        };
+        match ev {
+            Ok(ev) => {
+                let stop = matches!(ev, DriverEv::Stopped { .. });
+                if tx.send(ev).is_err() || stop {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(DriverEv::Closed { from, err: e.to_string() });
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Per-peer connection management: packet aggregation over TCP.
+//!
+//! A [`PeerConn`] buffers encoded frames per destination exactly as the
+//! in-process stream layer's `TrafficMeter` models packets: frames
+//! accumulate until `stream.agg_bytes` is reached, then go out in one
+//! `write_all` (one "packet" of the labeled-stream buffering policy). The
+//! caller flushes on idle — before blocking on events — so closed-loop
+//! admission can never deadlock on a buffered frame, and flushes
+//! explicitly at phase barriers. With `agg_bytes == 0` every frame is
+//! written through immediately (aggregation off, packet per message).
+//!
+//! Metering stays with the *caller*: the routing code charges its
+//! `TrafficMeter` with the encoded frame length (real bytes-on-wire, not
+//! the `wire_size` model) next to each `send`, using the same
+//! `agg_bytes` so meter packets track write batches (control frames ride
+//! the same buffer but are never metered, so the two can differ slightly).
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A buffered, aggregating writer over one TCP connection.
+pub struct PeerConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    agg_bytes: usize,
+}
+
+impl PeerConn {
+    pub fn new(stream: TcpStream, agg_bytes: usize) -> PeerConn {
+        PeerConn { stream, buf: Vec::with_capacity(agg_bytes), agg_bytes }
+    }
+
+    /// Queue one encoded frame; writes through when the aggregation buffer
+    /// fills (or immediately when aggregation is off).
+    pub fn send(&mut self, frame: &[u8]) -> io::Result<()> {
+        if self.agg_bytes == 0 {
+            return self.stream.write_all(frame);
+        }
+        self.buf.extend_from_slice(frame);
+        if self.buf.len() >= self.agg_bytes {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Write out any buffered frames (idle point or phase barrier).
+    pub fn flush(&mut self) -> io::Result<()> {
+        if !self.buf.is_empty() {
+            self.stream.write_all(&self.buf)?;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    /// Flush pending frames, then write `frame` immediately — for control
+    /// frames whose ordering after all queued messages matters (handshake,
+    /// barriers, snapshots, shutdown).
+    pub fn send_now(&mut self, frame: &[u8]) -> io::Result<()> {
+        self.flush()?;
+        self.stream.write_all(frame)
+    }
+}
+
+/// Connect with bounded retries — workers bind asynchronously and peers
+/// dial each other lazily, so the first attempt can race the listener.
+pub fn connect_retry(addr: &str, retries: usize, backoff_ms: u64) -> io::Result<TcpStream> {
+    let mut last = None;
+    for attempt in 0..retries.max(1) {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                // We aggregate ourselves; Nagle would only add latency on
+                // the closed-loop request/response pattern.
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+        if attempt + 1 < retries.max(1) {
+            std::thread::sleep(Duration::from_millis(backoff_ms));
+        }
+    }
+    Err(last.unwrap_or_else(|| io::Error::new(io::ErrorKind::Other, "no attempts")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{self, FrameKind};
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+        (tx, rx)
+    }
+
+    #[test]
+    fn aggregation_defers_until_flush() {
+        let (tx, mut rx) = pair();
+        let mut pc = PeerConn::new(tx, 1 << 20);
+        let frame = wire::encode_frame(FrameKind::Done, &wire::encode_qid(1));
+        pc.send(&frame).unwrap();
+        pc.send(&frame).unwrap();
+        // nothing on the wire yet: both frames sit in the buffer
+        rx.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut probe = [0u8; 1];
+        assert!(rx.read(&mut probe).is_err(), "frame leaked before flush");
+        pc.flush().unwrap();
+        rx.set_read_timeout(None).unwrap();
+        for _ in 0..2 {
+            let f = wire::read_frame(&mut rx, 1 << 16).unwrap();
+            assert_eq!(f.kind, FrameKind::Done);
+            assert_eq!(wire::decode_qid(&f.payload).unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn send_now_preserves_frame_order() {
+        let (tx, mut rx) = pair();
+        let mut pc = PeerConn::new(tx, 1 << 20);
+        pc.send(&wire::encode_frame(FrameKind::Done, &wire::encode_qid(7)))
+            .unwrap();
+        pc.send_now(&wire::encode_frame(FrameKind::FlushReq, &wire::encode_qid(8)))
+            .unwrap();
+        let f1 = wire::read_frame(&mut rx, 1 << 16).unwrap();
+        assert_eq!(f1.kind, FrameKind::Done);
+        let f2 = wire::read_frame(&mut rx, 1 << 16).unwrap();
+        assert_eq!(f2.kind, FrameKind::FlushReq);
+    }
+
+    #[test]
+    fn no_aggregation_writes_through() {
+        let (tx, mut rx) = pair();
+        let mut pc = PeerConn::new(tx, 0);
+        pc.send(&wire::encode_frame(FrameKind::Done, &wire::encode_qid(5)))
+            .unwrap();
+        let f = wire::read_frame(&mut rx, 1 << 16).unwrap();
+        assert_eq!(wire::decode_qid(&f.payload).unwrap(), 5);
+    }
+
+    #[test]
+    fn connect_retry_reports_failure() {
+        // a port nothing listens on (bind then drop to reserve-and-free)
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(connect_retry(&addr, 2, 1).is_err());
+    }
+}

@@ -1,0 +1,969 @@
+//! The versioned, length-framed binary wire format of the socket transport
+//! (DESIGN.md §Transports).
+//!
+//! Every frame is `header (12 bytes) + payload`:
+//!
+//! ```text
+//! magic   u16  0x504C ("PL")
+//! version u8   WIRE_VERSION
+//! kind    u8   FrameKind
+//! len     u32  payload length
+//! crc     u32  FNV-1a over header[0..8] + payload
+//! ```
+//!
+//! The checksum covers the kind and length bytes as well as the payload, so
+//! any single corrupted byte is rejected at [`read_frame`] rather than
+//! misrouted. Payload encodings are little-endian, length-prefixed, and
+//! strict: decoders reject trailing bytes, truncated fields, and length
+//! prefixes that exceed the remaining buffer (no attacker-sized
+//! allocations). `f32` travels as its bit pattern, so vector payloads —
+//! and therefore distributed top-k results — roundtrip bit-exactly.
+//!
+//! Frame kinds: [`FrameKind::Stage`] carries one routed dataflow [`Msg`];
+//! everything else is control — the `Hello`/`HelloOk` handshake (config +
+//! placement + digest), `PeerHello` (worker→worker identification), `Done`
+//! (query-completion ack closing the `stream.inflight` loop and tearing
+//! down DP dedup state), `FlushReq`/`FlushAck` (phase barrier carrying the
+//! worker's real bytes-on-wire [`TrafficMeter`]), `StateReq`/`StateDump`
+//! (differential-test snapshots), and the typed `Stopped`/`Shutdown` pair
+//! mirroring the threaded executor's drop-guard semantics.
+
+use crate::config::{ClusterConfig, ObjMapStrategy, StreamConfig};
+use crate::core::lsh::LshParams;
+use crate::dataflow::message::{Dest, Msg, StageKind};
+use crate::dataflow::metrics::TrafficMeter;
+use crate::stages::{BiState, DpState};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Read;
+use std::sync::Arc;
+
+pub const WIRE_VERSION: u8 = 1;
+pub const MAGIC: u16 = 0x504C;
+pub const HEADER_LEN: usize = 12;
+
+/// What a frame carries. Discriminants are the on-wire kind byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Driver → worker: handshake (node id, dim, peer table, config, digest).
+    Hello = 0,
+    /// Worker → driver: handshake accepted (echoes the config digest).
+    HelloOk = 1,
+    /// Worker → worker: identifies the sending node on a fresh connection.
+    PeerHello = 2,
+    /// A routed dataflow message: `Dest` + `Msg`.
+    Stage = 3,
+    /// Driver → worker: query completed (admission-window ack; DP teardown).
+    Done = 4,
+    /// Driver → worker: phase barrier; reply with `FlushAck`.
+    FlushReq = 5,
+    /// Worker → driver: barrier ack carrying the worker's traffic meter.
+    FlushAck = 6,
+    /// Driver → worker: request a state snapshot of all hosted copies.
+    StateReq = 7,
+    /// Worker → driver: BI bucket + DP object snapshots.
+    StateDump = 8,
+    /// Either direction: typed failure notice (the drop-guard frame).
+    Stopped = 9,
+    /// Driver → worker: exit cleanly.
+    Shutdown = 10,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<FrameKind> {
+        use FrameKind::*;
+        match v {
+            0 => Some(Hello),
+            1 => Some(HelloOk),
+            2 => Some(PeerHello),
+            3 => Some(Stage),
+            4 => Some(Done),
+            5 => Some(FlushReq),
+            6 => Some(FlushAck),
+            7 => Some(StateReq),
+            8 => Some(StateDump),
+            9 => Some(Stopped),
+            10 => Some(Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded frame: kind + raw payload (decode with the `decode_*` fns).
+#[derive(Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+// ------------------------------------------------------------ primitives
+
+fn fnv1a32(seed: u32, bytes: &[u8]) -> u32 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+const FNV_OFFSET: u32 = 0x811C_9DC5;
+
+fn fnv1a64(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+const FNV64_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    put_u32(b, v.to_bits());
+}
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize, "string too long for wire");
+    put_u16(b, s.len() as u16);
+    b.extend_from_slice(s.as_bytes());
+}
+fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(b, xs.len() as u32);
+    for &x in xs {
+        put_f32(b, x);
+    }
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, pos: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated payload: need {n} bytes, have {}", self.remaining());
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    /// Length prefix for elements of `elem` bytes each, alloc-bounded by
+    /// the remaining buffer.
+    fn len_prefix(&mut self, elem: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem) > self.remaining() {
+            bail!("length prefix {n} exceeds remaining payload");
+        }
+        Ok(n)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes).context("non-utf8 string")?.to_string())
+    }
+    fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("{} trailing bytes after payload", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Wrap a payload in a checksummed frame. Panics loudly on a payload the
+/// u32 length field cannot represent — wrapping would emit a frame whose
+/// declared length lies, surfacing far away as a checksum mismatch.
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    assert!(
+        payload.len() <= u32::MAX as usize,
+        "frame payload of {} bytes exceeds the u32 length field",
+        payload.len()
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    put_u16(&mut out, MAGIC);
+    put_u8(&mut out, WIRE_VERSION);
+    put_u8(&mut out, kind as u8);
+    put_u32(&mut out, payload.len() as u32);
+    let crc = fnv1a32(fnv1a32(FNV_OFFSET, &out[0..8]), payload);
+    put_u32(&mut out, crc);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Read and verify one frame. Errors on EOF, bad magic/version/kind, a
+/// length above `max_frame`, or a checksum mismatch.
+pub fn read_frame(r: &mut dyn Read, max_frame: usize) -> Result<Frame> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).context("read frame header")?;
+    let magic = u16::from_le_bytes([hdr[0], hdr[1]]);
+    if magic != MAGIC {
+        bail!("bad frame magic {magic:#06x}");
+    }
+    if hdr[2] != WIRE_VERSION {
+        bail!("wire version {} (want {WIRE_VERSION})", hdr[2]);
+    }
+    let kind = FrameKind::from_u8(hdr[3])
+        .ok_or_else(|| anyhow!("unknown frame kind {}", hdr[3]))?;
+    let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+    if len > max_frame {
+        bail!("frame of {len} bytes exceeds cap {max_frame}");
+    }
+    let crc = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]);
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("read frame payload")?;
+    let want = fnv1a32(fnv1a32(FNV_OFFSET, &hdr[0..8]), &payload);
+    if crc != want {
+        bail!("frame checksum mismatch (got {crc:#010x}, want {want:#010x})");
+    }
+    Ok(Frame { kind, payload })
+}
+
+// ------------------------------------------------------------ Msg codec
+
+fn obj_map_code(s: ObjMapStrategy) -> u8 {
+    match s {
+        ObjMapStrategy::Mod => 0,
+        ObjMapStrategy::ZOrder => 1,
+        ObjMapStrategy::Lsh => 2,
+    }
+}
+
+fn obj_map_from_code(c: u8) -> Result<ObjMapStrategy> {
+    match c {
+        0 => Ok(ObjMapStrategy::Mod),
+        1 => Ok(ObjMapStrategy::ZOrder),
+        2 => Ok(ObjMapStrategy::Lsh),
+        _ => bail!("unknown obj_map code {c}"),
+    }
+}
+
+/// Encode a routed stage message as a complete frame (header included).
+pub fn stage_frame(dest: Dest, msg: &Msg) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16 + msg.wire_size());
+    put_u8(&mut p, dest.stage.code());
+    put_u16(&mut p, dest.copy);
+    match msg {
+        Msg::IndexBlock { id_base, rows, flat } => {
+            put_u8(&mut p, 0);
+            put_u32(&mut p, *id_base);
+            put_u32(&mut p, *rows);
+            put_f32s(&mut p, flat);
+        }
+        Msg::QueryVec { qid, raw, v } => {
+            put_u8(&mut p, 1);
+            put_u32(&mut p, *qid);
+            put_f32s(&mut p, raw);
+            put_f32s(&mut p, v);
+        }
+        Msg::StoreObject { id, v } => {
+            put_u8(&mut p, 2);
+            put_u32(&mut p, *id);
+            put_f32s(&mut p, v);
+        }
+        Msg::IndexRef { table, key, id, dp } => {
+            put_u8(&mut p, 3);
+            put_u8(&mut p, *table);
+            put_u64(&mut p, *key);
+            put_u32(&mut p, *id);
+            put_u16(&mut p, *dp);
+        }
+        Msg::Query { qid, probes, v } => {
+            put_u8(&mut p, 4);
+            put_u32(&mut p, *qid);
+            put_u32(&mut p, probes.len() as u32);
+            for &(table, key) in probes {
+                put_u8(&mut p, table);
+                put_u64(&mut p, key);
+            }
+            put_f32s(&mut p, v);
+        }
+        Msg::CandidateReq { qid, ids, v } => {
+            put_u8(&mut p, 5);
+            put_u32(&mut p, *qid);
+            put_u32(&mut p, ids.len() as u32);
+            for &id in ids {
+                put_u32(&mut p, id);
+            }
+            put_f32s(&mut p, v);
+        }
+        Msg::QueryMeta { qid, n_bi } => {
+            put_u8(&mut p, 6);
+            put_u32(&mut p, *qid);
+            put_u32(&mut p, *n_bi);
+        }
+        Msg::BiMeta { qid, n_dp } => {
+            put_u8(&mut p, 7);
+            put_u32(&mut p, *qid);
+            put_u32(&mut p, *n_dp);
+        }
+        Msg::LocalTopK { qid, hits } => {
+            put_u8(&mut p, 8);
+            put_u32(&mut p, *qid);
+            put_u32(&mut p, hits.len() as u32);
+            for &(d, id) in hits {
+                put_f32(&mut p, d);
+                put_u32(&mut p, id);
+            }
+        }
+    }
+    encode_frame(FrameKind::Stage, &p)
+}
+
+/// Decode a `Stage` frame payload back into `(Dest, Msg)`.
+pub fn decode_stage(payload: &[u8]) -> Result<(Dest, Msg)> {
+    let mut rd = Rd::new(payload);
+    let stage = StageKind::from_code(rd.u8()?)
+        .ok_or_else(|| anyhow!("unknown stage code"))?;
+    let copy = rd.u16()?;
+    let dest = Dest { stage, copy };
+    let tag = rd.u8()?;
+    let msg = match tag {
+        0 => {
+            let id_base = rd.u32()?;
+            let rows = rd.u32()?;
+            let flat: Arc<[f32]> = rd.f32s()?.into();
+            Msg::IndexBlock { id_base, rows, flat }
+        }
+        1 => {
+            let qid = rd.u32()?;
+            let raw: Arc<[f32]> = rd.f32s()?.into();
+            let v: Arc<[f32]> = rd.f32s()?.into();
+            Msg::QueryVec { qid, raw, v }
+        }
+        2 => {
+            let id = rd.u32()?;
+            let v: Arc<[f32]> = rd.f32s()?.into();
+            Msg::StoreObject { id, v }
+        }
+        3 => {
+            let table = rd.u8()?;
+            let key = rd.u64()?;
+            let id = rd.u32()?;
+            let dp = rd.u16()?;
+            Msg::IndexRef { table, key, id, dp }
+        }
+        4 => {
+            let qid = rd.u32()?;
+            let n = rd.len_prefix(9)?;
+            let mut probes = Vec::with_capacity(n);
+            for _ in 0..n {
+                let table = rd.u8()?;
+                let key = rd.u64()?;
+                probes.push((table, key));
+            }
+            let v: Arc<[f32]> = rd.f32s()?.into();
+            Msg::Query { qid, probes, v }
+        }
+        5 => {
+            let qid = rd.u32()?;
+            let n = rd.len_prefix(4)?;
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(rd.u32()?);
+            }
+            let v: Arc<[f32]> = rd.f32s()?.into();
+            Msg::CandidateReq { qid, ids, v }
+        }
+        6 => {
+            let qid = rd.u32()?;
+            let n_bi = rd.u32()?;
+            Msg::QueryMeta { qid, n_bi }
+        }
+        7 => {
+            let qid = rd.u32()?;
+            let n_dp = rd.u32()?;
+            Msg::BiMeta { qid, n_dp }
+        }
+        8 => {
+            let qid = rd.u32()?;
+            let n = rd.len_prefix(8)?;
+            let mut hits = Vec::with_capacity(n);
+            for _ in 0..n {
+                let d = rd.f32()?;
+                let id = rd.u32()?;
+                hits.push((d, id));
+            }
+            Msg::LocalTopK { qid, hits }
+        }
+        _ => bail!("unknown message tag {tag}"),
+    };
+    rd.done()?;
+    Ok((dest, msg))
+}
+
+// ------------------------------------------------------------- handshake
+
+/// The driver→worker handshake: which node this process is, the dataset
+/// dimensionality, where every worker listens, and the config slice the
+/// worker needs to reconstruct its stage copies. The digest covers the
+/// encoded config block; the worker echoes it in `HelloOk` so launcher and
+/// worker prove they agree on parameters (and on this codec version).
+#[derive(Clone, Debug)]
+pub struct Hello {
+    pub node: u16,
+    pub dim: u32,
+    /// Listen address per worker node id (`0..bi_nodes + dp_nodes`).
+    pub peers: Vec<String>,
+    pub lsh: LshParams,
+    pub cluster: ClusterConfig,
+    pub stream: StreamConfig,
+    /// Filled on decode (and by [`config_digest`] on the driver side).
+    pub digest: u64,
+}
+
+fn encode_cfg_block(dim: u32, lsh: &LshParams, cluster: &ClusterConfig, stream: &StreamConfig) -> Vec<u8> {
+    let mut b = Vec::with_capacity(96);
+    put_u32(&mut b, dim);
+    put_u32(&mut b, lsh.l as u32);
+    put_u32(&mut b, lsh.m as u32);
+    put_f32(&mut b, lsh.w);
+    put_u32(&mut b, lsh.k as u32);
+    put_u32(&mut b, lsh.t as u32);
+    put_u64(&mut b, lsh.seed);
+    put_u32(&mut b, cluster.bi_nodes as u32);
+    put_u32(&mut b, cluster.dp_nodes as u32);
+    put_u32(&mut b, cluster.cores_per_node as u32);
+    put_u32(&mut b, cluster.ag_copies as u32);
+    put_u8(&mut b, cluster.per_core_copies as u8);
+    put_u8(&mut b, obj_map_code(stream.obj_map));
+    put_u64(&mut b, stream.agg_bytes as u64);
+    put_u8(&mut b, stream.dedup as u8);
+    put_u64(&mut b, stream.max_candidates as u64);
+    put_u64(&mut b, stream.inflight as u64);
+    b
+}
+
+/// The digest both ends must agree on before any workload flows.
+pub fn config_digest(dim: u32, lsh: &LshParams, cluster: &ClusterConfig, stream: &StreamConfig) -> u64 {
+    fnv1a64(FNV64_OFFSET, &encode_cfg_block(dim, lsh, cluster, stream))
+}
+
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u16(&mut p, h.node);
+    put_u16(&mut p, h.peers.len() as u16);
+    for addr in &h.peers {
+        put_str(&mut p, addr);
+    }
+    let cfg = encode_cfg_block(h.dim, &h.lsh, &h.cluster, &h.stream);
+    put_u32(&mut p, cfg.len() as u32);
+    p.extend_from_slice(&cfg);
+    put_u64(&mut p, fnv1a64(FNV64_OFFSET, &cfg));
+    p
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
+    let mut rd = Rd::new(payload);
+    let node = rd.u16()?;
+    let n_peers = rd.u16()? as usize;
+    let mut peers = Vec::with_capacity(n_peers.min(rd.remaining() / 2));
+    for _ in 0..n_peers {
+        peers.push(rd.str()?);
+    }
+    let cfg_len = rd.u32()? as usize;
+    let cfg = rd.take(cfg_len)?.to_vec();
+    let digest = rd.u64()?;
+    rd.done()?;
+    if digest != fnv1a64(FNV64_OFFSET, &cfg) {
+        bail!("handshake config digest mismatch");
+    }
+    let mut c = Rd::new(&cfg);
+    let dim = c.u32()?;
+    let lsh = LshParams {
+        l: c.u32()? as usize,
+        m: c.u32()? as usize,
+        w: c.f32()?,
+        k: c.u32()? as usize,
+        t: c.u32()? as usize,
+        seed: c.u64()?,
+    };
+    let cluster = ClusterConfig {
+        bi_nodes: c.u32()? as usize,
+        dp_nodes: c.u32()? as usize,
+        cores_per_node: c.u32()? as usize,
+        ag_copies: c.u32()? as usize,
+        per_core_copies: c.u8()? != 0,
+    };
+    let stream = StreamConfig {
+        obj_map: obj_map_from_code(c.u8()?)?,
+        agg_bytes: c.u64()? as usize,
+        dedup: c.u8()? != 0,
+        max_candidates: c.u64()? as usize,
+        inflight: c.u64()? as usize,
+    };
+    c.done()?;
+    Ok(Hello { node, dim, peers, lsh, cluster, stream, digest })
+}
+
+pub fn encode_hello_ok(node: u16, digest: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(10);
+    put_u16(&mut p, node);
+    put_u64(&mut p, digest);
+    p
+}
+
+pub fn decode_hello_ok(payload: &[u8]) -> Result<(u16, u64)> {
+    let mut rd = Rd::new(payload);
+    let node = rd.u16()?;
+    let digest = rd.u64()?;
+    rd.done()?;
+    Ok((node, digest))
+}
+
+pub fn encode_peer_hello(node: u16) -> Vec<u8> {
+    let mut p = Vec::with_capacity(2);
+    put_u16(&mut p, node);
+    p
+}
+
+pub fn decode_peer_hello(payload: &[u8]) -> Result<u16> {
+    let mut rd = Rd::new(payload);
+    let node = rd.u16()?;
+    rd.done()?;
+    Ok(node)
+}
+
+// --------------------------------------------------------------- control
+
+pub fn encode_qid(qid: u32) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4);
+    put_u32(&mut p, qid);
+    p
+}
+
+pub fn decode_qid(payload: &[u8]) -> Result<u32> {
+    let mut rd = Rd::new(payload);
+    let qid = rd.u32()?;
+    rd.done()?;
+    Ok(qid)
+}
+
+pub fn encode_stopped(reason: &str) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_str(&mut p, reason);
+    p
+}
+
+pub fn decode_stopped(payload: &[u8]) -> Result<String> {
+    let mut rd = Rd::new(payload);
+    let reason = rd.str()?;
+    rd.done()?;
+    Ok(reason)
+}
+
+/// FlushAck: barrier sequence number + the worker's phase meter (per-link
+/// real bytes-on-wire plus the logical/local/payload counters).
+pub fn encode_flush_ack(seq: u32, meter: &TrafficMeter) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u32(&mut p, seq);
+    put_u64(&mut p, meter.logical_msgs);
+    put_u64(&mut p, meter.local_msgs);
+    put_u64(&mut p, meter.payload_bytes);
+    let mut links: Vec<_> = meter.links().iter().map(|(&k, &v)| (k, v)).collect();
+    links.sort_by_key(|(k, _)| *k);
+    put_u32(&mut p, links.len() as u32);
+    for ((src, dst), l) in links {
+        put_u16(&mut p, src);
+        put_u16(&mut p, dst);
+        put_u64(&mut p, l.packets);
+        put_u64(&mut p, l.bytes);
+    }
+    p
+}
+
+pub fn decode_flush_ack(payload: &[u8]) -> Result<(u32, TrafficMeter)> {
+    let mut rd = Rd::new(payload);
+    let seq = rd.u32()?;
+    let mut meter = TrafficMeter::new(0);
+    meter.header_bytes = 0;
+    meter.logical_msgs = rd.u64()?;
+    meter.local_msgs = rd.u64()?;
+    meter.payload_bytes = rd.u64()?;
+    let n = rd.len_prefix(20)?;
+    for _ in 0..n {
+        let src = rd.u16()?;
+        let dst = rd.u16()?;
+        let packets = rd.u64()?;
+        let bytes = rd.u64()?;
+        meter.add_link(src, dst, packets, bytes);
+    }
+    rd.done()?;
+    Ok((seq, meter))
+}
+
+// ------------------------------------------------------------- snapshots
+
+/// One worker's stage state, decoded from a `StateDump` frame. Snapshots
+/// preserve per-bucket insertion order, so the differential test can assert
+/// state identity against an inline-built cluster down to that order.
+#[derive(Debug, Default)]
+pub struct NodeState {
+    /// Per hosted BI copy: `(copy, [(bucket key, [(id, dp)])])`, key-sorted.
+    pub bis: Vec<(u16, Vec<(u64, Vec<(u32, u16)>)>)>,
+    /// Per hosted DP copy: `(copy, [(id, vector)])`, id-sorted.
+    pub dps: Vec<(u16, Vec<(u32, Vec<f32>)>)>,
+}
+
+pub fn encode_state_dump(bis: &[BiState], dps: &[DpState]) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u32(&mut p, bis.len() as u32);
+    for bi in bis {
+        put_u16(&mut p, bi.copy);
+        let snap = bi.buckets_snapshot();
+        put_u32(&mut p, snap.len() as u32);
+        for (key, refs) in snap {
+            put_u64(&mut p, key);
+            put_u32(&mut p, refs.len() as u32);
+            for &(id, dp) in refs.iter() {
+                put_u32(&mut p, id);
+                put_u16(&mut p, dp);
+            }
+        }
+    }
+    put_u32(&mut p, dps.len() as u32);
+    for dp in dps {
+        put_u16(&mut p, dp.copy);
+        let snap = dp.objects_snapshot();
+        put_u32(&mut p, snap.len() as u32);
+        for (id, v) in snap {
+            put_u32(&mut p, id);
+            put_f32s(&mut p, v);
+        }
+    }
+    p
+}
+
+pub fn decode_state_dump(payload: &[u8]) -> Result<NodeState> {
+    let mut rd = Rd::new(payload);
+    let mut out = NodeState::default();
+    let n_bi = rd.len_prefix(2)?;
+    for _ in 0..n_bi {
+        let copy = rd.u16()?;
+        let n_buckets = rd.len_prefix(12)?;
+        let mut buckets = Vec::with_capacity(n_buckets);
+        for _ in 0..n_buckets {
+            let key = rd.u64()?;
+            let n_refs = rd.len_prefix(6)?;
+            let mut refs = Vec::with_capacity(n_refs);
+            for _ in 0..n_refs {
+                let id = rd.u32()?;
+                let dp = rd.u16()?;
+                refs.push((id, dp));
+            }
+            buckets.push((key, refs));
+        }
+        out.bis.push((copy, buckets));
+    }
+    let n_dp = rd.len_prefix(2)?;
+    for _ in 0..n_dp {
+        let copy = rd.u16()?;
+        let n_objs = rd.len_prefix(8)?;
+        let mut objs = Vec::with_capacity(n_objs);
+        for _ in 0..n_objs {
+            let id = rd.u32()?;
+            let v = rd.f32s()?;
+            objs.push((id, v));
+        }
+        out.dps.push((copy, objs));
+    }
+    rd.done()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::{check, Gen};
+
+    fn read_back(frame: &[u8], max: usize) -> Result<Frame> {
+        read_frame(&mut &frame[..], max)
+    }
+
+    fn rand_vec(g: &mut Gen, max_len: usize) -> Vec<f32> {
+        let n = g.usize_in(0, max_len);
+        g.vec_f32(n, -1e6, 1e6)
+    }
+
+    fn rand_msg(g: &mut Gen) -> Msg {
+        match g.usize_in(0, 8) {
+            0 => Msg::IndexBlock {
+                id_base: g.usize_in(0, 1 << 20) as u32,
+                rows: g.usize_in(0, 64) as u32,
+                flat: rand_vec(g, 256).into(),
+            },
+            1 => Msg::QueryVec {
+                qid: g.usize_in(0, 1 << 20) as u32,
+                raw: rand_vec(g, 64).into(),
+                v: rand_vec(g, 128).into(),
+            },
+            2 => Msg::StoreObject {
+                id: g.usize_in(0, 1 << 20) as u32,
+                v: rand_vec(g, 128).into(),
+            },
+            3 => Msg::IndexRef {
+                table: g.usize_in(0, 255) as u8,
+                key: g.rng.next_u64(),
+                id: g.usize_in(0, 1 << 20) as u32,
+                dp: g.usize_in(0, 1 << 12) as u16,
+            },
+            4 => Msg::Query {
+                qid: g.usize_in(0, 1 << 20) as u32,
+                probes: (0..g.usize_in(0, 40))
+                    .map(|_| (g.usize_in(0, 255) as u8, g.rng.next_u64()))
+                    .collect(),
+                v: rand_vec(g, 128).into(),
+            },
+            5 => Msg::CandidateReq {
+                qid: g.usize_in(0, 1 << 20) as u32,
+                ids: (0..g.usize_in(0, 60))
+                    .map(|_| g.usize_in(0, 1 << 20) as u32)
+                    .collect(),
+                v: rand_vec(g, 128).into(),
+            },
+            6 => Msg::QueryMeta {
+                qid: g.usize_in(0, 1 << 20) as u32,
+                n_bi: g.usize_in(0, 1 << 10) as u32,
+            },
+            7 => Msg::BiMeta {
+                qid: g.usize_in(0, 1 << 20) as u32,
+                n_dp: g.usize_in(0, 1 << 10) as u32,
+            },
+            _ => Msg::LocalTopK {
+                qid: g.usize_in(0, 1 << 20) as u32,
+                hits: (0..g.usize_in(0, 30))
+                    .map(|_| (g.f32_in(0.0, 1e9), g.usize_in(0, 1 << 20) as u32))
+                    .collect(),
+            },
+        }
+    }
+
+    fn rand_dest(g: &mut Gen) -> Dest {
+        let stage = *g.pick(&[StageKind::Bi, StageKind::Dp, StageKind::Ag]);
+        Dest { stage, copy: g.usize_in(0, 1 << 10) as u16 }
+    }
+
+    #[test]
+    fn stage_roundtrip_every_variant() {
+        check("wire-stage-roundtrip", 200, |g| {
+            let dest = rand_dest(g);
+            let msg = rand_msg(g);
+            let frame = stage_frame(dest, &msg);
+            let f = read_back(&frame, 1 << 24).expect("read");
+            assert_eq!(f.kind, FrameKind::Stage);
+            let (d2, m2) = decode_stage(&f.payload).expect("decode");
+            assert_eq!(dest, d2);
+            assert_eq!(format!("{msg:?}"), format!("{m2:?}"));
+        });
+    }
+
+    #[test]
+    fn empty_vector_payloads_roundtrip() {
+        let cases = vec![
+            Msg::IndexBlock { id_base: 0, rows: 0, flat: Vec::new().into() },
+            Msg::Query { qid: 1, probes: Vec::new(), v: Vec::new().into() },
+            Msg::CandidateReq { qid: 2, ids: Vec::new(), v: Vec::new().into() },
+            Msg::LocalTopK { qid: 3, hits: Vec::new() },
+        ];
+        for msg in cases {
+            let frame = stage_frame(Dest::ag(0), &msg);
+            let f = read_back(&frame, 1 << 16).unwrap();
+            let (_, m2) = decode_stage(&f.payload).unwrap();
+            assert_eq!(format!("{msg:?}"), format!("{m2:?}"));
+        }
+    }
+
+    #[test]
+    fn max_size_frames_pass_and_oversize_is_rejected() {
+        let n = 1000usize; // payload = 3 (dest) + 1 (tag) + 4 + 4 + 4 + 4n
+        let msg = Msg::IndexBlock {
+            id_base: 0,
+            rows: n as u32,
+            flat: vec![1.5f32; n].into(),
+        };
+        let frame = stage_frame(Dest::bi(0), &msg);
+        let payload_len = frame.len() - HEADER_LEN;
+        // exactly at the cap: accepted
+        let f = read_back(&frame, payload_len).unwrap();
+        assert_eq!(f.payload.len(), payload_len);
+        // one byte below the cap: rejected before allocating
+        let err = read_back(&frame, payload_len - 1).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let msg = Msg::CandidateReq {
+            qid: 7,
+            ids: vec![1, 2, 3, 99],
+            v: vec![0.5f32; 16].into(),
+        };
+        let frame = stage_frame(Dest::dp(3), &msg);
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x40;
+            let rejected = match read_back(&bad, 1 << 16) {
+                Err(_) => true,
+                // A flipped length byte can only slip past the cap check by
+                // *shrinking* the frame; the checksum then has to catch it.
+                Ok(f) => decode_stage(&f.payload).is_err(),
+            };
+            assert!(rejected, "flip at byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error() {
+        let frame = stage_frame(Dest::ag(1), &Msg::QueryMeta { qid: 5, n_bi: 2 });
+        for cut in [0, HEADER_LEN - 1, HEADER_LEN + 2, frame.len() - 1] {
+            assert!(read_back(&frame[..cut], 1 << 16).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn hello_roundtrip_and_digest() {
+        let hello = Hello {
+            node: 2,
+            dim: 128,
+            peers: vec!["127.0.0.1:41000".into(), "127.0.0.1:41001".into(), "127.0.0.1:41002".into()],
+            lsh: LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 },
+            cluster: ClusterConfig {
+                bi_nodes: 1,
+                dp_nodes: 2,
+                cores_per_node: 4,
+                ag_copies: 2,
+                per_core_copies: false,
+            },
+            stream: StreamConfig {
+                obj_map: ObjMapStrategy::Lsh,
+                agg_bytes: 4096,
+                dedup: true,
+                max_candidates: 7,
+                inflight: 2,
+            },
+            digest: 0,
+        };
+        let p = encode_hello(&hello);
+        let h2 = decode_hello(&p).unwrap();
+        assert_eq!(h2.node, 2);
+        assert_eq!(h2.dim, 128);
+        assert_eq!(h2.peers, hello.peers);
+        assert_eq!(h2.lsh, hello.lsh);
+        assert_eq!(h2.cluster.dp_nodes, 2);
+        assert_eq!(h2.stream.obj_map, ObjMapStrategy::Lsh);
+        assert_eq!(h2.stream.inflight, 2);
+        assert_eq!(
+            h2.digest,
+            config_digest(128, &hello.lsh, &hello.cluster, &hello.stream)
+        );
+        // tampering with the config block is caught by the digest
+        let mut bad = p.clone();
+        let idx = p.len() - 12; // inside the cfg block, before the digest
+        bad[idx] ^= 1;
+        assert!(decode_hello(&bad).is_err());
+    }
+
+    #[test]
+    fn flush_ack_meter_roundtrip() {
+        let mut m = TrafficMeter::new(0);
+        m.header_bytes = 0;
+        m.send(0, 3, 100);
+        m.send(0, 3, 50);
+        m.send(1, 3, 10);
+        m.send(2, 2, 999); // local
+        let p = encode_flush_ack(42, &m);
+        let (seq, m2) = decode_flush_ack(&p).unwrap();
+        assert_eq!(seq, 42);
+        assert_eq!(m2.logical_msgs, 3);
+        assert_eq!(m2.local_msgs, 1);
+        assert_eq!(m2.payload_bytes, 160);
+        assert_eq!(m2.total_packets(), m.total_packets());
+        assert_eq!(m2.total_bytes(), m.total_bytes());
+        assert_eq!(m2.links()[&(0, 3)].bytes, m.links()[&(0, 3)].bytes);
+    }
+
+    #[test]
+    fn state_dump_roundtrip() {
+        let mut bi = BiState::new(4, 1, 0);
+        bi.on_index_ref(100, 1, 0);
+        bi.on_index_ref(100, 2, 1);
+        bi.on_index_ref(7, 3, 0);
+        let mut dp = DpState::new(9, 4, 2, 1, true);
+        dp.on_store(11, &[1.0, 2.0, 3.0, 4.0]);
+        dp.on_store(10, &[5.0, 6.0, 7.0, 8.0]);
+        let p = encode_state_dump(&[bi], &[dp]);
+        let st = decode_state_dump(&p).unwrap();
+        assert_eq!(st.bis.len(), 1);
+        let (copy, buckets) = &st.bis[0];
+        assert_eq!(*copy, 4);
+        assert_eq!(
+            buckets,
+            &vec![(7u64, vec![(3u32, 0u16)]), (100, vec![(1, 0), (2, 1)])]
+        );
+        let (copy, objs) = &st.dps[0];
+        assert_eq!(*copy, 9);
+        assert_eq!(
+            objs,
+            &vec![(10u32, vec![5.0, 6.0, 7.0, 8.0]), (11, vec![1.0, 2.0, 3.0, 4.0])]
+        );
+    }
+
+    #[test]
+    fn control_payloads_roundtrip() {
+        assert_eq!(decode_qid(&encode_qid(77)).unwrap(), 77);
+        assert_eq!(decode_peer_hello(&encode_peer_hello(3)).unwrap(), 3);
+        assert_eq!(
+            decode_hello_ok(&encode_hello_ok(2, 0xDEAD_BEEF)).unwrap(),
+            (2, 0xDEAD_BEEF)
+        );
+        assert_eq!(
+            decode_stopped(&encode_stopped("worker dispatch panicked")).unwrap(),
+            "worker dispatch panicked"
+        );
+        // trailing garbage is rejected
+        let mut p = encode_qid(1);
+        p.push(0);
+        assert!(decode_qid(&p).is_err());
+    }
+}

@@ -1,0 +1,417 @@
+//! The `parlsh worker --listen <addr>` process: hosts one cluster node's
+//! set of stage copies (paper: node = set of copies) behind the socket
+//! transport.
+//!
+//! Lifecycle: bind, print `PARLSH_WORKER_LISTEN <addr>` on stdout (the one
+//! and only stdout write — the launcher reads it to learn the bound port),
+//! accept connections, then dispatch. The first frame on each accepted
+//! connection identifies the sender: `Hello` (the driver — carries node
+//! assignment, placement, config and digest) or `PeerHello` (another
+//! worker). Per-connection reader threads decode frames into one internal
+//! channel; the main thread owns all stage state and processes events in
+//! arrival order, which preserves the per-connection FIFO that the build
+//! state-identity contract relies on (each BI/DP copy sees the single IR
+//! source in emission order, exactly like the in-process executors).
+//!
+//! Emissions route by `Placement`: same-node → local queue (a free
+//! delivery, like the in-process meters), head node → driver connection,
+//! other nodes → lazily-dialed peer connections. All outgoing frames are
+//! aggregated per peer (`stream.agg_bytes`) and flushed at idle, and the
+//! worker's `TrafficMeter` is charged with real encoded frame bytes —
+//! shipped back on every `FlushReq` barrier.
+//!
+//! Shutdown is typed both ways: a `Shutdown` frame exits cleanly; any
+//! failure path fires a drop-guard that sends the driver a `Stopped` frame
+//! (the socket rendition of the threaded executor's drop-guard), so the
+//! driver's admission loop can never hang on a dead worker.
+
+use crate::config::{Config, SocketConfig};
+use crate::dataflow::exec::{BiHandler, DpHandler, StageHandler};
+use crate::dataflow::message::{Dest, Msg, StageKind};
+use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::Placement;
+use crate::net::peer::{connect_retry, PeerConn};
+use crate::net::wire::{self, FrameKind, Hello};
+use crate::runtime::ScalarRanker;
+use crate::stages::{BiState, DpState};
+use crate::util::cli::Args;
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+
+/// Events the reader threads feed the dispatch loop.
+enum Ev {
+    Hello(Box<Hello>, TcpStream),
+    Msg(Dest, Msg),
+    Done(u32),
+    Flush(u32),
+    StateReq,
+    Shutdown,
+    Closed { driver: bool, err: String },
+    Fatal(String),
+}
+
+/// CLI entry: `parlsh worker [--listen=ADDR] [--set net.*=...]`.
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = Config::load(args)?;
+    let listen = args
+        .opt("listen")
+        .map(str::to_string)
+        .unwrap_or_else(|| cfg.sock.listen.clone());
+    serve(&listen, &cfg.sock)
+}
+
+/// Bind, announce, and dispatch until `Shutdown` (or a fatal error).
+pub fn serve(listen: &str, sock: &SocketConfig) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("worker bind {listen}"))?;
+    let addr = listener.local_addr()?;
+    // The launcher parses this line; everything else goes to stderr.
+    println!("PARLSH_WORKER_LISTEN {addr}");
+    std::io::stdout().flush().ok();
+
+    let (tx, rx) = mpsc::channel::<Ev>();
+    let max_frame = sock.max_frame_bytes;
+    std::thread::spawn(move || accept_loop(listener, tx, max_frame));
+    dispatch(rx, sock.clone())
+}
+
+fn accept_loop(listener: TcpListener, tx: Sender<Ev>, max_frame: usize) {
+    for conn in listener.incoming() {
+        let Ok(stream) = conn else { continue };
+        stream.set_nodelay(true).ok();
+        let tx = tx.clone();
+        std::thread::spawn(move || conn_reader(stream, tx, max_frame));
+    }
+}
+
+/// One reader per accepted connection: identify the sender by its first
+/// frame, then translate frames into events until EOF.
+fn conn_reader(mut stream: TcpStream, tx: Sender<Ev>, max_frame: usize) {
+    let first = match wire::read_frame(&mut stream, max_frame) {
+        Ok(f) => f,
+        // A connection that closes before identifying itself (e.g. a
+        // port probe) is not worth killing the worker over.
+        Err(_) => return,
+    };
+    let from_driver = match first.kind {
+        FrameKind::Hello => match wire::decode_hello(&first.payload) {
+            Ok(h) => {
+                let writer = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(e) => {
+                        let _ = tx.send(Ev::Fatal(format!("clone driver conn: {e}")));
+                        return;
+                    }
+                };
+                if tx.send(Ev::Hello(Box::new(h), writer)).is_err() {
+                    return;
+                }
+                true
+            }
+            Err(e) => {
+                let _ = tx.send(Ev::Fatal(format!("bad handshake: {e}")));
+                return;
+            }
+        },
+        FrameKind::PeerHello => {
+            if let Err(e) = wire::decode_peer_hello(&first.payload) {
+                let _ = tx.send(Ev::Fatal(format!("bad peer hello: {e}")));
+                return;
+            }
+            false
+        }
+        other => {
+            let _ = tx.send(Ev::Fatal(format!("unexpected first frame {other:?}")));
+            return;
+        }
+    };
+    reader_rest(stream, tx, max_frame, from_driver)
+}
+
+fn reader_rest(mut stream: TcpStream, tx: Sender<Ev>, max_frame: usize, from_driver: bool) {
+    loop {
+        match wire::read_frame(&mut stream, max_frame) {
+            Ok(f) => {
+                let ev = match f.kind {
+                    FrameKind::Stage => match wire::decode_stage(&f.payload) {
+                        Ok((d, m)) => Ev::Msg(d, m),
+                        Err(e) => Ev::Fatal(format!("bad stage frame: {e}")),
+                    },
+                    FrameKind::Done => match wire::decode_qid(&f.payload) {
+                        Ok(qid) => Ev::Done(qid),
+                        Err(e) => Ev::Fatal(format!("bad done frame: {e}")),
+                    },
+                    FrameKind::FlushReq => match wire::decode_qid(&f.payload) {
+                        Ok(seq) => Ev::Flush(seq),
+                        Err(e) => Ev::Fatal(format!("bad flush frame: {e}")),
+                    },
+                    FrameKind::StateReq => Ev::StateReq,
+                    FrameKind::Shutdown => Ev::Shutdown,
+                    other => Ev::Fatal(format!("unexpected frame {other:?}")),
+                };
+                let last = matches!(ev, Ev::Fatal(_) | Ev::Shutdown);
+                if tx.send(ev).is_err() || last {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Ev::Closed { driver: from_driver, err: e.to_string() });
+                return;
+            }
+        }
+    }
+}
+
+/// Drop-guard: tells the driver this worker is dying (fires on unwind and
+/// on error returns; disarmed only by a clean `Shutdown`).
+struct StopGuard {
+    conn: Option<TcpStream>,
+}
+
+impl StopGuard {
+    fn disarm(&mut self) {
+        self.conn = None;
+    }
+}
+
+impl Drop for StopGuard {
+    fn drop(&mut self) {
+        if let Some(conn) = &mut self.conn {
+            let frame = wire::encode_frame(
+                FrameKind::Stopped,
+                &wire::encode_stopped("worker dispatch terminated"),
+            );
+            let _ = conn.write_all(&frame);
+        }
+    }
+}
+
+fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
+    // Await the handshake before anything else; the driver holds the
+    // workload back until every worker replied HelloOk, so no peer can
+    // reach us with messages before our state exists.
+    let (hello, driver_stream) = match rx.recv().context("events closed before handshake")? {
+        Ev::Hello(h, w) => (*h, w),
+        Ev::Fatal(e) => bail!("{e}"),
+        Ev::Closed { err, .. } => bail!("connection closed before handshake: {err}"),
+        _ => bail!("frame before handshake"),
+    };
+
+    let placement = Placement::new(&hello.cluster);
+    let my = hello.node;
+    let n_workers = placement.total_nodes() - 1;
+    if (my as usize) >= n_workers {
+        bail!("assigned node {my} out of range (0..{n_workers})");
+    }
+    if hello.peers.len() != n_workers {
+        bail!("peer table has {} entries, expected {n_workers}", hello.peers.len());
+    }
+    let dim = hello.dim as usize;
+    let agg = hello.stream.agg_bytes;
+
+    // The set of stage copies this node hosts, per the shared placement.
+    let mut bis: Vec<BiState> = Vec::new();
+    let mut bi_idx: HashMap<u16, usize> = HashMap::new();
+    for c in 0..placement.bi_copies as u16 {
+        if placement.node_of(StageKind::Bi, c) == my {
+            bi_idx.insert(c, bis.len());
+            bis.push(BiState::new(c, placement.ag_copies, hello.stream.max_candidates));
+        }
+    }
+    let mut dps: Vec<DpState> = Vec::new();
+    let mut dp_idx: HashMap<u16, usize> = HashMap::new();
+    for c in 0..placement.dp_copies as u16 {
+        if placement.node_of(StageKind::Dp, c) == my {
+            dp_idx.insert(c, dps.len());
+            dps.push(DpState::new(
+                c,
+                dim,
+                hello.lsh.k,
+                placement.ag_copies,
+                hello.stream.dedup,
+            ));
+        }
+    }
+    // Workers always rank with the scalar oracle — bit-identical to the
+    // inline differential baseline (DESIGN.md §Transports).
+    let ranker = ScalarRanker { dim };
+
+    let mut guard = StopGuard { conn: driver_stream.try_clone().ok() };
+    let mut driver = PeerConn::new(driver_stream, agg);
+    driver.send_now(&wire::encode_frame(
+        FrameKind::HelloOk,
+        &wire::encode_hello_ok(my, hello.digest),
+    ))?;
+
+    let mut peers: Vec<Option<PeerConn>> = (0..n_workers).map(|_| None).collect();
+    let mut meter = fresh_meter(agg);
+    let mut queue: VecDeque<(Dest, Msg)> = VecDeque::new();
+    let mut scratch: Vec<(Dest, Msg)> = Vec::new();
+
+    loop {
+        let ev = match rx.try_recv() {
+            Ok(ev) => ev,
+            Err(TryRecvError::Empty) => {
+                // Idle: everything queued so far must reach the wire before
+                // we block, or closed-loop admission would deadlock.
+                driver.flush()?;
+                for p in peers.iter_mut().flatten() {
+                    p.flush()?;
+                }
+                match rx.recv() {
+                    Ok(ev) => ev,
+                    Err(_) => bail!("event channel closed"),
+                }
+            }
+            Err(TryRecvError::Disconnected) => bail!("event channel closed"),
+        };
+        match ev {
+            Ev::Msg(dest, msg) => {
+                queue.push_back((dest, msg));
+                drain(
+                    &mut queue,
+                    &mut bis,
+                    &bi_idx,
+                    &mut dps,
+                    &dp_idx,
+                    &ranker,
+                    &placement,
+                    my,
+                    &hello.peers,
+                    &sock,
+                    agg,
+                    &mut driver,
+                    &mut peers,
+                    &mut meter,
+                    &mut scratch,
+                )?;
+            }
+            Ev::Done(qid) => {
+                for dp in dps.iter_mut() {
+                    dp.finish_query(qid);
+                }
+            }
+            Ev::Flush(seq) => {
+                for p in peers.iter_mut().flatten() {
+                    p.flush()?;
+                }
+                meter.flush();
+                driver.send_now(&wire::encode_frame(
+                    FrameKind::FlushAck,
+                    &wire::encode_flush_ack(seq, &meter),
+                ))?;
+                meter = fresh_meter(agg);
+            }
+            Ev::StateReq => {
+                driver.send_now(&wire::encode_frame(
+                    FrameKind::StateDump,
+                    &wire::encode_state_dump(&bis, &dps),
+                ))?;
+            }
+            Ev::Shutdown => {
+                driver.flush()?;
+                for p in peers.iter_mut().flatten() {
+                    p.flush()?;
+                }
+                guard.disarm();
+                return Ok(());
+            }
+            Ev::Closed { driver: true, err } => bail!("driver connection lost: {err}"),
+            // A peer closing its sending side is normal wind-down; a peer
+            // *crash* is detected by the driver on its own connection.
+            Ev::Closed { driver: false, .. } => {}
+            Ev::Fatal(e) => bail!("{e}"),
+            Ev::Hello(..) => bail!("duplicate handshake"),
+        }
+    }
+}
+
+fn fresh_meter(agg: usize) -> TrafficMeter {
+    // header_bytes = 0: each frame already carries its real 12-byte header
+    // in its encoded length, so link bytes equal actual bytes-on-wire.
+    let mut m = TrafficMeter::new(agg);
+    m.header_bytes = 0;
+    m
+}
+
+/// Process queued local deliveries to quiescence, routing emissions by
+/// placement (local re-queue / driver / lazily-dialed peer).
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    queue: &mut VecDeque<(Dest, Msg)>,
+    bis: &mut [BiState],
+    bi_idx: &HashMap<u16, usize>,
+    dps: &mut [DpState],
+    dp_idx: &HashMap<u16, usize>,
+    ranker: &ScalarRanker,
+    placement: &Placement,
+    my: u16,
+    addrs: &[String],
+    sock: &SocketConfig,
+    agg: usize,
+    driver: &mut PeerConn,
+    peers: &mut [Option<PeerConn>],
+    meter: &mut TrafficMeter,
+    scratch: &mut Vec<(Dest, Msg)>,
+) -> Result<()> {
+    while let Some((dest, msg)) = queue.pop_front() {
+        match dest.stage {
+            StageKind::Bi => {
+                let &i = bi_idx
+                    .get(&dest.copy)
+                    .with_context(|| format!("BI copy {} not hosted on node {my}", dest.copy))?;
+                BiHandler { bi: &mut bis[i] }.on_msg(msg, scratch);
+            }
+            StageKind::Dp => {
+                let &i = dp_idx
+                    .get(&dest.copy)
+                    .with_context(|| format!("DP copy {} not hosted on node {my}", dest.copy))?;
+                DpHandler { dp: &mut dps[i], ranker: Some(ranker) }.on_msg(msg, scratch);
+            }
+            other => bail!("stage {other:?} routed to worker node {my}"),
+        }
+        for (d, m) in scratch.drain(..) {
+            let node = placement.node_of(d.stage, d.copy);
+            if node == my {
+                // Same-node delivery: free, like the in-process executors.
+                meter.send(my, my, 0);
+                queue.push_back((d, m));
+            } else {
+                let frame = wire::stage_frame(d, &m);
+                meter.send(my, node, frame.len());
+                if node == placement.head_node {
+                    driver.send(&frame)?;
+                } else {
+                    peer_conn(peers, node, my, addrs, sock, agg)?.send(&frame)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fetch (dialing on first use) the connection to another worker node.
+fn peer_conn<'p>(
+    peers: &'p mut [Option<PeerConn>],
+    node: u16,
+    my: u16,
+    addrs: &[String],
+    sock: &SocketConfig,
+    agg: usize,
+) -> Result<&'p mut PeerConn> {
+    let slot = &mut peers[node as usize];
+    if slot.is_none() {
+        let stream = connect_retry(&addrs[node as usize], sock.connect_retries, sock.retry_ms)
+            .with_context(|| format!("node {my} dialing node {node} at {}", addrs[node as usize]))?;
+        let mut pc = PeerConn::new(stream, agg);
+        pc.send_now(&wire::encode_frame(
+            FrameKind::PeerHello,
+            &wire::encode_peer_hello(my),
+        ))?;
+        *slot = Some(pc);
+    }
+    Ok(slot.as_mut().unwrap())
+}

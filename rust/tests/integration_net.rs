@@ -1,0 +1,153 @@
+//! The multi-process differential contract (DESIGN.md §Transports): the
+//! full build + search pipeline across real OS processes on loopback TCP
+//! must be indistinguishable from the deterministic inline executor —
+//! BI/DP state identical per bucket after build, top-k identical per query
+//! after search — while reporting *measured* wire bytes and shutting every
+//! worker down cleanly.
+//!
+//! Topology: 1 BI node + 2 DP nodes = 3 `parlsh worker` processes plus
+//! this test process as the head node (4 OS processes total). Search runs
+//! under closed-loop admission (`stream.inflight = 2`) with two AG copies,
+//! the satellite cases of ISSUE 2. Cargo builds the `parlsh` binary for
+//! integration tests and hands us its path via `CARGO_BIN_EXE_parlsh`.
+
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index, build_index_on, search, search_on};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::data::Dataset;
+use parlsh::net::NetSession;
+use parlsh::runtime::{ScalarHasher, ScalarRanker};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn net_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 };
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.cluster.ag_copies = 2;
+    cfg.stream.inflight = 2;
+    cfg.data.n = 1_500;
+    cfg
+}
+
+fn small_world(cfg: &Config, queries: usize) -> (Dataset, Dataset, ScalarHasher, ScalarRanker) {
+    let ds = synthesize(SynthSpec { n: cfg.data.n, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let ranker = ScalarRanker { dim: ds.dim };
+    (ds, qs, ScalarHasher { family }, ranker)
+}
+
+#[test]
+fn loopback_multiprocess_build_and_search_match_inline() {
+    let cfg = net_cfg();
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 15);
+
+    // The oracle: deterministic inline executor, in-process.
+    let mut inline_cluster = build_index(&cfg, &ds, &hasher);
+    let inline_out = search(&mut inline_cluster, &qs, &hasher, &ranker);
+
+    // The system under test: 3 worker processes + this driver.
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let sess = NetSession::launch_with_bin(Path::new(bin), &cfg, ds.dim).expect("launch workers");
+    let mut net_cluster = build_index_on(sess.executor(), &cfg, &ds, &hasher);
+
+    // --- build: state-identical per bucket, across process boundaries ---
+    let state = sess.fetch_state().expect("fetch worker state");
+    assert_eq!(state.len(), 3, "one dump per worker");
+    let mut remote_bis: BTreeMap<u16, Vec<(u64, Vec<(u32, u16)>)>> = BTreeMap::new();
+    let mut remote_dps: BTreeMap<u16, Vec<(u32, Vec<f32>)>> = BTreeMap::new();
+    for (_node, ns) in state {
+        for (copy, buckets) in ns.bis {
+            assert!(remote_bis.insert(copy, buckets).is_none(), "BI copy hosted twice");
+        }
+        for (copy, objs) in ns.dps {
+            assert!(remote_dps.insert(copy, objs).is_none(), "DP copy hosted twice");
+        }
+    }
+    assert_eq!(remote_bis.len(), inline_cluster.bis.len());
+    assert_eq!(remote_dps.len(), inline_cluster.dps.len());
+    let mut stored = 0usize;
+    for bi in &inline_cluster.bis {
+        let want: Vec<(u64, Vec<(u32, u16)>)> = bi
+            .buckets_snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, v.clone()))
+            .collect();
+        assert_eq!(
+            remote_bis[&bi.copy], want,
+            "BI copy {} diverged across the wire",
+            bi.copy
+        );
+    }
+    for dp in &inline_cluster.dps {
+        let want: Vec<(u32, Vec<f32>)> = dp
+            .objects_snapshot()
+            .into_iter()
+            .map(|(id, v)| (id, v.to_vec()))
+            .collect();
+        assert_eq!(remote_dps[&dp.copy], want, "DP copy {} diverged across the wire", dp.copy);
+        stored += want.len();
+    }
+    assert_eq!(stored, ds.len(), "no-replication invariant across processes");
+
+    // Build traffic: message-for-message the same flow, but measured frame
+    // bytes strictly exceed the wire_size model (headers + length prefixes).
+    assert_eq!(
+        net_cluster.build_meter.logical_msgs,
+        inline_cluster.build_meter.logical_msgs
+    );
+    assert!(
+        net_cluster.build_meter.payload_bytes > inline_cluster.build_meter.payload_bytes,
+        "socket meter should carry real codec bytes"
+    );
+
+    // --- search: identical top-k under inflight=2 and ag_copies=2 ---
+    let net_out = search_on(sess.executor(), &mut net_cluster, &qs, &hasher, &ranker);
+    assert_eq!(inline_out.results, net_out.results, "top-k diverged across the wire");
+    assert_eq!(inline_out.meter.logical_msgs, net_out.meter.logical_msgs);
+    assert_eq!(inline_out.meter.local_msgs, net_out.meter.local_msgs);
+    assert!(net_out.meter.payload_bytes > inline_out.meter.payload_bytes);
+    assert!(net_out.meter.total_packets() > 0);
+    // Per-link accounting covers both driver->worker and worker->driver
+    // directions (QR fan-out and DP/BI results), with real bytes on each.
+    let head = net_cluster.placement.head_node;
+    let links = net_out.meter.links();
+    assert!(
+        links.keys().any(|&(src, _)| src == head),
+        "no metered driver->worker link"
+    );
+    assert!(
+        links.keys().any(|&(_, dst)| dst == head),
+        "no metered worker->driver link"
+    );
+    for l in links.values() {
+        assert!(l.bytes > 0 && l.packets > 0);
+    }
+    assert!(net_out.per_query_secs.iter().all(|&s| s > 0.0));
+
+    // --- clean, typed shutdown: every worker exits with status 0 ---
+    sess.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn open_loop_single_ag_also_matches_inline() {
+    // The default serving shape: open loop, one aggregator.
+    let mut cfg = net_cfg();
+    cfg.stream.inflight = 0;
+    cfg.cluster.ag_copies = 1;
+    cfg.data.n = 1_000;
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 10);
+
+    let mut inline_cluster = build_index(&cfg, &ds, &hasher);
+    let inline_out = search(&mut inline_cluster, &qs, &hasher, &ranker);
+
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let sess = NetSession::launch_with_bin(Path::new(bin), &cfg, ds.dim).expect("launch workers");
+    let mut net_cluster = build_index_on(sess.executor(), &cfg, &ds, &hasher);
+    let net_out = search_on(sess.executor(), &mut net_cluster, &qs, &hasher, &ranker);
+    assert_eq!(inline_out.results, net_out.results);
+    sess.shutdown().expect("clean shutdown");
+}
