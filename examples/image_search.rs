@@ -6,8 +6,10 @@
 //!   * synthetic "Web image" SIFT corpus (clustered 128-d, [0,255]);
 //!   * distorted-query workload (the Yahoo dataset protocol);
 //!   * distributed index build through the IR→BI/DP dataflow;
-//!   * **threaded** serving through QR→BI→DP→AG — one thread per stage
-//!     copy, the paper's asynchronous design;
+//!   * **session-oriented** serving (DESIGN.md §Service API): the index
+//!     stays resident in an `IndexSession` on the threaded executor while
+//!     queries stream in one at a time and completions stream back out by
+//!     ticket — the paper's continuously-running asynchronous design;
 //!   * PJRT-compiled JAX/Pallas kernels on the hash + rank hot paths;
 //!   * recall@10 against exact ground truth, latency percentiles,
 //!     throughput, and communication metrics.
@@ -19,8 +21,10 @@
 //! ```
 
 use parlsh::config::Config;
-use parlsh::coordinator::{build_index, threaded::search_threaded};
+use parlsh::coordinator::build_index;
+use parlsh::coordinator::session::IndexSession;
 use parlsh::data::recall::recall_at_k;
+use parlsh::dataflow::exec::ThreadedExecutor;
 use parlsh::experiments::{backends, env_usize, world};
 use parlsh::metrics::latency_stats;
 use parlsh::util::timer::Timer;
@@ -66,16 +70,35 @@ fn main() {
         imb.max_over_mean_pct
     );
 
-    // Serve (threaded, open-loop).
+    // Serve: a persistent session on the threaded executor — submit each
+    // descriptor query as it "arrives", collect completions by ticket.
+    let session = IndexSession::attach(
+        &ThreadedExecutor,
+        &mut cluster,
+        b.hasher.as_ref(),
+        Some(b.ranker.as_ref()),
+    );
     let t = Timer::start();
-    let out = search_threaded(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref());
+    let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); w.queries.len()];
+    for qi in 0..w.queries.len() {
+        session.submit(w.queries.get(qi));
+    }
+    for (ticket, hits) in session.drain() {
+        results[ticket.0 as usize] = hits; // tickets are dense: 0..n
+    }
+    let stats = session.close();
     let secs = t.secs();
-    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
-    let lat = latency_stats(&out.per_query_secs);
+
+    let retrieved: Vec<Vec<u32>> = results
+        .iter()
+        .map(|r| r.iter().map(|&(_, id)| id).collect())
+        .collect();
+    let recall = recall_at_k(&retrieved, &w.gt);
+    let lat = latency_stats(&stats.per_query_secs);
 
     println!("== serving results ==");
     println!(
-        "throughput: {:.1} queries/s ({} queries in {:.2}s, threaded executor)",
+        "throughput: {:.1} queries/s ({} queries in {:.2}s, IndexSession on the threaded executor)",
         w.queries.len() as f64 / secs,
         w.queries.len(),
         secs
@@ -87,13 +110,13 @@ fn main() {
     );
     println!(
         "traffic: {} logical msgs ({} intra-node), {} packets, {:.2} MB",
-        out.meter.logical_msgs,
-        out.meter.local_msgs,
-        out.meter.total_packets(),
-        out.meter.payload_bytes as f64 / 1e6
+        stats.search_meter.logical_msgs,
+        stats.search_meter.local_msgs,
+        stats.search_meter.total_packets(),
+        stats.search_meter.payload_bytes as f64 / 1e6
     );
-    let dists: u64 = out.work.iter().map(|(_, _, w)| w.dists_computed).sum();
-    let dups: u64 = out.work.iter().map(|(_, _, w)| w.dup_skipped).sum();
+    let dists: u64 = stats.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+    let dups: u64 = stats.work.iter().map(|(_, _, w)| w.dup_skipped).sum();
     println!(
         "work: {:.0} distance computations/query, {} duplicate candidates eliminated",
         dists as f64 / w.queries.len() as f64,
@@ -102,7 +125,7 @@ fn main() {
 
     // A couple of qualitative answers.
     for qi in 0..2usize {
-        let r = &out.results[qi];
+        let r = &results[qi];
         println!(
             "query {qi}: top-3 = {:?}",
             &r[..r.len().min(3)]

@@ -10,10 +10,12 @@
 //! ```
 
 use parlsh::config::Config;
-use parlsh::coordinator::{build_index_on, search_on};
+use parlsh::coordinator::session::IndexSession;
+use parlsh::coordinator::Cluster;
 use parlsh::data::recall::recall_at_k;
 use parlsh::experiments::{backends, env_usize, world};
 use parlsh::net::NetSession;
+use parlsh::util::timer::Timer;
 
 fn main() {
     let mut cfg = Config::default();
@@ -53,30 +55,62 @@ fn main() {
         cfg.cluster.bi_nodes + cfg.cluster.dp_nodes
     );
 
-    let mut cluster = build_index_on(sess.executor(), &cfg, &w.data, b.hasher.as_ref());
-    println!(
-        "built {} vectors across the wire in {:.2}s — {:.3} MB of real frames",
-        w.data.len(),
-        cluster.build_wall_secs,
-        cluster.build_meter.total_bytes() as f64 / 1e6,
-    );
-
-    let out = search_on(
+    // One persistent session over the socket executor: build, grow the
+    // index mid-session, and serve — all against the same worker processes,
+    // with a single handshake at launch (DESIGN.md §Service API).
+    let mut cluster = Cluster::empty(&cfg, w.data.dim);
+    let session = IndexSession::attach(
         sess.executor(),
         &mut cluster,
-        &w.queries,
         b.hasher.as_ref(),
-        b.ranker.as_ref(),
+        Some(b.ranker.as_ref()),
     );
-    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+
+    let t = Timer::start();
+    let (head, tail) = {
+        // hold the last 1000 vectors back so the post-build insert is real
+        let split = w.data.len().saturating_sub(1_000).max(1);
+        let mut head = parlsh::data::Dataset::with_capacity(w.data.dim, split);
+        let mut tail = parlsh::data::Dataset::with_capacity(w.data.dim, w.data.len() - split);
+        for i in 0..split {
+            head.push(w.data.get(i));
+        }
+        for i in split..w.data.len() {
+            tail.push(w.data.get(i));
+        }
+        (head, tail)
+    };
+    session.insert(&head);
+    println!(
+        "built {} vectors across the wire in {:.2}s",
+        head.len(),
+        t.secs(),
+    );
+    let grown = session.insert(&tail);
+    println!(
+        "grew the live index by {} vectors (ids {}..{}) — no re-handshake, same workers",
+        tail.len(),
+        grown.start,
+        grown.end
+    );
+
+    let mut retrieved: Vec<Vec<u32>> = vec![Vec::new(); w.queries.len()];
+    for qi in 0..w.queries.len() {
+        session.submit(w.queries.get(qi));
+    }
+    for (ticket, hits) in session.drain() {
+        retrieved[ticket.0 as usize] = hits.iter().map(|&(_, id)| id).collect();
+    }
+    let stats = session.close();
+    let recall = recall_at_k(&retrieved, &w.gt);
     println!(
         "searched {} queries: recall@{} = {recall:.3}, {:.3} MB on the wire ({} tcp packets)",
         w.queries.len(),
         cfg.lsh.k,
-        out.meter.total_bytes() as f64 / 1e6,
-        out.meter.total_packets(),
+        stats.search_meter.total_bytes() as f64 / 1e6,
+        stats.search_meter.total_packets(),
     );
-    print!("{}", out.meter.link_report());
+    print!("{}", stats.search_meter.link_report());
 
     sess.shutdown().expect("clean shutdown");
     println!("all workers exited cleanly");

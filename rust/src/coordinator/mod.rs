@@ -2,39 +2,50 @@
 //! pipelines (paper §IV-A) and drives them through the transport-agnostic
 //! executor seam (DESIGN.md §Executor seam).
 //!
-//! Both phases run on *any* [`Executor`]: [`build_index`]/[`search`] use the
-//! deterministic [`InlineExecutor`] (FIFO delivery, results bit-identical to
-//! the sequential baseline — the differential-testing contract in
-//! `rust/tests/integration_pipeline.rs`), while [`build_index_on`]/
-//! [`search_on`] accept the threaded executor or the multi-process socket
-//! executor (`crate::net::SocketExecutor`). Under the socket transport the
-//! placement handed to each phase is the launch-time placement: BI/DP state
-//! lives in the worker processes, so this `Cluster`'s `bis`/`dps` stay
-//! empty — snapshot workers with `NetSession::fetch_state` instead
-//! (`rust/tests/integration_net.rs` is that differential contract).
+//! The primary API is session-oriented (DESIGN.md §Service API): a
+//! [`session::IndexSession`] holds a [`Cluster`]'s stage states live on one
+//! [`Executor`] — inline, threaded, or the multi-process socket executor
+//! (`crate::net::SocketExecutor`) — and runs build, incremental
+//! [`insert`](session::IndexSession::insert) and streaming
+//! [`submit`](session::IndexSession::submit)/[`recv`](session::IndexSession::recv)
+//! phases back-to-back without re-handshaking anything. The historical
+//! phase calls survive as thin wrappers: [`build_index_on`] opens a session
+//! over an empty cluster, inserts, and closes; [`search_on`] opens a
+//! session, submits the whole query set, and drains it. [`build_index`]/
+//! [`search`] pin the deterministic [`InlineExecutor`] (FIFO delivery,
+//! results bit-identical to the sequential baseline — the
+//! differential-testing contract in `rust/tests/integration_pipeline.rs`).
+//!
+//! Under the socket transport the placement handed to each phase is the
+//! launch-time placement: BI/DP state lives in the worker processes, so
+//! this `Cluster`'s `bis`/`dps` stay empty — snapshot workers with
+//! `NetSession::fetch_state` instead (`rust/tests/integration_net.rs` is
+//! that differential contract). Work accounting is still complete: workers
+//! ship their per-copy [`WorkStats`] back in every `FlushAck` barrier.
 //! Network traffic is attributed by the executor via [`TrafficMeter`] using
 //! the stage placement — same-node deliveries are free, which is exactly how
 //! intra-stage parallelism cuts message counts.
 
 pub mod persist;
-pub mod threaded;
+pub mod session;
 
 use crate::config::Config;
 use crate::core::lsh::HashFamily;
 use crate::data::Dataset;
-use crate::dataflow::exec::{
-    bind_stages, Executor, InlineExecutor, IrHandler, QrHandler, Workload,
-};
+use crate::dataflow::exec::{bind_stages, Executor, InlineExecutor, IrHandler, Workload};
 use crate::dataflow::message::{Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::partition::ObjMapper;
 use crate::runtime::{Hasher, Ranker};
-use crate::stages::{AgState, BiState, DpState, InputReader, QueryReceiver};
+use crate::stages::{AgState, BiState, DpState, InputReader};
 use crate::util::timer::Timer;
+use session::IndexSession;
 use std::sync::Arc;
 
-/// A built distributed index: stage states + accounting.
+/// A distributed index: stage states + accounting. Create empty with
+/// [`Cluster::empty`] (then grow it through a session) or built with
+/// [`build_index`]/[`build_index_on`].
 pub struct Cluster {
     pub cfg: Config,
     pub family: Arc<HashFamily>,
@@ -43,11 +54,15 @@ pub struct Cluster {
     pub bis: Vec<BiState>,
     pub dps: Vec<DpState>,
     pub ags: Vec<AgState>,
-    /// Traffic of the index-build phase.
+    /// Traffic of the index-build phase (including later inserts).
     pub build_meter: TrafficMeter,
     /// Head-node (IR) work during build.
     pub build_head_work: WorkStats,
     pub build_wall_secs: f64,
+    /// Objects indexed so far — the id watermark for incremental inserts.
+    /// Maintained by the coordinator (not derived from `dps`) so it is
+    /// correct even when the stores live in worker processes.
+    pub indexed_objects: u32,
 }
 
 /// Output of a search phase.
@@ -56,7 +71,8 @@ pub struct SearchOutput {
     pub results: Vec<Vec<(f32, u32)>>,
     /// Traffic of the search phase.
     pub meter: TrafficMeter,
-    /// Per-copy work: (stage, copy, work) — cost-model input.
+    /// Per-copy work: (stage, copy, work) — cost-model input. Complete on
+    /// every transport (socket workers report theirs via `FlushAck`).
     pub work: Vec<(StageKind, u16, WorkStats)>,
     /// Wall-clock admission-to-completion per query.
     pub per_query_secs: Vec<f64>,
@@ -77,30 +93,32 @@ impl SearchOutput {
 /// threaded executor can overlap hashing with BI/DP insertion.
 const BUILD_BLOCK: usize = 8192;
 
-/// Ingress workload for an index phase: one [`Msg::IndexBlock`] per block.
+/// Ingress workload for an index phase: one [`Msg::IndexBlock`] per
+/// `BUILD_BLOCK` rows of `flat`.
 ///
 /// Each block is copied into its own `Arc` (~`BUILD_BLOCK`·dim·4 bytes
 /// transient). That is one extra memcpy pass over the dataset per build —
 /// deliberate: it keeps `Msg` `'static` (required to cross executor
 /// threads) without restructuring `Dataset`'s owned storage, and it is
 /// noise next to the hashing matmul that reads the same bytes.
-fn build_items<'a>(
-    dataset: &'a Dataset,
+fn index_block_items(
+    flat: &[f32],
+    rows: usize,
+    dim: usize,
     id_base: u32,
-) -> impl Iterator<Item = Msg> + 'a {
-    let len = dataset.len();
-    let block = BUILD_BLOCK.min(len.max(1));
+) -> impl Iterator<Item = Msg> + '_ {
+    let block = BUILD_BLOCK.min(rows.max(1));
     let mut off = 0usize;
     std::iter::from_fn(move || {
-        if off >= len {
+        if off >= rows {
             return None;
         }
-        let take = (len - off).min(block);
-        let flat: Arc<[f32]> = dataset.slice_flat(off, off + take).into();
+        let take = (rows - off).min(block);
+        let chunk: Arc<[f32]> = flat[off * dim..(off + take) * dim].into();
         let msg = Msg::IndexBlock {
             id_base: id_base + off as u32,
             rows: take as u32,
-            flat,
+            flat: chunk,
         };
         off += take;
         Some(msg)
@@ -113,10 +131,11 @@ pub fn build_index(cfg: &Config, dataset: &Dataset, hasher: &dyn Hasher) -> Clus
     build_index_on(&InlineExecutor, cfg, dataset, hasher)
 }
 
-/// Build the distributed index on any [`Executor`]. IR streams the dataset
-/// in blocks; BI/DP consume (they emit nothing during build, so routing is
-/// single-hop). Stage state is executor-independent: BI/DP copies receive
-/// their messages from the single IR source in emission order either way.
+/// Build the distributed index on any [`Executor`] — a thin wrapper over a
+/// build-only [`IndexSession`]: open over an empty cluster, insert the
+/// dataset, close. IR streams the dataset in blocks; BI/DP consume. Stage
+/// state is executor-independent: BI/DP copies receive their messages from
+/// the single IR source in emission order on every transport.
 pub fn build_index_on(
     exec: &dyn Executor,
     cfg: &Config,
@@ -124,73 +143,56 @@ pub fn build_index_on(
     hasher: &dyn Hasher,
 ) -> Cluster {
     let timer = Timer::start();
-    let family = Arc::new(HashFamily::sample(dataset.dim, cfg.lsh));
-    let placement = Placement::new(&cfg.cluster);
-    let mapper = ObjMapper::new(
-        cfg.stream.obj_map,
-        placement.dp_copies,
-        dataset.dim,
-        cfg.lsh.seed,
-    );
-    let mut bis: Vec<BiState> = (0..placement.bi_copies)
-        .map(|c| BiState::new(c as u16, placement.ag_copies, cfg.stream.max_candidates))
-        .collect();
-    let mut dps: Vec<DpState> = (0..placement.dp_copies)
-        .map(|c| {
-            DpState::new(
-                c as u16,
-                dataset.dim,
-                cfg.lsh.k,
-                placement.ag_copies,
-                cfg.stream.dedup,
-            )
-        })
-        .collect();
-    let mut ags: Vec<AgState> = (0..placement.ag_copies)
-        .map(|c| AgState::new(c as u16, cfg.lsh.k))
-        .collect();
-
-    let mut ir = InputReader::new(&family, &mapper, placement.bi_copies);
-    let report = {
-        let stages = bind_stages(
-            Box::new(IrHandler { ir: &mut ir, hasher }),
-            &mut bis,
-            &mut dps,
-            &mut ags,
-            None,
-        );
-        let mut items = build_items(dataset, 0);
-        exec.run(
-            &placement,
-            stages,
-            Workload {
-                items: &mut items,
-                n_queries: 0,
-                window: 0,
-                agg_bytes: cfg.stream.agg_bytes,
-            },
-        )
-    };
-
-    // `ir` borrows `family`/`mapper`; read its counters before moving them.
-    let build_head_work = ir.work;
-    Cluster {
-        cfg: cfg.clone(),
-        family,
-        mapper,
-        placement,
-        bis,
-        dps,
-        ags,
-        build_meter: report.meter,
-        build_head_work,
-        build_wall_secs: timer.secs(),
+    let mut cluster = Cluster::empty(cfg, dataset.dim);
+    {
+        let session = IndexSession::attach(exec, &mut cluster, hasher, None);
+        session.insert(dataset);
+        session.close();
     }
+    cluster.build_wall_secs = timer.secs();
+    cluster
 }
 
 impl Cluster {
+    /// A fresh, empty index for `cfg` over `dim`-dimensional data: stage
+    /// states allocated, nothing stored. Grow it through a session's
+    /// [`insert`](session::IndexSession::insert).
+    pub fn empty(cfg: &Config, dim: usize) -> Cluster {
+        let family = Arc::new(HashFamily::sample(dim, cfg.lsh));
+        let placement = Placement::new(&cfg.cluster);
+        let mapper = ObjMapper::new(
+            cfg.stream.obj_map,
+            placement.dp_copies,
+            dim,
+            cfg.lsh.seed,
+        );
+        let bis = (0..placement.bi_copies)
+            .map(|c| BiState::new(c as u16, placement.ag_copies, cfg.stream.max_candidates))
+            .collect();
+        let dps = (0..placement.dp_copies)
+            .map(|c| DpState::new(c as u16, dim, cfg.lsh.k, placement.ag_copies, cfg.stream.dedup))
+            .collect();
+        let ags = (0..placement.ag_copies)
+            .map(|c| AgState::new(c as u16, cfg.lsh.k))
+            .collect();
+        Cluster {
+            cfg: cfg.clone(),
+            family,
+            mapper,
+            placement,
+            bis,
+            dps,
+            ags,
+            build_meter: TrafficMeter::new(cfg.stream.agg_bytes),
+            build_head_work: WorkStats::default(),
+            build_wall_secs: 0.0,
+            indexed_objects: 0,
+        }
+    }
+
     /// Total objects stored across DP copies (must equal dataset size —
-    /// the no-replication invariant).
+    /// the no-replication invariant). Counts *local* state only; under the
+    /// socket transport the stores live in workers (use `indexed_objects`).
     pub fn stored_objects(&self) -> usize {
         self.dps.iter().map(|d| d.object_count()).sum()
     }
@@ -205,18 +207,32 @@ impl Cluster {
         self.dps.iter().map(|d| d.object_count()).collect()
     }
 
-    /// Online insert (paper §IV-A: indexing and searching may overlap, e.g.
-    /// during an index update): index `rows` new vectors, assigning them
-    /// ids following the current maximum. Returns the assigned id range.
+    /// Online insert with the inline executor (paper §IV-A: indexing and
+    /// searching may overlap, e.g. during an index update).
     pub fn insert_objects(
         &mut self,
         flat: &[f32],
         rows: usize,
         hasher: &dyn Hasher,
     ) -> std::ops::Range<u32> {
-        let id_base = self.stored_objects() as u32;
+        self.insert_objects_on(&InlineExecutor, flat, rows, hasher)
+    }
+
+    /// Online insert on any [`Executor`]: index `rows` new vectors,
+    /// assigning ids from the `indexed_objects` watermark. On the socket
+    /// transport this streams index traffic to the already-running workers
+    /// — no re-handshake. Returns the assigned id range.
+    pub fn insert_objects_on(
+        &mut self,
+        exec: &dyn Executor,
+        flat: &[f32],
+        rows: usize,
+        hasher: &dyn Hasher,
+    ) -> std::ops::Range<u32> {
+        let id_base = self.indexed_objects;
         let placement = self.placement.clone();
         let family = self.family.clone();
+        let dim = family.dim;
         let agg_bytes = self.cfg.stream.agg_bytes;
         let mut ir = InputReader::new(&family, &self.mapper, placement.bi_copies);
         let report = {
@@ -227,12 +243,8 @@ impl Cluster {
                 &mut self.ags,
                 None,
             );
-            let mut items = std::iter::once(Msg::IndexBlock {
-                id_base,
-                rows: rows as u32,
-                flat: flat.into(),
-            });
-            InlineExecutor.run(
+            let mut items = index_block_items(flat, rows, dim, id_base);
+            exec.run(
                 &placement,
                 stages,
                 Workload {
@@ -243,9 +255,45 @@ impl Cluster {
                 },
             )
         };
+        // `ir` borrows `self.mapper`; read its counters first so the
+        // whole-`self` call below is the only outstanding borrow.
+        let head_work = ir.work;
+        self.absorb_remote_work(&report.work);
         self.build_meter.merge(&report.meter);
-        self.build_head_work.add(&ir.work);
+        self.build_head_work.add(&head_work);
+        self.indexed_objects += rows as u32;
         id_base..id_base + rows as u32
+    }
+
+    /// Fold per-copy work reported by a remote transport (the socket
+    /// executor decodes it from `FlushAck` barriers, where workers take —
+    /// and reset — their counters) into the local stage states. The local
+    /// states are thereby the single accumulation point on every
+    /// transport, so [`Cluster::take_work`] and session stats read
+    /// identically whether a copy ran in-process or in a worker.
+    pub fn absorb_remote_work(&mut self, remote: &[(StageKind, u16, WorkStats)]) {
+        for (stage, copy, w) in remote {
+            let i = *copy as usize;
+            match stage {
+                StageKind::Bi => {
+                    if let Some(s) = self.bis.get_mut(i) {
+                        s.work.add(w);
+                    }
+                }
+                StageKind::Dp => {
+                    if let Some(s) = self.dps.get_mut(i) {
+                        s.work.add(w);
+                    }
+                }
+                StageKind::Ag => {
+                    if let Some(s) = self.ags.get_mut(i) {
+                        s.work.add(w);
+                    }
+                }
+                // head stages never run remotely
+                StageKind::Ir | StageKind::Qr => {}
+            }
+        }
     }
 
     /// Snapshot per-copy work counters and reset them (phase accounting).
@@ -277,9 +325,11 @@ pub fn search(
     search_on(&InlineExecutor, cluster, queries, hasher, ranker)
 }
 
-/// Run the search phase on any [`Executor`]. The admission window comes
-/// from `Config::stream.inflight` (0 = open loop); the inline executor is
-/// sequential regardless, so the knob only shapes threaded serving.
+/// Run the search phase on any [`Executor`] — a thin wrapper over an
+/// [`IndexSession`]: open, submit the whole query set (one batched hash
+/// call), drain, close. The admission window comes from
+/// `Config::stream.inflight` (0 = open loop); the inline executor is
+/// sequential regardless, so the knob only shapes threaded/socket serving.
 pub fn search_on(
     exec: &dyn Executor,
     cluster: &mut Cluster,
@@ -288,54 +338,25 @@ pub fn search_on(
     ranker: &dyn Ranker,
 ) -> SearchOutput {
     let wall = Timer::start();
-    let placement = cluster.placement.clone();
-    let agg_bytes = cluster.cfg.stream.agg_bytes;
-    let window = cluster.cfg.stream.inflight;
-    let family = cluster.family.clone();
-    let mut qr = QueryReceiver::new(&family, placement.bi_copies, placement.ag_copies);
-
-    // §Perf: hash the whole query batch through one artifact call instead
-    // of one padded call per query (the QR handler accounts per query).
-    let p = hasher.p();
-    let raws = hasher.proj_batch(queries.as_flat(), queries.len());
-
-    let report = {
-        let stages = bind_stages(
-            Box::new(QrHandler { qr: &mut qr }),
-            &mut cluster.bis,
-            &mut cluster.dps,
-            &mut cluster.ags,
-            Some(ranker),
-        );
-        let mut items = (0..queries.len() as u32).map(|qid| {
-            let raw: Arc<[f32]> = raws[qid as usize * p..(qid as usize + 1) * p].into();
-            let v: Arc<[f32]> = queries.get(qid as usize).into();
-            Msg::QueryVec { qid, raw, v }
-        });
-        exec.run(
-            &placement,
-            stages,
-            Workload {
-                items: &mut items,
-                n_queries: queries.len(),
-                window,
-                agg_bytes,
-            },
-        )
-    };
-
-    let work = cluster.take_work(&std::mem::take(&mut qr.work));
+    let session = IndexSession::attach(exec, cluster, hasher, Some(ranker));
+    let tickets = session.submit_batch(queries);
+    let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); queries.len()];
+    for (ticket, hits) in session.drain() {
+        results[(ticket.0 - tickets.start) as usize] = hits;
+    }
+    let work = session.take_work();
+    let stats = session.close();
     SearchOutput {
-        results: report.results,
-        meter: report.meter,
+        results,
+        meter: stats.search_meter,
         work,
-        per_query_secs: report.per_query_secs,
+        per_query_secs: stats.per_query_secs,
         wall_secs: wall.secs(),
     }
 }
 
 /// Shared differential-test fixture (small world: 2 BI / 4 DP nodes),
-/// used by this module's tests and by `threaded`'s — tune it in one place.
+/// used by this module's tests and by `session`'s — tune it in one place.
 #[cfg(test)]
 pub(crate) fn small_test_cfg() -> Config {
     let mut cfg = Config::default();
@@ -380,6 +401,7 @@ mod tests {
         let (ds, _, hasher) = small_world(&cfg);
         let cluster = build_index(&cfg, &ds, &hasher);
         assert_eq!(cluster.stored_objects(), ds.len());
+        assert_eq!(cluster.indexed_objects as usize, ds.len());
         assert_eq!(cluster.bucket_references(), ds.len() * cfg.lsh.l);
     }
 
@@ -440,6 +462,7 @@ mod tests {
         let range = cluster.insert_objects(extra.as_flat(), extra.len(), &hasher);
         assert_eq!(range, n0 as u32..(n0 + 25) as u32);
         assert_eq!(cluster.stored_objects(), n0 + 25);
+        assert_eq!(cluster.indexed_objects as usize, n0 + 25);
         assert_eq!(cluster.bucket_references(), (n0 + 25) * cfg.lsh.l);
 
         // Querying with the *same* vectors must now find the inserted ids
@@ -472,6 +495,26 @@ mod tests {
         // second snapshot is zeroed
         let again = cluster.take_work(&WorkStats::default());
         assert!(again.iter().all(|(_, _, w)| w.dists_computed == 0));
+    }
+
+    #[test]
+    fn absorb_remote_work_lands_in_matching_copies() {
+        let cfg = small_cfg();
+        let mut cluster = Cluster::empty(&cfg, 16);
+        let remote = vec![
+            (StageKind::Dp, 2u16, WorkStats { dists_computed: 9, ..Default::default() }),
+            (StageKind::Bi, 1u16, WorkStats { bucket_lookups: 4, ..Default::default() }),
+            // head stages and out-of-range copies are ignored, not panicked on
+            (StageKind::Qr, 0u16, WorkStats { hash_vectors: 7, ..Default::default() }),
+            (StageKind::Dp, 999u16, WorkStats { dists_computed: 1, ..Default::default() }),
+        ];
+        cluster.absorb_remote_work(&remote);
+        cluster.absorb_remote_work(&remote); // accumulates
+        assert_eq!(cluster.dps[2].work.dists_computed, 18);
+        assert_eq!(cluster.bis[1].work.bucket_lookups, 8);
+        let taken = cluster.take_work(&WorkStats::default());
+        let dists: u64 = taken.iter().map(|(_, _, w)| w.dists_computed).sum();
+        assert_eq!(dists, 18);
     }
 
     #[test]

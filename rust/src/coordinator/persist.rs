@@ -184,7 +184,7 @@ pub fn load(path: &str, cfg: &Config) -> Result<Cluster> {
     let ags = (0..placement.ag_copies)
         .map(|c| AgState::new(c as u16, cfg.lsh.k))
         .collect();
-    Ok(Cluster {
+    let mut cluster = Cluster {
         cfg: cfg.clone(),
         family,
         mapper,
@@ -195,7 +195,12 @@ pub fn load(path: &str, cfg: &Config) -> Result<Cluster> {
         build_meter: TrafficMeter::new(cfg.stream.agg_bytes),
         build_head_work: Default::default(),
         build_wall_secs: 0.0,
-    })
+        indexed_objects: 0,
+    };
+    // Restore the insert watermark from the loaded stores so post-load
+    // inserts keep assigning fresh ids.
+    cluster.indexed_objects = cluster.stored_objects() as u32;
+    Ok(cluster)
 }
 
 #[cfg(test)]

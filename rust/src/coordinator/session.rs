@@ -1,0 +1,561 @@
+//! The session-oriented serving API (DESIGN.md §Service API).
+//!
+//! The paper's dataflow is a *continuously running* service: the index
+//! stays resident across the whole experiment while queries stream into QR
+//! one at a time. [`IndexSession`] is that regime as an API — a persistent
+//! handle over a [`Cluster`]'s stage states and one live [`Executor`]
+//! (inline, threaded, or the multi-process `SocketExecutor`), on which
+//! build, incremental insert and search phases run back-to-back without
+//! tearing anything down (under the socket transport: without
+//! re-handshaking workers — their BI/DP state persists between phases).
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! Cluster::empty / build_index ──▶ IndexSession::attach
+//!        ┌─────────────────────────────┴──────────────────────────┐
+//!        │   insert(&Dataset)      grow the resident index        │
+//!        │   submit(q) → ticket    admit one query                │
+//!        │   recv() → (ticket,topk) stream completions out        │
+//!        │   stats()               merged traffic + per-copy work │
+//!        └─────────────────────────────┬──────────────────────────┘
+//!                                 close() → SessionStats
+//! ```
+//!
+//! Admission: submissions buffer in the session and are *pumped* through
+//! the executor under the closed-loop `Config::stream.inflight` window
+//! (0 = open loop) whenever a caller needs completions — `recv` with
+//! nothing buffered, `drain`, `close`, or an `insert` (which acts as a
+//! barrier: queries submitted before it complete against the pre-insert
+//! index). Each pump admits the whole buffered backlog as one workload, so
+//! phase-call wrappers ([`super::search_on`]) pump exactly once and stay
+//! bit-identical to the pre-session API.
+//!
+//! Tickets: [`QueryTicket`]s are issued in submission order (a dense `u64`
+//! sequence per session) and every completion carries its ticket, so
+//! concurrent submitters can interleave freely — results are matched by
+//! ticket, never by position. The session is `Sync`; `submit` hashes on
+//! the calling thread before taking the session lock.
+
+use crate::coordinator::Cluster;
+use crate::data::Dataset;
+use crate::dataflow::exec::{bind_stages, Executor, QrHandler, Workload};
+use crate::dataflow::message::{Msg, StageKind};
+use crate::dataflow::metrics::{TrafficMeter, WorkStats};
+use crate::runtime::{Hasher, Ranker};
+use crate::stages::QueryReceiver;
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Handle for one submitted query: a dense per-session sequence number.
+/// Completions ([`IndexSession::recv`]) are matched by ticket, not by
+/// arrival order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct QueryTicket(pub u64);
+
+/// A submitted query waiting for a pump: its ticket, the precomputed raw
+/// projections (hashed on the submitting thread), and the query vector.
+struct PendingQuery {
+    ticket: u64,
+    raw: Arc<[f32]>,
+    v: Arc<[f32]>,
+}
+
+/// Session-lifetime accounting, returned by [`IndexSession::stats`] (live
+/// snapshot) and [`IndexSession::close`] (final).
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// Index-build traffic of the underlying cluster to date (all insert
+    /// phases, including any build that happened before `attach`).
+    pub build_meter: TrafficMeter,
+    /// Search traffic of this session's query pumps.
+    pub search_meter: TrafficMeter,
+    /// Per-copy work since the last reset: `(stage, copy, counters)`, head
+    /// QR first. Complete on every transport — remote copies report theirs
+    /// through the socket executor's `FlushAck` barriers.
+    pub work: Vec<(StageKind, u16, WorkStats)>,
+    /// Admission-to-completion seconds, indexed by ticket number.
+    pub per_query_secs: Vec<f64>,
+    pub queries_submitted: u64,
+    pub queries_completed: u64,
+    /// Objects in the index (maintained by the coordinator, so it is
+    /// correct even when the stores live in worker processes).
+    pub objects_indexed: u64,
+}
+
+struct Inner<'c> {
+    cluster: &'c mut Cluster,
+    next_ticket: u64,
+    pending: VecDeque<PendingQuery>,
+    done: VecDeque<(QueryTicket, Vec<(f32, u32)>)>,
+    per_query_secs: Vec<f64>,
+    /// Head-node (QR) work across this session's pumps. Per-copy BI/DP/AG
+    /// work lives in the cluster's stage states on every transport —
+    /// remote counters are absorbed there after each pump
+    /// ([`Cluster::absorb_remote_work`]).
+    head_work: WorkStats,
+    search_meter: TrafficMeter,
+    completed: u64,
+}
+
+/// A persistent serving session: one live executor + one cluster's stage
+/// states, bound for the session's lifetime (see the module docs for the
+/// lifecycle). Create with [`IndexSession::attach`]; the borrowed
+/// [`Cluster`] is usable again after [`IndexSession::close`].
+pub struct IndexSession<'s> {
+    exec: &'s dyn Executor,
+    hasher: &'s dyn Hasher,
+    ranker: Option<&'s dyn Ranker>,
+    inner: Mutex<Inner<'s>>,
+}
+
+impl<'s> IndexSession<'s> {
+    /// Open a session over `cluster` on `exec`. Pass `ranker: None` only
+    /// for build-only sessions (insert without search) — `submit` needs a
+    /// ranker and will panic without one.
+    pub fn attach(
+        exec: &'s dyn Executor,
+        cluster: &'s mut Cluster,
+        hasher: &'s dyn Hasher,
+        ranker: Option<&'s dyn Ranker>,
+    ) -> IndexSession<'s> {
+        let agg = cluster.cfg.stream.agg_bytes;
+        IndexSession {
+            exec,
+            hasher,
+            ranker,
+            inner: Mutex::new(Inner {
+                cluster,
+                next_ticket: 0,
+                pending: VecDeque::new(),
+                done: VecDeque::new(),
+                per_query_secs: Vec::new(),
+                head_work: WorkStats::default(),
+                search_meter: TrafficMeter::new(agg),
+                completed: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner<'s>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Index `dataset` incrementally (paper §IV-A: indexing and searching
+    /// may overlap across a session). Acts as a barrier: queries submitted
+    /// before the insert complete against the pre-insert index. Returns
+    /// the assigned id range.
+    pub fn insert(&self, dataset: &Dataset) -> Range<u32> {
+        let mut inner = self.lock();
+        self.pump(&mut inner);
+        let inner = &mut *inner;
+        inner
+            .cluster
+            .insert_objects_on(self.exec, dataset.as_flat(), dataset.len(), self.hasher)
+    }
+
+    /// Admit one query. Hashing happens on the calling thread; the ticket
+    /// is issued under the session lock, in submission order.
+    pub fn submit(&self, q: &[f32]) -> QueryTicket {
+        assert!(
+            self.ranker.is_some(),
+            "IndexSession::submit on a session attached without a ranker"
+        );
+        let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
+        self.lock().enqueue(raw, q.into())
+    }
+
+    /// Admit a whole query set through one batched hash call (the phase
+    /// drivers' §Perf path). Returns the contiguous ticket range.
+    pub fn submit_batch(&self, queries: &Dataset) -> Range<u64> {
+        assert!(
+            self.ranker.is_some(),
+            "IndexSession::submit_batch on a session attached without a ranker"
+        );
+        let p = self.hasher.p();
+        let raws = self.hasher.proj_batch(queries.as_flat(), queries.len());
+        let mut inner = self.lock();
+        let start = inner.next_ticket;
+        for i in 0..queries.len() {
+            let raw: Arc<[f32]> = raws[i * p..(i + 1) * p].into();
+            inner.enqueue(raw, queries.get(i).into());
+        }
+        start..inner.next_ticket
+    }
+
+    /// Pop a buffered completion without driving the pipeline.
+    pub fn try_recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
+        self.lock().done.pop_front()
+    }
+
+    /// Next completion: buffered if available, else pump the pending
+    /// backlog through the executor. `None` means the session is idle
+    /// (nothing buffered, nothing pending).
+    pub fn recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
+        let mut inner = self.lock();
+        loop {
+            if let Some(r) = inner.done.pop_front() {
+                return Some(r);
+            }
+            if inner.pending.is_empty() {
+                return None;
+            }
+            self.pump(&mut inner);
+        }
+    }
+
+    /// Complete everything outstanding and return all unclaimed
+    /// completions, ticket-ordered.
+    pub fn drain(&self) -> Vec<(QueryTicket, Vec<(f32, u32)>)> {
+        let mut inner = self.lock();
+        self.pump(&mut inner);
+        let mut out: Vec<_> = inner.done.drain(..).collect();
+        out.sort_by_key(|e| e.0);
+        out
+    }
+
+    /// Queries admitted but not yet delivered through `recv`/`drain`.
+    pub fn in_flight(&self) -> usize {
+        let inner = self.lock();
+        inner.pending.len() + inner.done.len()
+    }
+
+    /// Live accounting snapshot (does not reset any counter).
+    pub fn stats(&self) -> SessionStats {
+        let inner = self.lock();
+        let c: &Cluster = &*inner.cluster;
+        let mut work = vec![(StageKind::Qr, 0u16, inner.head_work)];
+        for bi in &c.bis {
+            work.push((StageKind::Bi, bi.copy, bi.work));
+        }
+        for dp in &c.dps {
+            work.push((StageKind::Dp, dp.copy, dp.work));
+        }
+        for ag in &c.ags {
+            work.push((StageKind::Ag, ag.copy, ag.work));
+        }
+        SessionStats {
+            build_meter: c.build_meter.clone(),
+            search_meter: inner.search_meter.clone(),
+            work,
+            per_query_secs: inner.per_query_secs.clone(),
+            queries_submitted: inner.next_ticket,
+            queries_completed: inner.completed,
+            objects_indexed: c.indexed_objects as u64,
+        }
+    }
+
+    /// Take (and reset) the per-copy work counters accumulated since the
+    /// last reset — phase accounting, the session rendition of
+    /// [`Cluster::take_work`]. Complete on every transport.
+    pub fn take_work(&self) -> Vec<(StageKind, u16, WorkStats)> {
+        let mut inner = self.lock();
+        let inner = &mut *inner;
+        let head = std::mem::take(&mut inner.head_work);
+        inner.cluster.take_work(&head)
+    }
+
+    /// Typed end of session: completes any still-pending queries (so
+    /// per-query teardown reaches every transport) and returns the final
+    /// stats. Unclaimed completions are discarded — `drain` first if you
+    /// want them. The borrowed `Cluster` is usable again afterwards; under
+    /// the socket transport the workers stay up (they belong to the
+    /// `NetSession`), ready for the next session.
+    pub fn close(self) -> SessionStats {
+        {
+            let mut inner = self.lock();
+            self.pump(&mut inner);
+        }
+        self.stats()
+    }
+
+    /// Run the buffered backlog through the executor as one search
+    /// workload under the `stream.inflight` admission window, and buffer
+    /// the completions.
+    fn pump(&self, inner: &mut Inner<'s>) {
+        if inner.pending.is_empty() {
+            return;
+        }
+        let ranker = self
+            .ranker
+            .expect("IndexSession pump without a ranker (attach with Some(ranker))");
+        let batch: Vec<PendingQuery> = inner.pending.drain(..).collect();
+        let inner = &mut *inner;
+        let cluster: &mut Cluster = &mut *inner.cluster;
+        let placement = cluster.placement.clone();
+        let agg = cluster.cfg.stream.agg_bytes;
+        let window = cluster.cfg.stream.inflight;
+        let family = cluster.family.clone();
+        let mut qr = QueryReceiver::new(&family, placement.bi_copies, placement.ag_copies);
+        let report = {
+            let stages = bind_stages(
+                Box::new(QrHandler { qr: &mut qr }),
+                &mut cluster.bis,
+                &mut cluster.dps,
+                &mut cluster.ags,
+                Some(ranker),
+            );
+            let mut items = batch.iter().enumerate().map(|(i, pq)| Msg::QueryVec {
+                qid: i as u32,
+                raw: pq.raw.clone(),
+                v: pq.v.clone(),
+            });
+            self.exec.run(
+                &placement,
+                stages,
+                Workload {
+                    items: &mut items,
+                    n_queries: batch.len(),
+                    window,
+                    agg_bytes: agg,
+                },
+            )
+        };
+        inner.head_work.add(&qr.work);
+        inner.search_meter.merge(&report.meter);
+        inner.cluster.absorb_remote_work(&report.work);
+        for (i, (hits, secs)) in report
+            .results
+            .into_iter()
+            .zip(report.per_query_secs)
+            .enumerate()
+        {
+            let ticket = batch[i].ticket;
+            inner.per_query_secs[ticket as usize] = secs;
+            inner.done.push_back((QueryTicket(ticket), hits));
+            inner.completed += 1;
+        }
+    }
+}
+
+impl Inner<'_> {
+    fn enqueue(&mut self, raw: Arc<[f32]>, v: Arc<[f32]>) -> QueryTicket {
+        let t = self.next_ticket;
+        self.next_ticket += 1;
+        self.per_query_secs.push(0.0);
+        self.pending.push_back(PendingQuery { ticket: t, raw, v });
+        QueryTicket(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::{build_index, build_index_on, search, search_on, small_test_cfg};
+    use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
+    use crate::dataflow::exec::{InlineExecutor, ThreadedExecutor};
+    use crate::runtime::{ScalarHasher, ScalarRanker};
+
+    fn world(
+        cfg: &Config,
+        n: usize,
+        queries: usize,
+    ) -> (Dataset, Dataset, ScalarHasher, ScalarRanker) {
+        let ds = synthesize(SynthSpec { n, clusters: 40, ..Default::default() });
+        let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
+        let family = crate::core::lsh::HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let ranker = ScalarRanker { dim: ds.dim };
+        (ds, qs, hasher, ranker)
+    }
+
+    /// The inline-vs-threaded differential contract, now flowing through
+    /// the session path (search_on is a session wrapper).
+    fn assert_matches_inline(cfg: &Config, n: usize, queries: usize) {
+        let (ds, qs, hasher, ranker) = world(cfg, n, queries);
+        let mut c1 = build_index(cfg, &ds, &hasher);
+        let inline_out = search(&mut c1, &qs, &hasher, &ranker);
+        let mut c2 = build_index(cfg, &ds, &hasher);
+        let threaded_out = search_on(&ThreadedExecutor, &mut c2, &qs, &hasher, &ranker);
+
+        assert_eq!(inline_out.results, threaded_out.results);
+        // traffic counters agree (logical messages & payload bytes are
+        // aggregation-independent).
+        assert_eq!(
+            inline_out.meter.logical_msgs,
+            threaded_out.meter.logical_msgs
+        );
+        // payload agrees within 1%: DP dedup depends on cross-BI arrival
+        // order, which can shift a few hits between LocalTopK messages
+        // (the merged result set is identical — asserted above).
+        let (a, b) = (
+            inline_out.meter.payload_bytes as f64,
+            threaded_out.meter.payload_bytes as f64,
+        );
+        assert!((a - b).abs() / a < 0.01, "payload diverged: {a} vs {b}");
+        // states returned intact
+        assert_eq!(c2.bis.len(), cfg.cluster.bi_copies());
+        assert_eq!(c2.dps.len(), cfg.cluster.dp_copies());
+        assert_eq!(c2.ags.len(), cfg.cluster.ag_copies);
+        assert!(threaded_out.per_query_secs.iter().all(|&s| s > 0.0));
+    }
+
+    fn small_cfg() -> Config {
+        small_test_cfg()
+    }
+
+    #[test]
+    fn threaded_matches_inline_results() {
+        assert_matches_inline(&small_cfg(), 1_500, 15);
+    }
+
+    #[test]
+    fn threaded_matches_inline_under_batched_admission() {
+        for window in [1usize, 3] {
+            let mut cfg = small_cfg();
+            cfg.stream.inflight = window;
+            assert_matches_inline(&cfg, 1_500, 15);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_inline_with_multiple_aggregators() {
+        let mut cfg = small_cfg();
+        cfg.cluster.ag_copies = 3;
+        assert_matches_inline(&cfg, 1_500, 20);
+        let mut cfg = small_cfg();
+        cfg.cluster.ag_copies = 2;
+        cfg.stream.inflight = 2;
+        assert_matches_inline(&cfg, 1_200, 18);
+    }
+
+    #[test]
+    fn threaded_build_then_threaded_search_matches_inline_pipeline() {
+        let mut cfg = small_cfg();
+        cfg.stream.inflight = 4;
+        let (ds, qs, hasher, ranker) = world(&cfg, 1_500, 15);
+
+        let mut inline_cluster = build_index(&cfg, &ds, &hasher);
+        let inline_out = search(&mut inline_cluster, &qs, &hasher, &ranker);
+
+        let mut threaded_cluster = build_index_on(&ThreadedExecutor, &cfg, &ds, &hasher);
+        let threaded_out =
+            search_on(&ThreadedExecutor, &mut threaded_cluster, &qs, &hasher, &ranker);
+
+        assert_eq!(inline_out.results, threaded_out.results);
+        assert_eq!(
+            inline_cluster.build_meter.logical_msgs,
+            threaded_cluster.build_meter.logical_msgs
+        );
+    }
+
+    #[test]
+    fn streaming_submit_recv_matches_phase_call() {
+        // One query at a time — submit, wait for its completion, submit the
+        // next — must give the same answers as the one-shot phase call.
+        let cfg = small_cfg();
+        let (ds, qs, hasher, ranker) = world(&cfg, 1_200, 10);
+        let mut oracle_cluster = build_index(&cfg, &ds, &hasher);
+        let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+        for exec in [&InlineExecutor as &dyn Executor, &ThreadedExecutor] {
+            let mut cluster = build_index(&cfg, &ds, &hasher);
+            let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(&ranker));
+            for qi in 0..qs.len() {
+                let ticket = session.submit(qs.get(qi));
+                assert_eq!(ticket, QueryTicket(qi as u64));
+                let (t, hits) = session.recv().expect("one in flight");
+                assert_eq!(t, ticket);
+                assert_eq!(hits, oracle.results[qi], "query {qi}");
+            }
+            assert!(session.recv().is_none(), "idle session must report None");
+            let stats = session.close();
+            assert_eq!(stats.queries_submitted, qs.len() as u64);
+            assert_eq!(stats.queries_completed, qs.len() as u64);
+            assert!(stats.search_meter.logical_msgs > 0);
+            assert!(stats.per_query_secs.iter().all(|&s| s > 0.0));
+        }
+    }
+
+    #[test]
+    fn session_build_insert_search_in_one_lifetime() {
+        // The full lifecycle on one session: open empty, insert twice,
+        // then serve — identical to building over the concatenation.
+        let cfg = small_cfg();
+        let (ds, _, hasher, ranker) = world(&cfg, 1_500, 10);
+        let (extra, _) = distorted_queries(&ds, 40, 1.0, 99);
+        let mut concat = Dataset::new(ds.dim);
+        for i in 0..ds.len() {
+            concat.push(ds.get(i));
+        }
+        for i in 0..extra.len() {
+            concat.push(extra.get(i));
+        }
+        let (qs, _) = distorted_queries(&concat, 12, 3.0, 5);
+        let mut oracle_cluster = build_index(&cfg, &concat, &hasher);
+        let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+        let mut cluster = Cluster::empty(&cfg, ds.dim);
+        {
+            let session =
+                IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, Some(&ranker));
+            assert_eq!(session.insert(&ds), 0..ds.len() as u32);
+            assert_eq!(
+                session.insert(&extra),
+                ds.len() as u32..concat.len() as u32
+            );
+            let tickets = session.submit_batch(&qs);
+            assert_eq!(tickets, 0..qs.len() as u64);
+            let done = session.drain();
+            assert_eq!(done.len(), qs.len());
+            for (i, (t, hits)) in done.iter().enumerate() {
+                assert_eq!(t.0, i as u64);
+                assert_eq!(hits, &oracle.results[i], "query {i}");
+            }
+            let stats = session.close();
+            assert_eq!(stats.objects_indexed as usize, concat.len());
+            assert!(stats.build_meter.logical_msgs > 0);
+        }
+        assert_eq!(cluster.stored_objects(), concat.len());
+        assert_eq!(cluster.bucket_references(), concat.len() * cfg.lsh.l);
+    }
+
+    #[test]
+    fn insert_is_a_barrier_for_earlier_submissions() {
+        // A query submitted before an insert must be answered against the
+        // pre-insert index even though it is only pumped by the insert.
+        let cfg = small_cfg();
+        let (ds, _, hasher, ranker) = world(&cfg, 1_200, 5);
+        // Query = an exact duplicate of a vector we insert *after*
+        // submitting it: distance-0 hit exists only post-insert.
+        let (dup, _) = distorted_queries(&ds, 1, 0.0, 3);
+        let mut pre_cluster = build_index(&cfg, &ds, &hasher);
+        let pre = search(&mut pre_cluster, &dup, &hasher, &ranker);
+
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let session = IndexSession::attach(&InlineExecutor, &mut cluster, &hasher, Some(&ranker));
+        let before = session.submit(dup.get(0));
+        session.insert(&dup);
+        let after = session.submit(dup.get(0));
+        let mut got: Vec<_> = session.drain();
+        got.sort_by_key(|e| e.0);
+        assert_eq!(got[0].0, before);
+        assert_eq!(got[0].1, pre.results[0], "pre-insert query saw the insert");
+        assert_eq!(got[1].0, after);
+        // the post-insert query must retrieve the inserted duplicate (its
+        // base vector ties at distance 0, so assert membership, not rank)
+        assert!(
+            got[1].1.iter().any(|&(_, id)| id == ds.len() as u32),
+            "post-insert query missed the insert: {:?}",
+            got[1].1
+        );
+    }
+
+    #[test]
+    fn take_work_resets_like_phase_accounting() {
+        let cfg = small_cfg();
+        let (ds, qs, hasher, ranker) = world(&cfg, 1_200, 8);
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let session = IndexSession::attach(&InlineExecutor, &mut cluster, &hasher, Some(&ranker));
+        session.submit_batch(&qs);
+        let _ = session.drain();
+        let work = session.take_work();
+        let dists: u64 = work.iter().map(|(_, _, w)| w.dists_computed).sum();
+        assert!(dists > 0);
+        let again = session.take_work();
+        assert!(again.iter().all(|(_, _, w)| w.dists_computed == 0));
+        session.close();
+    }
+}

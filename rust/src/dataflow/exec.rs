@@ -38,7 +38,7 @@
 //! original panic, if any, is resurfaced at join.
 
 use crate::dataflow::message::{Dest, Msg, StageKind};
-use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::runtime::{Hasher, Ranker};
 use crate::stages::aggregator::QueryResult;
@@ -223,10 +223,19 @@ pub struct ExecReport {
     /// Admission-to-completion seconds per qid.
     pub per_query_secs: Vec<f64>,
     pub meter: TrafficMeter,
+    /// Per-copy work counters for stage copies the executor hosts *outside*
+    /// this process (the socket transport decodes them from `FlushAck`
+    /// barriers). Empty for in-process executors, whose work counters
+    /// accumulate directly in the local stage states.
+    pub work: Vec<(StageKind, u16, WorkStats)>,
 }
 
 /// A transport for the five-stage dataflow.
-pub trait Executor {
+///
+/// `Sync` is part of the contract: a [`crate::coordinator::session::IndexSession`]
+/// holds an executor across phases and accepts submissions from multiple
+/// threads, so every transport must be shareable by reference.
+pub trait Executor: Sync {
     fn run(
         &self,
         placement: &Placement,
@@ -315,7 +324,7 @@ impl Executor for InlineExecutor {
             }
         }
         meter.flush();
-        ExecReport { results, per_query_secs, meter }
+        ExecReport { results, per_query_secs, meter, work: Vec::new() }
     }
 }
 
@@ -588,7 +597,7 @@ impl Executor for ThreadedExecutor {
             }
         });
 
-        ExecReport { results, per_query_secs, meter: merged }
+        ExecReport { results, per_query_secs, meter: merged, work: Vec::new() }
     }
 }
 

@@ -164,7 +164,7 @@ pub struct NodeTraffic {
 }
 
 /// Per-stage-copy compute counters (inputs to the simnet cost model).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkStats {
     /// Vectors pushed through the hash bank (P projections each).
     pub hash_vectors: u64,

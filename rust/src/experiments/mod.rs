@@ -664,6 +664,130 @@ pub fn net_comparison() -> anyhow::Result<(Table, String)> {
     Ok((table, json))
 }
 
+// -------------------------------------------------------- bench history
+
+/// `git rev-parse --short HEAD`, or "nogit" outside a repository.
+pub fn git_short_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty() && s.chars().all(|c| c.is_ascii_alphanumeric()))
+        .unwrap_or_else(|| "nogit".into())
+}
+
+/// Archive a freshly written `BENCH_*.json` under `bench_history/`, stamped
+/// with the current git SHA and wall-clock time, so bench trajectories are
+/// recorded across PRs instead of overwritten per run (`parlsh experiment
+/// history` diffs them). Returns the archive path.
+pub fn archive_bench(path: &str) -> anyhow::Result<String> {
+    let doc = std::fs::read_to_string(path)?;
+    let sha = git_short_sha();
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let stamped = match doc.strip_prefix('{') {
+        Some(rest) => format!(
+            "{{\"sha\":\"{}\",\"recorded_unix\":{unix},{rest}",
+            crate::metrics::json_escape(&sha)
+        ),
+        None => doc,
+    };
+    std::fs::create_dir_all("bench_history")?;
+    let stem = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("bench");
+    // Timestamps are second-granular: never overwrite a same-second run.
+    let mut out = format!("bench_history/{stem}-{unix}-{sha}.json");
+    let mut k = 1u32;
+    while std::path::Path::new(&out).exists() {
+        k += 1;
+        out = format!("bench_history/{stem}-{unix}-{sha}-{k}.json");
+    }
+    std::fs::write(&out, stamped)?;
+    Ok(out)
+}
+
+/// The `parlsh experiment history` diff table: for every experiment with
+/// archived runs under `bench_history/`, compare the latest run against the
+/// previous one, cell by cell (rows aligned on their first column, numeric
+/// cells get a relative delta).
+pub fn history_table() -> anyhow::Result<Table> {
+    use std::collections::BTreeMap;
+    use std::time::SystemTime;
+    // experiment -> [(recorded_unix, file mtime, sha, document)]
+    type Run = (u64, SystemTime, String, String);
+    let mut runs: BTreeMap<String, Vec<Run>> = BTreeMap::new();
+    let dir = std::path::Path::new("bench_history");
+    if dir.is_dir() {
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let Ok(doc) = std::fs::read_to_string(&path) else { continue };
+            // File mtime breaks recorded-second ties between two runs
+            // archived within the same wall-clock second.
+            let mtime = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .unwrap_or(SystemTime::UNIX_EPOCH);
+            let name = crate::metrics::json_find_string(&doc, "experiment")
+                .unwrap_or_else(|| "?".into());
+            let sha =
+                crate::metrics::json_find_string(&doc, "sha").unwrap_or_else(|| "nogit".into());
+            let recorded =
+                crate::metrics::json_find_number(&doc, "recorded_unix").unwrap_or(0.0) as u64;
+            runs.entry(name).or_default().push((recorded, mtime, sha, doc));
+        }
+    }
+    let mut out = Table::new(&["experiment", "row", "column", "previous", "latest", "delta"]);
+    for (name, mut rs) in runs {
+        rs.sort_by_key(|(t, mtime, _, _)| (*t, *mtime));
+        let (_, _, latest_sha, latest_doc) = rs.last().expect("non-empty run list");
+        let Some((headers, rows)) = crate::metrics::table_from_json(latest_doc) else {
+            continue;
+        };
+        let prev = rs
+            .len()
+            .checked_sub(2)
+            .and_then(|i| crate::metrics::table_from_json(&rs[i].3));
+        for row in &rows {
+            let key = row.first().cloned().unwrap_or_default();
+            let prev_row = prev
+                .as_ref()
+                .and_then(|(_, prows)| prows.iter().find(|r| r.first() == Some(&key)));
+            for (ci, col) in headers.iter().enumerate().skip(1) {
+                let cur = row.get(ci).cloned().unwrap_or_default();
+                let prv = prev_row.and_then(|r| r.get(ci).cloned());
+                // Bench cells are numbers, sometimes with an `x` suffix.
+                let as_num = |s: &str| s.trim().trim_end_matches('x').parse::<f64>().ok();
+                let delta = match (prv.as_deref().and_then(as_num), as_num(&cur)) {
+                    (Some(a), Some(b)) if a != 0.0 => {
+                        format!("{:+.1}%", (b - a) / a * 100.0)
+                    }
+                    _ => "-".into(),
+                };
+                out.row(&[
+                    format!("{name}@{latest_sha}"),
+                    key.clone(),
+                    col.clone(),
+                    prv.unwrap_or_else(|| "-".into()),
+                    cur,
+                    delta,
+                ]);
+            }
+        }
+    }
+    Ok(out)
+}
+
 /// Table I stand-in: the synthetic dataset inventory.
 pub fn datasets_table() -> Table {
     let mut table = Table::new(&["name", "reference size", "queries", "dim", "stands in for"]);

@@ -25,8 +25,12 @@
 //!   or the threaded executor (thread per stage copy, typed shutdown,
 //!   closed-loop batched query admission via `Config::stream.inflight`) —
 //!   for **both** index build and search (DESIGN.md §Executor seam);
-//! * [`stages`] + [`coordinator`] — the five paper stages and the
-//!   build/search drivers (`build_index[_on]`, `search[_on]`);
+//! * [`stages`] + [`coordinator`] — the five paper stages and the serving
+//!   API (DESIGN.md §Service API): a persistent [`IndexSession`] holds the
+//!   index resident on one executor and exposes incremental `insert`,
+//!   streaming `submit`/`recv` query admission with [`QueryTicket`]s, live
+//!   `stats` and a typed `close`; the one-shot phase calls
+//!   (`build_index[_on]`, `search[_on]`) are thin wrappers over it;
 //! * [`partition`] — mod / Z-order / LSH `obj_map` + `bucket_map` strategies;
 //! * [`net`] — the socket transport: a `SocketExecutor` running the same
 //!   pipeline across real OS processes (`parlsh worker`) over TCP, with a
@@ -58,5 +62,6 @@ pub mod util;
 
 pub use config::Config;
 pub use core::lsh::{HashFamily, LshParams};
+pub use coordinator::session::{IndexSession, QueryTicket, SessionStats};
 pub use coordinator::{build_index, search, Cluster};
 pub use data::Dataset;

@@ -3,25 +3,30 @@
 //! ```text
 //! parlsh build   [--config=FILE] [--set k=v]...   build index, print stats
 //! parlsh search  [--config=FILE] [--set k=v]...   build + search + recall
-//! parlsh serve   [--config=FILE] [--set k=v]...   threaded serving run
-//! parlsh serve --net                              multi-process serving run
+//! parlsh serve   [--config=FILE] [--set k=v]...   persistent serving session
+//! parlsh serve --net                              multi-process serving session
 //! parlsh worker  --listen=ADDR                    socket-transport worker
 //! parlsh experiment <id>                          regenerate a paper table
 //!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation
-//!             executors net all
+//!             executors net history all
 //! parlsh calibrate                                measure cost-model consts
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use parlsh::config::Config;
-use parlsh::coordinator::{build_index, build_index_on, search, search_on, threaded::search_threaded};
+use parlsh::coordinator::{build_index, search};
+use parlsh::coordinator::session::IndexSession;
+use parlsh::coordinator::Cluster;
 use parlsh::data::recall::recall_at_k;
+use parlsh::data::Dataset;
+use parlsh::dataflow::exec::{Executor, ThreadedExecutor};
 use parlsh::experiments as exp;
 use parlsh::metrics::latency_stats;
 use parlsh::net::NetSession;
 use parlsh::simnet::calibrate;
 use parlsh::util::cli::Args;
 use parlsh::util::timer::Timer;
+use std::io::{BufRead, IsTerminal};
 
 fn main() {
     let args = match Args::from_env() {
@@ -40,8 +45,8 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "build" => cmd_build(args),
-        "search" => cmd_search(args, false),
-        "serve" => cmd_search(args, true),
+        "search" => cmd_search(args),
+        "serve" => cmd_serve(args),
         "worker" => parlsh::net::worker::run(args),
         "experiment" => cmd_experiment(args),
         "tune" => cmd_tune(args),
@@ -59,19 +64,28 @@ parlsh — distributed multi-probe LSH (Teixeira et al. 2013 reproduction)
 
 USAGE:
   parlsh build      [--config=FILE] [--set section.key=value]...
-  parlsh search     [--config=FILE] [--set ...]      inline executor
-  parlsh serve      [--config=FILE] [--set ...]      threaded executor
-  parlsh serve --net [--set ...]     socket executor: one OS process per
-                                     BI/DP node over loopback TCP (keep
+  parlsh search     [--config=FILE] [--set ...]      inline executor, one-shot
+  parlsh serve      [--config=FILE] [--set ...]      persistent IndexSession
+                                     on the threaded executor: index stays
+                                     resident; queries stream from
+                                     --queries=FILE (.fvecs/.bvecs) or piped
+                                     stdin (one vector per line), falling
+                                     back to the synthetic workload; results
+                                     print as tickets complete
+  parlsh serve --net [--set ...]     same session over the socket executor:
+                                     one OS process per BI/DP node on
+                                     loopback TCP (keep
                                      cluster.{bi,dp}_nodes small!)
   parlsh worker --listen=ADDR        host a node's stage copies (spawned
                                      by the socket driver; prints
                                      `PARLSH_WORKER_LISTEN <addr>`)
-  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|net|all>
+  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|net|history|all>
                                      (`executors`/`net` also write
-                                     BENCH_executors.json / BENCH_net.json;
-                                     `net` spawns processes and is not part
-                                     of `all`)
+                                     BENCH_executors.json / BENCH_net.json
+                                     and archive them under bench_history/
+                                     keyed by git SHA; `history` diffs the
+                                     archived runs; `net` spawns processes
+                                     and is not part of `all`)
   parlsh tune       [--target=0.8] [--set ...]    suggest w, tune T (and M)
   parlsh calibrate
 
@@ -123,37 +137,24 @@ fn cmd_build(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_search(args: &Args, threaded: bool) -> Result<()> {
+fn cmd_search(args: &Args) -> Result<()> {
     let cfg = Config::load(args)?;
+    if args.has_flag("net") {
+        bail!("--net is a serving transport: use `parlsh serve --net`");
+    }
     let w = exp::world(&cfg);
     let b = exp::backends(&cfg, w.data.dim);
-    if args.has_flag("net") {
-        if !threaded {
-            bail!("--net is a serving transport: use `parlsh serve --net`");
-        }
-        return cmd_search_net(&cfg, &w, &b);
-    }
     let mut cluster = build_index(&cfg, &w.data, b.hasher.as_ref());
     let t = Timer::start();
-    let out = if threaded {
-        search_threaded(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref())
-    } else {
-        search(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref())
-    };
+    let out = search(&mut cluster, &w.queries, b.hasher.as_ref(), b.ranker.as_ref());
     let secs = t.secs();
     let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
     let lat = latency_stats(&out.per_query_secs);
-    let admission = match (threaded, cfg.stream.inflight) {
-        (false, _) => String::new(),
-        (true, 0) => ", open loop".to_string(),
-        (true, w) => format!(", closed loop W={w}"),
-    };
     println!(
-        "searched {} queries in {:.2}s ({:.1} q/s, {} executor{admission}, {} path)",
+        "searched {} queries in {:.2}s ({:.1} q/s, inline executor, {} path)",
         w.queries.len(),
         secs,
         w.queries.len() as f64 / secs,
-        if threaded { "threaded" } else { "inline" },
         if b.engine_path { "PJRT artifact" } else { "scalar" },
     );
     println!("recall@{} = {recall:.3}", cfg.lsh.k);
@@ -171,64 +172,185 @@ fn cmd_search(args: &Args, threaded: bool) -> Result<()> {
     Ok(())
 }
 
-/// The acceptance path of DESIGN.md §Transports: the full build + search
-/// pipeline across one OS process per BI/DP node on loopback, with
-/// per-link wire bytes from the real codec and a typed shutdown.
-fn cmd_search_net(cfg: &Config, w: &exp::World, b: &exp::Backends) -> Result<()> {
-    let n_workers = cfg.cluster.bi_nodes + cfg.cluster.dp_nodes;
-    println!(
-        "spawning {n_workers} `parlsh worker` processes on loopback (+ this driver as head node)"
-    );
-    let sess = NetSession::launch(cfg, w.data.dim)?;
-    let mut cluster = build_index_on(sess.executor(), cfg, &w.data, b.hasher.as_ref());
-    println!(
-        "built in {:.2}s across {n_workers} workers: {} logical msgs, {} tcp packets, {:.3} MB on the wire",
-        cluster.build_wall_secs,
-        cluster.build_meter.logical_msgs,
-        cluster.build_meter.total_packets(),
-        cluster.build_meter.total_bytes() as f64 / 1e6,
-    );
-    let t = Timer::start();
-    let out = search_on(
-        sess.executor(),
-        &mut cluster,
-        &w.queries,
-        b.hasher.as_ref(),
-        b.ranker.as_ref(),
-    );
-    let secs = t.secs();
-    sess.shutdown()?;
-    println!("all {n_workers} workers exited cleanly");
+/// `parlsh serve`: the session-oriented serving loop (DESIGN.md §Service
+/// API). The index is built once and stays resident in an [`IndexSession`];
+/// queries stream in as they arrive — from `--queries=FILE`, from piped
+/// stdin, or falling back to the synthetic workload — and results print as
+/// their tickets complete.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = Config::load(args)?;
+    let w = exp::world(&cfg);
+    let b = exp::backends(&cfg, w.data.dim);
+    if args.has_flag("net") {
+        let n_workers = cfg.cluster.bi_nodes + cfg.cluster.dp_nodes;
+        println!(
+            "spawning {n_workers} `parlsh worker` processes on loopback (+ this driver as head node)"
+        );
+        let net = NetSession::launch(&cfg, w.data.dim)?;
+        serve_session(net.executor(), &cfg, &w, &b, args, "socket")?;
+        net.shutdown()?;
+        println!("all {n_workers} workers exited cleanly");
+        Ok(())
+    } else {
+        serve_session(&ThreadedExecutor, &cfg, &w, &b, args, "threaded")
+    }
+}
 
-    let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
-    let lat = latency_stats(&out.per_query_secs);
-    let admission = match cfg.stream.inflight {
+/// Print one completed ticket and record its retrieved ids (for recall
+/// scoring when the workload is synthetic). Tickets are dense, so the
+/// ticket number doubles as the query index.
+fn record_result(retrieved: &mut Vec<Vec<u32>>, t: parlsh::QueryTicket, hits: &[(f32, u32)]) {
+    let i = t.0 as usize;
+    if retrieved.len() <= i {
+        retrieved.resize(i + 1, Vec::new());
+    }
+    retrieved[i] = hits.iter().map(|&(_, id)| id).collect();
+    let head: Vec<String> = hits
+        .iter()
+        .take(5)
+        .map(|&(d, id)| format!("{id}:{d:.1}"))
+        .collect();
+    println!("ticket {:>5} -> [{}]", t.0, head.join(" "));
+}
+
+/// Submit queries one at a time; under closed-loop admission
+/// (`stream.inflight = W`) block on completions whenever W are in flight,
+/// printing them as they finish. Drains the tail before returning.
+fn serve_stream(
+    session: &IndexSession,
+    queries: impl Iterator<Item = Result<Vec<f32>>>,
+    dim: usize,
+    window: usize,
+    retrieved: &mut Vec<Vec<u32>>,
+) -> Result<usize> {
+    let mut submitted = 0usize;
+    for q in queries {
+        let q = q?;
+        if q.len() != dim {
+            bail!("query has {} values, index dimensionality is {dim}", q.len());
+        }
+        session.submit(&q);
+        submitted += 1;
+        if window > 0 {
+            while session.in_flight() >= window {
+                match session.recv() {
+                    Some((t, hits)) => record_result(retrieved, t, &hits),
+                    None => break,
+                }
+            }
+        }
+    }
+    for (t, hits) in session.drain() {
+        record_result(retrieved, t, &hits);
+    }
+    Ok(submitted)
+}
+
+fn serve_session(
+    exec: &dyn Executor,
+    cfg: &Config,
+    w: &exp::World,
+    b: &exp::Backends,
+    args: &Args,
+    transport: &str,
+) -> Result<()> {
+    let dim = w.data.dim;
+    let window = cfg.stream.inflight;
+    let mut cluster = Cluster::empty(cfg, dim);
+    let session =
+        IndexSession::attach(exec, &mut cluster, b.hasher.as_ref(), Some(b.ranker.as_ref()));
+    let t = Timer::start();
+    session.insert(&w.data);
+    println!(
+        "index resident: {} vectors in {:.2}s ({transport} executor, {} path); session open",
+        w.data.len(),
+        t.secs(),
+        if b.engine_path { "PJRT artifact" } else { "scalar" },
+    );
+    let admission = match window {
         0 => "open loop".to_string(),
         win => format!("closed loop W={win}"),
     };
-    // Workers always rank with the scalar oracle (DESIGN.md §Transports);
-    // only driver-side hashing can take the artifact path.
+
+    let t = Timer::start();
+    let mut retrieved: Vec<Vec<u32>> = Vec::new();
+    let mut synthetic = false;
+    let submitted = if let Some(path) = args.opt("queries") {
+        let qs = if path.ends_with(".bvecs") {
+            parlsh::data::io::read_bvecs(path, 0)?
+        } else {
+            parlsh::data::io::read_fvecs(path, 0)?
+        };
+        println!("streaming {} queries from {path}", qs.len());
+        serve_stream(&session, dataset_queries(&qs), dim, window, &mut retrieved)?
+    } else if !std::io::stdin().is_terminal() {
+        println!("reading queries from stdin ({dim} whitespace-separated f32s per line)...");
+        let lines = std::io::stdin().lock().lines().filter_map(|line| match line {
+            Err(e) => Some(Err(anyhow!("read stdin: {e}"))),
+            Ok(l) if l.trim().is_empty() => None, // blank lines are skipped
+            Ok(l) => Some(
+                l.split_whitespace()
+                    .map(|tok| {
+                        tok.parse::<f32>()
+                            .map_err(|e| anyhow!("bad query value `{tok}`: {e}"))
+                    })
+                    .collect::<Result<Vec<f32>>>(),
+            ),
+        });
+        serve_stream(&session, lines, dim, window, &mut retrieved)?
+    } else {
+        println!(
+            "no --queries file and stdin is a TTY: streaming the {} synthetic workload queries",
+            w.queries.len()
+        );
+        synthetic = true;
+        serve_stream(&session, dataset_queries(&w.queries), dim, window, &mut retrieved)?
+    };
+    let secs = t.secs();
+    let stats = session.close();
+
+    let lat = latency_stats(&stats.per_query_secs);
     println!(
-        "searched {} queries in {secs:.2}s ({:.1} q/s, socket executor, {admission}, {} hashing, scalar ranking in workers)",
-        w.queries.len(),
-        w.queries.len() as f64 / secs,
-        if b.engine_path { "PJRT-artifact" } else { "scalar" },
+        "session closed: {submitted} queries in {secs:.2}s ({:.1} q/s, {transport} executor, {admission})",
+        submitted as f64 / secs.max(1e-9),
     );
-    println!("recall@{} = {recall:.3}", cfg.lsh.k);
     println!(
         "latency ms: mean {:.2} p50 {:.2} p90 {:.2} p99 {:.2} max {:.2}",
         lat.mean_ms, lat.p50_ms, lat.p90_ms, lat.p99_ms, lat.max_ms
     );
-    println!(
-        "search wire traffic (real codec bytes, not the wire_size model): \
-         {} logical msgs ({} local), {} tcp packets, {:.3} MB",
-        out.meter.logical_msgs,
-        out.meter.local_msgs,
-        out.meter.total_packets(),
-        out.meter.total_bytes() as f64 / 1e6,
-    );
-    print!("{}", out.meter.link_report());
+    if transport == "socket" {
+        // Socket meters carry measured frame bytes (PR 2), not the model.
+        println!(
+            "search wire traffic (real codec bytes, not the wire_size model): \
+             {} logical msgs ({} local), {} tcp packets, {:.3} MB",
+            stats.search_meter.logical_msgs,
+            stats.search_meter.local_msgs,
+            stats.search_meter.total_packets(),
+            stats.search_meter.total_bytes() as f64 / 1e6,
+        );
+    } else {
+        println!(
+            "search traffic: {} logical msgs ({} local), {} packets, {:.3} MB",
+            stats.search_meter.logical_msgs,
+            stats.search_meter.local_msgs,
+            stats.search_meter.total_packets(),
+            stats.search_meter.payload_bytes as f64 / 1e6,
+        );
+    }
+    if synthetic {
+        // Tickets are issued in submission order, so they line up with gt.
+        let recall = recall_at_k(&retrieved, &w.gt);
+        println!("recall@{} = {recall:.3}", cfg.lsh.k);
+    }
+    if transport == "socket" {
+        print!("{}", stats.search_meter.link_report());
+    }
     Ok(())
+}
+
+/// A dataset's rows as an owned-query iterator for [`serve_stream`].
+fn dataset_queries(ds: &Dataset) -> impl Iterator<Item = Result<Vec<f32>>> + '_ {
+    (0..ds.len()).map(move |i| Ok(ds.get(i).to_vec()))
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -275,14 +397,20 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 let t = exp::executor_comparison();
                 t.print();
                 t.write_json("BENCH_executors.json", "executors")?;
-                println!("(wrote BENCH_executors.json)");
+                let archived = exp::archive_bench("BENCH_executors.json")?;
+                println!("(wrote BENCH_executors.json; archived {archived})");
             }
             "net" => {
                 println!("== Socket transport: obj_map strategies by real wire bytes ==");
                 let (t, json) = exp::net_comparison()?;
                 t.print();
                 std::fs::write("BENCH_net.json", json)?;
-                println!("(wrote BENCH_net.json)");
+                let archived = exp::archive_bench("BENCH_net.json")?;
+                println!("(wrote BENCH_net.json; archived {archived})");
+            }
+            "history" => {
+                println!("== Bench history (bench_history/, latest two runs per experiment) ==");
+                exp::history_table()?.print();
             }
             other => bail!("unknown experiment `{other}`"),
         }

@@ -109,6 +109,169 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------- JSON readback
+//
+// The `BENCH_*.json` documents this crate writes are read back by
+// `parlsh experiment history` to diff bench trajectories across archived
+// runs. The build is serde-free (offline-clean), so the readers below are
+// hand-rolled against exactly the shape `Table::to_json` emits.
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Parse one JSON string literal starting at `at` (which must point at the
+/// opening quote); returns the unescaped string and the index past the
+/// closing quote.
+fn parse_json_string(doc: &str, at: usize) -> Option<(String, usize)> {
+    let b = doc.as_bytes();
+    if b.get(at) != Some(&b'"') {
+        return None;
+    }
+    let mut out = String::new();
+    let mut i = at + 1;
+    while i < b.len() {
+        match b[i] {
+            b'"' => return Some((out, i + 1)),
+            b'\\' => {
+                match *b.get(i + 1)? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hex = doc.get(i + 2..i + 6)?;
+                        out.push(char::from_u32(u32::from_str_radix(hex, 16).ok()?)?);
+                        i += 4;
+                    }
+                    _ => return None,
+                }
+                i += 2;
+            }
+            _ => {
+                let c = doc[i..].chars().next()?;
+                out.push(c);
+                i += c.len_utf8();
+            }
+        }
+    }
+    None
+}
+
+/// Parse a JSON array of strings starting at `at` (the opening bracket);
+/// returns the strings and the index past the closing bracket.
+fn parse_string_array(doc: &str, at: usize) -> Option<(Vec<String>, usize)> {
+    let b = doc.as_bytes();
+    if b.get(at) != Some(&b'[') {
+        return None;
+    }
+    let mut i = skip_ws(b, at + 1);
+    let mut out = Vec::new();
+    if b.get(i) == Some(&b']') {
+        return Some((out, i + 1));
+    }
+    loop {
+        let (s, next) = parse_json_string(doc, i)?;
+        out.push(s);
+        i = skip_ws(b, next);
+        match b.get(i)? {
+            b',' => i = skip_ws(b, i + 1),
+            b']' => return Some((out, i + 1)),
+            _ => return None,
+        }
+    }
+}
+
+/// Expect `"key":` at `at`; returns the index of the value.
+fn expect_key(doc: &str, at: usize, key: &str) -> Option<usize> {
+    let b = doc.as_bytes();
+    let (name, next) = parse_json_string(doc, at)?;
+    if name != key {
+        return None;
+    }
+    let i = skip_ws(b, next);
+    if b.get(i) != Some(&b':') {
+        return None;
+    }
+    Some(skip_ws(b, i + 1))
+}
+
+/// First `"key":"value"` occurrence anywhere in `doc`.
+pub fn json_find_string(doc: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\"");
+    let b = doc.as_bytes();
+    let mut at = doc.find(&pat)? + pat.len();
+    at = skip_ws(b, at);
+    if b.get(at) != Some(&b':') {
+        return None;
+    }
+    parse_json_string(doc, skip_ws(b, at + 1)).map(|(s, _)| s)
+}
+
+/// First `"key":<number>` occurrence anywhere in `doc`.
+pub fn json_find_number(doc: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let b = doc.as_bytes();
+    let mut at = doc.find(&pat)? + pat.len();
+    at = skip_ws(b, at);
+    if b.get(at) != Some(&b':') {
+        return None;
+    }
+    at = skip_ws(b, at + 1);
+    let end = doc[at..]
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .map(|o| at + o)
+        .unwrap_or(doc.len());
+    doc[at..end].parse().ok()
+}
+
+/// Parse the `"table":{"headers":[...],"rows":[[...]]}` object out of a
+/// `Table::write_json` document. Returns `(headers, rows)`, or None when
+/// the document does not contain a table in that exact shape.
+#[allow(clippy::type_complexity)]
+pub fn table_from_json(doc: &str) -> Option<(Vec<String>, Vec<Vec<String>>)> {
+    let b = doc.as_bytes();
+    let key = "\"table\"";
+    let mut at = doc.find(key)? + key.len();
+    at = skip_ws(b, at);
+    if b.get(at) != Some(&b':') {
+        return None;
+    }
+    at = skip_ws(b, at + 1);
+    if b.get(at) != Some(&b'{') {
+        return None;
+    }
+    at = expect_key(doc, skip_ws(b, at + 1), "headers")?;
+    let (headers, next) = parse_string_array(doc, at)?;
+    at = skip_ws(b, next);
+    if b.get(at) != Some(&b',') {
+        return None;
+    }
+    at = expect_key(doc, skip_ws(b, at + 1), "rows")?;
+    if b.get(at) != Some(&b'[') {
+        return None;
+    }
+    at = skip_ws(b, at + 1);
+    let mut rows = Vec::new();
+    if b.get(at) == Some(&b']') {
+        return Some((headers, rows));
+    }
+    loop {
+        let (row, next) = parse_string_array(doc, at)?;
+        rows.push(row);
+        at = skip_ws(b, next);
+        match b.get(at)? {
+            b',' => at = skip_ws(b, at + 1),
+            b']' => return Some((headers, rows)),
+            _ => return None,
+        }
+    }
+}
+
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
 pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
@@ -173,5 +336,35 @@ mod tests {
     fn table_rejects_wrong_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn table_json_roundtrips_through_the_readback_parser() {
+        let mut t = Table::new(&["executor", "q/s", "with \"quote\""]);
+        t.row(&["inline".into(), "120.5".into(), "a\nb".into()]);
+        t.row(&["threaded W=8".into(), "410.0".into(), "c\\d".into()]);
+        // as archived: extra keys stamped in front of / behind the table
+        let doc = format!(
+            "{{\"sha\":\"abc123\",\"recorded_unix\":1753,\"experiment\":\"executors\",\"table\":{},\"extra\":{{}}}}",
+            t.to_json()
+        );
+        let (headers, rows) = table_from_json(&doc).expect("parse");
+        assert_eq!(headers, vec!["executor", "q/s", "with \"quote\""]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], vec!["inline", "120.5", "a\nb"]);
+        assert_eq!(rows[1], vec!["threaded W=8", "410.0", "c\\d"]);
+        assert_eq!(json_find_string(&doc, "sha").as_deref(), Some("abc123"));
+        assert_eq!(json_find_string(&doc, "experiment").as_deref(), Some("executors"));
+        assert_eq!(json_find_number(&doc, "recorded_unix"), Some(1753.0));
+    }
+
+    #[test]
+    fn table_json_readback_handles_empty_tables() {
+        let t = Table::new(&["a"]);
+        let doc = format!("{{\"table\":{}}}", t.to_json());
+        let (headers, rows) = table_from_json(&doc).expect("parse");
+        assert_eq!(headers, vec!["a"]);
+        assert!(rows.is_empty());
+        assert!(table_from_json("{\"no_table\":1}").is_none());
     }
 }

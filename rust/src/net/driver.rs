@@ -26,7 +26,7 @@
 use crate::config::Config;
 use crate::dataflow::exec::{ExecReport, Executor, StageHandler, StageHandlers, Workload};
 use crate::dataflow::message::{Dest, Msg, StageKind};
-use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::net::peer::{connect_retry, PeerConn};
 use crate::net::wire::{self, FrameKind, Hello, NodeState};
@@ -50,7 +50,12 @@ const PHASE_STALL_TIMEOUT: Duration = Duration::from_secs(120);
 enum DriverEv {
     HelloOk { from: u16, node: u16, digest: u64 },
     Msg { from: u16, dest: Dest, msg: Msg },
-    FlushAck { from: u16, seq: u32, meter: TrafficMeter },
+    FlushAck {
+        from: u16,
+        seq: u32,
+        meter: TrafficMeter,
+        work: Vec<(StageKind, u16, WorkStats)>,
+    },
     State { from: u16, state: NodeState },
     Stopped { from: u16, reason: String },
     Closed { from: u16, err: String },
@@ -208,7 +213,9 @@ impl Session {
             }
         }
 
-        // Phase barrier: collect every worker's real bytes-on-wire meter.
+        // Phase barrier: collect every worker's real bytes-on-wire meter
+        // plus its per-copy work counters (so the report's work accounting
+        // covers the remote BI/DP copies, not just the head).
         *flush_seq += 1;
         let seq = *flush_seq;
         let req = wire::encode_frame(FrameKind::FlushReq, &wire::encode_qid(seq));
@@ -216,14 +223,16 @@ impl Session {
             p.send_now(&req)?;
         }
         meter.flush();
+        let mut remote_work: Vec<(StageKind, u16, WorkStats)> = Vec::new();
         let mut acks = 0usize;
         while acks < n_workers {
             match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
-                Ok(DriverEv::FlushAck { seq: s, meter: m, from }) => {
+                Ok(DriverEv::FlushAck { seq: s, meter: m, work, from }) => {
                     if s != seq {
                         bail!("worker {from} acked barrier {s}, expected {seq}");
                     }
                     meter.merge(&m);
+                    remote_work.extend(work);
                     acks += 1;
                 }
                 Ok(DriverEv::Stopped { from, reason }) => {
@@ -236,7 +245,7 @@ impl Session {
                 Err(e) => bail!("phase barrier: {e}"),
             }
         }
-        Ok(ExecReport { results, per_query_secs, meter })
+        Ok(ExecReport { results, per_query_secs, meter, work: remote_work })
     }
 }
 
@@ -529,7 +538,7 @@ fn reader_loop(mut stream: TcpStream, from: u16, tx: Sender<DriverEv>, max_frame
             FrameKind::Stage => wire::decode_stage(&frame.payload)
                 .map(|(dest, msg)| DriverEv::Msg { from, dest, msg }),
             FrameKind::FlushAck => wire::decode_flush_ack(&frame.payload)
-                .map(|(seq, meter)| DriverEv::FlushAck { from, seq, meter }),
+                .map(|(seq, meter, work)| DriverEv::FlushAck { from, seq, meter, work }),
             FrameKind::StateDump => wire::decode_state_dump(&frame.payload)
                 .map(|state| DriverEv::State { from, state }),
             FrameKind::Stopped => wire::decode_stopped(&frame.payload)

@@ -31,13 +31,15 @@
 use crate::config::{ClusterConfig, ObjMapStrategy, StreamConfig};
 use crate::core::lsh::LshParams;
 use crate::dataflow::message::{Dest, Msg, StageKind};
-use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::stages::{BiState, DpState};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::Read;
 use std::sync::Arc;
 
-pub const WIRE_VERSION: u8 = 1;
+// v2: FlushAck carries per-copy WorkStats after the link list, so the
+// driver's work accounting is complete under the socket transport.
+pub const WIRE_VERSION: u8 = 2;
 pub const MAGIC: u16 = 0x504C;
 pub const HEADER_LEN: usize = 12;
 
@@ -594,8 +596,15 @@ pub fn decode_stopped(payload: &[u8]) -> Result<String> {
 }
 
 /// FlushAck: barrier sequence number + the worker's phase meter (per-link
-/// real bytes-on-wire plus the logical/local/payload counters).
-pub fn encode_flush_ack(seq: u32, meter: &TrafficMeter) -> Vec<u8> {
+/// real bytes-on-wire plus the logical/local/payload counters) + the phase
+/// work counters of every stage copy this worker hosts, so the driver's
+/// `SearchOutput::work` / `IndexSession::stats()` is complete under the
+/// socket transport (not head-only).
+pub fn encode_flush_ack(
+    seq: u32,
+    meter: &TrafficMeter,
+    work: &[(StageKind, u16, WorkStats)],
+) -> Vec<u8> {
     let mut p = Vec::new();
     put_u32(&mut p, seq);
     put_u64(&mut p, meter.logical_msgs);
@@ -610,10 +619,30 @@ pub fn encode_flush_ack(seq: u32, meter: &TrafficMeter) -> Vec<u8> {
         put_u64(&mut p, l.packets);
         put_u64(&mut p, l.bytes);
     }
+    put_u32(&mut p, work.len() as u32);
+    for (stage, copy, w) in work {
+        put_u8(&mut p, stage.code());
+        put_u16(&mut p, *copy);
+        for v in [
+            w.hash_vectors,
+            w.probe_seqs,
+            w.bucket_lookups,
+            w.candidates_routed,
+            w.dists_computed,
+            w.dup_skipped,
+            w.objects_stored,
+            w.reduce_pushes,
+        ] {
+            put_u64(&mut p, v);
+        }
+    }
     p
 }
 
-pub fn decode_flush_ack(payload: &[u8]) -> Result<(u32, TrafficMeter)> {
+#[allow(clippy::type_complexity)]
+pub fn decode_flush_ack(
+    payload: &[u8],
+) -> Result<(u32, TrafficMeter, Vec<(StageKind, u16, WorkStats)>)> {
     let mut rd = Rd::new(payload);
     let seq = rd.u32()?;
     let mut meter = TrafficMeter::new(0);
@@ -629,8 +658,26 @@ pub fn decode_flush_ack(payload: &[u8]) -> Result<(u32, TrafficMeter)> {
         let bytes = rd.u64()?;
         meter.add_link(src, dst, packets, bytes);
     }
+    let n_work = rd.len_prefix(67)?; // 1 (stage) + 2 (copy) + 8 u64 counters
+    let mut work = Vec::with_capacity(n_work);
+    for _ in 0..n_work {
+        let stage = StageKind::from_code(rd.u8()?)
+            .ok_or_else(|| anyhow!("unknown stage code in work stats"))?;
+        let copy = rd.u16()?;
+        let w = WorkStats {
+            hash_vectors: rd.u64()?,
+            probe_seqs: rd.u64()?,
+            bucket_lookups: rd.u64()?,
+            candidates_routed: rd.u64()?,
+            dists_computed: rd.u64()?,
+            dup_skipped: rd.u64()?,
+            objects_stored: rd.u64()?,
+            reduce_pushes: rd.u64()?,
+        };
+        work.push((stage, copy, w));
+    }
     rd.done()?;
-    Ok((seq, meter))
+    Ok((seq, meter, work))
 }
 
 // ------------------------------------------------------------- snapshots
@@ -912,8 +959,20 @@ mod tests {
         m.send(0, 3, 50);
         m.send(1, 3, 10);
         m.send(2, 2, 999); // local
-        let p = encode_flush_ack(42, &m);
-        let (seq, m2) = decode_flush_ack(&p).unwrap();
+        let work = vec![
+            (
+                StageKind::Bi,
+                2u16,
+                WorkStats { bucket_lookups: 7, candidates_routed: 19, dup_skipped: 3, ..Default::default() },
+            ),
+            (
+                StageKind::Dp,
+                5u16,
+                WorkStats { dists_computed: 123, objects_stored: 44, ..Default::default() },
+            ),
+        ];
+        let p = encode_flush_ack(42, &m, &work);
+        let (seq, m2, w2) = decode_flush_ack(&p).unwrap();
         assert_eq!(seq, 42);
         assert_eq!(m2.logical_msgs, 3);
         assert_eq!(m2.local_msgs, 1);
@@ -921,6 +980,12 @@ mod tests {
         assert_eq!(m2.total_packets(), m.total_packets());
         assert_eq!(m2.total_bytes(), m.total_bytes());
         assert_eq!(m2.links()[&(0, 3)].bytes, m.links()[&(0, 3)].bytes);
+        assert_eq!(w2, work, "per-copy work stats must roundtrip");
+        // no work entries is also valid (e.g. a worker hosting only BIs
+        // that saw no traffic still acks with its empty list)
+        let p = encode_flush_ack(7, &m, &[]);
+        let (_, _, w) = decode_flush_ack(&p).unwrap();
+        assert!(w.is_empty());
     }
 
     #[test]

@@ -28,7 +28,7 @@
 use crate::config::{Config, SocketConfig};
 use crate::dataflow::exec::{BiHandler, DpHandler, StageHandler};
 use crate::dataflow::message::{Dest, Msg, StageKind};
-use crate::dataflow::metrics::TrafficMeter;
+use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::net::peer::{connect_retry, PeerConn};
 use crate::net::wire::{self, FrameKind, Hello};
@@ -299,9 +299,20 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
                     p.flush()?;
                 }
                 meter.flush();
+                // Ship (and reset) the phase work counters of every hosted
+                // copy alongside the meter, so driver-side work accounting
+                // is complete per phase — not head-only (DESIGN.md
+                // §Transports; the simnet cost model consumes these).
+                let mut work: Vec<(StageKind, u16, WorkStats)> = Vec::new();
+                for bi in bis.iter_mut() {
+                    work.push((StageKind::Bi, bi.copy, std::mem::take(&mut bi.work)));
+                }
+                for dp in dps.iter_mut() {
+                    work.push((StageKind::Dp, dp.copy, std::mem::take(&mut dp.work)));
+                }
                 driver.send_now(&wire::encode_frame(
                     FrameKind::FlushAck,
-                    &wire::encode_flush_ack(seq, &meter),
+                    &wire::encode_flush_ack(seq, &meter, &work),
                 ))?;
                 meter = fresh_meter(agg);
             }

@@ -16,6 +16,7 @@ use parlsh::coordinator::{build_index, build_index_on, search, search_on};
 use parlsh::core::lsh::{HashFamily, LshParams};
 use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
 use parlsh::data::Dataset;
+use parlsh::dataflow::message::StageKind;
 use parlsh::net::NetSession;
 use parlsh::runtime::{ScalarHasher, ScalarRanker};
 use std::collections::BTreeMap;
@@ -109,6 +110,26 @@ fn loopback_multiprocess_build_and_search_match_inline() {
     assert_eq!(inline_out.results, net_out.results, "top-k diverged across the wire");
     assert_eq!(inline_out.meter.logical_msgs, net_out.meter.logical_msgs);
     assert_eq!(inline_out.meter.local_msgs, net_out.meter.local_msgs);
+
+    // Work accounting is complete over the socket (FlushAck ships per-copy
+    // WorkStats), not head-only: remote DP copies report real distance
+    // counts, and the totals match the inline oracle exactly — DP dedup is
+    // set-based per (query, copy), so the counts are arrival-order-free.
+    let dists = |work: &[(StageKind, u16, parlsh::dataflow::metrics::WorkStats)]| -> u64 {
+        work.iter().map(|(_, _, w)| w.dists_computed).sum()
+    };
+    assert!(
+        net_out
+            .work
+            .iter()
+            .any(|(s, _, w)| *s == StageKind::Dp && w.dists_computed > 0),
+        "socket work stats are still head-only"
+    );
+    assert_eq!(dists(&net_out.work), dists(&inline_out.work), "socket dists diverged");
+    let dups = |work: &[(StageKind, u16, parlsh::dataflow::metrics::WorkStats)]| -> u64 {
+        work.iter().map(|(_, _, w)| w.dup_skipped).sum()
+    };
+    assert_eq!(dups(&net_out.work), dups(&inline_out.work), "socket dedup diverged");
     assert!(net_out.meter.payload_bytes > inline_out.meter.payload_bytes);
     assert!(net_out.meter.total_packets() > 0);
     // Per-link accounting covers both driver->worker and worker->driver

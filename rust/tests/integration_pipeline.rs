@@ -4,7 +4,7 @@
 
 use parlsh::baseline::SequentialLsh;
 use parlsh::config::Config;
-use parlsh::coordinator::{build_index, build_index_on, search, threaded::search_threaded};
+use parlsh::coordinator::{build_index, build_index_on, search, search_on};
 use parlsh::dataflow::exec::ThreadedExecutor;
 use parlsh::core::lsh::{HashFamily, LshParams};
 use parlsh::data::groundtruth::ground_truth_scalar;
@@ -100,7 +100,7 @@ fn threaded_executor_differential() {
     let ranker = ScalarRanker { dim: ds.dim };
 
     let mut cluster = build_index(&cfg, &ds, &hasher);
-    let out = search_threaded(&mut cluster, &qs, &hasher, &ranker);
+    let out = search_on(&ThreadedExecutor, &mut cluster, &qs, &hasher, &ranker);
 
     let seq = SequentialLsh::build(&ds, cfg.lsh);
     for qi in 0..qs.len() {
@@ -128,7 +128,7 @@ fn threaded_build_and_batched_search_equal_sequential() {
     let mut cluster = build_index_on(&ThreadedExecutor, &cfg, &ds, &hasher);
     assert_eq!(cluster.stored_objects(), ds.len());
     assert_eq!(cluster.bucket_references(), ds.len() * cfg.lsh.l);
-    let out = search_threaded(&mut cluster, &qs, &hasher, &ranker);
+    let out = search_on(&ThreadedExecutor, &mut cluster, &qs, &hasher, &ranker);
 
     let seq = SequentialLsh::build(&ds, cfg.lsh);
     for qi in 0..qs.len() {

@@ -1,0 +1,240 @@
+//! Session-API contracts (DESIGN.md §Service API):
+//!
+//! * concurrent submitters — two threads interleaving `submit()` on one
+//!   `IndexSession` get per-ticket results identical to the inline oracle,
+//!   on the threaded and the socket executor;
+//! * post-build `insert()` — growing the index through a session is
+//!   state-identical to building over the concatenated dataset;
+//! * the acceptance path — build → insert → search in ONE session over ONE
+//!   worker launch (no re-handshake), answers matching the oracle and
+//!   worker state matching the inline build per bucket.
+
+use parlsh::config::Config;
+use parlsh::coordinator::session::IndexSession;
+use parlsh::coordinator::{build_index, search, Cluster};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::data::Dataset;
+use parlsh::dataflow::exec::{Executor, ThreadedExecutor};
+use parlsh::dataflow::message::StageKind;
+use parlsh::net::NetSession;
+use parlsh::runtime::{ScalarHasher, ScalarRanker};
+use std::collections::HashMap;
+use std::path::Path;
+
+fn session_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 };
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.cluster.ag_copies = 2;
+    cfg.stream.inflight = 2;
+    cfg.data.n = 1_200;
+    cfg
+}
+
+fn small_world(cfg: &Config, queries: usize) -> (Dataset, Dataset, ScalarHasher, ScalarRanker) {
+    let ds = synthesize(SynthSpec { n: cfg.data.n, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let ranker = ScalarRanker { dim: ds.dim };
+    (ds, qs, ScalarHasher { family }, ranker)
+}
+
+fn concat(a: &Dataset, b: &Dataset) -> Dataset {
+    let mut out = Dataset::with_capacity(a.dim, a.len() + b.len());
+    for i in 0..a.len() {
+        out.push(a.get(i));
+    }
+    for i in 0..b.len() {
+        out.push(b.get(i));
+    }
+    out
+}
+
+/// Two threads interleave submissions on one session; every ticket's
+/// result must equal the inline oracle for the vector that thread
+/// submitted — matched by ticket, not by arrival order.
+fn assert_concurrent_submitters_match_oracle(exec: &dyn Executor, cfg: &Config) {
+    let (ds, qs, hasher, ranker) = small_world(cfg, 16);
+    let mut oracle_cluster = build_index(cfg, &ds, &hasher);
+    let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+    // Build through the executor under test (under the socket transport
+    // the index must land in the workers, not in this process).
+    let mut cluster = parlsh::coordinator::build_index_on(exec, cfg, &ds, &hasher);
+    let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(&ranker));
+    let assignments: Vec<(usize, parlsh::QueryTicket)> = std::thread::scope(|s| {
+        let submit_half = |start: usize| {
+            let session = &session;
+            let qs = &qs;
+            move || -> Vec<(usize, parlsh::QueryTicket)> {
+                (start..qs.len())
+                    .step_by(2)
+                    .map(|qi| (qi, session.submit(qs.get(qi))))
+                    .collect()
+            }
+        };
+        let even = s.spawn(submit_half(0));
+        let odd = s.spawn(submit_half(1));
+        let mut v = even.join().expect("even submitter");
+        v.extend(odd.join().expect("odd submitter"));
+        v
+    });
+    assert_eq!(assignments.len(), qs.len());
+
+    let done = session.drain();
+    assert_eq!(done.len(), qs.len());
+    let by_ticket: HashMap<u64, Vec<(f32, u32)>> =
+        done.into_iter().map(|(t, hits)| (t.0, hits)).collect();
+    for (qi, ticket) in &assignments {
+        assert_eq!(
+            by_ticket[&ticket.0], oracle.results[*qi],
+            "query {qi} (ticket {}) diverged from the inline oracle",
+            ticket.0
+        );
+    }
+    let stats = session.close();
+    assert_eq!(stats.queries_submitted, qs.len() as u64);
+    assert_eq!(stats.queries_completed, qs.len() as u64);
+}
+
+#[test]
+fn concurrent_submitters_match_inline_oracle_threaded() {
+    let cfg = session_cfg();
+    assert_concurrent_submitters_match_oracle(&ThreadedExecutor, &cfg);
+}
+
+#[test]
+fn concurrent_submitters_match_inline_oracle_socket() {
+    let cfg = session_cfg();
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    assert_concurrent_submitters_match_oracle(net.executor(), &cfg);
+    net.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn post_build_insert_matches_concatenated_build() {
+    // build(ds1) then session.insert(ds2) must be state-identical — per
+    // bucket, per insertion order — to build(ds1 ++ ds2).
+    let cfg = session_cfg();
+    let (ds1, _, hasher, ranker) = small_world(&cfg, 1);
+    let ds2 = synthesize(SynthSpec { n: 300, clusters: 10, seed: 77, ..Default::default() });
+    let both = concat(&ds1, &ds2);
+    let want = build_index(&cfg, &both, &hasher);
+
+    let mut cluster = build_index(&cfg, &ds1, &hasher);
+    {
+        let session = IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, None);
+        let range = session.insert(&ds2);
+        assert_eq!(range, ds1.len() as u32..both.len() as u32);
+        session.close();
+    }
+    let _ = ranker;
+
+    assert_eq!(cluster.stored_objects(), both.len());
+    assert_eq!(cluster.indexed_objects as usize, both.len());
+    assert_eq!(cluster.bucket_references(), both.len() * cfg.lsh.l);
+    for (a, b) in want.bis.iter().zip(&cluster.bis) {
+        assert_eq!(
+            a.buckets_snapshot(),
+            b.buckets_snapshot(),
+            "BI copy {} diverged from the concatenated build",
+            a.copy
+        );
+    }
+    for (a, b) in want.dps.iter().zip(&cluster.dps) {
+        assert_eq!(
+            a.objects_snapshot(),
+            b.objects_snapshot(),
+            "DP copy {} diverged from the concatenated build",
+            a.copy
+        );
+    }
+}
+
+#[test]
+fn socket_session_build_insert_search_without_rehandshake() {
+    // The acceptance path: ONE worker launch, ONE session — build, then
+    // post-build insert, then search, with no re-handshake in between.
+    let cfg = session_cfg();
+    let (ds1, _, hasher, ranker) = small_world(&cfg, 1);
+    let ds2 = synthesize(SynthSpec { n: 300, clusters: 10, seed: 77, ..Default::default() });
+    let both = concat(&ds1, &ds2);
+    let (qs, _) = distorted_queries(&both, 12, 3.0, 5);
+
+    let mut oracle_cluster = build_index(&cfg, &both, &hasher);
+    let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, both.dim).expect("launch workers");
+    let mut cluster = Cluster::empty(&cfg, both.dim);
+    {
+        let session =
+            IndexSession::attach(net.executor(), &mut cluster, &hasher, Some(&ranker));
+        assert_eq!(session.insert(&ds1), 0..ds1.len() as u32);
+        assert_eq!(session.insert(&ds2), ds1.len() as u32..both.len() as u32);
+
+        let tickets: Vec<parlsh::QueryTicket> =
+            (0..qs.len()).map(|qi| session.submit(qs.get(qi))).collect();
+        let mut got: HashMap<u64, Vec<(f32, u32)>> = HashMap::new();
+        while let Some((t, hits)) = session.recv() {
+            got.insert(t.0, hits);
+        }
+        assert_eq!(got.len(), qs.len());
+        for (qi, t) in tickets.iter().enumerate() {
+            assert_eq!(got[&t.0], oracle.results[qi], "query {qi} diverged over the wire");
+        }
+
+        let stats = session.stats();
+        assert_eq!(stats.objects_indexed as usize, both.len());
+        assert_eq!(stats.queries_completed, qs.len() as u64);
+        assert!(stats.build_meter.logical_msgs > 0);
+        assert!(stats.search_meter.payload_bytes > 0);
+        // work accounting is complete: remote DP copies reported theirs
+        assert!(
+            stats
+                .work
+                .iter()
+                .any(|(s, _, w)| *s == StageKind::Dp && w.dists_computed > 0),
+            "session work stats are head-only under the socket transport"
+        );
+        session.close();
+    }
+
+    // Worker-side state after build + insert == the inline concatenated
+    // build, per bucket (the index really grew in the running workers).
+    let state = net.fetch_state().expect("fetch worker state");
+    let mut remote_bis = HashMap::new();
+    let mut remote_dps = HashMap::new();
+    for (_node, ns) in state {
+        for (copy, buckets) in ns.bis {
+            remote_bis.insert(copy, buckets);
+        }
+        for (copy, objs) in ns.dps {
+            remote_dps.insert(copy, objs);
+        }
+    }
+    for bi in &oracle_cluster.bis {
+        let want: Vec<(u64, Vec<(u32, u16)>)> = bi
+            .buckets_snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, v.clone()))
+            .collect();
+        assert_eq!(remote_bis[&bi.copy], want, "BI copy {} diverged", bi.copy);
+    }
+    let mut stored = 0usize;
+    for dp in &oracle_cluster.dps {
+        let want: Vec<(u32, Vec<f32>)> = dp
+            .objects_snapshot()
+            .into_iter()
+            .map(|(id, v)| (id, v.to_vec()))
+            .collect();
+        assert_eq!(remote_dps[&dp.copy], want, "DP copy {} diverged", dp.copy);
+        stored += want.len();
+    }
+    assert_eq!(stored, both.len(), "no-replication invariant after insert");
+
+    net.shutdown().expect("clean shutdown");
+}
