@@ -26,7 +26,6 @@ use parlsh::coordinator::session::IndexSession;
 use parlsh::data::recall::recall_at_k;
 use parlsh::dataflow::exec::ThreadedExecutor;
 use parlsh::experiments::{backends, env_usize, world};
-use parlsh::metrics::latency_stats;
 use parlsh::util::timer::Timer;
 
 fn main() {
@@ -76,7 +75,7 @@ fn main() {
         &ThreadedExecutor,
         &mut cluster,
         b.hasher.as_ref(),
-        Some(b.ranker.as_ref()),
+        Some(b.ranker.clone()),
     );
     let t = Timer::start();
     let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); w.queries.len()];
@@ -94,7 +93,7 @@ fn main() {
         .map(|r| r.iter().map(|&(_, id)| id).collect())
         .collect();
     let recall = recall_at_k(&retrieved, &w.gt);
-    let lat = latency_stats(&stats.per_query_secs);
+    let lat = stats.latency.stats();
 
     println!("== serving results ==");
     println!(

@@ -63,7 +63,7 @@ fn main() {
         sess.executor(),
         &mut cluster,
         b.hasher.as_ref(),
-        Some(b.ranker.as_ref()),
+        Some(b.ranker.clone()),
     );
 
     let t = Timer::start();

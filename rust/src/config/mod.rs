@@ -117,6 +117,10 @@ pub struct SocketConfig {
     pub retry_ms: u64,
     /// Cap on a single decoded frame (corrupted-length guard).
     pub max_frame_bytes: usize,
+    /// Bound (in frames) on a worker's internal reader→dispatch queue.
+    /// A full queue blocks the connection's reader thread, so backpressure
+    /// propagates to the TCP sender instead of growing an unbounded buffer.
+    pub queue_frames: usize,
 }
 
 impl Default for SocketConfig {
@@ -126,6 +130,7 @@ impl Default for SocketConfig {
             connect_retries: 40,
             retry_ms: 25,
             max_frame_bytes: 64 << 20,
+            queue_frames: 1024,
         }
     }
 }
@@ -172,6 +177,11 @@ pub struct StreamConfig {
     /// Closed-loop admission window for the threaded executor: max queries
     /// in flight at once (0 = open loop, submit everything up front).
     pub inflight: usize,
+    /// Session-level backpressure: cap on queries submitted but not yet
+    /// completed on a streaming run. At the cap, `IndexSession::submit`
+    /// blocks (and `try_submit` declines) until completions drain;
+    /// 0 = unbounded (submit never blocks).
+    pub pending_cap: usize,
 }
 
 impl Default for StreamConfig {
@@ -182,6 +192,7 @@ impl Default for StreamConfig {
             dedup: true,
             max_candidates: 0,
             inflight: 0,
+            pending_cap: 0,
         }
     }
 }
@@ -240,6 +251,7 @@ impl Config {
             connect_retries: doc.usize_or("net.connect_retries", c.sock.connect_retries),
             retry_ms: doc.usize_or("net.retry_ms", c.sock.retry_ms as usize) as u64,
             max_frame_bytes: doc.usize_or("net.max_frame_bytes", c.sock.max_frame_bytes),
+            queue_frames: doc.usize_or("net.queue_frames", c.sock.queue_frames),
         };
         c.data = DataConfig {
             source: doc.str_or("data.source", &c.data.source),
@@ -258,6 +270,7 @@ impl Config {
             dedup: doc.bool_or("stream.dedup", c.stream.dedup),
             max_candidates: doc.usize_or("stream.max_candidates", 0),
             inflight: doc.usize_or("stream.inflight", c.stream.inflight),
+            pending_cap: doc.usize_or("stream.pending_cap", c.stream.pending_cap),
         };
         c.runtime = RuntimeConfig {
             artifacts_dir: doc.str_or("runtime.artifacts_dir", &c.runtime.artifacts_dir),
@@ -315,6 +328,21 @@ mod tests {
         assert_eq!(c.stream.inflight, 16);
         // default stays open loop
         assert_eq!(Config::default().stream.inflight, 0);
+    }
+
+    #[test]
+    fn backpressure_knobs_parse() {
+        // defaults: unbounded session backpressure, bounded worker queues
+        let c = Config::default();
+        assert_eq!(c.stream.pending_cap, 0);
+        assert_eq!(c.sock.queue_frames, 1024);
+        let doc = Doc::parse(
+            "[stream]\npending_cap = 64\n[net]\nqueue_frames = 256\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.stream.pending_cap, 64);
+        assert_eq!(c.sock.queue_frames, 256);
     }
 
     #[test]

@@ -8,13 +8,17 @@
 //! (`crate::net::SocketExecutor`) — and runs build, incremental
 //! [`insert`](session::IndexSession::insert) and streaming
 //! [`submit`](session::IndexSession::submit)/[`recv`](session::IndexSession::recv)
-//! phases back-to-back without re-handshaking anything. The historical
-//! phase calls survive as thin wrappers: [`build_index_on`] opens a session
-//! over an empty cluster, inserts, and closes; [`search_on`] opens a
-//! session, submits the whole query set, and drains it. [`build_index`]/
-//! [`search`] pin the deterministic [`InlineExecutor`] (FIFO delivery,
-//! results bit-identical to the sequential baseline — the
-//! differential-testing contract in `rust/tests/integration_pipeline.rs`).
+//! phases back-to-back without re-handshaking anything — and, since the
+//! streaming-admission rework, `submit`/`recv` ride a long-lived
+//! [`Executor::open_stream`] run: a query enters the pipeline the moment
+//! it is submitted. The historical phase calls remain the *pumped* batch
+//! path: [`build_index_on`] opens a build-only session over an empty
+//! cluster, inserts, and closes; [`search_on`] admits the whole query set
+//! as one `Executor::run` workload (the differential oracle the streaming
+//! path is held identical to). [`build_index`]/[`search`] pin the
+//! deterministic [`InlineExecutor`] (FIFO delivery, results bit-identical
+//! to the sequential baseline — the differential-testing contract in
+//! `rust/tests/integration_pipeline.rs`).
 //!
 //! Under the socket transport the placement handed to each phase is the
 //! launch-time placement: BI/DP state lives in the worker processes, so
@@ -32,13 +36,15 @@ pub mod session;
 use crate::config::Config;
 use crate::core::lsh::HashFamily;
 use crate::data::Dataset;
-use crate::dataflow::exec::{bind_stages, Executor, InlineExecutor, IrHandler, Workload};
+use crate::dataflow::exec::{
+    bind_stages, Executor, InlineExecutor, IrHandler, QrHandler, Workload,
+};
 use crate::dataflow::message::{Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::partition::ObjMapper;
 use crate::runtime::{Hasher, Ranker};
-use crate::stages::{AgState, BiState, DpState, InputReader};
+use crate::stages::{AgState, BiState, DpState, InputReader, QueryReceiver};
 use crate::util::timer::Timer;
 use session::IndexSession;
 use std::sync::Arc;
@@ -325,11 +331,14 @@ pub fn search(
     search_on(&InlineExecutor, cluster, queries, hasher, ranker)
 }
 
-/// Run the search phase on any [`Executor`] — a thin wrapper over an
-/// [`IndexSession`]: open, submit the whole query set (one batched hash
-/// call), drain, close. The admission window comes from
-/// `Config::stream.inflight` (0 = open loop); the inline executor is
-/// sequential regardless, so the knob only shapes threaded/socket serving.
+/// Run the search phase on any [`Executor`] — the *pumped* phase path:
+/// the whole query set is hashed in one batched call and admitted as one
+/// [`Executor::run`] workload under the `Config::stream.inflight` window
+/// (0 = open loop; the inline executor is sequential regardless). This is
+/// the one-shot batch API and the differential oracle the streaming
+/// session path ([`IndexSession::submit`]/[`IndexSession::recv`] over
+/// [`Executor::open_stream`]) is held bit-identical to — see the
+/// streaming-vs-pumped tests in [`session`].
 pub fn search_on(
     exec: &dyn Executor,
     cluster: &mut Cluster,
@@ -338,19 +347,47 @@ pub fn search_on(
     ranker: &dyn Ranker,
 ) -> SearchOutput {
     let wall = Timer::start();
-    let session = IndexSession::attach(exec, cluster, hasher, Some(ranker));
-    let tickets = session.submit_batch(queries);
-    let mut results: Vec<Vec<(f32, u32)>> = vec![Vec::new(); queries.len()];
-    for (ticket, hits) in session.drain() {
-        results[(ticket.0 - tickets.start) as usize] = hits;
-    }
-    let work = session.take_work();
-    let stats = session.close();
+    let placement = cluster.placement.clone();
+    let family = cluster.family.clone();
+    let agg = cluster.cfg.stream.agg_bytes;
+    let window = cluster.cfg.stream.inflight;
+    let p = hasher.p();
+    let raws = hasher.proj_batch(queries.as_flat(), queries.len());
+    // `QrHandler` accounts one hashed vector per delivered `QueryVec`, so
+    // the batched proj call above needs no extra work accounting here.
+    let mut qr = QueryReceiver::new(&family, placement.bi_copies, placement.ag_copies);
+    let report = {
+        let stages = bind_stages(
+            Box::new(QrHandler { qr: &mut qr }),
+            &mut cluster.bis,
+            &mut cluster.dps,
+            &mut cluster.ags,
+            Some(ranker),
+        );
+        let mut items = (0..queries.len()).map(|i| Msg::QueryVec {
+            qid: i as u32,
+            raw: raws[i * p..(i + 1) * p].into(),
+            v: queries.get(i).into(),
+        });
+        exec.run(
+            &placement,
+            stages,
+            Workload {
+                items: &mut items,
+                n_queries: queries.len(),
+                window,
+                agg_bytes: agg,
+            },
+        )
+    };
+    let head_work = qr.work;
+    cluster.absorb_remote_work(&report.work);
+    let work = cluster.take_work(&head_work);
     SearchOutput {
-        results,
-        meter: stats.search_meter,
+        results: report.results,
+        meter: report.meter,
         work,
-        per_query_secs: stats.per_query_secs,
+        per_query_secs: report.per_query_secs,
         wall_secs: wall.secs(),
     }
 }

@@ -15,38 +15,55 @@
 //! Cluster::empty / build_index ──▶ IndexSession::attach
 //!        ┌─────────────────────────────┴──────────────────────────┐
 //!        │   insert(&Dataset)      grow the resident index        │
-//!        │   submit(q) → ticket    admit one query                │
+//!        │   submit(q) → ticket    admit one query (streaming)    │
 //!        │   recv() → (ticket,topk) stream completions out        │
 //!        │   stats()               merged traffic + per-copy work │
 //!        └─────────────────────────────┬──────────────────────────┘
 //!                                 close() → SessionStats
 //! ```
 //!
-//! Admission: submissions buffer in the session and are *pumped* through
-//! the executor under the closed-loop `Config::stream.inflight` window
-//! (0 = open loop) whenever a caller needs completions — `recv` with
-//! nothing buffered, `drain`, `close`, or an `insert` (which acts as a
-//! barrier: queries submitted before it complete against the pre-insert
-//! index). Each pump admits the whole buffered backlog as one workload, so
-//! phase-call wrappers ([`super::search_on`]) pump exactly once and stay
-//! bit-identical to the pre-session API.
+//! Admission is *streaming* ([`Executor::open_stream`]): the first
+//! `submit` opens a long-lived [`StreamRun`] on the executor, and every
+//! submission enters the pipeline the moment it arrives — no buffering
+//! until the next pump. The closed-loop `Config::stream.inflight` window
+//! still bounds queries in flight *inside* the pipeline, and
+//! `Config::stream.pending_cap` adds session-level backpressure: at the
+//! cap, `submit` blocks (and [`IndexSession::try_submit`] declines) until
+//! completions drain. `insert` is a barrier: it finishes the open stream
+//! (waiting for outstanding queries, which therefore answer against the
+//! pre-insert index), runs the index phase, and the next `submit` reopens
+//! a fresh stream.
 //!
 //! Tickets: [`QueryTicket`]s are issued in submission order (a dense `u64`
 //! sequence per session) and every completion carries its ticket, so
 //! concurrent submitters can interleave freely — results are matched by
 //! ticket, never by position. The session is `Sync`; `submit` hashes on
 //! the calling thread before taking the session lock.
+//!
+//! Memory stays bounded on a resident session: per-query latency is
+//! folded into a [`LatencySummary`] (exact mean/max + fixed reservoir for
+//! percentiles) instead of a per-ticket vector, the in-flight ticket map
+//! shrinks on every completion, and completions buffer in the session
+//! only until the caller claims them (`recv`/`try_recv`/`drain`) — a
+//! serving loop that claims as it submits holds O(pending) state.
 
 use crate::coordinator::Cluster;
+use crate::core::lsh::HashFamily;
 use crate::data::Dataset;
-use crate::dataflow::exec::{bind_stages, Executor, QrHandler, Workload};
+use crate::dataflow::exec::{
+    AgHandler, BiHandler, DpHandler, Executor, StageHandler, StageHandlers, StreamCompletion,
+    StreamConfig, StreamRun,
+};
 use crate::dataflow::message::{Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
+use crate::metrics::LatencySummary;
 use crate::runtime::{Hasher, Ranker};
-use crate::stages::QueryReceiver;
-use std::collections::VecDeque;
+use crate::stages::aggregator::QueryResult;
+use crate::stages::{AgState, BiState, DpState, Emit, QueryReceiver};
+use std::collections::{HashMap, VecDeque};
 use std::ops::Range;
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// Handle for one submitted query: a dense per-session sequence number.
 /// Completions ([`IndexSession::recv`]) are matched by ticket, not by
@@ -54,13 +71,17 @@ use std::sync::{Arc, Mutex, MutexGuard};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct QueryTicket(pub u64);
 
-/// A submitted query waiting for a pump: its ticket, the precomputed raw
-/// projections (hashed on the submitting thread), and the query vector.
-struct PendingQuery {
-    ticket: u64,
-    raw: Arc<[f32]>,
-    v: Arc<[f32]>,
-}
+/// How long one wait on the stream egress lasts before the session
+/// *releases and re-acquires its lock*: a claimer parked on the egress
+/// must not hold the session mutex long, or concurrent `submit` calls —
+/// the enters-the-pipeline-immediately path — would stall behind it.
+/// This bounds a submitter's worst-case wait behind a claimer.
+const RECV_TICK: Duration = Duration::from_millis(10);
+
+/// How long a submitter parks (without the session lock) between
+/// attempts while the backpressure window is full. Only paid at
+/// saturation, where completion latency — not the park — dominates.
+const SUBMIT_TICK: Duration = Duration::from_millis(1);
 
 /// Session-lifetime accounting, returned by [`IndexSession::stats`] (live
 /// snapshot) and [`IndexSession::close`] (final).
@@ -69,14 +90,15 @@ pub struct SessionStats {
     /// Index-build traffic of the underlying cluster to date (all insert
     /// phases, including any build that happened before `attach`).
     pub build_meter: TrafficMeter,
-    /// Search traffic of this session's query pumps.
+    /// Search traffic of this session's streaming runs.
     pub search_meter: TrafficMeter,
     /// Per-copy work since the last reset: `(stage, copy, counters)`, head
     /// QR first. Complete on every transport — remote copies report theirs
-    /// through the socket executor's `FlushAck` barriers.
+    /// through the socket executor's stream barriers.
     pub work: Vec<(StageKind, u16, WorkStats)>,
-    /// Admission-to-completion seconds, indexed by ticket number.
-    pub per_query_secs: Vec<f64>,
+    /// Bounded admission-to-completion latency accounting (exact count,
+    /// mean, min/max; reservoir percentiles) — O(1) per query served.
+    pub latency: LatencySummary,
     pub queries_submitted: u64,
     pub queries_completed: u64,
     /// Objects in the index (maintained by the coordinator, so it is
@@ -84,19 +106,162 @@ pub struct SessionStats {
     pub objects_indexed: u64,
 }
 
+// ---------------------------------------------------- owned stage handlers
+
+/// QR bound to an owned family `Arc` — the streaming head stage must be
+/// `'static` so the executor can park it on a long-lived thread. Work
+/// counters accumulate into a shared slot the session reads back.
+struct SharedQr {
+    family: Arc<HashFamily>,
+    n_bi: usize,
+    n_ag: usize,
+    work: Arc<Mutex<WorkStats>>,
+}
+
+impl StageHandler for SharedQr {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        match msg {
+            Msg::QueryVec { qid, raw, v } => {
+                let mut qr = QueryReceiver::new(&self.family, self.n_bi, self.n_ag);
+                // The submitting thread hashed this vector; account for it
+                // here so work totals match the pumped phase path.
+                qr.work.hash_vectors += 1;
+                qr.dispatch_query_arc(&raw, qid, v, out);
+                let mut w = self.work.lock().unwrap_or_else(|p| p.into_inner());
+                w.add(&qr.work);
+            }
+            other => panic!("QR got unexpected {other:?}"),
+        }
+    }
+}
+
+/// Stage state checked out of the cluster into a shared slot for the
+/// stream's lifetime: the handler (on a stage thread) holds one `Arc`, the
+/// session keeps the other to read live stats and to reclaim the state at
+/// the stream barrier. Exactly one side touches the state at a time, so
+/// the per-message lock is uncontended.
+struct SharedBi {
+    bi: Arc<Mutex<BiState>>,
+}
+
+impl StageHandler for SharedBi {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        let mut bi = self.bi.lock().unwrap_or_else(|p| p.into_inner());
+        BiHandler { bi: &mut *bi }.on_msg(msg, out);
+    }
+}
+
+struct SharedDp {
+    dp: Arc<Mutex<DpState>>,
+    ranker: Arc<dyn Ranker>,
+}
+
+impl StageHandler for SharedDp {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        let mut dp = self.dp.lock().unwrap_or_else(|p| p.into_inner());
+        DpHandler { dp: &mut *dp, ranker: Some(self.ranker.as_ref()) }.on_msg(msg, out);
+    }
+
+    fn on_query_done(&mut self, qid: u32) {
+        let mut dp = self.dp.lock().unwrap_or_else(|p| p.into_inner());
+        dp.finish_query(qid);
+    }
+}
+
+struct SharedAg {
+    ag: Arc<Mutex<AgState>>,
+}
+
+impl StageHandler for SharedAg {
+    fn on_msg(&mut self, msg: Msg, out: Emit) {
+        let mut ag = self.ag.lock().unwrap_or_else(|p| p.into_inner());
+        AgHandler { ag: &mut *ag }.on_msg(msg, out);
+    }
+
+    fn take_completions(&mut self, out: &mut Vec<QueryResult>) {
+        let mut ag = self.ag.lock().unwrap_or_else(|p| p.into_inner());
+        out.append(&mut ag.results);
+    }
+}
+
+/// Take the sole remaining `Arc` handle apart to reclaim the state. The
+/// executor dropped its handler boxes at the stream barrier, so the
+/// session's handle is the last one by construction.
+fn reclaim<T>(slot: Arc<Mutex<T>>) -> T {
+    match Arc::try_unwrap(slot) {
+        Ok(m) => m.into_inner().unwrap_or_else(|p| p.into_inner()),
+        Err(_) => panic!("stage state still shared after the stream barrier"),
+    }
+}
+
+/// An open streaming run plus the session's handles onto the checked-out
+/// stage state (returned to the cluster when the stream finishes).
+struct OpenStream<'s> {
+    run: Box<dyn StreamRun + 's>,
+    bis: Vec<Arc<Mutex<BiState>>>,
+    dps: Vec<Arc<Mutex<DpState>>>,
+    ags: Vec<Arc<Mutex<AgState>>>,
+    qr_work: Arc<Mutex<WorkStats>>,
+}
+
 struct Inner<'c> {
     cluster: &'c mut Cluster,
+    /// The live streaming run, opened lazily by the first `submit` and
+    /// finished (stage state reclaimed into `cluster`) by `insert`/`close`.
+    stream: Option<OpenStream<'c>>,
     next_ticket: u64,
-    pending: VecDeque<PendingQuery>,
-    done: VecDeque<(QueryTicket, Vec<(f32, u32)>)>,
-    per_query_secs: Vec<f64>,
-    /// Head-node (QR) work across this session's pumps. Per-copy BI/DP/AG
-    /// work lives in the cluster's stage states on every transport —
-    /// remote counters are absorbed there after each pump
-    /// ([`Cluster::absorb_remote_work`]).
+    /// qid → ticket for queries admitted but not yet claimed. Bounded by
+    /// the number outstanding; qids are the ticket truncated to `u32`
+    /// (unique while fewer than 2^32 are in flight — i.e. always).
+    tickets: HashMap<u32, u64>,
+    /// Completions claimed from the stream but not yet delivered to a
+    /// caller (barrier leftovers, and `drain`'s staging area).
+    done: VecDeque<(QueryTicket, Vec<(f32, u32)>, f64)>,
+    latency: LatencySummary,
+    /// Head-node (QR) work across this session's streams. Per-copy
+    /// BI/DP/AG work lives in the cluster's stage states (or their
+    /// checked-out slots while a stream is open) on every transport.
     head_work: WorkStats,
     search_meter: TrafficMeter,
     completed: u64,
+}
+
+impl Inner<'_> {
+    /// Bookkeep one completion claimed from the stream.
+    fn note_completion(
+        &mut self,
+        c: StreamCompletion,
+    ) -> (QueryTicket, Vec<(f32, u32)>, f64) {
+        let t = self
+            .tickets
+            .remove(&c.qid)
+            .expect("stream completion for an unknown qid");
+        self.completed += 1;
+        self.latency.record(c.secs);
+        (QueryTicket(t), c.hits, c.secs)
+    }
+
+    /// Issue the next ticket and admit the query into the open stream —
+    /// if the backpressure window has room. `None` means the window is
+    /// full (nothing was consumed; the caller may retry with the same
+    /// `raw`/`v`). Never blocks: callers that want blocking semantics
+    /// park *outside* the session lock ([`IndexSession::submit`]), so the
+    /// documented non-blocking calls (`try_recv`, `stats`, `in_flight`)
+    /// are never stuck behind a gated submitter.
+    fn try_submit_one(&mut self, raw: Arc<[f32]>, v: Arc<[f32]>) -> Option<QueryTicket> {
+        let t = self.next_ticket;
+        let qid = t as u32;
+        let msg = Msg::QueryVec { qid, raw, v };
+        let os = self.stream.as_mut().expect("submit without an open stream");
+        match os.run.try_submit(msg) {
+            Ok(()) => {
+                self.next_ticket += 1;
+                self.tickets.insert(qid, t);
+                Some(QueryTicket(t))
+            }
+            Err(_) => None,
+        }
+    }
 }
 
 /// A persistent serving session: one live executor + one cluster's stage
@@ -106,7 +271,9 @@ struct Inner<'c> {
 pub struct IndexSession<'s> {
     exec: &'s dyn Executor,
     hasher: &'s dyn Hasher,
-    ranker: Option<&'s dyn Ranker>,
+    /// `Arc` rather than a borrow: the streaming DP handlers move onto
+    /// executor-owned threads, which requires `'static` ownership.
+    ranker: Option<Arc<dyn Ranker>>,
     inner: Mutex<Inner<'s>>,
 }
 
@@ -118,7 +285,7 @@ impl<'s> IndexSession<'s> {
         exec: &'s dyn Executor,
         cluster: &'s mut Cluster,
         hasher: &'s dyn Hasher,
-        ranker: Option<&'s dyn Ranker>,
+        ranker: Option<Arc<dyn Ranker>>,
     ) -> IndexSession<'s> {
         let agg = cluster.cfg.stream.agg_bytes;
         IndexSession {
@@ -127,10 +294,11 @@ impl<'s> IndexSession<'s> {
             ranker,
             inner: Mutex::new(Inner {
                 cluster,
+                stream: None,
                 next_ticket: 0,
-                pending: VecDeque::new(),
+                tickets: HashMap::new(),
                 done: VecDeque::new(),
-                per_query_secs: Vec::new(),
+                latency: LatencySummary::new(),
                 head_work: WorkStats::default(),
                 search_meter: TrafficMeter::new(agg),
                 completed: 0,
@@ -142,32 +310,171 @@ impl<'s> IndexSession<'s> {
         self.inner.lock().unwrap_or_else(|p| p.into_inner())
     }
 
+    /// Open the streaming run if none is live: check the stage states out
+    /// of the cluster into shared slots (so the handlers are owned and can
+    /// cross onto executor threads) and hand them to the executor.
+    fn open_stream_locked(&self, inner: &mut Inner<'s>) {
+        if inner.stream.is_some() {
+            return;
+        }
+        let ranker = self
+            .ranker
+            .clone()
+            .expect("IndexSession streaming requires a ranker (attach with Some(ranker))");
+        let c: &mut Cluster = &mut *inner.cluster;
+        let placement = c.placement.clone();
+        let cfg = StreamConfig {
+            window: c.cfg.stream.inflight,
+            agg_bytes: c.cfg.stream.agg_bytes,
+            pending_cap: c.cfg.stream.pending_cap,
+        };
+        let family = c.family.clone();
+        let qr_work = Arc::new(Mutex::new(WorkStats::default()));
+        let bis: Vec<Arc<Mutex<BiState>>> = std::mem::take(&mut c.bis)
+            .into_iter()
+            .map(|s| Arc::new(Mutex::new(s)))
+            .collect();
+        let dps: Vec<Arc<Mutex<DpState>>> = std::mem::take(&mut c.dps)
+            .into_iter()
+            .map(|s| Arc::new(Mutex::new(s)))
+            .collect();
+        let ags: Vec<Arc<Mutex<AgState>>> = std::mem::take(&mut c.ags)
+            .into_iter()
+            .map(|s| Arc::new(Mutex::new(s)))
+            .collect();
+        let stages = StageHandlers {
+            head: Box::new(SharedQr {
+                family,
+                n_bi: placement.bi_copies,
+                n_ag: placement.ag_copies,
+                work: qr_work.clone(),
+            }),
+            bis: bis
+                .iter()
+                .map(|s| Box::new(SharedBi { bi: s.clone() }) as Box<dyn StageHandler>)
+                .collect(),
+            dps: dps
+                .iter()
+                .map(|s| {
+                    Box::new(SharedDp { dp: s.clone(), ranker: ranker.clone() })
+                        as Box<dyn StageHandler>
+                })
+                .collect(),
+            ags: ags
+                .iter()
+                .map(|s| Box::new(SharedAg { ag: s.clone() }) as Box<dyn StageHandler>)
+                .collect(),
+        };
+        let run = self.exec.open_stream(&placement, stages, cfg);
+        inner.stream = Some(OpenStream { run, bis, dps, ags, qr_work });
+    }
+
+    /// Finish the open stream (if any): barrier on quiescence, buffer the
+    /// unclaimed completions, fold the run's accounting into the session,
+    /// and return the stage states to the cluster.
+    fn finish_stream_locked(&self, inner: &mut Inner<'s>) {
+        let Some(os) = inner.stream.take() else { return };
+        let OpenStream { run, bis, dps, ags, qr_work } = os;
+        let report = run.finish();
+        for c in report.unclaimed {
+            let e = inner.note_completion(c);
+            inner.done.push_back(e);
+        }
+        inner.search_meter.merge(&report.meter);
+        let qw = {
+            let mut w = qr_work.lock().unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *w)
+        };
+        inner.head_work.add(&qw);
+        // Reclaim the stage states FIRST: `absorb_remote_work` folds the
+        // socket barrier's per-copy counters into `cluster.bis`/`dps`,
+        // which are empty until the slots return.
+        inner.cluster.bis = bis.into_iter().map(reclaim).collect();
+        inner.cluster.dps = dps.into_iter().map(reclaim).collect();
+        inner.cluster.ags = ags.into_iter().map(reclaim).collect();
+        inner.cluster.absorb_remote_work(&report.work);
+        debug_assert!(
+            inner.tickets.is_empty(),
+            "stream barrier left tickets outstanding"
+        );
+    }
+
     /// Index `dataset` incrementally (paper §IV-A: indexing and searching
-    /// may overlap across a session). Acts as a barrier: queries submitted
-    /// before the insert complete against the pre-insert index. Returns
-    /// the assigned id range.
+    /// may overlap across a session). Acts as a barrier: the open stream
+    /// is finished first, so queries submitted before the insert complete
+    /// against the pre-insert index; the next `submit` reopens a stream.
+    /// Returns the assigned id range.
     pub fn insert(&self, dataset: &Dataset) -> Range<u32> {
         let mut inner = self.lock();
-        self.pump(&mut inner);
+        self.finish_stream_locked(&mut inner);
         let inner = &mut *inner;
         inner
             .cluster
             .insert_objects_on(self.exec, dataset.as_flat(), dataset.len(), self.hasher)
     }
 
-    /// Admit one query. Hashing happens on the calling thread; the ticket
-    /// is issued under the session lock, in submission order.
+    /// Admit one query — it enters the executor pipeline immediately.
+    /// Hashing happens on the calling thread; the ticket is issued under
+    /// the session lock, in admission order. Blocks while
+    /// `stream.pending_cap` submissions are outstanding (0 = never) —
+    /// parking happens *between* lock acquisitions, so concurrent
+    /// claimers and non-blocking calls keep running while a submitter
+    /// waits out the backpressure window.
     pub fn submit(&self, q: &[f32]) -> QueryTicket {
         assert!(
             self.ranker.is_some(),
             "IndexSession::submit on a session attached without a ranker"
         );
         let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
-        self.lock().enqueue(raw, q.into())
+        let v: Arc<[f32]> = q.into();
+        loop {
+            {
+                let mut inner = self.lock();
+                self.open_stream_locked(&mut inner);
+                if let Some(t) = inner.try_submit_one(raw.clone(), v.clone()) {
+                    return t;
+                }
+            }
+            // Window full: park without the session lock. A dead run is
+            // detected inside try_submit_one (loud panic), so this loop
+            // cannot spin on a broken pipeline.
+            std::thread::sleep(SUBMIT_TICK);
+        }
+    }
+
+    /// Non-blocking [`IndexSession::submit`]: `None` when the
+    /// backpressure window (`stream.pending_cap`) is full.
+    pub fn try_submit(&self, q: &[f32]) -> Option<QueryTicket> {
+        assert!(
+            self.ranker.is_some(),
+            "IndexSession::try_submit on a session attached without a ranker"
+        );
+        // Probe the window before paying for the hash: a caller polling
+        // try_submit against a full window must not recompute projections
+        // on every declined attempt. The probe is advisory — the final
+        // try_submit below still decides.
+        {
+            let mut inner = self.lock();
+            self.open_stream_locked(&mut inner);
+            let os = inner.stream.as_mut().expect("stream just opened");
+            if !os.run.can_submit() {
+                return None;
+            }
+        }
+        let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
+        let v: Arc<[f32]> = q.into();
+        let mut inner = self.lock();
+        self.open_stream_locked(&mut inner);
+        inner.try_submit_one(raw, v)
     }
 
     /// Admit a whole query set through one batched hash call (the phase
-    /// drivers' §Perf path). Returns the contiguous ticket range.
+    /// drivers' §Perf path). Returns the ticket range. Each query streams
+    /// into the pipeline as it is enqueued; with a `pending_cap` set the
+    /// batch parks (between lock acquisitions, like [`IndexSession::submit`])
+    /// whenever the window fills — if other threads submit concurrently
+    /// during such a park, the returned range can include their tickets,
+    /// so concurrent callers should match results by ticket, not offset.
     pub fn submit_batch(&self, queries: &Dataset) -> Range<u64> {
         assert!(
             self.ranker.is_some(),
@@ -175,42 +482,116 @@ impl<'s> IndexSession<'s> {
         );
         let p = self.hasher.p();
         let raws = self.hasher.proj_batch(queries.as_flat(), queries.len());
-        let mut inner = self.lock();
-        let start = inner.next_ticket;
-        for i in 0..queries.len() {
-            let raw: Arc<[f32]> = raws[i * p..(i + 1) * p].into();
-            inner.enqueue(raw, queries.get(i).into());
-        }
-        start..inner.next_ticket
-    }
-
-    /// Pop a buffered completion without driving the pipeline.
-    pub fn try_recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
-        self.lock().done.pop_front()
-    }
-
-    /// Next completion: buffered if available, else pump the pending
-    /// backlog through the executor. `None` means the session is idle
-    /// (nothing buffered, nothing pending).
-    pub fn recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
-        let mut inner = self.lock();
+        let mut start = 0u64;
+        let mut end = 0u64;
+        let mut first = true;
+        let mut i = 0usize;
         loop {
-            if let Some(r) = inner.done.pop_front() {
-                return Some(r);
+            {
+                let mut inner = self.lock();
+                self.open_stream_locked(&mut inner);
+                if first {
+                    start = inner.next_ticket;
+                    first = false;
+                }
+                while i < queries.len() {
+                    let raw: Arc<[f32]> = raws[i * p..(i + 1) * p].into();
+                    let v: Arc<[f32]> = queries.get(i).into();
+                    if inner.try_submit_one(raw, v).is_none() {
+                        break;
+                    }
+                    i += 1;
+                }
+                end = inner.next_ticket;
             }
-            if inner.pending.is_empty() {
+            if i >= queries.len() {
+                return start..end;
+            }
+            std::thread::sleep(SUBMIT_TICK);
+        }
+    }
+
+    /// Pop a completion without waiting. `None` means nothing has
+    /// completed yet (the pipeline keeps working in the background).
+    pub fn try_recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
+        self.try_recv_timed().map(|(t, h, _)| (t, h))
+    }
+
+    /// [`IndexSession::try_recv`] with the admission-to-completion seconds.
+    pub fn try_recv_timed(&self) -> Option<(QueryTicket, Vec<(f32, u32)>, f64)> {
+        let mut inner = self.lock();
+        if let Some(e) = inner.done.pop_front() {
+            return Some(e);
+        }
+        let c = {
+            let os = inner.stream.as_mut()?;
+            os.run.try_recv()
+        };
+        c.map(|c| inner.note_completion(c))
+    }
+
+    /// Next completion, waiting for the pipeline if necessary. `None`
+    /// means the session is idle (nothing outstanding, nothing buffered).
+    pub fn recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
+        self.recv_timed().map(|(t, h, _)| (t, h))
+    }
+
+    /// [`IndexSession::recv`] with the admission-to-completion seconds.
+    pub fn recv_timed(&self) -> Option<(QueryTicket, Vec<(f32, u32)>, f64)> {
+        loop {
+            let mut inner = self.lock();
+            if let Some(e) = inner.done.pop_front() {
+                return Some(e);
+            }
+            if inner.tickets.is_empty() {
                 return None;
             }
-            self.pump(&mut inner);
+            let c = {
+                let os = inner
+                    .stream
+                    .as_mut()
+                    .expect("in-flight tickets without an open stream");
+                os.run.recv(RECV_TICK)
+            };
+            if let Some(c) = c {
+                let e = inner.note_completion(c);
+                return Some(e);
+            }
+            // Nothing completed within the tick: release the session lock
+            // before waiting again so concurrent submitters can get in.
+            drop(inner);
+            std::thread::yield_now();
         }
     }
 
-    /// Complete everything outstanding and return all unclaimed
-    /// completions, ticket-ordered.
+    /// Wait for everything outstanding and return all unclaimed
+    /// completions, ticket-ordered. Like `recv`, the wait releases the
+    /// session lock between egress ticks so submitters are not stalled.
     pub fn drain(&self) -> Vec<(QueryTicket, Vec<(f32, u32)>)> {
-        let mut inner = self.lock();
-        self.pump(&mut inner);
-        let mut out: Vec<_> = inner.done.drain(..).collect();
+        let mut out: Vec<(QueryTicket, Vec<(f32, u32)>)> = Vec::new();
+        loop {
+            let mut inner = self.lock();
+            while let Some((t, h, _)) = inner.done.pop_front() {
+                out.push((t, h));
+            }
+            if inner.tickets.is_empty() {
+                break;
+            }
+            let c = {
+                let os = inner
+                    .stream
+                    .as_mut()
+                    .expect("in-flight tickets without an open stream");
+                os.run.recv(RECV_TICK)
+            };
+            if let Some(c) = c {
+                let (t, h, _) = inner.note_completion(c);
+                out.push((t, h));
+            } else {
+                drop(inner);
+                std::thread::yield_now();
+            }
+        }
         out.sort_by_key(|e| e.0);
         out
     }
@@ -218,28 +599,58 @@ impl<'s> IndexSession<'s> {
     /// Queries admitted but not yet delivered through `recv`/`drain`.
     pub fn in_flight(&self) -> usize {
         let inner = self.lock();
-        inner.pending.len() + inner.done.len()
+        inner.tickets.len() + inner.done.len()
     }
 
-    /// Live accounting snapshot (does not reset any counter).
+    /// Live accounting snapshot (does not reset any counter). Works with
+    /// a stream open — per-copy counters are read through the shared
+    /// slots the stream's handlers write into. Caveat (socket transport):
+    /// remote BI/DP counters travel in the stream-*finish* barrier, so a
+    /// mid-stream snapshot reflects only work absorbed at earlier
+    /// barriers; `close()` returns the complete final accounting.
     pub fn stats(&self) -> SessionStats {
         let inner = self.lock();
         let c: &Cluster = &*inner.cluster;
-        let mut work = vec![(StageKind::Qr, 0u16, inner.head_work)];
-        for bi in &c.bis {
-            work.push((StageKind::Bi, bi.copy, bi.work));
-        }
-        for dp in &c.dps {
-            work.push((StageKind::Dp, dp.copy, dp.work));
-        }
-        for ag in &c.ags {
-            work.push((StageKind::Ag, ag.copy, ag.work));
+        let mut work = Vec::new();
+        match &inner.stream {
+            Some(os) => {
+                let mut head = inner.head_work;
+                {
+                    let qw = os.qr_work.lock().unwrap_or_else(|p| p.into_inner());
+                    head.add(&qw);
+                }
+                work.push((StageKind::Qr, 0u16, head));
+                for slot in &os.bis {
+                    let s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    work.push((StageKind::Bi, s.copy, s.work));
+                }
+                for slot in &os.dps {
+                    let s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    work.push((StageKind::Dp, s.copy, s.work));
+                }
+                for slot in &os.ags {
+                    let s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    work.push((StageKind::Ag, s.copy, s.work));
+                }
+            }
+            None => {
+                work.push((StageKind::Qr, 0u16, inner.head_work));
+                for bi in &c.bis {
+                    work.push((StageKind::Bi, bi.copy, bi.work));
+                }
+                for dp in &c.dps {
+                    work.push((StageKind::Dp, dp.copy, dp.work));
+                }
+                for ag in &c.ags {
+                    work.push((StageKind::Ag, ag.copy, ag.work));
+                }
+            }
         }
         SessionStats {
             build_meter: c.build_meter.clone(),
             search_meter: inner.search_meter.clone(),
             work,
-            per_query_secs: inner.per_query_secs.clone(),
+            latency: inner.latency.clone(),
             queries_submitted: inner.next_ticket,
             queries_completed: inner.completed,
             objects_indexed: c.indexed_objects as u64,
@@ -248,94 +659,52 @@ impl<'s> IndexSession<'s> {
 
     /// Take (and reset) the per-copy work counters accumulated since the
     /// last reset — phase accounting, the session rendition of
-    /// [`Cluster::take_work`]. Complete on every transport.
+    /// [`Cluster::take_work`]. Complete on the in-process transports with
+    /// or without an open stream; under the socket transport remote
+    /// counters are collected at stream barriers (`insert`/`close`), so
+    /// take phase accounting at a barrier for complete remote numbers.
     pub fn take_work(&self) -> Vec<(StageKind, u16, WorkStats)> {
         let mut inner = self.lock();
         let inner = &mut *inner;
-        let head = std::mem::take(&mut inner.head_work);
-        inner.cluster.take_work(&head)
+        let mut head = std::mem::take(&mut inner.head_work);
+        match &inner.stream {
+            Some(os) => {
+                {
+                    let mut qw = os.qr_work.lock().unwrap_or_else(|p| p.into_inner());
+                    head.add(&std::mem::take(&mut *qw));
+                }
+                let mut out = vec![(StageKind::Qr, 0u16, head)];
+                for slot in &os.bis {
+                    let mut s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    out.push((StageKind::Bi, s.copy, std::mem::take(&mut s.work)));
+                }
+                for slot in &os.dps {
+                    let mut s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    out.push((StageKind::Dp, s.copy, std::mem::take(&mut s.work)));
+                }
+                for slot in &os.ags {
+                    let mut s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    out.push((StageKind::Ag, s.copy, std::mem::take(&mut s.work)));
+                }
+                out
+            }
+            None => inner.cluster.take_work(&head),
+        }
     }
 
-    /// Typed end of session: completes any still-pending queries (so
-    /// per-query teardown reaches every transport) and returns the final
-    /// stats. Unclaimed completions are discarded — `drain` first if you
-    /// want them. The borrowed `Cluster` is usable again afterwards; under
-    /// the socket transport the workers stay up (they belong to the
-    /// `NetSession`), ready for the next session.
+    /// Typed end of session: finishes the open stream (completing any
+    /// still-pending queries, so per-query teardown reaches every
+    /// transport) and returns the final stats. Unclaimed completions are
+    /// discarded — `drain` first if you want them. The borrowed `Cluster`
+    /// is usable again afterwards; under the socket transport the workers
+    /// stay up (they belong to the `NetSession`), ready for the next
+    /// session.
     pub fn close(self) -> SessionStats {
         {
             let mut inner = self.lock();
-            self.pump(&mut inner);
+            self.finish_stream_locked(&mut inner);
         }
         self.stats()
-    }
-
-    /// Run the buffered backlog through the executor as one search
-    /// workload under the `stream.inflight` admission window, and buffer
-    /// the completions.
-    fn pump(&self, inner: &mut Inner<'s>) {
-        if inner.pending.is_empty() {
-            return;
-        }
-        let ranker = self
-            .ranker
-            .expect("IndexSession pump without a ranker (attach with Some(ranker))");
-        let batch: Vec<PendingQuery> = inner.pending.drain(..).collect();
-        let inner = &mut *inner;
-        let cluster: &mut Cluster = &mut *inner.cluster;
-        let placement = cluster.placement.clone();
-        let agg = cluster.cfg.stream.agg_bytes;
-        let window = cluster.cfg.stream.inflight;
-        let family = cluster.family.clone();
-        let mut qr = QueryReceiver::new(&family, placement.bi_copies, placement.ag_copies);
-        let report = {
-            let stages = bind_stages(
-                Box::new(QrHandler { qr: &mut qr }),
-                &mut cluster.bis,
-                &mut cluster.dps,
-                &mut cluster.ags,
-                Some(ranker),
-            );
-            let mut items = batch.iter().enumerate().map(|(i, pq)| Msg::QueryVec {
-                qid: i as u32,
-                raw: pq.raw.clone(),
-                v: pq.v.clone(),
-            });
-            self.exec.run(
-                &placement,
-                stages,
-                Workload {
-                    items: &mut items,
-                    n_queries: batch.len(),
-                    window,
-                    agg_bytes: agg,
-                },
-            )
-        };
-        inner.head_work.add(&qr.work);
-        inner.search_meter.merge(&report.meter);
-        inner.cluster.absorb_remote_work(&report.work);
-        for (i, (hits, secs)) in report
-            .results
-            .into_iter()
-            .zip(report.per_query_secs)
-            .enumerate()
-        {
-            let ticket = batch[i].ticket;
-            inner.per_query_secs[ticket as usize] = secs;
-            inner.done.push_back((QueryTicket(ticket), hits));
-            inner.completed += 1;
-        }
-    }
-}
-
-impl Inner<'_> {
-    fn enqueue(&mut self, raw: Arc<[f32]>, v: Arc<[f32]>) -> QueryTicket {
-        let t = self.next_ticket;
-        self.next_ticket += 1;
-        self.per_query_secs.push(0.0);
-        self.pending.push_back(PendingQuery { ticket: t, raw, v });
-        QueryTicket(t)
     }
 }
 
@@ -347,28 +716,31 @@ mod tests {
     use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
     use crate::dataflow::exec::{InlineExecutor, ThreadedExecutor};
     use crate::runtime::{ScalarHasher, ScalarRanker};
+    use std::sync::Condvar;
 
     fn world(
         cfg: &Config,
         n: usize,
         queries: usize,
-    ) -> (Dataset, Dataset, ScalarHasher, ScalarRanker) {
+    ) -> (Dataset, Dataset, ScalarHasher, Arc<dyn Ranker>) {
         let ds = synthesize(SynthSpec { n, clusters: 40, ..Default::default() });
         let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
         let family = crate::core::lsh::HashFamily::sample(ds.dim, cfg.lsh);
         let hasher = ScalarHasher { family };
-        let ranker = ScalarRanker { dim: ds.dim };
+        let ranker: Arc<dyn Ranker> = Arc::new(ScalarRanker { dim: ds.dim });
         (ds, qs, hasher, ranker)
     }
 
-    /// The inline-vs-threaded differential contract, now flowing through
-    /// the session path (search_on is a session wrapper).
+    /// The inline-vs-threaded differential contract on the pumped phase
+    /// path (search_on), which streaming results are compared against in
+    /// the streaming tests below.
     fn assert_matches_inline(cfg: &Config, n: usize, queries: usize) {
         let (ds, qs, hasher, ranker) = world(cfg, n, queries);
         let mut c1 = build_index(cfg, &ds, &hasher);
-        let inline_out = search(&mut c1, &qs, &hasher, &ranker);
+        let inline_out = search(&mut c1, &qs, &hasher, ranker.as_ref());
         let mut c2 = build_index(cfg, &ds, &hasher);
-        let threaded_out = search_on(&ThreadedExecutor, &mut c2, &qs, &hasher, &ranker);
+        let threaded_out =
+            search_on(&ThreadedExecutor, &mut c2, &qs, &hasher, ranker.as_ref());
 
         assert_eq!(inline_out.results, threaded_out.results);
         // traffic counters agree (logical messages & payload bytes are
@@ -428,11 +800,16 @@ mod tests {
         let (ds, qs, hasher, ranker) = world(&cfg, 1_500, 15);
 
         let mut inline_cluster = build_index(&cfg, &ds, &hasher);
-        let inline_out = search(&mut inline_cluster, &qs, &hasher, &ranker);
+        let inline_out = search(&mut inline_cluster, &qs, &hasher, ranker.as_ref());
 
         let mut threaded_cluster = build_index_on(&ThreadedExecutor, &cfg, &ds, &hasher);
-        let threaded_out =
-            search_on(&ThreadedExecutor, &mut threaded_cluster, &qs, &hasher, &ranker);
+        let threaded_out = search_on(
+            &ThreadedExecutor,
+            &mut threaded_cluster,
+            &qs,
+            &hasher,
+            ranker.as_ref(),
+        );
 
         assert_eq!(inline_out.results, threaded_out.results);
         assert_eq!(
@@ -442,17 +819,19 @@ mod tests {
     }
 
     #[test]
-    fn streaming_submit_recv_matches_phase_call() {
+    fn streaming_submit_recv_matches_pumped_search() {
         // One query at a time — submit, wait for its completion, submit the
-        // next — must give the same answers as the one-shot phase call.
+        // next — must give the same answers as the pumped phase call, on
+        // the per-item-drain (inline) and the threaded streaming runs.
         let cfg = small_cfg();
         let (ds, qs, hasher, ranker) = world(&cfg, 1_200, 10);
         let mut oracle_cluster = build_index(&cfg, &ds, &hasher);
-        let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+        let oracle = search(&mut oracle_cluster, &qs, &hasher, ranker.as_ref());
 
         for exec in [&InlineExecutor as &dyn Executor, &ThreadedExecutor] {
             let mut cluster = build_index(&cfg, &ds, &hasher);
-            let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(&ranker));
+            let session =
+                IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
             for qi in 0..qs.len() {
                 let ticket = session.submit(qs.get(qi));
                 assert_eq!(ticket, QueryTicket(qi as u64));
@@ -465,8 +844,52 @@ mod tests {
             assert_eq!(stats.queries_submitted, qs.len() as u64);
             assert_eq!(stats.queries_completed, qs.len() as u64);
             assert!(stats.search_meter.logical_msgs > 0);
-            assert!(stats.per_query_secs.iter().all(|&s| s > 0.0));
+            assert_eq!(stats.latency.count, qs.len() as u64);
+            assert!(stats.latency.min_secs > 0.0);
         }
+    }
+
+    #[test]
+    fn interleaved_streaming_matches_pumped_search() {
+        // Streaming admission with interleaved claims under a window and
+        // multiple AGs must return exactly the pumped path's results,
+        // matched by ticket.
+        let mut cfg = small_cfg();
+        cfg.stream.inflight = 2;
+        cfg.cluster.ag_copies = 2;
+        let (ds, qs, hasher, ranker) = world(&cfg, 1_500, 20);
+        let mut oracle_cluster = build_index(&cfg, &ds, &hasher);
+        let oracle = search(&mut oracle_cluster, &qs, &hasher, ranker.as_ref());
+
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let session = IndexSession::attach(
+            &ThreadedExecutor,
+            &mut cluster,
+            &hasher,
+            Some(ranker.clone()),
+        );
+        let mut got: Vec<Option<Vec<(f32, u32)>>> = vec![None; qs.len()];
+        for qi in 0..qs.len() {
+            session.submit(qs.get(qi));
+            while let Some((t, hits)) = session.try_recv() {
+                got[t.0 as usize] = Some(hits);
+            }
+        }
+        for (t, hits) in session.drain() {
+            got[t.0 as usize] = Some(hits);
+        }
+        for (qi, g) in got.iter().enumerate() {
+            assert_eq!(
+                g.as_ref().expect("completed"),
+                &oracle.results[qi],
+                "query {qi}"
+            );
+        }
+        // bounded accounting: the in-flight map drained as queries completed
+        assert_eq!(session.in_flight(), 0);
+        let stats = session.close();
+        assert_eq!(stats.queries_completed, qs.len() as u64);
+        assert_eq!(stats.latency.count, qs.len() as u64);
     }
 
     #[test]
@@ -485,12 +908,16 @@ mod tests {
         }
         let (qs, _) = distorted_queries(&concat, 12, 3.0, 5);
         let mut oracle_cluster = build_index(&cfg, &concat, &hasher);
-        let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+        let oracle = search(&mut oracle_cluster, &qs, &hasher, ranker.as_ref());
 
         let mut cluster = Cluster::empty(&cfg, ds.dim);
         {
-            let session =
-                IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, Some(&ranker));
+            let session = IndexSession::attach(
+                &ThreadedExecutor,
+                &mut cluster,
+                &hasher,
+                Some(ranker.clone()),
+            );
             assert_eq!(session.insert(&ds), 0..ds.len() as u32);
             assert_eq!(
                 session.insert(&extra),
@@ -515,32 +942,38 @@ mod tests {
     #[test]
     fn insert_is_a_barrier_for_earlier_submissions() {
         // A query submitted before an insert must be answered against the
-        // pre-insert index even though it is only pumped by the insert.
+        // pre-insert index: the insert finishes the open stream (waiting
+        // for the query) before any new object is indexed — on the
+        // per-item drain and on the threaded streaming run alike.
         let cfg = small_cfg();
         let (ds, _, hasher, ranker) = world(&cfg, 1_200, 5);
         // Query = an exact duplicate of a vector we insert *after*
         // submitting it: distance-0 hit exists only post-insert.
         let (dup, _) = distorted_queries(&ds, 1, 0.0, 3);
         let mut pre_cluster = build_index(&cfg, &ds, &hasher);
-        let pre = search(&mut pre_cluster, &dup, &hasher, &ranker);
+        let pre = search(&mut pre_cluster, &dup, &hasher, ranker.as_ref());
 
-        let mut cluster = build_index(&cfg, &ds, &hasher);
-        let session = IndexSession::attach(&InlineExecutor, &mut cluster, &hasher, Some(&ranker));
-        let before = session.submit(dup.get(0));
-        session.insert(&dup);
-        let after = session.submit(dup.get(0));
-        let mut got: Vec<_> = session.drain();
-        got.sort_by_key(|e| e.0);
-        assert_eq!(got[0].0, before);
-        assert_eq!(got[0].1, pre.results[0], "pre-insert query saw the insert");
-        assert_eq!(got[1].0, after);
-        // the post-insert query must retrieve the inserted duplicate (its
-        // base vector ties at distance 0, so assert membership, not rank)
-        assert!(
-            got[1].1.iter().any(|&(_, id)| id == ds.len() as u32),
-            "post-insert query missed the insert: {:?}",
-            got[1].1
-        );
+        for exec in [&InlineExecutor as &dyn Executor, &ThreadedExecutor] {
+            let mut cluster = build_index(&cfg, &ds, &hasher);
+            let session =
+                IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
+            let before = session.submit(dup.get(0));
+            session.insert(&dup);
+            let after = session.submit(dup.get(0));
+            let mut got: Vec<_> = session.drain();
+            got.sort_by_key(|e| e.0);
+            assert_eq!(got[0].0, before);
+            assert_eq!(got[0].1, pre.results[0], "pre-insert query saw the insert");
+            assert_eq!(got[1].0, after);
+            // the post-insert query must retrieve the inserted duplicate
+            // (its base vector ties at distance 0 → assert membership)
+            assert!(
+                got[1].1.iter().any(|&(_, id)| id == ds.len() as u32),
+                "post-insert query missed the insert: {:?}",
+                got[1].1
+            );
+            session.close();
+        }
     }
 
     #[test]
@@ -548,14 +981,77 @@ mod tests {
         let cfg = small_cfg();
         let (ds, qs, hasher, ranker) = world(&cfg, 1_200, 8);
         let mut cluster = build_index(&cfg, &ds, &hasher);
-        let session = IndexSession::attach(&InlineExecutor, &mut cluster, &hasher, Some(&ranker));
+        let session =
+            IndexSession::attach(&InlineExecutor, &mut cluster, &hasher, Some(ranker));
         session.submit_batch(&qs);
         let _ = session.drain();
+        // the stream is still open here: take_work reads the shared slots
         let work = session.take_work();
         let dists: u64 = work.iter().map(|(_, _, w)| w.dists_computed).sum();
         assert!(dists > 0);
         let again = session.take_work();
         assert!(again.iter().all(|(_, _, w)| w.dists_computed == 0));
         session.close();
+    }
+
+    /// A ranker whose `rank` parks on a latch — holds queries in flight
+    /// deterministically so backpressure is observable without timing
+    /// probes.
+    struct LatchRanker {
+        inner: ScalarRanker,
+        open: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl Ranker for LatchRanker {
+        fn rank(&self, q: &[f32], cands: &[f32], n: usize, k: usize) -> Vec<(f32, u32)> {
+            let (m, cv) = &*self.open;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            drop(open);
+            self.inner.rank(q, cands, n, k)
+        }
+    }
+
+    #[test]
+    fn submit_blocks_at_pending_cap_and_unblocks_as_completions_drain() {
+        let mut cfg = small_cfg();
+        cfg.stream.pending_cap = 2;
+        let (ds, _, hasher, _) = world(&cfg, 1_200, 1);
+        // exact duplicates of indexed vectors: every query reaches a DP
+        // rank call, so the latch reliably holds them in flight
+        let (qs, _) = distorted_queries(&ds, 3, 0.0, 21);
+        let open = Arc::new((Mutex::new(false), Condvar::new()));
+        let ranker: Arc<dyn Ranker> = Arc::new(LatchRanker {
+            inner: ScalarRanker { dim: ds.dim },
+            open: open.clone(),
+        });
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let session =
+            IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, Some(ranker));
+        session.submit(qs.get(0));
+        session.submit(qs.get(1));
+        // both queries are parked in the latched ranker: the window is full
+        assert!(
+            session.try_submit(qs.get(2)).is_none(),
+            "try_submit ignored stream.pending_cap"
+        );
+        // a blocking submitter parks on the gate; opening the latch lets
+        // completions drain, which must wake it (liveness, no timing probe)
+        let waited = std::thread::scope(|s| {
+            let h = s.spawn(|| session.submit(qs.get(2)));
+            {
+                let (m, cv) = &*open;
+                *m.lock().unwrap() = true;
+                cv.notify_all();
+            }
+            h.join().expect("blocked submitter finished")
+        });
+        assert_eq!(waited, QueryTicket(2));
+        let done = session.drain();
+        assert_eq!(done.len(), 3);
+        let stats = session.close();
+        assert_eq!(stats.queries_completed, 3);
     }
 }

@@ -36,6 +36,16 @@
 //! owns a drop-guard that notifies the admission loop), so a dying stage
 //! copy cascades into a clean join instead of aborting the process; the
 //! original panic, if any, is resurfaced at join.
+//!
+//! Besides one-shot phase runs ([`Executor::run`]), the seam exposes
+//! *long-lived streaming runs* ([`Executor::open_stream`] →
+//! [`StreamRun`]): ingress is a channel, so a submission enters the
+//! pipeline the moment it arrives instead of waiting for the next pump;
+//! completions stream out through a `recv`/`try_recv` egress; and
+//! `finish` is a typed quiescence barrier. `StreamConfig::pending_cap`
+//! adds bounded backpressure — `submit` blocks (and `try_submit`
+//! declines) while `pending_cap` submissions are outstanding
+//! (DESIGN.md §Service API).
 
 use crate::dataflow::message::{Dest, Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
@@ -44,9 +54,10 @@ use crate::runtime::{Hasher, Ranker};
 use crate::stages::aggregator::QueryResult;
 use crate::stages::{AgState, BiState, DpState, Emit, InputReader, QueryReceiver};
 use crate::util::timer::Timer;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Uniform message-handling seam implemented by every stage binding.
 ///
@@ -230,6 +241,88 @@ pub struct ExecReport {
     pub work: Vec<(StageKind, u16, WorkStats)>,
 }
 
+/// Knobs of a long-lived streaming run (the `stream.*` config section
+/// distilled to what an executor needs; see [`Executor::open_stream`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamConfig {
+    /// Closed-loop admission window: max queries in flight inside the
+    /// pipeline at once (0 = open loop). Same meaning as
+    /// [`Workload::window`] / `Config::stream.inflight`.
+    pub window: usize,
+    /// Traffic-meter / write-batch aggregation buffer (bytes, 0 = off).
+    pub agg_bytes: usize,
+    /// Backpressure cap on queries submitted but not yet completed
+    /// (pending in the ingress queue + in flight in the pipeline).
+    /// [`StreamRun::submit`] blocks at the cap; 0 = unbounded.
+    pub pending_cap: usize,
+}
+
+/// One completed query delivered through a streaming run's egress.
+#[derive(Clone, Debug)]
+pub struct StreamCompletion {
+    /// The qid the caller stamped on the ingress [`Msg`].
+    pub qid: u32,
+    /// Global top-k `(sqdist, id)` ascending.
+    pub hits: Vec<(f32, u32)>,
+    /// Pipeline-admission-to-completion seconds.
+    pub secs: f64,
+}
+
+/// What [`StreamRun::finish`] hands back — the streaming rendition of
+/// [`ExecReport`]: completions were already delivered through the egress,
+/// so the barrier carries only the stragglers plus the run's accounting.
+pub struct StreamReport {
+    /// Completions that were never claimed through `recv`/`try_recv`
+    /// (qid order follows completion order).
+    pub unclaimed: Vec<StreamCompletion>,
+    /// Merged traffic of the whole run (flushed).
+    pub meter: TrafficMeter,
+    /// Remote per-copy work counters (socket transport; empty in-process —
+    /// same contract as [`ExecReport::work`]).
+    pub work: Vec<(StageKind, u16, WorkStats)>,
+}
+
+/// A long-lived streaming run: ingress is a channel (a submission enters
+/// the pipeline the moment it arrives, no per-pump workload), completions
+/// stream out through `recv`/`try_recv`, and `finish` is a typed barrier
+/// that waits for quiescence and returns the run's accounting.
+///
+/// Failure surfaces loudly, mirroring [`Executor::run`]: a dying stage
+/// (thread or worker process) makes subsequent calls panic instead of
+/// wedging the caller, and a submitter blocked on backpressure is woken
+/// rather than left hanging.
+pub trait StreamRun: Send {
+    /// Admit one ingress message. Query messages (those with a qid) block
+    /// while `pending_cap` submissions are outstanding; items without a
+    /// qid are never gated (same policy as [`Workload::window`]).
+    fn submit(&mut self, msg: Msg);
+
+    /// Non-blocking [`StreamRun::submit`]: hands the message back when the
+    /// backpressure window is full.
+    fn try_submit(&mut self, msg: Msg) -> Result<(), Msg>;
+
+    /// Cheap capacity probe: `false` when a blocking submit of a query
+    /// would currently wait on the backpressure window. Advisory — the
+    /// window can fill or drain between a probe and the submit; callers
+    /// use it to skip per-query preparation (hashing) on the decline
+    /// path. Dead runs report `true` so the next call fails loudly.
+    fn can_submit(&self) -> bool {
+        true
+    }
+
+    /// Next completion, waiting up to `timeout`. `None` means nothing
+    /// completed within the timeout — the pipeline keeps running.
+    fn recv(&mut self, timeout: Duration) -> Option<StreamCompletion>;
+
+    /// Pop a completion if one is already buffered.
+    fn try_recv(&mut self) -> Option<StreamCompletion>;
+
+    /// Typed barrier: waits until every admitted message is fully
+    /// processed, tears the run down, and returns unclaimed completions
+    /// plus the run's merged meter and remote work counters.
+    fn finish(self: Box<Self>) -> StreamReport;
+}
+
 /// A transport for the five-stage dataflow.
 ///
 /// `Sync` is part of the contract: a [`crate::coordinator::session::IndexSession`]
@@ -242,6 +335,204 @@ pub trait Executor: Sync {
         stages: StageHandlers<'_>,
         workload: Workload<'_>,
     ) -> ExecReport;
+
+    /// Open a long-lived streaming run over owned (`'static`) stage
+    /// handlers. The default delegates to a deterministic per-item drain
+    /// on the calling thread — the [`InlineExecutor`] semantics, also a
+    /// correct (if transport-unfaithful) fallback for custom executors.
+    /// [`ThreadedExecutor`] overrides it with parked stage threads and a
+    /// dedicated admission thread; the socket transport keeps its worker
+    /// connections hot and admits without per-pump barrier round-trips.
+    fn open_stream<'e>(
+        &'e self,
+        placement: &Placement,
+        stages: StageHandlers<'static>,
+        cfg: StreamConfig,
+    ) -> Box<dyn StreamRun + 'e> {
+        Box::new(DrainStreamRun::new(placement.clone(), stages, cfg))
+    }
+}
+
+// ------------------------------------------------------------- stream gate
+
+/// The backpressure window of a streaming run: a counting gate acquired at
+/// submission, released at completion, and killed (opened with a `dead`
+/// flag) when the run goes down so blocked submitters never hang on a dead
+/// pipeline.
+pub(crate) struct StreamGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    n: usize,
+    cap: usize,
+    dead: bool,
+}
+
+impl StreamGate {
+    pub(crate) fn new(cap: usize) -> StreamGate {
+        StreamGate {
+            state: Mutex::new(GateState { n: 0, cap, dead: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Blocks while the window is full. `false` means the run died.
+    pub(crate) fn acquire(&self) -> bool {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if g.dead {
+                return false;
+            }
+            if g.cap == 0 || g.n < g.cap {
+                g.n += 1;
+                return true;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// `Ok(true)` acquired, `Ok(false)` window full, `Err(())` run died.
+    pub(crate) fn try_acquire(&self) -> Result<bool, ()> {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if g.dead {
+            return Err(());
+        }
+        if g.cap == 0 || g.n < g.cap {
+            g.n += 1;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Advisory capacity probe (no acquisition). Dead gates report room
+    /// so the caller proceeds into the loud failure path.
+    pub(crate) fn has_room(&self) -> bool {
+        let g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        g.dead || g.cap == 0 || g.n < g.cap
+    }
+
+    pub(crate) fn release(&self) {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        g.n = g.n.saturating_sub(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Mark the run dead and wake every blocked submitter.
+    pub(crate) fn kill(&self) {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        g.dead = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// Opens the gate when dropped — placed in admission loops so an unwind
+/// (or any exit path) can never leave submitters blocked forever.
+pub(crate) struct GateGuard(pub(crate) Arc<StreamGate>);
+
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        self.0.kill();
+    }
+}
+
+// ------------------------------------------------- per-item drain stream
+
+/// The default [`StreamRun`]: deterministic per-item drain on the calling
+/// thread (no concurrency, so completions are available the moment
+/// `submit` returns and the backpressure window can never fill). This is
+/// the [`InlineExecutor`]'s streaming semantics — the differential oracle
+/// for the threaded and socket streaming runs.
+pub struct DrainStreamRun {
+    placement: Placement,
+    stages: StageHandlers<'static>,
+    meter: TrafficMeter,
+    done: VecDeque<StreamCompletion>,
+}
+
+impl DrainStreamRun {
+    pub fn new(
+        placement: Placement,
+        stages: StageHandlers<'static>,
+        cfg: StreamConfig,
+    ) -> DrainStreamRun {
+        DrainStreamRun {
+            placement,
+            stages,
+            meter: TrafficMeter::new(cfg.agg_bytes),
+            done: VecDeque::new(),
+        }
+    }
+
+    fn process(&mut self, item: Msg) {
+        let qt = Timer::start();
+        let head_node = self.placement.head_node;
+        let mut queue: VecDeque<(Dest, Msg)> = VecDeque::new();
+        let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+        let mut comps: Vec<QueryResult> = Vec::new();
+        self.stages.head.on_msg(item, &mut emitted);
+        for (dest, msg) in emitted.drain(..) {
+            self.meter.send(
+                head_node,
+                self.placement.node_of(dest.stage, dest.copy),
+                msg.wire_size(),
+            );
+            queue.push_back((dest, msg));
+        }
+        while let Some((dest, msg)) = queue.pop_front() {
+            let handler_node = self.placement.node_of(dest.stage, dest.copy);
+            stage_mut(&mut self.stages, dest).on_msg(msg, &mut emitted);
+            for (d2, m2) in emitted.drain(..) {
+                self.meter.send(
+                    handler_node,
+                    self.placement.node_of(d2.stage, d2.copy),
+                    m2.wire_size(),
+                );
+                queue.push_back((d2, m2));
+            }
+        }
+        for ag in self.stages.ags.iter_mut() {
+            ag.take_completions(&mut comps);
+        }
+        let secs = qt.secs();
+        for (qid, hits) in comps.drain(..) {
+            for dp in self.stages.dps.iter_mut() {
+                dp.on_query_done(qid);
+            }
+            self.done.push_back(StreamCompletion { qid, hits, secs });
+        }
+    }
+}
+
+impl StreamRun for DrainStreamRun {
+    fn submit(&mut self, msg: Msg) {
+        self.process(msg);
+    }
+
+    fn try_submit(&mut self, msg: Msg) -> Result<(), Msg> {
+        self.process(msg);
+        Ok(())
+    }
+
+    fn recv(&mut self, _timeout: Duration) -> Option<StreamCompletion> {
+        self.done.pop_front()
+    }
+
+    fn try_recv(&mut self) -> Option<StreamCompletion> {
+        self.done.pop_front()
+    }
+
+    fn finish(mut self: Box<Self>) -> StreamReport {
+        self.meter.flush();
+        StreamReport {
+            unclaimed: self.done.into_iter().collect(),
+            meter: self.meter,
+            work: Vec::new(),
+        }
+    }
 }
 
 // ------------------------------------------------------------------ inline
@@ -337,7 +628,9 @@ enum Delivery {
     Done(u32),
 }
 
-/// Events flowing back to the admission loop.
+/// Events flowing back to the admission loop. `Ingress`/`Finish` are the
+/// streaming run's additions (one unified channel stands in for a select
+/// over ingress + completions); phase runs never see them.
 enum Event {
     /// AG finished a query (completion instant taken on the AG thread).
     Done(u32, Vec<(f32, u32)>, Instant),
@@ -345,6 +638,10 @@ enum Event {
     /// drop guard). Seeing this mid-phase means the pipeline is dying;
     /// the admission loop stops and drains instead of blocking forever.
     Stopped,
+    /// Streaming submission (from [`StreamRun::submit`]).
+    Ingress(Msg),
+    /// Streaming barrier: no further ingress; wind down at quiescence.
+    Finish,
 }
 
 /// Downstream senders available to one stage copy. Following the dataflow
@@ -569,6 +866,10 @@ impl Executor for ThreadedExecutor {
                         }
                     }
                     Ok(Event::Stopped) => dying = true,
+                    // streaming-only events; nothing sends them in a phase run
+                    Ok(Event::Ingress(_)) | Ok(Event::Finish) => {
+                        unreachable!("streaming event on a phase run")
+                    }
                     Err(_) => break 'admission,
                 }
             }
@@ -599,6 +900,315 @@ impl Executor for ThreadedExecutor {
 
         ExecReport { results, per_query_secs, meter: merged, work: Vec::new() }
     }
+
+    fn open_stream<'e>(
+        &'e self,
+        placement: &Placement,
+        stages: StageHandlers<'static>,
+        cfg: StreamConfig,
+    ) -> Box<dyn StreamRun + 'e> {
+        let StageHandlers { head, bis, dps, ags } = stages;
+        let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+        let (eg_tx, eg_rx) = mpsc::channel::<StreamCompletion>();
+        let gate = Arc::new(StreamGate::new(cfg.pending_cap));
+
+        // One parked thread per BI/DP/AG copy, exactly the phase-run
+        // topology — but plain (non-scoped) threads, since the run
+        // outlives this call: handlers must be owned (`'static`).
+        let (bi_tx, bi_rx): (Vec<_>, Vec<_>) =
+            bis.iter().map(|_| mpsc::channel::<Delivery>()).unzip();
+        let (dp_tx, dp_rx): (Vec<_>, Vec<_>) =
+            dps.iter().map(|_| mpsc::channel::<Delivery>()).unzip();
+        let (ag_tx, ag_rx): (Vec<_>, Vec<_>) =
+            ags.iter().map(|_| mpsc::channel::<Delivery>()).unzip();
+
+        let mut handles = Vec::new();
+        let agg = cfg.agg_bytes;
+        for (copy, (mut h, rx)) in ags.into_iter().zip(ag_rx).enumerate() {
+            let ctx = StageCtx {
+                rx,
+                router: Router::default(),
+                events: ev_tx.clone(),
+                my_node: placement.node_of(StageKind::Ag, copy as u16),
+                agg_bytes: agg,
+            };
+            let p = placement.clone();
+            handles.push(std::thread::spawn(move || stage_thread(h.as_mut(), &p, ctx)));
+        }
+        for (copy, (mut h, rx)) in dps.into_iter().zip(dp_rx).enumerate() {
+            let ctx = StageCtx {
+                rx,
+                router: Router { ag: ag_tx.clone(), ..Router::default() },
+                events: ev_tx.clone(),
+                my_node: placement.node_of(StageKind::Dp, copy as u16),
+                agg_bytes: agg,
+            };
+            let p = placement.clone();
+            handles.push(std::thread::spawn(move || stage_thread(h.as_mut(), &p, ctx)));
+        }
+        for (copy, (mut h, rx)) in bis.into_iter().zip(bi_rx).enumerate() {
+            let ctx = StageCtx {
+                rx,
+                router: Router {
+                    dp: dp_tx.clone(),
+                    ag: ag_tx.clone(),
+                    ..Router::default()
+                },
+                events: ev_tx.clone(),
+                my_node: placement.node_of(StageKind::Bi, copy as u16),
+                agg_bytes: agg,
+            };
+            let p = placement.clone();
+            handles.push(std::thread::spawn(move || stage_thread(h.as_mut(), &p, ctx)));
+        }
+
+        let router = Router { bi: bi_tx, dp: dp_tx, ag: ag_tx };
+        let g = gate.clone();
+        let p = placement.clone();
+        let admission = std::thread::spawn(move || {
+            stream_admission(head, router, ev_rx, eg_tx, g, p, cfg, handles)
+        });
+
+        Box::new(ThreadedStreamRun {
+            ev_tx,
+            gate,
+            egress_rx: eg_rx,
+            admission: Some(admission),
+        })
+    }
+}
+
+/// What the streaming admission thread hands back at join.
+struct StreamJoin {
+    meter: TrafficMeter,
+    /// A stage thread's panic payload, resurfaced to the caller.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Typed failure description when the run died without a panic.
+    error: Option<String>,
+}
+
+/// The threaded transport's [`StreamRun`]: stage threads stay parked on
+/// their channels between submissions; a dedicated admission thread owns
+/// the head stage and applies the closed-loop window + backpressure gate.
+struct ThreadedStreamRun {
+    ev_tx: mpsc::Sender<Event>,
+    gate: Arc<StreamGate>,
+    egress_rx: mpsc::Receiver<StreamCompletion>,
+    admission: Option<std::thread::JoinHandle<StreamJoin>>,
+}
+
+impl ThreadedStreamRun {
+    /// The run died: join the admission thread and resurface the failure.
+    fn die(&mut self) -> ! {
+        let join = self
+            .admission
+            .take()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)));
+        match join {
+            Some(StreamJoin { panic: Some(p), .. }) => std::panic::resume_unwind(p),
+            Some(StreamJoin { error: Some(e), .. }) => {
+                panic!("threaded stream run died: {e}")
+            }
+            _ => panic!("threaded stream run died"),
+        }
+    }
+
+    fn wind_down(&mut self) -> StreamJoin {
+        let _ = self.ev_tx.send(Event::Finish);
+        let handle = self.admission.take().expect("stream already finished");
+        handle
+            .join()
+            .unwrap_or_else(|p| std::panic::resume_unwind(p))
+    }
+}
+
+impl StreamRun for ThreadedStreamRun {
+    fn submit(&mut self, msg: Msg) {
+        let gated = msg.qid().is_some();
+        if gated && !self.gate.acquire() {
+            self.die();
+        }
+        if self.ev_tx.send(Event::Ingress(msg)).is_err() {
+            self.die();
+        }
+    }
+
+    fn try_submit(&mut self, msg: Msg) -> Result<(), Msg> {
+        if msg.qid().is_some() {
+            match self.gate.try_acquire() {
+                Ok(true) => {}
+                Ok(false) => return Err(msg),
+                Err(()) => self.die(),
+            }
+        }
+        if self.ev_tx.send(Event::Ingress(msg)).is_err() {
+            self.die();
+        }
+        Ok(())
+    }
+
+    fn can_submit(&self) -> bool {
+        self.gate.has_room()
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Option<StreamCompletion> {
+        match self.egress_rx.recv_timeout(timeout) {
+            Ok(c) => Some(c),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => self.die(),
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<StreamCompletion> {
+        match self.egress_rx.try_recv() {
+            Ok(c) => Some(c),
+            Err(mpsc::TryRecvError::Empty) => None,
+            // The admission thread is gone but completions may still be
+            // buffered ahead of the disconnect — Empty+gone means death.
+            Err(mpsc::TryRecvError::Disconnected) => self.die(),
+        }
+    }
+
+    fn finish(mut self: Box<Self>) -> StreamReport {
+        let join = self.wind_down();
+        if let Some(p) = join.panic {
+            std::panic::resume_unwind(p);
+        }
+        if let Some(e) = join.error {
+            panic!("threaded stream run died: {e}");
+        }
+        let mut unclaimed = Vec::new();
+        while let Ok(c) = self.egress_rx.try_recv() {
+            unclaimed.push(c);
+        }
+        StreamReport { unclaimed, meter: join.meter, work: Vec::new() }
+    }
+}
+
+impl Drop for ThreadedStreamRun {
+    fn drop(&mut self) {
+        // Dropped without `finish` (caller unwound): wind the threads down
+        // instead of leaking them. Failures are swallowed — the caller is
+        // already on an error path, and panicking here would abort.
+        if let Some(handle) = self.admission.take() {
+            let _ = self.ev_tx.send(Event::Finish);
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The streaming admission loop (its own thread): pulls ingress and
+/// completion events off one unified channel, defers ingress while the
+/// closed-loop window is full, releases the backpressure gate and fans
+/// out per-query teardown on every completion, and winds the stage
+/// threads down at the `Finish` barrier (or on a died stage).
+#[allow(clippy::too_many_arguments)]
+fn stream_admission(
+    mut head: Box<dyn StageHandler>,
+    router: Router,
+    ev_rx: mpsc::Receiver<Event>,
+    egress: mpsc::Sender<StreamCompletion>,
+    gate: Arc<StreamGate>,
+    placement: Placement,
+    cfg: StreamConfig,
+    handles: Vec<std::thread::JoinHandle<TrafficMeter>>,
+) -> StreamJoin {
+    // Opens the gate on every exit path (including unwind) so blocked
+    // submitters wake instead of hanging on a dead run.
+    let _gg = GateGuard(gate.clone());
+    let mut meter = TrafficMeter::new(cfg.agg_bytes);
+    let head_node = placement.head_node;
+    let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+    let mut pending: VecDeque<Msg> = VecDeque::new();
+    let mut dispatch_ts: HashMap<u32, Instant> = HashMap::new();
+    let mut in_flight = 0usize;
+    let mut finishing = false;
+    let mut error: Option<String> = None;
+
+    'run: loop {
+        // Admit deferred ingress while the window allows (non-query items
+        // are never windowed — same policy as the phase run).
+        while error.is_none() {
+            let next_is_query = match pending.front() {
+                None => break,
+                Some(m) => m.qid().is_some(),
+            };
+            if next_is_query && cfg.window != 0 && in_flight >= cfg.window {
+                break;
+            }
+            let item = pending.pop_front().expect("peeked non-empty");
+            let item_qid = item.qid();
+            head.on_msg(item, &mut emitted);
+            if let Some(qid) = item_qid {
+                dispatch_ts.insert(qid, Instant::now());
+                in_flight += 1;
+            }
+            for (dest, msg) in emitted.drain(..) {
+                meter.send(
+                    head_node,
+                    placement.node_of(dest.stage, dest.copy),
+                    msg.wire_size(),
+                );
+                if !router.send(dest, Delivery::Msg(msg)) {
+                    error = Some("a stage channel closed mid-stream".into());
+                    break;
+                }
+            }
+        }
+        if error.is_some() || (finishing && pending.is_empty() && in_flight == 0) {
+            break 'run;
+        }
+        match ev_rx.recv() {
+            Ok(Event::Ingress(m)) => pending.push_back(m),
+            Ok(Event::Done(qid, hits, at)) => {
+                let secs = dispatch_ts
+                    .remove(&qid)
+                    .map(|t| at.duration_since(t).as_secs_f64())
+                    .unwrap_or(0.0);
+                in_flight = in_flight.saturating_sub(1);
+                for tx in &router.dp {
+                    let _ = tx.send(Delivery::Done(qid));
+                }
+                gate.release();
+                let _ = egress.send(StreamCompletion { qid, hits, secs });
+            }
+            Ok(Event::Stopped) => {
+                error = Some("a stage thread stopped mid-stream".into());
+            }
+            Ok(Event::Finish) => finishing = true,
+            // Every ev sender gone (run handle dropped mid-unwind and the
+            // stage threads already exited): treat as a wind-down.
+            Err(_) => break 'run,
+        }
+    }
+    meter.flush();
+
+    // Cascade shutdown exactly like the phase run: dropping the head's
+    // senders closes BI channels, BI exits close DP, DP exits close AG.
+    drop(router);
+    // Late events (completions racing the shutdown on a dying run) are
+    // drained non-blockingly — the ingress sender half may still be alive
+    // in the run handle, so a blocking recv could hang here.
+    while let Ok(ev) = ev_rx.try_recv() {
+        if let Event::Done(qid, hits, at) = ev {
+            let secs = dispatch_ts
+                .remove(&qid)
+                .map(|t| at.duration_since(t).as_secs_f64())
+                .unwrap_or(0.0);
+            gate.release();
+            let _ = egress.send(StreamCompletion { qid, hits, secs });
+        }
+    }
+
+    let mut merged = meter;
+    let mut panic = None;
+    for h in handles {
+        match h.join() {
+            Ok(m) => merged.merge(&m),
+            Err(p) => panic = Some(p),
+        }
+    }
+    StreamJoin { meter: merged, panic, error }
 }
 
 #[cfg(test)]
@@ -858,5 +1468,162 @@ mod tests {
         let (_, _, report) = run_counting(&InlineExecutor, 5, 0);
         assert_eq!(report.meter.logical_msgs, 5);
         assert_eq!(report.meter.local_msgs, 5);
+    }
+
+    // ------------------------------------------------------- stream runs
+
+    fn stream_cfg(window: usize, pending_cap: usize) -> StreamConfig {
+        StreamConfig { window, agg_bytes: 0, pending_cap }
+    }
+
+    fn relay_stages() -> StageHandlers<'static> {
+        StageHandlers {
+            head: boxed(RelayHead),
+            bis: vec![boxed(NoopStage)],
+            dps: vec![boxed(NoopStage)],
+            ags: vec![boxed(InstantAg { finished: Vec::new() })],
+        }
+    }
+
+    #[test]
+    fn threaded_stream_completes_submissions_as_they_arrive() {
+        let placement = tiny_placement();
+        let exec = ThreadedExecutor;
+        let mut run = exec.open_stream(&placement, relay_stages(), stream_cfg(0, 0));
+        for qid in 0..8u32 {
+            run.submit(qv(qid));
+            let c = run.recv(Duration::from_secs(10)).expect("completion");
+            assert_eq!(c.qid, qid);
+            assert_eq!(c.hits, vec![(0.0, qid)]);
+        }
+        assert!(run.try_recv().is_none());
+        let report = run.finish();
+        assert!(report.unclaimed.is_empty());
+        // one metered head→DP hop + one local head→AG delivery per query
+        assert_eq!(report.meter.logical_msgs, 8);
+        assert_eq!(report.meter.local_msgs, 8);
+    }
+
+    #[test]
+    fn inline_stream_is_a_per_item_drain() {
+        let placement = tiny_placement();
+        let exec = InlineExecutor;
+        let mut run = exec.open_stream(&placement, relay_stages(), stream_cfg(0, 4));
+        for qid in 0..5u32 {
+            run.submit(qv(qid));
+            let c = run.try_recv().expect("inline completes synchronously");
+            assert_eq!(c.qid, qid);
+            assert!(c.secs > 0.0);
+        }
+        let report = run.finish();
+        assert!(report.unclaimed.is_empty());
+        assert_eq!(report.meter.logical_msgs, 5);
+        assert_eq!(report.meter.local_msgs, 5);
+    }
+
+    #[test]
+    fn stream_finish_waits_for_in_flight_and_returns_unclaimed() {
+        let placement = tiny_placement();
+        let exec = ThreadedExecutor;
+        // window 2 exercises the deferred ingress queue as well
+        let mut run = exec.open_stream(&placement, relay_stages(), stream_cfg(2, 0));
+        for qid in 0..6u32 {
+            run.submit(qv(qid));
+        }
+        let report = run.finish();
+        let mut qids: Vec<u32> = report.unclaimed.iter().map(|c| c.qid).collect();
+        qids.sort_unstable();
+        assert_eq!(qids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    /// Head that forwards every query to DP 0 only.
+    struct HeadToDp;
+    impl StageHandler for HeadToDp {
+        fn on_msg(&mut self, msg: Msg, out: Emit) {
+            let qid = msg.qid().expect("HeadToDp only takes queries");
+            let v: Arc<[f32]> = vec![0f32; 1].into();
+            out.push((Dest::dp(0), Msg::CandidateReq { qid, ids: Vec::new(), v }));
+        }
+    }
+
+    /// DP that parks on a shared latch before answering via AG — holds
+    /// queries in flight deterministically (no timing probes).
+    struct LatchedDp {
+        open: Arc<(Mutex<bool>, Condvar)>,
+    }
+    impl StageHandler for LatchedDp {
+        fn on_msg(&mut self, msg: Msg, out: Emit) {
+            let qid = msg.qid().unwrap();
+            let (m, cv) = &*self.open;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            drop(open);
+            out.push((Dest::ag(0), Msg::LocalTopK { qid, hits: Vec::new() }));
+        }
+    }
+
+    #[test]
+    fn stream_backpressure_declines_submissions_at_pending_cap() {
+        let placement = tiny_placement();
+        let latch = Arc::new((Mutex::new(false), Condvar::new()));
+        let stages = StageHandlers {
+            head: boxed(HeadToDp),
+            bis: vec![boxed(NoopStage)],
+            dps: vec![boxed(LatchedDp { open: latch.clone() })],
+            ags: vec![boxed(InstantAg { finished: Vec::new() })],
+        };
+        let exec = ThreadedExecutor;
+        let mut run = exec.open_stream(&placement, stages, stream_cfg(0, 2));
+        run.submit(qv(0));
+        run.submit(qv(1)); // pending+in-flight now at the cap
+        match run.try_submit(qv(2)) {
+            Err(m) => assert_eq!(m.qid(), Some(2)),
+            Ok(()) => panic!("try_submit succeeded past pending_cap"),
+        }
+        // open the latch: the parked DP answers both, draining the window
+        {
+            let (m, cv) = &*latch;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let a = run.recv(Duration::from_secs(10)).expect("first completion");
+        let b = run.recv(Duration::from_secs(10)).expect("second completion");
+        let mut got = [a.qid, b.qid];
+        got.sort_unstable();
+        assert_eq!(got, [0, 1]);
+        run.try_submit(qv(2)).expect("window drained");
+        let c = run.recv(Duration::from_secs(10)).expect("third completion");
+        assert_eq!(c.qid, 2);
+        let report = run.finish();
+        assert!(report.unclaimed.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "injected BI failure")]
+    fn dead_stage_stream_resurfaces_its_panic() {
+        struct ToBiHead;
+        impl StageHandler for ToBiHead {
+            fn on_msg(&mut self, msg: Msg, out: Emit) {
+                let qid = msg.qid().unwrap();
+                let v: Arc<[f32]> = vec![0f32; 1].into();
+                out.push((Dest::bi(0), Msg::Query { qid, probes: Vec::new(), v }));
+            }
+        }
+        let placement = tiny_placement();
+        let stages = StageHandlers {
+            head: boxed(ToBiHead),
+            bis: vec![boxed(PanicBi)],
+            dps: vec![boxed(NoopStage)],
+            ags: vec![boxed(NoopStage)],
+        };
+        let exec = ThreadedExecutor;
+        let mut run = exec.open_stream(&placement, stages, stream_cfg(0, 1));
+        run.submit(qv(0));
+        // cap 1 + no completion: this blocks until the dying run opens the
+        // gate, then resurfaces the BI panic instead of hanging.
+        run.submit(qv(1));
+        run.finish();
     }
 }

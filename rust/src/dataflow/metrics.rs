@@ -3,7 +3,9 @@
 //! [`TrafficMeter`] implements the labeled-stream buffering/aggregation
 //! policy: logical messages to the same destination node accumulate in a
 //! per-link buffer and are flushed as one network *packet* when the buffer
-//! reaches `agg_bytes` (or at phase end). Local (same-node) deliveries are
+//! reaches `agg_bytes` (or at phase end); a message that would overflow
+//! the buffer closes the buffered packet first, so packets respect the
+//! budget unless a single message exceeds it. Local (same-node) deliveries are
 //! counted separately and cost no network traffic — this is the mechanism
 //! behind the paper's >6× message reduction from intra-stage parallelism.
 //!
@@ -51,6 +53,12 @@ impl TrafficMeter {
     }
 
     /// Record one logical message of `size` bytes from node `src` to `dst`.
+    ///
+    /// Packet model: a message that would push the aggregation buffer past
+    /// `agg_bytes` closes the buffered packet *first*, so no packet ever
+    /// exceeds the budget unless a single message does. `net::PeerConn`
+    /// batches its writes with exactly the same rule, so meter packets
+    /// track TCP write batches (control frames aside).
     pub fn send(&mut self, src: u16, dst: u16, size: usize) {
         if src == dst {
             self.local_msgs += 1;
@@ -64,14 +72,22 @@ impl TrafficMeter {
             link.bytes += (size + self.header_bytes) as u64;
             return;
         }
+        let header = self.header_bytes;
         let pend = self.pending.entry((src, dst)).or_default();
+        if *pend > 0 && *pend + size > self.agg_bytes {
+            let full = *pend;
+            *pend = 0;
+            let link = self.links.entry((src, dst)).or_default();
+            link.packets += 1;
+            link.bytes += (full + header) as u64;
+        }
         *pend += size;
         if *pend >= self.agg_bytes {
             let full = *pend;
             *pend = 0;
             let link = self.links.entry((src, dst)).or_default();
             link.packets += 1;
-            link.bytes += (full + self.header_bytes) as u64;
+            link.bytes += (full + header) as u64;
         }
     }
 
@@ -235,6 +251,25 @@ mod tests {
         m.send(0, 1, 50);
         m.flush();
         assert_eq!(m.total_packets(), 2);
+    }
+
+    #[test]
+    fn aggregation_never_overflows_the_budget() {
+        let mut m = TrafficMeter::new(1000);
+        m.header_bytes = 0;
+        m.send(0, 1, 900);
+        assert_eq!(m.total_packets(), 0);
+        // would overflow: the buffered 900 bytes go out first
+        m.send(0, 1, 200);
+        assert_eq!(m.total_packets(), 1);
+        assert_eq!(m.total_bytes(), 900);
+        m.flush();
+        assert_eq!(m.total_packets(), 2);
+        assert_eq!(m.total_bytes(), 1100);
+        // a single message larger than the budget is one oversized packet
+        m.send(0, 1, 5000);
+        assert_eq!(m.total_packets(), 3);
+        assert_eq!(m.total_bytes(), 6100);
     }
 
     #[test]

@@ -17,7 +17,10 @@ pub mod exec;
 pub mod message;
 pub mod metrics;
 
-pub use exec::{Executor, InlineExecutor, StageHandler, ThreadedExecutor};
+pub use exec::{
+    Executor, InlineExecutor, StageHandler, StreamCompletion, StreamConfig, StreamReport,
+    StreamRun, ThreadedExecutor,
+};
 pub use message::{Dest, Msg, StageKind};
 pub use metrics::{LinkStats, TrafficMeter, WorkStats};
 

@@ -59,9 +59,11 @@ pub fn engine() -> Option<Arc<Engine>> {
 }
 
 /// Compute backends for one run (engine-backed when artifacts exist).
+/// The ranker is `Arc`-shared so sessions can move it onto the streaming
+/// executors' stage threads.
 pub struct Backends {
     pub hasher: Box<dyn Hasher>,
-    pub ranker: Box<dyn Ranker>,
+    pub ranker: Arc<dyn Ranker>,
     pub engine_path: bool,
 }
 
@@ -84,13 +86,13 @@ pub fn backends(cfg: &Config, dim: usize) -> Backends {
                     engine: e.clone(),
                     p_used: cfg.lsh.projections(),
                 }),
-                ranker: Box::new(ranker),
+                ranker: Arc::new(ranker),
                 engine_path: true,
             }
         }
         _ => Backends {
             hasher: Box::new(ScalarHasher { family }),
-            ranker: Box::new(ScalarRanker { dim }),
+            ranker: Arc::new(ScalarRanker { dim }),
             engine_path: false,
         },
     }
@@ -660,6 +662,133 @@ pub fn net_comparison() -> anyhow::Result<(Table, String)> {
         "{{\"experiment\":\"net\",\"table\":{},\"strategies\":{{{}}}}}\n",
         table.to_json(),
         strategies_json.join(",")
+    );
+    Ok((table, json))
+}
+
+// ------------------------------------------------------------ streaming
+
+/// Wall-clock submit→claim latency for every query of `w` through one
+/// serving session. `window = None` is *pumped* (batch) admission: the
+/// whole set is submitted up front and claimed as it completes — every
+/// query's latency includes the queueing delay of the batch ahead of it.
+/// `window = Some(W)` is paced streaming admission: the client claims
+/// completions whenever W submissions are outstanding, the serving loop
+/// of a latency-critical deployment.
+fn streaming_mode_latencies(
+    exec: &dyn crate::dataflow::exec::Executor,
+    cluster: &mut Cluster,
+    w: &World,
+    b: &Backends,
+    window: Option<usize>,
+) -> (Vec<f64>, f64) {
+    use crate::coordinator::session::IndexSession;
+    use std::time::Instant;
+
+    let session =
+        IndexSession::attach(exec, cluster, b.hasher.as_ref(), Some(b.ranker.clone()));
+    let qs = &w.queries;
+    let t0 = Instant::now();
+    let mut submit_ts: Vec<Instant> = Vec::with_capacity(qs.len());
+    let mut lat = vec![0f64; qs.len()];
+    match window {
+        None => {
+            for qi in 0..qs.len() {
+                submit_ts.push(Instant::now());
+                session.submit(qs.get(qi));
+            }
+            while let Some((t, _)) = session.recv() {
+                lat[t.0 as usize] = submit_ts[t.0 as usize].elapsed().as_secs_f64();
+            }
+        }
+        Some(wdw) => {
+            for qi in 0..qs.len() {
+                submit_ts.push(Instant::now());
+                session.submit(qs.get(qi));
+                while session.in_flight() >= wdw {
+                    match session.recv() {
+                        Some((t, _)) => {
+                            lat[t.0 as usize] =
+                                submit_ts[t.0 as usize].elapsed().as_secs_f64();
+                        }
+                        None => break,
+                    }
+                }
+            }
+            while let Some((t, _)) = session.recv() {
+                lat[t.0 as usize] = submit_ts[t.0 as usize].elapsed().as_secs_f64();
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    session.close();
+    (lat, wall)
+}
+
+fn streaming_row(table: &mut Table, transport: &str, label: &str, lat: &[f64], wall: f64) {
+    let st = crate::metrics::latency_stats(lat);
+    table.row(&[
+        transport.to_string(),
+        label.to_string(),
+        format!("{:.2}", st.mean_ms),
+        format!("{:.2}", st.p50_ms),
+        format!("{:.2}", st.p99_ms),
+        format!("{:.1}", lat.len() as f64 / wall.max(1e-9)),
+    ]);
+}
+
+/// Streaming vs pumped admission (`parlsh experiment streaming`): the
+/// per-query latency argument for the serving regime — a query that
+/// enters the pipeline the moment it arrives vs one that waits behind a
+/// batch. Runs on the threaded executor and across real worker processes
+/// on the socket transport; the index is built once per transport and
+/// every admission mode reuses the same resident state. Returns the table
+/// and the `BENCH_streaming.json` document.
+pub fn streaming_comparison() -> anyhow::Result<(Table, String)> {
+    use crate::coordinator::build_index_on;
+    use crate::dataflow::exec::ThreadedExecutor;
+    use crate::net::NetSession;
+
+    let mut cfg = Config::default();
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.lsh.t = 16;
+    cfg.data.n = env_usize("PARLSH_N", 30_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 150);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let b = backends(&cfg, w.data.dim);
+
+    let modes: [(&str, Option<usize>); 3] = [
+        ("pumped (batch)", None),
+        ("streaming W=1", Some(1)),
+        ("streaming W=4", Some(4)),
+    ];
+    let mut table =
+        Table::new(&["transport", "admission", "mean ms", "p50 ms", "p99 ms", "q/s"]);
+
+    {
+        let mut cluster = build_index_on(&ThreadedExecutor, &cfg, &w.data, b.hasher.as_ref());
+        for (label, window) in modes {
+            let (lat, wall) =
+                streaming_mode_latencies(&ThreadedExecutor, &mut cluster, &w, &b, window);
+            streaming_row(&mut table, "threaded", label, &lat, wall);
+        }
+    }
+    {
+        let sess = NetSession::launch(&cfg, w.data.dim)?;
+        let mut cluster = build_index_on(sess.executor(), &cfg, &w.data, b.hasher.as_ref());
+        for (label, window) in modes {
+            let (lat, wall) =
+                streaming_mode_latencies(sess.executor(), &mut cluster, &w, &b, window);
+            streaming_row(&mut table, "socket", label, &lat, wall);
+        }
+        sess.shutdown()?;
+    }
+
+    let json = format!(
+        "{{\"experiment\":\"streaming\",\"table\":{}}}\n",
+        table.to_json()
     );
     Ok((table, json))
 }

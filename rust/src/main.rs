@@ -8,7 +8,7 @@
 //! parlsh worker  --listen=ADDR                    socket-transport worker
 //! parlsh experiment <id>                          regenerate a paper table
 //!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation
-//!             executors net history all
+//!             executors net streaming history all
 //! parlsh calibrate                                measure cost-model consts
 //! ```
 
@@ -79,18 +79,20 @@ USAGE:
   parlsh worker --listen=ADDR        host a node's stage copies (spawned
                                      by the socket driver; prints
                                      `PARLSH_WORKER_LISTEN <addr>`)
-  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|net|history|all>
-                                     (`executors`/`net` also write
-                                     BENCH_executors.json / BENCH_net.json
-                                     and archive them under bench_history/
-                                     keyed by git SHA; `history` diffs the
-                                     archived runs; `net` spawns processes
-                                     and is not part of `all`)
+  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|net|streaming|history|all>
+                                     (`executors`/`net`/`streaming` also
+                                     write BENCH_*.json and archive them
+                                     under bench_history/ keyed by git
+                                     SHA; `history` diffs the archived
+                                     runs; `net` and `streaming` spawn
+                                     processes and are not part of `all`)
   parlsh tune       [--target=0.8] [--set ...]    suggest w, tune T (and M)
   parlsh calibrate
 
-`serve` admission: --set stream.inflight=W bounds in-flight queries
-(closed loop); 0 = open loop (default).
+`serve` admission is streaming: a query enters the pipeline the moment it
+is submitted. --set stream.inflight=W bounds queries in flight inside the
+pipeline (0 = open loop, default); --set stream.pending_cap=P adds
+backpressure — submission blocks while P queries are outstanding.
 
 Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
 scalar path; PARLSH_ARTIFACTS points at the AOT artifact dir;
@@ -258,7 +260,7 @@ fn serve_session(
     let window = cfg.stream.inflight;
     let mut cluster = Cluster::empty(cfg, dim);
     let session =
-        IndexSession::attach(exec, &mut cluster, b.hasher.as_ref(), Some(b.ranker.as_ref()));
+        IndexSession::attach(exec, &mut cluster, b.hasher.as_ref(), Some(b.ranker.clone()));
     let t = Timer::start();
     session.insert(&w.data);
     println!(
@@ -309,7 +311,9 @@ fn serve_session(
     let secs = t.secs();
     let stats = session.close();
 
-    let lat = latency_stats(&stats.per_query_secs);
+    // bounded accounting: exact mean/max + reservoir percentiles, O(1)
+    // per query served — a resident session no longer grows with traffic
+    let lat = stats.latency.stats();
     println!(
         "session closed: {submitted} queries in {secs:.2}s ({:.1} q/s, {transport} executor, {admission})",
         submitted as f64 / secs.max(1e-9),
@@ -407,6 +411,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 std::fs::write("BENCH_net.json", json)?;
                 let archived = exp::archive_bench("BENCH_net.json")?;
                 println!("(wrote BENCH_net.json; archived {archived})");
+            }
+            "streaming" => {
+                println!("== Streaming vs pumped admission: per-query latency ==");
+                let (t, json) = exp::streaming_comparison()?;
+                t.print();
+                std::fs::write("BENCH_streaming.json", json)?;
+                let archived = exp::archive_bench("BENCH_streaming.json")?;
+                println!("(wrote BENCH_streaming.json; archived {archived})");
             }
             "history" => {
                 println!("== Bench history (bench_history/, latest two runs per experiment) ==");

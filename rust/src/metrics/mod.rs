@@ -27,6 +27,96 @@ pub fn latency_stats(samples: &[f64]) -> LatencyStats {
     }
 }
 
+/// Default reservoir size of [`LatencySummary`] — plenty for stable p99
+/// estimates, bounded regardless of how long a serving session lives.
+const LATENCY_RESERVOIR: usize = 4096;
+
+/// Bounded per-query latency accounting for resident serving sessions:
+/// exact count / mean / max plus a fixed-size uniform reservoir (algorithm
+/// R, deterministic xorshift) for percentile estimates. Replaces the
+/// grows-forever per-ticket `Vec<f64>` a long-lived `parlsh serve` session
+/// would otherwise leak memory into.
+#[derive(Clone, Debug)]
+pub struct LatencySummary {
+    /// Samples recorded over the summary's lifetime (exact).
+    pub count: u64,
+    /// Sum of all samples, seconds (exact mean = `sum_secs / count`).
+    pub sum_secs: f64,
+    /// Largest sample, seconds (exact).
+    pub max_secs: f64,
+    /// Smallest sample, seconds (exact; 0 while empty).
+    pub min_secs: f64,
+    reservoir: Vec<f64>,
+    rng: u64,
+}
+
+impl Default for LatencySummary {
+    fn default() -> Self {
+        LatencySummary::new()
+    }
+}
+
+impl LatencySummary {
+    pub fn new() -> LatencySummary {
+        LatencySummary {
+            count: 0,
+            sum_secs: 0.0,
+            max_secs: 0.0,
+            min_secs: 0.0,
+            reservoir: Vec::new(),
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        // xorshift64* — deterministic, dependency-free
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Record one sample (seconds). O(1), bounded memory.
+    pub fn record(&mut self, secs: f64) {
+        self.count += 1;
+        self.sum_secs += secs;
+        if secs > self.max_secs {
+            self.max_secs = secs;
+        }
+        if self.count == 1 || secs < self.min_secs {
+            self.min_secs = secs;
+        }
+        if self.reservoir.len() < LATENCY_RESERVOIR {
+            self.reservoir.push(secs);
+        } else {
+            // algorithm R: keep each of the `count` samples with equal
+            // probability LATENCY_RESERVOIR / count
+            let j = (self.next_rand() % self.count) as usize;
+            if j < LATENCY_RESERVOIR {
+                self.reservoir[j] = secs;
+            }
+        }
+    }
+
+    /// Percentile/mean snapshot: mean and max are exact, percentiles come
+    /// from the reservoir (exact too while `count` ≤ the reservoir size).
+    pub fn stats(&self) -> LatencyStats {
+        if self.count == 0 {
+            return LatencyStats::default();
+        }
+        let mut s = self.reservoir.clone();
+        LatencyStats {
+            mean_ms: self.sum_secs / self.count as f64 * 1e3,
+            p50_ms: percentile(&mut s, 50.0) * 1e3,
+            p90_ms: percentile(&mut s, 90.0) * 1e3,
+            p99_ms: percentile(&mut s, 99.0) * 1e3,
+            max_ms: self.max_secs * 1e3,
+        }
+    }
+}
+
 /// Fixed-width table printer used by the experiment harness so every bench
 /// emits the paper's rows in a uniform format.
 pub struct Table {
@@ -307,6 +397,46 @@ mod tests {
     fn latency_stats_empty() {
         let st = latency_stats(&[]);
         assert_eq!(st.mean_ms, 0.0);
+    }
+
+    #[test]
+    fn latency_summary_is_exact_below_reservoir_size() {
+        let mut s = LatencySummary::new();
+        for i in 1..=100 {
+            s.record(i as f64 / 1000.0);
+        }
+        assert_eq!(s.count, 100);
+        let st = s.stats();
+        let exact = latency_stats(&(1..=100).map(|i| i as f64 / 1000.0).collect::<Vec<_>>());
+        assert!((st.p50_ms - exact.p50_ms).abs() < 1e-9);
+        assert!((st.p99_ms - exact.p99_ms).abs() < 1e-9);
+        assert!((st.mean_ms - exact.mean_ms).abs() < 1e-9);
+        assert!((st.max_ms - exact.max_ms).abs() < 1e-9);
+        assert!((s.min_secs - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_summary_memory_stays_bounded() {
+        let mut s = LatencySummary::new();
+        for i in 0..100_000u64 {
+            s.record((i % 97) as f64 * 1e-4);
+        }
+        assert_eq!(s.count, 100_000);
+        assert!(s.reservoir.len() <= LATENCY_RESERVOIR);
+        let st = s.stats();
+        // exact counters unaffected by sampling
+        assert!((st.max_ms - 9.6).abs() < 1e-9);
+        assert!(st.mean_ms > 0.0);
+        // the reservoir percentile lands in the sample range
+        assert!(st.p50_ms >= 0.0 && st.p50_ms <= st.max_ms);
+        assert!(st.p99_ms <= st.max_ms && st.p99_ms >= st.p50_ms);
+    }
+
+    #[test]
+    fn latency_summary_empty() {
+        let s = LatencySummary::new();
+        assert_eq!(s.stats().mean_ms, 0.0);
+        assert_eq!(s.count, 0);
     }
 
     #[test]

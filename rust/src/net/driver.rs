@@ -11,6 +11,13 @@
 //! `search_on`, exactly like the in-process `Cluster` does — and ends with
 //! a typed `Shutdown` that joins every worker (no leaked processes).
 //!
+//! Besides one-shot phase runs, [`SocketExecutor`] implements
+//! [`Executor::open_stream`]: a dedicated admission thread takes over the
+//! hot worker connections for the run's lifetime, submissions are admitted
+//! the moment they arrive (no per-pump workload), and the
+//! `FlushReq`/`FlushAck` meter barrier runs once per stream at `finish`
+//! instead of once per pump.
+//!
 //! [`SocketExecutor::run`] mirrors the threaded executor's admission loop:
 //! closed-loop batched admission via `Workload::window`, completion events
 //! from the (local) AG copies, and per-query `Done` acks fanned out to the
@@ -24,7 +31,10 @@
 //! not the `wire_size` model.
 
 use crate::config::Config;
-use crate::dataflow::exec::{ExecReport, Executor, StageHandler, StageHandlers, Workload};
+use crate::dataflow::exec::{
+    ExecReport, Executor, GateGuard, StageHandler, StageHandlers, StreamCompletion,
+    StreamConfig, StreamGate, StreamReport, StreamRun, Workload,
+};
 use crate::dataflow::message::{Dest, Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
@@ -32,13 +42,13 @@ use crate::net::peer::{connect_retry, PeerConn};
 use crate::net::wire::{self, FrameKind, Hello, NodeState};
 use crate::stages::aggregator::QueryResult;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader};
 use std::net::TcpStream;
 use std::path::Path;
 use std::process::{Child, Command, Stdio};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// How long to wait on control responses (handshake, barriers, snapshots).
@@ -46,7 +56,9 @@ const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
 /// How long a phase may sit with no event at all before we call it wedged.
 const PHASE_STALL_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// Events the per-worker reader threads feed the driver.
+/// Events the per-worker reader threads feed the driver. `Ingress` and
+/// `Finish` come from a streaming run's handle instead of a socket — one
+/// unified channel stands in for a select over submissions + wire events.
 enum DriverEv {
     HelloOk { from: u16, node: u16, digest: u64 },
     Msg { from: u16, dest: Dest, msg: Msg },
@@ -59,15 +71,30 @@ enum DriverEv {
     State { from: u16, state: NodeState },
     Stopped { from: u16, reason: String },
     Closed { from: u16, err: String },
+    /// Streaming submission ([`StreamRun::submit`]).
+    Ingress(Msg),
+    /// Streaming barrier: wind the run down at quiescence.
+    Finish,
 }
 
 struct Session {
     peers: Vec<PeerConn>,
     ev_rx: Receiver<DriverEv>,
+    /// Sender half of `ev_rx` — streaming runs clone it for their ingress.
+    ev_tx: Sender<DriverEv>,
     placement: Placement,
     /// Worker nodes hosting at least one DP copy (get per-query `Done`s).
     dp_hosts: Vec<u16>,
     flush_seq: u32,
+    /// A streaming run currently owns `peers`/`ev_rx`; phase runs,
+    /// snapshots and shutdown must wait for its `finish`.
+    stream_open: bool,
+    /// A streaming run died on this executor. The returned connection
+    /// state may hold stale events (undrained ingress, in-flight frames
+    /// for cancelled queries), so everything except `shutdown` refuses to
+    /// touch it — relaunch the `NetSession` instead of risking a poisoned
+    /// phase on a half-dead fleet.
+    broken: bool,
 }
 
 /// An [`Executor`] that runs BI/DP stages on remote worker processes. The
@@ -93,6 +120,452 @@ impl Executor for SocketExecutor {
             Err(e) => panic!("socket phase failed: {e}"),
         }
     }
+
+    /// A streaming run over the live worker fleet: connections stay hot,
+    /// submissions are admitted the moment they arrive, and the
+    /// `FlushReq`/`FlushAck` barrier happens once per stream (at `finish`)
+    /// instead of once per pump. The admission loop moves onto a dedicated
+    /// thread that owns the peer connections for the run's lifetime.
+    fn open_stream<'e>(
+        &'e self,
+        placement: &Placement,
+        stages: StageHandlers<'static>,
+        cfg: StreamConfig,
+    ) -> Box<dyn StreamRun + 'e> {
+        let mut s = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if s.broken {
+            panic!("a previous streaming run on this socket executor failed; relaunch the NetSession");
+        }
+        if s.stream_open {
+            panic!("a streaming run is already open on this socket executor");
+        }
+        if s.peers.len() + 1 != s.placement.total_nodes() {
+            panic!(
+                "socket executor holds {}/{} worker connections (a streaming run died \
+                 without returning them); relaunch the NetSession",
+                s.peers.len(),
+                s.placement.total_nodes() - 1
+            );
+        }
+        if *placement != s.placement {
+            panic!("stream placement differs from the placement workers were launched with");
+        }
+        let peers = std::mem::take(&mut s.peers);
+        let ev_rx = std::mem::replace(&mut s.ev_rx, mpsc::channel().1);
+        let ev_tx = s.ev_tx.clone();
+        let dp_hosts = s.dp_hosts.clone();
+        let flush_seq = s.flush_seq;
+        s.stream_open = true;
+        drop(s);
+
+        let StageHandlers { head, bis, dps, ags } = stages;
+        drop(bis); // BI/DP state lives in the workers, not behind these
+        drop(dps);
+
+        let gate = Arc::new(StreamGate::new(cfg.pending_cap));
+        let (eg_tx, eg_rx) = mpsc::channel::<StreamCompletion>();
+        let g = gate.clone();
+        let p = placement.clone();
+        let admission = std::thread::spawn(move || {
+            socket_stream_loop(
+                head, ags, peers, ev_rx, eg_tx, g, p, dp_hosts, cfg, flush_seq,
+            )
+        });
+        Box::new(SocketStreamRun {
+            exec: self,
+            ev_tx,
+            gate,
+            egress_rx: eg_rx,
+            admission: Some(admission),
+        })
+    }
+}
+
+/// What the socket streaming admission thread hands back at join: the
+/// run's accounting plus the connection state it borrowed from the
+/// executor, restored by [`SocketStreamRun::finish`].
+struct SocketStreamJoin {
+    peers: Vec<PeerConn>,
+    ev_rx: Receiver<DriverEv>,
+    meter: TrafficMeter,
+    work: Vec<(StageKind, u16, WorkStats)>,
+    flush_seq: u32,
+    error: Option<String>,
+}
+
+/// The socket transport's [`StreamRun`] handle.
+pub struct SocketStreamRun<'e> {
+    exec: &'e SocketExecutor,
+    ev_tx: Sender<DriverEv>,
+    gate: Arc<StreamGate>,
+    egress_rx: Receiver<StreamCompletion>,
+    admission: Option<std::thread::JoinHandle<SocketStreamJoin>>,
+}
+
+impl SocketStreamRun<'_> {
+    /// Wind the admission thread down and hand the connections back to the
+    /// executor, returning the run's accounting (+ typed failure, if any).
+    fn wind_down(&mut self) -> (TrafficMeter, Vec<(StageKind, u16, WorkStats)>, Option<String>) {
+        let _ = self.ev_tx.send(DriverEv::Finish);
+        let handle = self.admission.take().expect("socket stream already wound down");
+        let join = handle
+            .join()
+            .unwrap_or_else(|p| std::panic::resume_unwind(p));
+        let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+        s.peers = join.peers;
+        s.ev_rx = join.ev_rx;
+        s.flush_seq = join.flush_seq;
+        s.stream_open = false;
+        // A died stream can leave stale events (undrained ingress,
+        // frames for cancelled queries) in the restored channel: refuse
+        // further use instead of poisoning the next phase.
+        s.broken |= join.error.is_some();
+        (join.meter, join.work, join.error)
+    }
+
+    fn die(&mut self) -> ! {
+        if self.admission.is_some() {
+            let (_, _, error) = self.wind_down();
+            if let Some(e) = error {
+                panic!("socket stream failed: {e}");
+            }
+        }
+        panic!("socket stream run died");
+    }
+}
+
+impl StreamRun for SocketStreamRun<'_> {
+    fn submit(&mut self, msg: Msg) {
+        let gated = msg.qid().is_some();
+        if gated && !self.gate.acquire() {
+            self.die();
+        }
+        if self.ev_tx.send(DriverEv::Ingress(msg)).is_err() {
+            self.die();
+        }
+    }
+
+    fn try_submit(&mut self, msg: Msg) -> std::result::Result<(), Msg> {
+        if msg.qid().is_some() {
+            match self.gate.try_acquire() {
+                Ok(true) => {}
+                Ok(false) => return Err(msg),
+                Err(()) => self.die(),
+            }
+        }
+        if self.ev_tx.send(DriverEv::Ingress(msg)).is_err() {
+            self.die();
+        }
+        Ok(())
+    }
+
+    fn can_submit(&self) -> bool {
+        self.gate.has_room()
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Option<StreamCompletion> {
+        match self.egress_rx.recv_timeout(timeout) {
+            Ok(c) => Some(c),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => self.die(),
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<StreamCompletion> {
+        match self.egress_rx.try_recv() {
+            Ok(c) => Some(c),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => self.die(),
+        }
+    }
+
+    fn finish(mut self: Box<Self>) -> StreamReport {
+        let (meter, work, error) = self.wind_down();
+        if let Some(e) = error {
+            panic!("socket stream failed: {e}");
+        }
+        let mut unclaimed = Vec::new();
+        while let Ok(c) = self.egress_rx.try_recv() {
+            unclaimed.push(c);
+        }
+        StreamReport { unclaimed, meter, work }
+    }
+}
+
+impl Drop for SocketStreamRun<'_> {
+    fn drop(&mut self) {
+        // Dropped without `finish` (caller unwound): wind down and restore
+        // the connections without panicking — aborting during an unwind
+        // would take the whole process down.
+        if let Some(handle) = self.admission.take() {
+            let _ = self.ev_tx.send(DriverEv::Finish);
+            match handle.join() {
+                Ok(join) => {
+                    let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+                    s.peers = join.peers;
+                    s.ev_rx = join.ev_rx;
+                    s.flush_seq = join.flush_seq;
+                    s.stream_open = false;
+                    s.broken |= join.error.is_some();
+                }
+                Err(_) => {
+                    // The admission thread panicked and took the worker
+                    // connections down with it. Clear the stream flag so
+                    // the executor fails on the lost-connection guard
+                    // (the real story) instead of wedging forever behind
+                    // a misleading "stream open" error.
+                    eprintln!(
+                        "[parlsh] socket stream admission thread panicked; \
+                         worker connections lost"
+                    );
+                    let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+                    s.stream_open = false;
+                    s.broken = true;
+                }
+            }
+        }
+    }
+}
+
+/// The socket streaming admission loop (its own thread): the streaming
+/// rendition of [`Session::run_phase`] — closed-loop windowed admission,
+/// deferred ingress, local AG delivery, per-completion `Done` acks and
+/// gate releases — with the worker-meter barrier run once at the end.
+#[allow(clippy::too_many_arguments)]
+fn socket_stream_loop(
+    mut head: Box<dyn StageHandler>,
+    mut ags: Vec<Box<dyn StageHandler>>,
+    mut peers: Vec<PeerConn>,
+    ev_rx: Receiver<DriverEv>,
+    egress: mpsc::Sender<StreamCompletion>,
+    gate: Arc<StreamGate>,
+    placement: Placement,
+    dp_hosts: Vec<u16>,
+    cfg: StreamConfig,
+    mut flush_seq: u32,
+) -> SocketStreamJoin {
+    // Opens the gate on every exit path so blocked submitters never hang
+    // on a dead run.
+    let _gg = GateGuard(gate.clone());
+    let mut meter = TrafficMeter::new(cfg.agg_bytes);
+    meter.header_bytes = 0; // frames carry their real header in len
+    let head_node = placement.head_node;
+    let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+    let mut pending: VecDeque<Msg> = VecDeque::new();
+    let mut local_q: VecDeque<(Dest, Msg)> = VecDeque::new();
+    let mut comps: Vec<QueryResult> = Vec::new();
+    let mut dispatch_ts: HashMap<u32, Instant> = HashMap::new();
+    let mut in_flight = 0usize;
+    let mut finishing = false;
+    let mut error: Option<String> = None;
+
+    'run: loop {
+        // Admit deferred ingress while the window allows (non-query items
+        // are never windowed — same policy as the phase run).
+        while error.is_none() {
+            let next_is_query = match pending.front() {
+                None => break,
+                Some(m) => m.qid().is_some(),
+            };
+            if next_is_query && cfg.window != 0 && in_flight >= cfg.window {
+                break;
+            }
+            let item = pending.pop_front().expect("peeked non-empty");
+            let item_qid = item.qid();
+            head.on_msg(item, &mut emitted);
+            if let Some(qid) = item_qid {
+                dispatch_ts.insert(qid, Instant::now());
+                in_flight += 1;
+            }
+            for (dest, msg) in emitted.drain(..) {
+                let node = placement.node_of(dest.stage, dest.copy);
+                if node == head_node {
+                    meter.send(head_node, head_node, 0);
+                    local_q.push_back((dest, msg));
+                } else {
+                    let frame = wire::stage_frame(dest, &msg);
+                    meter.send(head_node, node, frame.len());
+                    if let Err(e) = peers[node as usize].send(&frame) {
+                        error = Some(format!("send to worker {node}: {e}"));
+                        break;
+                    }
+                }
+            }
+            if error.is_some() {
+                break;
+            }
+            if let Err(e) = drain_local_stream(
+                &mut local_q,
+                &mut ags,
+                &mut comps,
+                &mut dispatch_ts,
+                &mut in_flight,
+                &mut peers,
+                &dp_hosts,
+                &gate,
+                &egress,
+            ) {
+                error = Some(e);
+            }
+        }
+        if error.is_some() || (finishing && pending.is_empty() && in_flight == 0) {
+            break 'run;
+        }
+        // Everything queued must reach the wire before blocking, or the
+        // closed loop deadlocks on a buffered frame.
+        for p in peers.iter_mut() {
+            if let Err(e) = p.flush() {
+                error = Some(format!("flush: {e}"));
+                continue 'run;
+            }
+        }
+        // Idle is normal on a long-lived stream, so the stall clock only
+        // runs while queries are actually in flight.
+        let ev = if in_flight > 0 {
+            match ev_rx.recv_timeout(PHASE_STALL_TIMEOUT) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    error = Some(format!(
+                        "stream stalled: {in_flight} queries in flight after {}s of silence",
+                        PHASE_STALL_TIMEOUT.as_secs()
+                    ));
+                    continue 'run;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    error = Some("all worker readers exited".into());
+                    continue 'run;
+                }
+            }
+        } else {
+            match ev_rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => {
+                    error = Some("all worker readers exited".into());
+                    continue 'run;
+                }
+            }
+        };
+        match ev {
+            DriverEv::Ingress(m) => pending.push_back(m),
+            DriverEv::Finish => finishing = true,
+            DriverEv::Msg { dest, msg, .. } => {
+                local_q.push_back((dest, msg));
+                if let Err(e) = drain_local_stream(
+                    &mut local_q,
+                    &mut ags,
+                    &mut comps,
+                    &mut dispatch_ts,
+                    &mut in_flight,
+                    &mut peers,
+                    &dp_hosts,
+                    &gate,
+                    &egress,
+                ) {
+                    error = Some(e);
+                }
+            }
+            DriverEv::Stopped { from, reason } => {
+                error = Some(format!("worker {from} stopped mid-stream: {reason}"));
+            }
+            DriverEv::Closed { from, err } => {
+                error = Some(format!("worker {from} connection lost mid-stream: {err}"));
+            }
+            _ => error = Some("unexpected control frame mid-stream".into()),
+        }
+    }
+
+    // Quiescence barrier: collect every worker's meter and per-copy work
+    // exactly once per stream — not once per pump. Skipped if the run
+    // already died.
+    let mut work: Vec<(StageKind, u16, WorkStats)> = Vec::new();
+    if error.is_none() {
+        flush_seq += 1;
+        let req = wire::encode_frame(FrameKind::FlushReq, &wire::encode_qid(flush_seq));
+        for p in peers.iter_mut() {
+            if let Err(e) = p.send_now(&req) {
+                error = Some(format!("barrier send: {e}"));
+                break;
+            }
+        }
+        let n_workers = peers.len();
+        let mut acks = 0usize;
+        while error.is_none() && acks < n_workers {
+            match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                Ok(DriverEv::FlushAck { seq, meter: m, work: w, from }) => {
+                    if seq != flush_seq {
+                        error = Some(format!(
+                            "worker {from} acked barrier {seq}, expected {flush_seq}"
+                        ));
+                    } else {
+                        meter.merge(&m);
+                        work.extend(w);
+                        acks += 1;
+                    }
+                }
+                Ok(DriverEv::Stopped { from, reason }) => {
+                    error = Some(format!("worker {from} stopped at barrier: {reason}"));
+                }
+                Ok(DriverEv::Closed { from, err }) => {
+                    error = Some(format!("worker {from} connection lost at barrier: {err}"));
+                }
+                // late chatter from the run handle; harmless at a barrier
+                Ok(DriverEv::Ingress(_)) | Ok(DriverEv::Finish) => {}
+                Ok(_) => error = Some("unexpected frame at stream barrier".into()),
+                Err(e) => error = Some(format!("stream barrier: {e}")),
+            }
+        }
+    }
+    meter.flush();
+    SocketStreamJoin { peers, ev_rx, meter, work, flush_seq, error }
+}
+
+/// Deliver queued head-node messages on a streaming run and handle
+/// completions: latency from the per-qid dispatch stamp, `Done` acks to
+/// every DP host, a gate release, and the completion onto the egress.
+#[allow(clippy::too_many_arguments)]
+fn drain_local_stream(
+    local_q: &mut VecDeque<(Dest, Msg)>,
+    ags: &mut [Box<dyn StageHandler>],
+    comps: &mut Vec<QueryResult>,
+    dispatch_ts: &mut HashMap<u32, Instant>,
+    in_flight: &mut usize,
+    peers: &mut [PeerConn],
+    dp_hosts: &[u16],
+    gate: &StreamGate,
+    egress: &mpsc::Sender<StreamCompletion>,
+) -> std::result::Result<(), String> {
+    let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+    while let Some((dest, msg)) = local_q.pop_front() {
+        if dest.stage != StageKind::Ag {
+            return Err(format!("{:?} message addressed to the head node", dest.stage));
+        }
+        let ag = match ags.get_mut(dest.copy as usize) {
+            Some(a) => a,
+            None => return Err(format!("no AG copy {}", dest.copy)),
+        };
+        ag.on_msg(msg, &mut emitted);
+        debug_assert!(emitted.is_empty(), "AG emitted a message");
+        emitted.clear();
+        ag.take_completions(comps);
+        for (qid, hits) in comps.drain(..) {
+            let secs = dispatch_ts
+                .remove(&qid)
+                .map(|t| t.elapsed().as_secs_f64())
+                .unwrap_or(0.0);
+            *in_flight = in_flight.saturating_sub(1);
+            // The completion ack: closes the inflight loop and drops the
+            // remote per-query dedup state. Control — never metered.
+            let done = wire::encode_frame(FrameKind::Done, &wire::encode_qid(qid));
+            for &node in dp_hosts {
+                if let Err(e) = peers[node as usize].send(&done) {
+                    return Err(format!("done ack to worker {node}: {e}"));
+                }
+            }
+            gate.release();
+            let _ = egress.send(StreamCompletion { qid, hits, secs });
+        }
+    }
+    Ok(())
 }
 
 impl Session {
@@ -102,6 +575,20 @@ impl Session {
         stages: StageHandlers<'_>,
         workload: Workload<'_>,
     ) -> Result<ExecReport> {
+        if self.broken {
+            bail!("a previous streaming run on this socket executor failed; relaunch the NetSession");
+        }
+        if self.stream_open {
+            bail!("a streaming run is open on this socket executor; finish it before a phase run");
+        }
+        if self.peers.len() + 1 != self.placement.total_nodes() {
+            bail!(
+                "socket executor holds {}/{} worker connections (a streaming run died \
+                 without returning them); relaunch the NetSession",
+                self.peers.len(),
+                self.placement.total_nodes() - 1
+            );
+        }
         if *placement != self.placement {
             bail!("phase placement differs from the placement workers were launched with");
         }
@@ -332,18 +819,22 @@ impl NetSession {
                 cfg.sock.listen
             );
         }
+        let placeholder = mpsc::channel();
         let mut session = NetSession {
             children: Vec::with_capacity(n_workers),
             exec: SocketExecutor {
                 inner: Mutex::new(Session {
                     peers: Vec::new(),
-                    ev_rx: mpsc::channel().1, // replaced below
+                    ev_tx: placeholder.0, // replaced below
+                    ev_rx: placeholder.1,
                     placement: placement.clone(),
                     dp_hosts: (cfg.cluster.bi_nodes
                         ..cfg.cluster.bi_nodes + cfg.cluster.dp_nodes)
                         .map(|n| n as u16)
                         .collect(),
                     flush_seq: 0,
+                    stream_open: false,
+                    broken: false,
                 }),
             },
         };
@@ -360,6 +851,8 @@ impl NetSession {
                 .arg(format!("net.connect_retries={}", cfg.sock.connect_retries))
                 .arg("--set")
                 .arg(format!("net.retry_ms={}", cfg.sock.retry_ms))
+                .arg("--set")
+                .arg(format!("net.queue_frames={}", cfg.sock.queue_frames))
                 .stdin(Stdio::null())
                 .stdout(Stdio::piped())
                 .stderr(Stdio::inherit())
@@ -442,6 +935,7 @@ impl NetSession {
             let inner = session.exec.inner.get_mut().unwrap_or_else(|p| p.into_inner());
             inner.peers = peers;
             inner.ev_rx = ev_rx;
+            inner.ev_tx = ev_tx;
         }
         Ok(session)
     }
@@ -455,6 +949,20 @@ impl NetSession {
     /// tests; one `(node, state)` pair per worker, node-sorted).
     pub fn fetch_state(&self) -> Result<Vec<(u16, NodeState)>> {
         let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if s.broken {
+            bail!("a previous streaming run on this socket executor failed; relaunch the NetSession");
+        }
+        if s.stream_open {
+            bail!("a streaming run is open; finish it before snapshotting worker state");
+        }
+        if s.peers.len() + 1 != s.placement.total_nodes() {
+            bail!(
+                "socket executor holds {}/{} worker connections (a streaming run died \
+                 without returning them)",
+                s.peers.len(),
+                s.placement.total_nodes() - 1
+            );
+        }
         let Session { peers, ev_rx, .. } = &mut *s;
         let req = wire::encode_frame(FrameKind::StateReq, &[]);
         for p in peers.iter_mut() {
@@ -484,6 +992,17 @@ impl NetSession {
     pub fn shutdown(mut self) -> Result<()> {
         {
             let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+            if s.stream_open {
+                bail!("a streaming run is open; finish it before shutting the workers down");
+            }
+            if s.peers.len() + 1 != s.placement.total_nodes() {
+                bail!(
+                    "socket executor holds {}/{} worker connections (a streaming run died \
+                     without returning them); workers will be killed, not joined",
+                    s.peers.len(),
+                    s.placement.total_nodes() - 1
+                );
+            }
             let frame = wire::encode_frame(FrameKind::Shutdown, &[]);
             for p in s.peers.iter_mut() {
                 p.send_now(&frame)?;

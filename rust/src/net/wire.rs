@@ -534,6 +534,10 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
         dedup: c.u8()? != 0,
         max_candidates: c.u64()? as usize,
         inflight: c.u64()? as usize,
+        // Session-side backpressure knob: never crosses the wire (workers
+        // don't admit), and is deliberately excluded from the config
+        // digest on both ends.
+        pending_cap: 0,
     };
     c.done()?;
     Ok(Hello { node, dim, peers, lsh, cluster, stream, digest })
@@ -928,6 +932,7 @@ mod tests {
                 dedup: true,
                 max_candidates: 7,
                 inflight: 2,
+                pending_cap: 0,
             },
             digest: 0,
         };

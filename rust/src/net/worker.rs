@@ -8,7 +8,10 @@
 //! connection identifies the sender: `Hello` (the driver — carries node
 //! assignment, placement, config and digest) or `PeerHello` (another
 //! worker). Per-connection reader threads decode frames into one internal
-//! channel; the main thread owns all stage state and processes events in
+//! *bounded* channel (`net.queue_frames`: a full queue blocks the reader,
+//! pushing backpressure onto the TCP sender instead of buffering an
+//! unbounded backlog); the main thread owns all stage state and processes
+//! events in
 //! arrival order, which preserves the per-connection FIFO that the build
 //! state-identity contract relies on (each BI/DP copy sees the single IR
 //! source in emission order, exactly like the in-process executors).
@@ -39,7 +42,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError};
 
 /// Events the reader threads feed the dispatch loop.
 enum Ev {
@@ -72,13 +75,19 @@ pub fn serve(listen: &str, sock: &SocketConfig) -> Result<()> {
     println!("PARLSH_WORKER_LISTEN {addr}");
     std::io::stdout().flush().ok();
 
-    let (tx, rx) = mpsc::channel::<Ev>();
+    // Bounded reader→dispatch queue (`net.queue_frames`): a full queue
+    // blocks the connection's reader thread, which stops draining its TCP
+    // socket, which backpressures the sender — instead of buffering an
+    // unbounded frame backlog in worker memory. The dataflow is a DAG
+    // (driver → BI → DP → driver) and the driver always drains its side,
+    // so bounded queues here cannot deadlock the pipeline.
+    let (tx, rx) = mpsc::sync_channel::<Ev>(sock.queue_frames.max(1));
     let max_frame = sock.max_frame_bytes;
     std::thread::spawn(move || accept_loop(listener, tx, max_frame));
     dispatch(rx, sock.clone())
 }
 
-fn accept_loop(listener: TcpListener, tx: Sender<Ev>, max_frame: usize) {
+fn accept_loop(listener: TcpListener, tx: SyncSender<Ev>, max_frame: usize) {
     for conn in listener.incoming() {
         let Ok(stream) = conn else { continue };
         stream.set_nodelay(true).ok();
@@ -89,7 +98,7 @@ fn accept_loop(listener: TcpListener, tx: Sender<Ev>, max_frame: usize) {
 
 /// One reader per accepted connection: identify the sender by its first
 /// frame, then translate frames into events until EOF.
-fn conn_reader(mut stream: TcpStream, tx: Sender<Ev>, max_frame: usize) {
+fn conn_reader(mut stream: TcpStream, tx: SyncSender<Ev>, max_frame: usize) {
     let first = match wire::read_frame(&mut stream, max_frame) {
         Ok(f) => f,
         // A connection that closes before identifying itself (e.g. a
@@ -131,7 +140,7 @@ fn conn_reader(mut stream: TcpStream, tx: Sender<Ev>, max_frame: usize) {
     reader_rest(stream, tx, max_frame, from_driver)
 }
 
-fn reader_rest(mut stream: TcpStream, tx: Sender<Ev>, max_frame: usize, from_driver: bool) {
+fn reader_rest(mut stream: TcpStream, tx: SyncSender<Ev>, max_frame: usize, from_driver: bool) {
     loop {
         match wire::read_frame(&mut stream, max_frame) {
             Ok(f) => {

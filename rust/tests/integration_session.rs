@@ -18,9 +18,10 @@ use parlsh::data::Dataset;
 use parlsh::dataflow::exec::{Executor, ThreadedExecutor};
 use parlsh::dataflow::message::StageKind;
 use parlsh::net::NetSession;
-use parlsh::runtime::{ScalarHasher, ScalarRanker};
+use parlsh::runtime::{Ranker, ScalarHasher, ScalarRanker};
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 fn session_cfg() -> Config {
     let mut cfg = Config::default();
@@ -33,11 +34,14 @@ fn session_cfg() -> Config {
     cfg
 }
 
-fn small_world(cfg: &Config, queries: usize) -> (Dataset, Dataset, ScalarHasher, ScalarRanker) {
+fn small_world(
+    cfg: &Config,
+    queries: usize,
+) -> (Dataset, Dataset, ScalarHasher, Arc<dyn Ranker>) {
     let ds = synthesize(SynthSpec { n: cfg.data.n, clusters: 40, ..Default::default() });
     let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
     let family = HashFamily::sample(ds.dim, cfg.lsh);
-    let ranker = ScalarRanker { dim: ds.dim };
+    let ranker: Arc<dyn Ranker> = Arc::new(ScalarRanker { dim: ds.dim });
     (ds, qs, ScalarHasher { family }, ranker)
 }
 
@@ -63,7 +67,7 @@ fn assert_concurrent_submitters_match_oracle(exec: &dyn Executor, cfg: &Config) 
     // Build through the executor under test (under the socket transport
     // the index must land in the workers, not in this process).
     let mut cluster = parlsh::coordinator::build_index_on(exec, cfg, &ds, &hasher);
-    let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(&ranker));
+    let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
     let assignments: Vec<(usize, parlsh::QueryTicket)> = std::thread::scope(|s| {
         let submit_half = |start: usize| {
             let session = &session;
@@ -171,8 +175,12 @@ fn socket_session_build_insert_search_without_rehandshake() {
     let net = NetSession::launch_with_bin(Path::new(bin), &cfg, both.dim).expect("launch workers");
     let mut cluster = Cluster::empty(&cfg, both.dim);
     {
-        let session =
-            IndexSession::attach(net.executor(), &mut cluster, &hasher, Some(&ranker));
+        let session = IndexSession::attach(
+            net.executor(),
+            &mut cluster,
+            &hasher,
+            Some(ranker.clone()),
+        );
         assert_eq!(session.insert(&ds1), 0..ds1.len() as u32);
         assert_eq!(session.insert(&ds2), ds1.len() as u32..both.len() as u32);
 
@@ -187,7 +195,10 @@ fn socket_session_build_insert_search_without_rehandshake() {
             assert_eq!(got[&t.0], oracle.results[qi], "query {qi} diverged over the wire");
         }
 
-        let stats = session.stats();
+        // Final accounting comes from close(): under the socket transport
+        // the remote per-copy work arrives at the stream-finish barrier,
+        // so a mid-stream stats() snapshot would not include it yet.
+        let stats = session.close();
         assert_eq!(stats.objects_indexed as usize, both.len());
         assert_eq!(stats.queries_completed, qs.len() as u64);
         assert!(stats.build_meter.logical_msgs > 0);
@@ -200,7 +211,6 @@ fn socket_session_build_insert_search_without_rehandshake() {
                 .any(|(s, _, w)| *s == StageKind::Dp && w.dists_computed > 0),
             "session work stats are head-only under the socket transport"
         );
-        session.close();
     }
 
     // Worker-side state after build + insert == the inline concatenated
@@ -236,5 +246,65 @@ fn socket_session_build_insert_search_without_rehandshake() {
     }
     assert_eq!(stored, both.len(), "no-replication invariant after insert");
 
+    net.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn socket_streaming_admission_matches_oracle_interleaved() {
+    // Streaming admission over the wire: one worker launch, one session,
+    // queries submitted one at a time with completions claimed as they
+    // arrive (submit → recv → submit ...), under a pipeline window and a
+    // session backpressure cap. Results must match the inline oracle per
+    // ticket, and a second stream on the same session (after an insert
+    // barrier) must see the grown index.
+    let mut cfg = session_cfg();
+    cfg.stream.pending_cap = 4;
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 12);
+    let mut oracle_cluster = build_index(&cfg, &ds, &hasher);
+    let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    let mut cluster = parlsh::coordinator::build_index_on(net.executor(), &cfg, &ds, &hasher);
+    {
+        let session = IndexSession::attach(
+            net.executor(),
+            &mut cluster,
+            &hasher,
+            Some(ranker.clone()),
+        );
+        for qi in 0..qs.len() {
+            let t = session.submit(qs.get(qi));
+            let (got_t, hits) = session.recv().expect("completion for the one in flight");
+            assert_eq!(got_t, t);
+            assert_eq!(hits, oracle.results[qi], "query {qi} diverged over the wire");
+        }
+        assert!(session.recv().is_none());
+
+        // insert acts as a stream barrier; the next submit reopens a
+        // stream against the same hot worker connections
+        let (dup, _) = distorted_queries(&ds, 1, 0.0, 3);
+        let range = session.insert(&dup);
+        let after = session.submit(dup.get(0));
+        let (t, hits) = session.recv().expect("post-insert completion");
+        assert_eq!(t, after);
+        assert!(
+            hits.iter().any(|&(_, id)| id == range.start),
+            "post-insert streaming query missed the inserted object: {hits:?}"
+        );
+
+        let stats = session.close();
+        assert_eq!(stats.queries_completed, qs.len() as u64 + 1);
+        assert_eq!(stats.latency.count, qs.len() as u64 + 1);
+        assert!(stats.search_meter.total_bytes() > 0, "no real wire bytes metered");
+        // remote DP work came back through the stream barrier
+        assert!(
+            stats
+                .work
+                .iter()
+                .any(|(s, _, w)| *s == StageKind::Dp && w.dists_computed > 0),
+            "stream barrier lost the remote work counters"
+        );
+    }
     net.shutdown().expect("clean shutdown");
 }
