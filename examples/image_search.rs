@@ -130,4 +130,32 @@ fn main() {
             &r[..r.len().min(3)]
         );
     }
+
+    // Per-query search plans (DESIGN.md §Service API): the same resident
+    // index serves a cheap low-latency request and a deep high-recall one
+    // back to back — no rebuild, no second session.
+    let mut cluster2 = cluster;
+    let session = parlsh::coordinator::session::IndexSession::attach(
+        &ThreadedExecutor,
+        &mut cluster2,
+        b.hasher.as_ref(),
+        Some(b.ranker.clone()),
+    );
+    use parlsh::QueryOptions;
+    let q = w.queries.get(0);
+    session.submit_with(q, QueryOptions { k: 3, probes: 1, tables: 2, tag: 1 });
+    session.submit_with(q, QueryOptions { probes: 2 * cfg.lsh.t as u32, tag: 2, ..Default::default() });
+    for (ticket, opts, hits, secs) in session.drain_full() {
+        println!(
+            "plan tag={} (k={} T={} L'={}): {} hits in {:.2} ms (ticket {})",
+            opts.tag,
+            opts.k,
+            opts.probes,
+            opts.tables,
+            hits.len(),
+            secs * 1e3,
+            ticket.0
+        );
+    }
+    session.close();
 }

@@ -41,7 +41,7 @@ impl SequentialLsh {
     /// `(sqdist, id)` ascending, plus the number of distance computations.
     pub fn search(&self, q: &[f32], t_probes: usize, k: usize) -> (Vec<(f32, u32)>, usize) {
         let raw = self.family.raw_projections(q);
-        let probes = self.family.query_probes(&raw, t_probes);
+        let probes = self.family.query_probes(&raw, t_probes, self.family.params.l);
         let mut seen = std::collections::HashSet::new();
         let mut tk = TopK::new(k);
         let mut dists = 0usize;
@@ -88,7 +88,7 @@ impl SequentialLsh {
     /// bucket-visit behaviour with the distributed version.
     pub fn candidates(&self, q: &[f32], t_probes: usize) -> Vec<u32> {
         let raw = self.family.raw_projections(q);
-        let probes = self.family.query_probes(&raw, t_probes);
+        let probes = self.family.query_probes(&raw, t_probes, self.family.params.l);
         let mut seen = std::collections::HashSet::new();
         let mut out = Vec::new();
         for (table, key) in probes {

@@ -39,7 +39,7 @@ use crate::data::Dataset;
 use crate::dataflow::exec::{
     bind_stages, Executor, InlineExecutor, IrHandler, QrHandler, Workload,
 };
-use crate::dataflow::message::{Msg, StageKind};
+use crate::dataflow::message::{Msg, QueryOptions, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::partition::ObjMapper;
@@ -176,10 +176,10 @@ impl Cluster {
             .map(|c| BiState::new(c as u16, placement.ag_copies, cfg.stream.max_candidates))
             .collect();
         let dps = (0..placement.dp_copies)
-            .map(|c| DpState::new(c as u16, dim, cfg.lsh.k, placement.ag_copies, cfg.stream.dedup))
+            .map(|c| DpState::new(c as u16, dim, placement.ag_copies, cfg.stream.dedup))
             .collect();
         let ags = (0..placement.ag_copies)
-            .map(|c| AgState::new(c as u16, cfg.lsh.k))
+            .map(|c| AgState::new(c as u16))
             .collect();
         Cluster {
             cfg: cfg.clone(),
@@ -364,10 +364,14 @@ pub fn search_on(
             &mut cluster.ags,
             Some(ranker),
         );
+        // Every query inherits the config plan (`QueryOptions::default()`
+        // resolves to `cfg.lsh` at QR) — the pumped phase path stays the
+        // bit-identical pre-redesign oracle.
         let mut items = (0..queries.len()).map(|i| Msg::QueryVec {
             qid: i as u32,
             raw: raws[i * p..(i + 1) * p].into(),
             v: queries.get(i).into(),
+            opts: QueryOptions::default(),
         });
         exec.run(
             &placement,

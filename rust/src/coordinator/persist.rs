@@ -161,13 +161,7 @@ pub fn load(path: &str, cfg: &Config) -> Result<Cluster> {
     let mut dps = Vec::with_capacity(n_dp);
     let mut buf = vec![0f32; dim];
     for copy in 0..n_dp {
-        let mut dp = DpState::new(
-            copy as u16,
-            dim,
-            cfg.lsh.k,
-            placement.ag_copies,
-            cfg.stream.dedup,
-        );
+        let mut dp = DpState::new(copy as u16, dim, placement.ag_copies, cfg.stream.dedup);
         let n_objs = r_u32(&mut r)? as usize;
         for _ in 0..n_objs {
             let id = r_u32(&mut r)?;
@@ -182,7 +176,7 @@ pub fn load(path: &str, cfg: &Config) -> Result<Cluster> {
     let family = Arc::new(HashFamily::sample(dim, cfg.lsh));
     let mapper = ObjMapper::new(cfg.stream.obj_map, placement.dp_copies, dim, cfg.lsh.seed);
     let ags = (0..placement.ag_copies)
-        .map(|c| AgState::new(c as u16, cfg.lsh.k))
+        .map(|c| AgState::new(c as u16))
         .collect();
     let mut cluster = Cluster {
         cfg: cfg.clone(),

@@ -14,9 +14,11 @@
 //! ```text
 //! Cluster::empty / build_index ──▶ IndexSession::attach
 //!        ┌─────────────────────────────┴──────────────────────────┐
-//!        │   insert(&Dataset)      grow the resident index        │
-//!        │   submit(q) → ticket    admit one query (streaming)    │
-//!        │   recv() → (ticket,topk) stream completions out        │
+//!        │   insert(&Dataset)            grow the resident index  │
+//!        │   submit(q) → ticket          admit, default plan      │
+//!        │   submit_with(q, QueryOptions) admit, per-query plan   │
+//!        │   recv() → (ticket,topk)      stream completions out   │
+//!        │   recv_full() → (.., opts, ..) with the option echo    │
 //!        │   stats()               merged traffic + per-copy work │
 //!        └─────────────────────────────┬──────────────────────────┘
 //!                                 close() → SessionStats
@@ -40,6 +42,17 @@
 //! ticket, never by position. The session is `Sync`; `submit` hashes on
 //! the calling thread before taking the session lock.
 //!
+//! Per-query plans: [`IndexSession::submit_with`] attaches a
+//! [`QueryOptions`] — per-request `k`, probe budget `T`, table count `L'`
+//! and an opaque `tag` — to one submission. Options are resolved against
+//! the session's configured `LshParams` at submit time (0 = inherit), the
+//! resolved plan rides the ingress message through every stage, and the
+//! session echoes it per ticket on the `recv` side
+//! ([`IndexSession::recv_full`]/[`IndexSession::try_recv_full`]).
+//! `submit(q)` is exactly `submit_with(q, QueryOptions::default_from(&cfg))`,
+//! so default traffic is bit-identical to the pre-plan behavior (the
+//! pumped `search_on` oracle).
+//!
 //! Memory stays bounded on a resident session: per-query latency is
 //! folded into a [`LatencySummary`] (exact mean/max + fixed reservoir for
 //! percentiles) instead of a per-ticket vector, the in-flight ticket map
@@ -48,13 +61,13 @@
 //! serving loop that claims as it submits holds O(pending) state.
 
 use crate::coordinator::Cluster;
-use crate::core::lsh::HashFamily;
+use crate::core::lsh::{HashFamily, LshParams};
 use crate::data::Dataset;
 use crate::dataflow::exec::{
     AgHandler, BiHandler, DpHandler, Executor, StageHandler, StageHandlers, StreamCompletion,
     StreamConfig, StreamRun,
 };
-use crate::dataflow::message::{Msg, StageKind};
+use crate::dataflow::message::{Msg, QueryOptions, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::metrics::LatencySummary;
 use crate::runtime::{Hasher, Ranker};
@@ -121,12 +134,12 @@ struct SharedQr {
 impl StageHandler for SharedQr {
     fn on_msg(&mut self, msg: Msg, out: Emit) {
         match msg {
-            Msg::QueryVec { qid, raw, v } => {
+            Msg::QueryVec { qid, raw, v, opts } => {
                 let mut qr = QueryReceiver::new(&self.family, self.n_bi, self.n_ag);
                 // The submitting thread hashed this vector; account for it
                 // here so work totals match the pumped phase path.
                 qr.work.hash_vectors += 1;
-                qr.dispatch_query_arc(&raw, qid, v, out);
+                qr.dispatch_query_arc(&raw, qid, v, opts, out);
                 let mut w = self.work.lock().unwrap_or_else(|p| p.into_inner());
                 w.add(&qr.work);
             }
@@ -204,19 +217,25 @@ struct OpenStream<'s> {
     qr_work: Arc<Mutex<WorkStats>>,
 }
 
+/// One delivered completion with its full context: ticket, the resolved
+/// per-query plan it ran under (option echo), the global top-k, and the
+/// admission-to-completion seconds.
+pub type Completion = (QueryTicket, QueryOptions, Vec<(f32, u32)>, f64);
+
 struct Inner<'c> {
     cluster: &'c mut Cluster,
     /// The live streaming run, opened lazily by the first `submit` and
     /// finished (stage state reclaimed into `cluster`) by `insert`/`close`.
     stream: Option<OpenStream<'c>>,
     next_ticket: u64,
-    /// qid → ticket for queries admitted but not yet claimed. Bounded by
-    /// the number outstanding; qids are the ticket truncated to `u32`
-    /// (unique while fewer than 2^32 are in flight — i.e. always).
-    tickets: HashMap<u32, u64>,
+    /// qid → (ticket, resolved options) for queries admitted but not yet
+    /// claimed — the recv-side option echo. Bounded by the number
+    /// outstanding; qids are the ticket truncated to `u32` (unique while
+    /// fewer than 2^32 are in flight — i.e. always).
+    tickets: HashMap<u32, (u64, QueryOptions)>,
     /// Completions claimed from the stream but not yet delivered to a
     /// caller (barrier leftovers, and `drain`'s staging area).
-    done: VecDeque<(QueryTicket, Vec<(f32, u32)>, f64)>,
+    done: VecDeque<Completion>,
     latency: LatencySummary,
     /// Head-node (QR) work across this session's streams. Per-copy
     /// BI/DP/AG work lives in the cluster's stage states (or their
@@ -228,35 +247,46 @@ struct Inner<'c> {
 
 impl Inner<'_> {
     /// Bookkeep one completion claimed from the stream.
-    fn note_completion(
-        &mut self,
-        c: StreamCompletion,
-    ) -> (QueryTicket, Vec<(f32, u32)>, f64) {
-        let t = self
+    fn note_completion(&mut self, c: StreamCompletion) -> Completion {
+        let (t, opts) = self
             .tickets
             .remove(&c.qid)
             .expect("stream completion for an unknown qid");
+        debug_assert!(
+            c.hits.len() <= opts.k as usize,
+            "completion overflowed its plan's k"
+        );
         self.completed += 1;
         self.latency.record(c.secs);
-        (QueryTicket(t), c.hits, c.secs)
+        (QueryTicket(t), opts, c.hits, c.secs)
     }
 
     /// Issue the next ticket and admit the query into the open stream —
     /// if the backpressure window has room. `None` means the window is
     /// full (nothing was consumed; the caller may retry with the same
-    /// `raw`/`v`). Never blocks: callers that want blocking semantics
-    /// park *outside* the session lock ([`IndexSession::submit`]), so the
-    /// documented non-blocking calls (`try_recv`, `stats`, `in_flight`)
-    /// are never stuck behind a gated submitter.
-    fn try_submit_one(&mut self, raw: Arc<[f32]>, v: Arc<[f32]>) -> Option<QueryTicket> {
+    /// `raw`/`v`). `opts` is the *caller's* plan, stamped on the wire
+    /// as-is so default-elision stays live (QR resolves it against the
+    /// same params); `echo` is the pre-resolved copy kept for the
+    /// recv-side option echo. Never blocks: callers that want blocking
+    /// semantics park *outside* the session lock
+    /// ([`IndexSession::submit`]), so the documented non-blocking calls
+    /// (`try_recv`, `stats`, `in_flight`) are never stuck behind a gated
+    /// submitter.
+    fn try_submit_one(
+        &mut self,
+        raw: Arc<[f32]>,
+        v: Arc<[f32]>,
+        opts: QueryOptions,
+        echo: QueryOptions,
+    ) -> Option<QueryTicket> {
         let t = self.next_ticket;
         let qid = t as u32;
-        let msg = Msg::QueryVec { qid, raw, v };
+        let msg = Msg::QueryVec { qid, raw, v, opts };
         let os = self.stream.as_mut().expect("submit without an open stream");
         match os.run.try_submit(msg) {
             Ok(()) => {
                 self.next_ticket += 1;
-                self.tickets.insert(qid, t);
+                self.tickets.insert(qid, (t, echo));
                 Some(QueryTicket(t))
             }
             Err(_) => None,
@@ -274,6 +304,9 @@ pub struct IndexSession<'s> {
     /// `Arc` rather than a borrow: the streaming DP handlers move onto
     /// executor-owned threads, which requires `'static` ownership.
     ranker: Option<Arc<dyn Ranker>>,
+    /// The index's LSH params, frozen at attach — the defaulting source
+    /// for per-query [`QueryOptions`] resolution.
+    lsh: LshParams,
     inner: Mutex<Inner<'s>>,
 }
 
@@ -288,10 +321,12 @@ impl<'s> IndexSession<'s> {
         ranker: Option<Arc<dyn Ranker>>,
     ) -> IndexSession<'s> {
         let agg = cluster.cfg.stream.agg_bytes;
+        let lsh = cluster.cfg.lsh;
         IndexSession {
             exec,
             hasher,
             ranker,
+            lsh,
             inner: Mutex::new(Inner {
                 cluster,
                 stream: None,
@@ -303,6 +338,27 @@ impl<'s> IndexSession<'s> {
                 search_meter: TrafficMeter::new(agg),
                 completed: 0,
             }),
+        }
+    }
+
+    /// The session's default per-query plan — the config values this
+    /// index was attached with. `submit(q)` uses exactly this.
+    pub fn default_options(&self) -> QueryOptions {
+        QueryOptions::from_params(&self.lsh)
+    }
+
+    /// Resolve a caller's options against the session's params: zero
+    /// fields inherit, `tables` clamps into `1..=L`. This mirrors the
+    /// Query Receiver's own resolution (same `k_or`/`probes_or`/
+    /// `tables_in` helpers over the same params) — the *caller's* plan is
+    /// what rides the wire (so default-elision stays live); the resolved
+    /// copy is what the completion echoes.
+    fn resolve(&self, opts: QueryOptions) -> QueryOptions {
+        QueryOptions {
+            k: opts.k_or(self.lsh.k) as u32,
+            probes: opts.probes_or(self.lsh.t) as u32,
+            tables: opts.tables_in(self.lsh.l) as u32,
+            tag: opts.tag,
         }
     }
 
@@ -413,25 +469,35 @@ impl<'s> IndexSession<'s> {
             .insert_objects_on(self.exec, dataset.as_flat(), dataset.len(), self.hasher)
     }
 
-    /// Admit one query — it enters the executor pipeline immediately.
-    /// Hashing happens on the calling thread; the ticket is issued under
-    /// the session lock, in admission order. Blocks while
+    /// Admit one query under the session's default plan — shorthand for
+    /// `submit_with(q, QueryOptions::default_from(&cfg))`, bit-identical
+    /// to the pre-plan behavior (the pumped `search_on` oracle).
+    pub fn submit(&self, q: &[f32]) -> QueryTicket {
+        self.submit_with(q, QueryOptions::default())
+    }
+
+    /// Admit one query with a per-query search plan — it enters the
+    /// executor pipeline immediately. `opts` fields left at 0 inherit the
+    /// session's configured values; `tables` clamps into `1..=L`. Hashing
+    /// happens on the calling thread; the ticket is issued under the
+    /// session lock, in admission order. Blocks while
     /// `stream.pending_cap` submissions are outstanding (0 = never) —
     /// parking happens *between* lock acquisitions, so concurrent
     /// claimers and non-blocking calls keep running while a submitter
     /// waits out the backpressure window.
-    pub fn submit(&self, q: &[f32]) -> QueryTicket {
+    pub fn submit_with(&self, q: &[f32], opts: QueryOptions) -> QueryTicket {
         assert!(
             self.ranker.is_some(),
             "IndexSession::submit on a session attached without a ranker"
         );
+        let echo = self.resolve(opts);
         let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
         let v: Arc<[f32]> = q.into();
         loop {
             {
                 let mut inner = self.lock();
                 self.open_stream_locked(&mut inner);
-                if let Some(t) = inner.try_submit_one(raw.clone(), v.clone()) {
+                if let Some(t) = inner.try_submit_one(raw.clone(), v.clone(), opts, echo) {
                     return t;
                 }
             }
@@ -445,10 +511,17 @@ impl<'s> IndexSession<'s> {
     /// Non-blocking [`IndexSession::submit`]: `None` when the
     /// backpressure window (`stream.pending_cap`) is full.
     pub fn try_submit(&self, q: &[f32]) -> Option<QueryTicket> {
+        self.try_submit_with(q, QueryOptions::default())
+    }
+
+    /// Non-blocking [`IndexSession::submit_with`]: `None` when the
+    /// backpressure window (`stream.pending_cap`) is full.
+    pub fn try_submit_with(&self, q: &[f32], opts: QueryOptions) -> Option<QueryTicket> {
         assert!(
             self.ranker.is_some(),
             "IndexSession::try_submit on a session attached without a ranker"
         );
+        let echo = self.resolve(opts);
         // Probe the window before paying for the hash: a caller polling
         // try_submit against a full window must not recompute projections
         // on every declined attempt. The probe is advisory — the final
@@ -465,21 +538,29 @@ impl<'s> IndexSession<'s> {
         let v: Arc<[f32]> = q.into();
         let mut inner = self.lock();
         self.open_stream_locked(&mut inner);
-        inner.try_submit_one(raw, v)
+        inner.try_submit_one(raw, v, opts, echo)
     }
 
-    /// Admit a whole query set through one batched hash call (the phase
-    /// drivers' §Perf path). Returns the ticket range. Each query streams
-    /// into the pipeline as it is enqueued; with a `pending_cap` set the
-    /// batch parks (between lock acquisitions, like [`IndexSession::submit`])
-    /// whenever the window fills — if other threads submit concurrently
-    /// during such a park, the returned range can include their tickets,
-    /// so concurrent callers should match results by ticket, not offset.
+    /// Admit a whole query set under the default plan — see
+    /// [`IndexSession::submit_batch_with`].
     pub fn submit_batch(&self, queries: &Dataset) -> Range<u64> {
+        self.submit_batch_with(queries, QueryOptions::default())
+    }
+
+    /// Admit a whole query set, every query under the same plan `opts`,
+    /// through one batched hash call (the phase drivers' §Perf path).
+    /// Returns the ticket range. Each query streams into the pipeline as
+    /// it is enqueued; with a `pending_cap` set the batch parks (between
+    /// lock acquisitions, like [`IndexSession::submit`]) whenever the
+    /// window fills — if other threads submit concurrently during such a
+    /// park, the returned range can include their tickets, so concurrent
+    /// callers should match results by ticket, not offset.
+    pub fn submit_batch_with(&self, queries: &Dataset, opts: QueryOptions) -> Range<u64> {
         assert!(
             self.ranker.is_some(),
             "IndexSession::submit_batch on a session attached without a ranker"
         );
+        let echo = self.resolve(opts);
         let p = self.hasher.p();
         let raws = self.hasher.proj_batch(queries.as_flat(), queries.len());
         let mut start = 0u64;
@@ -497,7 +578,7 @@ impl<'s> IndexSession<'s> {
                 while i < queries.len() {
                     let raw: Arc<[f32]> = raws[i * p..(i + 1) * p].into();
                     let v: Arc<[f32]> = queries.get(i).into();
-                    if inner.try_submit_one(raw, v).is_none() {
+                    if inner.try_submit_one(raw, v, opts, echo).is_none() {
                         break;
                     }
                     i += 1;
@@ -514,11 +595,19 @@ impl<'s> IndexSession<'s> {
     /// Pop a completion without waiting. `None` means nothing has
     /// completed yet (the pipeline keeps working in the background).
     pub fn try_recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
-        self.try_recv_timed().map(|(t, h, _)| (t, h))
+        self.try_recv_full().map(|(t, _, h, _)| (t, h))
     }
 
     /// [`IndexSession::try_recv`] with the admission-to-completion seconds.
     pub fn try_recv_timed(&self) -> Option<(QueryTicket, Vec<(f32, u32)>, f64)> {
+        self.try_recv_full().map(|(t, _, h, s)| (t, h, s))
+    }
+
+    /// [`IndexSession::try_recv`] with the full completion context: the
+    /// ticket, the resolved [`QueryOptions`] the query ran under (the
+    /// option echo — including the caller's `tag`), the top-k, and the
+    /// admission-to-completion seconds.
+    pub fn try_recv_full(&self) -> Option<Completion> {
         let mut inner = self.lock();
         if let Some(e) = inner.done.pop_front() {
             return Some(e);
@@ -533,11 +622,17 @@ impl<'s> IndexSession<'s> {
     /// Next completion, waiting for the pipeline if necessary. `None`
     /// means the session is idle (nothing outstanding, nothing buffered).
     pub fn recv(&self) -> Option<(QueryTicket, Vec<(f32, u32)>)> {
-        self.recv_timed().map(|(t, h, _)| (t, h))
+        self.recv_full().map(|(t, _, h, _)| (t, h))
     }
 
     /// [`IndexSession::recv`] with the admission-to-completion seconds.
     pub fn recv_timed(&self) -> Option<(QueryTicket, Vec<(f32, u32)>, f64)> {
+        self.recv_full().map(|(t, _, h, s)| (t, h, s))
+    }
+
+    /// [`IndexSession::recv`] with the full completion context (see
+    /// [`IndexSession::try_recv_full`]).
+    pub fn recv_full(&self) -> Option<Completion> {
         loop {
             let mut inner = self.lock();
             if let Some(e) = inner.done.pop_front() {
@@ -568,11 +663,17 @@ impl<'s> IndexSession<'s> {
     /// completions, ticket-ordered. Like `recv`, the wait releases the
     /// session lock between egress ticks so submitters are not stalled.
     pub fn drain(&self) -> Vec<(QueryTicket, Vec<(f32, u32)>)> {
-        let mut out: Vec<(QueryTicket, Vec<(f32, u32)>)> = Vec::new();
+        self.drain_full().into_iter().map(|(t, _, h, _)| (t, h)).collect()
+    }
+
+    /// [`IndexSession::drain`] with the full completion context per
+    /// ticket (option echo included), ticket-ordered.
+    pub fn drain_full(&self) -> Vec<Completion> {
+        let mut out: Vec<Completion> = Vec::new();
         loop {
             let mut inner = self.lock();
-            while let Some((t, h, _)) = inner.done.pop_front() {
-                out.push((t, h));
+            while let Some(e) = inner.done.pop_front() {
+                out.push(e);
             }
             if inner.tickets.is_empty() {
                 break;
@@ -585,8 +686,7 @@ impl<'s> IndexSession<'s> {
                 os.run.recv(RECV_TICK)
             };
             if let Some(c) = c {
-                let (t, h, _) = inner.note_completion(c);
-                out.push((t, h));
+                out.push(inner.note_completion(c));
             } else {
                 drop(inner);
                 std::thread::yield_now();
@@ -992,6 +1092,52 @@ mod tests {
         let again = session.take_work();
         assert!(again.iter().all(|(_, _, w)| w.dists_computed == 0));
         session.close();
+    }
+
+    #[test]
+    fn submit_with_mixed_plans_matches_across_executors_and_echoes_options() {
+        let cfg = small_cfg();
+        let (ds, qs, hasher, ranker) = world(&cfg, 1_200, 8);
+        let plan = |qi: usize| QueryOptions {
+            k: 1 + (qi as u32 % 3),
+            probes: 1 + 2 * (qi as u32 % 4),
+            tables: if qi % 2 == 0 { 0 } else { 2 },
+            tag: 1000 + qi as u32,
+        };
+        let run = |exec: &dyn Executor| -> Vec<Completion> {
+            let mut cluster = build_index(&cfg, &ds, &hasher);
+            let session =
+                IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
+            for qi in 0..qs.len() {
+                session.submit_with(qs.get(qi), plan(qi));
+            }
+            let out = session.drain_full();
+            session.close();
+            out
+        };
+        let inline = run(&InlineExecutor);
+        let threaded = run(&ThreadedExecutor);
+        assert_eq!(inline.len(), qs.len());
+        for (qi, (t, opts, hits, _)) in inline.iter().enumerate() {
+            assert_eq!(t.0 as usize, qi);
+            // echoed options are the *resolved* plan: zero fields filled in
+            let want = plan(qi);
+            assert_eq!(opts.tag, want.tag);
+            assert_eq!(opts.k, want.k);
+            assert_eq!(opts.probes, want.probes);
+            assert_eq!(
+                opts.tables,
+                if want.tables == 0 { cfg.lsh.l as u32 } else { want.tables }
+            );
+            assert!(hits.len() <= opts.k as usize, "hits overflow the plan's k");
+        }
+        // transport-independent: identical per-ticket results and echoes
+        let strip = |v: &[Completion]| {
+            v.iter()
+                .map(|(t, o, h, _)| (t.0, *o, h.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(strip(&inline), strip(&threaded));
     }
 
     /// A ranker whose `rank` parks on a latch — holds queries in flight

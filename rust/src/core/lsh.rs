@@ -150,14 +150,19 @@ impl HashFamily {
             .collect()
     }
 
-    /// All probe bucket keys for a query given its raw projections: per
-    /// table the home bucket followed by the `t-1` best multi-probe
-    /// perturbations (Lv et al. score order). Shared by the distributed
-    /// Query Receiver and the sequential baseline so both visit *exactly*
-    /// the same buckets.
-    pub fn query_probes(&self, raw: &[f32], t_probes: usize) -> Vec<(u8, u64)> {
+    /// All probe bucket keys for a query given its raw projections: for
+    /// each of the first `tables` (≤ L) hash tables, the home bucket
+    /// followed by the `t-1` best multi-probe perturbations (Lv et al.
+    /// score order). Both knobs are *per call* — the per-query search-plan
+    /// redesign (DESIGN.md §Service API) routes each query's own `T`/`L'`
+    /// here instead of freezing `family.params` at build time. Shared by
+    /// the distributed Query Receiver and the sequential baseline so both
+    /// visit *exactly* the same buckets.
+    pub fn query_probes(&self, raw: &[f32], t_probes: usize, tables: usize) -> Vec<(u8, u64)> {
         use crate::core::multiprobe::{apply_set, probe_sequence};
-        let l = self.params.l;
+        // `.max(1)` keeps clamp's min<=max invariant even for a degenerate
+        // family (L=0 cannot be sampled, but stay panic-free regardless).
+        let l = tables.clamp(1, self.params.l.max(1));
         let m = self.params.m;
         let t_probes = t_probes.max(1);
         let mut probes = Vec::with_capacity(l * t_probes);
@@ -270,6 +275,23 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn query_probes_honors_per_call_table_limit() {
+        let f = small_family();
+        let v: Vec<f32> = (0..16).map(|i| (i as f32).cos() * 3.0).collect();
+        let raw = f.raw_projections(&v);
+        let all = f.query_probes(&raw, 4, f.params.l);
+        let first_two = f.query_probes(&raw, 4, 2);
+        // the L'-limited sequence is exactly the prefix tables of the full one
+        assert!(first_two.iter().all(|&(t, _)| t < 2));
+        let want: Vec<(u8, u64)> =
+            all.iter().copied().filter(|&(t, _)| t < 2).collect();
+        assert_eq!(first_two, want);
+        // out-of-range requests clamp into 1..=L
+        assert_eq!(f.query_probes(&raw, 4, 99), all);
+        assert!(f.query_probes(&raw, 4, 0).iter().all(|&(t, _)| t == 0));
     }
 
     #[test]

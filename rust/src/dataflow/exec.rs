@@ -103,11 +103,11 @@ pub struct QrHandler<'a, 'f> {
 impl StageHandler for QrHandler<'_, '_> {
     fn on_msg(&mut self, msg: Msg, out: Emit) {
         match msg {
-            Msg::QueryVec { qid, raw, v } => {
+            Msg::QueryVec { qid, raw, v, opts } => {
                 // The driver hashed this vector in its batched proj call;
                 // account for it here so work totals match either way.
                 self.qr.work.hash_vectors += 1;
-                self.qr.dispatch_query_arc(&raw, qid, v, out);
+                self.qr.dispatch_query_arc(&raw, qid, v, opts, out);
             }
             other => panic!("QR got unexpected {other:?}"),
         }
@@ -123,7 +123,7 @@ impl StageHandler for BiHandler<'_> {
     fn on_msg(&mut self, msg: Msg, out: Emit) {
         match msg {
             Msg::IndexRef { key, id, dp, .. } => self.bi.on_index_ref(key, id, dp),
-            Msg::Query { qid, probes, v } => self.bi.on_query(qid, &probes, &v, out),
+            Msg::Query { qid, probes, v, k } => self.bi.on_query(qid, &probes, &v, k, out),
             other => panic!("BI {} got unexpected {other:?}", self.bi.copy),
         }
     }
@@ -140,11 +140,11 @@ impl StageHandler for DpHandler<'_> {
     fn on_msg(&mut self, msg: Msg, out: Emit) {
         match msg {
             Msg::StoreObject { id, v } => self.dp.on_store(id, &v),
-            Msg::CandidateReq { qid, ids, v } => {
+            Msg::CandidateReq { qid, ids, v, k } => {
                 let ranker = self
                     .ranker
                     .expect("DP received CandidateReq in a phase started without a ranker");
-                self.dp.on_candidates(qid, &ids, &v, ranker, out);
+                self.dp.on_candidates(qid, &ids, &v, k as usize, ranker, out);
             }
             other => panic!("DP {} got unexpected {other:?}", self.dp.copy),
         }
@@ -164,7 +164,7 @@ pub struct AgHandler<'a> {
 impl StageHandler for AgHandler<'_> {
     fn on_msg(&mut self, msg: Msg, _out: Emit) {
         match msg {
-            Msg::QueryMeta { qid, n_bi } => self.ag.on_query_meta(qid, n_bi),
+            Msg::QueryMeta { qid, n_bi, k } => self.ag.on_query_meta(qid, n_bi, k),
             Msg::BiMeta { qid, n_dp } => self.ag.on_bi_meta(qid, n_dp),
             Msg::LocalTopK { qid, hits } => self.ag.on_local_topk(qid, &hits),
             other => panic!("AG {} got unexpected {other:?}", self.ag.copy),
@@ -1214,6 +1214,7 @@ fn stream_admission(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dataflow::message::QueryOptions;
     use std::sync::Arc;
 
     fn tiny_placement() -> Placement {
@@ -1229,7 +1230,7 @@ mod tests {
 
     fn qv(qid: u32) -> Msg {
         let a: Arc<[f32]> = vec![0f32; 1].into();
-        Msg::QueryVec { qid, raw: a.clone(), v: a }
+        Msg::QueryVec { qid, raw: a.clone(), v: a, opts: QueryOptions::default() }
     }
 
     /// Head that fans each query out to DP 0 (payload) and AG 0 (trigger).
@@ -1238,8 +1239,8 @@ mod tests {
         fn on_msg(&mut self, msg: Msg, out: Emit) {
             let qid = msg.qid().expect("RelayHead only takes queries");
             let v: Arc<[f32]> = vec![0f32; 1].into();
-            out.push((Dest::dp(0), Msg::CandidateReq { qid, ids: Vec::new(), v }));
-            out.push((Dest::ag(0), Msg::QueryMeta { qid, n_bi: 0 }));
+            out.push((Dest::dp(0), Msg::CandidateReq { qid, ids: Vec::new(), v, k: 1 }));
+            out.push((Dest::ag(0), Msg::QueryMeta { qid, n_bi: 0, k: 1 }));
         }
     }
 
@@ -1384,7 +1385,7 @@ mod tests {
             fn on_msg(&mut self, msg: Msg, out: Emit) {
                 let qid = msg.qid().unwrap();
                 let v: Arc<[f32]> = vec![0f32; 1].into();
-                out.push((Dest::bi(0), Msg::Query { qid, probes: Vec::new(), v }));
+                out.push((Dest::bi(0), Msg::Query { qid, probes: Vec::new(), v, k: 1 }));
             }
         }
         let placement = tiny_placement();
@@ -1414,7 +1415,7 @@ mod tests {
         impl StageHandler for FlushHead {
             fn on_msg(&mut self, msg: Msg, out: Emit) {
                 match msg.qid() {
-                    Some(qid) => out.push((Dest::ag(0), Msg::QueryMeta { qid, n_bi: 0 })),
+                    Some(qid) => out.push((Dest::ag(0), Msg::QueryMeta { qid, n_bi: 0, k: 1 })),
                     None => out.push((Dest::ag(0), Msg::BiMeta { qid: 0, n_dp: 0 })),
                 }
             }
@@ -1542,7 +1543,7 @@ mod tests {
         fn on_msg(&mut self, msg: Msg, out: Emit) {
             let qid = msg.qid().expect("HeadToDp only takes queries");
             let v: Arc<[f32]> = vec![0f32; 1].into();
-            out.push((Dest::dp(0), Msg::CandidateReq { qid, ids: Vec::new(), v }));
+            out.push((Dest::dp(0), Msg::CandidateReq { qid, ids: Vec::new(), v, k: 1 }));
         }
     }
 
@@ -1608,7 +1609,7 @@ mod tests {
             fn on_msg(&mut self, msg: Msg, out: Emit) {
                 let qid = msg.qid().unwrap();
                 let v: Arc<[f32]> = vec![0f32; 1].into();
-                out.push((Dest::bi(0), Msg::Query { qid, probes: Vec::new(), v }));
+                out.push((Dest::bi(0), Msg::Query { qid, probes: Vec::new(), v, k: 1 }));
             }
         }
         let placement = tiny_placement();

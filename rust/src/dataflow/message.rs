@@ -1,9 +1,19 @@
-//! Inter-stage messages (paper Figure 2) and their wire-size model.
+//! Inter-stage messages (paper Figure 2), per-query search plans
+//! ([`QueryOptions`]) and the wire-size model.
 //!
 //! The five message kinds mirror the paper's i–v. Vectors travel by `Arc` in
 //! process, but `wire_size` charges the full serialized payload so traffic
 //! accounting matches what MPI would move.
+//!
+//! Since the per-query-plan redesign (DESIGN.md §Service API), every query
+//! carries its own [`QueryOptions`] on the ingress [`Msg::QueryVec`]; the
+//! Query Receiver resolves them against the index's configured `LshParams`
+//! and threads the resolved `k` through the downstream messages
+//! ([`Msg::Query`] → [`Msg::CandidateReq`] → [`Msg::QueryMeta`]) so BI, DP
+//! and AG all honor the *query's* plan, not one frozen global.
 
+use crate::config::Config;
+use crate::core::lsh::LshParams;
 use std::sync::Arc;
 
 /// The five dataflow stages.
@@ -59,6 +69,106 @@ impl Dest {
     }
 }
 
+/// A per-query search plan: how many neighbors to return, how much probe
+/// effort to spend, and how many tables to consult — the recall/latency
+/// knob a serving system turns per *request*, not per index build.
+///
+/// Every field uses `0` as the "inherit the index's configured value"
+/// sentinel, so `QueryOptions::default()` is exactly "the config defaults"
+/// and the wire codec can elide unset fields (wire v3 default-elision).
+/// Resolution against the index's [`LshParams`] happens once, in the Query
+/// Receiver (`k_or` / `probes_or` / `tables_in`); downstream messages carry
+/// the resolved `k` explicitly.
+///
+/// `tag` is an opaque caller label: it never influences the computation and
+/// is echoed back with the completion (`IndexSession::recv_full`), so
+/// callers multiplexing heterogeneous traffic classes over one session can
+/// attribute completions without a side table.
+/// Ceiling on an explicitly-requested per-query `k` (resolution clamps
+/// to it). Far above any sensible top-k, small enough that the per-query
+/// reducer heap it sizes stays trivial.
+pub const MAX_QUERY_K: usize = 1 << 16;
+/// Ceiling on an explicitly-requested per-query probe budget `T`.
+/// Generous next to the paper's largest sweeps (T ≤ 512) while bounding
+/// the probe-vector allocations a hostile request could demand.
+pub const MAX_QUERY_PROBES: usize = 1 << 16;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct QueryOptions {
+    /// Neighbors to return for this query (0 = config `lsh.k`).
+    pub k: u32,
+    /// Multi-probe probes per table, the paper's T (0 = config `lsh.t`).
+    pub probes: u32,
+    /// Consult only the first `tables` hash tables, L' ≤ L (0 = all L).
+    pub tables: u32,
+    /// Opaque caller tag, echoed on the completion. Never interpreted.
+    pub tag: u32,
+}
+
+impl QueryOptions {
+    /// The config-derived defaults as *explicit* values (every field
+    /// non-zero where the params are non-zero). `submit_with(q, default_from(cfg))`
+    /// is bit-identical to `submit(q)` by construction: both resolve to the
+    /// same plan at the Query Receiver.
+    pub fn from_params(p: &LshParams) -> QueryOptions {
+        QueryOptions {
+            k: p.k as u32,
+            probes: p.t as u32,
+            tables: p.l as u32,
+            tag: 0,
+        }
+    }
+
+    /// [`QueryOptions::from_params`] over the config's LSH section.
+    pub fn default_from(cfg: &Config) -> QueryOptions {
+        QueryOptions::from_params(&cfg.lsh)
+    }
+
+    /// Resolved k: the query's (capped at [`MAX_QUERY_K`]), or `default`
+    /// when inherited; never 0. The cap exists because plans arrive from
+    /// *untrusted* inputs — serve stdin/text lines, the wire — and `k`
+    /// sizes upfront allocations (the AG's per-query `TopK` heap): one
+    /// absurd request must degrade, not abort the resident process. The
+    /// inherited `default` comes from validated config and is not capped.
+    pub fn k_or(&self, default: usize) -> usize {
+        if self.k == 0 {
+            default.max(1)
+        } else {
+            (self.k as usize).min(MAX_QUERY_K)
+        }
+    }
+
+    /// Resolved probes-per-table T (explicit values capped at
+    /// [`MAX_QUERY_PROBES`] — T sizes the probe-sequence allocations, see
+    /// [`QueryOptions::k_or`] for the trust argument); never 0.
+    pub fn probes_or(&self, default: usize) -> usize {
+        if self.probes == 0 {
+            default.max(1)
+        } else {
+            (self.probes as usize).min(MAX_QUERY_PROBES)
+        }
+    }
+
+    /// Resolved table count, clamped into `1..=l`.
+    pub fn tables_in(&self, l: usize) -> usize {
+        if self.tables == 0 {
+            l.max(1)
+        } else {
+            (self.tables as usize).clamp(1, l.max(1))
+        }
+    }
+
+    /// Serialized size under the wire-v3 default-elision encoding: one
+    /// flags byte plus 4 bytes per explicitly-set field.
+    pub fn wire_size(&self) -> usize {
+        1 + [self.k, self.probes, self.tables, self.tag]
+            .iter()
+            .filter(|&&v| v != 0)
+            .count()
+            * 4
+    }
+}
+
 /// Inter-stage message payloads.
 ///
 /// The first two variants are *ingress* messages: the executor delivers
@@ -71,8 +181,10 @@ pub enum Msg {
     IndexBlock { id_base: u32, rows: u32, flat: Arc<[f32]> },
     /// Driver → QR: dispatch one query. `raw` holds the precomputed raw
     /// projections (the drivers hash the whole query set through one
-    /// batched artifact call); `v` is the query vector itself.
-    QueryVec { qid: u32, raw: Arc<[f32]>, v: Arc<[f32]> },
+    /// batched artifact call); `v` is the query vector itself; `opts` is
+    /// the per-query search plan (0-fields inherit the config — QR
+    /// resolves them).
+    QueryVec { qid: u32, raw: Arc<[f32]>, v: Arc<[f32]>, opts: QueryOptions },
     /// (i) IR → DP: store one reference object. No replication: exactly one
     /// DP copy ever receives a given object.
     StoreObject { id: u32, v: Arc<[f32]> },
@@ -80,12 +192,14 @@ pub enum Msg {
     IndexRef { table: u8, key: u64, id: u32, dp: u16 },
     /// (iii) QR → BI: visit `probes` buckets for query `qid`. Only the
     /// probes owned by the destination BI copy are included; the query
-    /// vector rides along for the downstream distance phase.
-    Query { qid: u32, probes: Vec<(u8, u64)>, v: Arc<[f32]> },
-    /// (iv) BI → DP: rank `ids` against the query.
-    CandidateReq { qid: u32, ids: Vec<u32>, v: Arc<[f32]> },
-    /// QR → AG control: how many BI copies were contacted for `qid`.
-    QueryMeta { qid: u32, n_bi: u32 },
+    /// vector rides along for the downstream distance phase, and `k` is
+    /// the query's resolved top-k (forwarded to DP).
+    Query { qid: u32, probes: Vec<(u8, u64)>, v: Arc<[f32]>, k: u32 },
+    /// (iv) BI → DP: rank `ids` against the query, keeping the best `k`.
+    CandidateReq { qid: u32, ids: Vec<u32>, v: Arc<[f32]>, k: u32 },
+    /// QR → AG control: how many BI copies were contacted for `qid`, and
+    /// the query's resolved top-k (the AG reduces to exactly `k`).
+    QueryMeta { qid: u32, n_bi: u32, k: u32 },
     /// BI → AG control: how many DP messages this BI emitted for `qid`.
     BiMeta { qid: u32, n_dp: u32 },
     /// (v) DP → AG: the DP-local k nearest `(sqdist, id)` pairs.
@@ -93,17 +207,20 @@ pub enum Msg {
 }
 
 impl Msg {
-    /// Serialized payload size in bytes (MPI wire model: 4-byte ids/floats,
-    /// 8-byte keys, 1-byte table ids; headers charged by the packet layer).
+    /// Serialized payload size in bytes (4-byte ids/floats/k, 8-byte keys,
+    /// 1-byte table ids, options under default-elision; headers charged by
+    /// the packet layer).
     pub fn wire_size(&self) -> usize {
         match self {
             Msg::IndexBlock { flat, .. } => 8 + 4 * flat.len(),
-            Msg::QueryVec { raw, v, .. } => 4 + 4 * raw.len() + 4 * v.len(),
+            Msg::QueryVec { raw, v, opts, .. } => {
+                4 + 4 * raw.len() + 4 * v.len() + opts.wire_size()
+            }
             Msg::StoreObject { v, .. } => 4 + 4 * v.len(),
             Msg::IndexRef { .. } => 1 + 8 + 4 + 2,
-            Msg::Query { probes, v, .. } => 4 + probes.len() * 9 + 4 * v.len(),
-            Msg::CandidateReq { ids, v, .. } => 4 + 4 * ids.len() + 4 * v.len(),
-            Msg::QueryMeta { .. } => 8,
+            Msg::Query { probes, v, .. } => 4 + 4 + probes.len() * 9 + 4 * v.len(),
+            Msg::CandidateReq { ids, v, .. } => 4 + 4 + 4 * ids.len() + 4 * v.len(),
+            Msg::QueryMeta { .. } => 12,
             Msg::BiMeta { .. } => 8,
             Msg::LocalTopK { hits, .. } => 4 + 8 * hits.len(),
         }
@@ -133,14 +250,15 @@ mod tests {
 
     #[test]
     fn wire_sizes_scale_with_payload() {
-        let small = Msg::CandidateReq { qid: 0, ids: vec![1], v: arcv(128) };
-        let big = Msg::CandidateReq { qid: 0, ids: vec![1; 100], v: arcv(128) };
+        let small = Msg::CandidateReq { qid: 0, ids: vec![1], v: arcv(128), k: 10 };
+        let big = Msg::CandidateReq { qid: 0, ids: vec![1; 100], v: arcv(128), k: 10 };
         assert_eq!(big.wire_size() - small.wire_size(), 99 * 4);
         assert_eq!(Msg::StoreObject { id: 0, v: arcv(128) }.wire_size(), 4 + 512);
         assert_eq!(
             Msg::IndexRef { table: 0, key: 0, id: 0, dp: 0 }.wire_size(),
             15
         );
+        assert_eq!(Msg::QueryMeta { qid: 0, n_bi: 1, k: 5 }.wire_size(), 12);
     }
 
     #[test]
@@ -148,8 +266,50 @@ mod tests {
         let ib = Msg::IndexBlock { id_base: 0, rows: 2, flat: arcv(8) };
         assert_eq!(ib.qid(), None);
         assert_eq!(ib.wire_size(), 8 + 32);
-        let qv = Msg::QueryVec { qid: 4, raw: arcv(2), v: arcv(4) };
+        let qv = Msg::QueryVec {
+            qid: 4,
+            raw: arcv(2),
+            v: arcv(4),
+            opts: QueryOptions::default(),
+        };
         assert_eq!(qv.qid(), Some(4));
+        // default (all-inherit) options cost exactly the one flags byte
+        assert_eq!(qv.wire_size(), 4 + 8 + 16 + 1);
+    }
+
+    #[test]
+    fn options_resolution_and_clamping() {
+        let p = LshParams { l: 6, m: 32, w: 1200.0, k: 10, t: 30, seed: 42 };
+        let inherit = QueryOptions::default();
+        assert_eq!(inherit.k_or(p.k), 10);
+        assert_eq!(inherit.probes_or(p.t), 30);
+        assert_eq!(inherit.tables_in(p.l), 6);
+        assert_eq!(QueryOptions::from_params(&p), QueryOptions { k: 10, probes: 30, tables: 6, tag: 0 });
+        // both spellings of "the defaults" resolve identically
+        let explicit = QueryOptions::from_params(&p);
+        assert_eq!(explicit.k_or(p.k), inherit.k_or(p.k));
+        assert_eq!(explicit.probes_or(p.t), inherit.probes_or(p.t));
+        assert_eq!(explicit.tables_in(p.l), inherit.tables_in(p.l));
+        // explicit values win; tables clamp into 1..=L
+        let custom = QueryOptions { k: 3, probes: 4, tables: 99, tag: 7 };
+        assert_eq!(custom.k_or(p.k), 3);
+        assert_eq!(custom.probes_or(p.t), 4);
+        assert_eq!(custom.tables_in(p.l), 6);
+        assert_eq!(QueryOptions { tables: 2, ..Default::default() }.tables_in(6), 2);
+        // hostile values clamp instead of sizing absurd allocations
+        let hostile = QueryOptions { k: u32::MAX, probes: u32::MAX, ..Default::default() };
+        assert_eq!(hostile.k_or(p.k), MAX_QUERY_K);
+        assert_eq!(hostile.probes_or(p.t), MAX_QUERY_PROBES);
+    }
+
+    #[test]
+    fn options_wire_size_elides_defaults() {
+        assert_eq!(QueryOptions::default().wire_size(), 1);
+        assert_eq!(QueryOptions { k: 5, ..Default::default() }.wire_size(), 5);
+        assert_eq!(
+            QueryOptions { k: 5, probes: 2, tables: 1, tag: 9 }.wire_size(),
+            17
+        );
     }
 
     #[test]
@@ -163,7 +323,7 @@ mod tests {
     #[test]
     fn qid_extraction() {
         assert_eq!(Msg::StoreObject { id: 3, v: arcv(4) }.qid(), None);
-        assert_eq!(Msg::QueryMeta { qid: 9, n_bi: 1 }.qid(), Some(9));
+        assert_eq!(Msg::QueryMeta { qid: 9, n_bi: 1, k: 5 }.qid(), Some(9));
         assert_eq!(
             Msg::LocalTopK { qid: 7, hits: vec![] }.qid(),
             Some(7)

@@ -668,22 +668,39 @@ pub fn net_comparison() -> anyhow::Result<(Table, String)> {
 
 // ------------------------------------------------------------ streaming
 
+/// How a streaming experiment feeds queries into the session.
+#[derive(Clone, Copy, Debug)]
+enum AdmissionMode {
+    /// Pumped (batch) admission: the whole set is submitted up front and
+    /// claimed as it completes — every query's latency includes the
+    /// queueing delay of the batch ahead of it (saturation measurement).
+    Pumped,
+    /// Paced streaming (closed loop): the client claims completions
+    /// whenever W submissions are outstanding — the serving loop of a
+    /// latency-critical deployment.
+    Paced(usize),
+    /// Open-loop Poisson arrivals at `lambda` queries/second: arrival
+    /// times are drawn up front from an exponential inter-arrival process
+    /// (util/rng, deterministic in `seed`) and latency is measured from
+    /// the *scheduled* arrival — so queueing under overload is charged to
+    /// the queries that suffered it (no coordinated omission). This is
+    /// the paper's fixed-offered-load operating point, vs the
+    /// at-saturation numbers of the other modes.
+    Poisson { lambda: f64, seed: u64 },
+}
+
 /// Wall-clock submit→claim latency for every query of `w` through one
-/// serving session. `window = None` is *pumped* (batch) admission: the
-/// whole set is submitted up front and claimed as it completes — every
-/// query's latency includes the queueing delay of the batch ahead of it.
-/// `window = Some(W)` is paced streaming admission: the client claims
-/// completions whenever W submissions are outstanding, the serving loop
-/// of a latency-critical deployment.
+/// serving session, under `mode`.
 fn streaming_mode_latencies(
     exec: &dyn crate::dataflow::exec::Executor,
     cluster: &mut Cluster,
     w: &World,
     b: &Backends,
-    window: Option<usize>,
+    mode: AdmissionMode,
 ) -> (Vec<f64>, f64) {
     use crate::coordinator::session::IndexSession;
-    use std::time::Instant;
+    use crate::util::rng::Rng;
+    use std::time::{Duration, Instant};
 
     let session =
         IndexSession::attach(exec, cluster, b.hasher.as_ref(), Some(b.ranker.clone()));
@@ -691,8 +708,8 @@ fn streaming_mode_latencies(
     let t0 = Instant::now();
     let mut submit_ts: Vec<Instant> = Vec::with_capacity(qs.len());
     let mut lat = vec![0f64; qs.len()];
-    match window {
-        None => {
+    match mode {
+        AdmissionMode::Pumped => {
             for qi in 0..qs.len() {
                 submit_ts.push(Instant::now());
                 session.submit(qs.get(qi));
@@ -701,7 +718,7 @@ fn streaming_mode_latencies(
                 lat[t.0 as usize] = submit_ts[t.0 as usize].elapsed().as_secs_f64();
             }
         }
-        Some(wdw) => {
+        AdmissionMode::Paced(wdw) => {
             for qi in 0..qs.len() {
                 submit_ts.push(Instant::now());
                 session.submit(qs.get(qi));
@@ -714,6 +731,39 @@ fn streaming_mode_latencies(
                         None => break,
                     }
                 }
+            }
+            while let Some((t, _)) = session.recv() {
+                lat[t.0 as usize] = submit_ts[t.0 as usize].elapsed().as_secs_f64();
+            }
+        }
+        AdmissionMode::Poisson { lambda, seed } => {
+            let lambda = lambda.max(1e-3);
+            let mut rng = Rng::new(seed);
+            let mut offset = 0f64;
+            for qi in 0..qs.len() {
+                // exponential inter-arrival at rate lambda (u in (0,1])
+                offset += -(1.0 - rng.f64()).ln() / lambda;
+                let arrive = t0 + Duration::from_secs_f64(offset);
+                // claim completions while waiting out the arrival gap
+                loop {
+                    let now = Instant::now();
+                    if now >= arrive {
+                        break;
+                    }
+                    match session.try_recv() {
+                        Some((t, _)) => {
+                            lat[t.0 as usize] =
+                                submit_ts[t.0 as usize].elapsed().as_secs_f64();
+                        }
+                        None => std::thread::sleep(
+                            arrive.saturating_duration_since(now).min(Duration::from_micros(200)),
+                        ),
+                    }
+                }
+                // latency clocks from the *scheduled* arrival, so a late
+                // submit (previous arrival still blocking) is charged
+                submit_ts.push(arrive);
+                session.submit(qs.get(qi));
             }
             while let Some((t, _)) = session.recv() {
                 lat[t.0 as usize] = submit_ts[t.0 as usize].elapsed().as_secs_f64();
@@ -740,11 +790,15 @@ fn streaming_row(table: &mut Table, transport: &str, label: &str, lat: &[f64], w
 /// Streaming vs pumped admission (`parlsh experiment streaming`): the
 /// per-query latency argument for the serving regime — a query that
 /// enters the pipeline the moment it arrives vs one that waits behind a
-/// batch. Runs on the threaded executor and across real worker processes
-/// on the socket transport; the index is built once per transport and
-/// every admission mode reuses the same resident state. Returns the table
-/// and the `BENCH_streaming.json` document.
-pub fn streaming_comparison() -> anyhow::Result<(Table, String)> {
+/// batch, plus an **open-loop Poisson arrival schedule** (`--lambda`,
+/// queries/second; default 200) measuring p50/p99 at *fixed offered load*
+/// instead of at saturation (the ROADMAP follow-on: the paper's
+/// 90%-efficiency operating point). Runs on the threaded executor and
+/// across real worker processes on the socket transport; the index is
+/// built once per transport and every admission mode reuses the same
+/// resident state. Returns the table and the `BENCH_streaming.json`
+/// document.
+pub fn streaming_comparison(lambda: Option<f64>) -> anyhow::Result<(Table, String)> {
     use crate::coordinator::build_index_on;
     use crate::dataflow::exec::ThreadedExecutor;
     use crate::net::NetSession;
@@ -759,28 +813,33 @@ pub fn streaming_comparison() -> anyhow::Result<(Table, String)> {
     let w = world(&cfg);
     let b = backends(&cfg, w.data.dim);
 
-    let modes: [(&str, Option<usize>); 3] = [
-        ("pumped (batch)", None),
-        ("streaming W=1", Some(1)),
-        ("streaming W=4", Some(4)),
+    let lam = lambda.unwrap_or(200.0);
+    let modes: Vec<(String, AdmissionMode)> = vec![
+        ("pumped (batch)".into(), AdmissionMode::Pumped),
+        ("streaming W=1".into(), AdmissionMode::Paced(1)),
+        ("streaming W=4".into(), AdmissionMode::Paced(4)),
+        (
+            format!("poisson {lam:.0}/s (open loop)"),
+            AdmissionMode::Poisson { lambda: lam, seed: 0x9D15 },
+        ),
     ];
     let mut table =
         Table::new(&["transport", "admission", "mean ms", "p50 ms", "p99 ms", "q/s"]);
 
     {
         let mut cluster = build_index_on(&ThreadedExecutor, &cfg, &w.data, b.hasher.as_ref());
-        for (label, window) in modes {
+        for (label, mode) in &modes {
             let (lat, wall) =
-                streaming_mode_latencies(&ThreadedExecutor, &mut cluster, &w, &b, window);
+                streaming_mode_latencies(&ThreadedExecutor, &mut cluster, &w, &b, *mode);
             streaming_row(&mut table, "threaded", label, &lat, wall);
         }
     }
     {
         let sess = NetSession::launch(&cfg, w.data.dim)?;
         let mut cluster = build_index_on(sess.executor(), &cfg, &w.data, b.hasher.as_ref());
-        for (label, window) in modes {
+        for (label, mode) in &modes {
             let (lat, wall) =
-                streaming_mode_latencies(sess.executor(), &mut cluster, &w, &b, window);
+                streaming_mode_latencies(sess.executor(), &mut cluster, &w, &b, *mode);
             streaming_row(&mut table, "socket", label, &lat, wall);
         }
         sess.shutdown()?;
@@ -791,6 +850,63 @@ pub fn streaming_comparison() -> anyhow::Result<(Table, String)> {
         table.to_json()
     );
     Ok((table, json))
+}
+
+// ------------------------------------------------- resident probe sweep
+
+/// Per-query probe-budget sweep on ONE resident index (`parlsh experiment
+/// probes`): the per-query-plan redesign (`QueryOptions`) makes T a
+/// request-time knob, so the whole recall-vs-latency curve comes off a
+/// single session — no rebuild per point, unlike `multiprobe_sweep`
+/// (which also resamples nothing here: same family, same stores).
+pub fn probes_sweep_resident(ts: &[usize]) -> Table {
+    use crate::coordinator::build_index_on;
+    use crate::coordinator::session::IndexSession;
+    use crate::dataflow::exec::ThreadedExecutor;
+    use crate::dataflow::message::QueryOptions;
+
+    let mut cfg = Config::default();
+    cfg.data.n = env_usize("PARLSH_N", 100_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 200);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    let w = world(&cfg);
+    let b = backends(&cfg, w.data.dim);
+    let mut cluster = build_index_on(&ThreadedExecutor, &cfg, &w.data, b.hasher.as_ref());
+    let mut table = Table::new(&["T (per-query)", "recall", "mean ms", "p99 ms", "q/s"]);
+    {
+        let session = IndexSession::attach(
+            &ThreadedExecutor,
+            &mut cluster,
+            b.hasher.as_ref(),
+            Some(b.ranker.clone()),
+        );
+        for &t in ts {
+            let t0 = std::time::Instant::now();
+            let opts = QueryOptions { probes: t as u32, ..Default::default() };
+            let range = session.submit_batch_with(&w.queries, opts);
+            let done = session.drain_full();
+            let wall = t0.elapsed().as_secs_f64();
+            let mut retrieved: Vec<Vec<u32>> = vec![Vec::new(); w.queries.len()];
+            let mut lat = Vec::with_capacity(done.len());
+            for (ticket, echo, hits, secs) in &done {
+                debug_assert_eq!(echo.probes as usize, t, "option echo lost the plan");
+                let qi = (ticket.0 - range.start) as usize;
+                retrieved[qi] = hits.iter().map(|&(_, id)| id).collect();
+                lat.push(*secs);
+            }
+            let recall = recall_at_k(&retrieved, &w.gt);
+            let st = crate::metrics::latency_stats(&lat);
+            table.row(&[
+                format!("{t}"),
+                format!("{recall:.3}"),
+                format!("{:.2}", st.mean_ms),
+                format!("{:.2}", st.p99_ms),
+                format!("{:.1}", w.queries.len() as f64 / wall.max(1e-9)),
+            ]);
+        }
+        session.close();
+    }
+    table
 }
 
 // -------------------------------------------------------- bench history

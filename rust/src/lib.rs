@@ -28,7 +28,12 @@
 //! * [`stages`] + [`coordinator`] — the five paper stages and the serving
 //!   API (DESIGN.md §Service API): a persistent [`IndexSession`] holds the
 //!   index resident on one executor and exposes incremental `insert`,
-//!   streaming `submit`/`recv` query admission with [`QueryTicket`]s, live
+//!   streaming `submit`/`recv` query admission with [`QueryTicket`]s —
+//!   including per-query search plans via
+//!   [`submit_with`](coordinator::session::IndexSession::submit_with) and
+//!   [`QueryOptions`] (per-request `k`, probe budget `T`, table count
+//!   `L'`, opaque `tag`, echoed per ticket on
+//!   [`recv_full`](coordinator::session::IndexSession::recv_full)) — live
 //!   `stats` and a typed `close`; the one-shot phase calls
 //!   (`build_index[_on]`, `search[_on]`) are thin wrappers over it;
 //! * [`partition`] — mod / Z-order / LSH `obj_map` + `bucket_map` strategies;
@@ -65,3 +70,4 @@ pub use core::lsh::{HashFamily, LshParams};
 pub use coordinator::session::{IndexSession, QueryTicket, SessionStats};
 pub use coordinator::{build_index, search, Cluster};
 pub use data::Dataset;
+pub use dataflow::message::QueryOptions;

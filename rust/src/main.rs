@@ -26,6 +26,7 @@ use parlsh::net::NetSession;
 use parlsh::simnet::calibrate;
 use parlsh::util::cli::Args;
 use parlsh::util::timer::Timer;
+use parlsh::QueryOptions;
 use std::io::{BufRead, IsTerminal};
 
 fn main() {
@@ -79,13 +80,19 @@ USAGE:
   parlsh worker --listen=ADDR        host a node's stage copies (spawned
                                      by the socket driver; prints
                                      `PARLSH_WORKER_LISTEN <addr>`)
-  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|net|streaming|history|all>
+  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|probes|net|streaming|history|all>
                                      (`executors`/`net`/`streaming` also
                                      write BENCH_*.json and archive them
                                      under bench_history/ keyed by git
                                      SHA; `history` diffs the archived
-                                     runs; `net` and `streaming` spawn
-                                     processes and are not part of `all`)
+                                     runs; `probes` sweeps the per-query
+                                     probe budget T on ONE resident index
+                                     — no rebuild per point; `streaming`
+                                     adds an open-loop Poisson arrival
+                                     row, rate set by --lambda=Q_PER_SEC
+                                     (default 200); `net` and `streaming`
+                                     spawn processes and are not part of
+                                     `all`)
   parlsh tune       [--target=0.8] [--set ...]    suggest w, tune T (and M)
   parlsh calibrate
 
@@ -93,6 +100,14 @@ USAGE:
 is submitted. --set stream.inflight=W bounds queries in flight inside the
 pipeline (0 = open loop, default); --set stream.pending_cap=P adds
 backpressure — submission blocks while P queries are outstanding.
+
+Per-query search plans (`serve`): --k=K / --probes=T / --tables=L' set the
+default plan for every query of this serving run (0 = the config value),
+and text query sources — piped stdin, or a --queries=FILE.txt file — may
+prefix any line with k=.. t=.. l=.. tag=.. tokens to override the plan
+for that one query:  `k=3 t=8 0.1 0.2 ...`. Results print with the
+per-ticket option echo. (--queries files with any other extension keep
+the binary behavior: .bvecs as bytes, everything else as fvecs.)
 
 Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
 scalar path; PARLSH_ARTIFACTS points at the AOT artifact dir;
@@ -198,10 +213,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
-/// Print one completed ticket and record its retrieved ids (for recall
-/// scoring when the workload is synthetic). Tickets are dense, so the
-/// ticket number doubles as the query index.
-fn record_result(retrieved: &mut Vec<Vec<u32>>, t: parlsh::QueryTicket, hits: &[(f32, u32)]) {
+/// Print one completed ticket — with its per-query plan echo — and record
+/// its retrieved ids (for recall scoring when the workload is synthetic).
+/// Tickets are dense, so the ticket number doubles as the query index.
+fn record_result(
+    retrieved: &mut Vec<Vec<u32>>,
+    t: parlsh::QueryTicket,
+    opts: QueryOptions,
+    hits: &[(f32, u32)],
+) {
     let i = t.0 as usize;
     if retrieved.len() <= i {
         retrieved.resize(i + 1, Vec::new());
@@ -212,38 +232,78 @@ fn record_result(retrieved: &mut Vec<Vec<u32>>, t: parlsh::QueryTicket, hits: &[
         .take(5)
         .map(|&(d, id)| format!("{id}:{d:.1}"))
         .collect();
-    println!("ticket {:>5} -> [{}]", t.0, head.join(" "));
+    let tag = if opts.tag != 0 { format!(" tag={}", opts.tag) } else { String::new() };
+    println!(
+        "ticket {:>5} [k={} t={} l={}{tag}] -> [{}]",
+        t.0,
+        opts.k,
+        opts.probes,
+        opts.tables,
+        head.join(" ")
+    );
 }
 
-/// Submit queries one at a time; under closed-loop admission
-/// (`stream.inflight = W`) block on completions whenever W are in flight,
-/// printing them as they finish. Drains the tail before returning.
+/// Parse one text query line: optional `k=..` / `t=..` (or `probes=..`) /
+/// `l=..` (or `tables=..`) / `tag=..` tokens before the vector values
+/// override `base` for this one query; the remaining whitespace-separated
+/// tokens are the f32 coordinates.
+fn parse_query_line(line: &str, base: QueryOptions) -> Result<(QueryOptions, Vec<f32>)> {
+    let mut opts = base;
+    let mut vals: Vec<f32> = Vec::new();
+    for tok in line.split_whitespace() {
+        if vals.is_empty() {
+            if let Some((key, v)) = tok.split_once('=') {
+                let n: u32 = v
+                    .parse()
+                    .map_err(|e| anyhow!("bad query option `{tok}`: {e}"))?;
+                match key {
+                    "k" => opts.k = n,
+                    "t" | "probes" => opts.probes = n,
+                    "l" | "tables" => opts.tables = n,
+                    "tag" => opts.tag = n,
+                    _ => bail!("unknown query option `{tok}` (k=, t=/probes=, l=/tables=, tag=)"),
+                }
+                continue;
+            }
+        }
+        vals.push(
+            tok.parse::<f32>()
+                .map_err(|e| anyhow!("bad query value `{tok}`: {e}"))?,
+        );
+    }
+    Ok((opts, vals))
+}
+
+/// Submit queries one at a time — each with its own plan — through
+/// `submit_with`; under closed-loop admission (`stream.inflight = W`)
+/// block on completions whenever W are in flight, printing them as they
+/// finish. Drains the tail before returning.
 fn serve_stream(
     session: &IndexSession,
-    queries: impl Iterator<Item = Result<Vec<f32>>>,
+    queries: impl Iterator<Item = Result<(QueryOptions, Vec<f32>)>>,
     dim: usize,
     window: usize,
     retrieved: &mut Vec<Vec<u32>>,
 ) -> Result<usize> {
     let mut submitted = 0usize;
     for q in queries {
-        let q = q?;
+        let (opts, q) = q?;
         if q.len() != dim {
             bail!("query has {} values, index dimensionality is {dim}", q.len());
         }
-        session.submit(&q);
+        session.submit_with(&q, opts);
         submitted += 1;
         if window > 0 {
             while session.in_flight() >= window {
-                match session.recv() {
-                    Some((t, hits)) => record_result(retrieved, t, &hits),
+                match session.recv_full() {
+                    Some((t, opts, hits, _)) => record_result(retrieved, t, opts, &hits),
                     None => break,
                 }
             }
         }
     }
-    for (t, hits) in session.drain() {
-        record_result(retrieved, t, &hits);
+    for (t, opts, hits, _) in session.drain_full() {
+        record_result(retrieved, t, opts, &hits);
     }
     Ok(submitted)
 }
@@ -258,6 +318,14 @@ fn serve_session(
 ) -> Result<()> {
     let dim = w.data.dim;
     let window = cfg.stream.inflight;
+    // The serving run's default plan: --k/--probes/--tables override the
+    // config per run (0 = inherit); per-line prefixes override per query.
+    let base = QueryOptions {
+        k: args.opt_usize("k", 0).map_err(|e| anyhow!(e))? as u32,
+        probes: args.opt_usize("probes", 0).map_err(|e| anyhow!(e))? as u32,
+        tables: args.opt_usize("tables", 0).map_err(|e| anyhow!(e))? as u32,
+        tag: 0,
+    };
     let mut cluster = Cluster::empty(cfg, dim);
     let session =
         IndexSession::attach(exec, &mut cluster, b.hasher.as_ref(), Some(b.ranker.clone()));
@@ -269,6 +337,13 @@ fn serve_session(
         t.secs(),
         if b.engine_path { "PJRT artifact" } else { "scalar" },
     );
+    let defaults = session.default_options();
+    println!(
+        "default plan: k={} probes={} tables={} (override with --k/--probes/--tables or k=/t=/l= line prefixes)",
+        if base.k != 0 { base.k } else { defaults.k },
+        if base.probes != 0 { base.probes } else { defaults.probes },
+        if base.tables != 0 { base.tables } else { defaults.tables },
+    );
     let admission = match window {
         0 => "open loop".to_string(),
         win => format!("closed loop W={win}"),
@@ -278,26 +353,43 @@ fn serve_session(
     let mut retrieved: Vec<Vec<u32>> = Vec::new();
     let mut synthetic = false;
     let submitted = if let Some(path) = args.opt("queries") {
-        let qs = if path.ends_with(".bvecs") {
-            parlsh::data::io::read_bvecs(path, 0)?
+        if path.ends_with(".txt") {
+            // Text query file: one query per line, optional per-line
+            // k=/t=/l=/tag= plan prefixes — the submit_with path end to
+            // end. Only `.txt` selects this; every other extension keeps
+            // the historical binary behavior below.
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("read {path}: {e}"))?;
+            println!("streaming text queries from {path} (per-line k=/t=/l= prefixes honored)");
+            // lazy: each line is parsed and submitted as the stream
+            // reaches it — no second materialization of the whole file
+            let lines = text
+                .lines()
+                .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+                .map(|l| parse_query_line(l, base));
+            serve_stream(&session, lines, dim, window, &mut retrieved)?
         } else {
-            parlsh::data::io::read_fvecs(path, 0)?
-        };
-        println!("streaming {} queries from {path}", qs.len());
-        serve_stream(&session, dataset_queries(&qs), dim, window, &mut retrieved)?
+            // Binary vectors: .bvecs as bytes, anything else as fvecs —
+            // the pre-plan behavior, unchanged.
+            let qs = if path.ends_with(".bvecs") {
+                parlsh::data::io::read_bvecs(path, 0)?
+            } else {
+                parlsh::data::io::read_fvecs(path, 0)?
+            };
+            println!("streaming {} queries from {path}", qs.len());
+            serve_stream(&session, dataset_queries(&qs, base), dim, window, &mut retrieved)?
+        }
     } else if !std::io::stdin().is_terminal() {
-        println!("reading queries from stdin ({dim} whitespace-separated f32s per line)...");
+        println!(
+            "reading queries from stdin ({dim} whitespace-separated f32s per line; \
+             optional k=/t=/l=/tag= prefixes)..."
+        );
         let lines = std::io::stdin().lock().lines().filter_map(|line| match line {
             Err(e) => Some(Err(anyhow!("read stdin: {e}"))),
-            Ok(l) if l.trim().is_empty() => None, // blank lines are skipped
-            Ok(l) => Some(
-                l.split_whitespace()
-                    .map(|tok| {
-                        tok.parse::<f32>()
-                            .map_err(|e| anyhow!("bad query value `{tok}`: {e}"))
-                    })
-                    .collect::<Result<Vec<f32>>>(),
-            ),
+            // blank and `#` comment lines are skipped — same per-line
+            // format as a --queries=FILE.txt file
+            Ok(l) if l.trim().is_empty() || l.trim_start().starts_with('#') => None,
+            Ok(l) => Some(parse_query_line(&l, base)),
         });
         serve_stream(&session, lines, dim, window, &mut retrieved)?
     } else {
@@ -306,7 +398,7 @@ fn serve_session(
             w.queries.len()
         );
         synthetic = true;
-        serve_stream(&session, dataset_queries(&w.queries), dim, window, &mut retrieved)?
+        serve_stream(&session, dataset_queries(&w.queries, base), dim, window, &mut retrieved)?
     };
     let secs = t.secs();
     let stats = session.close();
@@ -342,9 +434,21 @@ fn serve_session(
         );
     }
     if synthetic {
-        // Tickets are issued in submission order, so they line up with gt.
-        let recall = recall_at_k(&retrieved, &w.gt);
-        println!("recall@{} = {recall:.3}", cfg.lsh.k);
+        if base == QueryOptions::default() {
+            // Tickets are issued in submission order, so they line up
+            // with gt (computed at the config's k).
+            let recall = recall_at_k(&retrieved, &w.gt);
+            println!("recall@{} = {recall:.3}", cfg.lsh.k);
+        } else {
+            // A --k/--probes/--tables override changes the retrieved sets;
+            // scoring them against ground truth at the config's k would
+            // print a mislabeled number.
+            println!(
+                "(recall suppressed: run plan overrides the config defaults, \
+                 ground truth is recall@{})",
+                cfg.lsh.k
+            );
+        }
     }
     if transport == "socket" {
         print!("{}", stats.search_meter.link_report());
@@ -352,9 +456,13 @@ fn serve_session(
     Ok(())
 }
 
-/// A dataset's rows as an owned-query iterator for [`serve_stream`].
-fn dataset_queries(ds: &Dataset) -> impl Iterator<Item = Result<Vec<f32>>> + '_ {
-    (0..ds.len()).map(move |i| Ok(ds.get(i).to_vec()))
+/// A dataset's rows as an owned-query iterator for [`serve_stream`], all
+/// under one base plan.
+fn dataset_queries(
+    ds: &Dataset,
+    base: QueryOptions,
+) -> impl Iterator<Item = Result<(QueryOptions, Vec<f32>)>> + '_ {
+    (0..ds.len()).map(move |i| Ok((base, ds.get(i).to_vec())))
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -404,6 +512,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 let archived = exp::archive_bench("BENCH_executors.json")?;
                 println!("(wrote BENCH_executors.json; archived {archived})");
             }
+            "probes" => {
+                println!("== Per-query probe sweep on one resident index (QueryOptions) ==");
+                exp::probes_sweep_resident(&[1, 4, 8, 16, 30, 60]).print();
+            }
             "net" => {
                 println!("== Socket transport: obj_map strategies by real wire bytes ==");
                 let (t, json) = exp::net_comparison()?;
@@ -414,7 +526,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             }
             "streaming" => {
                 println!("== Streaming vs pumped admission: per-query latency ==");
-                let (t, json) = exp::streaming_comparison()?;
+                let lambda = args.opt_f64("lambda", 0.0).map_err(|e| anyhow!(e))?;
+                let (t, json) =
+                    exp::streaming_comparison(if lambda > 0.0 { Some(lambda) } else { None })?;
                 t.print();
                 std::fs::write("BENCH_streaming.json", json)?;
                 let archived = exp::archive_bench("BENCH_streaming.json")?;
@@ -431,7 +545,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if id == "all" {
         for id in [
             "datasets", "fig3", "fig4", "table3", "fig5", "fig6", "ablation",
-            "executors",
+            "executors", "probes",
         ] {
             run(id)?;
             println!();

@@ -137,36 +137,8 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn to_string(&self) -> String {
-        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
-        for row in &self.rows {
-            for (i, c) in row.iter().enumerate() {
-                widths[i] = widths[i].max(c.len());
-            }
-        }
-        let mut out = String::new();
-        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
-            let mut line = String::from("|");
-            for (c, w) in cells.iter().zip(widths) {
-                line.push_str(&format!(" {:>w$} |", c, w = w));
-            }
-            line.push('\n');
-            line
-        };
-        out.push_str(&fmt_row(&self.headers, &widths));
-        out.push('|');
-        for w in &widths {
-            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
-        }
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(&fmt_row(row, &widths));
-        }
-        out
-    }
-
     pub fn print(&self) {
-        print!("{}", self.to_string());
+        print!("{self}");
     }
 
     /// The table as a JSON object: `{"headers": [...], "rows": [[...]]}`.
@@ -196,6 +168,38 @@ impl Table {
             self.to_json()
         );
         std::fs::write(path, doc)
+    }
+}
+
+/// The fixed-width rendering (`to_string()` comes via `Display`, so the
+/// printer is not an inherent shadow of `ToString`).
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |f: &mut std::fmt::Formatter<'_>,
+                       cells: &[String]|
+         -> std::fmt::Result {
+            write!(f, "|")?;
+            for (c, w) in cells.iter().zip(&widths) {
+                write!(f, " {:>w$} |", c, w = w)?;
+            }
+            writeln!(f)
+        };
+        fmt_row(&mut *f, &self.headers)?;
+        write!(f, "|")?;
+        for w in &widths {
+            write!(f, "{:-<w$}|", "", w = w + 2)?;
+        }
+        writeln!(f)?;
+        for row in &self.rows {
+            fmt_row(&mut *f, row)?;
+        }
+        Ok(())
     }
 }
 

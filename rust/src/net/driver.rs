@@ -18,6 +18,51 @@
 //! `FlushReq`/`FlushAck` meter barrier runs once per stream at `finish`
 //! instead of once per pump.
 //!
+//! **Bounded wire fan-in.** The driver-side event queue — one channel
+//! unifying every worker reader's decoded frames with a streaming run's
+//! ingress — is *bounded* by `net.queue_frames` (the same knob that
+//! bounds worker reader→dispatch queues): a full queue blocks the reader
+//! threads, which stop draining their sockets, which backpressures the
+//! workers' TCP senders instead of buffering an unbounded event backlog
+//! in driver memory. Depth argument: in **closed-loop** operation
+//! (`stream.inflight = W`) at most `W · (n_bi + n_dp + 1)` wire events
+//! can be outstanding per the completion accounting (QueryMeta + BiMetas
+//! + LocalTopKs per in-flight query), so a default-sized queue (1024
+//! frames) never fills and the bound is free. In **open-loop** operation
+//! the bound is what limits the *wire* backlog: fan-in beyond the queue
+//! parks in kernel TCP buffers and ultimately in the workers' own
+//! bounded queues, so pressure propagates along the dataflow DAG
+//! (worker → driver is its last edge — the driver's admission loops
+//! always drain this queue before blocking, which is what keeps the
+//! cycle through `peers[..].send` unreachable at the default depth; size
+//! `net.queue_frames` ≥ the expected per-query fan-in times the
+//! concurrent query count). Streaming ingress shares the channel: the
+//! blocking `submit` path parks in short ticks while it is full and
+//! fails loudly (never wedges) if the admission thread is gone; the
+//! non-blocking `try_submit` path treats a full channel as a decline,
+//! exactly like a full backpressure window, so callers holding their own
+//! locks are never parked here. Note what the bound does **not** cover:
+//! ingress the admission loop has already accepted but deferred behind
+//! the closed-loop window sits in its in-memory `pending` queue, whose
+//! depth is governed end-to-end by `stream.pending_cap` (the session
+//! gate; 0 = the caller chose unbounded) — same contract as the
+//! in-process streaming runs.
+//!
+//! Residual hazard, and why it fails loudly instead of hanging: with
+//! blocking IO, bounding the worker→driver edge weakens PR 4's DAG
+//! argument ("the driver always drains its side") — under extreme
+//! open-loop pressure a full cycle can wedge (driver blocked in a peer
+//! `send` ⇢ worker not reading ⇢ worker blocked writing results ⇢
+//! driver readers parked on the full queue ⇢ nobody drains). The
+//! admission loop's recv-side stall clock cannot fire while the driver
+//! is blocked in a *write*, so every driver↔worker socket carries a
+//! write timeout at the same `PHASE_STALL_TIMEOUT` horizon: a wedged
+//! cycle surfaces as a typed IO error that fails the phase/stream (and
+//! tears the fleet down) rather than a silent permanent hang.
+//! Closed-loop windows or `stream.pending_cap` keep the cycle
+//! unreachable in the first place; removing it entirely is the
+//! poll-based-IO ROADMAP item.
+//!
 //! [`SocketExecutor::run`] mirrors the threaded executor's admission loop:
 //! closed-loop batched admission via `Workload::window`, completion events
 //! from the (local) AG copies, and per-query `Done` acks fanned out to the
@@ -47,9 +92,14 @@ use std::io::{BufRead, BufReader};
 use std::net::TcpStream;
 use std::path::Path;
 use std::process::{Child, Command, Stdio};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// How long a streaming submitter parks between attempts while the bounded
+/// driver event queue is full. Only paid when wire fan-in saturates the
+/// queue — the backpressure path, where event latency dominates anyway.
+const EV_FULL_TICK: Duration = Duration::from_micros(200);
 
 /// How long to wait on control responses (handshake, barriers, snapshots).
 const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
@@ -80,8 +130,9 @@ enum DriverEv {
 struct Session {
     peers: Vec<PeerConn>,
     ev_rx: Receiver<DriverEv>,
-    /// Sender half of `ev_rx` — streaming runs clone it for their ingress.
-    ev_tx: Sender<DriverEv>,
+    /// Sender half of `ev_rx` (bounded, `net.queue_frames`) — streaming
+    /// runs clone it for their ingress.
+    ev_tx: SyncSender<DriverEv>,
     placement: Placement,
     /// Worker nodes hosting at least one DP copy (get per-query `Done`s).
     dp_hosts: Vec<u16>,
@@ -151,7 +202,7 @@ impl Executor for SocketExecutor {
             panic!("stream placement differs from the placement workers were launched with");
         }
         let peers = std::mem::take(&mut s.peers);
-        let ev_rx = std::mem::replace(&mut s.ev_rx, mpsc::channel().1);
+        let ev_rx = std::mem::replace(&mut s.ev_rx, mpsc::sync_channel(1).1);
         let ev_tx = s.ev_tx.clone();
         let dp_hosts = s.dp_hosts.clone();
         let flush_seq = s.flush_seq;
@@ -196,17 +247,67 @@ struct SocketStreamJoin {
 /// The socket transport's [`StreamRun`] handle.
 pub struct SocketStreamRun<'e> {
     exec: &'e SocketExecutor,
-    ev_tx: Sender<DriverEv>,
+    ev_tx: SyncSender<DriverEv>,
     gate: Arc<StreamGate>,
     egress_rx: Receiver<StreamCompletion>,
     admission: Option<std::thread::JoinHandle<SocketStreamJoin>>,
 }
 
+/// Enqueue `Finish` on the bounded event queue without ever wedging: if
+/// the admission thread already exited (error path — nobody drains the
+/// queue anymore), skip the send and let the caller join directly.
+fn send_finish(
+    ev_tx: &SyncSender<DriverEv>,
+    admission: &Option<std::thread::JoinHandle<SocketStreamJoin>>,
+) {
+    loop {
+        match admission {
+            None => return,
+            Some(h) if h.is_finished() => return,
+            Some(_) => {}
+        }
+        match ev_tx.try_send(DriverEv::Finish) {
+            Ok(()) => return,
+            Err(TrySendError::Full(_)) => std::thread::sleep(EV_FULL_TICK),
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
 impl SocketStreamRun<'_> {
+    /// True when the admission thread can no longer drain the queue (gone
+    /// or already exited) — continuing to wait on it would wedge.
+    fn admission_gone(&self) -> bool {
+        self.admission.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+    }
+
+    /// Enqueue one ingress event on the bounded driver queue. Parks in
+    /// short ticks while wire fan-in holds the queue full (backpressure —
+    /// the queue is shared with the worker readers) and dies loudly if
+    /// the admission thread is gone instead of blocking forever. Only the
+    /// *blocking* [`StreamRun::submit`] path uses this; `try_submit` stays
+    /// genuinely non-blocking (a full queue is a decline there).
+    fn send_ingress(&mut self, msg: Msg) {
+        let mut ev = DriverEv::Ingress(msg);
+        loop {
+            match self.ev_tx.try_send(ev) {
+                Ok(()) => return,
+                Err(TrySendError::Full(back)) => {
+                    if self.admission_gone() {
+                        self.die();
+                    }
+                    ev = back;
+                    std::thread::sleep(EV_FULL_TICK);
+                }
+                Err(TrySendError::Disconnected(_)) => self.die(),
+            }
+        }
+    }
+
     /// Wind the admission thread down and hand the connections back to the
     /// executor, returning the run's accounting (+ typed failure, if any).
     fn wind_down(&mut self) -> (TrafficMeter, Vec<(StageKind, u16, WorkStats)>, Option<String>) {
-        let _ = self.ev_tx.send(DriverEv::Finish);
+        send_finish(&self.ev_tx, &self.admission);
         let handle = self.admission.take().expect("socket stream already wound down");
         let join = handle
             .join()
@@ -240,23 +341,38 @@ impl StreamRun for SocketStreamRun<'_> {
         if gated && !self.gate.acquire() {
             self.die();
         }
-        if self.ev_tx.send(DriverEv::Ingress(msg)).is_err() {
-            self.die();
-        }
+        self.send_ingress(msg);
     }
 
     fn try_submit(&mut self, msg: Msg) -> std::result::Result<(), Msg> {
-        if msg.qid().is_some() {
+        let gated = msg.qid().is_some();
+        if gated {
             match self.gate.try_acquire() {
                 Ok(true) => {}
                 Ok(false) => return Err(msg),
                 Err(()) => self.die(),
             }
         }
-        if self.ev_tx.send(DriverEv::Ingress(msg)).is_err() {
-            self.die();
+        // Genuinely non-blocking: a full driver queue is a decline, same
+        // as a full backpressure window — callers (the session's
+        // try_submit_one runs under the session mutex) must never be
+        // parked here, or non-blocking calls would stall behind us.
+        match self.ev_tx.try_send(DriverEv::Ingress(msg)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(ev)) => {
+                if gated {
+                    self.gate.release();
+                }
+                if self.admission_gone() {
+                    self.die();
+                }
+                match ev {
+                    DriverEv::Ingress(m) => Err(m),
+                    _ => unreachable!("try_send returned a different event"),
+                }
+            }
+            Err(TrySendError::Disconnected(_)) => self.die(),
         }
-        Ok(())
     }
 
     fn can_submit(&self) -> bool {
@@ -297,8 +413,8 @@ impl Drop for SocketStreamRun<'_> {
         // Dropped without `finish` (caller unwound): wind down and restore
         // the connections without panicking — aborting during an unwind
         // would take the whole process down.
+        send_finish(&self.ev_tx, &self.admission);
         if let Some(handle) = self.admission.take() {
-            let _ = self.ev_tx.send(DriverEv::Finish);
             match handle.join() {
                 Ok(join) => {
                     let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
@@ -819,7 +935,7 @@ impl NetSession {
                 cfg.sock.listen
             );
         }
-        let placeholder = mpsc::channel();
+        let placeholder = mpsc::sync_channel(1);
         let mut session = NetSession {
             children: Vec::with_capacity(n_workers),
             exec: SocketExecutor {
@@ -875,9 +991,11 @@ impl NetSession {
             addrs.push(addr);
         }
 
-        // Connect + handshake each worker; reader threads feed one channel.
+        // Connect + handshake each worker; reader threads feed one
+        // *bounded* channel (`net.queue_frames`, see the module docs for
+        // the closed-loop-vs-open-loop depth argument).
         let digest = wire::config_digest(dim as u32, &cfg.lsh, &cfg.cluster, &cfg.stream);
-        let (ev_tx, ev_rx) = mpsc::channel::<DriverEv>();
+        let (ev_tx, ev_rx) = mpsc::sync_channel::<DriverEv>(cfg.sock.queue_frames.max(1));
         let mut peers = Vec::with_capacity(n_workers);
         for node in 0..n_workers {
             let stream = connect_retry(
@@ -886,6 +1004,13 @@ impl NetSession {
                 cfg.sock.retry_ms,
             )
             .with_context(|| format!("connect worker {node} at {}", addrs[node]))?;
+            // Writes that stall past the phase-stall horizon fail loudly
+            // (typed IO error → phase/stream error) instead of hanging:
+            // with the bounded reader queues a fully-wedged
+            // backpressure cycle is theoretically reachable under
+            // extreme open-loop pressure, and a blocked write has no
+            // recv-side stall clock to save it (see the module docs).
+            stream.set_write_timeout(Some(PHASE_STALL_TIMEOUT)).ok();
             let reader = stream.try_clone().context("clone worker conn")?;
             spawn_reader(reader, node as u16, ev_tx.clone(), cfg.sock.max_frame_bytes);
             let mut pc = PeerConn::new(stream, cfg.stream.agg_bytes);
@@ -1038,11 +1163,14 @@ impl Drop for NetSession {
     }
 }
 
-fn spawn_reader(stream: TcpStream, from: u16, tx: Sender<DriverEv>, max_frame: usize) {
+fn spawn_reader(stream: TcpStream, from: u16, tx: SyncSender<DriverEv>, max_frame: usize) {
     std::thread::spawn(move || reader_loop(stream, from, tx, max_frame));
 }
 
-fn reader_loop(mut stream: TcpStream, from: u16, tx: Sender<DriverEv>, max_frame: usize) {
+/// One reader per worker connection. The `tx` channel is bounded: a full
+/// driver queue blocks this thread, which stops draining the socket and
+/// backpressures the worker's TCP sender (see the module docs).
+fn reader_loop(mut stream: TcpStream, from: u16, tx: SyncSender<DriverEv>, max_frame: usize) {
     loop {
         let frame = match wire::read_frame(&mut stream, max_frame) {
             Ok(f) => f,

@@ -30,18 +30,70 @@
 
 use crate::config::{ClusterConfig, ObjMapStrategy, StreamConfig};
 use crate::core::lsh::LshParams;
-use crate::dataflow::message::{Dest, Msg, StageKind};
+use crate::dataflow::message::{Dest, Msg, QueryOptions, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::stages::{BiState, DpState};
 use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
 use std::io::Read;
 use std::sync::Arc;
 
-// v2: FlushAck carries per-copy WorkStats after the link list, so the
-// driver's work accounting is complete under the socket transport.
-pub const WIRE_VERSION: u8 = 2;
+// v3: per-query search plans — QueryVec carries QueryOptions (flags byte
+// + default-elided u32 fields), Query/CandidateReq/QueryMeta carry the
+// query's resolved k, and the handshake config digest covers the wire
+// version itself, so a v2 peer is rejected at `Hello` as well as at every
+// frame header. (v2 added per-copy WorkStats to FlushAck.)
+pub const WIRE_VERSION: u8 = 3;
 pub const MAGIC: u16 = 0x504C;
 pub const HEADER_LEN: usize = 12;
+
+/// Typed frame-level decode failure, surfaced by [`read_frame`]. Callers
+/// that only report can `Display` it; version-negotiation logic can match
+/// on [`WireError::VersionMismatch`] — a v2 (or any non-v3) frame is a
+/// *typed* rejection, never a panic and never a misparse.
+#[derive(Debug)]
+pub enum WireError {
+    /// Underlying IO failed (`what` names the read that failed).
+    Io { what: &'static str, err: std::io::Error },
+    /// First two header bytes are not the `PL` magic.
+    BadMagic(u16),
+    /// Peer speaks a different wire version (e.g. a v2 worker).
+    VersionMismatch { got: u8, want: u8 },
+    /// Unknown frame-kind byte.
+    UnknownKind(u8),
+    /// Declared payload length exceeds the configured cap.
+    Oversize { len: usize, cap: usize },
+    /// FNV checksum over header+payload did not match.
+    Checksum { got: u32, want: u32 },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io { what, err } => write!(f, "{what}: {err}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#06x}"),
+            WireError::VersionMismatch { got, want } => {
+                write!(f, "wire version {got} (want {want})")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversize { len, cap } => {
+                write!(f, "frame of {len} bytes exceeds cap {cap}")
+            }
+            WireError::Checksum { got, want } => {
+                write!(f, "frame checksum mismatch (got {got:#010x}, want {want:#010x})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io { err, .. } => Some(err),
+            _ => None,
+        }
+    }
+}
 
 /// What a frame carries. Discriminants are the on-wire kind byte.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -234,30 +286,34 @@ pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Read and verify one frame. Errors on EOF, bad magic/version/kind, a
-/// length above `max_frame`, or a checksum mismatch.
-pub fn read_frame(r: &mut dyn Read, max_frame: usize) -> Result<Frame> {
+/// Read and verify one frame. Errors (typed, [`WireError`]) on EOF, bad
+/// magic, a version other than [`WIRE_VERSION`] (v2 peers are rejected
+/// here, per frame — and at the handshake digest, which covers the
+/// version), an unknown kind, a length above `max_frame`, or a checksum
+/// mismatch.
+pub fn read_frame(r: &mut dyn Read, max_frame: usize) -> std::result::Result<Frame, WireError> {
     let mut hdr = [0u8; HEADER_LEN];
-    r.read_exact(&mut hdr).context("read frame header")?;
+    r.read_exact(&mut hdr)
+        .map_err(|err| WireError::Io { what: "read frame header", err })?;
     let magic = u16::from_le_bytes([hdr[0], hdr[1]]);
     if magic != MAGIC {
-        bail!("bad frame magic {magic:#06x}");
+        return Err(WireError::BadMagic(magic));
     }
     if hdr[2] != WIRE_VERSION {
-        bail!("wire version {} (want {WIRE_VERSION})", hdr[2]);
+        return Err(WireError::VersionMismatch { got: hdr[2], want: WIRE_VERSION });
     }
-    let kind = FrameKind::from_u8(hdr[3])
-        .ok_or_else(|| anyhow!("unknown frame kind {}", hdr[3]))?;
+    let kind = FrameKind::from_u8(hdr[3]).ok_or(WireError::UnknownKind(hdr[3]))?;
     let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
     if len > max_frame {
-        bail!("frame of {len} bytes exceeds cap {max_frame}");
+        return Err(WireError::Oversize { len, cap: max_frame });
     }
     let crc = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]);
     let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("read frame payload")?;
+    r.read_exact(&mut payload)
+        .map_err(|err| WireError::Io { what: "read frame payload", err })?;
     let want = fnv1a32(fnv1a32(FNV_OFFSET, &hdr[0..8]), &payload);
     if crc != want {
-        bail!("frame checksum mismatch (got {crc:#010x}, want {want:#010x})");
+        return Err(WireError::Checksum { got: crc, want });
     }
     Ok(Frame { kind, payload })
 }
@@ -281,6 +337,61 @@ fn obj_map_from_code(c: u8) -> Result<ObjMapStrategy> {
     }
 }
 
+// QueryOptions default-elision flags (wire v3): one flags byte, then a
+// u32 per set bit in bit order. An unset field decodes to 0 — the
+// "inherit the config" sentinel — so the all-default plan costs 1 byte.
+const OPT_K: u8 = 1 << 0;
+const OPT_PROBES: u8 = 1 << 1;
+const OPT_TABLES: u8 = 1 << 2;
+const OPT_TAG: u8 = 1 << 3;
+const OPT_ALL: u8 = OPT_K | OPT_PROBES | OPT_TABLES | OPT_TAG;
+
+fn put_opts(b: &mut Vec<u8>, o: &QueryOptions) {
+    let mut flags = 0u8;
+    for (bit, v) in [
+        (OPT_K, o.k),
+        (OPT_PROBES, o.probes),
+        (OPT_TABLES, o.tables),
+        (OPT_TAG, o.tag),
+    ] {
+        if v != 0 {
+            flags |= bit;
+        }
+    }
+    put_u8(b, flags);
+    for (bit, v) in [
+        (OPT_K, o.k),
+        (OPT_PROBES, o.probes),
+        (OPT_TABLES, o.tables),
+        (OPT_TAG, o.tag),
+    ] {
+        if flags & bit != 0 {
+            put_u32(b, v);
+        }
+    }
+}
+
+fn read_opts(rd: &mut Rd<'_>) -> Result<QueryOptions> {
+    let flags = rd.u8()?;
+    if flags & !OPT_ALL != 0 {
+        bail!("unknown QueryOptions flags {flags:#04x}");
+    }
+    let mut o = QueryOptions::default();
+    if flags & OPT_K != 0 {
+        o.k = rd.u32()?;
+    }
+    if flags & OPT_PROBES != 0 {
+        o.probes = rd.u32()?;
+    }
+    if flags & OPT_TABLES != 0 {
+        o.tables = rd.u32()?;
+    }
+    if flags & OPT_TAG != 0 {
+        o.tag = rd.u32()?;
+    }
+    Ok(o)
+}
+
 /// Encode a routed stage message as a complete frame (header included).
 pub fn stage_frame(dest: Dest, msg: &Msg) -> Vec<u8> {
     let mut p = Vec::with_capacity(16 + msg.wire_size());
@@ -293,9 +404,10 @@ pub fn stage_frame(dest: Dest, msg: &Msg) -> Vec<u8> {
             put_u32(&mut p, *rows);
             put_f32s(&mut p, flat);
         }
-        Msg::QueryVec { qid, raw, v } => {
+        Msg::QueryVec { qid, raw, v, opts } => {
             put_u8(&mut p, 1);
             put_u32(&mut p, *qid);
+            put_opts(&mut p, opts);
             put_f32s(&mut p, raw);
             put_f32s(&mut p, v);
         }
@@ -311,9 +423,10 @@ pub fn stage_frame(dest: Dest, msg: &Msg) -> Vec<u8> {
             put_u32(&mut p, *id);
             put_u16(&mut p, *dp);
         }
-        Msg::Query { qid, probes, v } => {
+        Msg::Query { qid, probes, v, k } => {
             put_u8(&mut p, 4);
             put_u32(&mut p, *qid);
+            put_u32(&mut p, *k);
             put_u32(&mut p, probes.len() as u32);
             for &(table, key) in probes {
                 put_u8(&mut p, table);
@@ -321,19 +434,21 @@ pub fn stage_frame(dest: Dest, msg: &Msg) -> Vec<u8> {
             }
             put_f32s(&mut p, v);
         }
-        Msg::CandidateReq { qid, ids, v } => {
+        Msg::CandidateReq { qid, ids, v, k } => {
             put_u8(&mut p, 5);
             put_u32(&mut p, *qid);
+            put_u32(&mut p, *k);
             put_u32(&mut p, ids.len() as u32);
             for &id in ids {
                 put_u32(&mut p, id);
             }
             put_f32s(&mut p, v);
         }
-        Msg::QueryMeta { qid, n_bi } => {
+        Msg::QueryMeta { qid, n_bi, k } => {
             put_u8(&mut p, 6);
             put_u32(&mut p, *qid);
             put_u32(&mut p, *n_bi);
+            put_u32(&mut p, *k);
         }
         Msg::BiMeta { qid, n_dp } => {
             put_u8(&mut p, 7);
@@ -370,9 +485,10 @@ pub fn decode_stage(payload: &[u8]) -> Result<(Dest, Msg)> {
         }
         1 => {
             let qid = rd.u32()?;
+            let opts = read_opts(&mut rd)?;
             let raw: Arc<[f32]> = rd.f32s()?.into();
             let v: Arc<[f32]> = rd.f32s()?.into();
-            Msg::QueryVec { qid, raw, v }
+            Msg::QueryVec { qid, raw, v, opts }
         }
         2 => {
             let id = rd.u32()?;
@@ -388,6 +504,7 @@ pub fn decode_stage(payload: &[u8]) -> Result<(Dest, Msg)> {
         }
         4 => {
             let qid = rd.u32()?;
+            let k = rd.u32()?;
             let n = rd.len_prefix(9)?;
             let mut probes = Vec::with_capacity(n);
             for _ in 0..n {
@@ -396,22 +513,24 @@ pub fn decode_stage(payload: &[u8]) -> Result<(Dest, Msg)> {
                 probes.push((table, key));
             }
             let v: Arc<[f32]> = rd.f32s()?.into();
-            Msg::Query { qid, probes, v }
+            Msg::Query { qid, probes, v, k }
         }
         5 => {
             let qid = rd.u32()?;
+            let k = rd.u32()?;
             let n = rd.len_prefix(4)?;
             let mut ids = Vec::with_capacity(n);
             for _ in 0..n {
                 ids.push(rd.u32()?);
             }
             let v: Arc<[f32]> = rd.f32s()?.into();
-            Msg::CandidateReq { qid, ids, v }
+            Msg::CandidateReq { qid, ids, v, k }
         }
         6 => {
             let qid = rd.u32()?;
             let n_bi = rd.u32()?;
-            Msg::QueryMeta { qid, n_bi }
+            let k = rd.u32()?;
+            Msg::QueryMeta { qid, n_bi, k }
         }
         7 => {
             let qid = rd.u32()?;
@@ -457,6 +576,10 @@ pub struct Hello {
 
 fn encode_cfg_block(dim: u32, lsh: &LshParams, cluster: &ClusterConfig, stream: &StreamConfig) -> Vec<u8> {
     let mut b = Vec::with_capacity(96);
+    // The digest covers the wire version itself (v3): a peer speaking an
+    // older codec that somehow got past the per-frame version check can
+    // never agree on the handshake digest either.
+    put_u8(&mut b, WIRE_VERSION);
     put_u32(&mut b, dim);
     put_u32(&mut b, lsh.l as u32);
     put_u32(&mut b, lsh.m as u32);
@@ -512,6 +635,10 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
         bail!("handshake config digest mismatch");
     }
     let mut c = Rd::new(&cfg);
+    let ver = c.u8()?;
+    if ver != WIRE_VERSION {
+        bail!("handshake config block for wire version {ver} (want {WIRE_VERSION})");
+    }
     let dim = c.u32()?;
     let lsh = LshParams {
         l: c.u32()? as usize,
@@ -768,13 +895,24 @@ mod tests {
     use super::*;
     use crate::util::minitest::{check, Gen};
 
-    fn read_back(frame: &[u8], max: usize) -> Result<Frame> {
+    fn read_back(frame: &[u8], max: usize) -> std::result::Result<Frame, WireError> {
         read_frame(&mut &frame[..], max)
     }
 
     fn rand_vec(g: &mut Gen, max_len: usize) -> Vec<f32> {
         let n = g.usize_in(0, max_len);
         g.vec_f32(n, -1e6, 1e6)
+    }
+
+    /// Random per-query options, zero (elided) fields included so the
+    /// default-elision paths are exercised by every roundtrip run.
+    fn rand_opts(g: &mut Gen) -> QueryOptions {
+        QueryOptions {
+            k: g.usize_in(0, 64) as u32,
+            probes: g.usize_in(0, 512) as u32,
+            tables: g.usize_in(0, 16) as u32,
+            tag: g.usize_in(0, 1 << 20) as u32,
+        }
     }
 
     fn rand_msg(g: &mut Gen) -> Msg {
@@ -788,6 +926,7 @@ mod tests {
                 qid: g.usize_in(0, 1 << 20) as u32,
                 raw: rand_vec(g, 64).into(),
                 v: rand_vec(g, 128).into(),
+                opts: rand_opts(g),
             },
             2 => Msg::StoreObject {
                 id: g.usize_in(0, 1 << 20) as u32,
@@ -805,6 +944,7 @@ mod tests {
                     .map(|_| (g.usize_in(0, 255) as u8, g.rng.next_u64()))
                     .collect(),
                 v: rand_vec(g, 128).into(),
+                k: g.usize_in(1, 64) as u32,
             },
             5 => Msg::CandidateReq {
                 qid: g.usize_in(0, 1 << 20) as u32,
@@ -812,10 +952,12 @@ mod tests {
                     .map(|_| g.usize_in(0, 1 << 20) as u32)
                     .collect(),
                 v: rand_vec(g, 128).into(),
+                k: g.usize_in(1, 64) as u32,
             },
             6 => Msg::QueryMeta {
                 qid: g.usize_in(0, 1 << 20) as u32,
                 n_bi: g.usize_in(0, 1 << 10) as u32,
+                k: g.usize_in(1, 64) as u32,
             },
             7 => Msg::BiMeta {
                 qid: g.usize_in(0, 1 << 20) as u32,
@@ -853,8 +995,8 @@ mod tests {
     fn empty_vector_payloads_roundtrip() {
         let cases = vec![
             Msg::IndexBlock { id_base: 0, rows: 0, flat: Vec::new().into() },
-            Msg::Query { qid: 1, probes: Vec::new(), v: Vec::new().into() },
-            Msg::CandidateReq { qid: 2, ids: Vec::new(), v: Vec::new().into() },
+            Msg::Query { qid: 1, probes: Vec::new(), v: Vec::new().into(), k: 1 },
+            Msg::CandidateReq { qid: 2, ids: Vec::new(), v: Vec::new().into(), k: 1 },
             Msg::LocalTopK { qid: 3, hits: Vec::new() },
         ];
         for msg in cases {
@@ -889,6 +1031,7 @@ mod tests {
             qid: 7,
             ids: vec![1, 2, 3, 99],
             v: vec![0.5f32; 16].into(),
+            k: 10,
         };
         let frame = stage_frame(Dest::dp(3), &msg);
         for i in 0..frame.len() {
@@ -906,10 +1049,90 @@ mod tests {
 
     #[test]
     fn truncated_frames_error() {
-        let frame = stage_frame(Dest::ag(1), &Msg::QueryMeta { qid: 5, n_bi: 2 });
+        let frame = stage_frame(Dest::ag(1), &Msg::QueryMeta { qid: 5, n_bi: 2, k: 10 });
         for cut in [0, HEADER_LEN - 1, HEADER_LEN + 2, frame.len() - 1] {
             assert!(read_back(&frame[..cut], 1 << 16).is_err(), "cut at {cut}");
         }
+    }
+
+    #[test]
+    fn query_options_roundtrip_with_default_elision() {
+        // all-inherit options cost exactly the flags byte...
+        let mut elided = Vec::new();
+        put_opts(&mut elided, &QueryOptions::default());
+        assert_eq!(elided, vec![0u8]);
+        // ...partially-set options carry only the set fields...
+        let mut partial = Vec::new();
+        put_opts(&mut partial, &QueryOptions { probes: 7, ..Default::default() });
+        assert_eq!(partial.len(), 5);
+        // ...and every combination roundtrips exactly (zeros included)
+        check("wire-opts-roundtrip", 200, |g| {
+            let o = rand_opts(g);
+            let mut b = Vec::new();
+            put_opts(&mut b, &o);
+            assert_eq!(b.len(), o.wire_size(), "encoding disagrees with the size model");
+            let mut rd = Rd::new(&b);
+            let o2 = read_opts(&mut rd).expect("decode");
+            rd.done().expect("no trailing bytes");
+            assert_eq!(o, o2);
+        });
+        // unknown flag bits are rejected, not ignored
+        let bad_flags = [0x20u8];
+        let mut rd = Rd::new(&bad_flags);
+        assert!(read_opts(&mut rd).is_err());
+    }
+
+    #[test]
+    fn v2_frames_are_rejected_with_a_typed_error() {
+        // Craft a well-formed *v2* frame: same layout, version byte 2,
+        // checksum valid for that header — exactly what a live v2 peer
+        // would emit. It must surface as VersionMismatch, not a panic,
+        // not a checksum/misparse error.
+        let mut frame = stage_frame(Dest::ag(0), &Msg::BiMeta { qid: 1, n_dp: 2 });
+        frame[2] = 2; // version byte
+        let crc = fnv1a32(fnv1a32(FNV_OFFSET, &frame[0..8]), &frame[HEADER_LEN..]);
+        frame[8..12].copy_from_slice(&crc.to_le_bytes());
+        match read_back(&frame, 1 << 16) {
+            Err(WireError::VersionMismatch { got: 2, want }) => {
+                assert_eq!(want, WIRE_VERSION);
+            }
+            other => panic!("v2 frame not rejected as VersionMismatch: {other:?}"),
+        }
+        // the Display form names both versions for the operator
+        let e = read_back(&frame, 1 << 16).unwrap_err();
+        assert!(e.to_string().contains("wire version 2"), "{e}");
+        // a v2 handshake config block fails the version check inside Hello
+        // decoding too (the digest covers the version byte)
+        let hello = Hello {
+            node: 0,
+            dim: 16,
+            peers: vec!["127.0.0.1:1".into()],
+            lsh: LshParams { l: 2, m: 4, w: 4.0, k: 3, t: 2, seed: 1 },
+            cluster: ClusterConfig {
+                bi_nodes: 1,
+                dp_nodes: 1,
+                cores_per_node: 1,
+                ag_copies: 1,
+                per_core_copies: false,
+            },
+            stream: StreamConfig::default(),
+            digest: 0,
+        };
+        let mut p = encode_hello(&hello);
+        // the cfg block starts after node(2) + n_peers(2) + one addr
+        // (2 + len) + cfg_len(4); its first byte is the version
+        let addr_len = hello.peers[0].len();
+        let ver_at = 2 + 2 + 2 + addr_len + 4;
+        assert_eq!(p[ver_at], WIRE_VERSION);
+        p[ver_at] = 2;
+        // refresh the trailing digest so only the version disagrees
+        let cfg_start = ver_at;
+        let cfg_end = p.len() - 8;
+        let digest = fnv1a64(FNV64_OFFSET, &p[cfg_start..cfg_end]);
+        let at = p.len() - 8;
+        p[at..].copy_from_slice(&digest.to_le_bytes());
+        let err = decode_hello(&p).unwrap_err();
+        assert!(err.to_string().contains("wire version 2"), "{err}");
     }
 
     #[test]
@@ -999,7 +1222,7 @@ mod tests {
         bi.on_index_ref(100, 1, 0);
         bi.on_index_ref(100, 2, 1);
         bi.on_index_ref(7, 3, 0);
-        let mut dp = DpState::new(9, 4, 2, 1, true);
+        let mut dp = DpState::new(9, 4, 1, true);
         dp.on_store(11, &[1.0, 2.0, 3.0, 4.0]);
         dp.on_store(10, &[5.0, 6.0, 7.0, 8.0]);
         let p = encode_state_dump(&[bi], &[dp]);

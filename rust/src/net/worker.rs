@@ -43,6 +43,13 @@ use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError};
+use std::time::Duration;
+
+/// Writes that stall past this horizon fail the worker loudly (typed IO
+/// error → `Stopped` drop-guard) instead of hanging: mirrors the
+/// driver-side write timeout guarding the bounded-queue backpressure
+/// cycle (see `net::driver` module docs).
+const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Events the reader threads feed the dispatch loop.
 enum Ev {
@@ -235,13 +242,9 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
     for c in 0..placement.dp_copies as u16 {
         if placement.node_of(StageKind::Dp, c) == my {
             dp_idx.insert(c, dps.len());
-            dps.push(DpState::new(
-                c,
-                dim,
-                hello.lsh.k,
-                placement.ag_copies,
-                hello.stream.dedup,
-            ));
+            // Per-query plans: the ranking depth k now arrives on every
+            // CandidateReq (wire v3), so the DP store needs no frozen k.
+            dps.push(DpState::new(c, dim, placement.ag_copies, hello.stream.dedup));
         }
     }
     // Workers always rank with the scalar oracle — bit-identical to the
@@ -249,6 +252,7 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
     let ranker = ScalarRanker { dim };
 
     let mut guard = StopGuard { conn: driver_stream.try_clone().ok() };
+    driver_stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).ok();
     let mut driver = PeerConn::new(driver_stream, agg);
     driver.send_now(&wire::encode_frame(
         FrameKind::HelloOk,
@@ -426,6 +430,7 @@ fn peer_conn<'p>(
     if slot.is_none() {
         let stream = connect_retry(&addrs[node as usize], sock.connect_retries, sock.retry_ms)
             .with_context(|| format!("node {my} dialing node {node} at {}", addrs[node as usize]))?;
+        stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).ok();
         let mut pc = PeerConn::new(stream, agg);
         pc.send_now(&wire::encode_frame(
             FrameKind::PeerHello,

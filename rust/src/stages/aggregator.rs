@@ -1,11 +1,19 @@
 //! Aggregator (AG): reduces DP-local top-k results into the global k
-//! nearest neighbors per query.
+//! nearest neighbors per query — where `k` is the *query's own* (the
+//! per-query plan carried by `QueryMeta`), not one global.
 //!
 //! Completion accounting: QR announces how many BI copies a query touched
-//! (`QueryMeta`), each BI announces how many DP messages it emitted
-//! (`BiMeta`), and the query completes when all announced `LocalTopK`
-//! messages arrived. The query id labels every message, so one AG copy sees
-//! a query's entire reduction (paper: label = query id).
+//! plus its resolved `k` (`QueryMeta`), each BI announces how many DP
+//! messages it emitted (`BiMeta`), and the query completes when all
+//! announced `LocalTopK` messages arrived. The query id labels every
+//! message, so one AG copy sees a query's entire reduction (paper: label =
+//! query id).
+//!
+//! Ordering: on the asynchronous transports `LocalTopK` hits can arrive
+//! *before* the `QueryMeta` that carries `k`. Such early hits buffer in a
+//! small per-query vector and fold into the bounded [`TopK`] the moment
+//! the meta lands — transient memory is bounded by the hits in flight for
+//! that query (≤ n_dp · k), exactly what the channels already hold.
 
 use crate::core::topk::TopK;
 use crate::dataflow::metrics::WorkStats;
@@ -17,7 +25,11 @@ struct QueryAgg {
     bi_seen: u32,
     expect_dp: u64,
     dp_seen: u64,
-    topk: TopK,
+    /// Bounded reducer, sized by the query's `k` — created when the
+    /// `QueryMeta` arrives (it carries the plan).
+    topk: Option<TopK>,
+    /// Hits that arrived before the `QueryMeta` (asynchronous transports).
+    early: Vec<(f32, u32)>,
 }
 
 /// A finished query: global top-k `(sqdist, id)` ascending.
@@ -25,17 +37,15 @@ pub type QueryResult = (u32, Vec<(f32, u32)>);
 
 pub struct AgState {
     pub copy: u16,
-    k: usize,
     pending: HashMap<u32, QueryAgg>,
     pub results: Vec<QueryResult>,
     pub work: WorkStats,
 }
 
 impl AgState {
-    pub fn new(copy: u16, k: usize) -> AgState {
+    pub fn new(copy: u16) -> AgState {
         AgState {
             copy,
-            k,
             pending: HashMap::new(),
             results: Vec::new(),
             work: WorkStats::default(),
@@ -47,20 +57,27 @@ impl AgState {
     }
 
     fn entry(&mut self, qid: u32) -> &mut QueryAgg {
-        let k = self.k;
         self.pending.entry(qid).or_insert_with(|| QueryAgg {
             expect_bi: None,
             bi_seen: 0,
             expect_dp: 0,
             dp_seen: 0,
-            topk: TopK::new(k),
+            topk: None,
+            early: Vec::new(),
         })
     }
 
-    pub fn on_query_meta(&mut self, qid: u32, n_bi: u32) {
+    /// The QR's announcement for `qid`: how many BI copies will contribute
+    /// and the query's resolved top-k depth.
+    pub fn on_query_meta(&mut self, qid: u32, n_bi: u32, k: u32) {
         let agg = self.entry(qid);
         assert!(agg.expect_bi.is_none(), "duplicate QueryMeta for {qid}");
         agg.expect_bi = Some(n_bi);
+        let mut topk = TopK::new(k as usize);
+        for (d, id) in agg.early.drain(..) {
+            topk.push(d, id);
+        }
+        agg.topk = Some(topk);
         self.maybe_complete(qid);
     }
 
@@ -73,8 +90,14 @@ impl AgState {
 
     pub fn on_local_topk(&mut self, qid: u32, hits: &[(f32, u32)]) {
         let agg = self.entry(qid);
-        for &(d, id) in hits {
-            agg.topk.push(d, id);
+        match &mut agg.topk {
+            Some(topk) => {
+                for &(d, id) in hits {
+                    topk.push(d, id);
+                }
+            }
+            // QueryMeta (and with it the query's k) not here yet: buffer.
+            None => agg.early.extend_from_slice(hits),
         }
         agg.dp_seen += 1;
         self.work.reduce_pushes += hits.len() as u64;
@@ -91,7 +114,8 @@ impl AgState {
         };
         if done {
             let agg = self.pending.remove(&qid).unwrap();
-            self.results.push((qid, agg.topk.into_sorted()));
+            let topk = agg.topk.expect("completed query without QueryMeta");
+            self.results.push((qid, topk.into_sorted()));
         }
     }
 
@@ -107,8 +131,8 @@ mod tests {
 
     #[test]
     fn completes_after_all_messages() {
-        let mut ag = AgState::new(0, 2);
-        ag.on_query_meta(1, 2);
+        let mut ag = AgState::new(0);
+        ag.on_query_meta(1, 2, 2);
         ag.on_bi_meta(1, 1);
         assert_eq!(ag.results.len(), 0);
         ag.on_bi_meta(1, 2);
@@ -126,19 +150,49 @@ mod tests {
 
     #[test]
     fn out_of_order_messages_ok() {
-        let mut ag = AgState::new(0, 3);
-        // results can arrive before the metas
+        let mut ag = AgState::new(0);
+        // results can arrive before the metas — the early buffer holds
+        // them until QueryMeta brings the query's k
         ag.on_local_topk(5, &[(1.0, 1)]);
         ag.on_bi_meta(5, 1);
         assert!(ag.results.is_empty());
-        ag.on_query_meta(5, 1);
+        ag.on_query_meta(5, 1, 3);
         assert_eq!(ag.results.len(), 1);
+        assert_eq!(ag.results[0].1, vec![(1.0, 1)]);
+    }
+
+    #[test]
+    fn per_query_k_is_honored() {
+        let mut ag = AgState::new(0);
+        // query 1 wants one neighbor, query 2 wants three — same stream
+        ag.on_query_meta(1, 1, 1);
+        ag.on_query_meta(2, 1, 3);
+        ag.on_bi_meta(1, 1);
+        ag.on_bi_meta(2, 1);
+        ag.on_local_topk(1, &[(3.0, 30), (1.0, 10), (2.0, 20)]);
+        ag.on_local_topk(2, &[(3.0, 30), (1.0, 10), (2.0, 20)]);
+        assert_eq!(ag.results.len(), 2);
+        let by_qid: HashMap<u32, Vec<(f32, u32)>> =
+            ag.results.iter().cloned().collect();
+        assert_eq!(by_qid[&1], vec![(1.0, 10)]);
+        assert_eq!(by_qid[&2], vec![(1.0, 10), (2.0, 20), (3.0, 30)]);
+    }
+
+    #[test]
+    fn early_hits_respect_the_late_k() {
+        let mut ag = AgState::new(0);
+        // hits land before the meta; k=2 must still cap the result
+        ag.on_local_topk(9, &[(5.0, 50), (1.0, 10), (3.0, 30)]);
+        ag.on_bi_meta(9, 1);
+        ag.on_query_meta(9, 1, 2);
+        assert_eq!(ag.results.len(), 1);
+        assert_eq!(ag.results[0].1, vec![(1.0, 10), (3.0, 30)]);
     }
 
     #[test]
     fn zero_candidate_query_completes() {
-        let mut ag = AgState::new(0, 3);
-        ag.on_query_meta(2, 1);
+        let mut ag = AgState::new(0);
+        ag.on_query_meta(2, 1, 3);
         ag.on_bi_meta(2, 0); // BI found nothing
         assert_eq!(ag.results.len(), 1);
         assert!(ag.results[0].1.is_empty());
@@ -146,9 +200,9 @@ mod tests {
 
     #[test]
     fn interleaved_queries_isolated() {
-        let mut ag = AgState::new(0, 1);
-        ag.on_query_meta(1, 1);
-        ag.on_query_meta(2, 1);
+        let mut ag = AgState::new(0);
+        ag.on_query_meta(1, 1, 1);
+        ag.on_query_meta(2, 1, 1);
         ag.on_bi_meta(1, 1);
         ag.on_bi_meta(2, 1);
         ag.on_local_topk(2, &[(5.0, 50)]);
@@ -164,15 +218,15 @@ mod tests {
     #[test]
     #[should_panic(expected = "duplicate QueryMeta")]
     fn duplicate_meta_detected() {
-        let mut ag = AgState::new(0, 1);
-        ag.on_query_meta(1, 1);
-        ag.on_query_meta(1, 1);
+        let mut ag = AgState::new(0);
+        ag.on_query_meta(1, 1, 1);
+        ag.on_query_meta(1, 1, 1);
     }
 
     #[test]
     fn stuck_queries_reported() {
-        let mut ag = AgState::new(0, 1);
-        ag.on_query_meta(9, 2);
+        let mut ag = AgState::new(0);
+        ag.on_query_meta(9, 2, 1);
         ag.on_bi_meta(9, 1);
         assert_eq!(ag.stuck_queries(), vec![9]);
     }

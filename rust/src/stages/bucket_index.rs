@@ -66,12 +66,15 @@ impl BiState {
         out
     }
 
-    /// Search message (iii) → emits (iv) + AG completion meta.
+    /// Search message (iii) → emits (iv) + AG completion meta. `k` is the
+    /// query's resolved top-k (per-query plan), forwarded on every
+    /// `CandidateReq` so DP ranks to the right depth.
     pub fn on_query(
         &mut self,
         qid: u32,
         probes: &[(u8, u64)],
         v: &Arc<[f32]>,
+        k: u32,
         out: Emit,
     ) {
         // Gather candidates over all probed buckets, dedup by id, group by
@@ -109,7 +112,7 @@ impl BiState {
             let ids = std::mem::take(&mut self.by_dp_scratch[dp as usize]);
             out.push((
                 Dest::dp(dp),
-                Msg::CandidateReq { qid, ids, v: v.clone() },
+                Msg::CandidateReq { qid, ids, v: v.clone(), k },
             ));
         }
         out.push((
@@ -138,7 +141,7 @@ mod tests {
         assert_eq!(bi.reference_count(), 3);
 
         let mut out = Vec::new();
-        bi.on_query(7, &[(0, 100)], &arcv(), &mut out);
+        bi.on_query(7, &[(0, 100)], &arcv(), 5, &mut out);
         // two DPs involved → 2 CandidateReq + 1 BiMeta
         assert_eq!(out.len(), 3);
         let reqs: Vec<_> = out
@@ -162,7 +165,7 @@ mod tests {
     fn empty_probe_still_reports_meta() {
         let mut bi = BiState::new(0, 1, 0);
         let mut out = Vec::new();
-        bi.on_query(1, &[(0, 999)], &arcv(), &mut out);
+        bi.on_query(1, &[(0, 999)], &arcv(), 5, &mut out);
         assert_eq!(out.len(), 1);
         match &out[0].1 {
             Msg::BiMeta { n_dp, .. } => assert_eq!(*n_dp, 0),
@@ -177,7 +180,7 @@ mod tests {
         bi.on_index_ref(100, 9, 2);
         bi.on_index_ref(200, 9, 2);
         let mut out = Vec::new();
-        bi.on_query(1, &[(0, 100), (1, 200)], &arcv(), &mut out);
+        bi.on_query(1, &[(0, 100), (1, 200)], &arcv(), 5, &mut out);
         let ids: Vec<u32> = out
             .iter()
             .filter_map(|(_, m)| match m {
@@ -198,7 +201,7 @@ mod tests {
             bi.on_index_ref(100, id, 0);
         }
         let mut out = Vec::new();
-        bi.on_query(1, &[(0, 100)], &arcv(), &mut out);
+        bi.on_query(1, &[(0, 100)], &arcv(), 5, &mut out);
         let ids: usize = out
             .iter()
             .filter_map(|(_, m)| match m {
@@ -214,7 +217,7 @@ mod tests {
         let mut bi = BiState::new(0, 1, 0);
         bi.on_index_ref(5, 1, 0);
         let mut out = Vec::new();
-        bi.on_query(1, &[(0, 5), (1, 6), (2, 7)], &arcv(), &mut out);
+        bi.on_query(1, &[(0, 5), (1, 6), (2, 7)], &arcv(), 5, &mut out);
         assert_eq!(bi.work.bucket_lookups, 3);
     }
 }

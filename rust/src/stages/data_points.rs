@@ -30,7 +30,6 @@ pub struct DpState {
     seen: HashMap<u32, HashSet<u32>>,
     seen_order: VecDeque<u32>,
     pub seen_cap: usize,
-    pub k: usize,
     pub n_ag: usize,
     pub dedup: bool,
     pub work: WorkStats,
@@ -40,7 +39,7 @@ pub struct DpState {
 }
 
 impl DpState {
-    pub fn new(copy: u16, dim: usize, k: usize, n_ag: usize, dedup: bool) -> DpState {
+    pub fn new(copy: u16, dim: usize, n_ag: usize, dedup: bool) -> DpState {
         DpState {
             copy,
             store: Dataset::new(dim),
@@ -48,7 +47,6 @@ impl DpState {
             seen: HashMap::new(),
             seen_order: VecDeque::new(),
             seen_cap: 8192,
-            k,
             n_ag,
             dedup,
             work: WorkStats::default(),
@@ -85,12 +83,15 @@ impl DpState {
         out
     }
 
-    /// Search message (iv) → emits (v).
+    /// Search message (iv) → emits (v). `k` is the *query's* resolved
+    /// top-k (per-query plan, carried on the `CandidateReq`): the local
+    /// result is capped at exactly the depth this query asked for.
     pub fn on_candidates(
         &mut self,
         qid: u32,
         ids: &[u32],
         q: &Arc<[f32]>,
+        k: usize,
         ranker: &dyn Ranker,
         out: Emit,
     ) {
@@ -139,7 +140,7 @@ impl DpState {
         } else {
             debug_assert_eq!(self.gather.len(), n * dim);
             ranker
-                .rank(q, &self.gather, n, self.k)
+                .rank(q, &self.gather, n, k)
                 .into_iter()
                 .map(|(d, local)| (d, self.gather_ids[local as usize]))
                 .collect()
@@ -166,7 +167,7 @@ mod tests {
     use crate::runtime::ScalarRanker;
 
     fn dp() -> DpState {
-        let mut dp = DpState::new(0, 4, 2, 1, true);
+        let mut dp = DpState::new(0, 4, 1, true);
         dp.on_store(10, &[0.0, 0.0, 0.0, 0.0]);
         dp.on_store(11, &[1.0, 0.0, 0.0, 0.0]);
         dp.on_store(12, &[5.0, 0.0, 0.0, 0.0]);
@@ -182,7 +183,7 @@ mod tests {
         let mut dp = dp();
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
-        dp.on_candidates(1, &[10, 11, 12], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10, 11, 12], &q(), 2, &ranker, &mut out);
         assert_eq!(out.len(), 1);
         match &out[0].1 {
             Msg::LocalTopK { qid, hits } => {
@@ -199,8 +200,8 @@ mod tests {
         let mut dp = dp();
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
-        dp.on_candidates(1, &[10, 11], &q(), &ranker, &mut out);
-        dp.on_candidates(1, &[10, 12], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10, 11], &q(), 2, &ranker, &mut out);
+        dp.on_candidates(1, &[10, 12], &q(), 2, &ranker, &mut out);
         assert_eq!(dp.work.dup_skipped, 1);
         assert_eq!(dp.work.dists_computed, 3);
         // second message ranks only id 12
@@ -213,24 +214,42 @@ mod tests {
     }
 
     #[test]
+    fn per_query_k_caps_local_topk() {
+        let mut dp = dp();
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        // two queries with different plans over the same candidates
+        dp.on_candidates(1, &[10, 11, 12], &q(), 1, &ranker, &mut out);
+        dp.on_candidates(2, &[10, 11, 12], &q(), 3, &ranker, &mut out);
+        match &out[0].1 {
+            Msg::LocalTopK { hits, .. } => assert_eq!(hits.as_slice(), &[(0.0, 10)]),
+            other => panic!("{other:?}"),
+        }
+        match &out[1].1 {
+            Msg::LocalTopK { hits, .. } => assert_eq!(hits.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn different_queries_do_not_share_dedup() {
         let mut dp = dp();
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
-        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
-        dp.on_candidates(2, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
+        dp.on_candidates(2, &[10], &q(), 2, &ranker, &mut out);
         assert_eq!(dp.work.dup_skipped, 0);
         assert_eq!(dp.work.dists_computed, 2);
     }
 
     #[test]
     fn dedup_off_recomputes() {
-        let mut dp = DpState::new(0, 4, 2, 1, false);
+        let mut dp = DpState::new(0, 4, 1, false);
         dp.on_store(10, &[0.0; 4]);
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
-        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
-        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
         assert_eq!(dp.work.dists_computed, 2);
         assert_eq!(dp.work.dup_skipped, 0);
     }
@@ -248,7 +267,7 @@ mod tests {
         let mut dp = dp();
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
-        dp.on_candidates(1, &[999], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[999], &q(), 2, &ranker, &mut out);
     }
 
     #[test]
@@ -257,10 +276,10 @@ mod tests {
         dp.seen_cap = 2;
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
-        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
-        dp.on_candidates(2, &[10], &q(), &ranker, &mut out);
-        dp.on_candidates(3, &[10], &q(), &ranker, &mut out); // evicts qid 1
-        dp.on_candidates(1, &[10], &q(), &ranker, &mut out); // recomputed
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
+        dp.on_candidates(2, &[10], &q(), 2, &ranker, &mut out);
+        dp.on_candidates(3, &[10], &q(), 2, &ranker, &mut out); // evicts qid 1
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out); // recomputed
         assert_eq!(dp.work.dup_skipped, 0);
         assert_eq!(dp.work.dists_computed, 4);
     }
@@ -270,9 +289,9 @@ mod tests {
         let mut dp = dp();
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
-        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
         dp.finish_query(1);
-        dp.on_candidates(1, &[10], &q(), &ranker, &mut out);
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
         assert_eq!(dp.work.dup_skipped, 0);
         assert_eq!(dp.work.dists_computed, 2);
     }

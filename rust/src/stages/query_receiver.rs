@@ -1,14 +1,16 @@
-//! Query Receiver (QR): hashes each query, generates the multi-probe
-//! sequence (T probes per table), routes probe buckets to the owning BI
-//! copies — paper message (iii) — and tells the Aggregator how many BI
-//! copies will contribute (completion accounting).
+//! Query Receiver (QR): hashes each query, resolves its per-query search
+//! plan ([`QueryOptions`] → concrete `k`/`T`/`L'` against the family
+//! params), generates the multi-probe sequence (T probes over the first L'
+//! tables), routes probe buckets to the owning BI copies — paper message
+//! (iii) — and tells the Aggregator how many BI copies will contribute
+//! plus the query's resolved `k` (completion accounting + per-qid top-k).
 //!
 //! Probe-level aggregation (paper §IV-D): all probes of a query that route
 //! to the *same* BI copy travel in one `Msg::Query`, so the message count
 //! grows sublinearly in T.
 
 use crate::core::lsh::HashFamily;
-use crate::dataflow::message::{Dest, Msg};
+use crate::dataflow::message::{Dest, Msg, QueryOptions};
 use crate::dataflow::metrics::WorkStats;
 use crate::partition::{ag_map, bucket_map};
 use crate::runtime::Hasher;
@@ -28,13 +30,14 @@ impl<'a> QueryReceiver<'a> {
         QueryReceiver { family, n_bi, n_ag, work: WorkStats::default() }
     }
 
-    /// All probe bucket keys of a query: `(table, key)` — home bucket first
-    /// per table, then the multi-probe perturbations in score order.
-    /// Delegates to [`HashFamily::query_probes`] (shared with the sequential
-    /// baseline so both visit exactly the same buckets).
-    pub fn probe_keys(&mut self, raw: &[f32]) -> Vec<(u8, u64)> {
-        self.work.probe_seqs += self.family.params.l as u64;
-        self.family.query_probes(raw, self.family.params.t)
+    /// All probe bucket keys of a query for a resolved plan: `(table, key)`
+    /// — home bucket first per table, then the multi-probe perturbations in
+    /// score order, over the first `tables` tables only. Delegates to
+    /// [`HashFamily::query_probes`] (shared with the sequential baseline so
+    /// both visit exactly the same buckets).
+    pub fn probe_keys(&mut self, raw: &[f32], t: usize, tables: usize) -> Vec<(u8, u64)> {
+        self.work.probe_seqs += tables as u64;
+        self.family.query_probes(raw, t, tables)
     }
 
     /// Emit the query to every BI copy owning at least one probe bucket,
@@ -44,12 +47,13 @@ impl<'a> QueryReceiver<'a> {
         hasher: &dyn Hasher,
         qid: u32,
         q: &[f32],
+        opts: QueryOptions,
         out: Emit,
     ) -> usize {
         debug_assert_eq!(q.len(), self.family.dim);
         let raw = hasher.proj_batch(q, 1);
         self.work.hash_vectors += 1;
-        self.dispatch_query_raw(&raw, qid, q, out)
+        self.dispatch_query_raw(&raw, qid, q, opts, out)
     }
 
     /// Like [`Self::dispatch_query`] but with the raw projections already
@@ -61,22 +65,33 @@ impl<'a> QueryReceiver<'a> {
         raw: &[f32],
         qid: u32,
         q: &[f32],
+        opts: QueryOptions,
         out: Emit,
     ) -> usize {
-        self.dispatch_query_arc(raw, qid, q.into(), out)
+        self.dispatch_query_arc(raw, qid, q.into(), opts, out)
     }
 
     /// `Arc`-taking variant of [`Self::dispatch_query_raw`]: the executor
     /// workload already carries the query vector behind an `Arc`
     /// ([`Msg::QueryVec`]), so dispatching it re-uses that allocation.
+    ///
+    /// This is where a query's [`QueryOptions`] are resolved: zero fields
+    /// inherit `family.params`, `tables` clamps into `1..=L`, and the
+    /// resolved `k` rides on every downstream message so BI/DP/AG never
+    /// consult a global.
     pub fn dispatch_query_arc(
         &mut self,
         raw: &[f32],
         qid: u32,
         v: Arc<[f32]>,
+        opts: QueryOptions,
         out: Emit,
     ) -> usize {
-        let probes = self.probe_keys(raw);
+        let p = self.family.params;
+        let k = opts.k_or(p.k) as u32;
+        let t = opts.probes_or(p.t);
+        let tables = opts.tables_in(p.l);
+        let probes = self.probe_keys(raw, t, tables);
         let mut by_bi: HashMap<u16, Vec<(u8, u64)>> = HashMap::new();
         for (table, key) in probes {
             by_bi
@@ -89,11 +104,11 @@ impl<'a> QueryReceiver<'a> {
         let mut entries: Vec<_> = by_bi.into_iter().collect();
         entries.sort_by_key(|(copy, _)| *copy);
         for (copy, probes) in entries {
-            out.push((Dest::bi(copy), Msg::Query { qid, probes, v: v.clone() }));
+            out.push((Dest::bi(copy), Msg::Query { qid, probes, v: v.clone(), k }));
         }
         out.push((
             Dest::ag(ag_map(qid, self.n_ag)),
-            Msg::QueryMeta { qid, n_bi: n_bi as u32 },
+            Msg::QueryMeta { qid, n_bi: n_bi as u32, k },
         ));
         n_bi
     }
@@ -126,7 +141,7 @@ mod tests {
         let mut qr = QueryReceiver::new(&fam, 3, 1);
         let q = rand_q(5);
         let raw = hasher.proj_batch(&q, 1);
-        let probes = qr.probe_keys(&raw);
+        let probes = qr.probe_keys(&raw, fam.params.t, fam.params.l);
         // M=6 gives 3^6-1 = 728 >> 8 valid sets, so exactly T per table.
         assert_eq!(probes.len(), 4 * 8);
         // home bucket of each table must be present
@@ -143,7 +158,7 @@ mod tests {
         let mut qr = QueryReceiver::new(&fam, 3, 1);
         let q = rand_q(6);
         let raw = hasher.proj_batch(&q, 1);
-        let probes = qr.probe_keys(&raw);
+        let probes = qr.probe_keys(&raw, 1, fam.params.l);
         assert_eq!(probes.len(), 4);
     }
 
@@ -154,7 +169,7 @@ mod tests {
         let mut qr = QueryReceiver::new(&fam, 3, 2);
         let q = rand_q(7);
         let mut out = Vec::new();
-        let n_bi = qr.dispatch_query(&hasher, 42, &q, &mut out);
+        let n_bi = qr.dispatch_query(&hasher, 42, &q, QueryOptions::default(), &mut out);
         let queries: Vec<_> = out
             .iter()
             .filter(|(d, _)| d.stage == StageKind::Bi)
@@ -163,8 +178,9 @@ mod tests {
         assert!(n_bi <= 3);
         let mut total_probes = 0;
         for (dest, msg) in &queries {
-            if let Msg::Query { probes, qid, .. } = msg {
+            if let Msg::Query { probes, qid, k, .. } = msg {
                 assert_eq!(*qid, 42);
+                assert_eq!(*k, fam.params.k as u32, "inherited k resolved wrong");
                 total_probes += probes.len();
                 for (_, key) in probes {
                     assert_eq!(bucket_map(*key, 3), dest.copy);
@@ -172,16 +188,17 @@ mod tests {
             }
         }
         assert_eq!(total_probes, 4 * 16);
-        // exactly one QueryMeta to the AG owning qid 42
+        // exactly one QueryMeta to the AG owning qid 42, carrying k
         let metas: Vec<_> = out
             .iter()
             .filter(|(d, _)| d.stage == StageKind::Ag)
             .collect();
         assert_eq!(metas.len(), 1);
         match &metas[0].1 {
-            Msg::QueryMeta { qid, n_bi: nb } => {
+            Msg::QueryMeta { qid, n_bi: nb, k } => {
                 assert_eq!(*qid, 42);
                 assert_eq!(*nb as usize, n_bi);
+                assert_eq!(*k, fam.params.k as u32);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -189,17 +206,68 @@ mod tests {
     }
 
     #[test]
-    fn larger_t_more_probes_weakly_more_bis() {
-        let fam1 = family(1);
-        let fam2 = HashFamily::sample(16, LshParams { t: 60, ..fam1.params });
-        let hasher = ScalarHasher { family: fam1.clone() };
+    fn per_query_options_shrink_the_plan() {
+        let fam = family(16);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let q = rand_q(7);
+        // explicit T=1, L'=2, k=2 — a cheap low-recall plan
+        let opts = QueryOptions { k: 2, probes: 1, tables: 2, tag: 5 };
+        let mut qr = QueryReceiver::new(&fam, 3, 1);
+        let mut out = Vec::new();
+        qr.dispatch_query(&hasher, 1, &q, opts, &mut out);
+        let mut total_probes = 0usize;
+        for (_, msg) in &out {
+            match msg {
+                Msg::Query { probes, k, .. } => {
+                    assert_eq!(*k, 2);
+                    assert!(probes.iter().all(|&(t, _)| t < 2), "table past L'");
+                    total_probes += probes.len();
+                }
+                Msg::QueryMeta { k, .. } => assert_eq!(*k, 2),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // T=1 over 2 tables = exactly the two home buckets
+        assert_eq!(total_probes, 2);
+        assert_eq!(qr.work.probe_seqs, 2, "probe_seqs must count L', not L");
+    }
+
+    #[test]
+    fn default_options_match_explicit_config_options() {
+        let fam = family(8);
+        let hasher = ScalarHasher { family: fam.clone() };
         let q = rand_q(9);
-        let mut qr1 = QueryReceiver::new(&fam1, 5, 1);
-        let mut qr60 = QueryReceiver::new(&fam2, 5, 1);
+        let explicit = QueryOptions::from_params(&fam.params);
+        let mut qr1 = QueryReceiver::new(&fam, 3, 1);
+        let mut qr2 = QueryReceiver::new(&fam, 3, 1);
+        let mut o1 = Vec::new();
+        let mut o2 = Vec::new();
+        qr1.dispatch_query(&hasher, 0, &q, QueryOptions::default(), &mut o1);
+        qr2.dispatch_query(&hasher, 0, &q, explicit, &mut o2);
+        let fmt = |o: &Vec<(Dest, Msg)>| {
+            o.iter().map(|(d, m)| format!("{d:?}|{m:?}")).collect::<Vec<_>>()
+        };
+        assert_eq!(fmt(&o1), fmt(&o2));
+    }
+
+    #[test]
+    fn larger_t_more_probes_weakly_more_bis() {
+        let fam = family(1);
+        let hasher = ScalarHasher { family: fam.clone() };
+        let q = rand_q(9);
+        let mut qr1 = QueryReceiver::new(&fam, 5, 1);
+        let mut qr60 = QueryReceiver::new(&fam, 5, 1);
         let mut o1 = Vec::new();
         let mut o60 = Vec::new();
-        let b1 = qr1.dispatch_query(&hasher, 0, &q, &mut o1);
-        let b60 = qr60.dispatch_query(&hasher, 0, &q, &mut o60);
+        let b1 = qr1.dispatch_query(&hasher, 0, &q, QueryOptions::default(), &mut o1);
+        // the same family serves a T=60 plan per query — no resample needed
+        let b60 = qr60.dispatch_query(
+            &hasher,
+            0,
+            &q,
+            QueryOptions { probes: 60, ..Default::default() },
+            &mut o60,
+        );
         assert!(b60 >= b1);
         // message count to BI grows far slower than probe count (probe
         // aggregation): at most n_bi messages regardless of T.

@@ -14,8 +14,8 @@ fn lost_dp_message_leaves_query_stuck_not_wrong() {
     // Simulate a lost LocalTopK: AG knows (via BiMeta counts) that a DP
     // message is missing and keeps the query pending instead of emitting a
     // partial result.
-    let mut ag = AgState::new(0, 10);
-    ag.on_query_meta(1, 1);
+    let mut ag = AgState::new(0);
+    ag.on_query_meta(1, 1, 10);
     ag.on_bi_meta(1, 2); // two DP messages expected
     ag.on_local_topk(1, &[(1.0, 5)]);
     // second LocalTopK "lost"
@@ -25,8 +25,8 @@ fn lost_dp_message_leaves_query_stuck_not_wrong() {
 
 #[test]
 fn lost_bi_message_detected() {
-    let mut ag = AgState::new(0, 10);
-    ag.on_query_meta(7, 3); // three BIs contacted
+    let mut ag = AgState::new(0);
+    ag.on_query_meta(7, 3, 10); // three BIs contacted
     ag.on_bi_meta(7, 0);
     ag.on_bi_meta(7, 0);
     // third BiMeta lost
@@ -39,18 +39,18 @@ fn lost_bi_message_detected() {
 fn misrouted_candidate_panics() {
     // A BI routing a candidate to the wrong DP is a partition-invariant
     // violation and must crash loudly.
-    let mut dp = DpState::new(0, 4, 5, 1, true);
+    let mut dp = DpState::new(0, 4, 1, true);
     dp.on_store(1, &[0.0; 4]);
     let ranker = ScalarRanker { dim: 4 };
     let q: Arc<[f32]> = vec![0f32; 4].into();
     let mut out = Vec::new();
-    dp.on_candidates(0, &[999], &q, &ranker, &mut out);
+    dp.on_candidates(0, &[999], &q, 5, &ranker, &mut out);
 }
 
 #[test]
 #[should_panic(expected = "stored twice")]
 fn replicated_store_panics() {
-    let mut dp = DpState::new(0, 4, 5, 1, true);
+    let mut dp = DpState::new(0, 4, 1, true);
     dp.on_store(1, &[0.0; 4]);
     dp.on_store(1, &[1.0; 4]);
 }
@@ -66,12 +66,12 @@ fn empty_bucket_index_answers_gracefully() {
     // Query against a BI with no buckets: zero candidates, empty results,
     // completion still reached.
     let mut bi = BiState::new(0, 1, 0);
-    let mut ag = AgState::new(0, 10);
+    let mut ag = AgState::new(0);
     let q: Arc<[f32]> = vec![0f32; 4].into();
     let mut out = Vec::new();
-    bi.on_query(0, &[(0, 12345)], &q, &mut out);
+    bi.on_query(0, &[(0, 12345)], &q, 10, &mut out);
     // forward only AG messages
-    ag.on_query_meta(0, 1);
+    ag.on_query_meta(0, 1, 10);
     for (_, msg) in out {
         if let parlsh::dataflow::message::Msg::BiMeta { qid, n_dp } = msg {
             ag.on_bi_meta(qid, n_dp);

@@ -15,10 +15,11 @@ use parlsh::coordinator::{build_index, search, Cluster};
 use parlsh::core::lsh::{HashFamily, LshParams};
 use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
 use parlsh::data::Dataset;
-use parlsh::dataflow::exec::{Executor, ThreadedExecutor};
+use parlsh::dataflow::exec::{Executor, InlineExecutor, ThreadedExecutor};
 use parlsh::dataflow::message::StageKind;
 use parlsh::net::NetSession;
 use parlsh::runtime::{Ranker, ScalarHasher, ScalarRanker};
+use parlsh::QueryOptions;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -116,6 +117,116 @@ fn concurrent_submitters_match_inline_oracle_socket() {
     let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
     assert_concurrent_submitters_match_oracle(net.executor(), &cfg);
     net.shutdown().expect("clean shutdown");
+}
+
+/// A deterministic heterogeneous plan mix: inherited and explicit `k`,
+/// probe budgets from 1 to beyond the config T, full and truncated table
+/// sets, tagged — the "two differently-shaped requests on one index"
+/// scenario the per-query-plan redesign exists for.
+fn mixed_plan(qi: usize) -> QueryOptions {
+    QueryOptions {
+        k: [0u32, 1, 3][qi % 3],
+        probes: [0u32, 1, 4, 12][qi % 4],
+        tables: [0u32, 2][qi % 2],
+        tag: 7000 + qi as u32,
+    }
+}
+
+/// Mixed-`QueryOptions` differential: interleaved queries with distinct
+/// plans through `exec` must produce per-ticket results (and option
+/// echoes) identical to the deterministic inline streaming oracle.
+fn assert_mixed_options_match_inline(exec: &dyn Executor, cfg: &Config) {
+    let (ds, qs, hasher, ranker) = small_world(cfg, 16);
+
+    // Oracle: the same plans through the inline per-item-drain stream.
+    let mut oracle_cluster = build_index(cfg, &ds, &hasher);
+    let oracle = {
+        let session = IndexSession::attach(
+            &InlineExecutor,
+            &mut oracle_cluster,
+            &hasher,
+            Some(ranker.clone()),
+        );
+        for qi in 0..qs.len() {
+            session.submit_with(qs.get(qi), mixed_plan(qi));
+        }
+        let out = session.drain_full();
+        session.close();
+        out
+    };
+    assert_eq!(oracle.len(), qs.len());
+
+    // Under test: same plans, interleaved submit/claim, through `exec`.
+    let mut cluster = parlsh::coordinator::build_index_on(exec, cfg, &ds, &hasher);
+    let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
+    let mut got: Vec<Option<(QueryOptions, Vec<(f32, u32)>)>> = vec![None; qs.len()];
+    for qi in 0..qs.len() {
+        session.submit_with(qs.get(qi), mixed_plan(qi));
+        while let Some((t, o, h, _)) = session.try_recv_full() {
+            got[t.0 as usize] = Some((o, h));
+        }
+    }
+    for (t, o, h, _) in session.drain_full() {
+        got[t.0 as usize] = Some((o, h));
+    }
+    session.close();
+    for (qi, (want_t, want_o, want_h, _)) in oracle.iter().enumerate() {
+        assert_eq!(want_t.0 as usize, qi);
+        let (o, h) = got[qi].as_ref().expect("query completed");
+        assert_eq!(o, want_o, "option echo diverged for query {qi}");
+        assert_eq!(h, want_h, "mixed-plan query {qi} diverged");
+        assert!(h.len() <= o.k as usize, "query {qi} overflowed its k");
+        assert_eq!(o.tag, 7000 + qi as u32, "tag echo lost");
+    }
+}
+
+#[test]
+fn mixed_options_match_inline_oracle_threaded() {
+    let cfg = session_cfg();
+    assert_mixed_options_match_inline(&ThreadedExecutor, &cfg);
+}
+
+#[test]
+fn mixed_options_match_inline_oracle_socket() {
+    // Distinct k and probes interleaved in one stream over real worker
+    // processes (wire v3 carries the plan) — the acceptance scenario.
+    let cfg = session_cfg();
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    assert_mixed_options_match_inline(net.executor(), &cfg);
+    net.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn submit_with_defaults_is_bit_identical_to_submit() {
+    // `submit` must remain bit-identical to its pre-redesign behavior —
+    // asserted against the pumped `search_on` oracle — and
+    // `submit_with(default_from(cfg))` must match `submit` exactly.
+    let cfg = session_cfg();
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 10);
+    let mut c0 = build_index(&cfg, &ds, &hasher);
+    let pumped = search(&mut c0, &qs, &hasher, &ranker);
+
+    let run = |use_with: bool| -> Vec<Vec<(f32, u32)>> {
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let session =
+            IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, Some(ranker.clone()));
+        for qi in 0..qs.len() {
+            if use_with {
+                session.submit_with(qs.get(qi), QueryOptions::default_from(&cfg));
+            } else {
+                session.submit(qs.get(qi));
+            }
+        }
+        let mut out = vec![Vec::new(); qs.len()];
+        for (t, hits) in session.drain() {
+            out[t.0 as usize] = hits;
+        }
+        session.close();
+        out
+    };
+    assert_eq!(run(false), pumped.results, "submit diverged from the pumped oracle");
+    assert_eq!(run(true), pumped.results, "submit_with(defaults) diverged from submit");
 }
 
 #[test]
