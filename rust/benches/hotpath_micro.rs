@@ -1,20 +1,32 @@
 //! Microbenchmarks of the serving hot paths (the criterion substitute):
-//! scalar vs PJRT-artifact hashing and ranking, bucket lookups, probe
-//! generation, top-k. Used by the §Perf optimization pass.
+//! scalar vs SIMD vs PJRT-artifact hashing and ranking, bucket lookups,
+//! probe generation, top-k. Used by the §Perf optimization pass.
 //! Run via `cargo bench --bench hotpath_micro`.
+//!
+//! Emits `BENCH_hotpath.json` and archives it under `bench_history/`
+//! (git-SHA-stamped), so `parlsh experiment history` tracks the hot-path
+//! trajectory across PRs. SIMD rows carry the detected dispatch tier in
+//! the op label (e.g. `sqdist (simd/avx2)`); set `PARLSH_FORCE_SCALAR=1`
+//! to pin the dispatcher to the scalar tier, and `PARLSH_BENCH_SECS` to
+//! scale the per-op measurement window (CI smoke uses a small value).
 
 use parlsh::core::lsh::{HashFamily, LshParams};
 use parlsh::core::multiprobe::probe_sequence;
 use parlsh::core::topk::TopK;
 use parlsh::data::sqdist;
 use parlsh::metrics::Table;
-use parlsh::runtime::{Hasher, Ranker, ScalarHasher, ScalarRanker};
+use parlsh::runtime::{kernels, Hasher, Ranker, ScalarHasher, ScalarRanker, SimdHasher, SimdRanker};
 use parlsh::util::rng::Rng;
 use parlsh::util::timer::bench_loop;
 
 fn main() {
     let mut rng = Rng::new(42);
     let dim = 128;
+    let secs: f64 = std::env::var("PARLSH_BENCH_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.3);
+    let tier = kernels::tier().name();
     let mut table = Table::new(&["op", "batch", "ns/item", "items/s"]);
     let mut row = |op: &str, batch: usize, secs_per_iter: f64, items: usize| {
         let ns = secs_per_iter * 1e9 / items as f64;
@@ -26,30 +38,58 @@ fn main() {
         ]);
     };
 
-    // --- scalar distance ---
+    // --- distance: scalar oracle vs dispatched SIMD ---
     let pool: Vec<f32> = (0..1024 * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
     let q: Vec<f32> = (0..dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
-    let mut acc = 0f32;
-    let mut i = 0usize;
-    let per = bench_loop(0.3, 16, || {
-        for c in 0..1024 {
-            acc += sqdist(&q, &pool[((i + c) % 1024) * dim..((i + c) % 1024 + 1) * dim]);
-        }
-        i += 7;
-    });
-    std::hint::black_box(acc);
-    row("sqdist (scalar)", 1024, per, 1024);
+    for batch in [64usize, 1024] {
+        let mut acc = 0f32;
+        let mut i = 0usize;
+        let per = bench_loop(secs, 16, || {
+            for c in 0..batch {
+                let r = (i + c) % 1024;
+                acc += sqdist(&q, &pool[r * dim..(r + 1) * dim]);
+            }
+            i += 7;
+        });
+        std::hint::black_box(acc);
+        row("sqdist (scalar)", batch, per, batch);
 
-    // --- hashing: scalar vs engine ---
+        let mut acc = 0f32;
+        let mut i = 0usize;
+        let per = bench_loop(secs, 16, || {
+            for c in 0..batch {
+                let r = (i + c) % 1024;
+                acc += kernels::sqdist(&q, &pool[r * dim..(r + 1) * dim]);
+            }
+            i += 7;
+        });
+        std::hint::black_box(acc);
+        row(&format!("sqdist (simd/{tier})"), batch, per, batch);
+    }
+
+    // --- hashing: scalar vs SIMD vs engine ---
     let params = LshParams { l: 6, m: 32, w: 900.0, k: 10, t: 30, seed: 1 };
     let family = HashFamily::sample(dim, params);
     let scalar_hasher = ScalarHasher { family: family.clone() };
+    let simd_hasher = SimdHasher::new(family.clone());
     for rows in [64usize, 1024] {
         let x: Vec<f32> = (0..rows * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
-        let per = bench_loop(0.3, 4, || {
+        let per = bench_loop(secs, 4, || {
             std::hint::black_box(scalar_hasher.hash_batch(&x, rows));
         });
         row("hash_batch (scalar)", rows, per, rows);
+        let per = bench_loop(secs, 4, || {
+            std::hint::black_box(simd_hasher.hash_batch(&x, rows));
+        });
+        row(&format!("hash_batch (simd/{tier})"), rows, per, rows);
+        let per = bench_loop(secs, 4, || {
+            std::hint::black_box(scalar_hasher.proj_batch(&x, rows));
+        });
+        row("proj_batch (scalar)", rows, per, rows);
+        let per = bench_loop(secs, 4, || {
+            std::hint::black_box(simd_hasher.proj_batch(&x, rows));
+        });
+        row(&format!("proj_batch (simd/{tier})"), rows, per, rows);
     }
 
     let engine = parlsh::experiments::engine();
@@ -62,7 +102,7 @@ fn main() {
         for rows in [64usize, 1024, 4096] {
             let x: Vec<f32> =
                 (0..rows * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
-            let per = bench_loop(0.3, 4, || {
+            let per = bench_loop(secs, 4, || {
                 std::hint::black_box(hasher.hash_batch(&x, rows));
             });
             row("hash_batch (PJRT)", rows, per, rows);
@@ -71,20 +111,25 @@ fn main() {
         println!("(no artifacts: engine rows skipped)");
     }
 
-    // --- ranking: scalar vs engine ---
+    // --- ranking: scalar vs SIMD+pruning vs engine ---
     let scalar_ranker = ScalarRanker { dim };
+    let simd_ranker = SimdRanker { dim };
     for n in [256usize, 4096] {
         let c: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
-        let per = bench_loop(0.3, 4, || {
+        let per = bench_loop(secs, 4, || {
             std::hint::black_box(scalar_ranker.rank(&q, &c, n, 10));
         });
         row("rank (scalar)", n, per, n);
+        let per = bench_loop(secs, 4, || {
+            std::hint::black_box(simd_ranker.rank_pruned(&q, &c, n, 10));
+        });
+        row(&format!("rank (simd+prune/{tier})"), n, per, n);
     }
     if let Some(e) = &engine {
         let ranker = parlsh::runtime::engine::EngineRanker { engine: e.clone() };
         for n in [256usize, 4096] {
             let c: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(0.0, 255.0)).collect();
-            let per = bench_loop(0.3, 4, || {
+            let per = bench_loop(secs, 4, || {
                 std::hint::black_box(ranker.rank(&q, &c, n, 10));
             });
             row("rank (PJRT)", n, per, n);
@@ -94,7 +139,7 @@ fn main() {
     // --- probe-sequence generation ---
     let fracs: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
     for t in [30usize, 120] {
-        let per = bench_loop(0.2, 16, || {
+        let per = bench_loop(secs.min(0.2), 16, || {
             std::hint::black_box(probe_sequence(&fracs, t));
         });
         row("probe_sequence", t, per, 1);
@@ -102,7 +147,7 @@ fn main() {
 
     // --- top-k ---
     let vals: Vec<f32> = (0..10_000).map(|_| rng.f32()).collect();
-    let per = bench_loop(0.2, 8, || {
+    let per = bench_loop(secs.min(0.2), 8, || {
         let mut tk = TopK::new(10);
         for (i, &v) in vals.iter().enumerate() {
             tk.push(v, i as u32);
@@ -111,6 +156,13 @@ fn main() {
     });
     row("topk push", 10_000, per, 10_000);
 
-    println!("== hot-path microbenchmarks ==");
+    println!("== hot-path microbenchmarks (dispatch tier: {tier}) ==");
     table.print();
+    match table.write_json("BENCH_hotpath.json", "hotpath") {
+        Ok(()) => match parlsh::experiments::archive_bench("BENCH_hotpath.json") {
+            Ok(archived) => println!("(wrote BENCH_hotpath.json; archived {archived})"),
+            Err(err) => println!("(wrote BENCH_hotpath.json; archive failed: {err})"),
+        },
+        Err(err) => println!("(BENCH_hotpath.json write failed: {err})"),
+    }
 }

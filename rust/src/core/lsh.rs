@@ -90,19 +90,32 @@ impl HashFamily {
     /// Raw (un-floored) projections `(a_p·v + b_p) / w` for all P functions.
     /// The fractional parts drive the multi-probe sequence.
     pub fn raw_projections(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.params.projections()];
+        self.proj_into(v, &mut out);
+        out
+    }
+
+    /// Write-into-slice variant of [`Self::raw_projections`] — the batched
+    /// hasher paths reuse one output buffer across rows instead of
+    /// allocating a fresh `Vec` per vector.
+    ///
+    /// Reduction-order contract (DESIGN.md §Kernels): each projection is a
+    /// *sequential* single-accumulator dot product over `dim` — the SIMD
+    /// kernels reproduce exactly this order (lane-per-projection over the
+    /// transposed bank, no FMA) so their outputs are bit-identical.
+    pub fn proj_into(&self, v: &[f32], out: &mut [f32]) {
         debug_assert_eq!(v.len(), self.dim);
         let p = self.params.projections();
+        debug_assert_eq!(out.len(), p);
         let inv_w = 1.0 / self.params.w;
-        let mut out = Vec::with_capacity(p);
         for row in 0..p {
             let a_row = &self.a[row * self.dim..(row + 1) * self.dim];
             let mut acc = 0f32;
             for (x, y) in a_row.iter().zip(v) {
                 acc += x * y;
             }
-            out.push((acc + self.b[row]) * inv_w);
+            out[row] = (acc + self.b[row]) * inv_w;
         }
-        out
     }
 
     /// Quantized hash coordinates `h_p(v)` for all P functions (scalar path;
@@ -112,6 +125,17 @@ impl HashFamily {
             .into_iter()
             .map(|f| f.floor() as i32)
             .collect()
+    }
+
+    /// Write-into-slice variant of [`Self::hash_coords`]: projects into
+    /// `scratch` (length P, reused by callers across rows) and floors into
+    /// `out` — zero allocations on the batched hot path.
+    pub fn coords_into(&self, v: &[f32], scratch: &mut [f32], out: &mut [i32]) {
+        debug_assert_eq!(out.len(), scratch.len());
+        self.proj_into(v, scratch);
+        for (c, f) in out.iter_mut().zip(scratch.iter()) {
+            *c = f.floor() as i32;
+        }
     }
 
     /// Bucket key for table `t` from the full P-length coordinate vector.
@@ -292,6 +316,23 @@ mod tests {
         // out-of-range requests clamp into 1..=L
         assert_eq!(f.query_probes(&raw, 4, 99), all);
         assert!(f.query_probes(&raw, 4, 0).iter().all(|&(t, _)| t == 0));
+    }
+
+    #[test]
+    fn into_variants_match_allocating_api() {
+        check("proj-into-matches", 40, |g| {
+            let f = small_family();
+            let v = g.vec_f32(16, -8.0, 8.0);
+            let p = f.params.projections();
+            let mut proj = vec![0f32; p];
+            f.proj_into(&v, &mut proj);
+            // bit-exact, not tolerance: the into-variant is the same loop
+            assert_eq!(proj, f.raw_projections(&v));
+            let mut scratch = vec![0f32; p];
+            let mut coords = vec![0i32; p];
+            f.coords_into(&v, &mut scratch, &mut coords);
+            assert_eq!(coords, f.hash_coords(&v));
+        });
     }
 
     #[test]

@@ -123,6 +123,24 @@ mod tests {
     }
 
     #[test]
+    fn tie_break_is_order_independent() {
+        // Equal distances fed in both arrival orders must produce the same
+        // output — the heap keeps the lower ids either way. This is the
+        // invariant the pruning ranker's strict bound check leans on.
+        let feed = |ids: &[u32]| {
+            let mut tk = TopK::new(2);
+            for &id in ids {
+                tk.push(1.0, id);
+            }
+            tk.into_sorted()
+        };
+        let fwd = feed(&[2, 9, 4]);
+        let rev = feed(&[4, 9, 2]);
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd, vec![(1.0, 2), (1.0, 4)]);
+    }
+
+    #[test]
     fn k_zero_is_noop() {
         let mut tk = TopK::new(0);
         tk.push(1.0, 1);

@@ -68,8 +68,13 @@ impl Dataset {
     }
 }
 
-/// Scalar squared L2 distance, 4-way unrolled (the pure-rust fallback the
-/// PJRT `rank` artifact is benchmarked against).
+/// Scalar squared L2 distance, 4-way unrolled — the *reduction-order
+/// oracle* for every SIMD tier (DESIGN.md §Kernels): 4 independent
+/// accumulators over 4-element chunks, folded left-associatively
+/// `((acc0 + acc1) + acc2) + acc3`, then a sequential scalar remainder.
+/// `runtime::kernels::sqdist` maps those accumulators onto vector lanes
+/// and must stay bit-identical to this function; change one and you must
+/// change both (the kernel property tests assert exact equality).
 #[inline]
 pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

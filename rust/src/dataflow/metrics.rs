@@ -192,6 +192,9 @@ pub struct WorkStats {
     pub candidates_routed: u64,
     /// Full distance computations at DP.
     pub dists_computed: u64,
+    /// Candidates abandoned early by the pruning ranker (partial-sum
+    /// exceeded the running k-th-best bound; see DESIGN.md §Kernels).
+    pub dists_pruned: u64,
     /// Candidates skipped by duplicate elimination.
     pub dup_skipped: u64,
     /// Vectors stored (index build).
@@ -207,6 +210,7 @@ impl WorkStats {
         self.bucket_lookups += other.bucket_lookups;
         self.candidates_routed += other.candidates_routed;
         self.dists_computed += other.dists_computed;
+        self.dists_pruned += other.dists_pruned;
         self.dup_skipped += other.dup_skipped;
         self.objects_stored += other.objects_stored;
         self.reduce_pushes += other.reduce_pushes;
@@ -334,9 +338,11 @@ mod tests {
         w.dists_computed = 5;
         let mut o = WorkStats::default();
         o.dists_computed = 7;
+        o.dists_pruned = 3;
         o.hash_vectors = 2;
         w.add(&o);
         assert_eq!(w.dists_computed, 12);
+        assert_eq!(w.dists_pruned, 3);
         assert_eq!(w.hash_vectors, 2);
     }
 }

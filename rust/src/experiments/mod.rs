@@ -18,7 +18,7 @@ use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
 use crate::data::Dataset;
 use crate::metrics::Table;
 use crate::runtime::engine::{Engine, EngineHasher, EngineRanker};
-use crate::runtime::{Hasher, Ranker, ScalarHasher, ScalarRanker};
+use crate::runtime::{Hasher, Ranker, SimdHasher, SimdRanker};
 use crate::simnet::cost::{CostModel, MakespanReport};
 use std::sync::{Arc, OnceLock};
 
@@ -73,11 +73,11 @@ pub fn backends(cfg: &Config, dim: usize) -> Backends {
         Some(e) if e.dim() == dim => {
             e.set_family(&family).expect("set_family");
             // §Perf: hashing always goes through the compiled artifact (the
-            // batched matmul wins by >10x); ranking is hybrid — scalar heap
+            // batched matmul wins by >10x); ranking is hybrid — SIMD heap
             // top-k for small candidate tiles, artifact for large ones (see
             // HybridRanker docs + EXPERIMENTS.md §Perf).
             let ranker = crate::runtime::HybridRanker {
-                scalar: ScalarRanker { dim },
+                scalar: SimdRanker { dim },
                 engine: Box::new(EngineRanker { engine: e.clone() }),
                 threshold: crate::runtime::HybridRanker::threshold_from_env(8192),
             };
@@ -91,8 +91,10 @@ pub fn backends(cfg: &Config, dim: usize) -> Backends {
             }
         }
         _ => Backends {
-            hasher: Box::new(ScalarHasher { family }),
-            ranker: Arc::new(ScalarRanker { dim }),
+            // SIMD tier (runtime-dispatched, bit-identical to the scalar
+            // oracle — DESIGN.md §Kernels) with the pruning ranker.
+            hasher: Box::new(SimdHasher::new(family)),
+            ranker: Arc::new(SimdRanker { dim }),
             engine_path: false,
         },
     }
@@ -150,6 +152,7 @@ pub struct RunResult {
     pub local_msgs: u64,
     pub wall_secs: f64,
     pub dists_computed: u64,
+    pub dists_pruned: u64,
     pub dup_skipped: u64,
     pub dp_counts: Vec<usize>,
 }
@@ -175,6 +178,7 @@ pub fn run_once(cfg: &Config, w: &World, cost: &CostModel) -> RunResult {
         cfg.lsh.projections(),
     );
     let dists: u64 = out.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+    let pruned: u64 = out.work.iter().map(|(_, _, w)| w.dists_pruned).sum();
     let dups: u64 = out.work.iter().map(|(_, _, w)| w.dup_skipped).sum();
     RunResult {
         recall,
@@ -186,6 +190,7 @@ pub fn run_once(cfg: &Config, w: &World, cost: &CostModel) -> RunResult {
         local_msgs: out.meter.local_msgs,
         wall_secs: out.wall_secs,
         dists_computed: dists,
+        dists_pruned: pruned,
         dup_skipped: dups,
         dp_counts: cluster.dp_object_counts(),
     }
@@ -536,6 +541,7 @@ pub fn executor_comparison() -> Table {
         "mean ms",
         "p99 ms",
         "recall",
+        "pruned",
     ]);
     let rows: [(&str, &dyn Executor, usize); 3] = [
         ("inline", &InlineExecutor, 0),
@@ -554,6 +560,9 @@ pub fn executor_comparison() -> Table {
         );
         let lat = latency_stats(&out.per_query_secs);
         let recall = recall_at_k(&out.retrieved_ids(), &w.gt);
+        // Early-abandoned candidates (SimdRanker's partial-sum bound);
+        // identical across executors because per-message rank inputs are.
+        let pruned: u64 = out.work.iter().map(|(_, _, w)| w.dists_pruned).sum();
         let label = if inflight > 0 {
             format!("{name} W={inflight}")
         } else {
@@ -566,6 +575,7 @@ pub fn executor_comparison() -> Table {
             format!("{:.2}", lat.mean_ms),
             format!("{:.2}", lat.p99_ms),
             format!("{recall:.3}"),
+            format!("{pruned}"),
         ]);
     }
     table

@@ -110,9 +110,12 @@ per-ticket option echo. (--queries files with any other extension keep
 the binary behavior: .bvecs as bytes, everything else as fvecs.)
 
 Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
-scalar path; PARLSH_ARTIFACTS points at the AOT artifact dir;
-PARLSH_INFLIGHT sets the batched-admission window of `experiment
-executors`; PARLSH_WORKER_BIN overrides the worker binary.
+scalar path (no PJRT artifacts); PARLSH_FORCE_SCALAR=1 pins the SIMD
+kernel dispatcher to its scalar tier (differential debugging);
+PARLSH_BENCH_SECS scales the hotpath_micro measurement window;
+PARLSH_ARTIFACTS points at the AOT artifact dir; PARLSH_INFLIGHT sets
+the batched-admission window of `experiment executors`;
+PARLSH_WORKER_BIN overrides the worker binary.
 ";
 
 fn cmd_build(args: &Args) -> Result<()> {

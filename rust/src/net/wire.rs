@@ -38,18 +38,20 @@ use std::fmt;
 use std::io::Read;
 use std::sync::Arc;
 
-// v3: per-query search plans — QueryVec carries QueryOptions (flags byte
-// + default-elided u32 fields), Query/CandidateReq/QueryMeta carry the
-// query's resolved k, and the handshake config digest covers the wire
-// version itself, so a v2 peer is rejected at `Hello` as well as at every
-// frame header. (v2 added per-copy WorkStats to FlushAck.)
-pub const WIRE_VERSION: u8 = 3;
+// v4: FlushAck WorkStats entries carry `dists_pruned` (9th u64 counter,
+// 67 → 75 bytes per entry) so pruning-ranker work merges across the
+// socket transport like every other counter. The handshake config digest
+// covers the wire version, so a v3 peer is rejected at `Hello` as well as
+// at every frame header. (v3 added per-query search plans — QueryVec
+// carries QueryOptions, Query/CandidateReq/QueryMeta carry the resolved
+// k; v2 added per-copy WorkStats to FlushAck.)
+pub const WIRE_VERSION: u8 = 4;
 pub const MAGIC: u16 = 0x504C;
 pub const HEADER_LEN: usize = 12;
 
 /// Typed frame-level decode failure, surfaced by [`read_frame`]. Callers
 /// that only report can `Display` it; version-negotiation logic can match
-/// on [`WireError::VersionMismatch`] — a v2 (or any non-v3) frame is a
+/// on [`WireError::VersionMismatch`] — a v3 (or any non-v4) frame is a
 /// *typed* rejection, never a panic and never a misparse.
 #[derive(Debug)]
 pub enum WireError {
@@ -760,6 +762,7 @@ pub fn encode_flush_ack(
             w.bucket_lookups,
             w.candidates_routed,
             w.dists_computed,
+            w.dists_pruned,
             w.dup_skipped,
             w.objects_stored,
             w.reduce_pushes,
@@ -789,7 +792,7 @@ pub fn decode_flush_ack(
         let bytes = rd.u64()?;
         meter.add_link(src, dst, packets, bytes);
     }
-    let n_work = rd.len_prefix(67)?; // 1 (stage) + 2 (copy) + 8 u64 counters
+    let n_work = rd.len_prefix(75)?; // 1 (stage) + 2 (copy) + 9 u64 counters
     let mut work = Vec::with_capacity(n_work);
     for _ in 0..n_work {
         let stage = StageKind::from_code(rd.u8()?)
@@ -801,6 +804,7 @@ pub fn decode_flush_ack(
             bucket_lookups: rd.u64()?,
             candidates_routed: rd.u64()?,
             dists_computed: rd.u64()?,
+            dists_pruned: rd.u64()?,
             dup_skipped: rd.u64()?,
             objects_stored: rd.u64()?,
             reduce_pushes: rd.u64()?,
@@ -1196,7 +1200,7 @@ mod tests {
             (
                 StageKind::Dp,
                 5u16,
-                WorkStats { dists_computed: 123, objects_stored: 44, ..Default::default() },
+                WorkStats { dists_computed: 123, dists_pruned: 31, objects_stored: 44, ..Default::default() },
             ),
         ];
         let p = encode_flush_ack(42, &m, &work);

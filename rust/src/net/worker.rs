@@ -35,7 +35,7 @@ use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
 use crate::net::peer::{connect_retry, PeerConn};
 use crate::net::wire::{self, FrameKind, Hello};
-use crate::runtime::ScalarRanker;
+use crate::runtime::{Ranker, SimdRanker};
 use crate::stages::{BiState, DpState};
 use crate::util::cli::Args;
 use anyhow::{bail, Context, Result};
@@ -247,9 +247,10 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
             dps.push(DpState::new(c, dim, placement.ag_copies, hello.stream.dedup));
         }
     }
-    // Workers always rank with the scalar oracle — bit-identical to the
-    // inline differential baseline (DESIGN.md §Transports).
-    let ranker = ScalarRanker { dim };
+    // Workers rank with the SIMD tier — bit-identical to the scalar
+    // oracle and therefore to the inline differential baseline
+    // (DESIGN.md §Transports, §Kernels).
+    let ranker = SimdRanker { dim };
 
     let mut guard = StopGuard { conn: driver_stream.try_clone().ok() };
     driver_stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).ok();
@@ -370,7 +371,7 @@ fn drain(
     bi_idx: &HashMap<u16, usize>,
     dps: &mut [DpState],
     dp_idx: &HashMap<u16, usize>,
-    ranker: &ScalarRanker,
+    ranker: &dyn Ranker,
     placement: &Placement,
     my: u16,
     addrs: &[String],

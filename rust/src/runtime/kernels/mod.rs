@@ -1,0 +1,707 @@
+//! SIMD kernels for the two compute hot spots — squared-L2 distance and
+//! the projection-bank matmul — behind one-time runtime dispatch
+//! (DESIGN.md §Kernels).
+//!
+//! Tiers: AVX2 (detected via `is_x86_feature_detected!`), SSE2 (the
+//! x86_64 baseline, always present), NEON (the aarch64 baseline), and the
+//! scalar fallback everywhere else. `PARLSH_FORCE_SCALAR=1` pins the
+//! scalar tier for differential debugging. The tier is resolved once per
+//! process ([`tier`]) so the per-call dispatch is a predictable branch.
+//!
+//! **Bit-identity contract**: every tier computes *exactly* the same f32
+//! results as the scalar oracles, not approximately.
+//!
+//! * `sqdist` — the scalar loop in [`crate::data::sqdist`] reduces through
+//!   4 independent accumulators over 4-element chunks, folded
+//!   `((acc0 + acc1) + acc2) + acc3`, then a scalar remainder. SSE2/NEON
+//!   keep those 4 accumulators as the 4 lanes of one vector register;
+//!   AVX2 processes two 4-lane chunk halves per iteration and folds both
+//!   halves into the *same* 4-lane accumulator in chunk order, so the
+//!   per-lane addition sequence is unchanged.
+//! * projections — [`crate::core::lsh::HashFamily::proj_into`] is a
+//!   sequential single-accumulator dot per projection row. The SIMD
+//!   kernels iterate the *dimension* outermost over the transposed bank
+//!   (`[dim][P]`), broadcasting `v[j]` and accumulating lane-per-
+//!   projection with separate mul + add (never FMA — different rounding),
+//!   so each lane performs the scalar row's additions in the scalar
+//!   row's order.
+//!
+//! Early-abandon pruning (Jafari et al., arXiv 1912.07101) rides on the
+//! same contract: [`sqdist_pruned`] checks the partial sum against the
+//! current k-th-best bound only at [`PRUNE_BLOCK`]-element boundaries
+//! (a multiple of every tier's lane footprint), so accepted candidates'
+//! reduction order — and therefore their distances — never change, and
+//! prune decisions are identical across tiers. The check is strict
+//! (`partial > bound`): a tie at the bound must survive, because an
+//! equal-distance lower-id candidate still displaces under the
+//! deterministic `(dist, id)` ordering of [`TopK`].
+
+use crate::core::lsh::HashFamily;
+use crate::core::topk::TopK;
+use crate::data::sqdist as sqdist_scalar;
+use crate::runtime::{Hasher, Ranker};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+/// Elements per early-abandon check. A multiple of every tier's inner
+/// step (scalar/SSE2/NEON: 4, AVX2: 8) so all tiers test the partial sum
+/// at the same boundaries and prune identically.
+pub const PRUNE_BLOCK: usize = 16;
+
+/// The instruction tier every kernel call dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// x86_64 with AVX2 (runtime-detected).
+    Avx2,
+    /// x86_64 baseline (SSE2 is architecturally guaranteed).
+    Sse2,
+    /// aarch64 baseline (NEON is architecturally guaranteed).
+    Neon,
+    /// Everything else, or `PARLSH_FORCE_SCALAR=1`.
+    Scalar,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Avx2 => "avx2",
+            Tier::Sse2 => "sse2",
+            Tier::Neon => "neon",
+            Tier::Scalar => "scalar",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Tier {
+    if is_x86_feature_detected!("avx2") {
+        Tier::Avx2
+    } else {
+        Tier::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Tier {
+    Tier::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Tier {
+    Tier::Scalar
+}
+
+/// The process-wide dispatch tier, resolved once: `PARLSH_FORCE_SCALAR=1`
+/// overrides feature detection (differential debugging; DESIGN.md
+/// §Kernels).
+pub fn tier() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        let forced = std::env::var("PARLSH_FORCE_SCALAR")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        if forced {
+            Tier::Scalar
+        } else {
+            detect()
+        }
+    })
+}
+
+// ------------------------------------------------------------- sqdist
+
+/// Squared L2 distance, dispatched to the detected tier. Bit-identical to
+/// [`crate::data::sqdist`] on every tier.
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { x86::sqdist_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { x86::sqdist_sse2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::sqdist_neon(a, b) },
+        _ => sqdist_scalar(a, b),
+    }
+}
+
+/// Squared L2 distance with early abandoning: returns `None` as soon as a
+/// [`PRUNE_BLOCK`]-boundary partial sum strictly exceeds `bound` (the
+/// caller's current k-th-best distance), `Some(dist)` otherwise —
+/// `dist` bit-identical to [`crate::data::sqdist`].
+///
+/// Safe under NaN (`NaN > bound` is false, so NaN distances always reach
+/// the caller exactly as the oracle computes them) and under an under-full
+/// top-k (`bound = +inf` never prunes). The partial sum is a monotone
+/// lower bound of the final distance — squared differences are
+/// non-negative and f32 addition of non-negative terms is monotone — so
+/// a prune can only drop candidates the top-k would reject anyway.
+#[inline]
+pub fn sqdist_pruned(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { x86::sqdist_pruned_avx2(a, b, bound) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { x86::sqdist_pruned_sse2(a, b, bound) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::sqdist_pruned_neon(a, b, bound) },
+        _ => sqdist_pruned_scalar(a, b, bound),
+    }
+}
+
+/// Scalar tier of [`sqdist_pruned`]: the [`crate::data::sqdist`] loop with
+/// a partial-sum check folded in at every [`PRUNE_BLOCK`] elements. The
+/// fold for the check is on a *copy* of the accumulators, so the final
+/// value is untouched by how often we check.
+pub(crate) fn sqdist_pruned_scalar(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    let n = a.len();
+    let mut acc0 = 0f32;
+    let mut acc1 = 0f32;
+    let mut acc2 = 0f32;
+    let mut acc3 = 0f32;
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        acc0 += d0 * d0;
+        acc1 += d1 * d1;
+        acc2 += d2 * d2;
+        acc3 += d3 * d3;
+        if (j + 4) % PRUNE_BLOCK == 0 && ((acc0 + acc1) + acc2) + acc3 > bound {
+            return None;
+        }
+    }
+    let mut acc = ((acc0 + acc1) + acc2) + acc3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        acc += d * d;
+    }
+    Some(acc)
+}
+
+// -------------------------------------------------------- projections
+
+/// Projection-bank matmul for one vector: `out[p] = (a_p·v + b_p[p]) *
+/// inv_w` over the transposed bank `at` (`[dim][P]`, from
+/// [`HashFamily::a_transposed`]). Dispatched; bit-identical to
+/// [`HashFamily::proj_into`] on every tier.
+#[inline]
+pub fn proj_into(v: &[f32], at: &[f32], offs: &[f32], inv_w: f32, out: &mut [f32]) {
+    debug_assert_eq!(v.len() * out.len(), at.len());
+    debug_assert_eq!(offs.len(), out.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { x86::proj_into_avx2(v, at, offs, inv_w, out) },
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => unsafe { x86::proj_into_sse2(v, at, offs, inv_w, out) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::proj_into_neon(v, at, offs, inv_w, out) },
+        _ => proj_into_scalar(v, at, offs, inv_w, out),
+    }
+}
+
+/// Scalar tier of [`proj_into`], over the *transposed* bank. Iterating j
+/// outermost performs, for each projection lane p, the additions
+/// `acc += at[j*P+p] * v[j]` in ascending j — exactly the sequential
+/// row-dot order of [`HashFamily::proj_into`], so this is bit-identical
+/// to the row-major oracle (and is the shape the SIMD tiers vectorize).
+pub(crate) fn proj_into_scalar(
+    v: &[f32],
+    at: &[f32],
+    offs: &[f32],
+    inv_w: f32,
+    out: &mut [f32],
+) {
+    let p = out.len();
+    out.fill(0.0);
+    for (j, &x) in v.iter().enumerate() {
+        let row = &at[j * p..(j + 1) * p];
+        for (o, &a) in out.iter_mut().zip(row) {
+            *o += x * a;
+        }
+    }
+    for (o, &b) in out.iter_mut().zip(offs) {
+        *o = (*o + b) * inv_w;
+    }
+}
+
+// ------------------------------------------------------------ backends
+
+/// SIMD-dispatched [`Hasher`]: the sampled family's projection bank held
+/// transposed (`[dim][P]`) so the kernels stream it contiguously, plus
+/// write-into-slice batch loops (no per-row allocation). Results are
+/// bit-identical to [`crate::runtime::ScalarHasher`] on every tier.
+pub struct SimdHasher {
+    family: HashFamily,
+    /// `family.a_transposed()`: `[dim][P]`.
+    at: Vec<f32>,
+    /// `family.offsets()` cloned dense for the kernel.
+    offs: Vec<f32>,
+    inv_w: f32,
+}
+
+impl SimdHasher {
+    pub fn new(family: HashFamily) -> SimdHasher {
+        let at = family.a_transposed();
+        let offs = family.offsets().to_vec();
+        let inv_w = 1.0 / family.params.w;
+        SimdHasher { family, at, offs, inv_w }
+    }
+
+    pub fn family(&self) -> &HashFamily {
+        &self.family
+    }
+
+    /// Project one row into `out` (length P) — the no-alloc primitive both
+    /// batch methods loop over.
+    #[inline]
+    pub fn proj_row_into(&self, v: &[f32], out: &mut [f32]) {
+        proj_into(v, &self.at, &self.offs, self.inv_w, out);
+    }
+}
+
+impl Hasher for SimdHasher {
+    fn dim(&self) -> usize {
+        self.family.dim
+    }
+    fn p(&self) -> usize {
+        self.family.params.projections()
+    }
+    fn hash_batch(&self, x: &[f32], rows: usize) -> Vec<i32> {
+        let dim = self.dim();
+        let p = self.p();
+        let mut out = Vec::with_capacity(rows * p);
+        let mut scratch = vec![0f32; p];
+        for r in 0..rows {
+            self.proj_row_into(&x[r * dim..(r + 1) * dim], &mut scratch);
+            out.extend(scratch.iter().map(|f| f.floor() as i32));
+        }
+        out
+    }
+    fn proj_batch(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let dim = self.dim();
+        let p = self.p();
+        let mut out = vec![0f32; rows * p];
+        for r in 0..rows {
+            self.proj_row_into(&x[r * dim..(r + 1) * dim], &mut out[r * p..(r + 1) * p]);
+        }
+        out
+    }
+}
+
+/// SIMD-dispatched, pruning-aware [`Ranker`]: SIMD `sqdist` with
+/// early abandoning against the running k-th-best bound. `rank` returns
+/// exactly what [`crate::runtime::ScalarRanker`] returns (pruning only
+/// drops candidates the top-k would reject), and `rank_pruned`
+/// additionally reports how many candidates were abandoned early
+/// (`WorkStats::dists_pruned`).
+pub struct SimdRanker {
+    pub dim: usize,
+}
+
+impl Ranker for SimdRanker {
+    fn rank(&self, q: &[f32], cands: &[f32], n: usize, k: usize) -> Vec<(f32, u32)> {
+        self.rank_pruned(q, cands, n, k).0
+    }
+
+    fn rank_pruned(
+        &self,
+        q: &[f32],
+        cands: &[f32],
+        n: usize,
+        k: usize,
+    ) -> (Vec<(f32, u32)>, u64) {
+        debug_assert!(cands.len() >= n * self.dim);
+        let mut tk = TopK::new(k);
+        let mut pruned = 0u64;
+        for i in 0..n {
+            let c = &cands[i * self.dim..(i + 1) * self.dim];
+            match sqdist_pruned(q, c, tk.threshold()) {
+                Some(d) => tk.push(d, i as u32),
+                None => pruned += 1,
+            }
+        }
+        (tk.into_sorted(), pruned)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::lsh::LshParams;
+    use crate::runtime::{ScalarHasher, ScalarRanker};
+    use crate::util::minitest::check;
+
+    /// All tiers this host can actually execute (Scalar always; SSE2/AVX2
+    /// or NEON per arch + detection). Property tests run every kernel
+    /// variant against the scalar oracle, not just the dispatched one.
+    fn host_sqdist_variants() -> Vec<(&'static str, fn(&[f32], &[f32]) -> f32)> {
+        let mut v: Vec<(&'static str, fn(&[f32], &[f32]) -> f32)> =
+            vec![("dispatched", sqdist as fn(&[f32], &[f32]) -> f32)];
+        #[cfg(target_arch = "x86_64")]
+        {
+            fn sse2(a: &[f32], b: &[f32]) -> f32 {
+                unsafe { x86::sqdist_sse2(a, b) }
+            }
+            v.push(("sse2", sse2));
+            if is_x86_feature_detected!("avx2") {
+                fn avx2(a: &[f32], b: &[f32]) -> f32 {
+                    unsafe { x86::sqdist_avx2(a, b) }
+                }
+                v.push(("avx2", avx2));
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            fn neon_f(a: &[f32], b: &[f32]) -> f32 {
+                unsafe { neon::sqdist_neon(a, b) }
+            }
+            v.push(("neon", neon_f));
+        }
+        v
+    }
+
+    type PrunedFn = fn(&[f32], &[f32], f32) -> Option<f32>;
+
+    fn host_pruned_variants() -> Vec<(&'static str, PrunedFn)> {
+        let mut v: Vec<(&'static str, PrunedFn)> = vec![
+            ("dispatched", sqdist_pruned as PrunedFn),
+            ("scalar", sqdist_pruned_scalar as PrunedFn),
+        ];
+        #[cfg(target_arch = "x86_64")]
+        {
+            fn sse2(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+                unsafe { x86::sqdist_pruned_sse2(a, b, bound) }
+            }
+            v.push(("sse2", sse2));
+            if is_x86_feature_detected!("avx2") {
+                fn avx2(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+                    unsafe { x86::sqdist_pruned_avx2(a, b, bound) }
+                }
+                v.push(("avx2", avx2));
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            fn neon_f(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+                unsafe { neon::sqdist_pruned_neon(a, b, bound) }
+            }
+            v.push(("neon", neon_f));
+        }
+        v
+    }
+
+    type ProjFn = fn(&[f32], &[f32], &[f32], f32, &mut [f32]);
+
+    fn host_proj_variants() -> Vec<(&'static str, ProjFn)> {
+        let mut v: Vec<(&'static str, ProjFn)> = vec![
+            ("dispatched", proj_into as ProjFn),
+            ("scalar-transposed", proj_into_scalar as ProjFn),
+        ];
+        #[cfg(target_arch = "x86_64")]
+        {
+            fn sse2(v_: &[f32], at: &[f32], o: &[f32], w: f32, out: &mut [f32]) {
+                unsafe { x86::proj_into_sse2(v_, at, o, w, out) }
+            }
+            v.push(("sse2", sse2));
+            if is_x86_feature_detected!("avx2") {
+                fn avx2(v_: &[f32], at: &[f32], o: &[f32], w: f32, out: &mut [f32]) {
+                    unsafe { x86::proj_into_avx2(v_, at, o, w, out) }
+                }
+                v.push(("avx2", avx2));
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            fn neon_f(v_: &[f32], at: &[f32], o: &[f32], w: f32, out: &mut [f32]) {
+                unsafe { neon::proj_into_neon(v_, at, o, w, out) }
+            }
+            v.push(("neon", neon_f));
+        }
+        v
+    }
+
+    /// Bits, not tolerance: the whole point of the reduction-order
+    /// contract is exact equality with the scalar oracle.
+    fn assert_bits_eq(name: &str, got: f32, want: f32) {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "{name}: {got} != {want} (bitwise)"
+        );
+    }
+
+    #[test]
+    fn sqdist_bit_exact_across_dims() {
+        // Odd dims cover every remainder tail 1..=7 plus dim < lane width.
+        check("kernels-sqdist-bitexact", 80, |g| {
+            let n = g.usize_in(0, 3 + g.size);
+            let a = g.vec_f32(n, -300.0, 300.0);
+            let b = g.vec_f32(n, -300.0, 300.0);
+            let want = sqdist_scalar(&a, &b);
+            for (name, f) in host_sqdist_variants() {
+                assert_bits_eq(name, f(&a, &b), want);
+            }
+        });
+    }
+
+    #[test]
+    fn sqdist_bit_exact_small_and_empty() {
+        // Deterministic sweep of every tail length below and above one
+        // PRUNE_BLOCK, including the empty slice.
+        for n in 0..=2 * PRUNE_BLOCK + 1 {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32).sin() * 9.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32).cos() * 7.0).collect();
+            let want = sqdist_scalar(&a, &b);
+            for (name, f) in host_sqdist_variants() {
+                assert_bits_eq(name, f(&a, &b), want);
+            }
+        }
+    }
+
+    #[test]
+    fn sqdist_bit_exact_nan_inf() {
+        for n in [1usize, 4, 7, 17, 33] {
+            let mut a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5).collect();
+            a[n / 2] = f32::NAN;
+            let want = sqdist_scalar(&a, &b);
+            assert!(want.is_nan());
+            for (name, f) in host_sqdist_variants() {
+                assert!(f(&a, &b).is_nan(), "{name}: NaN lost");
+            }
+            a[n / 2] = f32::INFINITY;
+            let want = sqdist_scalar(&a, &b);
+            for (name, f) in host_sqdist_variants() {
+                assert_bits_eq(name, f(&a, &b), want);
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_matches_unpruned_when_kept() {
+        // A kept candidate's distance is bit-identical to the plain kernel;
+        // a pruned one really does exceed the bound. All tiers agree on
+        // the prune decision (same block boundaries).
+        check("kernels-sqdist-pruned", 80, |g| {
+            let n = g.usize_in(0, 3 + g.size);
+            let a = g.vec_f32(n, -50.0, 50.0);
+            let b = g.vec_f32(n, -50.0, 50.0);
+            let full = sqdist_scalar(&a, &b);
+            // Bounds straddling the true distance, plus the exact value
+            // (equality must NOT prune) and the under-full +inf.
+            let bounds =
+                [full * 0.25, full * 0.5, full, full * 2.0 + 1.0, f32::INFINITY];
+            for bound in bounds {
+                let want = sqdist_pruned_scalar(&a, &b, bound);
+                for (name, f) in host_pruned_variants() {
+                    let got = f(&a, &b, bound);
+                    match (got, want) {
+                        (Some(x), Some(y)) => {
+                            assert_bits_eq(name, x, y);
+                            assert_bits_eq(name, x, full);
+                        }
+                        (None, None) => {}
+                        other => panic!("{name}: prune decision diverged: {other:?}"),
+                    }
+                }
+                if bound >= full {
+                    // at or above the true distance nothing may be pruned
+                    assert_eq!(want, Some(full), "pruned at bound >= dist");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pruned_never_prunes_nan_or_inf_bound() {
+        let a: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        let mut b = a.clone();
+        b[3] = f32::NAN;
+        for (name, f) in host_pruned_variants() {
+            // NaN partials compare false against any bound — never pruned.
+            assert!(f(&a, &b, 0.0).unwrap().is_nan(), "{name}: NaN pruned");
+            // +inf bound (under-full top-k) never prunes.
+            assert_eq!(
+                f(&a, &a, f32::INFINITY),
+                Some(0.0),
+                "{name}: inf bound pruned"
+            );
+        }
+    }
+
+    fn family(dim: usize, l: usize, m: usize, seed: u64) -> HashFamily {
+        HashFamily::sample(
+            dim,
+            LshParams { l, m, w: 4.0, k: 5, t: 1, seed },
+        )
+    }
+
+    #[test]
+    fn proj_bit_exact_vs_row_oracle() {
+        // Odd P (lane remainders 1..=7) and odd dims, vs the row-major
+        // scalar oracle in HashFamily.
+        check("kernels-proj-bitexact", 60, |g| {
+            let dim = g.usize_in(1, 40);
+            let l = g.usize_in(1, 3);
+            let m = g.usize_in(1, 11);
+            let f = family(dim, l, m, g.rng.next_u64());
+            let p = f.params.projections();
+            let v = g.vec_f32(dim, -10.0, 10.0);
+            let want = f.raw_projections(&v);
+            let at = f.a_transposed();
+            let offs = f.offsets();
+            let inv_w = 1.0 / f.params.w;
+            let mut out = vec![0f32; p];
+            for (name, kf) in host_proj_variants() {
+                out.fill(f32::NAN);
+                kf(&v, &at, offs, inv_w, &mut out);
+                for (i, (&got, &w)) in out.iter().zip(&want).enumerate() {
+                    assert_bits_eq(&format!("{name}[{i}]"), got, w);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn proj_bit_exact_nan_inf_inputs() {
+        let f = family(12, 2, 5, 9);
+        let p = f.params.projections();
+        let mut v: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
+        v[5] = f32::NAN;
+        v[7] = f32::INFINITY;
+        let want = f.raw_projections(&v);
+        let at = f.a_transposed();
+        let mut out = vec![0f32; p];
+        for (name, kf) in host_proj_variants() {
+            kf(&v, &at, f.offsets(), 1.0 / f.params.w, &mut out);
+            for (i, (&got, &w)) in out.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    w.to_bits(),
+                    "{name}[{i}]: {got} != {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_hasher_matches_scalar_hasher_bit_exact() {
+        check("kernels-hasher-differential", 30, |g| {
+            let dim = g.usize_in(1, 48);
+            let f = family(dim, 2, g.usize_in(1, 9), g.rng.next_u64());
+            let scalar = ScalarHasher { family: f.clone() };
+            let simd = SimdHasher::new(f);
+            let rows = g.usize_in(0, 6);
+            let x = g.vec_f32(rows * dim, -20.0, 20.0);
+            assert_eq!(simd.proj_batch(&x, rows), scalar.proj_batch(&x, rows));
+            assert_eq!(simd.hash_batch(&x, rows), scalar.hash_batch(&x, rows));
+            assert_eq!(simd.dim(), scalar.dim());
+            assert_eq!(simd.p(), scalar.p());
+        });
+    }
+
+    #[test]
+    fn simd_ranker_matches_scalar_oracle_under_ties() {
+        // The pruning differential: identical (dist, id) pairs to the
+        // non-pruning scalar oracle, including duplicated candidates
+        // (exact distance ties) in both orders.
+        check("kernels-ranker-differential", 40, |g| {
+            let dim = g.usize_in(1, 24);
+            let n = g.usize_in(0, 30);
+            let k = g.usize_in(0, 12);
+            let q = g.vec_f32(dim, -5.0, 5.0);
+            let mut cands = g.vec_f32(n * dim, -5.0, 5.0);
+            // duplicate a random row to force exact ties at distinct ids
+            if n >= 2 {
+                let src = g.usize_in(0, n - 1);
+                let dst = g.usize_in(0, n - 1);
+                let row: Vec<f32> = cands[src * dim..(src + 1) * dim].to_vec();
+                cands[dst * dim..(dst + 1) * dim].copy_from_slice(&row);
+            }
+            let oracle = ScalarRanker { dim }.rank(&q, &cands, n, k);
+            let simd = SimdRanker { dim };
+            assert_eq!(simd.rank(&q, &cands, n, k), oracle);
+            let (hits, pruned) = simd.rank_pruned(&q, &cands, n, k);
+            assert_eq!(hits, oracle);
+            assert!(pruned <= n as u64);
+        });
+    }
+
+    #[test]
+    fn ranker_tie_at_the_bound_survives() {
+        // Three candidates at exactly the same distance with k=2: after
+        // two pushes the bound *equals* the third candidate's distance,
+        // and its partial sum at the (single) block boundary equals the
+        // bound exactly. The strict `>` check must evaluate it fully
+        // (pruned == 0) and let TopK apply the deterministic (dist, id)
+        // tie-break, exactly like the non-pruning oracle.
+        let dim = PRUNE_BLOCK; // one full block, so the bound check fires
+        let base: Vec<f32> = (0..dim).map(|i| i as f32).collect();
+        let q = vec![0f32; dim];
+        let mut cands = vec![0f32; 3 * dim];
+        for slot in 0..3 {
+            cands[slot * dim..(slot + 1) * dim].copy_from_slice(&base);
+        }
+        let oracle = ScalarRanker { dim }.rank(&q, &cands, 3, 2);
+        let (got, pruned) = SimdRanker { dim }.rank_pruned(&q, &cands, 3, 2);
+        assert_eq!(got, oracle);
+        assert_eq!(pruned, 0, "a tie at the bound must be evaluated, not pruned");
+        // deterministic tie-break: lowest ids win
+        assert_eq!(got.iter().map(|&(_, id)| id).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn ranker_actually_prunes() {
+        // One near candidate then many far ones: with k=1 the bound drops
+        // to ~0 after the first candidate and every later block-sized
+        // distance overshoots it — pruning must engage (on every tier;
+        // block boundaries agree), yet results equal the oracle.
+        let dim = 4 * PRUNE_BLOCK;
+        let q = vec![0f32; dim];
+        let n = 64;
+        let mut cands = vec![0f32; n * dim];
+        for i in 1..n {
+            for d in 0..dim {
+                cands[i * dim + d] = 100.0 + i as f32;
+            }
+        }
+        let oracle = ScalarRanker { dim }.rank(&q, &cands, n, 1);
+        let (hits, pruned) = SimdRanker { dim }.rank_pruned(&q, &cands, n, 1);
+        assert_eq!(hits, oracle);
+        assert_eq!(hits, vec![(0.0, 0)]);
+        assert_eq!(pruned, (n - 1) as u64, "far candidates must early-abandon");
+    }
+
+    #[test]
+    fn default_rank_pruned_is_the_oracle() {
+        // The trait's default keeps every existing Ranker impl valid:
+        // plain rank, zero pruned.
+        let r = ScalarRanker { dim: 4 };
+        let q = [0f32; 4];
+        let cands = [1.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0];
+        let (hits, pruned) = r.rank_pruned(&q, &cands, 2, 1);
+        assert_eq!(hits, vec![(1.0, 0)]);
+        assert_eq!(pruned, 0);
+    }
+
+    #[test]
+    fn tier_is_stable_and_named() {
+        let t = tier();
+        assert_eq!(t, tier(), "tier must be resolved once");
+        assert!(!t.name().is_empty());
+        if std::env::var("PARLSH_FORCE_SCALAR").as_deref() == Ok("1") {
+            assert_eq!(t, Tier::Scalar, "PARLSH_FORCE_SCALAR ignored");
+        }
+    }
+}

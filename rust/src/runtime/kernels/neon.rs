@@ -1,0 +1,94 @@
+//! aarch64 NEON kernels (architectural baseline — no runtime detection
+//! needed). Same reduction-order contract as the x86 kernels: the scalar
+//! oracle's 4 sqdist accumulators are the 4 lanes of one `float32x4_t`,
+//! folded `((l0 + l1) + l2) + l3`; projections accumulate
+//! lane-per-projection with separate `vmulq`/`vaddq` — never `vfmaq`,
+//! whose fused rounding would break bit-identity.
+
+use super::PRUNE_BLOCK;
+use core::arch::aarch64::*;
+
+/// Fold a 4-lane accumulator exactly like the scalar oracle.
+#[inline]
+unsafe fn fold4(acc: float32x4_t) -> f32 {
+    let l0 = vgetq_lane_f32::<0>(acc);
+    let l1 = vgetq_lane_f32::<1>(acc);
+    let l2 = vgetq_lane_f32::<2>(acc);
+    let l3 = vgetq_lane_f32::<3>(acc);
+    ((l0 + l1) + l2) + l3
+}
+
+/// NEON sqdist. Safety: NEON is part of the aarch64 baseline; `a` and `b`
+/// must be equal-length (the dispatcher debug-asserts it).
+pub(crate) unsafe fn sqdist_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        let va = vld1q_f32(a.as_ptr().add(j));
+        let vb = vld1q_f32(b.as_ptr().add(j));
+        let d = vsubq_f32(va, vb);
+        acc = vaddq_f32(acc, vmulq_f32(d, d));
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// NEON sqdist with early abandoning at [`PRUNE_BLOCK`] boundaries
+/// (strict `>`, accumulator untouched by the check fold).
+pub(crate) unsafe fn sqdist_pruned_neon(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        let va = vld1q_f32(a.as_ptr().add(j));
+        let vb = vld1q_f32(b.as_ptr().add(j));
+        let d = vsubq_f32(va, vb);
+        acc = vaddq_f32(acc, vmulq_f32(d, d));
+        if (j + 4) % PRUNE_BLOCK == 0 && fold4(acc) > bound {
+            return None;
+        }
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    Some(s)
+}
+
+/// NEON projection kernel over the transposed bank (`at` is `[dim][P]`);
+/// see `x86::proj_into_sse2` for the lane-per-projection layout argument.
+pub(crate) unsafe fn proj_into_neon(
+    v: &[f32],
+    at: &[f32],
+    offs: &[f32],
+    inv_w: f32,
+    out: &mut [f32],
+) {
+    let p = out.len();
+    let groups = p / 4;
+    out.fill(0.0);
+    for (j, &x) in v.iter().enumerate() {
+        let row = at.as_ptr().add(j * p);
+        let xv = vdupq_n_f32(x);
+        for g in 0..groups {
+            let o = out.as_mut_ptr().add(g * 4);
+            let acc = vld1q_f32(o);
+            let prod = vmulq_f32(xv, vld1q_f32(row.add(g * 4)));
+            vst1q_f32(o, vaddq_f32(acc, prod));
+        }
+        for t in groups * 4..p {
+            out[t] += x * *row.add(t);
+        }
+    }
+    for (o, &b) in out.iter_mut().zip(offs) {
+        *o = (*o + b) * inv_w;
+    }
+}

@@ -1,0 +1,205 @@
+//! x86_64 kernels: SSE2 (architectural baseline, no detection needed) and
+//! AVX2 (called only after `is_x86_feature_detected!("avx2")`).
+//!
+//! Every function here obeys the reduction-order contract in the module
+//! docs (`kernels`): sqdist keeps the scalar oracle's 4 accumulators as
+//! the 4 lanes of one `__m128` (AVX2 folds its two 128-bit halves into
+//! that same accumulator, low half first — the scalar chunk order), and
+//! the projection kernels accumulate lane-per-projection with *separate*
+//! mul and add intrinsics — never FMA, whose single rounding would break
+//! bit-identity with the scalar oracle.
+
+use super::PRUNE_BLOCK;
+use core::arch::x86_64::*;
+
+/// Fold a 4-lane accumulator exactly like the scalar oracle:
+/// `((l0 + l1) + l2) + l3`.
+#[inline]
+unsafe fn fold4(acc: __m128) -> f32 {
+    let mut l = [0f32; 4];
+    _mm_storeu_ps(l.as_mut_ptr(), acc);
+    ((l[0] + l[1]) + l[2]) + l[3]
+}
+
+/// SSE2 sqdist. Safety: SSE2 is part of the x86_64 baseline, so this is
+/// callable on every x86_64 CPU; `a` and `b` must be equal-length (the
+/// dispatcher debug-asserts it; reads are bounds-derived either way).
+pub(crate) unsafe fn sqdist_sse2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..chunks {
+        let j = i * 4;
+        let va = _mm_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm_loadu_ps(b.as_ptr().add(j));
+        let d = _mm_sub_ps(va, vb);
+        acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// AVX2 sqdist: 8 elements per iteration — two scalar 4-chunks — whose
+/// 128-bit halves fold into the *same* 4-lane accumulator in chunk order,
+/// so the per-lane addition sequence equals the SSE2/scalar one.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn sqdist_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pairs = n / 8;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..pairs {
+        let j = i * 8;
+        let va = _mm256_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        let d = _mm256_sub_ps(va, vb);
+        let sq = _mm256_mul_ps(d, d);
+        acc = _mm_add_ps(acc, _mm256_castps256_ps128(sq)); // chunk 2i
+        acc = _mm_add_ps(acc, _mm256_extractf128_ps::<1>(sq)); // chunk 2i+1
+    }
+    // odd leftover 4-chunk (n/4 odd), then the scalar tail — same shape
+    // as the oracle's remainder handling.
+    let mut j = pairs * 8;
+    if j + 4 <= n {
+        let va = _mm_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm_loadu_ps(b.as_ptr().add(j));
+        let d = _mm_sub_ps(va, vb);
+        acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+        j += 4;
+    }
+    let mut s = fold4(acc);
+    for t in j..n {
+        let d = a[t] - b[t];
+        s += d * d;
+    }
+    s
+}
+
+/// SSE2 sqdist with early abandoning at [`PRUNE_BLOCK`] boundaries
+/// (strict `>`; the fold for the check copies the accumulator, leaving
+/// the running reduction untouched).
+pub(crate) unsafe fn sqdist_pruned_sse2(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..chunks {
+        let j = i * 4;
+        let va = _mm_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm_loadu_ps(b.as_ptr().add(j));
+        let d = _mm_sub_ps(va, vb);
+        acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+        if (j + 4) % PRUNE_BLOCK == 0 && fold4(acc) > bound {
+            return None;
+        }
+    }
+    let mut s = fold4(acc);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    Some(s)
+}
+
+/// AVX2 sqdist with early abandoning. Checks fire after every other
+/// 8-wide iteration — the same 16-element boundaries as every other tier,
+/// so prune decisions are tier-invariant.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn sqdist_pruned_avx2(a: &[f32], b: &[f32], bound: f32) -> Option<f32> {
+    let n = a.len();
+    let pairs = n / 8;
+    let mut acc = _mm_setzero_ps();
+    for i in 0..pairs {
+        let j = i * 8;
+        let va = _mm256_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        let d = _mm256_sub_ps(va, vb);
+        let sq = _mm256_mul_ps(d, d);
+        acc = _mm_add_ps(acc, _mm256_castps256_ps128(sq));
+        acc = _mm_add_ps(acc, _mm256_extractf128_ps::<1>(sq));
+        if (j + 8) % PRUNE_BLOCK == 0 && fold4(acc) > bound {
+            return None;
+        }
+    }
+    let mut j = pairs * 8;
+    if j + 4 <= n {
+        let va = _mm_loadu_ps(a.as_ptr().add(j));
+        let vb = _mm_loadu_ps(b.as_ptr().add(j));
+        let d = _mm_sub_ps(va, vb);
+        acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+        j += 4;
+    }
+    let mut s = fold4(acc);
+    for t in j..n {
+        let d = a[t] - b[t];
+        s += d * d;
+    }
+    Some(s)
+}
+
+/// SSE2 projection kernel over the transposed bank (`at` is `[dim][P]`):
+/// the dimension loop is outermost, `v[j]` is broadcast, and each group
+/// of 4 projections accumulates in `out` with separate mul + add — per
+/// lane, exactly the scalar row-dot's addition sequence. The `P % 4`
+/// remainder lanes accumulate scalar inside the same `j` loop (same
+/// order again).
+pub(crate) unsafe fn proj_into_sse2(
+    v: &[f32],
+    at: &[f32],
+    offs: &[f32],
+    inv_w: f32,
+    out: &mut [f32],
+) {
+    let p = out.len();
+    let groups = p / 4;
+    out.fill(0.0);
+    for (j, &x) in v.iter().enumerate() {
+        let row = at.as_ptr().add(j * p);
+        let xv = _mm_set1_ps(x);
+        for g in 0..groups {
+            let o = out.as_mut_ptr().add(g * 4);
+            let acc = _mm_loadu_ps(o);
+            let prod = _mm_mul_ps(xv, _mm_loadu_ps(row.add(g * 4)));
+            _mm_storeu_ps(o, _mm_add_ps(acc, prod));
+        }
+        for t in groups * 4..p {
+            out[t] += x * *row.add(t);
+        }
+    }
+    for (o, &b) in out.iter_mut().zip(offs) {
+        *o = (*o + b) * inv_w;
+    }
+}
+
+/// AVX2 projection kernel: same shape as the SSE2 one with 8 projection
+/// lanes per group.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn proj_into_avx2(
+    v: &[f32],
+    at: &[f32],
+    offs: &[f32],
+    inv_w: f32,
+    out: &mut [f32],
+) {
+    let p = out.len();
+    let groups = p / 8;
+    out.fill(0.0);
+    for (j, &x) in v.iter().enumerate() {
+        let row = at.as_ptr().add(j * p);
+        let xv = _mm256_set1_ps(x);
+        for g in 0..groups {
+            let o = out.as_mut_ptr().add(g * 8);
+            let acc = _mm256_loadu_ps(o);
+            let prod = _mm256_mul_ps(xv, _mm256_loadu_ps(row.add(g * 8)));
+            _mm256_storeu_ps(o, _mm256_add_ps(acc, prod));
+        }
+        for t in groups * 8..p {
+            out[t] += x * *row.add(t);
+        }
+    }
+    for (o, &b) in out.iter_mut().zip(offs) {
+        *o = (*o + b) * inv_w;
+    }
+}

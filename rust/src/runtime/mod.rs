@@ -1,13 +1,14 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts and exposes the two
-//! compute hot-spots — hashing and candidate ranking — behind the
-//! [`Hasher`] / [`Ranker`] traits the stages program against.
+//! Compute runtime: the two hot-spots — hashing and candidate ranking —
+//! behind the [`Hasher`] / [`Ranker`] traits the stages program against.
 //!
-//! Two implementations of each trait:
-//! * `Scalar*` — pure rust; the differential-testing oracle and the
-//!   fallback when `artifacts/` is absent;
-//! * [`engine::Engine`] — compiled HLO via `PjRtClient::cpu()`; artifacts
-//!   come in fixed shape variants (see `python/compile/aot.py`) and inputs
-//!   are padded up to the nearest variant.
+//! Three implementations of each trait:
+//! * `Scalar*` — pure rust; the differential-testing oracle;
+//! * `Simd*` ([`kernels`]) — `std::arch` SIMD with one-time runtime
+//!   dispatch (AVX2/SSE2/NEON/scalar), bit-identical to the oracle and
+//!   the production default (DESIGN.md §Kernels);
+//! * [`engine::Engine`] — AOT-compiled HLO via `PjRtClient::cpu()`;
+//!   artifacts come in fixed shape variants (see `python/compile/aot.py`)
+//!   and inputs are padded up to the nearest variant.
 
 pub mod artifact;
 #[cfg(feature = "pjrt")]
@@ -18,6 +19,9 @@ pub mod engine;
 #[cfg(not(feature = "pjrt"))]
 #[path = "engine_stub.rs"]
 pub mod engine;
+pub mod kernels;
+
+pub use kernels::{SimdHasher, SimdRanker, Tier};
 
 use crate::core::lsh::HashFamily;
 use crate::core::topk::TopK;
@@ -40,6 +44,25 @@ pub trait Ranker: Send + Sync {
     /// Rank `n` candidate vectors (flat `[n*dim]`) against query `q`;
     /// return up to `k` `(sqdist, local_index)` pairs ascending.
     fn rank(&self, q: &[f32], cands: &[f32], n: usize, k: usize) -> Vec<(f32, u32)>;
+
+    /// Like [`Self::rank`], but implementations may early-abandon
+    /// candidates whose partial distance already exceeds the running
+    /// k-th-best bound (Jafari et al., arXiv 1912.07101); the second
+    /// element counts candidates abandoned early
+    /// (`WorkStats::dists_pruned`). Pruning must not change the returned
+    /// pairs — [`kernels::SimdRanker`] guarantees this by checking a
+    /// strict bound at lane-blocked boundaries only. The default is the
+    /// plain non-pruning `rank`, so existing implementations stay valid
+    /// oracles.
+    fn rank_pruned(
+        &self,
+        q: &[f32],
+        cands: &[f32],
+        n: usize,
+        k: usize,
+    ) -> (Vec<(f32, u32)>, u64) {
+        (self.rank(q, cands, n, k), 0)
+    }
 }
 
 /// Scalar hasher backed by the sampled family (same math as the artifact).
@@ -55,18 +78,28 @@ impl Hasher for ScalarHasher {
         self.family.params.projections()
     }
     fn hash_batch(&self, x: &[f32], rows: usize) -> Vec<i32> {
+        // Write-into-slice loop: one scratch per *batch*, not a pair of
+        // fresh Vecs per row like hash_coords would allocate.
         let dim = self.family.dim;
-        let mut out = Vec::with_capacity(rows * self.p());
+        let p = self.p();
+        let mut out = vec![0i32; rows * p];
+        let mut scratch = vec![0f32; p];
         for r in 0..rows {
-            out.extend(self.family.hash_coords(&x[r * dim..(r + 1) * dim]));
+            self.family.coords_into(
+                &x[r * dim..(r + 1) * dim],
+                &mut scratch,
+                &mut out[r * p..(r + 1) * p],
+            );
         }
         out
     }
     fn proj_batch(&self, x: &[f32], rows: usize) -> Vec<f32> {
         let dim = self.family.dim;
-        let mut out = Vec::with_capacity(rows * self.p());
+        let p = self.p();
+        let mut out = vec![0f32; rows * p];
         for r in 0..rows {
-            out.extend(self.family.raw_projections(&x[r * dim..(r + 1) * dim]));
+            self.family
+                .proj_into(&x[r * dim..(r + 1) * dim], &mut out[r * p..(r + 1) * p]);
         }
         out
     }
@@ -89,16 +122,18 @@ impl Ranker for ScalarRanker {
     }
 }
 
-/// Hybrid ranker: scalar heap top-k below `threshold` candidates, compiled
+/// Hybrid ranker: SIMD heap top-k below `threshold` candidates, compiled
 /// PJRT `rank` artifact at or above it.
 ///
 /// §Perf rationale (EXPERIMENTS.md): the artifact path pays a fixed PJRT
 /// dispatch plus a full `sort` (the only top-k lowering xla_extension 0.5.1
-/// parses), so on the CPU backend the scalar heap wins until candidate
+/// parses), so on the CPU backend the in-process heap wins until candidate
 /// tiles are large; on a real TPU the MXU matmul moves the crossover far
-/// left. The threshold is env-tunable (`PARLSH_RANK_THRESHOLD`).
+/// left. The small-tile path is the SIMD+pruning tier (DESIGN.md
+/// §Kernels), so "hybrid" now means SIMD-below / PJRT-above. The
+/// threshold is env-tunable (`PARLSH_RANK_THRESHOLD`).
 pub struct HybridRanker {
-    pub scalar: ScalarRanker,
+    pub scalar: SimdRanker,
     pub engine: Box<dyn Ranker>,
     pub threshold: usize,
 }
@@ -118,6 +153,21 @@ impl Ranker for HybridRanker {
             self.scalar.rank(q, cands, n, k)
         } else {
             self.engine.rank(q, cands, n, k)
+        }
+    }
+
+    fn rank_pruned(
+        &self,
+        q: &[f32],
+        cands: &[f32],
+        n: usize,
+        k: usize,
+    ) -> (Vec<(f32, u32)>, u64) {
+        if n < self.threshold {
+            self.scalar.rank_pruned(q, cands, n, k)
+        } else {
+            // the artifact ranks the whole tile at once — nothing abandons
+            (self.engine.rank(q, cands, n, k), 0)
         }
     }
 }

@@ -7,9 +7,15 @@
 //! different BIs). A per-query seen-set skips recomputing those distances;
 //! entries are evicted FIFO once `seen_cap` queries are tracked.
 //!
-//! The distance + top-k computation goes through the [`Ranker`] — the
-//! compiled Pallas `rank` artifact on the hot path, scalar fallback
-//! otherwise.
+//! The distance + top-k computation goes through the [`Ranker`]. Candidate
+//! vectors are gathered into one reused contiguous buffer so the ranker
+//! scans cache-line-friendly blocks, and ranking goes through
+//! [`Ranker::rank_pruned`]: the production [`crate::runtime::SimdRanker`]
+//! threads the running k-th-best bound through the distance loop and
+//! early-abandons candidates whose partial sum already exceeds it
+//! (`dists_pruned` counts those), while the compiled PJRT `rank` artifact
+//! (via `HybridRanker`) ranks whole tiles above its size threshold. All
+//! tiers return bit-identical hits (DESIGN.md §Kernels).
 
 use crate::data::Dataset;
 use crate::dataflow::message::{Dest, Msg};
@@ -139,9 +145,9 @@ impl DpState {
             Vec::new()
         } else {
             debug_assert_eq!(self.gather.len(), n * dim);
-            ranker
-                .rank(q, &self.gather, n, k)
-                .into_iter()
+            let (hits, pruned) = ranker.rank_pruned(q, &self.gather, n, k);
+            self.work.dists_pruned += pruned;
+            hits.into_iter()
                 .map(|(d, local)| (d, self.gather_ids[local as usize]))
                 .collect()
         };

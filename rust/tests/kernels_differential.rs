@@ -1,0 +1,83 @@
+//! SIMD-kernel differential: the full pipeline on the SIMD tier vs the
+//! scalar oracle backends must be **bit-identical** — not ≥95% agreement
+//! like the PJRT artifact path, exact equality of every (dist, id) pair
+//! (DESIGN.md §Kernels).
+//!
+//! CI runs this twice: once on the detected tier (AVX2 on the hosted
+//! runners) and once with `PARLSH_FORCE_SCALAR=1` pinning the dispatcher
+//! to its scalar fallback, so both sides of the dispatch are exercised.
+
+use parlsh::config::Config;
+use parlsh::coordinator::{build_index, search};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::runtime::{kernels, ScalarHasher, ScalarRanker, SimdHasher, SimdRanker};
+
+#[test]
+fn kernels_full_pipeline_simd_equals_scalar_bit_exact() {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 16, w: 900.0, k: 10, t: 8, seed: 5 };
+    cfg.cluster.bi_nodes = 2;
+    cfg.cluster.dp_nodes = 4;
+    let ds = synthesize(SynthSpec { n: 3_000, clusters: 60, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 15, 5.0, 3);
+
+    let fam = HashFamily::sample(ds.dim, cfg.lsh);
+    let simd_hasher = SimdHasher::new(fam.clone());
+    let simd_ranker = SimdRanker { dim: ds.dim };
+    let mut c_simd = build_index(&cfg, &ds, &simd_hasher);
+    let out_simd = search(&mut c_simd, &qs, &simd_hasher, &simd_ranker);
+
+    let sc_hasher = ScalarHasher { family: fam };
+    let sc_ranker = ScalarRanker { dim: ds.dim };
+    let mut c_sc = build_index(&cfg, &ds, &sc_hasher);
+    let out_sc = search(&mut c_sc, &qs, &sc_hasher, &sc_ranker);
+
+    // Bit-identity, not tolerance: identical hashing means identical
+    // buckets and candidates; identical + pruning-safe ranking means
+    // identical (dist, id) results, on every tier.
+    eprintln!("dispatch tier: {}", kernels::tier().name());
+    assert_eq!(out_simd.results, out_sc.results);
+
+    let dists_simd: u64 = out_simd.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+    let dists_sc: u64 = out_sc.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+    assert_eq!(dists_simd, dists_sc);
+    let dups_simd: u64 = out_simd.work.iter().map(|(_, _, w)| w.dup_skipped).sum();
+    let dups_sc: u64 = out_sc.work.iter().map(|(_, _, w)| w.dup_skipped).sum();
+    assert_eq!(dups_simd, dups_sc);
+    // The oracle never prunes (default rank_pruned); the SIMD ranker may,
+    // but never more than it computed.
+    let pruned_sc: u64 = out_sc.work.iter().map(|(_, _, w)| w.dists_pruned).sum();
+    assert_eq!(pruned_sc, 0);
+    let pruned_simd: u64 = out_simd.work.iter().map(|(_, _, w)| w.dists_pruned).sum();
+    assert!(pruned_simd <= dists_simd);
+}
+
+#[test]
+fn kernels_pruning_engages_and_surfaces_in_work_stats() {
+    // k=1 on a single DP copy: after the first candidate of each request
+    // the bound is a real distance, and 128-d candidate batches give the
+    // partial-sum check 8 block boundaries to fire on — the pruned
+    // counter must actually move (and flow into SearchOutput::work).
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 16, w: 900.0, k: 1, t: 16, seed: 7 };
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 1;
+    let ds = synthesize(SynthSpec { n: 2_000, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, 10, 5.0, 11);
+
+    let fam = HashFamily::sample(ds.dim, cfg.lsh);
+    let hasher = SimdHasher::new(fam);
+    let ranker = SimdRanker { dim: ds.dim };
+    let mut cluster = build_index(&cfg, &ds, &hasher);
+    let out = search(&mut cluster, &qs, &hasher, &ranker);
+
+    let computed: u64 = out.work.iter().map(|(_, _, w)| w.dists_computed).sum();
+    let pruned: u64 = out.work.iter().map(|(_, _, w)| w.dists_pruned).sum();
+    assert!(computed > 0);
+    assert!(
+        pruned > 0,
+        "k=1 over {computed} candidate distances never pruned — bound threading broken?"
+    );
+    assert!(pruned <= computed);
+}
