@@ -135,6 +135,29 @@ impl Default for SocketConfig {
     }
 }
 
+/// Front-door settings (`crate::net::front`, DESIGN.md §Front door): the
+/// poll-based server behind `parlsh serve --listen` that multiplexes
+/// external wire clients onto one resident session. The listen address
+/// itself comes from `--listen` / `[net] listen` (shared with workers —
+/// one key, whichever role the process plays).
+#[derive(Clone, Copy, Debug)]
+pub struct FrontConfig {
+    /// Cap on concurrently connected clients. Accepts beyond the cap are
+    /// refused with a typed `Stopped` frame and closed — never queued.
+    pub max_conns: usize,
+    /// Bound on one connection's egress buffer (bytes). A client that
+    /// falls further behind than this is evicted (typed `Stopped`) —
+    /// one slow reader must never wedge the event loop or grow the
+    /// server's memory without bound.
+    pub egress_cap: usize,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig { max_conns: 1024, egress_cap: 4 << 20 }
+    }
+}
+
 /// Dataset configuration.
 #[derive(Clone, Debug)]
 pub struct DataConfig {
@@ -218,6 +241,7 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub net: NetParams,
     pub sock: SocketConfig,
+    pub front: FrontConfig,
     pub data: DataConfig,
     pub stream: StreamConfig,
     pub runtime: RuntimeConfig,
@@ -252,6 +276,10 @@ impl Config {
             retry_ms: doc.usize_or("net.retry_ms", c.sock.retry_ms as usize) as u64,
             max_frame_bytes: doc.usize_or("net.max_frame_bytes", c.sock.max_frame_bytes),
             queue_frames: doc.usize_or("net.queue_frames", c.sock.queue_frames),
+        };
+        c.front = FrontConfig {
+            max_conns: doc.usize_or("front.max_conns", c.front.max_conns),
+            egress_cap: doc.usize_or("front.egress_cap", c.front.egress_cap),
         };
         c.data = DataConfig {
             source: doc.str_or("data.source", &c.data.source),
@@ -360,6 +388,22 @@ mod tests {
         assert_eq!(c.sock.max_frame_bytes, 1024);
         // the simnet model constants share the section and keep their keys
         assert!((c.net.latency_us - 1.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn front_config_parses() {
+        let c = Config::default();
+        assert_eq!(c.front.max_conns, 1024);
+        assert_eq!(c.front.egress_cap, 4 << 20);
+        let doc = Doc::parse(
+            "[front]\nmax_conns = 8\negress_cap = 65536\n[net]\nlisten = \"127.0.0.1:7471\"\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.front.max_conns, 8);
+        assert_eq!(c.front.egress_cap, 65536);
+        // the front door listens on the shared [net] listen key
+        assert_eq!(c.sock.listen, "127.0.0.1:7471");
     }
 
     #[test]

@@ -53,6 +53,17 @@
 //! so default traffic is bit-identical to the pre-plan behavior (the
 //! pumped `search_on` oracle).
 //!
+//! Admission lanes: the poll-based front door (`net::front`) multiplexes
+//! many external clients onto one session. Each connection gets a *lane*
+//! ([`IndexSession::open_lane`]) — a fair share of the `pending_cap`
+//! window (`ceil(cap / lanes)`), enforced by
+//! [`IndexSession::try_submit_lane`] so no client starves the others —
+//! and completions are claimed lane-tagged
+//! ([`IndexSession::try_recv_lane`]) for routing back to the right
+//! connection. [`IndexSession::close_lane`] (disconnect) orphans the
+//! lane's in-flight tickets: the pipeline completes them, the session
+//! discards them on arrival, and the window share returns immediately.
+//!
 //! Memory stays bounded on a resident session: per-query latency is
 //! folded into a [`LatencySummary`] (exact mean/max + fixed reservoir for
 //! percentiles) instead of a per-ticket vector, the in-flight ticket map
@@ -114,6 +125,11 @@ pub struct SessionStats {
     pub latency: LatencySummary,
     pub queries_submitted: u64,
     pub queries_completed: u64,
+    /// Completions discarded because their admission lane closed (the
+    /// external client disconnected) while they were in flight. Counted
+    /// in `queries_completed` (the pipeline did the work) but excluded
+    /// from `latency`.
+    pub queries_evicted: u64,
     /// Objects in the index (maintained by the coordinator, so it is
     /// correct even when the stores live in worker processes).
     pub objects_indexed: u64,
@@ -228,14 +244,27 @@ struct Inner<'c> {
     /// finished (stage state reclaimed into `cluster`) by `insert`/`close`.
     stream: Option<OpenStream<'c>>,
     next_ticket: u64,
-    /// qid → (ticket, resolved options) for queries admitted but not yet
-    /// claimed — the recv-side option echo. Bounded by the number
+    /// qid → (ticket, resolved options, lane) for queries admitted but
+    /// not yet claimed — the recv-side option echo. Bounded by the number
     /// outstanding; qids are the ticket truncated to `u32` (unique while
-    /// fewer than 2^32 are in flight — i.e. always).
-    tickets: HashMap<u32, (u64, QueryOptions)>,
+    /// fewer than 2^32 are in flight — i.e. always). The lane is 0 for
+    /// the plain submit APIs, or the admission lane of an external client
+    /// ([`IndexSession::open_lane`]).
+    tickets: HashMap<u32, (u64, QueryOptions, u32)>,
     /// Completions claimed from the stream but not yet delivered to a
-    /// caller (barrier leftovers, and `drain`'s staging area).
-    done: VecDeque<Completion>,
+    /// caller (barrier leftovers, and `drain`'s staging area), tagged
+    /// with their admission lane.
+    done: VecDeque<(u32, Completion)>,
+    /// Open admission lanes: lane id → outstanding (submitted, not yet
+    /// claimed) count. The plain submit APIs use the implicit lane 0,
+    /// which is never in this map and is bounded only by the global
+    /// window. Lane ids are never reused, so a ticket whose lane is
+    /// non-zero and absent here belongs to a *closed* lane (orphaned).
+    lanes: HashMap<u32, usize>,
+    next_lane: u32,
+    /// Completions discarded because their lane closed while they were
+    /// in flight (the client disconnected mid-stream).
+    evicted: u64,
     latency: LatencySummary,
     /// Head-node (QR) work across this session's streams. Per-copy
     /// BI/DP/AG work lives in the cluster's stage states (or their
@@ -246,9 +275,15 @@ struct Inner<'c> {
 }
 
 impl Inner<'_> {
-    /// Bookkeep one completion claimed from the stream.
-    fn note_completion(&mut self, c: StreamCompletion) -> Completion {
-        let (t, opts) = self
+    /// Bookkeep one completion claimed from the stream. `None` means the
+    /// completion was *orphaned* — its admission lane closed (the client
+    /// disconnected) while it was in flight, so there is nobody to
+    /// deliver it to: it is discarded here, its window share already
+    /// returned when the lane closed. Orphans still count toward
+    /// `queries_completed` (the pipeline did the work) but not toward the
+    /// latency summary (an evicted client's tail is not serving latency).
+    fn note_completion(&mut self, c: StreamCompletion) -> Option<(u32, Completion)> {
+        let (t, opts, lane) = self
             .tickets
             .remove(&c.qid)
             .expect("stream completion for an unknown qid");
@@ -257,8 +292,17 @@ impl Inner<'_> {
             "completion overflowed its plan's k"
         );
         self.completed += 1;
+        if lane != 0 {
+            match self.lanes.get_mut(&lane) {
+                Some(held) => *held = held.saturating_sub(1),
+                None => {
+                    self.evicted += 1;
+                    return None;
+                }
+            }
+        }
         self.latency.record(c.secs);
-        (QueryTicket(t), opts, c.hits, c.secs)
+        Some((lane, (QueryTicket(t), opts, c.hits, c.secs)))
     }
 
     /// Issue the next ticket and admit the query into the open stream —
@@ -278,6 +322,7 @@ impl Inner<'_> {
         v: Arc<[f32]>,
         opts: QueryOptions,
         echo: QueryOptions,
+        lane: u32,
     ) -> Option<QueryTicket> {
         let t = self.next_ticket;
         let qid = t as u32;
@@ -286,11 +331,26 @@ impl Inner<'_> {
         match os.run.try_submit(msg) {
             Ok(()) => {
                 self.next_ticket += 1;
-                self.tickets.insert(qid, (t, echo));
+                self.tickets.insert(qid, (t, echo, lane));
+                if lane != 0 {
+                    *self.lanes.get_mut(&lane).expect("submit on a closed lane") += 1;
+                }
                 Some(QueryTicket(t))
             }
             Err(_) => None,
         }
+    }
+
+    /// Fair-share bound for one admission lane right now: with the
+    /// backpressure window at `pending_cap` and `n` lanes open, each lane
+    /// may hold `ceil(pending_cap / n)` (min 1) outstanding submissions.
+    /// `usize::MAX` = unbounded (no cap configured).
+    fn lane_share(&self) -> usize {
+        let cap = self.cluster.cfg.stream.pending_cap;
+        if cap == 0 || self.lanes.is_empty() {
+            return usize::MAX;
+        }
+        cap.div_ceil(self.lanes.len()).max(1)
     }
 }
 
@@ -333,6 +393,9 @@ impl<'s> IndexSession<'s> {
                 next_ticket: 0,
                 tickets: HashMap::new(),
                 done: VecDeque::new(),
+                lanes: HashMap::new(),
+                next_lane: 1,
+                evicted: 0,
                 latency: LatencySummary::new(),
                 head_work: WorkStats::default(),
                 search_meter: TrafficMeter::new(agg),
@@ -433,8 +496,9 @@ impl<'s> IndexSession<'s> {
         let OpenStream { run, bis, dps, ags, qr_work } = os;
         let report = run.finish();
         for c in report.unclaimed {
-            let e = inner.note_completion(c);
-            inner.done.push_back(e);
+            if let Some(e) = inner.note_completion(c) {
+                inner.done.push_back(e);
+            }
         }
         inner.search_meter.merge(&report.meter);
         let qw = {
@@ -497,7 +561,7 @@ impl<'s> IndexSession<'s> {
             {
                 let mut inner = self.lock();
                 self.open_stream_locked(&mut inner);
-                if let Some(t) = inner.try_submit_one(raw.clone(), v.clone(), opts, echo) {
+                if let Some(t) = inner.try_submit_one(raw.clone(), v.clone(), opts, echo, 0) {
                     return t;
                 }
             }
@@ -538,7 +602,7 @@ impl<'s> IndexSession<'s> {
         let v: Arc<[f32]> = q.into();
         let mut inner = self.lock();
         self.open_stream_locked(&mut inner);
-        inner.try_submit_one(raw, v, opts, echo)
+        inner.try_submit_one(raw, v, opts, echo, 0)
     }
 
     /// Admit a whole query set under the default plan — see
@@ -578,7 +642,7 @@ impl<'s> IndexSession<'s> {
                 while i < queries.len() {
                     let raw: Arc<[f32]> = raws[i * p..(i + 1) * p].into();
                     let v: Arc<[f32]> = queries.get(i).into();
-                    if inner.try_submit_one(raw, v, opts, echo).is_none() {
+                    if inner.try_submit_one(raw, v, opts, echo, 0).is_none() {
                         break;
                     }
                     i += 1;
@@ -590,6 +654,85 @@ impl<'s> IndexSession<'s> {
             }
             std::thread::sleep(SUBMIT_TICK);
         }
+    }
+
+    // ------------------------------------------------- admission lanes
+
+    /// Open an admission lane: a named share of the backpressure window
+    /// for one external client (the `net::front` server opens one per
+    /// connection). While `stream.pending_cap` is set, each open lane may
+    /// hold at most `ceil(pending_cap / open_lanes)` outstanding
+    /// submissions — per-client fairness at the admission gate: no lane
+    /// can occupy the whole window while another waits. Lane ids are
+    /// never reused within a session.
+    pub fn open_lane(&self) -> u32 {
+        let mut inner = self.lock();
+        let lane = inner.next_lane;
+        inner.next_lane += 1;
+        inner.lanes.insert(lane, 0);
+        lane
+    }
+
+    /// Close a lane (its client disconnected). Submissions still in
+    /// flight on the lane are *orphaned*: the pipeline completes them as
+    /// usual — the stream barrier stays sound — but their completions are
+    /// discarded on arrival instead of delivered, and the lane's window
+    /// share returns to the remaining lanes immediately. Returns the
+    /// number of tickets orphaned (callers log the eviction).
+    pub fn close_lane(&self, lane: u32) -> usize {
+        let mut inner = self.lock();
+        inner.lanes.remove(&lane);
+        // Drop any already-claimed-but-undelivered completions too: the
+        // connection they belong to is gone.
+        let before = inner.done.len();
+        inner.done.retain(|(l, _)| *l != lane);
+        let buffered = before - inner.done.len();
+        inner.evicted += buffered as u64;
+        inner.tickets.values().filter(|(_, _, l)| *l == lane).count() + buffered
+    }
+
+    /// Non-blocking submit on an admission lane —
+    /// [`IndexSession::try_submit_with`] plus the lane's fair-share
+    /// bound: declines when the lane already holds its share of the
+    /// backpressure window, even if the global window still has room.
+    /// Panics if `lane` was not opened (or was already closed); like the
+    /// other submit paths, the query hashes on the calling thread, and
+    /// only after a cheap window probe.
+    pub fn try_submit_lane(&self, lane: u32, q: &[f32], opts: QueryOptions) -> Option<QueryTicket> {
+        assert!(
+            self.ranker.is_some(),
+            "IndexSession::try_submit_lane on a session attached without a ranker"
+        );
+        let echo = self.resolve(opts);
+        // Probe share + window before paying for the hash (advisory; the
+        // final try_submit_one below still decides).
+        {
+            let mut inner = self.lock();
+            self.open_stream_locked(&mut inner);
+            let held = *inner.lanes.get(&lane).expect("submit on an unopened lane");
+            if held >= inner.lane_share() {
+                return None;
+            }
+            let os = inner.stream.as_mut().expect("stream just opened");
+            if !os.run.can_submit() {
+                return None;
+            }
+        }
+        let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
+        let v: Arc<[f32]> = q.into();
+        let mut inner = self.lock();
+        self.open_stream_locked(&mut inner);
+        let held = *inner.lanes.get(&lane).expect("submit on an unopened lane");
+        if held >= inner.lane_share() {
+            return None;
+        }
+        inner.try_submit_one(raw, v, opts, echo, lane)
+    }
+
+    /// Outstanding (submitted, unclaimed) queries on one lane.
+    pub fn lane_in_flight(&self, lane: u32) -> usize {
+        let inner = self.lock();
+        inner.lanes.get(&lane).copied().unwrap_or(0)
     }
 
     /// Pop a completion without waiting. `None` means nothing has
@@ -608,15 +751,28 @@ impl<'s> IndexSession<'s> {
     /// option echo — including the caller's `tag`), the top-k, and the
     /// admission-to-completion seconds.
     pub fn try_recv_full(&self) -> Option<Completion> {
+        self.try_recv_lane().map(|(_, e)| e)
+    }
+
+    /// [`IndexSession::try_recv_full`] with the admission lane the query
+    /// was submitted on (0 for the plain submit APIs) — the front door's
+    /// claim path, which routes each completion back to the connection
+    /// whose lane admitted it. Orphaned completions (lanes closed by a
+    /// disconnect) are discarded in passing, never returned.
+    pub fn try_recv_lane(&self) -> Option<(u32, Completion)> {
         let mut inner = self.lock();
         if let Some(e) = inner.done.pop_front() {
             return Some(e);
         }
-        let c = {
-            let os = inner.stream.as_mut()?;
-            os.run.try_recv()
-        };
-        c.map(|c| inner.note_completion(c))
+        loop {
+            let c = {
+                let os = inner.stream.as_mut()?;
+                os.run.try_recv()
+            }?;
+            if let Some(e) = inner.note_completion(c) {
+                return Some(e);
+            }
+        }
     }
 
     /// Next completion, waiting for the pipeline if necessary. `None`
@@ -635,7 +791,7 @@ impl<'s> IndexSession<'s> {
     pub fn recv_full(&self) -> Option<Completion> {
         loop {
             let mut inner = self.lock();
-            if let Some(e) = inner.done.pop_front() {
+            if let Some((_lane, e)) = inner.done.pop_front() {
                 return Some(e);
             }
             if inner.tickets.is_empty() {
@@ -649,8 +805,11 @@ impl<'s> IndexSession<'s> {
                 os.run.recv(RECV_TICK)
             };
             if let Some(c) = c {
-                let e = inner.note_completion(c);
-                return Some(e);
+                if let Some((_lane, e)) = inner.note_completion(c) {
+                    return Some(e);
+                }
+                // Orphaned completion discarded: go around again.
+                continue;
             }
             // Nothing completed within the tick: release the session lock
             // before waiting again so concurrent submitters can get in.
@@ -672,7 +831,7 @@ impl<'s> IndexSession<'s> {
         let mut out: Vec<Completion> = Vec::new();
         loop {
             let mut inner = self.lock();
-            while let Some(e) = inner.done.pop_front() {
+            while let Some((_lane, e)) = inner.done.pop_front() {
                 out.push(e);
             }
             if inner.tickets.is_empty() {
@@ -686,7 +845,9 @@ impl<'s> IndexSession<'s> {
                 os.run.recv(RECV_TICK)
             };
             if let Some(c) = c {
-                out.push(inner.note_completion(c));
+                if let Some((_lane, e)) = inner.note_completion(c) {
+                    out.push(e);
+                }
             } else {
                 drop(inner);
                 std::thread::yield_now();
@@ -753,6 +914,7 @@ impl<'s> IndexSession<'s> {
             latency: inner.latency.clone(),
             queries_submitted: inner.next_ticket,
             queries_completed: inner.completed,
+            queries_evicted: inner.evicted,
             objects_indexed: c.indexed_objects as u64,
         }
     }
@@ -1199,5 +1361,64 @@ mod tests {
         assert_eq!(done.len(), 3);
         let stats = session.close();
         assert_eq!(stats.queries_completed, 3);
+    }
+
+    #[test]
+    fn admission_lanes_bound_each_client_and_orphan_on_close() {
+        let mut cfg = small_cfg();
+        cfg.stream.pending_cap = 4;
+        let (ds, _, hasher, _) = world(&cfg, 1_200, 1);
+        // exact duplicates: every query reaches a DP rank call, so the
+        // latch reliably holds them in flight
+        let (qs, _) = distorted_queries(&ds, 8, 0.0, 33);
+        let open = Arc::new((Mutex::new(false), Condvar::new()));
+        let ranker: Arc<dyn Ranker> = Arc::new(LatchRanker {
+            inner: ScalarRanker { dim: ds.dim },
+            open: open.clone(),
+        });
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let session =
+            IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, Some(ranker));
+        let a = session.open_lane();
+        let b = session.open_lane();
+        // share = ceil(4 / 2) = 2: lane A holds two and is declined on
+        // the third, even though the global window (4) still has room...
+        let o = QueryOptions::default();
+        assert!(session.try_submit_lane(a, qs.get(0), o).is_some());
+        assert!(session.try_submit_lane(a, qs.get(1), o).is_some());
+        assert!(
+            session.try_submit_lane(a, qs.get(2), o).is_none(),
+            "lane A exceeded its fair share of pending_cap"
+        );
+        // ...while lane B still gets its own share
+        assert!(session.try_submit_lane(b, qs.get(3), o).is_some());
+        assert_eq!(session.lane_in_flight(a), 2);
+        assert_eq!(session.lane_in_flight(b), 1);
+        // client A disconnects mid-burst: its in-flight tickets orphan
+        assert_eq!(session.close_lane(a), 2);
+        // open the latch; the pipeline finishes everything outstanding
+        {
+            let (m, cv) = &*open;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        // only lane B's completion is deliverable; A's are discarded as
+        // they arrive (and the survivor's result is a real top-k)
+        let deadline = std::time::Instant::now() + Duration::from_secs(60);
+        let mut delivered = Vec::new();
+        while session.in_flight() > 0 {
+            if let Some((lane, (_t, _opts, hits, _secs))) = session.try_recv_lane() {
+                delivered.push((lane, hits));
+            } else {
+                assert!(std::time::Instant::now() < deadline, "pipeline stalled");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        assert_eq!(delivered.len(), 1, "orphaned completions were delivered");
+        assert_eq!(delivered[0].0, b);
+        assert!(!delivered[0].1.is_empty(), "survivor lost its results");
+        let stats = session.close();
+        assert_eq!(stats.queries_completed, 3);
+        assert_eq!(stats.queries_evicted, 2);
     }
 }

@@ -862,6 +862,190 @@ pub fn streaming_comparison(lambda: Option<f64>) -> anyhow::Result<(Table, Strin
     Ok((table, json))
 }
 
+// ------------------------------------------------------------ front door
+
+/// One `experiment front` point: `conns` concurrent [`crate::net::front::Client`]s
+/// driving a front-door server over real loopback TCP, the server's event
+/// loop and resident session on the calling thread. Each client runs a
+/// closed-loop pipelined burst for the time window, with a per-client
+/// probe budget (mixed plans). Reports client-measured submit→claim
+/// latency and the per-client completion spread — the admission-fairness
+/// number: with per-lane shares at the gate, max/min stays bounded even
+/// though every client pushes at full rate.
+fn front_point(
+    exec: &dyn crate::dataflow::exec::Executor,
+    backing: &str,
+    cfg: &Config,
+    w: &World,
+    b: &Backends,
+    conns: usize,
+    secs: f64,
+    table: &mut Table,
+) -> anyhow::Result<()> {
+    use crate::coordinator::session::IndexSession;
+    use crate::dataflow::message::QueryOptions;
+    use crate::net::front;
+    use std::time::{Duration, Instant};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let per_client: Vec<(Vec<f64>, usize, f64)> = std::thread::scope(
+        |s| -> anyhow::Result<Vec<(Vec<f64>, usize, f64)>> {
+            let barrier = std::sync::Barrier::new(conns);
+            let barrier = &barrier;
+            let addr = &addr;
+            let handles: Vec<_> = (0..conns)
+                .map(|i| {
+                    s.spawn(move || -> anyhow::Result<(Vec<f64>, usize, f64)> {
+                        let drive = || -> anyhow::Result<(Vec<f64>, usize, f64)> {
+                            let mut client =
+                                front::Client::connect_with(addr, 1200, 25, 64 << 20)?;
+                            // mixed plans: every client pins its own probe
+                            // budget (0 = inherit) and tags itself
+                            let opts = QueryOptions {
+                                probes: [0u32, 8, 16, 32][i % 4],
+                                tag: i as u32 + 1,
+                                ..Default::default()
+                            };
+                            let t0 = Instant::now();
+                            let deadline = t0 + Duration::from_secs_f64(secs);
+                            let window = 4usize;
+                            let mut submitted_at = std::collections::HashMap::new();
+                            let mut lats = Vec::new();
+                            let mut done = 0usize;
+                            let mut outstanding = 0usize;
+                            let mut qi = i; // offset so clients diverge
+                            loop {
+                                let q = w.queries.get(qi % w.queries.len());
+                                qi += 1;
+                                let qid = client.submit(q, opts)?;
+                                submitted_at.insert(qid, Instant::now());
+                                outstanding += 1;
+                                while outstanding >= window {
+                                    let c = client.recv()?;
+                                    if let Some(at) = submitted_at.remove(&c.qid) {
+                                        lats.push(at.elapsed().as_secs_f64());
+                                    }
+                                    done += 1;
+                                    outstanding -= 1;
+                                }
+                                if Instant::now() >= deadline {
+                                    break;
+                                }
+                            }
+                            while outstanding > 0 {
+                                let c = client.recv()?;
+                                if let Some(at) = submitted_at.remove(&c.qid) {
+                                    lats.push(at.elapsed().as_secs_f64());
+                                }
+                                done += 1;
+                                outstanding -= 1;
+                            }
+                            Ok((lats, done, t0.elapsed().as_secs_f64()))
+                        };
+                        let res = drive();
+                        // Every client reaches the barrier, error or not,
+                        // so the shutdown below can never deadlock the
+                        // sweep; the stopper uses a fresh connection in
+                        // case its own died.
+                        barrier.wait();
+                        if i == 0 {
+                            let _ = front::Client::connect_with(addr, 40, 25, 64 << 20)
+                                .and_then(|c| c.shutdown_server());
+                        }
+                        res
+                    })
+                })
+                .collect();
+            // The server runs on this thread: resident session + event
+            // loop; `front::serve` returns when client 0's Shutdown lands.
+            let mut cluster = Cluster::empty(cfg, w.data.dim);
+            let session = IndexSession::attach(
+                exec,
+                &mut cluster,
+                b.hasher.as_ref(),
+                Some(b.ranker.clone()),
+            );
+            session.insert(&w.data);
+            front::serve(listener, &session, cfg, w.data.dim)?;
+            session.close();
+            let mut out = Vec::with_capacity(conns);
+            for h in handles {
+                out.push(h.join().expect("front client thread panicked")?);
+            }
+            Ok(out)
+        },
+    )?;
+
+    let mut lats: Vec<f64> = Vec::new();
+    let mut counts: Vec<usize> = Vec::with_capacity(conns);
+    let mut wall: f64 = 0.0;
+    for (l, done, w_secs) in &per_client {
+        lats.extend_from_slice(l);
+        counts.push(*done);
+        wall = wall.max(*w_secs);
+    }
+    let total: usize = counts.iter().sum();
+    let st = crate::metrics::latency_stats(&lats);
+    let max_c = counts.iter().copied().max().unwrap_or(0);
+    let min_c = counts.iter().copied().min().unwrap_or(0);
+    table.row(&[
+        backing.to_string(),
+        format!("{conns}"),
+        format!("{:.1}", total as f64 / wall.max(1e-9)),
+        format!("{:.2}", st.p50_ms),
+        format!("{:.2}", st.p99_ms),
+        format!("{max_c}/{min_c}"),
+    ]);
+    Ok(())
+}
+
+/// `parlsh experiment front` (BENCH_front.json): sweep client count
+/// {1, 8, 64} × backing executor {threaded, socket} through the real TCP
+/// front door. Socket points launch a fresh worker mesh per point (the
+/// resident stores live in the workers — reusing one mesh across points
+/// would double-insert the dataset). `PARLSH_FRONT_SECS` scales each
+/// point's drive window.
+pub fn front_comparison() -> anyhow::Result<(Table, String)> {
+    use crate::dataflow::exec::ThreadedExecutor;
+    use crate::net::NetSession;
+
+    let mut cfg = Config::default();
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.lsh.t = 16;
+    cfg.data.n = env_usize("PARLSH_N", 15_000);
+    cfg.data.queries = env_usize("PARLSH_Q", 64);
+    cfg.data.clusters = (cfg.data.n / 100).max(50);
+    // a bounded admission window so per-lane fair shares actually bind
+    cfg.stream.pending_cap = 64;
+    let w = world(&cfg);
+    let b = backends(&cfg, w.data.dim);
+    let secs: f64 = std::env::var("PARLSH_FRONT_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.4);
+
+    let mut table = Table::new(&[
+        "backing",
+        "conns",
+        "delivered q/s",
+        "p50 ms",
+        "p99 ms",
+        "fairness max/min",
+    ]);
+    for &conns in &[1usize, 8, 64] {
+        front_point(&ThreadedExecutor, "threaded", &cfg, &w, &b, conns, secs, &mut table)?;
+    }
+    for &conns in &[1usize, 8, 64] {
+        let sess = NetSession::launch(&cfg, w.data.dim)?;
+        front_point(sess.executor(), "socket", &cfg, &w, &b, conns, secs, &mut table)?;
+        sess.shutdown()?;
+    }
+    let json = format!("{{\"experiment\":\"front\",\"table\":{}}}\n", table.to_json());
+    Ok((table, json))
+}
+
 // ------------------------------------------------- resident probe sweep
 
 /// Per-query probe-budget sweep on ONE resident index (`parlsh experiment

@@ -40,7 +40,10 @@
 //! * [`net`] — the socket transport: a `SocketExecutor` running the same
 //!   pipeline across real OS processes (`parlsh worker`) over TCP, with a
 //!   versioned wire codec and measured (not modeled) per-link bytes
-//!   (DESIGN.md §Transports);
+//!   (DESIGN.md §Transports), plus the poll-based serving front door
+//!   ([`net::front`]): `parlsh serve --listen` multiplexes external
+//!   clients onto one resident session, `parlsh query --connect` (or the
+//!   [`net::front::Client`] struct) drives it (DESIGN.md §Front door);
 //! * [`simnet`] — the calibrated cluster cost model standing in for the
 //!   paper's 60-node InfiniBand testbed (see DESIGN.md §Substitutions);
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts

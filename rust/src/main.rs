@@ -5,10 +5,13 @@
 //! parlsh search  [--config=FILE] [--set k=v]...   build + search + recall
 //! parlsh serve   [--config=FILE] [--set k=v]...   persistent serving session
 //! parlsh serve --net                              multi-process serving session
+//! parlsh serve --listen[=ADDR]                    TCP front door for external
+//!                                                 clients (poll event loop)
+//! parlsh query  --connect=ADDR                    drive a front-door server
 //! parlsh worker  --listen=ADDR                    socket-transport worker
 //! parlsh experiment <id>                          regenerate a paper table
 //!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation
-//!             executors net streaming history all
+//!             executors net streaming front history all
 //! parlsh calibrate                                measure cost-model consts
 //! ```
 
@@ -48,6 +51,7 @@ fn run(args: &Args) -> Result<()> {
         "build" => cmd_build(args),
         "search" => cmd_search(args),
         "serve" => cmd_serve(args),
+        "query" => cmd_query(args),
         "worker" => parlsh::net::worker::run(args),
         "experiment" => cmd_experiment(args),
         "tune" => cmd_tune(args),
@@ -77,22 +81,50 @@ USAGE:
                                      one OS process per BI/DP node on
                                      loopback TCP (keep
                                      cluster.{bi,dp}_nodes small!)
+  parlsh serve --listen[=ADDR] [--net]
+                                     TCP front door: external clients
+                                     multiplex onto the ONE resident
+                                     session through a poll-based event
+                                     loop (bare --listen uses the config
+                                     `[net] listen` address; prints
+                                     `PARLSH_FRONT_LISTEN <addr>`; with
+                                     --net the session itself runs on
+                                     socket workers — two network tiers).
+                                     Per-conn fairness: each client gets
+                                     an equal share of stream.pending_cap;
+                                     slow readers are evicted past
+                                     front.egress_cap; runs until a client
+                                     sends shutdown (parlsh query
+                                     --shutdown)
+  parlsh query --connect=ADDR [--synth=N | --queries=FILE.txt | piped stdin]
+               [--k/--probes/--tables/--tag=..] [--window=W] [--shutdown]
+                                     drive a front-door server: handshake
+                                     (config digest checked), stream
+                                     queries pipelined W deep (default 32),
+                                     print completions with the option
+                                     echo; --synth=N sends N deterministic
+                                     synthetic queries (--seed=S);
+                                     --shutdown asks the server to drain
+                                     and exit cleanly afterwards
   parlsh worker --listen=ADDR        host a node's stage copies (spawned
                                      by the socket driver; prints
                                      `PARLSH_WORKER_LISTEN <addr>`)
-  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|probes|net|streaming|history|all>
-                                     (`executors`/`net`/`streaming` also
-                                     write BENCH_*.json and archive them
-                                     under bench_history/ keyed by git
+  parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|probes|net|streaming|front|history|all>
+                                     (`executors`/`net`/`streaming`/`front`
+                                     also write BENCH_*.json and archive
+                                     them under bench_history/ keyed by git
                                      SHA; `history` diffs the archived
                                      runs; `probes` sweeps the per-query
                                      probe budget T on ONE resident index
                                      — no rebuild per point; `streaming`
                                      adds an open-loop Poisson arrival
                                      row, rate set by --lambda=Q_PER_SEC
-                                     (default 200); `net` and `streaming`
-                                     spawn processes and are not part of
-                                     `all`)
+                                     (default 200); `front` sweeps client
+                                     count × backing executor through real
+                                     TCP with fairness spread; `net`,
+                                     `streaming` and `front` spawn
+                                     processes/threads and are not part
+                                     of `all`)
   parlsh tune       [--target=0.8] [--set ...]    suggest w, tune T (and M)
   parlsh calibrate
 
@@ -113,8 +145,9 @@ Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
 scalar path (no PJRT artifacts); PARLSH_FORCE_SCALAR=1 pins the SIMD
 kernel dispatcher to its scalar tier (differential debugging);
 PARLSH_BENCH_SECS scales the hotpath_micro measurement window;
-PARLSH_ARTIFACTS points at the AOT artifact dir; PARLSH_INFLIGHT sets
-the batched-admission window of `experiment executors`;
+PARLSH_FRONT_SECS the per-point client drive window of `experiment
+front`; PARLSH_ARTIFACTS points at the AOT artifact dir; PARLSH_INFLIGHT
+sets the batched-admission window of `experiment executors`;
 PARLSH_WORKER_BIN overrides the worker binary.
 ";
 
@@ -201,19 +234,202 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::load(args)?;
     let w = exp::world(&cfg);
     let b = exp::backends(&cfg, w.data.dim);
+    // --listen=ADDR (or bare --listen for the config `[net] listen`
+    // address) swaps the local query sources for the TCP front door.
+    let listen: Option<String> = if let Some(a) = args.opt("listen") {
+        Some(a.to_string())
+    } else if args.has_flag("listen") {
+        Some(cfg.sock.listen.clone())
+    } else {
+        None
+    };
     if args.has_flag("net") {
         let n_workers = cfg.cluster.bi_nodes + cfg.cluster.dp_nodes;
         println!(
             "spawning {n_workers} `parlsh worker` processes on loopback (+ this driver as head node)"
         );
         let net = NetSession::launch(&cfg, w.data.dim)?;
-        serve_session(net.executor(), &cfg, &w, &b, args, "socket")?;
+        match &listen {
+            Some(addr) => serve_front(net.executor(), &cfg, &w, &b, addr, "socket")?,
+            None => serve_session(net.executor(), &cfg, &w, &b, args, "socket")?,
+        }
         net.shutdown()?;
         println!("all {n_workers} workers exited cleanly");
         Ok(())
     } else {
-        serve_session(&ThreadedExecutor, &cfg, &w, &b, args, "threaded")
+        match &listen {
+            Some(addr) => serve_front(&ThreadedExecutor, &cfg, &w, &b, addr, "threaded"),
+            None => serve_session(&ThreadedExecutor, &cfg, &w, &b, args, "threaded"),
+        }
     }
+}
+
+/// `parlsh serve --listen`: the poll-based front door (DESIGN.md §Front
+/// door). Binds first and announces the resolved address on stdout —
+/// `PARLSH_FRONT_LISTEN <addr>`, the same sole-announce contract as the
+/// worker — so external clients can connect while the index is still
+/// building; the OS holds their connections in the listen backlog and
+/// their handshakes are answered the moment the event loop starts.
+fn serve_front(
+    exec: &dyn Executor,
+    cfg: &Config,
+    w: &exp::World,
+    b: &exp::Backends,
+    addr: &str,
+    transport: &str,
+) -> Result<()> {
+    use std::io::Write as _;
+    let dim = w.data.dim;
+    let listener =
+        std::net::TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+    let local = listener.local_addr()?;
+    println!("PARLSH_FRONT_LISTEN {local}");
+    std::io::stdout().flush().ok();
+    let mut cluster = Cluster::empty(cfg, dim);
+    let session =
+        IndexSession::attach(exec, &mut cluster, b.hasher.as_ref(), Some(b.ranker.clone()));
+    let t = Timer::start();
+    session.insert(&w.data);
+    eprintln!(
+        "front: index resident: {} vectors in {:.2}s ({transport} executor, {} path); serving on {local}",
+        w.data.len(),
+        t.secs(),
+        if b.engine_path { "PJRT artifact" } else { "scalar" },
+    );
+    let fs = parlsh::net::front::serve(listener, &session, cfg, dim)?;
+    let stats = session.close();
+    println!(
+        "front closed: {} conns accepted ({} refused), {} queries, {} completions, {} evictions",
+        fs.accepted, fs.refused, fs.queries, fs.completions, fs.evictions
+    );
+    let lat = stats.latency.stats();
+    println!(
+        "latency ms: mean {:.2} p50 {:.2} p90 {:.2} p99 {:.2} max {:.2}",
+        lat.mean_ms, lat.p50_ms, lat.p90_ms, lat.p99_ms, lat.max_ms
+    );
+    Ok(())
+}
+
+/// Print one front-door completion with its per-query plan echo (the
+/// `query` verb's analogue of [`record_result`]).
+fn print_completed(c: &parlsh::net::front::Completed) {
+    let head: Vec<String> = c
+        .hits
+        .iter()
+        .take(5)
+        .map(|&(d, id)| format!("{id}:{d:.1}"))
+        .collect();
+    let tag = if c.opts.tag != 0 { format!(" tag={}", c.opts.tag) } else { String::new() };
+    println!(
+        "query {:>5} [k={} t={} l={}{tag}] -> [{}]",
+        c.qid,
+        c.opts.k,
+        c.opts.probes,
+        c.opts.tables,
+        head.join(" ")
+    );
+}
+
+/// `parlsh query --connect=ADDR`: the external-client CLI of the front
+/// door. Streams queries pipelined `--window` deep, prints completions as
+/// they are claimed, and optionally (`--shutdown`) asks the server to
+/// drain and exit afterwards.
+fn cmd_query(args: &Args) -> Result<()> {
+    let Some(addr) = args.opt("connect") else {
+        bail!("`parlsh query` needs --connect=ADDR (a `parlsh serve --listen` server)");
+    };
+    let base = QueryOptions {
+        k: args.opt_usize("k", 0).map_err(|e| anyhow!(e))? as u32,
+        probes: args.opt_usize("probes", 0).map_err(|e| anyhow!(e))? as u32,
+        tables: args.opt_usize("tables", 0).map_err(|e| anyhow!(e))? as u32,
+        tag: args.opt_usize("tag", 0).map_err(|e| anyhow!(e))? as u32,
+    };
+    let window = args.opt_usize("window", 32).map_err(|e| anyhow!(e))?.max(1);
+    let retries = args.opt_usize("retries", 400).map_err(|e| anyhow!(e))?;
+    let mut client = parlsh::net::front::Client::connect_with(addr, retries, 25, 64 << 20)?;
+    let dim = client.dim();
+    let h = client.hello();
+    eprintln!(
+        "connected to {addr}: dim={dim}, server plan k={} T={} L={} (digest {:#018x})",
+        h.lsh.k, h.lsh.t, h.lsh.l, h.digest
+    );
+
+    let queries: Vec<(QueryOptions, Vec<f32>)> = if let Some(path) = args.opt("queries") {
+        if !path.ends_with(".txt") {
+            bail!("--queries for `query` takes a .txt file (one vector per line, optional k=/t=/l=/tag= prefixes)");
+        }
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("read {path}: {e}"))?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+            .map(|l| parse_query_line(l, base))
+            .collect::<Result<_>>()?
+    } else if let Some(n) = args.opt("synth") {
+        let n: usize = n.parse().map_err(|e| anyhow!("bad --synth: {e}"))?;
+        let seed = args.opt_usize("seed", 12345).map_err(|e| anyhow!(e))? as u64;
+        let ds = parlsh::data::synth::synthesize(parlsh::data::synth::SynthSpec {
+            n,
+            dim,
+            seed,
+            ..Default::default()
+        });
+        (0..ds.len()).map(|i| (base, ds.get(i).to_vec())).collect()
+    } else if !std::io::stdin().is_terminal() {
+        let mut out = Vec::new();
+        for line in std::io::stdin().lock().lines() {
+            let l = line.map_err(|e| anyhow!("read stdin: {e}"))?;
+            if l.trim().is_empty() || l.trim_start().starts_with('#') {
+                continue;
+            }
+            out.push(parse_query_line(&l, base)?);
+        }
+        out
+    } else {
+        Vec::new()
+    };
+    if queries.is_empty() && !args.has_flag("shutdown") {
+        bail!(
+            "nothing to do: give --queries=FILE.txt, --synth=N, pipe query lines \
+             on stdin, or --shutdown"
+        );
+    }
+
+    let t = Timer::start();
+    let mut server_secs = Vec::with_capacity(queries.len());
+    let mut outstanding = 0usize;
+    for (opts, q) in &queries {
+        client.submit(q, *opts)?;
+        outstanding += 1;
+        while outstanding >= window {
+            let c = client.recv()?;
+            print_completed(&c);
+            server_secs.push(c.secs);
+            outstanding -= 1;
+        }
+    }
+    while outstanding > 0 {
+        let c = client.recv()?;
+        print_completed(&c);
+        server_secs.push(c.secs);
+        outstanding -= 1;
+    }
+    if !queries.is_empty() {
+        let secs = t.secs();
+        let lat = latency_stats(&server_secs);
+        eprintln!(
+            "{} queries in {secs:.2}s ({:.1} q/s end to end); server-side ms: \
+             mean {:.2} p50 {:.2} p99 {:.2}",
+            queries.len(),
+            queries.len() as f64 / secs.max(1e-9),
+            lat.mean_ms,
+            lat.p50_ms,
+            lat.p99_ms
+        );
+    }
+    if args.has_flag("shutdown") {
+        client.shutdown_server()?;
+        println!("server shutdown acknowledged");
+    }
+    Ok(())
 }
 
 /// Print one completed ticket — with its per-query plan echo — and record
@@ -536,6 +752,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 std::fs::write("BENCH_streaming.json", json)?;
                 let archived = exp::archive_bench("BENCH_streaming.json")?;
                 println!("(wrote BENCH_streaming.json; archived {archived})");
+            }
+            "front" => {
+                println!("== Front door: client count × backing executor over real TCP ==");
+                let (t, json) = exp::front_comparison()?;
+                t.print();
+                std::fs::write("BENCH_front.json", json)?;
+                let archived = exp::archive_bench("BENCH_front.json")?;
+                println!("(wrote BENCH_front.json; archived {archived})");
             }
             "history" => {
                 println!("== Bench history (bench_history/, latest two runs per experiment) ==");

@@ -1,0 +1,151 @@
+//! The reusable external client of the front door: one blocking TCP
+//! connection speaking the wire protocol — `Hello`/`HelloOk` handshake
+//! with the config-digest echo, pipelined `QueryVec` submissions, and
+//! `Completion` claims carrying the resolved option echo. Used by
+//! `parlsh query --connect`, the front integration tests, and
+//! `parlsh experiment front`.
+//!
+//! Clients never hash: they ship raw vectors and the server projects
+//! them against its own hash family (external processes cannot hold the
+//! family, and must not need to). Submission is pipelined — submit any
+//! number of queries before claiming; completions arrive in the server's
+//! completion order, matched to submissions by the client-local qid.
+
+use crate::dataflow::message::{Dest, Msg, QueryOptions, StageKind};
+use crate::net::peer::connect_retry;
+use crate::net::wire::{self, FrameKind, Hello, WireError};
+use anyhow::{anyhow, bail, Result};
+use std::io::Write;
+use std::net::TcpStream;
+
+/// One claimed completion.
+#[derive(Clone, Debug)]
+pub struct Completed {
+    /// The client-local qid [`Client::submit`] returned.
+    pub qid: u32,
+    /// The resolved plan the query actually ran under (option echo).
+    pub opts: QueryOptions,
+    /// Global top-k `(sqdist, id)`, ascending.
+    pub hits: Vec<(f32, u32)>,
+    /// Server-side admission-to-completion seconds.
+    pub secs: f64,
+}
+
+pub struct Client {
+    stream: TcpStream,
+    hello: Hello,
+    max_frame: usize,
+    next_qid: u32,
+}
+
+impl Client {
+    /// Connect and handshake with sensible retry defaults (the server
+    /// may still be building its index when the client starts).
+    pub fn connect(addr: &str) -> Result<Client> {
+        Client::connect_with(addr, 40, 25, 64 << 20)
+    }
+
+    /// Connect with explicit retry/backoff and frame-size bounds.
+    pub fn connect_with(
+        addr: &str,
+        retries: usize,
+        backoff_ms: u64,
+        max_frame: usize,
+    ) -> Result<Client> {
+        let mut stream = connect_retry(addr, retries, backoff_ms)?;
+        let f = wire::read_frame(&mut stream, max_frame)
+            .map_err(|e| anyhow!("front handshake: {e}"))?;
+        if f.kind != FrameKind::Hello {
+            bail!("front server opened with {:?}, want Hello", f.kind);
+        }
+        // decode_hello verifies the codec version and the config digest
+        let hello = wire::decode_hello(&f.payload)?;
+        let ok = wire::encode_frame(
+            FrameKind::HelloOk,
+            &wire::encode_hello_ok(hello.node, hello.digest),
+        );
+        stream.write_all(&ok)?;
+        Ok(Client { stream, hello, max_frame, next_qid: 0 })
+    }
+
+    /// The server's index parameters, as announced in the handshake.
+    pub fn hello(&self) -> &Hello {
+        &self.hello
+    }
+
+    /// Dimensionality queries must have.
+    pub fn dim(&self) -> usize {
+        self.hello.dim as usize
+    }
+
+    /// Bound how long [`Client::recv`] blocks. Tests use this to turn a
+    /// starved client into a typed failure instead of a hang; `None`
+    /// restores indefinite blocking.
+    pub fn set_read_timeout(&self, dur: Option<std::time::Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(dur)
+    }
+
+    /// Submit one query under `opts` (zero fields inherit the server's
+    /// config); returns the client-local qid the matching [`Completed`]
+    /// will carry. Pipelined: submit as many as you like before claiming.
+    pub fn submit(&mut self, q: &[f32], opts: QueryOptions) -> Result<u32> {
+        if q.len() != self.hello.dim as usize {
+            bail!(
+                "query has {} values, index dim is {}",
+                q.len(),
+                self.hello.dim
+            );
+        }
+        let qid = self.next_qid;
+        self.next_qid = self.next_qid.wrapping_add(1);
+        // `raw` (the hashed projections) stays empty: the server hashes
+        // server-side against its own family.
+        let msg = Msg::QueryVec {
+            qid,
+            raw: Vec::new().into(),
+            v: q.into(),
+            opts,
+        };
+        let frame = wire::stage_frame(Dest { stage: StageKind::Qr, copy: 0 }, &msg);
+        self.stream.write_all(&frame)?;
+        Ok(qid)
+    }
+
+    /// Claim the next completion (blocking). Typed failures: a `Stopped`
+    /// frame surfaces the server's reason (eviction, shutdown) verbatim;
+    /// a dead connection surfaces the underlying IO error.
+    pub fn recv(&mut self) -> Result<Completed> {
+        let f = wire::read_frame(&mut self.stream, self.max_frame)
+            .map_err(|e| anyhow!("front recv: {e}"))?;
+        match f.kind {
+            FrameKind::Completion => {
+                let (qid, opts, secs, hits) = wire::decode_completion(&f.payload)?;
+                Ok(Completed { qid, opts, hits, secs })
+            }
+            FrameKind::Stopped => {
+                let reason = wire::decode_stopped(&f.payload)?;
+                bail!("front server stopped this connection: {reason}")
+            }
+            other => bail!("unexpected {other:?} frame from front server"),
+        }
+    }
+
+    /// Ask the server to shut down cleanly — it finishes every client's
+    /// in-flight queries, flushes, and sends each connection a typed
+    /// goodbye before exiting. Returns once the goodbye (or EOF) arrives.
+    pub fn shutdown_server(mut self) -> Result<()> {
+        self.stream
+            .write_all(&wire::encode_frame(FrameKind::Shutdown, &[]))?;
+        loop {
+            match wire::read_frame(&mut self.stream, self.max_frame) {
+                // late completions for queries we never claimed
+                Ok(f) if f.kind == FrameKind::Completion => continue,
+                Ok(f) if f.kind == FrameKind::Stopped => return Ok(()),
+                Ok(f) => bail!("unexpected {:?} frame during shutdown", f.kind),
+                // EOF/reset: the server is gone, which is the point
+                Err(WireError::Io { .. }) => return Ok(()),
+                Err(e) => bail!("front shutdown: {e}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Per-connection state machine of the front door (DESIGN.md §Front
+//! door). Each accepted socket moves `Handshake → Streaming → Closing`;
+//! the read side reassembles partial frames with [`FrameDecoder`]
+//! (nonblocking reads deliver arbitrary byte slices), and the write side
+//! buffers egress up to `front.egress_cap` so one slow client can never
+//! stall the event loop — the loop queues bytes and moves on, and a
+//! client that lets the bound overflow is evicted instead of blocking
+//! everyone else.
+
+use crate::dataflow::message::QueryOptions;
+use crate::net::wire::{self, FrameDecoder, FrameKind};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Decoded queries a connection may hold while waiting for admission.
+/// When the park queue is full the loop stops polling the socket for
+/// reads, so backpressure propagates to the client's TCP send side
+/// rather than growing server memory. One read burst can briefly exceed
+/// the bound (frames already buffered must land somewhere); the excess
+/// is at most one socket read of frames.
+pub(crate) const PARK_CAP: usize = 64;
+
+/// Where in its lifecycle a connection is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// `Hello` queued; waiting for the client's digest echo (`HelloOk`).
+    Handshake,
+    /// Protocol-live: queries in, completions out.
+    Streaming,
+    /// A typed goodbye (`Stopped`) is queued; the connection closes once
+    /// it flushes (or on the next write error). No reads, no admission.
+    Closing,
+}
+
+/// What one nonblocking read drain produced.
+pub(crate) enum ReadOutcome {
+    /// Buffered whatever was available (possibly nothing but WouldBlock).
+    Progress,
+    /// Orderly EOF from the peer.
+    Eof,
+    /// Transport error (connection reset and friends).
+    Err(io::Error),
+}
+
+pub(crate) struct Conn {
+    pub(crate) stream: TcpStream,
+    pub(crate) peer: String,
+    pub(crate) phase: Phase,
+    /// This connection's admission lane on the shared session.
+    pub(crate) lane: u32,
+    pub(crate) decoder: FrameDecoder,
+    /// Decoded queries waiting for admission: (client qid, vector, plan).
+    pub(crate) parked: VecDeque<(u32, Vec<f32>, QueryOptions)>,
+    /// session ticket id → client qid: the per-connection ticket
+    /// namespace. A client reusing a qid before claiming it simply
+    /// orphans the older submission.
+    pub(crate) pending: HashMap<u64, u32>,
+    /// Completions delivered, for the serve-loop stats.
+    pub(crate) completions_sent: u64,
+    /// Outbound bytes the kernel has not yet accepted.
+    egress: Vec<u8>,
+    /// Prefix of `egress` already written.
+    sent: usize,
+}
+
+impl Conn {
+    pub(crate) fn new(stream: TcpStream, peer: String, lane: u32) -> Conn {
+        Conn {
+            stream,
+            peer,
+            phase: Phase::Handshake,
+            lane,
+            decoder: FrameDecoder::new(),
+            parked: VecDeque::new(),
+            pending: HashMap::new(),
+            completions_sent: 0,
+            egress: Vec::new(),
+            sent: 0,
+        }
+    }
+
+    /// Drain the nonblocking socket into the frame decoder.
+    pub(crate) fn read_ready(&mut self) -> ReadOutcome {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => return ReadOutcome::Eof,
+                Ok(n) => self.decoder.push(&buf[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return ReadOutcome::Progress,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return ReadOutcome::Err(e),
+            }
+        }
+    }
+
+    /// Queue an outbound frame. `false` means the egress bound would be
+    /// exceeded — the caller evicts the slow client rather than letting
+    /// it hold server memory hostage.
+    pub(crate) fn push_egress(&mut self, frame: &[u8], cap: usize) -> bool {
+        if self.buffered_egress() + frame.len() > cap {
+            return false;
+        }
+        if self.sent > 0 {
+            self.egress.drain(..self.sent);
+            self.sent = 0;
+        }
+        self.egress.extend_from_slice(frame);
+        true
+    }
+
+    pub(crate) fn buffered_egress(&self) -> usize {
+        self.egress.len() - self.sent
+    }
+
+    pub(crate) fn wants_write(&self) -> bool {
+        self.buffered_egress() > 0
+    }
+
+    /// Whether the event loop should poll this conn for reads: always
+    /// during the handshake; while streaming only if the park queue has
+    /// room (admission backpressure becomes TCP backpressure); never
+    /// once closing.
+    pub(crate) fn wants_read(&self) -> bool {
+        match self.phase {
+            Phase::Handshake => true,
+            Phase::Streaming => self.parked.len() < PARK_CAP,
+            Phase::Closing => false,
+        }
+    }
+
+    /// Nonblocking write drain. `Ok(true)` = egress fully flushed.
+    pub(crate) fn write_ready(&mut self) -> io::Result<bool> {
+        while self.sent < self.egress.len() {
+            match self.stream.write(&self.egress[self.sent..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer stopped accepting bytes",
+                    ))
+                }
+                Ok(n) => self.sent += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.egress.clear();
+        self.sent = 0;
+        Ok(true)
+    }
+
+    /// Queue a typed goodbye and enter `Closing`: no more reads or
+    /// admission; the connection is dropped once the `Stopped` frame
+    /// flushes. Any unread egress is replaced — the client that provoked
+    /// the close forfeits its backlog, deliberately, so the goodbye can
+    /// never itself be blocked by a full buffer.
+    pub(crate) fn begin_close(&mut self, reason: &str) {
+        let frame = wire::encode_frame(FrameKind::Stopped, &wire::encode_stopped(reason));
+        self.egress.clear();
+        self.sent = 0;
+        self.egress.extend_from_slice(&frame);
+        self.phase = Phase::Closing;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire;
+    use std::net::TcpListener;
+
+    /// A connected nonblocking server-side conn plus its blocking client
+    /// end, over loopback.
+    fn pair() -> (Conn, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, peer) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (Conn::new(server, peer.to_string(), 1), client)
+    }
+
+    #[test]
+    fn read_ready_reassembles_split_frames_and_reports_eof() {
+        let (mut conn, mut client) = pair();
+        let f1 = wire::encode_frame(FrameKind::Shutdown, &[]);
+        let f2 = wire::encode_frame(FrameKind::Stopped, &wire::encode_stopped("bye"));
+        let bytes: Vec<u8> = f1.iter().chain(f2.iter()).copied().collect();
+        // dribble the two frames across an awkward split
+        client.write_all(&bytes[..7]).unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(matches!(conn.read_ready(), ReadOutcome::Progress));
+        assert!(conn.decoder.next_frame(1 << 16).unwrap().is_none());
+        client.write_all(&bytes[7..]).unwrap();
+        drop(client);
+        // drain until EOF shows up (bytes may land in several reads)
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            match conn.read_ready() {
+                ReadOutcome::Eof => break,
+                ReadOutcome::Progress => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "EOF never surfaced"
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                ReadOutcome::Err(e) => panic!("unexpected transport error: {e}"),
+            }
+        }
+        let a = conn.decoder.next_frame(1 << 16).unwrap().unwrap();
+        let b = conn.decoder.next_frame(1 << 16).unwrap().unwrap();
+        assert_eq!(a.kind, FrameKind::Shutdown);
+        assert_eq!(b.kind, FrameKind::Stopped);
+        assert_eq!(wire::decode_stopped(&b.payload).unwrap(), "bye");
+        assert!(conn.decoder.next_frame(1 << 16).unwrap().is_none());
+    }
+
+    #[test]
+    fn egress_bound_refuses_overflow_and_goodbye_replaces_backlog() {
+        let (mut conn, _client) = pair();
+        let frame = wire::encode_frame(FrameKind::Shutdown, &[]);
+        let cap = frame.len() * 2;
+        assert!(conn.push_egress(&frame, cap));
+        assert!(conn.push_egress(&frame, cap));
+        // a third frame would exceed the bound: refused, buffer unchanged
+        assert!(!conn.push_egress(&frame, cap));
+        assert_eq!(conn.buffered_egress(), frame.len() * 2);
+        // the typed goodbye replaces the backlog and flips the phase
+        conn.begin_close("slow client");
+        assert_eq!(conn.phase, Phase::Closing);
+        assert!(!conn.wants_read());
+        assert!(conn.wants_write());
+        // flush lands exactly the Stopped frame on the wire
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !conn.write_ready().unwrap() {
+            assert!(std::time::Instant::now() < deadline, "goodbye never flushed");
+        }
+        let mut server_read = _client.try_clone().unwrap();
+        let f = wire::read_frame(&mut server_read, 1 << 16).unwrap();
+        assert_eq!(f.kind, FrameKind::Stopped);
+        assert_eq!(wire::decode_stopped(&f.payload).unwrap(), "slow client");
+    }
+
+    #[test]
+    fn park_queue_gates_read_interest() {
+        let (mut conn, _client) = pair();
+        conn.phase = Phase::Streaming;
+        assert!(conn.wants_read());
+        for i in 0..PARK_CAP {
+            conn.parked
+                .push_back((i as u32, vec![0.0; 4], QueryOptions::default()));
+        }
+        assert!(!conn.wants_read(), "full park queue must drop read interest");
+        conn.parked.pop_front();
+        assert!(conn.wants_read());
+    }
+}

@@ -1,0 +1,425 @@
+//! The poll-based serving front door (DESIGN.md §Front door, paper §V:
+//! Web-scale serving): `parlsh serve --listen <addr>` runs this
+//! readiness-driven event loop, multiplexing many external TCP clients
+//! onto ONE resident [`IndexSession`]. The session may itself execute
+//! inline, threaded, or over `--net` socket workers — a two-tier
+//! topology where this loop is the query fan-in tier and the worker mesh
+//! the compute tier.
+//!
+//! One thread, no thread-per-connection: sockets are nonblocking and a
+//! `poll(2)` wrapper ([`poll::Poller`]) reports readiness each tick. Per
+//! connection, [`conn::Conn`] runs the `Handshake → Streaming → Closing`
+//! state machine with partial-frame reassembly on reads and a bounded
+//! egress buffer on writes (`front.egress_cap`): a slow client's results
+//! queue up to the bound and then the client is *evicted* with a typed
+//! goodbye — it can never block the loop or other clients.
+//!
+//! Fairness: each connection gets an admission *lane* on the session
+//! ([`IndexSession::open_lane`]), bounding it to its fair share of
+//! `stream.pending_cap`, and the loop admits parked queries round-robin
+//! across connections — no client starves while another streams at full
+//! rate. A disconnect mid-stream closes the lane: in-flight tickets are
+//! orphaned (completed by the pipeline, discarded on arrival), the
+//! window share returns to survivors immediately, and the eviction is
+//! logged. Queries decoded but not yet admitted when a client vanishes
+//! are dropped with it.
+//!
+//! Shutdown: any streaming client may send a `Shutdown` frame; the loop
+//! stops reading and accepting, drains every admitted query, flushes all
+//! results, sends each connection a typed `Stopped` goodbye, and returns
+//! its counters — the clean-exit contract `parlsh query --shutdown` and
+//! CI rely on.
+
+pub mod client;
+pub(crate) mod conn;
+pub mod poll;
+
+pub use client::{Client, Completed};
+
+use crate::config::Config;
+use crate::coordinator::session::IndexSession;
+use crate::dataflow::message::{Msg, StageKind};
+use crate::net::wire::{self, Frame, FrameKind, Hello};
+use anyhow::Result;
+use conn::{Conn, Phase, ReadOutcome};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Write};
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// Poll timeout while nothing is in flight anywhere (fresh accepts and
+/// first bytes only need coarse latency).
+const IDLE_TICK_MS: i32 = 25;
+/// Poll timeout while queries, egress, or a shutdown drain are pending.
+const BUSY_TICK_MS: i32 = 1;
+
+/// Counters the serve loop reports when it exits (tests and the CLI
+/// assert on these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrontStats {
+    pub accepted: u64,
+    /// Accepts refused over `front.max_conns` (typed notice, then close).
+    pub refused: u64,
+    /// Queries admitted into the pipeline.
+    pub queries: u64,
+    /// Completions delivered to clients.
+    pub completions: u64,
+    /// Connections evicted: protocol violations, handshake mismatches,
+    /// slow-client egress overflow, or disconnects with work in flight.
+    pub evictions: u64,
+}
+
+/// What handling one decoded frame asks the loop to do.
+enum FrameAction {
+    Proceed,
+    Shutdown,
+    Evict(String),
+}
+
+/// Serve external clients on `listener` until one sends `Shutdown`.
+///
+/// `session` must be attached with a ranker (the submit paths assert
+/// it), and `cfg`/`dim` must be the exact configuration the session's
+/// cluster was built with — the handshake digest announced to clients is
+/// computed from them.
+pub fn serve(
+    listener: TcpListener,
+    session: &IndexSession<'_>,
+    cfg: &Config,
+    dim: usize,
+) -> Result<FrontStats> {
+    listener.set_nonblocking(true)?;
+    let max_frame = cfg.sock.max_frame_bytes;
+    let egress_cap = cfg.front.egress_cap;
+    let max_conns = cfg.front.max_conns;
+    let expected_digest =
+        wire::config_digest(dim as u32, &cfg.lsh, &cfg.cluster, &cfg.stream);
+
+    let mut poller = poll::Poller::new();
+    // Registry keyed by admission lane (unique per connection for the
+    // session's lifetime), plus the round-robin service order.
+    let mut conns: HashMap<u32, Conn> = HashMap::new();
+    let mut rr: VecDeque<u32> = VecDeque::new();
+    let mut doomed: Vec<u32> = Vec::new();
+    let mut stats = FrontStats::default();
+    let mut stopping = false;
+
+    loop {
+        // -- register interests and wait for readiness
+        poller.clear();
+        let accepting = !stopping;
+        if accepting {
+            poller.register(poll::fd_of(&listener), true, false);
+        }
+        let mut reg: Vec<(u32, usize)> = Vec::with_capacity(conns.len());
+        for (&lane, c) in conns.iter() {
+            let want_r = !stopping && c.wants_read();
+            let want_w = c.wants_write();
+            if want_r || want_w {
+                reg.push((lane, poller.register(poll::fd_of(&c.stream), want_r, want_w)));
+            }
+        }
+        let busy = stopping
+            || conns.values().any(|c| {
+                !c.pending.is_empty()
+                    || !c.parked.is_empty()
+                    || c.wants_write()
+                    || c.phase == Phase::Closing
+            });
+        poller.wait(if busy { BUSY_TICK_MS } else { IDLE_TICK_MS })?;
+
+        // -- accept new connections
+        if accepting {
+            loop {
+                match listener.accept() {
+                    Ok((s, peer)) => {
+                        if s.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = s.set_nodelay(true);
+                        if conns.len() >= max_conns {
+                            // refuse with a typed notice; the socket is
+                            // fresh, so the small frame fits its buffer
+                            let notice = wire::encode_frame(
+                                FrameKind::Stopped,
+                                &wire::encode_stopped("front server full (front.max_conns)"),
+                            );
+                            let mut s = s;
+                            let _ = s.write_all(&notice);
+                            stats.refused += 1;
+                            continue;
+                        }
+                        let lane = session.open_lane();
+                        let mut c = Conn::new(s, peer.to_string(), lane);
+                        let hello = Hello {
+                            node: lane as u16,
+                            dim: dim as u32,
+                            peers: Vec::new(),
+                            lsh: cfg.lsh,
+                            cluster: cfg.cluster,
+                            stream: cfg.stream,
+                            // encode_hello computes the real digest
+                            digest: 0,
+                        };
+                        let greeting =
+                            wire::encode_frame(FrameKind::Hello, &wire::encode_hello(&hello));
+                        c.push_egress(&greeting, egress_cap);
+                        stats.accepted += 1;
+                        rr.push_back(lane);
+                        conns.insert(lane, c);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        // transient accept failures (ECONNABORTED and
+                        // friends) must not kill a server with live clients
+                        eprintln!("front: accept failed: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+
+        // -- per-connection IO
+        for &(lane, slot) in &reg {
+            let readable = poller.readable(slot);
+            let writable = poller.writable(slot);
+            if !readable && !writable {
+                continue;
+            }
+            let c = conns.get_mut(&lane).expect("registered conn vanished");
+            if writable && c.wants_write() {
+                if let Err(e) = c.write_ready() {
+                    if c.phase != Phase::Closing {
+                        eprintln!("front: {}: write failed: {e}", c.peer);
+                    }
+                    doomed.push(lane);
+                    continue;
+                }
+            }
+            if c.phase == Phase::Closing {
+                if !c.wants_write() {
+                    // goodbye flushed; drop the socket
+                    doomed.push(lane);
+                }
+                continue;
+            }
+            if !readable || stopping {
+                continue;
+            }
+            match c.read_ready() {
+                ReadOutcome::Progress => {}
+                ReadOutcome::Eof | ReadOutcome::Err(_) => {
+                    // peer gone — frames already decoded can't be
+                    // answered anyway; tear down at end of tick
+                    doomed.push(lane);
+                    continue;
+                }
+            }
+            loop {
+                match c.decoder.next_frame(max_frame) {
+                    Ok(Some(frame)) => {
+                        match handle_frame(c, frame, expected_digest, dim) {
+                            FrameAction::Proceed => {}
+                            FrameAction::Shutdown => {
+                                eprintln!("front: shutdown requested by {}", c.peer);
+                                stopping = true;
+                            }
+                            FrameAction::Evict(reason) => {
+                                evict(session, c, lane, &mut stats, &reason);
+                                break;
+                            }
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(we) => {
+                        // hostile/corrupt bytes: typed rejection for this
+                        // connection only; everyone else keeps streaming
+                        evict(session, c, lane, &mut stats, &we.to_string());
+                        break;
+                    }
+                }
+            }
+        }
+
+        // -- fair admission: rotate the registry, one parked query per
+        // connection per pass, until a full pass admits nothing. The
+        // session's per-lane share bound is the hard fairness guarantee;
+        // the rotation adds service order on top of it.
+        if !stopping {
+            loop {
+                let mut progress = false;
+                for _ in 0..rr.len() {
+                    let Some(lane) = rr.pop_front() else { break };
+                    let Some(c) = conns.get_mut(&lane) else {
+                        // dead connection: drop its lane from the rotation
+                        continue;
+                    };
+                    rr.push_back(lane);
+                    if c.phase != Phase::Streaming {
+                        continue;
+                    }
+                    if let Some((qid, v, opts)) = c.parked.front() {
+                        if let Some(t) = session.try_submit_lane(lane, v, *opts) {
+                            c.pending.insert(t.0, *qid);
+                            c.parked.pop_front();
+                            stats.queries += 1;
+                            progress = true;
+                        }
+                    }
+                }
+                if !progress {
+                    break;
+                }
+            }
+        }
+
+        // -- claim completions and route them to their connections
+        while let Some((lane, (ticket, opts, hits, secs))) = session.try_recv_lane() {
+            let Some(c) = conns.get_mut(&lane) else { continue };
+            if c.phase == Phase::Closing {
+                continue; // goodbye pending; the result is undeliverable
+            }
+            let Some(qid) = c.pending.remove(&ticket.0) else {
+                continue;
+            };
+            let frame = wire::encode_frame(
+                FrameKind::Completion,
+                &wire::encode_completion(qid, &opts, secs, &hits),
+            );
+            if c.push_egress(&frame, egress_cap) {
+                c.completions_sent += 1;
+                stats.completions += 1;
+            } else {
+                let reason = format!(
+                    "egress buffer would exceed front.egress_cap={egress_cap} (slow client)"
+                );
+                evict(session, c, lane, &mut stats, &reason);
+            }
+        }
+
+        // -- opportunistic flush: results queued this tick usually fit
+        // the socket buffer, so try now instead of waiting a full tick
+        for (&lane, c) in conns.iter_mut() {
+            if c.wants_write() {
+                if let Err(e) = c.write_ready() {
+                    if c.phase != Phase::Closing {
+                        eprintln!("front: {}: write failed: {e}", c.peer);
+                    }
+                    doomed.push(lane);
+                }
+            }
+        }
+
+        // -- tear down doomed connections
+        for lane in doomed.drain(..) {
+            let Some(c) = conns.remove(&lane) else { continue };
+            // Closing conns were already evicted (lane closed, eviction
+            // counted) — this is just the socket drop.
+            let was_closing = c.phase == Phase::Closing;
+            let orphans = session.close_lane(lane);
+            if !was_closing && (orphans > 0 || !c.parked.is_empty()) {
+                stats.evictions += 1;
+                eprintln!(
+                    "front: {} disconnected mid-stream: {orphans} in-flight orphaned, {} parked dropped",
+                    c.peer,
+                    c.parked.len()
+                );
+            }
+        }
+
+        // -- clean shutdown once every admitted query has drained
+        if stopping {
+            let undelivered: usize = conns.values().map(|c| c.pending.len()).sum();
+            if undelivered == 0 && session.in_flight() == 0 {
+                break;
+            }
+        }
+    }
+
+    // Final drain: flush queued results (bounded patience — a client
+    // that stopped reading forfeits its tail), then the typed goodbye.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while conns.values().any(|c| c.wants_write()) && Instant::now() < deadline {
+        poller.clear();
+        let regs: Vec<(u32, usize)> = conns
+            .iter()
+            .filter(|(_, c)| c.wants_write())
+            .map(|(&l, c)| (l, poller.register(poll::fd_of(&c.stream), false, true)))
+            .collect();
+        poller.wait(50)?;
+        for (lane, slot) in regs {
+            if poller.writable(slot) {
+                let c = conns.get_mut(&lane).expect("conn vanished in drain");
+                if c.write_ready().is_err() {
+                    conns.remove(&lane);
+                    session.close_lane(lane);
+                }
+            }
+        }
+    }
+    for (&lane, c) in conns.iter_mut() {
+        session.close_lane(lane);
+        c.begin_close("front server shutdown");
+        let _ = c.write_ready(); // best effort; the frame is small
+    }
+    Ok(stats)
+}
+
+/// Advance one connection's state machine by one decoded frame.
+fn handle_frame(c: &mut Conn, frame: Frame, expected_digest: u64, dim: usize) -> FrameAction {
+    match (c.phase, frame.kind) {
+        (Phase::Handshake, FrameKind::HelloOk) => match wire::decode_hello_ok(&frame.payload) {
+            Ok((node, digest)) => {
+                if node != c.lane as u16 || digest != expected_digest {
+                    return FrameAction::Evict(format!(
+                        "handshake digest mismatch (got {digest:#018x}, want {expected_digest:#018x})"
+                    ));
+                }
+                c.phase = Phase::Streaming;
+                FrameAction::Proceed
+            }
+            Err(e) => FrameAction::Evict(format!("bad HelloOk: {e}")),
+        },
+        (Phase::Handshake, kind) => {
+            FrameAction::Evict(format!("expected HelloOk, got {kind:?}"))
+        }
+        (Phase::Streaming, FrameKind::Stage) => match wire::decode_stage(&frame.payload) {
+            Ok((dest, Msg::QueryVec { qid, v, opts, .. })) if dest.stage == StageKind::Qr => {
+                if v.len() != dim {
+                    return FrameAction::Evict(format!(
+                        "query has {} values, index dim is {dim}",
+                        v.len()
+                    ));
+                }
+                c.parked.push_back((qid, v.to_vec(), opts));
+                FrameAction::Proceed
+            }
+            Ok(_) => FrameAction::Evict("stage frame is not a QueryVec for QR".to_string()),
+            Err(e) => FrameAction::Evict(format!("bad stage frame: {e}")),
+        },
+        (Phase::Streaming, FrameKind::Shutdown) => FrameAction::Shutdown,
+        (Phase::Streaming, kind) => FrameAction::Evict(format!("unexpected {kind:?} frame")),
+        // Closing conns are never read; nothing to do if we get here.
+        (Phase::Closing, _) => FrameAction::Proceed,
+    }
+}
+
+/// Typed eviction: close the lane now — reclaiming the client's window
+/// share and orphaning its in-flight tickets — queue the goodbye, log,
+/// count.
+fn evict(
+    session: &IndexSession<'_>,
+    c: &mut Conn,
+    lane: u32,
+    stats: &mut FrontStats,
+    reason: &str,
+) {
+    let orphans = session.close_lane(lane);
+    eprintln!(
+        "front: evicting {} ({reason}; {orphans} in-flight orphaned)",
+        c.peer
+    );
+    c.begin_close(reason);
+    stats.evictions += 1;
+}

@@ -16,12 +16,17 @@
 //!   node's set of stage copies (via the shared `Placement`);
 //! * [`driver`] — [`NetSession`] (spawn N workers on loopback, handshake,
 //!   typed shutdown, no leaked processes) and [`SocketExecutor`], the
-//!   `Executor` impl the coordinator drivers run build and search through.
+//!   `Executor` impl the coordinator drivers run build and search through;
+//! * [`front`] — the poll-based serving front door: `parlsh serve
+//!   --listen` multiplexes external clients onto one resident
+//!   `IndexSession` through a readiness-driven event loop, plus the
+//!   [`front::Client`] library struct behind `parlsh query --connect`.
 //!
 //! Uses `std::net` only — no new dependencies, consistent with the
 //! offline-clean build.
 
 pub mod driver;
+pub mod front;
 pub mod peer;
 pub mod wire;
 pub mod worker;

@@ -26,7 +26,9 @@
 //! down DP dedup state), `FlushReq`/`FlushAck` (phase barrier carrying the
 //! worker's real bytes-on-wire [`TrafficMeter`]), `StateReq`/`StateDump`
 //! (differential-test snapshots), and the typed `Stopped`/`Shutdown` pair
-//! mirroring the threaded executor's drop-guard semantics.
+//! mirroring the threaded executor's drop-guard semantics. `Completion`
+//! is the front-door result frame (server → external client): the
+//! client's qid, the resolved option echo, and the exact top-k hits.
 
 use crate::config::{ClusterConfig, ObjMapStrategy, StreamConfig};
 use crate::core::lsh::LshParams;
@@ -122,6 +124,9 @@ pub enum FrameKind {
     Stopped = 9,
     /// Driver → worker: exit cleanly.
     Shutdown = 10,
+    /// Front server → external client: one finished query (qid in the
+    /// *client's* namespace, resolved option echo, exact top-k hits).
+    Completion = 11,
 }
 
 impl FrameKind {
@@ -139,6 +144,7 @@ impl FrameKind {
             8 => Some(StateDump),
             9 => Some(Stopped),
             10 => Some(Shutdown),
+            11 => Some(Completion),
             _ => None,
         }
     }
@@ -728,6 +734,42 @@ pub fn decode_stopped(payload: &[u8]) -> Result<String> {
     Ok(reason)
 }
 
+/// Front-door result frame payload (`FrameKind::Completion`): the finished
+/// query in the *client's* qid namespace, the resolved [`QueryOptions`]
+/// echo (same elision as `QueryVec`), the per-query pipeline seconds as an
+/// exact f64 bit pattern, and the `(distance, id)` top-k. Distances travel
+/// as f32 bit patterns, so an external client sees results bit-identical
+/// to an in-process `IndexSession::recv_full`.
+pub fn encode_completion(qid: u32, opts: &QueryOptions, secs: f64, hits: &[(f32, u32)]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(33 + 8 * hits.len());
+    put_u32(&mut p, qid);
+    put_opts(&mut p, opts);
+    put_u64(&mut p, secs.to_bits());
+    put_u32(&mut p, hits.len() as u32);
+    for &(d, id) in hits {
+        put_f32(&mut p, d);
+        put_u32(&mut p, id);
+    }
+    p
+}
+
+#[allow(clippy::type_complexity)]
+pub fn decode_completion(payload: &[u8]) -> Result<(u32, QueryOptions, f64, Vec<(f32, u32)>)> {
+    let mut rd = Rd::new(payload);
+    let qid = rd.u32()?;
+    let opts = read_opts(&mut rd)?;
+    let secs = f64::from_bits(rd.u64()?);
+    let n = rd.len_prefix(8)?;
+    let mut hits = Vec::with_capacity(n);
+    for _ in 0..n {
+        let d = rd.f32()?;
+        let id = rd.u32()?;
+        hits.push((d, id));
+    }
+    rd.done()?;
+    Ok((qid, opts, secs, hits))
+}
+
 /// FlushAck: barrier sequence number + the worker's phase meter (per-link
 /// real bytes-on-wire plus the logical/local/payload counters) + the phase
 /// work counters of every stage copy this worker hosts, so the driver's
@@ -892,6 +934,77 @@ pub fn decode_state_dump(payload: &[u8]) -> Result<NodeState> {
     }
     rd.done()?;
     Ok(out)
+}
+
+// --------------------------------------------------- incremental decoding
+
+/// Incremental frame reassembly for *nonblocking* readers (the poll-based
+/// front door, `net::front`): push whatever bytes the socket yields, pull
+/// complete frames out. [`read_frame`]'s validation order is preserved —
+/// the header is checked the moment 12 bytes are buffered, so a hostile
+/// length prefix is rejected with a typed [`WireError::Oversize`] *before*
+/// any payload is buffered, and the checksum is verified when the payload
+/// completes. Any error is terminal for the stream: framing is lost once a
+/// byte is untrusted, so callers must drop the connection (matching the
+/// blocking path, where the reader thread exits on the first bad frame).
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Prefix of `buf` already consumed by returned frames (compacted on
+    /// the next `push`, so a burst of small frames costs one memmove).
+    pos: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Buffer more bytes from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as a complete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pull the next complete frame, if the buffer holds one. `Ok(None)`
+    /// means "need more bytes"; errors are typed and terminal.
+    pub fn next_frame(&mut self, max_frame: usize) -> std::result::Result<Option<Frame>, WireError> {
+        let b = &self.buf[self.pos..];
+        if b.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let magic = u16::from_le_bytes([b[0], b[1]]);
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        if b[2] != WIRE_VERSION {
+            return Err(WireError::VersionMismatch { got: b[2], want: WIRE_VERSION });
+        }
+        let kind = FrameKind::from_u8(b[3]).ok_or(WireError::UnknownKind(b[3]))?;
+        let len = u32::from_le_bytes([b[4], b[5], b[6], b[7]]) as usize;
+        if len > max_frame {
+            return Err(WireError::Oversize { len, cap: max_frame });
+        }
+        if b.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let crc = u32::from_le_bytes([b[8], b[9], b[10], b[11]]);
+        let want = fnv1a32(fnv1a32(FNV_OFFSET, &b[0..8]), &b[HEADER_LEN..HEADER_LEN + len]);
+        if crc != want {
+            return Err(WireError::Checksum { got: crc, want });
+        }
+        let payload = b[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.pos += HEADER_LEN + len;
+        Ok(Some(Frame { kind, payload }))
+    }
 }
 
 #[cfg(test)]
@@ -1262,5 +1375,138 @@ mod tests {
         let mut p = encode_qid(1);
         p.push(0);
         assert!(decode_qid(&p).is_err());
+    }
+
+    #[test]
+    fn completion_roundtrip_exact() {
+        // empty hit list and all-default options are valid
+        let p = encode_completion(0, &QueryOptions::default(), 0.0, &[]);
+        let (qid, opts, secs, hits) = decode_completion(&p).unwrap();
+        assert_eq!((qid, opts, secs.to_bits(), hits.len()), (0, QueryOptions::default(), 0u64, 0));
+        // every field roundtrips bit-exactly, elision included
+        check("wire-completion-roundtrip", 200, |g| {
+            let qid = g.usize_in(0, 1 << 30) as u32;
+            let opts = rand_opts(g);
+            let secs = g.f32_in(0.0, 1e3) as f64;
+            let hits: Vec<(f32, u32)> = (0..g.usize_in(0, 40))
+                .map(|_| (g.f32_in(0.0, 1e9), g.usize_in(0, 1 << 20) as u32))
+                .collect();
+            let p = encode_completion(qid, &opts, secs, &hits);
+            let (q2, o2, s2, h2) = decode_completion(&p).unwrap();
+            assert_eq!(qid, q2);
+            assert_eq!(opts, o2);
+            assert_eq!(secs.to_bits(), s2.to_bits());
+            assert_eq!(hits, h2);
+        });
+        // trailing garbage is rejected
+        let mut p = encode_completion(9, &QueryOptions { k: 5, ..Default::default() }, 1.5, &[(0.5, 3)]);
+        p.push(0);
+        assert!(decode_completion(&p).is_err());
+    }
+
+    #[test]
+    fn frame_decoder_reassembles_across_every_split_boundary() {
+        // three back-to-back frames, as a nonblocking read would see them
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&stage_frame(Dest::dp(1), &Msg::BiMeta { qid: 1, n_dp: 2 }));
+        stream.extend_from_slice(&encode_frame(
+            FrameKind::Completion,
+            &encode_completion(7, &QueryOptions { probes: 9, ..Default::default() }, 0.25, &[(1.0, 4), (2.0, 8)]),
+        ));
+        stream.extend_from_slice(&encode_frame(FrameKind::Shutdown, &[]));
+        // split the byte stream at every boundary: both chunks pushed
+        // separately must still yield exactly the three frames, in order
+        for cut in 0..=stream.len() {
+            let mut dec = FrameDecoder::new();
+            dec.push(&stream[..cut]);
+            let mut kinds = Vec::new();
+            while let Some(f) = dec.next_frame(1 << 16).expect("clean stream") {
+                kinds.push(f.kind);
+            }
+            dec.push(&stream[cut..]);
+            while let Some(f) = dec.next_frame(1 << 16).expect("clean stream") {
+                if f.kind == FrameKind::Completion {
+                    let (qid, opts, _, hits) = decode_completion(&f.payload).unwrap();
+                    assert_eq!((qid, opts.probes, hits.len()), (7, 9, 2));
+                }
+                kinds.push(f.kind);
+            }
+            assert_eq!(
+                kinds,
+                vec![FrameKind::Stage, FrameKind::Completion, FrameKind::Shutdown],
+                "split at {cut}"
+            );
+            assert_eq!(dec.buffered(), 0, "split at {cut} left bytes behind");
+        }
+    }
+
+    #[test]
+    fn frame_decoder_rejects_every_single_byte_corruption() {
+        // the blocking-path corruption sweep, replayed through the
+        // nonblocking reassembly path byte by byte (worst-case reads)
+        let frame = stage_frame(
+            Dest::dp(3),
+            &Msg::CandidateReq { qid: 7, ids: vec![1, 2, 3, 99], v: vec![0.5f32; 16].into(), k: 10 },
+        );
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x40;
+            let mut dec = FrameDecoder::new();
+            let mut outcome = Ok(None);
+            for &b in &bad {
+                dec.push(&[b]);
+                outcome = dec.next_frame(1 << 16);
+                match &outcome {
+                    Ok(None) => continue,
+                    _ => break,
+                }
+            }
+            let rejected = match outcome {
+                Err(_) => true,
+                // A shrunken length prefix can pass the cap; the checksum
+                // or the payload decoder then has to catch it.
+                Ok(Some(f)) => decode_stage(&f.payload).is_err(),
+                Ok(None) => true, // grown length: frame never completes
+            };
+            assert!(rejected, "flip at byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn frame_decoder_rejects_hostile_header_before_buffering() {
+        // an oversized length prefix is rejected the moment the 12-byte
+        // header is complete — no payload is ever buffered
+        let mut hdr = Vec::new();
+        put_u16(&mut hdr, MAGIC);
+        put_u8(&mut hdr, WIRE_VERSION);
+        put_u8(&mut hdr, FrameKind::Stage as u8);
+        put_u32(&mut hdr, u32::MAX); // declared 4 GiB payload
+        put_u32(&mut hdr, 0); // crc never reached
+        let mut dec = FrameDecoder::new();
+        dec.push(&hdr[..HEADER_LEN - 1]);
+        assert!(matches!(dec.next_frame(1 << 16), Ok(None)));
+        dec.push(&hdr[HEADER_LEN - 1..]);
+        match dec.next_frame(1 << 16) {
+            Err(WireError::Oversize { len, cap }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(cap, 1 << 16);
+            }
+            other => panic!("hostile length prefix not rejected: {other:?}"),
+        }
+        // a v2 header is a typed VersionMismatch through the same path
+        let mut v2 = stage_frame(Dest::ag(0), &Msg::BiMeta { qid: 1, n_dp: 2 });
+        v2[2] = 2;
+        let crc = fnv1a32(fnv1a32(FNV_OFFSET, &v2[0..8]), &v2[HEADER_LEN..]);
+        v2[8..12].copy_from_slice(&crc.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.push(&v2);
+        assert!(matches!(
+            dec.next_frame(1 << 16),
+            Err(WireError::VersionMismatch { got: 2, .. })
+        ));
+        // and garbage magic likewise
+        let mut dec = FrameDecoder::new();
+        dec.push(b"GET / HTTP/1.1\r\n");
+        assert!(matches!(dec.next_frame(1 << 16), Err(WireError::BadMagic(_))));
     }
 }

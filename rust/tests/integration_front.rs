@@ -1,0 +1,589 @@
+//! Front-door contracts (DESIGN.md §Front door):
+//!
+//! * 64 concurrent TCP clients with mixed per-query plans get per-qid
+//!   results and option echoes bit-identical to the inline oracle, on
+//!   the threaded AND the socket (two-tier) backing;
+//! * fairness — a flooding client cannot starve a light one: the light
+//!   client's queries complete (bounded wait) while the hog saturates
+//!   the backpressure window, and both match the oracle;
+//! * disconnect robustness — a client killed mid-burst is evicted
+//!   (counted, in-flight work orphaned) and the survivors' results stay
+//!   bit-identical; the session keeps serving;
+//! * hostile inputs over real TCP — garbage bytes, a v2 frame, a
+//!   tampered handshake digest, an oversized length prefix, a corrupted
+//!   checksum: each gets a *typed* `Stopped` reason and the server keeps
+//!   serving a well-behaved client correctly; a truncated-then-closed
+//!   frame is cleaned up without wedging;
+//! * admission control — accepts over `front.max_conns` are refused
+//!   with a typed notice and counted, and slots free on disconnect.
+//!
+//! The server runs on the test thread (the executor seam is borrowed,
+//! not `Send`); every client is a plain TCP peer on a scoped thread.
+//! Client failures and panics are funneled past the shutdown request so
+//! a broken client turns into a test failure, never a wedged `serve`.
+
+use parlsh::config::Config;
+use parlsh::coordinator::session::IndexSession;
+use parlsh::coordinator::Cluster;
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::data::Dataset;
+use parlsh::dataflow::exec::{Executor, InlineExecutor, ThreadedExecutor};
+use parlsh::dataflow::message::{Dest, Msg, StageKind};
+use parlsh::net::front::{self, Client};
+use parlsh::net::{wire, NetSession};
+use parlsh::runtime::{Ranker, ScalarHasher, ScalarRanker};
+use parlsh::QueryOptions;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+const CLAIM_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// `(qid-derived query index, hits)` pairs one client claimed.
+type Claimed = Vec<(usize, Vec<(f32, u32)>)>;
+
+fn front_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 };
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.cluster.ag_copies = 2;
+    cfg.stream.inflight = 2;
+    cfg.stream.pending_cap = 16;
+    cfg.data.n = 1_500;
+    cfg
+}
+
+fn small_world(
+    cfg: &Config,
+    queries: usize,
+) -> (Dataset, Dataset, ScalarHasher, Arc<dyn Ranker>) {
+    let ds = synthesize(SynthSpec { n: cfg.data.n, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let ranker: Arc<dyn Ranker> = Arc::new(ScalarRanker { dim: ds.dim });
+    (ds, qs, ScalarHasher { family }, ranker)
+}
+
+/// Expected `(option echo, hits)` per query index, from an inline
+/// session grown by the same `insert` path the front server uses.
+fn inline_oracle(
+    cfg: &Config,
+    ds: &Dataset,
+    qs: &Dataset,
+    hasher: &ScalarHasher,
+    ranker: &Arc<dyn Ranker>,
+    plans: &[QueryOptions],
+) -> Vec<(QueryOptions, Vec<(f32, u32)>)> {
+    let mut cfg = cfg.clone();
+    cfg.stream.pending_cap = 0; // the oracle needs no backpressure window
+    let mut cluster = Cluster::empty(&cfg, ds.dim);
+    let session = IndexSession::attach(&InlineExecutor, &mut cluster, hasher, Some(ranker.clone()));
+    session.insert(ds);
+    for (qi, &p) in plans.iter().enumerate() {
+        session.submit_with(qs.get(qi), p);
+    }
+    let mut out: Vec<Option<(QueryOptions, Vec<(f32, u32)>)>> = vec![None; plans.len()];
+    for (t, o, h, _) in session.drain_full() {
+        out[t.0 as usize] = Some((o, h));
+    }
+    session.close();
+    out.into_iter().map(|x| x.expect("oracle query completed")).collect()
+}
+
+/// Stand up a front server over `exec` on a loopback listener, run
+/// `drive(addr)` on a spawned thread, and return the serve-loop stats
+/// plus drive's value. The server runs on the calling thread (the
+/// executor seam is borrowed). A `Shutdown` request is always sent after
+/// `drive` returns or panics, so `serve` cannot be left wedged; a drive
+/// panic resurfaces after the server exits.
+fn serve_with<T, F>(
+    exec: &dyn Executor,
+    cfg: &Config,
+    ds: &Dataset,
+    hasher: &ScalarHasher,
+    ranker: &Arc<dyn Ranker>,
+    drive: F,
+) -> (front::FrontStats, T)
+where
+    T: Send,
+    F: FnOnce(&str) -> T + Send,
+{
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let mut cluster = Cluster::empty(cfg, ds.dim);
+    let session = IndexSession::attach(exec, &mut cluster, hasher, Some(ranker.clone()));
+    session.insert(ds);
+    let (stats, out) = std::thread::scope(|s| {
+        let h = s.spawn(|| {
+            let out = catch_unwind(AssertUnwindSafe(|| drive(&addr)));
+            Client::connect(&addr)
+                .and_then(|c| c.shutdown_server())
+                .expect("shutdown request");
+            out
+        });
+        let stats = front::serve(listener, &session, cfg, ds.dim).expect("serve loop");
+        (stats, h.join().expect("drive thread"))
+    });
+    session.close();
+    let out = match out {
+        Ok(v) => v,
+        Err(p) => resume_unwind(p),
+    };
+    (stats, out)
+}
+
+/// The heterogeneous plan mix from the session tests: inherited and
+/// explicit `k`, probe budgets across the range, truncated table sets,
+/// every query tagged.
+fn mixed_plan(qi: usize) -> QueryOptions {
+    QueryOptions {
+        k: [0u32, 1, 3][qi % 3],
+        probes: [0u32, 1, 4, 12][qi % 4],
+        tables: [0u32, 2][qi % 2],
+        tag: 9000 + qi as u32,
+    }
+}
+
+// ------------------------------------------------ 64-client differential
+
+/// N concurrent clients, each pipelining its own slice of the query set
+/// under its own plans, must see results and option echoes bit-identical
+/// to the inline oracle — matched by qid, not arrival order.
+fn assert_front_matches_oracle(exec: &dyn Executor, cfg: &Config) {
+    const CLIENTS: usize = 64;
+    const PER: usize = 2;
+    let (ds, qs, hasher, ranker) = small_world(cfg, CLIENTS * PER);
+    let plans: Vec<QueryOptions> = (0..qs.len()).map(mixed_plan).collect();
+    let oracle = inline_oracle(cfg, &ds, &qs, &hasher, &ranker, &plans);
+
+    type ClientOut = anyhow::Result<Vec<(usize, front::Completed)>>;
+    let (stats, joined) = serve_with(exec, cfg, &ds, &hasher, &ranker, |addr: &str| {
+        let joined: Vec<std::thread::Result<ClientOut>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|ci| {
+                    let (qs, plans) = (&qs, &plans);
+                    s.spawn(move || -> ClientOut {
+                        let mut client = Client::connect(addr)?;
+                        client.set_read_timeout(Some(CLAIM_TIMEOUT))?;
+                        assert_eq!(client.dim(), qs.dim, "handshake dim");
+                        let mut sent = Vec::new();
+                        for j in 0..PER {
+                            let qi = ci * PER + j;
+                            sent.push((client.submit(qs.get(qi), plans[qi])?, qi));
+                        }
+                        let mut out = Vec::new();
+                        for _ in 0..PER {
+                            let c = client.recv()?;
+                            let &(_, qi) = sent
+                                .iter()
+                                .find(|&&(qid, _)| qid == c.qid)
+                                .expect("completion for an unknown qid");
+                            out.push((qi, c));
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        joined
+    });
+
+    let mut seen = 0usize;
+    for res in joined {
+        let claimed = res.expect("client thread panicked").expect("client ran clean");
+        for (qi, c) in claimed {
+            let (want_o, want_h) = &oracle[qi];
+            assert_eq!(&c.opts, want_o, "option echo diverged for query {qi}");
+            assert_eq!(&c.hits, want_h, "query {qi} diverged from the inline oracle");
+            assert_eq!(c.opts.tag, 9000 + qi as u32, "tag echo lost for query {qi}");
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, CLIENTS * PER, "not every query completed");
+    assert_eq!(stats.accepted, CLIENTS as u64 + 1, "64 clients + the stopper");
+    assert_eq!(stats.queries, (CLIENTS * PER) as u64);
+    assert_eq!(stats.completions, (CLIENTS * PER) as u64);
+    assert_eq!(stats.evictions, 0, "a clean run evicted someone");
+    assert_eq!(stats.refused, 0);
+}
+
+#[test]
+fn front_64_clients_match_inline_oracle_threaded() {
+    let cfg = front_cfg();
+    assert_front_matches_oracle(&ThreadedExecutor, &cfg);
+}
+
+#[test]
+fn front_64_clients_match_inline_oracle_socket() {
+    // Two-tier topology: the front event loop fans external clients into
+    // a session whose stages live in real worker processes.
+    let cfg = front_cfg();
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    assert_front_matches_oracle(net.executor(), &cfg);
+    net.shutdown().expect("clean worker shutdown");
+}
+
+// ------------------------------------------------------------- fairness
+
+#[test]
+fn flooding_client_does_not_starve_a_light_one() {
+    // The hog pipelines 48 queries into a pending_cap=4 window and does
+    // not claim anything until the light client is done. The light
+    // client's 5 queries must complete (within the read timeout — a
+    // starved client turns into a typed failure, not a hang) and both
+    // clients' results must match the oracle.
+    const HOG: usize = 48;
+    const LIGHT: usize = 5;
+    let mut cfg = front_cfg();
+    cfg.stream.pending_cap = 4;
+    let (ds, qs, hasher, ranker) = small_world(&cfg, HOG + LIGHT);
+    let plans: Vec<QueryOptions> = (0..HOG + LIGHT)
+        .map(|qi| QueryOptions { tag: 100 + qi as u32, ..Default::default() })
+        .collect();
+    let oracle = inline_oracle(&cfg, &ds, &qs, &hasher, &ranker, &plans);
+
+    let (stats, (hog_res, light_res)) =
+        serve_with(&ThreadedExecutor, &cfg, &ds, &hasher, &ranker, |addr: &str| {
+            // Two generations: (1) the hog's flood is in, (2) the light
+            // client is done. Waits sit outside every fallible section so
+            // an error on one side can never deadlock the other.
+            let gate = Barrier::new(2);
+            std::thread::scope(|s| {
+                let hog = s.spawn(|| -> anyhow::Result<Claimed> {
+                    let flood = || -> anyhow::Result<Client> {
+                        let mut c = Client::connect(addr)?;
+                        c.set_read_timeout(Some(CLAIM_TIMEOUT))?;
+                        for qi in 0..HOG {
+                            c.submit(qs.get(qi), plans[qi])?;
+                        }
+                        Ok(c)
+                    };
+                    let flooded = flood();
+                    gate.wait(); // flood is in; let the light client run
+                    gate.wait(); // light client finished
+                    let mut c = flooded?;
+                    let mut got = Vec::new();
+                    for _ in 0..HOG {
+                        let done = c.recv()?;
+                        got.push((done.qid as usize, done.hits));
+                    }
+                    Ok(got)
+                });
+                let light = s.spawn(|| -> anyhow::Result<Claimed> {
+                    gate.wait();
+                    let run = || -> anyhow::Result<Claimed> {
+                        let mut c = Client::connect(addr)?;
+                        c.set_read_timeout(Some(CLAIM_TIMEOUT))?;
+                        for qi in HOG..HOG + LIGHT {
+                            c.submit(qs.get(qi), plans[qi])?;
+                        }
+                        let mut got = Vec::new();
+                        for _ in 0..LIGHT {
+                            let done = c.recv()?;
+                            got.push((HOG + done.qid as usize, done.hits));
+                        }
+                        Ok(got)
+                    };
+                    let res = run();
+                    gate.wait();
+                    res
+                });
+                (hog.join().expect("hog thread"), light.join().expect("light thread"))
+            })
+        });
+
+    let light = light_res.expect("light client starved or failed");
+    assert_eq!(light.len(), LIGHT);
+    for (qi, hits) in &light {
+        assert_eq!(hits, &oracle[*qi].1, "light client query {qi} diverged");
+    }
+    let hog = hog_res.expect("hog client failed");
+    assert_eq!(hog.len(), HOG);
+    for (qi, hits) in &hog {
+        assert_eq!(hits, &oracle[*qi].1, "hog query {qi} diverged");
+    }
+    assert_eq!(stats.queries, (HOG + LIGHT) as u64);
+    assert_eq!(stats.completions, (HOG + LIGHT) as u64);
+    assert_eq!(stats.evictions, 0);
+}
+
+// -------------------------------------------------- disconnect mid-burst
+
+#[test]
+fn killed_client_mid_burst_is_evicted_and_survivors_stay_correct() {
+    // A floods 56 queries, claims 2, and drops its socket with dozens
+    // still parked/in flight. The server must evict it (logged, counted),
+    // reclaim its window share, drain the orphans, and keep answering B
+    // and C bit-identically to the oracle.
+    const FLOOD: usize = 56;
+    const SURV: usize = 10; // per survivor
+    let mut cfg = front_cfg();
+    cfg.stream.pending_cap = 4;
+    let (ds, qs, hasher, ranker) = small_world(&cfg, FLOOD + 2 * SURV);
+    let plans: Vec<QueryOptions> = (0..FLOOD + 2 * SURV).map(mixed_plan).collect();
+    let oracle = inline_oracle(&cfg, &ds, &qs, &hasher, &ranker, &plans);
+
+    let (stats, results) = serve_with(&ThreadedExecutor, &cfg, &ds, &hasher, &ranker, |addr: &str| {
+        let dead = Barrier::new(3); // A has dropped; survivors proceed
+        std::thread::scope(|s| {
+            let a = s.spawn(|| {
+                let burst = || -> anyhow::Result<Claimed> {
+                    let mut c = Client::connect(addr)?;
+                    c.set_read_timeout(Some(CLAIM_TIMEOUT))?;
+                    for qi in 0..FLOOD {
+                        c.submit(qs.get(qi), plans[qi])?;
+                    }
+                    // prove the burst is being served, then die mid-way
+                    let mut got = Vec::new();
+                    for _ in 0..2 {
+                        let done = c.recv()?;
+                        got.push((done.qid as usize, done.hits));
+                    }
+                    drop(c); // kill the socket with ~54 queries outstanding
+                    Ok(got)
+                };
+                let res = burst();
+                dead.wait();
+                res
+            });
+            let survivor = |base: usize| {
+                let (qs, plans, dead) = (&qs, &plans, &dead);
+                move || -> anyhow::Result<Claimed> {
+                    // a few queries while A is alive and flooding
+                    let warmup = || -> anyhow::Result<(Client, Claimed)> {
+                        let mut c = Client::connect(addr)?;
+                        c.set_read_timeout(Some(CLAIM_TIMEOUT))?;
+                        let mut got = Vec::new();
+                        for qi in base..base + 3 {
+                            c.submit(qs.get(qi), plans[qi])?;
+                            let done = c.recv()?;
+                            got.push((base + done.qid as usize, done.hits));
+                        }
+                        Ok((c, got))
+                    };
+                    let before = warmup();
+                    dead.wait(); // A is gone; the survivor keeps going
+                    let (mut c, mut got) = before?;
+                    for qi in base + 3..base + SURV {
+                        c.submit(qs.get(qi), plans[qi])?;
+                        let done = c.recv()?;
+                        got.push((base + done.qid as usize, done.hits));
+                    }
+                    Ok(got)
+                }
+            };
+            let b = s.spawn(survivor(FLOOD));
+            let c = s.spawn(survivor(FLOOD + SURV));
+            (
+                a.join().expect("client A"),
+                b.join().expect("client B"),
+                c.join().expect("client C"),
+            )
+        })
+    });
+
+    let (a_res, b_res, c_res) = results;
+    for got in [
+        a_res.expect("A's claimed prefix"),
+        b_res.expect("survivor B"),
+        c_res.expect("survivor C"),
+    ] {
+        for (qi, hits) in got {
+            assert_eq!(hits, oracle[qi].1, "query {qi} diverged around the eviction");
+        }
+    }
+    assert!(
+        stats.evictions >= 1,
+        "killing a client mid-burst was not recorded as an eviction: {stats:?}"
+    );
+    // A's 2 claims plus both survivors' full runs were delivered
+    assert!(stats.completions >= (2 + 2 * SURV) as u64, "{stats:?}");
+}
+
+// ------------------------------------------------------- hostile inputs
+
+/// Read frames off a raw socket until the typed `Stopped` goodbye
+/// arrives (skipping the server `Hello` and any late completions).
+fn read_goodbye(stream: &mut TcpStream) -> String {
+    stream.set_read_timeout(Some(CLAIM_TIMEOUT)).expect("set timeout");
+    loop {
+        match wire::read_frame(stream, 64 << 20) {
+            Ok(f) if f.kind == wire::FrameKind::Stopped => {
+                return wire::decode_stopped(&f.payload).expect("stopped payload")
+            }
+            Ok(_) => continue,
+            Err(e) => panic!("expected a typed Stopped goodbye, got: {e}"),
+        }
+    }
+}
+
+/// Complete a valid handshake on a raw socket; returns the stream.
+fn raw_handshake(addr: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(CLAIM_TIMEOUT)).expect("set timeout");
+    let f = wire::read_frame(&mut s, 64 << 20).expect("server hello");
+    assert_eq!(f.kind, wire::FrameKind::Hello);
+    let hello = wire::decode_hello(&f.payload).expect("decode hello");
+    let ok = wire::encode_frame(
+        wire::FrameKind::HelloOk,
+        &wire::encode_hello_ok(hello.node, hello.digest),
+    );
+    s.write_all(&ok).expect("send HelloOk");
+    s
+}
+
+/// A hand-built frame header: magic, version, kind, length. The crc
+/// stays zero — every case built with this is rejected before the
+/// checksum runs.
+fn raw_header(version: u8, kind: u8, len: u32) -> [u8; 12] {
+    let mut h = [0u8; 12];
+    h[0..2].copy_from_slice(&wire::MAGIC.to_le_bytes());
+    h[2] = version;
+    h[3] = kind;
+    h[4..8].copy_from_slice(&len.to_le_bytes());
+    h
+}
+
+#[test]
+fn hostile_frames_get_typed_rejections_and_the_server_keeps_serving() {
+    let cfg = front_cfg();
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 4);
+    let plans: Vec<QueryOptions> = (0..qs.len()).map(mixed_plan).collect();
+    let oracle = inline_oracle(&cfg, &ds, &qs, &hasher, &ranker, &plans);
+
+    let (stats, ()) = serve_with(&ThreadedExecutor, &cfg, &ds, &hasher, &ranker, |addr: &str| {
+        // (a) not our protocol at all
+        {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            s.write_all(b"GET /index HTTP/1.1\r\nHost: parlsh\r\n\r\n").expect("write");
+            let reason = read_goodbye(&mut s);
+            assert!(reason.contains("bad frame magic"), "got: {reason}");
+        }
+        // (b) right magic, wrong wire version (a v2 peer)
+        {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            s.write_all(&raw_header(2, 1, 0)).expect("write");
+            let reason = read_goodbye(&mut s);
+            assert!(reason.contains("wire version 2"), "got: {reason}");
+        }
+        // (c) valid codec, tampered handshake digest
+        {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            s.set_read_timeout(Some(CLAIM_TIMEOUT)).expect("set timeout");
+            let f = wire::read_frame(&mut s, 64 << 20).expect("server hello");
+            let hello = wire::decode_hello(&f.payload).expect("decode hello");
+            let ok = wire::encode_frame(
+                wire::FrameKind::HelloOk,
+                &wire::encode_hello_ok(hello.node, hello.digest ^ 1),
+            );
+            s.write_all(&ok).expect("send tampered HelloOk");
+            let reason = read_goodbye(&mut s);
+            assert!(reason.contains("handshake digest mismatch"), "got: {reason}");
+        }
+        // (d) oversized length prefix after a clean handshake: rejected
+        // from the header alone, before any payload is buffered
+        {
+            let mut s = raw_handshake(addr);
+            s.write_all(&raw_header(wire::WIRE_VERSION, 3, u32::MAX)).expect("write");
+            let reason = read_goodbye(&mut s);
+            assert!(reason.contains("exceeds cap"), "got: {reason}");
+        }
+        // (e) corrupted payload: checksum mismatch
+        {
+            let mut s = raw_handshake(addr);
+            let mut frame = wire::encode_frame(wire::FrameKind::Shutdown, b"x");
+            let last = frame.len() - 1;
+            frame[last] ^= 0xFF;
+            s.write_all(&frame).expect("write");
+            let reason = read_goodbye(&mut s);
+            assert!(reason.contains("checksum mismatch"), "got: {reason}");
+        }
+        // (f) truncated frame, then a vanished peer: no goodbye possible,
+        // but the connection must be cleaned up without wedging the loop
+        {
+            let mut s = raw_handshake(addr);
+            let frame = wire::stage_frame(
+                Dest { stage: StageKind::Qr, copy: 0 },
+                &Msg::QueryVec {
+                    qid: 0,
+                    raw: Vec::new().into(),
+                    v: qs.get(0).into(),
+                    opts: QueryOptions::default(),
+                },
+            );
+            s.write_all(&frame[..20]).expect("write prefix");
+            drop(s);
+        }
+        // After all of that, a well-behaved client still gets exact
+        // results with its option echoes.
+        {
+            let mut c = Client::connect(addr).expect("good client connect");
+            c.set_read_timeout(Some(CLAIM_TIMEOUT)).expect("set timeout");
+            let mut sent = Vec::new();
+            for qi in 0..qs.len() {
+                sent.push((c.submit(qs.get(qi), plans[qi]).expect("submit"), qi));
+            }
+            for _ in 0..qs.len() {
+                let done = c.recv().expect("completion");
+                let &(_, qi) =
+                    sent.iter().find(|&&(qid, _)| qid == done.qid).expect("known qid");
+                assert_eq!(done.opts, oracle[qi].0, "option echo diverged");
+                assert_eq!(done.hits, oracle[qi].1, "good client diverged after hostiles");
+            }
+        }
+    });
+
+    // a..e are typed evictions; the truncated case (f) is a plain
+    // disconnect with nothing admitted — cleaned up, not counted.
+    assert_eq!(stats.evictions, 5, "typed rejections miscounted: {stats:?}");
+    assert_eq!(stats.queries, 4);
+    assert_eq!(stats.completions, 4);
+    assert_eq!(stats.refused, 0);
+}
+
+// ------------------------------------------------------ admission limit
+
+#[test]
+fn accepts_over_max_conns_are_refused_with_a_typed_notice() {
+    let mut cfg = front_cfg();
+    cfg.front.max_conns = 2;
+    let (ds, _, hasher, ranker) = small_world(&cfg, 1);
+
+    let (stats, ()) = serve_with(&ThreadedExecutor, &cfg, &ds, &hasher, &ranker, |addr: &str| {
+        {
+            // two clients fill the table (receiving Hello proves the
+            // server registered them)
+            let _c1 = Client::connect(addr).expect("client 1");
+            let _c2 = Client::connect(addr).expect("client 2");
+            // the third is refused with a typed notice instead of a Hello
+            let mut s = TcpStream::connect(addr).expect("connect");
+            let reason = read_goodbye(&mut s);
+            assert!(reason.contains("front server full"), "got: {reason}");
+            // _c1/_c2 drop here: slots free on disconnect
+        }
+        // a new client (serve_with's stopper rides on this too) gets in
+        // once the server notices the disconnects
+        let deadline = Instant::now() + CLAIM_TIMEOUT;
+        loop {
+            match Client::connect(addr) {
+                Ok(_) => break,
+                Err(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20))
+                }
+                Err(e) => panic!("slot never freed after disconnect: {e}"),
+            }
+        }
+    });
+    // at least the typed refusal above; retry probes racing the server's
+    // EOF cleanup may have been refused a few more times
+    assert!(stats.refused >= 1, "{stats:?}");
+    // clients 1+2, the successful probe, and the stopper
+    assert_eq!(stats.accepted, 4);
+}
