@@ -35,6 +35,34 @@ impl ObjMapStrategy {
     }
 }
 
+/// Replica-selection strategy for query routing when `replication > 1`
+/// (DESIGN.md §Cluster topology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaRoute {
+    /// `qid mod live_replicas` — balanced, content-blind.
+    RoundRobin,
+    /// Hash of the query vector picks the replica (Bahmani et al.,
+    /// arXiv 1210.7057): repeated/near-identical queries pin to one
+    /// replica, concentrating its cache while others stay cold.
+    Layered,
+}
+
+impl ReplicaRoute {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "rr" | "round_robin" | "round-robin" => Ok(ReplicaRoute::RoundRobin),
+            "layered" | "entropy" => Ok(ReplicaRoute::Layered),
+            _ => Err(anyhow!("unknown replica_route `{s}` (rr|layered)")),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaRoute::RoundRobin => "rr",
+            ReplicaRoute::Layered => "layered",
+        }
+    }
+}
+
 /// Cluster topology (the paper's testbed shape).
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterConfig {
@@ -50,6 +78,11 @@ pub struct ClusterConfig {
     /// MPI-style). Multiplies copy counts by `cores_per_node` and removes
     /// intra-stage parallelism.
     pub per_core_copies: bool,
+    /// Full-shard replicas of every worker node (1 = no replication).
+    /// Writes fan to all replicas; query routing picks one live replica.
+    pub replication: usize,
+    /// How query traffic picks among live replicas.
+    pub replica_route: ReplicaRoute,
 }
 
 impl Default for ClusterConfig {
@@ -60,6 +93,8 @@ impl Default for ClusterConfig {
             cores_per_node: 16,
             ag_copies: 1,
             per_core_copies: false,
+            replication: 1,
+            replica_route: ReplicaRoute::RoundRobin,
         }
     }
 }
@@ -121,6 +156,18 @@ pub struct SocketConfig {
     /// A full queue blocks the connection's reader thread, so backpressure
     /// propagates to the TCP sender instead of growing an unbounded buffer.
     pub queue_frames: usize,
+    /// Static worker address table, comma-separated, one entry per slot
+    /// (`total_slots()` of them). Non-empty switches `NetSession` from
+    /// spawning loopback children to *discovering* out-of-band-started
+    /// `parlsh worker` processes at these addresses.
+    pub hosts: String,
+    /// Streaming-loop liveness probe interval, milliseconds. A replica
+    /// silent for 3 intervals while queries are in flight is marked dead.
+    pub heartbeat_ms: u64,
+    /// Directory for per-slot shard files (`slotNN.shard`). Non-empty
+    /// enables `persist_shards` and lets a restarted worker rejoin from
+    /// its file (`--shard`) instead of a live sibling's `StateDump`.
+    pub shard_dir: String,
 }
 
 impl Default for SocketConfig {
@@ -131,7 +178,21 @@ impl Default for SocketConfig {
             retry_ms: 25,
             max_frame_bytes: 64 << 20,
             queue_frames: 1024,
+            hosts: String::new(),
+            heartbeat_ms: 2000,
+            shard_dir: String::new(),
         }
+    }
+}
+
+impl SocketConfig {
+    /// The parsed `[net] hosts` table (empty = spawn loopback workers).
+    pub fn host_list(&self) -> Vec<String> {
+        self.hosts
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
     }
 }
 
@@ -265,6 +326,8 @@ impl Config {
             cores_per_node: doc.usize_or("cluster.cores_per_node", c.cluster.cores_per_node),
             ag_copies: doc.usize_or("cluster.ag_copies", c.cluster.ag_copies),
             per_core_copies: doc.bool_or("cluster.per_core_copies", false),
+            replication: doc.usize_or("cluster.replication", c.cluster.replication),
+            replica_route: ReplicaRoute::parse(&doc.str_or("cluster.replica_route", "rr"))?,
         };
         c.net = NetParams {
             latency_us: doc.f64_or("net.latency_us", c.net.latency_us),
@@ -276,6 +339,9 @@ impl Config {
             retry_ms: doc.usize_or("net.retry_ms", c.sock.retry_ms as usize) as u64,
             max_frame_bytes: doc.usize_or("net.max_frame_bytes", c.sock.max_frame_bytes),
             queue_frames: doc.usize_or("net.queue_frames", c.sock.queue_frames),
+            hosts: doc.str_or("net.hosts", &c.sock.hosts),
+            heartbeat_ms: doc.usize_or("net.heartbeat_ms", c.sock.heartbeat_ms as usize) as u64,
+            shard_dir: doc.str_or("net.shard_dir", &c.sock.shard_dir),
         };
         c.front = FrontConfig {
             max_conns: doc.usize_or("front.max_conns", c.front.max_conns),
@@ -304,6 +370,9 @@ impl Config {
             artifacts_dir: doc.str_or("runtime.artifacts_dir", &c.runtime.artifacts_dir),
             use_engine: doc.bool_or("runtime.use_engine", true),
         };
+        if c.cluster.replication == 0 {
+            return Err(anyhow!("cluster.replication must be >= 1"));
+        }
         if c.lsh.projections() > 256 {
             return Err(anyhow!(
                 "L*M = {} exceeds the artifact projection bank (256)",
@@ -426,5 +495,43 @@ mod tests {
     fn strategy_parse() {
         assert!(ObjMapStrategy::parse("nope").is_err());
         assert_eq!(ObjMapStrategy::parse("zorder").unwrap().name(), "zorder");
+    }
+
+    #[test]
+    fn cluster_replication_parses() {
+        let c = Config::default();
+        assert_eq!(c.cluster.replication, 1);
+        assert_eq!(c.cluster.replica_route, ReplicaRoute::RoundRobin);
+        let doc = Doc::parse(
+            "[cluster]\nreplication = 2\nreplica_route = \"layered\"\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.cluster.replication, 2);
+        assert_eq!(c.cluster.replica_route, ReplicaRoute::Layered);
+        // replication = 0 is meaningless: there would be no shard at all
+        let doc = Doc::parse("[cluster]\nreplication = 0\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+        assert!(ReplicaRoute::parse("nope").is_err());
+        assert_eq!(ReplicaRoute::parse("entropy").unwrap().name(), "layered");
+    }
+
+    #[test]
+    fn net_cluster_knobs_parse() {
+        let c = Config::default();
+        assert!(c.sock.host_list().is_empty());
+        assert_eq!(c.sock.heartbeat_ms, 2000);
+        assert!(c.sock.shard_dir.is_empty());
+        let doc = Doc::parse(
+            "[net]\nhosts = \"10.0.0.1:7500, 10.0.0.2:7500,10.0.0.1:7501\"\nheartbeat_ms = 250\nshard_dir = \"/tmp/shards\"\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(
+            c.sock.host_list(),
+            vec!["10.0.0.1:7500", "10.0.0.2:7500", "10.0.0.1:7501"]
+        );
+        assert_eq!(c.sock.heartbeat_ms, 250);
+        assert_eq!(c.sock.shard_dir, "/tmp/shards");
     }
 }

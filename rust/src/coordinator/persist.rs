@@ -12,12 +12,21 @@
 //! The hash family is *not* stored — it is deterministically resampled from
 //! the persisted `(dim, seed, params)`, which the loader verifies against
 //! the supplied [`Config`].
+//!
+//! A second, smaller format lives beside it: **worker shard files**
+//! ([`save_shard`]/[`load_shard`], magic `PLSD`), one worker slot's BI/DP
+//! state wrapped around the wire `StateDump` encoding and stamped with the
+//! session epoch + config digest. A restarted `parlsh worker --shard=PATH`
+//! reloads its file and announces the stamp in `HelloOk`; the driver fences
+//! stale epochs (DESIGN.md §Cluster topology). The whole body is covered by
+//! an FNV-1a checksum, so any corrupted byte is a typed rejection.
 
 use crate::config::Config;
 use crate::coordinator::Cluster;
 use crate::core::lsh::HashFamily;
 use crate::dataflow::metrics::TrafficMeter;
 use crate::dataflow::Placement;
+use crate::net::wire::{self, NodeState};
 use crate::partition::ObjMapper;
 use crate::stages::{AgState, BiState, DpState};
 use anyhow::{bail, Context, Result};
@@ -26,6 +35,9 @@ use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"PLSH";
 const VERSION: u32 = 1;
+
+const SHARD_MAGIC: &[u8; 4] = b"PLSD";
+const SHARD_VERSION: u32 = 1;
 
 fn w_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
     Ok(w.write_all(&v.to_le_bytes())?)
@@ -197,6 +209,75 @@ pub fn load(path: &str, cfg: &Config) -> Result<Cluster> {
     Ok(cluster)
 }
 
+// ----------------------------------------------------------- shard files
+
+/// Persist one worker slot's hosted stage copies as a shard file:
+///
+/// ```text
+/// magic "PLSD" | version u32 | crc u64 | epoch u64 | digest u64
+/// | wire state-dump bytes
+/// ```
+///
+/// `crc` is FNV-1a 64 over everything after itself, so a flipped byte
+/// anywhere — epoch, digest, or state — is rejected at load rather than
+/// replayed into a live session.
+pub fn save_shard(
+    path: &str,
+    epoch: u64,
+    digest: u64,
+    bis: &[BiState],
+    dps: &[DpState],
+) -> Result<()> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&epoch.to_le_bytes());
+    body.extend_from_slice(&digest.to_le_bytes());
+    body.extend_from_slice(&wire::encode_state_dump(bis, dps));
+    let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(SHARD_MAGIC)?;
+    w_u32(&mut w, SHARD_VERSION)?;
+    w_u64(&mut w, wire::fnv1a64(wire::FNV64_OFFSET, &body))?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a shard file, validating magic, version, checksum, and the config
+/// digest against `want_digest` (a shard written under different
+/// parameters must never be replayed). Returns the stamped epoch and the
+/// decoded per-copy state; the *epoch* is the caller's problem — the
+/// driver fences it at rejoin.
+pub fn load_shard(path: &str, want_digest: u64) -> Result<(u64, NodeState)> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {path}"))?;
+    if bytes.len() < 16 || &bytes[0..4] != SHARD_MAGIC {
+        bail!("{path}: not a parlsh shard");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != SHARD_VERSION {
+        bail!("{path}: unsupported shard version {version}");
+    }
+    let crc = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let body = &bytes[16..];
+    let want = wire::fnv1a64(wire::FNV64_OFFSET, body);
+    if crc != want {
+        bail!("{path}: shard checksum mismatch (got {crc:#018x}, want {want:#018x})");
+    }
+    if body.len() < 16 {
+        bail!("{path}: truncated shard header");
+    }
+    let epoch = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let digest = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    if digest != want_digest {
+        bail!(
+            "{path}: shard config digest {digest:#018x} does not match the \
+             session's {want_digest:#018x}"
+        );
+    }
+    let state = wire::decode_state_dump(&body[16..])
+        .with_context(|| format!("{path}: shard state dump"))?;
+    Ok((epoch, state))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +285,7 @@ mod tests {
     use crate::core::lsh::LshParams;
     use crate::data::synth::{distorted_queries, synthesize, SynthSpec};
     use crate::runtime::{ScalarHasher, ScalarRanker};
+    use crate::util::minitest::{check, Gen};
 
     fn tmp(name: &str) -> String {
         let dir = std::env::temp_dir().join("parlsh_persist");
@@ -263,5 +345,160 @@ mod tests {
         let path = tmp("garbage.plsh");
         std::fs::write(&path, b"not an index").unwrap();
         assert!(load(&path, &cfg()).is_err());
+    }
+
+    #[test]
+    fn watermark_survives_roundtrip_and_inserts_continue() {
+        // Property: for any dataset size, the loaded cluster's
+        // `indexed_objects` watermark equals the number of stored objects,
+        // and a post-load insert assigns fresh ids from there.
+        check("persist-watermark", 8, |g| {
+            let cfg = cfg();
+            let n = g.usize_in(40, 250);
+            let ds = synthesize(SynthSpec { n, dim: 24, clusters: 6, ..Default::default() });
+            let family = HashFamily::sample(ds.dim, cfg.lsh);
+            let hasher = ScalarHasher { family };
+            let built = build_index(&cfg, &ds, &hasher);
+            assert_eq!(built.indexed_objects, n as u32);
+
+            let path = tmp(&format!("watermark_{n}.plsh"));
+            let _ = std::fs::remove_file(&path);
+            save(&built, &path).unwrap();
+            let mut loaded = load(&path, &cfg).unwrap();
+            assert_eq!(loaded.indexed_objects, n as u32);
+            assert_eq!(loaded.stored_objects(), n);
+
+            let extra = synthesize(SynthSpec {
+                n: 7,
+                dim: 24,
+                clusters: 2,
+                seed: 99,
+                ..Default::default()
+            });
+            let ids = loaded.insert_objects(extra.as_flat(), 7, &hasher);
+            assert_eq!(ids, n as u32..n as u32 + 7);
+            assert_eq!(loaded.indexed_objects, n as u32 + 7);
+            assert_eq!(loaded.stored_objects(), n + 7);
+            let _ = std::fs::remove_file(&path);
+        });
+    }
+
+    #[test]
+    fn index_load_rejects_truncation_at_sampled_cuts() {
+        let cfg = cfg();
+        let ds = synthesize(SynthSpec { n: 60, dim: 8, clusters: 4, ..Default::default() });
+        let family = HashFamily::sample(ds.dim, cfg.lsh);
+        let hasher = ScalarHasher { family };
+        let built = build_index(&cfg, &ds, &hasher);
+        let path = tmp("truncate.plsh");
+        save(&built, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // the loader consumes the file exactly to its last byte, so every
+        // strict prefix must fail; sample cuts densely at the front (the
+        // header) and coarsely through the body
+        let cut_path = tmp("truncate_cut.plsh");
+        let mut cuts: Vec<usize> = (0..40.min(full.len())).collect();
+        cuts.extend((40..full.len()).step_by(97));
+        for cut in cuts {
+            std::fs::write(&cut_path, &full[..cut]).unwrap();
+            assert!(load(&cut_path, &cfg).is_err(), "prefix of {cut} bytes loaded");
+        }
+    }
+
+    fn rand_node_state(g: &mut Gen) -> (Vec<BiState>, Vec<DpState>) {
+        let dim = g.usize_in(2, 8);
+        let bis = (0..g.usize_in(0, 3))
+            .map(|copy| {
+                let mut bi = BiState::new(copy as u16, 1, 0);
+                for _ in 0..g.usize_in(0, 30) {
+                    bi.on_index_ref(
+                        g.rng.next_u64() % 50,
+                        g.usize_in(0, 1 << 16) as u32,
+                        g.usize_in(0, 7) as u16,
+                    );
+                }
+                bi
+            })
+            .collect();
+        let dps = (0..g.usize_in(0, 3))
+            .map(|copy| {
+                let mut dp = DpState::new(copy as u16, dim, 1, true);
+                for id in 0..g.usize_in(0, 20) as u32 {
+                    let v = g.vec_f32(dim, -1e4, 1e4);
+                    dp.on_store(id, &v);
+                }
+                dp
+            })
+            .collect();
+        (bis, dps)
+    }
+
+    #[test]
+    fn shard_roundtrip_preserves_per_copy_slices() {
+        // Property: a shard file reproduces each hosted copy's snapshot
+        // exactly — copy ids, bucket keys and per-bucket insertion order,
+        // object ids and vector bits — plus the epoch stamp.
+        check("persist-shard-roundtrip", 40, |g| {
+            let (bis, dps) = rand_node_state(g);
+            let epoch = g.rng.next_u64() % 1000;
+            let digest = g.rng.next_u64();
+            let path = tmp("slice.plsd");
+            save_shard(&path, epoch, digest, &bis, &dps).unwrap();
+            let (e2, st) = load_shard(&path, digest).unwrap();
+            assert_eq!(e2, epoch);
+            assert_eq!(st.bis.len(), bis.len());
+            for (bi, (copy, buckets)) in bis.iter().zip(&st.bis) {
+                assert_eq!(bi.copy, *copy);
+                let snap: Vec<(u64, Vec<(u32, u16)>)> = bi
+                    .buckets_snapshot()
+                    .into_iter()
+                    .map(|(k, refs)| (k, refs.clone()))
+                    .collect();
+                assert_eq!(&snap, buckets);
+            }
+            assert_eq!(st.dps.len(), dps.len());
+            for (dp, (copy, objs)) in dps.iter().zip(&st.dps) {
+                assert_eq!(dp.copy, *copy);
+                let snap: Vec<(u32, Vec<f32>)> = dp
+                    .objects_snapshot()
+                    .into_iter()
+                    .map(|(id, v)| (id, v.to_vec()))
+                    .collect();
+                assert_eq!(&snap, objs);
+            }
+        });
+    }
+
+    #[test]
+    fn shard_rejects_wrong_digest_and_any_corruption() {
+        let mut bi = BiState::new(0, 1, 0);
+        bi.on_index_ref(100, 1, 0);
+        bi.on_index_ref(7, 3, 1);
+        let mut dp = DpState::new(1, 3, 1, true);
+        dp.on_store(5, &[1.0, 2.0, 3.0]);
+        let path = tmp("fence.plsd");
+        save_shard(&path, 4, 0xABCD, &[bi], &[dp]).unwrap();
+
+        // the digest fences a shard written under other parameters
+        assert!(load_shard(&path, 0xABCE).is_err());
+        let (epoch, st) = load_shard(&path, 0xABCD).unwrap();
+        assert_eq!(epoch, 4);
+        assert_eq!(st.bis.len(), 1);
+        assert_eq!(st.dps.len(), 1);
+
+        // every single-byte corruption and every strict truncation is a
+        // typed rejection — the checksum covers epoch, digest, and state
+        let full = std::fs::read(&path).unwrap();
+        let bad_path = tmp("fence_bad.plsd");
+        for i in 0..full.len() {
+            let mut bad = full.clone();
+            bad[i] ^= 0x40;
+            std::fs::write(&bad_path, &bad).unwrap();
+            assert!(load_shard(&bad_path, 0xABCD).is_err(), "flip at byte {i} loaded");
+        }
+        for cut in 0..full.len() {
+            std::fs::write(&bad_path, &full[..cut]).unwrap();
+            assert!(load_shard(&bad_path, 0xABCD).is_err(), "prefix of {cut} bytes loaded");
+        }
     }
 }

@@ -133,6 +133,10 @@ pub struct SessionStats {
     /// Objects in the index (maintained by the coordinator, so it is
     /// correct even when the stores live in worker processes).
     pub objects_indexed: u64,
+    /// Queries cancelled and re-dispatched to a surviving replica after a
+    /// mid-stream worker death (socket transport with replication > 1;
+    /// always 0 elsewhere). Folded in at stream barriers.
+    pub queries_retargeted: u64,
 }
 
 // ---------------------------------------------------- owned stage handlers
@@ -211,6 +215,11 @@ impl StageHandler for SharedAg {
         let mut ag = self.ag.lock().unwrap_or_else(|p| p.into_inner());
         out.append(&mut ag.results);
     }
+
+    fn abort_query(&mut self, qid: u32) {
+        let mut ag = self.ag.lock().unwrap_or_else(|p| p.into_inner());
+        ag.abort_query(qid);
+    }
 }
 
 /// Take the sole remaining `Arc` handle apart to reclaim the state. The
@@ -272,6 +281,9 @@ struct Inner<'c> {
     head_work: WorkStats,
     search_meter: TrafficMeter,
     completed: u64,
+    /// Queries re-dispatched to a surviving replica after a mid-stream
+    /// worker death (socket transport; folded in at stream barriers).
+    retargeted: u64,
 }
 
 impl Inner<'_> {
@@ -400,6 +412,7 @@ impl<'s> IndexSession<'s> {
                 head_work: WorkStats::default(),
                 search_meter: TrafficMeter::new(agg),
                 completed: 0,
+                retargeted: 0,
             }),
         }
     }
@@ -501,6 +514,7 @@ impl<'s> IndexSession<'s> {
             }
         }
         inner.search_meter.merge(&report.meter);
+        inner.retargeted += report.retargeted;
         let qw = {
             let mut w = qr_work.lock().unwrap_or_else(|p| p.into_inner());
             std::mem::take(&mut *w)
@@ -916,6 +930,7 @@ impl<'s> IndexSession<'s> {
             queries_completed: inner.completed,
             queries_evicted: inner.evicted,
             objects_indexed: c.indexed_objects as u64,
+            queries_retargeted: inner.retargeted,
         }
     }
 

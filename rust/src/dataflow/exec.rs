@@ -75,6 +75,12 @@ pub trait StageHandler: Send {
     /// A query has fully completed downstream (DP drops its per-query
     /// dedup state). Delivered out-of-band; never metered.
     fn on_query_done(&mut self, _qid: u32) {}
+
+    /// A query was cancelled mid-flight (AG only: drop any partial
+    /// reduction state for `qid` so the id can be reused by a later run).
+    /// The socket stream loop calls this when a replica death retargets a
+    /// query to a fresh retry id.
+    fn abort_query(&mut self, _qid: u32) {}
 }
 
 /// IR bound to a hasher: consumes [`Msg::IndexBlock`] ingress items.
@@ -173,6 +179,10 @@ impl StageHandler for AgHandler<'_> {
 
     fn take_completions(&mut self, out: &mut Vec<QueryResult>) {
         out.append(&mut self.ag.results);
+    }
+
+    fn abort_query(&mut self, qid: u32) {
+        self.ag.abort_query(qid);
     }
 }
 
@@ -280,6 +290,9 @@ pub struct StreamReport {
     /// Remote per-copy work counters (socket transport; empty in-process —
     /// same contract as [`ExecReport::work`]).
     pub work: Vec<(StageKind, u16, WorkStats)>,
+    /// Queries re-dispatched to a surviving replica after their first
+    /// dispatch hit a dead worker (socket transport; 0 in-process).
+    pub retargeted: u64,
 }
 
 /// A long-lived streaming run: ingress is a channel (a submission enters
@@ -531,6 +544,7 @@ impl StreamRun for DrainStreamRun {
             unclaimed: self.done.into_iter().collect(),
             meter: self.meter,
             work: Vec::new(),
+            retargeted: 0,
         }
     }
 }
@@ -1081,7 +1095,7 @@ impl StreamRun for ThreadedStreamRun {
         while let Ok(c) = self.egress_rx.try_recv() {
             unclaimed.push(c);
         }
-        StreamReport { unclaimed, meter: join.meter, work: Vec::new() }
+        StreamReport { unclaimed, meter: join.meter, work: Vec::new(), retargeted: 0 }
     }
 }
 
@@ -1224,6 +1238,7 @@ mod tests {
             ag_copies: 1,
             bi_nodes: 1,
             dp_nodes: 1,
+            replication: 1,
             head_node: 2,
         }
     }

@@ -42,24 +42,33 @@ pub struct Placement {
     pub ag_copies: usize,
     pub bi_nodes: usize,
     pub dp_nodes: usize,
-    /// Node id of the head node (IR/QR/AG).
+    /// Full-shard replicas of every worker node (1 = no replication).
+    /// Each *logical* node then occupies `replication` worker *slots*;
+    /// slot `r * n_logical + node` is replica `r` of `node`, so `node_of`
+    /// doubles as the slot id of replica 0.
+    pub replication: usize,
+    /// Node id of the head node (IR/QR/AG) — one past the last worker
+    /// slot, i.e. `total_slots()`.
     pub head_node: u16,
 }
 
 impl Placement {
     pub fn new(cluster: &crate::config::ClusterConfig) -> Placement {
+        let replication = cluster.replication.max(1);
         Placement {
             bi_copies: cluster.bi_copies(),
             dp_copies: cluster.dp_copies(),
             ag_copies: cluster.ag_copies,
             bi_nodes: cluster.bi_nodes,
             dp_nodes: cluster.dp_nodes,
-            head_node: (cluster.bi_nodes + cluster.dp_nodes) as u16,
+            replication,
+            head_node: ((cluster.bi_nodes + cluster.dp_nodes) * replication) as u16,
         }
     }
 
     /// Node hosting a stage copy. Copies are striped across their stage's
     /// nodes so per-core mode packs `cores_per_node` copies on each node.
+    /// With replication this is the *logical* node — also replica 0's slot.
     pub fn node_of(&self, stage: StageKind, copy: u16) -> u16 {
         match stage {
             StageKind::Bi => (copy as usize % self.bi_nodes) as u16,
@@ -68,8 +77,36 @@ impl Placement {
         }
     }
 
+    /// Logical worker nodes (ignoring replication).
+    pub fn n_logical(&self) -> usize {
+        self.bi_nodes + self.dp_nodes
+    }
+
+    /// Worker slots: every replica of every logical node is one slot
+    /// (one `parlsh worker` process). Slot layout is replica-major so
+    /// replication = 1 degenerates to slot == node, bit-identical to the
+    /// unreplicated topology.
+    pub fn total_slots(&self) -> usize {
+        self.n_logical() * self.replication
+    }
+
+    /// The slot hosting replica `r` of logical node `node`.
+    pub fn slot_of(&self, node: u16, r: usize) -> u16 {
+        (r * self.n_logical() + node as usize) as u16
+    }
+
+    /// The logical node a slot replicates.
+    pub fn node_of_slot(&self, slot: u16) -> u16 {
+        (slot as usize % self.n_logical()) as u16
+    }
+
+    /// Which replica of its logical node a slot is.
+    pub fn replica_of_slot(&self, slot: u16) -> usize {
+        slot as usize / self.n_logical()
+    }
+
     pub fn total_nodes(&self) -> usize {
-        self.bi_nodes + self.dp_nodes + 1
+        self.total_slots() + 1
     }
 }
 
@@ -101,5 +138,36 @@ mod tests {
         assert_eq!(p.node_of(StageKind::Bi, 10), 0);
         assert_eq!(p.node_of(StageKind::Dp, 40), 10);
         assert_eq!(p.total_nodes(), 51);
+    }
+
+    #[test]
+    fn replica_major_slot_layout() {
+        let mut c = ClusterConfig::default();
+        c.bi_nodes = 2;
+        c.dp_nodes = 3;
+        c.replication = 2;
+        let p = Placement::new(&c);
+        assert_eq!(p.n_logical(), 5);
+        assert_eq!(p.total_slots(), 10);
+        assert_eq!(p.head_node, 10);
+        assert_eq!(p.total_nodes(), 11);
+        // replica 0's slot is the logical node itself
+        for node in 0..5u16 {
+            assert_eq!(p.slot_of(node, 0), node);
+            assert_eq!(p.slot_of(node, 1), node + 5);
+        }
+        for slot in 0..10u16 {
+            assert_eq!(p.node_of_slot(slot), slot % 5);
+            assert_eq!(p.replica_of_slot(slot), (slot / 5) as usize);
+            assert_eq!(p.slot_of(p.node_of_slot(slot), p.replica_of_slot(slot)), slot);
+        }
+        // node_of is untouched by replication: still the logical node
+        assert_eq!(p.node_of(StageKind::Dp, 0), 2);
+        // replication = 1 degenerates exactly to the unreplicated layout
+        c.replication = 1;
+        let p1 = Placement::new(&c);
+        assert_eq!(p1.total_slots(), 5);
+        assert_eq!(p1.head_node, 5);
+        assert_eq!(p1.total_nodes(), 6);
     }
 }

@@ -668,10 +668,94 @@ pub fn net_comparison() -> anyhow::Result<(Table, String)> {
             format!("{recall:.3}"),
         ]);
     }
+    // Replicated, self-healing fleet (DESIGN.md §Cluster topology): the
+    // same workload with `cluster.replication = 2` (6 worker slots), one
+    // replica killed mid-stream, per replica-routing strategy. Measures
+    // completed/retargeted queries, whether the dead slot rejoined, the
+    // per-replica driver->worker wire bytes (how the route spread query
+    // traffic before and after the kill), and recall — which must not
+    // care that a replica died.
+    use crate::config::ReplicaRoute;
+    use crate::coordinator::session::IndexSession;
+    let mut rep_table = Table::new(&[
+        "replica_route",
+        "replicas",
+        "completed",
+        "retargeted",
+        "rejoined",
+        "wire MB (tcp)",
+        "recall",
+    ]);
+    let mut rep_json: Vec<String> = Vec::new();
+    cfg.stream.obj_map = ObjMapStrategy::Mod;
+    cfg.cluster.replication = 2;
+    for route in [ReplicaRoute::RoundRobin, ReplicaRoute::Layered] {
+        cfg.cluster.replica_route = route;
+        let sess = NetSession::launch(&cfg, w.data.dim)?;
+        let mut cluster = build_index_on(sess.executor(), &cfg, &w.data, b.hasher.as_ref());
+        let head = cluster.placement.head_node;
+        let n_slots = cluster.placement.total_slots();
+        let (retrieved, stats) = {
+            let session = IndexSession::attach(
+                sess.executor(),
+                &mut cluster,
+                b.hasher.as_ref(),
+                Some(b.ranker.clone()),
+            );
+            let half = w.queries.len() / 2;
+            for qi in 0..half {
+                session.submit(w.queries.get(qi));
+            }
+            // One replica of logical node 1 dies mid-stream; its sibling
+            // slot absorbs the retargeted queries.
+            sess.kill_worker(1)?;
+            for qi in half..w.queries.len() {
+                session.submit(w.queries.get(qi));
+            }
+            let mut retrieved: Vec<Vec<u32>> = vec![Vec::new(); w.queries.len()];
+            for (t, hits) in session.drain() {
+                retrieved[t.0 as usize] = hits.into_iter().map(|(_, id)| id).collect();
+            }
+            (retrieved, session.close())
+        };
+        let rejoined = sess.heal_worker(1).is_ok();
+        let recall = recall_at_k(&retrieved, &w.gt);
+        let per_slot: Vec<u64> = (0..n_slots as u16)
+            .map(|slot| stats.search_meter.links().get(&(head, slot)).map_or(0, |l| l.bytes))
+            .collect();
+        println!("per-replica driver->worker wire bytes, search phase ({}):", route.name());
+        for (slot, bytes) in per_slot.iter().enumerate() {
+            println!("  slot {slot}: {bytes} bytes");
+        }
+        rep_json.push(format!(
+            "\"{}\":{{\"replicas\":2,\"completed\":{},\"retargeted\":{},\"rejoined\":{},\"wire_bytes\":{},\"per_slot_bytes\":[{}],\"recall\":{:.4}}}",
+            route.name(),
+            stats.queries_completed,
+            stats.queries_retargeted,
+            rejoined,
+            stats.search_meter.total_bytes(),
+            per_slot.iter().map(u64::to_string).collect::<Vec<_>>().join(","),
+            recall
+        ));
+        rep_table.row(&[
+            route.name().to_string(),
+            "2".to_string(),
+            format!("{}", stats.queries_completed),
+            format!("{}", stats.queries_retargeted),
+            format!("{rejoined}"),
+            format!("{:.3}", stats.search_meter.total_bytes() as f64 / 1e6),
+            format!("{recall:.3}"),
+        ]);
+        sess.shutdown()?;
+    }
+    println!("== Replication: kill one replica mid-stream, per routing strategy ==");
+    rep_table.print();
     let json = format!(
-        "{{\"experiment\":\"net\",\"table\":{},\"strategies\":{{{}}}}}\n",
+        "{{\"experiment\":\"net\",\"table\":{},\"strategies\":{{{}}},\"replication\":{{\"table\":{},{}}}}}\n",
         table.to_json(),
-        strategies_json.join(",")
+        strategies_json.join(","),
+        rep_table.to_json(),
+        rep_json.join(",")
     );
     Ok((table, json))
 }

@@ -78,9 +78,24 @@ USAGE:
                                      back to the synthetic workload; results
                                      print as tickets complete
   parlsh serve --net [--set ...]     same session over the socket executor:
-                                     one OS process per BI/DP node on
-                                     loopback TCP (keep
-                                     cluster.{bi,dp}_nodes small!)
+                                     one OS process per worker slot (BI/DP
+                                     nodes x cluster.replication) on
+                                     loopback TCP (keep the fleet small!).
+                                     cluster.replication=R keeps R live
+                                     copies of every shard: queries route
+                                     to one replica (cluster.replica_route
+                                     = round_robin | layered), a replica
+                                     death mid-stream retargets its
+                                     in-flight queries to survivors, and a
+                                     restarted worker rejoins mid-session
+                                     (epoch-fenced, shard reload or live
+                                     sibling restore; net.heartbeat_ms
+                                     tunes detection, net.shard_dir
+                                     enables shard persistence)
+  parlsh serve --net --hosts=A,B,..  discovery mode: don't spawn; dial one
+                                     out-of-band `parlsh worker --join`
+                                     process per slot at these addresses
+                                     (shorthand for --set net.hosts=...)
   parlsh serve --listen[=ADDR] [--net]
                                      TCP front door: external clients
                                      multiplex onto the ONE resident
@@ -106,9 +121,16 @@ USAGE:
                                      synthetic queries (--seed=S);
                                      --shutdown asks the server to drain
                                      and exit cleanly afterwards
-  parlsh worker --listen=ADDR        host a node's stage copies (spawned
-                                     by the socket driver; prints
-                                     `PARLSH_WORKER_LISTEN <addr>`)
+  parlsh worker --listen=ADDR        host a worker slot's stage copies
+               [--shard=FILE]        (spawned by the socket driver; always
+                                     prints the OS-resolved bound address
+                                     as `PARLSH_WORKER_LISTEN <addr>`, so
+                                     port-0 binds work; --shard reloads a
+                                     persisted PLSD shard so a restarted
+                                     worker can rejoin mid-session)
+  parlsh worker --join=ADDR          same, started out of band: bind ADDR
+                                     and wait to be discovered by a driver
+                                     whose `[net] hosts` table lists it
   parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|probes|net|streaming|front|history|all>
                                      (`executors`/`net`/`streaming`/`front`
                                      also write BENCH_*.json and archive
@@ -231,7 +253,13 @@ fn cmd_search(args: &Args) -> Result<()> {
 /// stdin, or falling back to the synthetic workload — and results print as
 /// their tickets complete.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = Config::load(args)?;
+    let mut cfg = Config::load(args)?;
+    // --hosts=A,B,... is shorthand for --set net.hosts=A,B,... — one
+    // address per worker slot, switching --net from spawning loopback
+    // children to discovering out-of-band `parlsh worker --join` peers.
+    if let Some(hosts) = args.opt("hosts") {
+        cfg.sock.hosts = hosts.to_string();
+    }
     let w = exp::world(&cfg);
     let b = exp::backends(&cfg, w.data.dim);
     // --listen=ADDR (or bare --listen for the config `[net] listen`
@@ -243,18 +271,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
+    if !cfg.sock.hosts.is_empty() && !args.has_flag("net") {
+        bail!("[net] hosts / --hosts names a worker fleet: add --net");
+    }
     if args.has_flag("net") {
-        let n_workers = cfg.cluster.bi_nodes + cfg.cluster.dp_nodes;
-        println!(
-            "spawning {n_workers} `parlsh worker` processes on loopback (+ this driver as head node)"
-        );
+        let n_slots =
+            (cfg.cluster.bi_nodes + cfg.cluster.dp_nodes) * cfg.cluster.replication.max(1);
+        if cfg.sock.hosts.is_empty() {
+            println!(
+                "spawning {n_slots} `parlsh worker` processes on loopback (+ this driver as head node)"
+            );
+        } else {
+            println!("discovering {n_slots} workers at [net] hosts (+ this driver as head node)");
+        }
         let net = NetSession::launch(&cfg, w.data.dim)?;
         match &listen {
             Some(addr) => serve_front(net.executor(), &cfg, &w, &b, addr, "socket")?,
             None => serve_session(net.executor(), &cfg, &w, &b, args, "socket")?,
         }
         net.shutdown()?;
-        println!("all {n_workers} workers exited cleanly");
+        println!("all {n_slots} workers exited cleanly");
         Ok(())
     } else {
         match &listen {

@@ -1,0 +1,170 @@
+//! Membership + epoch bookkeeping for the replicated worker topology.
+//!
+//! The driver owns one [`ClusterState`] per `NetSession`. The stream loop
+//! marks replicas dead when their connection drops or their heartbeat goes
+//! silent; `NetSession::heal_worker` marks them live again after a
+//! successful rejoin handshake. Workers hold their own *local* copy of the
+//! live mask, refreshed by `Membership` frames, so worker→worker
+//! `CandidateReq` routing agrees with the driver's.
+//!
+//! The **epoch** counts completed write phases (index build blocks and
+//! object inserts). A worker rejoining mid-session presents the epoch of
+//! the shard it reloaded; anything but "exactly current" or "empty, please
+//! restore me" is fenced with a typed [`WireError`] so a stale or hostile
+//! process can never serve old data into a live stream.
+
+use crate::dataflow::Placement;
+use crate::net::wire::WireError;
+
+/// How a validated rejoiner gets its shard back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejoinPath {
+    /// The worker reloaded a shard at exactly the current epoch (from its
+    /// `--shard` file) — nothing to transfer.
+    FastPath,
+    /// The worker is empty (epoch 0 of a session that has advanced): the
+    /// driver pulls a `StateDump` from a live sibling replica and replays
+    /// it into the rejoiner via a `Restore` frame.
+    NeedsRestore,
+}
+
+/// Validate a (re)joining worker's handshake against the session.
+///
+/// `got_digest`/`got_epoch` are what the worker announced in `HelloOk`;
+/// `want_digest`/`cur_epoch` are the session's. The special case
+/// `cur_epoch == 0` (nothing written yet) admits only empty workers —
+/// a non-zero shard epoch against a fresh session is as stale as an old
+/// one against an advanced session.
+pub fn validate_join(
+    want_digest: u64,
+    cur_epoch: u64,
+    got_digest: u64,
+    got_epoch: u64,
+) -> Result<RejoinPath, WireError> {
+    if got_digest != want_digest {
+        return Err(WireError::DigestMismatch { got: got_digest, want: want_digest });
+    }
+    if got_epoch == cur_epoch {
+        return Ok(RejoinPath::FastPath);
+    }
+    if got_epoch == 0 {
+        return Ok(RejoinPath::NeedsRestore);
+    }
+    Err(WireError::EpochFenced { got: got_epoch, want: cur_epoch })
+}
+
+/// Live/dead/address table for every worker slot, plus the session epoch.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    /// Completed write phases (builds + inserts).
+    pub epoch: u64,
+    /// Liveness per slot (`Placement::total_slots()` entries).
+    pub live: Vec<bool>,
+    /// Announced listen address per slot (workers dial these for
+    /// worker→worker hops; refreshed on rejoin — a respawned worker gets
+    /// a new OS-assigned port).
+    pub addrs: Vec<String>,
+}
+
+impl ClusterState {
+    pub fn new(addrs: Vec<String>) -> ClusterState {
+        ClusterState { epoch: 0, live: vec![true; addrs.len()], addrs }
+    }
+
+    pub fn mark_dead(&mut self, slot: u16) {
+        self.live[slot as usize] = false;
+    }
+
+    pub fn mark_live(&mut self, slot: u16, addr: String) {
+        self.live[slot as usize] = true;
+        self.addrs[slot as usize] = addr;
+    }
+
+    /// Live slots replicating a logical node, ascending by slot id. The
+    /// ordering matters: every router must see the same list.
+    pub fn live_slots_of(&self, placement: &Placement, node: u16) -> Vec<u16> {
+        (0..placement.replication)
+            .map(|r| placement.slot_of(node, r))
+            .filter(|&s| self.live[s as usize])
+            .collect()
+    }
+
+    /// Does any replica of this logical node survive?
+    pub fn node_has_live(&self, placement: &Placement, node: u16) -> bool {
+        (0..placement.replication).any(|r| self.live[placement.slot_of(node, r) as usize])
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn n_dead(&self) -> usize {
+        self.live.len() - self.n_live()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn placement() -> Placement {
+        Placement::new(&ClusterConfig {
+            bi_nodes: 1,
+            dp_nodes: 2,
+            replication: 2,
+            ..Default::default()
+        })
+    }
+
+    fn state(p: &Placement) -> ClusterState {
+        ClusterState::new((0..p.total_slots()).map(|s| format!("127.0.0.1:{}", 7500 + s)).collect())
+    }
+
+    #[test]
+    fn liveness_tracks_replicas_per_logical_node() {
+        let p = placement();
+        let mut cs = state(&p);
+        assert_eq!(cs.n_live(), 6);
+        assert_eq!(cs.live_slots_of(&p, 1), vec![1, 4]);
+
+        cs.mark_dead(4);
+        assert_eq!(cs.live_slots_of(&p, 1), vec![1]);
+        assert!(cs.node_has_live(&p, 1));
+        assert_eq!(cs.n_dead(), 1);
+
+        cs.mark_dead(1);
+        assert!(cs.live_slots_of(&p, 1).is_empty());
+        assert!(!cs.node_has_live(&p, 1));
+        // other logical nodes are untouched
+        assert!(cs.node_has_live(&p, 0));
+        assert!(cs.node_has_live(&p, 2));
+
+        // rejoin with a fresh OS-assigned address
+        cs.mark_live(4, "127.0.0.1:9999".into());
+        assert_eq!(cs.live_slots_of(&p, 1), vec![4]);
+        assert_eq!(cs.addrs[4], "127.0.0.1:9999");
+    }
+
+    #[test]
+    fn join_validation_fences_digest_and_epoch() {
+        // exact epoch match: fast path (covers the fresh-empty handshake
+        // 0 == 0 and a shard reloaded at the current epoch)
+        assert!(matches!(validate_join(7, 0, 7, 0), Ok(RejoinPath::FastPath)));
+        assert!(matches!(validate_join(7, 3, 7, 3), Ok(RejoinPath::FastPath)));
+        // empty worker against an advanced session: restore
+        assert!(matches!(validate_join(7, 3, 7, 0), Ok(RejoinPath::NeedsRestore)));
+        // stale shard: fenced, typed
+        match validate_join(7, 3, 7, 2) {
+            Err(WireError::EpochFenced { got: 2, want: 3 }) => {}
+            other => panic!("want EpochFenced, got {other:?}"),
+        }
+        // future epoch (a shard from some other session's timeline): fenced
+        assert!(matches!(validate_join(7, 3, 7, 9), Err(WireError::EpochFenced { .. })));
+        // wrong config digest beats everything else
+        match validate_join(7, 3, 8, 3) {
+            Err(WireError::DigestMismatch { got: 8, want: 7 }) => {}
+            other => panic!("want DigestMismatch, got {other:?}"),
+        }
+    }
+}

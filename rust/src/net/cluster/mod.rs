@@ -1,0 +1,23 @@
+//! Replicated, self-healing worker topology (DESIGN.md §Cluster topology).
+//!
+//! Three concerns, deliberately separated from the driver's event loop:
+//!
+//! * [`membership`] — the live/dead/address table shared by the driver and
+//!   the stream loop, the session epoch (a count of completed write
+//!   phases), and the join-validation rule that fences a rejoining worker
+//!   by config digest and epoch;
+//! * [`replica`] — deterministic replica selection. Every sender routing a
+//!   `CandidateReq` for the same query must pick the *same* replica (the
+//!   DP dedup state for a query lives on exactly one replica per logical
+//!   node), so selection is a pure function of the routing strategy, the
+//!   live-slot set, and the query — never of per-connection state.
+//!
+//! The slot layout itself lives on [`crate::dataflow::Placement`]
+//! (replica-major: slot `r * n_logical + node`), so replication = 1
+//! degenerates to the unreplicated topology bit-for-bit.
+
+pub mod membership;
+pub mod replica;
+
+pub use membership::{validate_join, ClusterState, RejoinPath};
+pub use replica::pick_slot;

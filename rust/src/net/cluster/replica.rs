@@ -1,0 +1,81 @@
+//! Deterministic replica selection for query-path routing.
+//!
+//! Per-query messages (`QueryVec` fan-out, `CandidateReq` BI→DP hops,
+//! `Done` cleanup) must land on exactly one replica per logical node, and
+//! *every* sender — the driver and any worker slot — must pick the same
+//! one: DP dedup state for a query is built on the chosen replica only.
+//! So selection is a pure function of `(strategy, live slots, query)`,
+//! with the live-slot list in ascending slot order (the one canonical
+//! order every `ClusterState`/local live mask produces).
+//!
+//! Two strategies (`cluster.replica_route`):
+//!
+//! * **round-robin** — `qid mod live`: balanced and content-blind.
+//! * **layered/entropy** (Bahmani et al., arXiv 1210.7057) — an FNV-1a
+//!   hash of the query vector's bit pattern picks the replica. Identical
+//!   and near-identical (re-submitted) queries pin to one replica, which
+//!   is where layered LSH wins network/cache locality; `experiment net`
+//!   measures the real-bytes difference per strategy.
+
+use crate::config::ReplicaRoute;
+use crate::net::wire::{fnv1a64, FNV64_OFFSET};
+
+/// Pick the slot that serves this query on its logical node.
+///
+/// `live` is the node's live replica slots, ascending (from
+/// `ClusterState::live_slots_of` or a worker's local mask). Panics on an
+/// empty list — callers must degrade the query (retarget or fail the
+/// stream) *before* routing at a node with no survivors.
+pub fn pick_slot(route: ReplicaRoute, live: &[u16], qid: u32, v: &[f32]) -> u16 {
+    assert!(!live.is_empty(), "routing with no live replicas");
+    match route {
+        ReplicaRoute::RoundRobin => live[qid as usize % live.len()],
+        ReplicaRoute::Layered => {
+            let mut bytes = Vec::with_capacity(v.len() * 4);
+            for x in v {
+                bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            live[(fnv1a64(FNV64_OFFSET, &bytes) % live.len() as u64) as usize]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_live_slots() {
+        let live = vec![2u16, 5, 8];
+        let v = [0.5f32; 4];
+        let picks: Vec<u16> = (0..6).map(|q| pick_slot(ReplicaRoute::RoundRobin, &live, q, &v)).collect();
+        assert_eq!(picks, vec![2, 5, 8, 2, 5, 8]);
+        // shrinking the live set reroutes deterministically
+        assert_eq!(pick_slot(ReplicaRoute::RoundRobin, &[5], 1, &v), 5);
+    }
+
+    #[test]
+    fn layered_is_content_addressed() {
+        let live = vec![1u16, 4];
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 3.5];
+        // same vector, any qid → same replica (that's the pinning property)
+        let pa = pick_slot(ReplicaRoute::Layered, &live, 0, &a);
+        assert_eq!(pa, pick_slot(ReplicaRoute::Layered, &live, 99, &a));
+        assert!(live.contains(&pa));
+        assert!(live.contains(&pick_slot(ReplicaRoute::Layered, &live, 0, &b)));
+        // over many distinct vectors both replicas get traffic
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..32 {
+            let v = [i as f32, (i * 7) as f32];
+            seen.insert(pick_slot(ReplicaRoute::Layered, &live, 0, &v));
+        }
+        assert_eq!(seen.len(), 2, "layered routing never spread across replicas");
+    }
+
+    #[test]
+    #[should_panic(expected = "no live replicas")]
+    fn empty_live_set_is_a_caller_bug() {
+        pick_slot(ReplicaRoute::RoundRobin, &[], 0, &[]);
+    }
+}

@@ -74,8 +74,32 @@
 //! the sender's meter, and worker meters come back in `FlushAck` barriers
 //! at phase end, so `ExecReport::meter` holds measured per-link TCP bytes,
 //! not the `wire_size` model.
+//!
+//! **Cluster topology (DESIGN.md §Cluster topology).** PR 8 grows the
+//! flat fleet into a replicated, self-healing one. Placement is
+//! replica-major: `cluster.replication` copies of every BI/DP node, one
+//! worker *slot* each. Membership is either *spawned* (loopback children,
+//! OS-assigned ports announced on stdout — no fixed-port assumption) or
+//! *discovery* via `[net] hosts` (workers started out of band with
+//! `parlsh worker --join`, the session dials them). The shared
+//! [`ClusterState`] table (slot liveness + addresses + session epoch)
+//! feeds both the phase loop and the stream loop through [`ClusterCtl`]:
+//! writes fan to every live replica (and refuse to run degraded), queries
+//! route to exactly one live replica per logical node
+//! ([`pick_slot`] — round-robin or layered/entropy-aware). Failure
+//! detection is layered: broken pipes fail fast, and a heartbeat
+//! (`net.heartbeat_ms` Pings, [`HEARTBEAT_MISSES`] strikes) catches
+//! silent deaths mid-stream. A dead replica's in-flight queries are
+//! cancelled and retargeted to survivors with fresh qids ≥
+//! [`RETRY_BASE`]; the membership update is broadcast *before* the
+//! retries are re-admitted so every sender routes them identically. A
+//! restarted worker rejoins mid-session through [`NetSession::heal_worker`]
+//! — epoch-fenced by [`validate_join`] (stale shards and wrong configs
+//! get a typed [`crate::net::wire::WireError`] rejection), reloading
+//! state from its persisted shard (fast path) or from a live sibling
+//! replica via a `Restore` replay.
 
-use crate::config::Config;
+use crate::config::{Config, ReplicaRoute, SocketConfig};
 use crate::dataflow::exec::{
     ExecReport, Executor, GateGuard, StageHandler, StageHandlers, StreamCompletion,
     StreamConfig, StreamGate, StreamReport, StreamRun, Workload,
@@ -83,11 +107,12 @@ use crate::dataflow::exec::{
 use crate::dataflow::message::{Dest, Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
+use crate::net::cluster::{pick_slot, validate_join, ClusterState, RejoinPath};
 use crate::net::peer::{connect_retry, PeerConn};
 use crate::net::wire::{self, FrameKind, Hello, NodeState};
 use crate::stages::aggregator::QueryResult;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader};
 use std::net::TcpStream;
 use std::path::Path;
@@ -105,12 +130,21 @@ const EV_FULL_TICK: Duration = Duration::from_micros(200);
 const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
 /// How long a phase may sit with no event at all before we call it wedged.
 const PHASE_STALL_TIMEOUT: Duration = Duration::from_secs(120);
+/// Heartbeat intervals of silence from a live slot before it is declared
+/// dead. Any event from the slot (Pong, stage traffic, acks) resets the
+/// clock, so only a truly unresponsive process crosses this.
+const HEARTBEAT_MISSES: u32 = 3;
+/// Retried (retargeted) queries get fresh qids from here up, far above
+/// any workload's dense 0..n range: the AG copies see every attempt as a
+/// distinct query (their duplicate-qid assertions never fire), and the
+/// stream can map the retry back to the original id at completion.
+const RETRY_BASE: u32 = 0x8000_0000;
 
 /// Events the per-worker reader threads feed the driver. `Ingress` and
 /// `Finish` come from a streaming run's handle instead of a socket — one
 /// unified channel stands in for a select over submissions + wire events.
 enum DriverEv {
-    HelloOk { from: u16, node: u16, digest: u64 },
+    HelloOk { from: u16, node: u16, digest: u64, epoch: u64 },
     Msg { from: u16, dest: Dest, msg: Msg },
     FlushAck {
         from: u16,
@@ -121,10 +155,125 @@ enum DriverEv {
     State { from: u16, state: NodeState },
     Stopped { from: u16, reason: String },
     Closed { from: u16, err: String },
+    /// Heartbeat reply (carries the worker's current epoch).
+    Pong { from: u16, epoch: u64 },
+    /// A healed worker finished replaying a `Restore` dump.
+    RestoreOk { from: u16, slot: u16 },
+    /// A worker finished writing its shard for a `PersistReq`.
+    PersistOk { from: u16, slot: u16 },
     /// Streaming submission ([`StreamRun::submit`]).
     Ingress(Msg),
     /// Streaming barrier: wind the run down at quiescence.
     Finish,
+}
+
+/// The slot a wire event came from (None for run-handle events). Used to
+/// feed the heartbeat's per-slot liveness clock — any traffic counts.
+fn ev_from(ev: &DriverEv) -> Option<u16> {
+    match ev {
+        DriverEv::HelloOk { from, .. }
+        | DriverEv::Msg { from, .. }
+        | DriverEv::FlushAck { from, .. }
+        | DriverEv::State { from, .. }
+        | DriverEv::Stopped { from, .. }
+        | DriverEv::Closed { from, .. }
+        | DriverEv::Pong { from, .. }
+        | DriverEv::RestoreOk { from, .. }
+        | DriverEv::PersistOk { from, .. } => Some(*from),
+        DriverEv::Ingress(_) | DriverEv::Finish => None,
+    }
+}
+
+/// The cluster view shared by the executor, the streaming admission thread
+/// and [`NetSession`]: the membership table plus the routing knobs every
+/// sender needs. Cloning shares the underlying [`ClusterState`].
+#[derive(Clone)]
+struct ClusterCtl {
+    state: Arc<Mutex<ClusterState>>,
+    route: ReplicaRoute,
+    heartbeat: Duration,
+}
+
+impl ClusterCtl {
+    fn is_live(&self, slot: u16) -> bool {
+        self.state.lock().unwrap().live[slot as usize]
+    }
+
+    fn live_mask(&self) -> Vec<bool> {
+        self.state.lock().unwrap().live.clone()
+    }
+
+    /// Live slots currently hosting a DP copy (per-query `Done` fan-out).
+    fn live_dp_slots(&self, placement: &Placement, dp_hosts: &[u16]) -> Vec<u16> {
+        let cs = self.state.lock().unwrap();
+        dp_hosts.iter().flat_map(|&n| cs.live_slots_of(placement, n)).collect()
+    }
+
+    /// The slots an emission for logical `node` must reach. Query-path
+    /// messages route to exactly one live replica (the same one every
+    /// sender would pick — see `net::cluster::replica`); write-path
+    /// messages fan to *all* replicas and require the full set live, or
+    /// the copies would silently diverge.
+    fn targets(
+        &self,
+        placement: &Placement,
+        node: u16,
+        msg: &Msg,
+    ) -> std::result::Result<Vec<u16>, String> {
+        let cs = self.state.lock().unwrap();
+        let live = cs.live_slots_of(placement, node);
+        if live.is_empty() {
+            return Err(format!("logical node {node} has no live replica"));
+        }
+        match msg {
+            Msg::Query { qid, v, .. } | Msg::CandidateReq { qid, v, .. } => {
+                Ok(vec![pick_slot(self.route, &live, *qid, v)])
+            }
+            _ => {
+                if live.len() != placement.replication {
+                    return Err(format!(
+                        "write to node {node} with {}/{} replicas live; heal the dead \
+                         replica before writing",
+                        live.len(),
+                        placement.replication
+                    ));
+                }
+                Ok(live)
+            }
+        }
+    }
+}
+
+/// Encode the current membership table as a broadcast-ready frame. Must be
+/// called under the same lock that mutated the table, so every broadcast
+/// carries a consistent (epoch, live, addrs) snapshot.
+fn membership_frame(cs: &ClusterState) -> Vec<u8> {
+    let table: Vec<(bool, String)> =
+        cs.live.iter().copied().zip(cs.addrs.iter().cloned()).collect();
+    wire::encode_frame(FrameKind::Membership, &wire::encode_membership(cs.epoch, &table))
+}
+
+/// Per-stream retarget bookkeeping. `dispatch_ts` and `origin` are keyed
+/// by ORIGINAL qid (latency spans every retry; the origin message is what
+/// gets re-dispatched), `retry_of` maps minted retry qids back to their
+/// original, `cancelled` suppresses completions of superseded attempts,
+/// and `inflight_qids` (originals and retries alike) is exactly the set a
+/// death handler must re-dispatch.
+#[derive(Default)]
+struct Retarget {
+    dispatch_ts: HashMap<u32, Instant>,
+    origin: HashMap<u32, Msg>,
+    retry_of: HashMap<u32, u32>,
+    cancelled: HashSet<u32>,
+    inflight_qids: HashSet<u32>,
+    next_retry: u32,
+    retargeted: u64,
+}
+
+impl Retarget {
+    fn new() -> Retarget {
+        Retarget { next_retry: RETRY_BASE, ..Default::default() }
+    }
 }
 
 struct Session {
@@ -146,6 +295,8 @@ struct Session {
     /// touch it — relaunch the `NetSession` instead of risking a poisoned
     /// phase on a half-dead fleet.
     broken: bool,
+    /// Shared membership/epoch view + replica-routing knobs.
+    ctl: ClusterCtl,
 }
 
 /// An [`Executor`] that runs BI/DP stages on remote worker processes. The
@@ -206,6 +357,7 @@ impl Executor for SocketExecutor {
         let ev_tx = s.ev_tx.clone();
         let dp_hosts = s.dp_hosts.clone();
         let flush_seq = s.flush_seq;
+        let ctl = s.ctl.clone();
         s.stream_open = true;
         drop(s);
 
@@ -219,7 +371,7 @@ impl Executor for SocketExecutor {
         let p = placement.clone();
         let admission = std::thread::spawn(move || {
             socket_stream_loop(
-                head, ags, peers, ev_rx, eg_tx, g, p, dp_hosts, cfg, flush_seq,
+                head, ags, peers, ev_rx, eg_tx, g, p, dp_hosts, cfg, flush_seq, ctl,
             )
         });
         Box::new(SocketStreamRun {
@@ -241,6 +393,9 @@ struct SocketStreamJoin {
     meter: TrafficMeter,
     work: Vec<(StageKind, u16, WorkStats)>,
     flush_seq: u32,
+    /// Queries cancelled and re-dispatched to surviving replicas after a
+    /// mid-stream worker death.
+    retargeted: u64,
     error: Option<String>,
 }
 
@@ -306,7 +461,10 @@ impl SocketStreamRun<'_> {
 
     /// Wind the admission thread down and hand the connections back to the
     /// executor, returning the run's accounting (+ typed failure, if any).
-    fn wind_down(&mut self) -> (TrafficMeter, Vec<(StageKind, u16, WorkStats)>, Option<String>) {
+    #[allow(clippy::type_complexity)]
+    fn wind_down(
+        &mut self,
+    ) -> (TrafficMeter, Vec<(StageKind, u16, WorkStats)>, u64, Option<String>) {
         send_finish(&self.ev_tx, &self.admission);
         let handle = self.admission.take().expect("socket stream already wound down");
         let join = handle
@@ -321,12 +479,12 @@ impl SocketStreamRun<'_> {
         // frames for cancelled queries) in the restored channel: refuse
         // further use instead of poisoning the next phase.
         s.broken |= join.error.is_some();
-        (join.meter, join.work, join.error)
+        (join.meter, join.work, join.retargeted, join.error)
     }
 
     fn die(&mut self) -> ! {
         if self.admission.is_some() {
-            let (_, _, error) = self.wind_down();
+            let (_, _, _, error) = self.wind_down();
             if let Some(e) = error {
                 panic!("socket stream failed: {e}");
             }
@@ -396,7 +554,7 @@ impl StreamRun for SocketStreamRun<'_> {
     }
 
     fn finish(mut self: Box<Self>) -> StreamReport {
-        let (meter, work, error) = self.wind_down();
+        let (meter, work, retargeted, error) = self.wind_down();
         if let Some(e) = error {
             panic!("socket stream failed: {e}");
         }
@@ -404,7 +562,7 @@ impl StreamRun for SocketStreamRun<'_> {
         while let Ok(c) = self.egress_rx.try_recv() {
             unclaimed.push(c);
         }
-        StreamReport { unclaimed, meter, work }
+        StreamReport { unclaimed, meter, work, retargeted }
     }
 }
 
@@ -447,6 +605,14 @@ impl Drop for SocketStreamRun<'_> {
 /// rendition of [`Session::run_phase`] — closed-loop windowed admission,
 /// deferred ingress, local AG delivery, per-completion `Done` acks and
 /// gate releases — with the worker-meter barrier run once at the end.
+///
+/// This loop is also the cluster's mid-stream failure detector: while
+/// queries are in flight it wakes every `net.heartbeat_ms` to ping live
+/// slots, and a slot that drops its connection, fails a send, or goes
+/// silent for [`HEARTBEAT_MISSES`] intervals is marked dead and its
+/// in-flight queries are cancelled and re-dispatched to surviving
+/// replicas ([`replica_death`]). The stream only errors when a logical
+/// node loses its *last* replica.
 #[allow(clippy::too_many_arguments)]
 fn socket_stream_loop(
     mut head: Box<dyn StageHandler>,
@@ -459,6 +625,7 @@ fn socket_stream_loop(
     dp_hosts: Vec<u16>,
     cfg: StreamConfig,
     mut flush_seq: u32,
+    ctl: ClusterCtl,
 ) -> SocketStreamJoin {
     // Opens the gate on every exit path so blocked submitters never hang
     // on a dead run.
@@ -470,10 +637,12 @@ fn socket_stream_loop(
     let mut pending: VecDeque<Msg> = VecDeque::new();
     let mut local_q: VecDeque<(Dest, Msg)> = VecDeque::new();
     let mut comps: Vec<QueryResult> = Vec::new();
-    let mut dispatch_ts: HashMap<u32, Instant> = HashMap::new();
+    let mut rt = Retarget::new();
     let mut in_flight = 0usize;
     let mut finishing = false;
     let mut error: Option<String> = None;
+    let mut last_heard: Vec<Instant> = vec![Instant::now(); peers.len()];
+    let mut last_progress = Instant::now();
 
     'run: loop {
         // Admit deferred ingress while the window allows (non-query items
@@ -488,38 +657,67 @@ fn socket_stream_loop(
             }
             let item = pending.pop_front().expect("peeked non-empty");
             let item_qid = item.qid();
-            head.on_msg(item, &mut emitted);
             if let Some(qid) = item_qid {
-                dispatch_ts.insert(qid, Instant::now());
+                if qid < RETRY_BASE {
+                    rt.dispatch_ts.insert(qid, Instant::now());
+                    rt.origin.insert(qid, item.clone());
+                }
+                rt.inflight_qids.insert(qid);
                 in_flight += 1;
             }
+            head.on_msg(item, &mut emitted);
+            let mut died: Option<(u16, String)> = None;
             for (dest, msg) in emitted.drain(..) {
                 let node = placement.node_of(dest.stage, dest.copy);
                 if node == head_node {
                     meter.send(head_node, head_node, 0);
                     local_q.push_back((dest, msg));
-                } else {
-                    let frame = wire::stage_frame(dest, &msg);
-                    meter.send(head_node, node, frame.len());
-                    if let Err(e) = peers[node as usize].send(&frame) {
-                        error = Some(format!("send to worker {node}: {e}"));
+                    continue;
+                }
+                let slots = match ctl.targets(&placement, node, &msg) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        error = Some(e);
                         break;
                     }
+                };
+                let frame = wire::stage_frame(dest, &msg);
+                for &slot in &slots {
+                    meter.send(head_node, slot, frame.len());
+                    if let Err(e) = peers[slot as usize].send(&frame) {
+                        died = Some((slot, format!("send failed: {e}")));
+                        break;
+                    }
+                }
+                if died.is_some() {
+                    break;
+                }
+            }
+            // Any emissions left after a mid-item break belong to a query
+            // that is about to be cancelled+retried (or to a failed run):
+            // dropping them is safe for queries, but a half-sent *write*
+            // cannot be recovered — surviving replicas may have missed
+            // frames too.
+            emitted.clear();
+            if let Some((slot, why)) = died {
+                if item_qid.is_none() {
+                    error = Some(format!(
+                        "worker slot {slot} died during a streamed write ({why}); \
+                         replica consistency cannot be guaranteed"
+                    ));
+                } else if let Err(e) = replica_death(
+                    slot, &why, &ctl, &placement, &mut peers, &dp_hosts, &mut pending,
+                    &mut rt, &mut in_flight, &mut ags,
+                ) {
+                    error = Some(e);
                 }
             }
             if error.is_some() {
                 break;
             }
             if let Err(e) = drain_local_stream(
-                &mut local_q,
-                &mut ags,
-                &mut comps,
-                &mut dispatch_ts,
-                &mut in_flight,
-                &mut peers,
-                &dp_hosts,
-                &gate,
-                &egress,
+                &mut local_q, &mut ags, &mut comps, &mut rt, &mut in_flight, &mut peers,
+                &ctl, &placement, &dp_hosts, &gate, &egress,
             ) {
                 error = Some(e);
             }
@@ -528,25 +726,36 @@ fn socket_stream_loop(
             break 'run;
         }
         // Everything queued must reach the wire before blocking, or the
-        // closed loop deadlocks on a buffered frame.
-        for p in peers.iter_mut() {
-            if let Err(e) = p.flush() {
-                error = Some(format!("flush: {e}"));
+        // closed loop deadlocks on a buffered frame. Only live slots are
+        // flushed — a dead slot's stale connection would just error.
+        {
+            let live = ctl.live_mask();
+            let mut flush_died: Option<(u16, String)> = None;
+            for (slot, p) in peers.iter_mut().enumerate() {
+                if !live[slot] {
+                    continue;
+                }
+                if let Err(e) = p.flush() {
+                    flush_died = Some((slot as u16, format!("flush failed: {e}")));
+                    break;
+                }
+            }
+            if let Some((slot, why)) = flush_died {
+                if let Err(e) = replica_death(
+                    slot, &why, &ctl, &placement, &mut peers, &dp_hosts, &mut pending,
+                    &mut rt, &mut in_flight, &mut ags,
+                ) {
+                    error = Some(e);
+                }
                 continue 'run;
             }
         }
-        // Idle is normal on a long-lived stream, so the stall clock only
-        // runs while queries are actually in flight.
+        // Idle is normal on a long-lived stream, so both the stall clock
+        // and the heartbeat only run while queries are actually in flight.
         let ev = if in_flight > 0 {
-            match ev_rx.recv_timeout(PHASE_STALL_TIMEOUT) {
-                Ok(ev) => ev,
-                Err(RecvTimeoutError::Timeout) => {
-                    error = Some(format!(
-                        "stream stalled: {in_flight} queries in flight after {}s of silence",
-                        PHASE_STALL_TIMEOUT.as_secs()
-                    ));
-                    continue 'run;
-                }
+            match ev_rx.recv_timeout(ctl.heartbeat) {
+                Ok(ev) => Some(ev),
+                Err(RecvTimeoutError::Timeout) => None,
                 Err(RecvTimeoutError::Disconnected) => {
                     error = Some("all worker readers exited".into());
                     continue 'run;
@@ -554,58 +763,109 @@ fn socket_stream_loop(
             }
         } else {
             match ev_rx.recv() {
-                Ok(ev) => ev,
+                Ok(ev) => Some(ev),
                 Err(_) => {
                     error = Some("all worker readers exited".into());
                     continue 'run;
                 }
             }
         };
+        let Some(ev) = ev else {
+            // Heartbeat tick: nothing arrived for a full interval. Declare
+            // slots dead after HEARTBEAT_MISSES silent intervals, ping the
+            // rest, and keep the overall stall clock from the old loop.
+            if last_progress.elapsed() >= PHASE_STALL_TIMEOUT {
+                error = Some(format!(
+                    "stream stalled: {in_flight} queries in flight after {}s of silence",
+                    PHASE_STALL_TIMEOUT.as_secs()
+                ));
+                continue 'run;
+            }
+            let live = ctl.live_mask();
+            let ping = wire::encode_frame(FrameKind::Ping, &[]);
+            let mut silent: Vec<u16> = Vec::new();
+            for (slot, p) in peers.iter_mut().enumerate() {
+                if !live[slot] {
+                    continue;
+                }
+                if last_heard[slot].elapsed() > ctl.heartbeat * HEARTBEAT_MISSES {
+                    silent.push(slot as u16);
+                } else if p.send_now(&ping).is_err() {
+                    silent.push(slot as u16);
+                }
+            }
+            for slot in silent {
+                if let Err(e) = replica_death(
+                    slot, "heartbeat silence", &ctl, &placement, &mut peers, &dp_hosts,
+                    &mut pending, &mut rt, &mut in_flight, &mut ags,
+                ) {
+                    error = Some(e);
+                    break;
+                }
+            }
+            continue 'run;
+        };
+        last_progress = Instant::now();
+        if let Some(from) = ev_from(&ev) {
+            if let Some(t) = last_heard.get_mut(from as usize) {
+                *t = Instant::now();
+            }
+        }
         match ev {
             DriverEv::Ingress(m) => pending.push_back(m),
             DriverEv::Finish => finishing = true,
             DriverEv::Msg { dest, msg, .. } => {
                 local_q.push_back((dest, msg));
                 if let Err(e) = drain_local_stream(
-                    &mut local_q,
-                    &mut ags,
-                    &mut comps,
-                    &mut dispatch_ts,
-                    &mut in_flight,
-                    &mut peers,
-                    &dp_hosts,
-                    &gate,
-                    &egress,
+                    &mut local_q, &mut ags, &mut comps, &mut rt, &mut in_flight,
+                    &mut peers, &ctl, &placement, &dp_hosts, &gate, &egress,
                 ) {
                     error = Some(e);
                 }
             }
+            DriverEv::Pong { .. } => {} // heartbeat reply; clock already reset
             DriverEv::Stopped { from, reason } => {
-                error = Some(format!("worker {from} stopped mid-stream: {reason}"));
+                if let Err(e) = replica_death(
+                    from, &format!("stopped: {reason}"), &ctl, &placement, &mut peers,
+                    &dp_hosts, &mut pending, &mut rt, &mut in_flight, &mut ags,
+                ) {
+                    error = Some(e);
+                }
             }
             DriverEv::Closed { from, err } => {
-                error = Some(format!("worker {from} connection lost mid-stream: {err}"));
+                if let Err(e) = replica_death(
+                    from, &format!("connection lost: {err}"), &ctl, &placement,
+                    &mut peers, &dp_hosts, &mut pending, &mut rt, &mut in_flight,
+                    &mut ags,
+                ) {
+                    error = Some(e);
+                }
             }
             _ => error = Some("unexpected control frame mid-stream".into()),
         }
     }
 
-    // Quiescence barrier: collect every worker's meter and per-copy work
-    // exactly once per stream — not once per pump. Skipped if the run
-    // already died.
+    // Quiescence barrier: collect every live worker's meter and per-copy
+    // work exactly once per stream — not once per pump. Skipped if the
+    // run already died.
     let mut work: Vec<(StageKind, u16, WorkStats)> = Vec::new();
     if error.is_none() {
         flush_seq += 1;
         let req = wire::encode_frame(FrameKind::FlushReq, &wire::encode_qid(flush_seq));
-        for p in peers.iter_mut() {
+        let live = ctl.live_mask();
+        let mut expect = 0usize;
+        for (slot, p) in peers.iter_mut().enumerate() {
+            if !live[slot] {
+                continue;
+            }
             if let Err(e) = p.send_now(&req) {
-                error = Some(format!("barrier send: {e}"));
+                error = Some(format!("barrier send to slot {slot}: {e}"));
                 break;
             }
+            expect += 1;
         }
-        let n_workers = peers.len();
         let mut acks = 0usize;
-        while error.is_none() && acks < n_workers {
+        while error.is_none() && acks < expect {
             match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
                 Ok(DriverEv::FlushAck { seq, meter: m, work: w, from }) => {
                     if seq != flush_seq {
@@ -619,33 +879,153 @@ fn socket_stream_loop(
                     }
                 }
                 Ok(DriverEv::Stopped { from, reason }) => {
-                    error = Some(format!("worker {from} stopped at barrier: {reason}"));
+                    if live[from as usize] {
+                        error =
+                            Some(format!("worker {from} stopped at barrier: {reason}"));
+                    }
                 }
                 Ok(DriverEv::Closed { from, err }) => {
-                    error = Some(format!("worker {from} connection lost at barrier: {err}"));
+                    if live[from as usize] {
+                        error = Some(format!(
+                            "worker {from} connection lost at barrier: {err}"
+                        ));
+                    }
                 }
+                // Straggler stage frames can only belong to queries that
+                // were cancelled by a retarget (every live query completed
+                // before the barrier) — tolerate them exactly then.
+                Ok(DriverEv::Msg { .. }) if rt.retargeted > 0 => {}
                 // late chatter from the run handle; harmless at a barrier
-                Ok(DriverEv::Ingress(_)) | Ok(DriverEv::Finish) => {}
+                Ok(DriverEv::Ingress(_)) | Ok(DriverEv::Finish)
+                | Ok(DriverEv::Pong { .. }) => {}
                 Ok(_) => error = Some("unexpected frame at stream barrier".into()),
                 Err(e) => error = Some(format!("stream barrier: {e}")),
             }
         }
     }
     meter.flush();
-    SocketStreamJoin { peers, ev_rx, meter, work, flush_seq, error }
+    SocketStreamJoin {
+        peers,
+        ev_rx,
+        meter,
+        work,
+        flush_seq,
+        retargeted: rt.retargeted,
+        error,
+    }
+}
+
+/// Mid-stream death of one worker slot. Marks it dead (idempotent — the
+/// heartbeat and the reader's `Closed` often both report the same crash),
+/// broadcasts the shrunk membership so worker→worker routing agrees with
+/// ours before any retried traffic arrives (per-connection FIFO), then
+/// cancels every in-flight query and re-dispatches it under a fresh retry
+/// qid. The whole query is the unit of recovery: its partial state
+/// (BI probes routed, DP dedup entries) may have died with the replica,
+/// so surviving partial work is torn down (`Done`) and suppressed at
+/// completion rather than merged.
+///
+/// Errors (→ stream failure) only when the dead slot was the last live
+/// replica of its logical node.
+#[allow(clippy::too_many_arguments)]
+fn replica_death(
+    slot: u16,
+    why: &str,
+    ctl: &ClusterCtl,
+    placement: &Placement,
+    peers: &mut [PeerConn],
+    dp_hosts: &[u16],
+    pending: &mut VecDeque<Msg>,
+    rt: &mut Retarget,
+    in_flight: &mut usize,
+    ags: &mut [Box<dyn StageHandler>],
+) -> std::result::Result<(), String> {
+    let (mem_frame, live_dp, live) = {
+        let mut cs = ctl.state.lock().unwrap();
+        if !cs.live[slot as usize] {
+            return Ok(()); // already handled under another signal
+        }
+        cs.mark_dead(slot);
+        let node = placement.node_of_slot(slot);
+        if !cs.node_has_live(placement, node) {
+            return Err(format!(
+                "worker slot {slot} died ({why}) and logical node {node} has no live \
+                 replica left"
+            ));
+        }
+        let dp: Vec<u16> =
+            dp_hosts.iter().flat_map(|&n| cs.live_slots_of(placement, n)).collect();
+        (membership_frame(&cs), dp, cs.live.clone())
+    };
+    eprintln!(
+        "[parlsh] worker slot {slot} died mid-stream ({why}); retargeting {} in-flight \
+         queries to surviving replicas",
+        rt.inflight_qids.len()
+    );
+    for (sl, p) in peers.iter_mut().enumerate() {
+        if live[sl] {
+            // a failure here surfaces as that peer's own death event
+            let _ = p.send_now(&mem_frame);
+        }
+    }
+    let stale: Vec<u32> = rt.inflight_qids.drain().collect();
+    for qid in stale {
+        rt.cancelled.insert(qid);
+        *in_flight = in_flight.saturating_sub(1);
+        // Tear down any per-query dedup state the survivors hold for the
+        // cancelled attempt.
+        let done = wire::encode_frame(FrameKind::Done, &wire::encode_qid(qid));
+        for &s in &live_dp {
+            let _ = peers[s as usize].send(&done);
+        }
+        // Purge the local AG's partial reduction under the cancelled qid:
+        // a later run may legally reuse it, and a stale entry would trip
+        // the duplicate-QueryMeta guard. No-op on copies that never saw it.
+        for ag in ags.iter_mut() {
+            ag.abort_query(qid);
+        }
+        let orig = rt.retry_of.remove(&qid).unwrap_or(qid);
+        let Some(seed) = rt.origin.get(&orig) else {
+            return Err(format!("no origin message recorded for in-flight query {orig}"));
+        };
+        let rq = rt.next_retry;
+        rt.next_retry += 1;
+        let mut retry = seed.clone();
+        match &mut retry {
+            Msg::QueryVec { qid, .. }
+            | Msg::Query { qid, .. }
+            | Msg::CandidateReq { qid, .. } => *qid = rq,
+            other => {
+                return Err(format!(
+                    "in-flight item for query {orig} is not retryable: {other:?}"
+                ))
+            }
+        }
+        rt.retry_of.insert(rq, orig);
+        // Front of the queue: retries resume ahead of new ingress, so the
+        // closed-loop window drains in roughly the original order.
+        pending.push_front(retry);
+        rt.retargeted += 1;
+    }
+    Ok(())
 }
 
 /// Deliver queued head-node messages on a streaming run and handle
 /// completions: latency from the per-qid dispatch stamp, `Done` acks to
-/// every DP host, a gate release, and the completion onto the egress.
+/// every live DP slot, a gate release, and the completion onto the egress.
+/// Retry-aware: a retry qid completes under its *original* id (latency
+/// spans the whole retry), and completions of cancelled attempts are
+/// swallowed — their replacement owns the gate slot and the egress.
 #[allow(clippy::too_many_arguments)]
 fn drain_local_stream(
     local_q: &mut VecDeque<(Dest, Msg)>,
     ags: &mut [Box<dyn StageHandler>],
     comps: &mut Vec<QueryResult>,
-    dispatch_ts: &mut HashMap<u32, Instant>,
+    rt: &mut Retarget,
     in_flight: &mut usize,
     peers: &mut [PeerConn],
+    ctl: &ClusterCtl,
+    placement: &Placement,
     dp_hosts: &[u16],
     gate: &StreamGate,
     egress: &mpsc::Sender<StreamCompletion>,
@@ -664,21 +1044,30 @@ fn drain_local_stream(
         emitted.clear();
         ag.take_completions(comps);
         for (qid, hits) in comps.drain(..) {
-            let secs = dispatch_ts
-                .remove(&qid)
+            if rt.cancelled.remove(&qid) {
+                // A cancelled attempt limped home anyway (e.g. only a DP
+                // replica died and the BI path still finished): swallow
+                // it — its replacement retry is the query of record.
+                continue;
+            }
+            rt.inflight_qids.remove(&qid);
+            let orig = rt.retry_of.remove(&qid).unwrap_or(qid);
+            let secs = rt
+                .dispatch_ts
+                .remove(&orig)
                 .map(|t| t.elapsed().as_secs_f64())
                 .unwrap_or(0.0);
+            rt.origin.remove(&orig);
             *in_flight = in_flight.saturating_sub(1);
             // The completion ack: closes the inflight loop and drops the
-            // remote per-query dedup state. Control — never metered.
+            // remote per-query dedup state. Control — never metered. A
+            // failing send surfaces as that peer's own death event.
             let done = wire::encode_frame(FrameKind::Done, &wire::encode_qid(qid));
-            for &node in dp_hosts {
-                if let Err(e) = peers[node as usize].send(&done) {
-                    return Err(format!("done ack to worker {node}: {e}"));
-                }
+            for slot in ctl.live_dp_slots(placement, dp_hosts) {
+                let _ = peers[slot as usize].send(&done);
             }
             gate.release();
-            let _ = egress.send(StreamCompletion { qid, hits, secs });
+            let _ = egress.send(StreamCompletion { qid: orig, hits, secs });
         }
     }
     Ok(())
@@ -708,8 +1097,7 @@ impl Session {
         if *placement != self.placement {
             bail!("phase placement differs from the placement workers were launched with");
         }
-        let Session { peers, ev_rx, dp_hosts, flush_seq, .. } = self;
-        let n_workers = peers.len();
+        let Session { peers, ev_rx, dp_hosts, flush_seq, ctl, .. } = self;
         let head = placement.head_node;
         let n_queries = workload.n_queries;
         let window = workload.window;
@@ -730,6 +1118,9 @@ impl Session {
         let mut in_flight = 0usize;
         let mut items = workload.items.peekable();
         let mut items_done = false;
+        // Any write admitted (index blocks, store batches — items without
+        // a qid) advances the session epoch at the end of the phase.
+        let mut wrote = false;
 
         loop {
             // Admit while the window allows; items without a qid (index
@@ -748,6 +1139,9 @@ impl Session {
                 }
                 let item = items.next().expect("peeked non-empty");
                 let item_qid = item.qid();
+                if item_qid.is_none() {
+                    wrote = true;
+                }
                 head_stage.on_msg(item, &mut emitted);
                 if let Some(qid) = item_qid {
                     dispatch_ts[qid as usize] = Instant::now();
@@ -758,10 +1152,16 @@ impl Session {
                     if node == head {
                         meter.send(head, head, 0);
                         local_q.push_back((dest, msg));
-                    } else {
-                        let frame = wire::stage_frame(dest, &msg);
-                        meter.send(head, node, frame.len());
-                        peers[node as usize].send(&frame)?;
+                        continue;
+                    }
+                    // Writes fan to every replica slot (all must be live);
+                    // queries route to one live replica. A phase run does
+                    // not retarget — a death here fails the phase loudly.
+                    let slots = ctl.targets(placement, node, &msg).map_err(|e| anyhow!(e))?;
+                    let frame = wire::stage_frame(dest, &msg);
+                    for &slot in &slots {
+                        meter.send(head, slot, frame.len());
+                        peers[slot as usize].send(&frame)?;
                     }
                 }
                 drain_local(
@@ -774,6 +1174,8 @@ impl Session {
                     &mut completed,
                     &mut in_flight,
                     peers,
+                    ctl,
+                    placement,
                     dp_hosts,
                 )?;
             }
@@ -781,9 +1183,15 @@ impl Session {
                 break;
             }
             // Block for remote events — but only after everything queued
-            // reached the wire, or the closed loop deadlocks.
-            for p in peers.iter_mut() {
-                p.flush()?;
+            // reached the wire, or the closed loop deadlocks. Dead slots'
+            // stale connections are skipped.
+            {
+                let live = ctl.live_mask();
+                for (slot, p) in peers.iter_mut().enumerate() {
+                    if live[slot] {
+                        p.flush()?;
+                    }
+                }
             }
             match ev_rx.recv_timeout(PHASE_STALL_TIMEOUT) {
                 Ok(DriverEv::Msg { dest, msg, .. }) => {
@@ -798,14 +1206,22 @@ impl Session {
                         &mut completed,
                         &mut in_flight,
                         peers,
+                        ctl,
+                        placement,
                         dp_hosts,
                     )?;
                 }
+                // late heartbeat replies from a preceding stream
+                Ok(DriverEv::Pong { .. }) => {}
                 Ok(DriverEv::Stopped { from, reason }) => {
-                    bail!("worker {from} stopped mid-phase: {reason}")
+                    if ctl.is_live(from) {
+                        bail!("worker {from} stopped mid-phase: {reason}")
+                    }
                 }
                 Ok(DriverEv::Closed { from, err }) => {
-                    bail!("worker {from} connection lost mid-phase: {err}")
+                    if ctl.is_live(from) {
+                        bail!("worker {from} connection lost mid-phase: {err}")
+                    }
                 }
                 Ok(_) => bail!("unexpected control frame mid-phase"),
                 Err(RecvTimeoutError::Timeout) => bail!(
@@ -816,19 +1232,24 @@ impl Session {
             }
         }
 
-        // Phase barrier: collect every worker's real bytes-on-wire meter
-        // plus its per-copy work counters (so the report's work accounting
-        // covers the remote BI/DP copies, not just the head).
+        // Phase barrier: collect every live worker's real bytes-on-wire
+        // meter plus its per-copy work counters (so the report's work
+        // accounting covers the remote BI/DP copies, not just the head).
         *flush_seq += 1;
         let seq = *flush_seq;
         let req = wire::encode_frame(FrameKind::FlushReq, &wire::encode_qid(seq));
-        for p in peers.iter_mut() {
-            p.send_now(&req)?;
+        let live = ctl.live_mask();
+        let mut expect = 0usize;
+        for (slot, p) in peers.iter_mut().enumerate() {
+            if live[slot] {
+                p.send_now(&req)?;
+                expect += 1;
+            }
         }
         meter.flush();
         let mut remote_work: Vec<(StageKind, u16, WorkStats)> = Vec::new();
         let mut acks = 0usize;
-        while acks < n_workers {
+        while acks < expect {
             match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
                 Ok(DriverEv::FlushAck { seq: s, meter: m, work, from }) => {
                     if s != seq {
@@ -838,14 +1259,36 @@ impl Session {
                     remote_work.extend(work);
                     acks += 1;
                 }
+                Ok(DriverEv::Pong { .. }) => {}
                 Ok(DriverEv::Stopped { from, reason }) => {
-                    bail!("worker {from} stopped at barrier: {reason}")
+                    if live[from as usize] {
+                        bail!("worker {from} stopped at barrier: {reason}")
+                    }
                 }
                 Ok(DriverEv::Closed { from, err }) => {
-                    bail!("worker {from} connection lost at barrier: {err}")
+                    if live[from as usize] {
+                        bail!("worker {from} connection lost at barrier: {err}")
+                    }
                 }
                 Ok(_) => bail!("unexpected frame at phase barrier"),
                 Err(e) => bail!("phase barrier: {e}"),
+            }
+        }
+        // A completed write phase advances the epoch: every replica now
+        // holds the new state, and any worker that rejoins later must
+        // either present a shard at this exact epoch or be restored from
+        // a live sibling. Broadcast so workers answer `Ping`/rejoin
+        // validation with the current value.
+        if wrote {
+            let (frame, live) = {
+                let mut cs = ctl.state.lock().unwrap();
+                cs.epoch += 1;
+                (membership_frame(&cs), cs.live.clone())
+            };
+            for (slot, p) in peers.iter_mut().enumerate() {
+                if live[slot] {
+                    p.send_now(&frame)?;
+                }
             }
         }
         Ok(ExecReport { results, per_query_secs, meter, work: remote_work })
@@ -866,6 +1309,8 @@ fn drain_local(
     completed: &mut usize,
     in_flight: &mut usize,
     peers: &mut [PeerConn],
+    ctl: &ClusterCtl,
+    placement: &Placement,
     dp_hosts: &[u16],
 ) -> Result<()> {
     let mut emitted: Vec<(Dest, Msg)> = Vec::new();
@@ -889,8 +1334,8 @@ fn drain_local(
             // The completion ack: closes the inflight loop and drops the
             // remote per-query dedup state. Control — never metered.
             let done = wire::encode_frame(FrameKind::Done, &wire::encode_qid(qid));
-            for &node in dp_hosts {
-                peers[node as usize].send(&done)?;
+            for slot in ctl.live_dp_slots(placement, dp_hosts) {
+                peers[slot as usize].send(&done)?;
             }
         }
     }
@@ -902,8 +1347,93 @@ fn drain_local(
 /// dropping the session kills any still-running workers (no leaks either
 /// way).
 pub struct NetSession {
-    children: Vec<Child>,
+    /// One entry per worker slot. `None` for slots the session did not
+    /// spawn itself: every slot in hosts mode (workers started out of
+    /// band at `[net] hosts` addresses) and spawned slots whose process
+    /// was killed and not yet respawned. Behind a mutex so the chaos
+    /// hooks ([`NetSession::kill_worker`]) work through `&self` while a
+    /// streaming run borrows the executor.
+    children: Mutex<Vec<Option<Child>>>,
     exec: SocketExecutor,
+    /// Shared with `Session.ctl` — the one membership/epoch table.
+    cluster: Arc<Mutex<ClusterState>>,
+    placement: Placement,
+    bin: std::path::PathBuf,
+    cfg: Config,
+    dim: usize,
+    digest: u64,
+    /// Discovery mode: `[net] hosts` named the worker addresses; the
+    /// session dials instead of spawning, and a healed slot is expected
+    /// to have been restarted out of band at its configured address.
+    hosts_mode: bool,
+    /// `--listen` template for (re)spawned workers (host with port 0 when
+    /// several workers would contend for one pinned port).
+    spawn_listen: String,
+}
+
+/// Canonical shard file path for a worker slot under `net.shard_dir` —
+/// what [`NetSession::persist_shards`] writes and what a respawned worker
+/// is pointed at (`parlsh worker --shard=...`).
+pub fn shard_path(dir: &str, slot: u16) -> String {
+    format!("{dir}/slot{slot:03}.shard")
+}
+
+/// Spawn one worker process. The caller reads the announce line (possibly
+/// after spawning the whole fleet — children bind concurrently).
+fn spawn_worker_child(
+    bin: &Path,
+    listen: &str,
+    sock: &SocketConfig,
+    shard: Option<&str>,
+) -> Result<Child> {
+    let mut cmd = Command::new(bin);
+    cmd.arg("worker").arg(format!("--listen={listen}"));
+    if let Some(path) = shard {
+        cmd.arg(format!("--shard={path}"));
+    }
+    cmd.arg("--set")
+        .arg(format!("net.max_frame_bytes={}", sock.max_frame_bytes))
+        .arg("--set")
+        .arg(format!("net.connect_retries={}", sock.connect_retries))
+        .arg("--set")
+        .arg(format!("net.retry_ms={}", sock.retry_ms))
+        .arg("--set")
+        .arg(format!("net.queue_frames={}", sock.queue_frames))
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    cmd.spawn().with_context(|| format!("spawn worker from {}", bin.display()))
+}
+
+/// Read a worker's one-line `PARLSH_WORKER_LISTEN <addr>` announce —
+/// always the OS-resolved bound address, so port-0 binds work.
+fn read_announce(child: &mut Child) -> Result<String> {
+    let stdout = child.stdout.take().context("worker stdout already taken")?;
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).context("read worker announce line")?;
+    line.trim()
+        .strip_prefix("PARLSH_WORKER_LISTEN ")
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("worker announced `{}`", line.trim()))
+}
+
+/// Kill-then-reap with a short grace period for a process that was asked
+/// to exit.
+fn reap(mut child: Child) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            _ => {
+                child.kill().ok();
+                child.wait().ok();
+                return;
+            }
+        }
+    }
 }
 
 impl NetSession {
@@ -919,76 +1449,69 @@ impl NetSession {
         Self::launch_with_bin(&bin, cfg, dim)
     }
 
-    /// Launch one worker process per BI/DP node of `cfg.cluster` from an
-    /// explicit binary path, connect, and handshake. `dim` is the dataset
+    /// Bring up one worker process per slot (`logical nodes x
+    /// cluster.replication`), connect, and handshake. `dim` is the dataset
     /// dimensionality workers size their DP stores with.
+    ///
+    /// Two membership modes:
+    /// * **spawned** (default) — children are spawned from `bin` on
+    ///   loopback, each binding an OS-assigned port and announcing it;
+    /// * **discovery** — a non-empty `[net] hosts` lists one address per
+    ///   slot; the workers were started out of band (`parlsh worker
+    ///   --join=ADDR`) and the session dials them instead of spawning.
     pub fn launch_with_bin(bin: &Path, cfg: &Config, dim: usize) -> Result<NetSession> {
         let placement = Placement::new(&cfg.cluster);
-        let n_workers = placement.total_nodes() - 1;
-        // Every worker binds the same configured address, so a fixed port
-        // can only ever host one worker — reject it up front instead of
-        // letting worker 1 die on EADDRINUSE before announcing itself.
-        if n_workers > 1 && !cfg.sock.listen.ends_with(":0") {
+        let n_workers = placement.total_slots();
+        let hosts = cfg.sock.host_list();
+        let hosts_mode = !hosts.is_empty();
+        if hosts_mode && hosts.len() != n_workers {
             bail!(
-                "net.listen `{}` pins a port but {n_workers} workers must bind it; \
-                 use port 0 (OS-assigned) for local multi-worker launches",
-                cfg.sock.listen
+                "[net] hosts lists {} addresses but this placement has {n_workers} worker \
+                 slots ({} logical nodes x replication {})",
+                hosts.len(),
+                placement.n_logical(),
+                placement.replication
             );
         }
-        let placeholder = mpsc::sync_channel(1);
-        let mut session = NetSession {
-            children: Vec::with_capacity(n_workers),
-            exec: SocketExecutor {
-                inner: Mutex::new(Session {
-                    peers: Vec::new(),
-                    ev_tx: placeholder.0, // replaced below
-                    ev_rx: placeholder.1,
-                    placement: placement.clone(),
-                    dp_hosts: (cfg.cluster.bi_nodes
-                        ..cfg.cluster.bi_nodes + cfg.cluster.dp_nodes)
-                        .map(|n| n as u16)
-                        .collect(),
-                    flush_seq: 0,
-                    stream_open: false,
-                    broken: false,
-                }),
-            },
+        // Several spawned workers cannot share one pinned port: rebind
+        // each at port 0 and learn the real address from the announce
+        // line (a single spawned worker keeps the configured address).
+        let spawn_listen = if !hosts_mode && n_workers > 1 && !cfg.sock.listen.ends_with(":0")
+        {
+            let (host, _) = cfg.sock.listen.rsplit_once(':').ok_or_else(|| {
+                anyhow!("net.listen `{}` has no port; use host:port", cfg.sock.listen)
+            })?;
+            eprintln!(
+                "[parlsh] net.listen `{}` pins one port; {n_workers} spawned workers bind \
+                 {host}:0 (OS-assigned) and announce their real addresses",
+                cfg.sock.listen
+            );
+            format!("{host}:0")
+        } else {
+            cfg.sock.listen.clone()
         };
 
-        // Spawn first, then read each announced listen address. Workers
-        // must not write anything else to stdout.
-        for node in 0..n_workers {
-            let child = Command::new(bin)
-                .arg("worker")
-                .arg(format!("--listen={}", cfg.sock.listen))
-                .arg("--set")
-                .arg(format!("net.max_frame_bytes={}", cfg.sock.max_frame_bytes))
-                .arg("--set")
-                .arg(format!("net.connect_retries={}", cfg.sock.connect_retries))
-                .arg("--set")
-                .arg(format!("net.retry_ms={}", cfg.sock.retry_ms))
-                .arg("--set")
-                .arg(format!("net.queue_frames={}", cfg.sock.queue_frames))
-                .stdin(Stdio::null())
-                .stdout(Stdio::piped())
-                .stderr(Stdio::inherit())
-                .spawn()
-                .with_context(|| format!("spawn worker {node} from {}", bin.display()))?;
-            session.children.push(child);
-        }
-        let mut addrs = Vec::with_capacity(n_workers);
-        for (node, child) in session.children.iter_mut().enumerate() {
-            let stdout = child.stdout.take().expect("piped stdout");
-            let mut line = String::new();
-            BufReader::new(stdout)
-                .read_line(&mut line)
-                .with_context(|| format!("read worker {node} listen line"))?;
-            let addr = line
-                .trim()
-                .strip_prefix("PARLSH_WORKER_LISTEN ")
-                .ok_or_else(|| anyhow!("worker {node} announced `{}`", line.trim()))?
-                .to_string();
-            addrs.push(addr);
+        // Bring up the fleet. Spawned mode: spawn all first (they bind
+        // concurrently), then read each announce line — workers must not
+        // write anything else to stdout.
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(n_workers);
+        let mut addrs: Vec<String> = Vec::with_capacity(n_workers);
+        if hosts_mode {
+            children.resize_with(n_workers, || None);
+            addrs = hosts;
+        } else {
+            for slot in 0..n_workers {
+                let child = spawn_worker_child(bin, &spawn_listen, &cfg.sock, None)
+                    .with_context(|| format!("spawn worker slot {slot}"))?;
+                children.push(Some(child));
+            }
+            for (slot, child) in children.iter_mut().enumerate() {
+                let child = child.as_mut().expect("just spawned");
+                addrs.push(
+                    read_announce(child)
+                        .with_context(|| format!("worker slot {slot} announce"))?,
+                );
+            }
         }
 
         // Connect + handshake each worker; reader threads feed one
@@ -997,13 +1520,13 @@ impl NetSession {
         let digest = wire::config_digest(dim as u32, &cfg.lsh, &cfg.cluster, &cfg.stream);
         let (ev_tx, ev_rx) = mpsc::sync_channel::<DriverEv>(cfg.sock.queue_frames.max(1));
         let mut peers = Vec::with_capacity(n_workers);
-        for node in 0..n_workers {
+        for slot in 0..n_workers {
             let stream = connect_retry(
-                &addrs[node],
+                &addrs[slot],
                 cfg.sock.connect_retries,
                 cfg.sock.retry_ms,
             )
-            .with_context(|| format!("connect worker {node} at {}", addrs[node]))?;
+            .with_context(|| format!("connect worker slot {slot} at {}", addrs[slot]))?;
             // Writes that stall past the phase-stall horizon fail loudly
             // (typed IO error → phase/stream error) instead of hanging:
             // with the bounded reader queues a fully-wedged
@@ -1012,10 +1535,11 @@ impl NetSession {
             // recv-side stall clock to save it (see the module docs).
             stream.set_write_timeout(Some(PHASE_STALL_TIMEOUT)).ok();
             let reader = stream.try_clone().context("clone worker conn")?;
-            spawn_reader(reader, node as u16, ev_tx.clone(), cfg.sock.max_frame_bytes);
+            spawn_reader(reader, slot as u16, ev_tx.clone(), cfg.sock.max_frame_bytes);
             let mut pc = PeerConn::new(stream, cfg.stream.agg_bytes);
             let hello = Hello {
-                node: node as u16,
+                node: slot as u16,
+                epoch: 0,
                 dim: dim as u32,
                 peers: addrs.clone(),
                 lsh: cfg.lsh,
@@ -1027,19 +1551,19 @@ impl NetSession {
             peers.push(pc);
         }
 
-        // Every worker must accept the same config digest before any
+        // Every worker must pass join validation (config digest + epoch
+        // fencing — a fresh session admits only empty workers) before any
         // workload flows.
         let mut ok = vec![false; n_workers];
         let mut acked = 0usize;
         while acked < n_workers {
             match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
-                Ok(DriverEv::HelloOk { from, node, digest: d }) => {
+                Ok(DriverEv::HelloOk { from, node, digest: d, epoch }) => {
                     if node != from {
-                        bail!("worker on conn {from} claims node {node}");
+                        bail!("worker on conn {from} claims slot {node}");
                     }
-                    if d != digest {
-                        bail!("worker {from} config digest mismatch");
-                    }
+                    validate_join(digest, 0, d, epoch)
+                        .map_err(|e| anyhow!("worker slot {from} rejected at launch: {e}"))?;
                     if std::mem::replace(&mut ok[from as usize], true) {
                         bail!("worker {from} acked twice");
                     }
@@ -1056,12 +1580,41 @@ impl NetSession {
             }
         }
 
-        {
-            let inner = session.exec.inner.get_mut().unwrap_or_else(|p| p.into_inner());
-            inner.peers = peers;
-            inner.ev_rx = ev_rx;
-            inner.ev_tx = ev_tx;
-        }
+        let cluster = Arc::new(Mutex::new(ClusterState::new(addrs)));
+        let ctl = ClusterCtl {
+            state: cluster.clone(),
+            route: cfg.cluster.replica_route,
+            heartbeat: Duration::from_millis(cfg.sock.heartbeat_ms.max(100)),
+        };
+        // Drop of a half-built fleet: `children` moves into the session
+        // below, whose Drop kills anything still running on error paths.
+        let session = NetSession {
+            children: Mutex::new(children),
+            exec: SocketExecutor {
+                inner: Mutex::new(Session {
+                    peers,
+                    ev_tx,
+                    ev_rx,
+                    placement: placement.clone(),
+                    dp_hosts: (cfg.cluster.bi_nodes
+                        ..cfg.cluster.bi_nodes + cfg.cluster.dp_nodes)
+                        .map(|n| n as u16)
+                        .collect(),
+                    flush_seq: 0,
+                    stream_open: false,
+                    broken: false,
+                    ctl,
+                }),
+            },
+            cluster,
+            placement,
+            bin: bin.to_path_buf(),
+            cfg: cfg.clone(),
+            dim,
+            digest,
+            hosts_mode,
+            spawn_listen,
+        };
         Ok(session)
     }
 
@@ -1070,8 +1623,332 @@ impl NetSession {
         &self.exec
     }
 
-    /// Snapshot every worker's BI buckets and DP objects (differential
-    /// tests; one `(node, state)` pair per worker, node-sorted).
+    /// Current session epoch (completed write phases).
+    pub fn epoch(&self) -> u64 {
+        self.cluster.lock().unwrap_or_else(|p| p.into_inner()).epoch
+    }
+
+    /// Number of slots currently marked dead.
+    pub fn n_dead(&self) -> usize {
+        self.cluster.lock().unwrap_or_else(|p| p.into_inner()).n_dead()
+    }
+
+    /// Is `slot` currently marked live?
+    pub fn is_live(&self, slot: u16) -> bool {
+        let cs = self.cluster.lock().unwrap_or_else(|p| p.into_inner());
+        cs.live.get(slot as usize).copied().unwrap_or(false)
+    }
+
+    /// Chaos hook: kill the spawned process behind `slot` outright
+    /// (SIGKILL — no goodbye frame). Deliberately does **not** touch the
+    /// membership table: detecting the death (broken pipe, heartbeat
+    /// silence) is the driver loop's job, which is exactly what chaos
+    /// tests exercise — and `&self`, so it can strike while a streaming
+    /// run holds the executor. Errors in hosts mode (the session owns no
+    /// process) or when the slot's process is already gone.
+    pub fn kill_worker(&self, slot: u16) -> Result<()> {
+        let mut children = self.children.lock().unwrap_or_else(|p| p.into_inner());
+        match children.get_mut(slot as usize).and_then(|c| c.take()) {
+            Some(mut child) => {
+                child.kill().with_context(|| format!("kill worker slot {slot}"))?;
+                child.wait().ok();
+                Ok(())
+            }
+            None => bail!(
+                "no spawned process for slot {slot} (hosts mode, or already killed)"
+            ),
+        }
+    }
+
+    /// Shard path to hand a respawned worker, if a persisted shard for
+    /// `slot` exists under `net.shard_dir`.
+    fn shard_arg(&self, slot: u16) -> Option<String> {
+        if self.cfg.sock.shard_dir.is_empty() {
+            return None;
+        }
+        let path = shard_path(&self.cfg.sock.shard_dir, slot);
+        Path::new(&path).exists().then_some(path)
+    }
+
+    /// Bring a dead slot back mid-session (ISSUE: self-healing rejoin).
+    ///
+    /// Spawned mode respawns the worker (pointing it at its persisted
+    /// shard when one exists); hosts mode assumes the operator restarted
+    /// it at the configured address and just redials. The rejoin
+    /// handshake carries the *current* epoch, and [`validate_join`]
+    /// decides the path:
+    ///
+    /// * worker answered with the current epoch (shard reload caught it
+    ///   up) → fast path, adopt immediately;
+    /// * worker answered epoch 0 (empty) → restore path: snapshot a live
+    ///   sibling replica of the same logical node and replay it into the
+    ///   newcomer via a `Restore` frame;
+    /// * anything else (stale shard, wrong config digest) → typed
+    ///   [`WireError`] rejection; the session keeps serving on the
+    ///   surviving replicas.
+    pub fn heal_worker(&self, slot: u16) -> Result<()> {
+        let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if s.broken {
+            bail!("a previous streaming run on this socket executor failed; relaunch the NetSession");
+        }
+        if s.stream_open {
+            bail!("a streaming run is open; finish it before healing a worker");
+        }
+        if slot as usize >= self.placement.total_slots() {
+            bail!("slot {slot} out of range ({} slots)", self.placement.total_slots());
+        }
+        // The old process may still look "live" (killed between phases,
+        // never spoke since): declare it dead first so the membership
+        // table is consistent while we bring the replacement up.
+        let (cur_epoch, mut addr) = {
+            let mut cs = self.cluster.lock().unwrap_or_else(|p| p.into_inner());
+            cs.mark_dead(slot);
+            (cs.epoch, cs.addrs[slot as usize].clone())
+        };
+        if let Some(old) = {
+            let mut children = self.children.lock().unwrap_or_else(|p| p.into_inner());
+            children.get_mut(slot as usize).and_then(|c| c.take())
+        } {
+            reap(old);
+        }
+        if !self.hosts_mode {
+            let mut child = spawn_worker_child(
+                &self.bin,
+                &self.spawn_listen,
+                &self.cfg.sock,
+                self.shard_arg(slot).as_deref(),
+            )
+            .with_context(|| format!("respawn worker slot {slot}"))?;
+            addr = read_announce(&mut child)
+                .with_context(|| format!("worker slot {slot} announce"))?;
+            self.children.lock().unwrap_or_else(|p| p.into_inner())[slot as usize] =
+                Some(child);
+        }
+
+        let ctl = s.ctl.clone();
+        let Session { peers, ev_rx, ev_tx, .. } = &mut *s;
+        // A worker killed *between* runs left its reader's `Closed` (and
+        // possibly stray `Pong`s) sitting in the shared event queue with
+        // nothing draining it. Sweep dead-slot goodbyes now so the
+        // corpse's close is not read as the newcomer failing — the new
+        // reader cannot enqueue anything until after the Hello below.
+        loop {
+            match ev_rx.try_recv() {
+                Ok(DriverEv::Pong { .. }) => {}
+                Ok(DriverEv::Stopped { from, .. }) | Ok(DriverEv::Closed { from, .. })
+                    if !ctl.is_live(from) => {}
+                Ok(_) => bail!("unexpected event queued before rejoin (a live worker died?)"),
+                Err(_) => break,
+            }
+        }
+        let stream = connect_retry(
+            &addr,
+            self.cfg.sock.connect_retries,
+            self.cfg.sock.retry_ms,
+        )
+        .with_context(|| format!("reconnect worker slot {slot} at {addr}"))?;
+        stream.set_write_timeout(Some(PHASE_STALL_TIMEOUT)).ok();
+        let reader = stream.try_clone().context("clone worker conn")?;
+        spawn_reader(reader, slot, ev_tx.clone(), self.cfg.sock.max_frame_bytes);
+        let mut pc = PeerConn::new(stream, self.cfg.stream.agg_bytes);
+
+        let mut hello_peers = {
+            let cs = self.cluster.lock().unwrap_or_else(|p| p.into_inner());
+            cs.addrs.clone()
+        };
+        hello_peers[slot as usize] = addr.clone();
+        let hello = Hello {
+            node: slot,
+            epoch: cur_epoch,
+            dim: self.dim as u32,
+            peers: hello_peers,
+            lsh: self.cfg.lsh,
+            cluster: self.cfg.cluster,
+            stream: self.cfg.stream,
+            digest: self.digest,
+        };
+        pc.send_now(&wire::encode_frame(FrameKind::Hello, &wire::encode_hello(&hello)))?;
+
+        // Await the newcomer's HelloOk. Frames from *dead* slots (their
+        // reader threads announcing the close we caused) are expected
+        // noise; anything from a live slot is a protocol error.
+        let (d, e) = loop {
+            match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                Ok(DriverEv::HelloOk { from, node, digest, epoch }) if from == slot => {
+                    if node != slot {
+                        bail!("worker on conn {from} claims slot {node}");
+                    }
+                    break (digest, epoch);
+                }
+                Ok(DriverEv::Pong { .. }) => {}
+                Ok(DriverEv::Stopped { from, reason }) => {
+                    if ctl.is_live(from) {
+                        bail!("worker {from} stopped during rejoin: {reason}");
+                    }
+                }
+                Ok(DriverEv::Closed { from, err }) => {
+                    if ctl.is_live(from) || from == slot {
+                        bail!("worker {from} closed during rejoin: {err}");
+                    }
+                }
+                Ok(_) => bail!("unexpected frame during rejoin handshake"),
+                Err(e) => bail!("rejoin handshake: {e}"),
+            }
+        };
+        let path = match validate_join(self.digest, cur_epoch, d, e) {
+            Ok(p) => p,
+            Err(werr) => {
+                // Typed rejection (stale shard / wrong config): tell the
+                // worker to exit, reap it, keep serving on survivors.
+                pc.send_now(&wire::encode_frame(FrameKind::Shutdown, &[])).ok();
+                if let Some(child) = {
+                    let mut children =
+                        self.children.lock().unwrap_or_else(|p| p.into_inner());
+                    children.get_mut(slot as usize).and_then(|c| c.take())
+                } {
+                    reap(child);
+                }
+                return Err(anyhow::Error::new(werr)
+                    .context(format!("worker slot {slot} rejoin rejected")));
+            }
+        };
+
+        if matches!(path, RejoinPath::NeedsRestore) {
+            // Replay a live sibling replica's state into the newcomer.
+            let node = self.placement.node_of_slot(slot);
+            let sibling = {
+                let cs = self.cluster.lock().unwrap_or_else(|p| p.into_inner());
+                cs.live_slots_of(&self.placement, node).first().copied()
+            };
+            let Some(sib) = sibling else {
+                bail!(
+                    "logical node {node} has no live replica to restore slot {slot} from"
+                );
+            };
+            peers[sib as usize].send_now(&wire::encode_frame(FrameKind::StateReq, &[]))?;
+            let state = loop {
+                match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                    Ok(DriverEv::State { from, state }) if from == sib => break state,
+                    Ok(DriverEv::Pong { .. }) => {}
+                    Ok(DriverEv::Stopped { from, reason }) => {
+                        if ctl.is_live(from) {
+                            bail!("worker {from} stopped during restore: {reason}");
+                        }
+                    }
+                    Ok(DriverEv::Closed { from, err }) => {
+                        if ctl.is_live(from) || from == slot {
+                            bail!("worker {from} closed during restore: {err}");
+                        }
+                    }
+                    Ok(_) => bail!("unexpected frame during restore"),
+                    Err(e) => bail!("restore snapshot: {e}"),
+                }
+            };
+            let dump = wire::encode_node_state(&state);
+            pc.send_now(&wire::encode_frame(
+                FrameKind::Restore,
+                &wire::encode_restore(cur_epoch, &dump),
+            ))?;
+            loop {
+                match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                    Ok(DriverEv::RestoreOk { from, slot: sl }) if from == slot && sl == slot => {
+                        break
+                    }
+                    Ok(DriverEv::Pong { .. }) => {}
+                    Ok(DriverEv::Stopped { from, reason }) => {
+                        if ctl.is_live(from) {
+                            bail!("worker {from} stopped during restore: {reason}");
+                        }
+                    }
+                    Ok(DriverEv::Closed { from, err }) => {
+                        if ctl.is_live(from) || from == slot {
+                            bail!("worker {from} closed during restore: {err}");
+                        }
+                    }
+                    Ok(_) => bail!("unexpected frame during restore"),
+                    Err(e) => bail!("restore ack: {e}"),
+                }
+            }
+        }
+
+        // Adopt: swap the connection in, flip the slot live, tell the
+        // whole fleet about the new table.
+        peers[slot as usize] = pc;
+        let (frame, live) = {
+            let mut cs = self.cluster.lock().unwrap_or_else(|p| p.into_inner());
+            cs.mark_live(slot, addr);
+            (membership_frame(&cs), cs.live.clone())
+        };
+        for (sl, p) in peers.iter_mut().enumerate() {
+            if live[sl] {
+                p.send_now(&frame)
+                    .with_context(|| format!("announce rejoin to slot {sl}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Ask every live worker to persist its shard to `net.shard_dir`
+    /// (PLSD files via `coordinator/persist`, fenced with the current
+    /// epoch + config digest). Returns the written paths, slot-ordered.
+    pub fn persist_shards(&self) -> Result<Vec<String>> {
+        if self.cfg.sock.shard_dir.is_empty() {
+            bail!("net.shard_dir is empty; set it to persist worker shards");
+        }
+        let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if s.broken {
+            bail!("a previous streaming run on this socket executor failed; relaunch the NetSession");
+        }
+        if s.stream_open {
+            bail!("a streaming run is open; finish it before persisting shards");
+        }
+        std::fs::create_dir_all(&self.cfg.sock.shard_dir)
+            .with_context(|| format!("create shard dir {}", self.cfg.sock.shard_dir))?;
+        let (epoch, live) = {
+            let cs = self.cluster.lock().unwrap_or_else(|p| p.into_inner());
+            (cs.epoch, cs.live.clone())
+        };
+        let ctl = s.ctl.clone();
+        let Session { peers, ev_rx, .. } = &mut *s;
+        let mut paths = Vec::new();
+        let mut expect = 0usize;
+        for (sl, p) in peers.iter_mut().enumerate() {
+            if !live[sl] {
+                continue;
+            }
+            let path = shard_path(&self.cfg.sock.shard_dir, sl as u16);
+            p.send_now(&wire::encode_frame(
+                FrameKind::PersistReq,
+                &wire::encode_persist_req(epoch, &path),
+            ))?;
+            paths.push(path);
+            expect += 1;
+        }
+        let mut acked = 0usize;
+        while acked < expect {
+            match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
+                Ok(DriverEv::PersistOk { .. }) => acked += 1,
+                Ok(DriverEv::Pong { .. }) => {}
+                Ok(DriverEv::Stopped { from, reason }) => {
+                    if ctl.is_live(from) {
+                        bail!("worker {from} stopped during persist: {reason}");
+                    }
+                }
+                Ok(DriverEv::Closed { from, err }) => {
+                    if ctl.is_live(from) {
+                        bail!("worker {from} closed during persist: {err}");
+                    }
+                }
+                Ok(_) => bail!("unexpected frame during persist"),
+                Err(e) => bail!("shard persist: {e}"),
+            }
+        }
+        Ok(paths)
+    }
+
+    /// Snapshot every *live* worker's BI buckets and DP objects
+    /// (differential tests; one `(slot, state)` pair per live slot,
+    /// slot-sorted — dead slots are simply absent).
     pub fn fetch_state(&self) -> Result<Vec<(u16, NodeState)>> {
         let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
         if s.broken {
@@ -1088,20 +1965,31 @@ impl NetSession {
                 s.placement.total_nodes() - 1
             );
         }
+        let live = s.ctl.live_mask();
+        let ctl = s.ctl.clone();
         let Session { peers, ev_rx, .. } = &mut *s;
         let req = wire::encode_frame(FrameKind::StateReq, &[]);
-        for p in peers.iter_mut() {
-            p.send_now(&req)?;
+        let mut expect = 0usize;
+        for (sl, p) in peers.iter_mut().enumerate() {
+            if live[sl] {
+                p.send_now(&req)?;
+                expect += 1;
+            }
         }
-        let mut out = Vec::with_capacity(peers.len());
-        while out.len() < peers.len() {
+        let mut out = Vec::with_capacity(expect);
+        while out.len() < expect {
             match ev_rx.recv_timeout(CONTROL_TIMEOUT) {
                 Ok(DriverEv::State { from, state }) => out.push((from, state)),
+                Ok(DriverEv::Pong { .. }) => {}
                 Ok(DriverEv::Stopped { from, reason }) => {
-                    bail!("worker {from} stopped during snapshot: {reason}")
+                    if ctl.is_live(from) {
+                        bail!("worker {from} stopped during snapshot: {reason}");
+                    }
                 }
                 Ok(DriverEv::Closed { from, err }) => {
-                    bail!("worker {from} closed during snapshot: {err}")
+                    if ctl.is_live(from) {
+                        bail!("worker {from} closed during snapshot: {err}");
+                    }
                 }
                 Ok(_) => bail!("unexpected frame during snapshot"),
                 Err(e) => bail!("state snapshot: {e}"),
@@ -1111,11 +1999,13 @@ impl NetSession {
         Ok(out)
     }
 
-    /// Typed shutdown: ask every worker to exit, then join them all,
-    /// failing on any nonzero exit. Workers that ignore the request are
-    /// killed (and reported) rather than leaked.
+    /// Typed shutdown: ask every live worker to exit, then join every
+    /// spawned child, failing on any nonzero exit from a live worker.
+    /// Dead slots' processes (if any linger) are killed, not judged.
+    /// Workers that ignore the request are killed (and reported) rather
+    /// than leaked.
     pub fn shutdown(mut self) -> Result<()> {
-        {
+        let live = {
             let mut s = self.exec.inner.lock().unwrap_or_else(|p| p.into_inner());
             if s.stream_open {
                 bail!("a streaming run is open; finish it before shutting the workers down");
@@ -1128,22 +2018,34 @@ impl NetSession {
                     s.placement.total_nodes() - 1
                 );
             }
+            let live = s.ctl.live_mask();
             let frame = wire::encode_frame(FrameKind::Shutdown, &[]);
-            for p in s.peers.iter_mut() {
-                p.send_now(&frame)?;
+            for (sl, p) in s.peers.iter_mut().enumerate() {
+                if live[sl] {
+                    p.send_now(&frame)?;
+                }
             }
-        }
-        let mut children = std::mem::take(&mut self.children);
-        for (node, child) in children.iter_mut().enumerate() {
+            live
+        };
+        let children = std::mem::take(
+            &mut *self.children.lock().unwrap_or_else(|p| p.into_inner()),
+        );
+        for (slot, child_opt) in children.into_iter().enumerate() {
+            let Some(mut child) = child_opt else { continue };
+            if !live[slot] {
+                child.kill().ok();
+                child.wait().ok();
+                continue;
+            }
             let deadline = Instant::now() + Duration::from_secs(10);
             loop {
-                match child.try_wait().with_context(|| format!("wait worker {node}"))? {
+                match child.try_wait().with_context(|| format!("wait worker slot {slot}"))? {
                     Some(status) if status.success() => break,
-                    Some(status) => bail!("worker {node} exited with {status}"),
+                    Some(status) => bail!("worker slot {slot} exited with {status}"),
                     None if Instant::now() >= deadline => {
                         child.kill().ok();
                         child.wait().ok();
-                        bail!("worker {node} ignored shutdown; killed");
+                        bail!("worker slot {slot} ignored shutdown; killed");
                     }
                     None => std::thread::sleep(Duration::from_millis(10)),
                 }
@@ -1156,7 +2058,8 @@ impl NetSession {
 impl Drop for NetSession {
     fn drop(&mut self) {
         // Error paths only: `shutdown` drains `children` first.
-        for child in &mut self.children {
+        let children = self.children.get_mut().unwrap_or_else(|p| p.into_inner());
+        for child in children.iter_mut().flatten() {
             child.kill().ok();
             child.wait().ok();
         }
@@ -1181,7 +2084,13 @@ fn reader_loop(mut stream: TcpStream, from: u16, tx: SyncSender<DriverEv>, max_f
         };
         let ev = match frame.kind {
             FrameKind::HelloOk => wire::decode_hello_ok(&frame.payload)
-                .map(|(node, digest)| DriverEv::HelloOk { from, node, digest }),
+                .map(|(node, digest, epoch)| DriverEv::HelloOk { from, node, digest, epoch }),
+            FrameKind::Pong => wire::decode_epoch(&frame.payload)
+                .map(|epoch| DriverEv::Pong { from, epoch }),
+            FrameKind::RestoreOk => wire::decode_slot_ack(&frame.payload)
+                .map(|slot| DriverEv::RestoreOk { from, slot }),
+            FrameKind::PersistOk => wire::decode_slot_ack(&frame.payload)
+                .map(|slot| DriverEv::PersistOk { from, slot }),
             FrameKind::Stage => wire::decode_stage(&frame.payload)
                 .map(|(dest, msg)| DriverEv::Msg { from, dest, msg }),
             FrameKind::FlushAck => wire::decode_flush_ack(&frame.payload)

@@ -62,7 +62,7 @@ impl Client {
         let hello = wire::decode_hello(&f.payload)?;
         let ok = wire::encode_frame(
             FrameKind::HelloOk,
-            &wire::encode_hello_ok(hello.node, hello.digest),
+            &wire::encode_hello_ok(hello.node, hello.digest, hello.epoch),
         );
         stream.write_all(&ok)?;
         Ok(Client { stream, hello, max_frame, next_qid: 0 })

@@ -153,6 +153,7 @@ pub fn serve(
                         let mut c = Conn::new(s, peer.to_string(), lane);
                         let hello = Hello {
                             node: lane as u16,
+                            epoch: 0,
                             dim: dim as u32,
                             peers: Vec::new(),
                             lsh: cfg.lsh,
@@ -370,7 +371,7 @@ pub fn serve(
 fn handle_frame(c: &mut Conn, frame: Frame, expected_digest: u64, dim: usize) -> FrameAction {
     match (c.phase, frame.kind) {
         (Phase::Handshake, FrameKind::HelloOk) => match wire::decode_hello_ok(&frame.payload) {
-            Ok((node, digest)) => {
+            Ok((node, digest, _epoch)) => {
                 if node != c.lane as u16 || digest != expected_digest {
                     return FrameAction::Evict(format!(
                         "handshake digest mismatch (got {digest:#018x}, want {expected_digest:#018x})"

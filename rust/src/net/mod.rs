@@ -13,10 +13,14 @@
 //! * [`peer`] — per-peer connection management with the stream layer's
 //!   packet aggregation (`stream.agg_bytes`);
 //! * [`worker`] — the `parlsh worker --listen <addr>` process hosting one
-//!   node's set of stage copies (via the shared `Placement`);
-//! * [`driver`] — [`NetSession`] (spawn N workers on loopback, handshake,
+//!   worker slot's set of stage copies (via the shared `Placement`);
+//! * [`driver`] — [`NetSession`] (spawn or discover N workers, handshake,
 //!   typed shutdown, no leaked processes) and [`SocketExecutor`], the
 //!   `Executor` impl the coordinator drivers run build and search through;
+//! * [`cluster`] — replicated topology: membership/epoch bookkeeping,
+//!   join validation (digest + epoch fencing), and deterministic
+//!   replica routing (round-robin and Bahmani-style layered/entropy) —
+//!   DESIGN.md §Cluster topology;
 //! * [`front`] — the poll-based serving front door: `parlsh serve
 //!   --listen` multiplexes external clients onto one resident
 //!   `IndexSession` through a readiness-driven event loop, plus the
@@ -25,6 +29,7 @@
 //! Uses `std::net` only — no new dependencies, consistent with the
 //! offline-clean build.
 
+pub mod cluster;
 pub mod driver;
 pub mod front;
 pub mod peer;

@@ -30,7 +30,7 @@
 //! is the front-door result frame (server → external client): the
 //! client's qid, the resolved option echo, and the exact top-k hits.
 
-use crate::config::{ClusterConfig, ObjMapStrategy, StreamConfig};
+use crate::config::{ClusterConfig, ObjMapStrategy, ReplicaRoute, StreamConfig};
 use crate::core::lsh::LshParams;
 use crate::dataflow::message::{Dest, Msg, QueryOptions, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
@@ -40,14 +40,17 @@ use std::fmt;
 use std::io::Read;
 use std::sync::Arc;
 
-// v4: FlushAck WorkStats entries carry `dists_pruned` (9th u64 counter,
-// 67 → 75 bytes per entry) so pruning-ranker work merges across the
-// socket transport like every other counter. The handshake config digest
-// covers the wire version, so a v3 peer is rejected at `Hello` as well as
-// at every frame header. (v3 added per-query search plans — QueryVec
-// carries QueryOptions, Query/CandidateReq/QueryMeta carry the resolved
-// k; v2 added per-copy WorkStats to FlushAck.)
-pub const WIRE_VERSION: u8 = 4;
+// v5: replicated cluster topology (DESIGN.md §Cluster topology). `Hello`
+// carries the session epoch, `HelloOk` echoes the rejoiner's shard epoch,
+// the config block covers `cluster.{replication,replica_route}`, and seven
+// control kinds are added: Ping/Pong (liveness), Restore/RestoreOk (shard
+// transfer into a rejoined worker), Membership (live mask + addresses),
+// PersistReq/PersistOk (shard checkpoint to disk). (v4 added the
+// `dists_pruned` WorkStats counter, 67 → 75 bytes per FlushAck entry;
+// v3 added per-query search plans — QueryVec carries QueryOptions,
+// Query/CandidateReq/QueryMeta carry the resolved k; v2 added per-copy
+// WorkStats to FlushAck.)
+pub const WIRE_VERSION: u8 = 5;
 pub const MAGIC: u16 = 0x504C;
 pub const HEADER_LEN: usize = 12;
 
@@ -69,6 +72,12 @@ pub enum WireError {
     Oversize { len: usize, cap: usize },
     /// FNV checksum over header+payload did not match.
     Checksum { got: u32, want: u32 },
+    /// A (re)joining worker announced a config digest that is not this
+    /// session's — it was built against different parameters.
+    DigestMismatch { got: u64, want: u64 },
+    /// A rejoining worker's shard epoch is neither current nor empty —
+    /// admitting it would serve stale data into a live stream.
+    EpochFenced { got: u64, want: u64 },
 }
 
 impl fmt::Display for WireError {
@@ -85,6 +94,12 @@ impl fmt::Display for WireError {
             }
             WireError::Checksum { got, want } => {
                 write!(f, "frame checksum mismatch (got {got:#010x}, want {want:#010x})")
+            }
+            WireError::DigestMismatch { got, want } => {
+                write!(f, "join config digest mismatch (got {got:#018x}, want {want:#018x})")
+            }
+            WireError::EpochFenced { got, want } => {
+                write!(f, "stale epoch {got} fenced (session at epoch {want})")
             }
         }
     }
@@ -127,6 +142,21 @@ pub enum FrameKind {
     /// Front server → external client: one finished query (qid in the
     /// *client's* namespace, resolved option echo, exact top-k hits).
     Completion = 11,
+    /// Driver → worker: liveness probe (empty payload); reply with `Pong`.
+    Ping = 12,
+    /// Worker → driver: liveness reply carrying the worker's epoch.
+    Pong = 13,
+    /// Driver → rejoined worker: shard transfer (epoch + state dump).
+    Restore = 14,
+    /// Worker → driver: shard replayed; carries the worker's slot id.
+    RestoreOk = 15,
+    /// Driver → worker: the live mask + address per slot, stamped with the
+    /// session epoch, so worker→worker routing agrees with the driver's.
+    Membership = 16,
+    /// Driver → worker: checkpoint your shard to the given path.
+    PersistReq = 17,
+    /// Worker → driver: shard checkpointed; carries the worker's slot id.
+    PersistOk = 18,
 }
 
 impl FrameKind {
@@ -145,6 +175,13 @@ impl FrameKind {
             9 => Some(Stopped),
             10 => Some(Shutdown),
             11 => Some(Completion),
+            12 => Some(Ping),
+            13 => Some(Pong),
+            14 => Some(Restore),
+            15 => Some(RestoreOk),
+            16 => Some(Membership),
+            17 => Some(PersistReq),
+            18 => Some(PersistOk),
             _ => None,
         }
     }
@@ -169,7 +206,10 @@ fn fnv1a32(seed: u32, bytes: &[u8]) -> u32 {
 }
 const FNV_OFFSET: u32 = 0x811C_9DC5;
 
-fn fnv1a64(seed: u64, bytes: &[u8]) -> u64 {
+/// FNV-1a 64 — public because replica routing (`net::cluster::replica`)
+/// hashes query vectors with it; both ends of every connection must agree
+/// on the function bit-for-bit.
+pub fn fnv1a64(seed: u64, bytes: &[u8]) -> u64 {
     let mut h = seed;
     for &b in bytes {
         h ^= b as u64;
@@ -177,7 +217,7 @@ fn fnv1a64(seed: u64, bytes: &[u8]) -> u64 {
     }
     h
 }
-const FNV64_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+pub const FNV64_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
 
 fn put_u8(b: &mut Vec<u8>, v: u8) {
     b.push(v);
@@ -342,6 +382,21 @@ fn obj_map_from_code(c: u8) -> Result<ObjMapStrategy> {
         1 => Ok(ObjMapStrategy::ZOrder),
         2 => Ok(ObjMapStrategy::Lsh),
         _ => bail!("unknown obj_map code {c}"),
+    }
+}
+
+fn replica_route_code(r: ReplicaRoute) -> u8 {
+    match r {
+        ReplicaRoute::RoundRobin => 0,
+        ReplicaRoute::Layered => 1,
+    }
+}
+
+fn replica_route_from_code(c: u8) -> Result<ReplicaRoute> {
+    match c {
+        0 => Ok(ReplicaRoute::RoundRobin),
+        1 => Ok(ReplicaRoute::Layered),
+        _ => bail!("unknown replica_route code {c}"),
     }
 }
 
@@ -571,9 +626,16 @@ pub fn decode_stage(payload: &[u8]) -> Result<(Dest, Msg)> {
 /// worker prove they agree on parameters (and on this codec version).
 #[derive(Clone, Debug)]
 pub struct Hello {
+    /// The worker *slot* this process serves (replica-major layout; with
+    /// `cluster.replication == 1` this is the logical node id). The front
+    /// door reuses the field for the client's admission lane.
     pub node: u16,
+    /// Session epoch (completed write phases) at handshake time. A worker
+    /// echoes its *own* shard epoch in `HelloOk`; the driver fences the
+    /// difference (`net::cluster::membership::validate_join`).
+    pub epoch: u64,
     pub dim: u32,
-    /// Listen address per worker node id (`0..bi_nodes + dp_nodes`).
+    /// Listen address per worker slot (`0..total_slots()`).
     pub peers: Vec<String>,
     pub lsh: LshParams,
     pub cluster: ClusterConfig,
@@ -600,6 +662,8 @@ fn encode_cfg_block(dim: u32, lsh: &LshParams, cluster: &ClusterConfig, stream: 
     put_u32(&mut b, cluster.cores_per_node as u32);
     put_u32(&mut b, cluster.ag_copies as u32);
     put_u8(&mut b, cluster.per_core_copies as u8);
+    put_u32(&mut b, cluster.replication as u32);
+    put_u8(&mut b, replica_route_code(cluster.replica_route));
     put_u8(&mut b, obj_map_code(stream.obj_map));
     put_u64(&mut b, stream.agg_bytes as u64);
     put_u8(&mut b, stream.dedup as u8);
@@ -616,6 +680,7 @@ pub fn config_digest(dim: u32, lsh: &LshParams, cluster: &ClusterConfig, stream:
 pub fn encode_hello(h: &Hello) -> Vec<u8> {
     let mut p = Vec::new();
     put_u16(&mut p, h.node);
+    put_u64(&mut p, h.epoch);
     put_u16(&mut p, h.peers.len() as u16);
     for addr in &h.peers {
         put_str(&mut p, addr);
@@ -630,6 +695,7 @@ pub fn encode_hello(h: &Hello) -> Vec<u8> {
 pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
     let mut rd = Rd::new(payload);
     let node = rd.u16()?;
+    let epoch = rd.u64()?;
     let n_peers = rd.u16()? as usize;
     let mut peers = Vec::with_capacity(n_peers.min(rd.remaining() / 2));
     for _ in 0..n_peers {
@@ -662,6 +728,8 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
         cores_per_node: c.u32()? as usize,
         ag_copies: c.u32()? as usize,
         per_core_copies: c.u8()? != 0,
+        replication: c.u32()? as usize,
+        replica_route: replica_route_from_code(c.u8()?)?,
     };
     let stream = StreamConfig {
         obj_map: obj_map_from_code(c.u8()?)?,
@@ -675,22 +743,28 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
         pending_cap: 0,
     };
     c.done()?;
-    Ok(Hello { node, dim, peers, lsh, cluster, stream, digest })
+    Ok(Hello { node, epoch, dim, peers, lsh, cluster, stream, digest })
 }
 
-pub fn encode_hello_ok(node: u16, digest: u64) -> Vec<u8> {
-    let mut p = Vec::with_capacity(10);
+/// `HelloOk`: the responder echoes its slot and the config digest, plus
+/// its *own* epoch — for a worker, the epoch of the shard it holds (0 if
+/// empty; the file's stamp if it reloaded one via `--shard`). The driver
+/// fences on the difference at rejoin.
+pub fn encode_hello_ok(node: u16, digest: u64, epoch: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(18);
     put_u16(&mut p, node);
     put_u64(&mut p, digest);
+    put_u64(&mut p, epoch);
     p
 }
 
-pub fn decode_hello_ok(payload: &[u8]) -> Result<(u16, u64)> {
+pub fn decode_hello_ok(payload: &[u8]) -> Result<(u16, u64, u64)> {
     let mut rd = Rd::new(payload);
     let node = rd.u16()?;
     let digest = rd.u64()?;
+    let epoch = rd.u64()?;
     rd.done()?;
-    Ok((node, digest))
+    Ok((node, digest, epoch))
 }
 
 pub fn encode_peer_hello(node: u16) -> Vec<u8> {
@@ -704,6 +778,101 @@ pub fn decode_peer_hello(payload: &[u8]) -> Result<u16> {
     let node = rd.u16()?;
     rd.done()?;
     Ok(node)
+}
+
+// ------------------------------------------------------- cluster control
+
+/// Bare epoch payload (`Pong`).
+pub fn encode_epoch(epoch: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8);
+    put_u64(&mut p, epoch);
+    p
+}
+
+pub fn decode_epoch(payload: &[u8]) -> Result<u64> {
+    let mut rd = Rd::new(payload);
+    let epoch = rd.u64()?;
+    rd.done()?;
+    Ok(epoch)
+}
+
+/// Bare slot-id payload (`RestoreOk`, `PersistOk`).
+pub fn encode_slot_ack(slot: u16) -> Vec<u8> {
+    let mut p = Vec::with_capacity(2);
+    put_u16(&mut p, slot);
+    p
+}
+
+pub fn decode_slot_ack(payload: &[u8]) -> Result<u16> {
+    let mut rd = Rd::new(payload);
+    let slot = rd.u16()?;
+    rd.done()?;
+    Ok(slot)
+}
+
+/// `Membership`: the session epoch plus, per worker slot, the live flag
+/// and the slot's current listen address (rejoined workers get fresh
+/// OS-assigned ports, so addresses must travel with liveness).
+pub fn encode_membership(epoch: u64, slots: &[(bool, String)]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(10 + slots.len() * 16);
+    put_u64(&mut p, epoch);
+    put_u16(&mut p, slots.len() as u16);
+    for (live, addr) in slots {
+        put_u8(&mut p, *live as u8);
+        put_str(&mut p, addr);
+    }
+    p
+}
+
+#[allow(clippy::type_complexity)]
+pub fn decode_membership(payload: &[u8]) -> Result<(u64, Vec<(bool, String)>)> {
+    let mut rd = Rd::new(payload);
+    let epoch = rd.u64()?;
+    let n = rd.u16()? as usize;
+    let mut slots = Vec::with_capacity(n.min(rd.remaining() / 3));
+    for _ in 0..n {
+        let live = match rd.u8()? {
+            0 => false,
+            1 => true,
+            b => bail!("bad liveness byte {b}"),
+        };
+        slots.push((live, rd.str()?));
+    }
+    rd.done()?;
+    Ok((epoch, slots))
+}
+
+/// `Restore`: the epoch the shard is current at + an [`encode_state_dump`]
+/// payload to replay. The dump rides opaquely so a driver can forward a
+/// sibling's `StateDump` without re-encoding.
+pub fn encode_restore(epoch: u64, dump: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + dump.len());
+    put_u64(&mut p, epoch);
+    p.extend_from_slice(dump);
+    p
+}
+
+pub fn decode_restore(payload: &[u8]) -> Result<(u64, &[u8])> {
+    let mut rd = Rd::new(payload);
+    let epoch = rd.u64()?;
+    let dump = rd.take(rd.remaining())?;
+    Ok((epoch, dump))
+}
+
+/// `PersistReq`: checkpoint the shard at `path`, stamped with `epoch`.
+pub fn encode_persist_req(epoch: u64, path: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(10 + path.len());
+    put_u64(&mut p, epoch);
+    put_str(&mut p, path);
+    p
+}
+
+pub fn decode_persist_req(payload: &[u8]) -> Result<(u64, String)> {
+    let mut rd = Rd::new(payload);
+    let epoch = rd.u64()?;
+    let path = rd.str()?;
+    rd.done()?;
+    Ok((epoch, path))
 }
 
 // --------------------------------------------------------------- control
@@ -893,6 +1062,37 @@ pub fn encode_state_dump(bis: &[BiState], dps: &[DpState]) -> Vec<u8> {
         put_u32(&mut p, snap.len() as u32);
         for (id, v) in snap {
             put_u32(&mut p, id);
+            put_f32s(&mut p, v);
+        }
+    }
+    p
+}
+
+/// Re-encode a decoded [`NodeState`] into the exact `StateDump` payload
+/// layout. The rejoin path needs this: the driver pulls a dump from a live
+/// sibling replica (decoded by its reader thread) and forwards the bytes
+/// inside a `Restore` frame to the rejoining worker.
+pub fn encode_node_state(state: &NodeState) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u32(&mut p, state.bis.len() as u32);
+    for (copy, buckets) in &state.bis {
+        put_u16(&mut p, *copy);
+        put_u32(&mut p, buckets.len() as u32);
+        for (key, refs) in buckets {
+            put_u64(&mut p, *key);
+            put_u32(&mut p, refs.len() as u32);
+            for &(id, dp) in refs {
+                put_u32(&mut p, id);
+                put_u16(&mut p, dp);
+            }
+        }
+    }
+    put_u32(&mut p, state.dps.len() as u32);
+    for (copy, objs) in &state.dps {
+        put_u16(&mut p, *copy);
+        put_u32(&mut p, objs.len() as u32);
+        for (id, v) in objs {
+            put_u32(&mut p, *id);
             put_f32s(&mut p, v);
         }
     }
@@ -1222,6 +1422,7 @@ mod tests {
         // decoding too (the digest covers the version byte)
         let hello = Hello {
             node: 0,
+            epoch: 0,
             dim: 16,
             peers: vec!["127.0.0.1:1".into()],
             lsh: LshParams { l: 2, m: 4, w: 4.0, k: 3, t: 2, seed: 1 },
@@ -1231,15 +1432,17 @@ mod tests {
                 cores_per_node: 1,
                 ag_copies: 1,
                 per_core_copies: false,
+                replication: 1,
+                replica_route: ReplicaRoute::RoundRobin,
             },
             stream: StreamConfig::default(),
             digest: 0,
         };
         let mut p = encode_hello(&hello);
-        // the cfg block starts after node(2) + n_peers(2) + one addr
-        // (2 + len) + cfg_len(4); its first byte is the version
+        // the cfg block starts after node(2) + epoch(8) + n_peers(2) + one
+        // addr (2 + len) + cfg_len(4); its first byte is the version
         let addr_len = hello.peers[0].len();
-        let ver_at = 2 + 2 + 2 + addr_len + 4;
+        let ver_at = 2 + 8 + 2 + 2 + addr_len + 4;
         assert_eq!(p[ver_at], WIRE_VERSION);
         p[ver_at] = 2;
         // refresh the trailing digest so only the version disagrees
@@ -1256,6 +1459,7 @@ mod tests {
     fn hello_roundtrip_and_digest() {
         let hello = Hello {
             node: 2,
+            epoch: 5,
             dim: 128,
             peers: vec!["127.0.0.1:41000".into(), "127.0.0.1:41001".into(), "127.0.0.1:41002".into()],
             lsh: LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 },
@@ -1265,6 +1469,8 @@ mod tests {
                 cores_per_node: 4,
                 ag_copies: 2,
                 per_core_copies: false,
+                replication: 2,
+                replica_route: ReplicaRoute::Layered,
             },
             stream: StreamConfig {
                 obj_map: ObjMapStrategy::Lsh,
@@ -1279,10 +1485,13 @@ mod tests {
         let p = encode_hello(&hello);
         let h2 = decode_hello(&p).unwrap();
         assert_eq!(h2.node, 2);
+        assert_eq!(h2.epoch, 5);
         assert_eq!(h2.dim, 128);
         assert_eq!(h2.peers, hello.peers);
         assert_eq!(h2.lsh, hello.lsh);
         assert_eq!(h2.cluster.dp_nodes, 2);
+        assert_eq!(h2.cluster.replication, 2);
+        assert_eq!(h2.cluster.replica_route, ReplicaRoute::Layered);
         assert_eq!(h2.stream.obj_map, ObjMapStrategy::Lsh);
         assert_eq!(h2.stream.inflight, 2);
         assert_eq!(
@@ -1364,8 +1573,8 @@ mod tests {
         assert_eq!(decode_qid(&encode_qid(77)).unwrap(), 77);
         assert_eq!(decode_peer_hello(&encode_peer_hello(3)).unwrap(), 3);
         assert_eq!(
-            decode_hello_ok(&encode_hello_ok(2, 0xDEAD_BEEF)).unwrap(),
-            (2, 0xDEAD_BEEF)
+            decode_hello_ok(&encode_hello_ok(2, 0xDEAD_BEEF, 9)).unwrap(),
+            (2, 0xDEAD_BEEF, 9)
         );
         assert_eq!(
             decode_stopped(&encode_stopped("worker dispatch panicked")).unwrap(),
@@ -1508,5 +1717,92 @@ mod tests {
         let mut dec = FrameDecoder::new();
         dec.push(b"GET / HTTP/1.1\r\n");
         assert!(matches!(dec.next_frame(1 << 16), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn cluster_control_payloads_roundtrip() {
+        assert_eq!(decode_epoch(&encode_epoch(u64::MAX)).unwrap(), u64::MAX);
+        assert_eq!(decode_slot_ack(&encode_slot_ack(7)).unwrap(), 7);
+
+        let (epoch, path) = decode_persist_req(&encode_persist_req(3, "/tmp/s/slot02.shard")).unwrap();
+        assert_eq!((epoch, path.as_str()), (3, "/tmp/s/slot02.shard"));
+
+        // Restore wraps a real state dump opaquely
+        let mut bi = BiState::new(0, 1, 0);
+        bi.on_index_ref(42, 1, 0);
+        let dump = encode_state_dump(&[bi], &[]);
+        let p = encode_restore(9, &dump);
+        let (e, d) = decode_restore(&p).unwrap();
+        assert_eq!(e, 9);
+        let st = decode_state_dump(d).unwrap();
+        assert_eq!(st.bis[0].1, vec![(42u64, vec![(1u32, 0u16)])]);
+        // the rejoin path re-encodes the decoded dump bit-for-bit
+        assert_eq!(encode_node_state(&st), dump);
+
+        // empty dump (a worker hosting nothing) is valid too
+        let (e, d) = decode_restore(&encode_restore(1, &[])).unwrap();
+        assert_eq!((e, d.len()), (1, 0));
+
+        // trailing garbage is rejected on the fixed-size payloads
+        let mut p = encode_epoch(4);
+        p.push(0);
+        assert!(decode_epoch(&p).is_err());
+        let mut p = encode_slot_ack(4);
+        p.push(0);
+        assert!(decode_slot_ack(&p).is_err());
+    }
+
+    #[test]
+    fn membership_roundtrip_and_corruption() {
+        let slots = vec![
+            (true, "127.0.0.1:41000".to_string()),
+            (false, "127.0.0.1:41001".to_string()),
+            (true, "127.0.0.1:9".to_string()),
+        ];
+        let p = encode_membership(12, &slots);
+        let (epoch, s2) = decode_membership(&p).unwrap();
+        assert_eq!(epoch, 12);
+        assert_eq!(s2, slots);
+
+        // empty table roundtrips (a session with zero workers is degenerate
+        // but the codec must not choke)
+        let (e, s) = decode_membership(&encode_membership(0, &[])).unwrap();
+        assert_eq!((e, s.len()), (0, 0));
+
+        // every single-byte corruption of the full frame is rejected or
+        // yields a failed decode — never a silent misparse into a
+        // different live mask of the same length
+        let frame = encode_frame(FrameKind::Membership, &p);
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x40;
+            let rejected = match read_back(&bad, 1 << 16) {
+                Err(_) => true,
+                Ok(f) => decode_membership(&f.payload).is_err(),
+            };
+            assert!(rejected, "flip at byte {i} went undetected");
+        }
+
+        // a liveness byte that is neither 0 nor 1 is a typed decode error
+        let mut raw = encode_membership(1, &[(true, "a".to_string())]);
+        // epoch(8) + count(2) → liveness byte at offset 10
+        raw[10] = 2;
+        assert!(decode_membership(&raw).is_err());
+    }
+
+    #[test]
+    fn hello_ok_carries_the_rejoin_epoch() {
+        // random epochs and digests roundtrip exactly
+        check("wire-hello-ok-roundtrip", 200, |g| {
+            let node = g.usize_in(0, u16::MAX as usize) as u16;
+            let digest = g.rng.next_u64();
+            let epoch = g.rng.next_u64();
+            let (n2, d2, e2) = decode_hello_ok(&encode_hello_ok(node, digest, epoch)).unwrap();
+            assert_eq!((node, digest, epoch), (n2, d2, e2));
+        });
+        // a v4-sized (10-byte, epoch-less) HelloOk is rejected, not
+        // misparsed — the epoch field is load-bearing for join fencing
+        let legacy = &encode_hello_ok(1, 2, 3)[..10];
+        assert!(decode_hello_ok(legacy).is_err());
     }
 }

@@ -1,11 +1,12 @@
-//! The `parlsh worker --listen <addr>` process: hosts one cluster node's
-//! set of stage copies (paper: node = set of copies) behind the socket
-//! transport.
+//! The `parlsh worker --listen <addr>` process: hosts one worker *slot*'s
+//! set of stage copies (paper: node = set of copies; with
+//! `cluster.replication` > 1 each logical node is served by several slots,
+//! see `net::cluster`) behind the socket transport.
 //!
 //! Lifecycle: bind, print `PARLSH_WORKER_LISTEN <addr>` on stdout (the one
 //! and only stdout write — the launcher reads it to learn the bound port),
 //! accept connections, then dispatch. The first frame on each accepted
-//! connection identifies the sender: `Hello` (the driver — carries node
+//! connection identifies the sender: `Hello` (the driver — carries slot
 //! assignment, placement, config and digest) or `PeerHello` (another
 //! worker). Per-connection reader threads decode frames into one internal
 //! *bounded* channel (`net.queue_frames`: a full queue blocks the reader,
@@ -16,25 +17,41 @@
 //! state-identity contract relies on (each BI/DP copy sees the single IR
 //! source in emission order, exactly like the in-process executors).
 //!
-//! Emissions route by `Placement`: same-node → local queue (a free
-//! delivery, like the in-process meters), head node → driver connection,
-//! other nodes → lazily-dialed peer connections. All outgoing frames are
-//! aggregated per peer (`stream.agg_bytes`) and flushed at idle, and the
-//! worker's `TrafficMeter` is charged with real encoded frame bytes —
-//! shipped back on every `FlushReq` barrier.
+//! Emissions route by `Placement` + the local replica live mask: same-slot
+//! → local queue (a free delivery, like the in-process meters), head node
+//! → driver connection, other slots → lazily-dialed peer connections, with
+//! per-query `CandidateReq` hops pinned to one live replica by the shared
+//! deterministic `pick_slot` rule. All outgoing frames are aggregated per
+//! peer (`stream.agg_bytes`) and flushed at idle, and the worker's
+//! `TrafficMeter` is charged with real encoded frame bytes — shipped back
+//! on every `FlushReq` barrier.
+//!
+//! Replication plumbing: `Membership` frames refresh the live mask and the
+//! peer address table (a rejoined slot gets a fresh OS port); `Ping` is
+//! answered with `Pong(epoch)` so the driver's failure detector hears from
+//! us; `Restore` replays a sibling replica's `StateDump` into this
+//! (fresh) worker; `PersistReq` saves the hosted shard through
+//! `coordinator::persist::save_shard`. A worker started with
+//! `--shard=PATH` reloads that file before `HelloOk` and announces the
+//! shard's epoch, letting the driver fence stale state (`net::cluster`).
+//! Sends to a dead peer never kill the worker: the frame is dropped, the
+//! slot is marked dead locally, and the driver's retarget logic owns
+//! re-dispatching the affected queries.
 //!
 //! Shutdown is typed both ways: a `Shutdown` frame exits cleanly; any
 //! failure path fires a drop-guard that sends the driver a `Stopped` frame
 //! (the socket rendition of the threaded executor's drop-guard), so the
 //! driver's admission loop can never hang on a dead worker.
 
-use crate::config::{Config, SocketConfig};
+use crate::config::{Config, ReplicaRoute, SocketConfig};
+use crate::coordinator::persist;
 use crate::dataflow::exec::{BiHandler, DpHandler, StageHandler};
 use crate::dataflow::message::{Dest, Msg, StageKind};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::dataflow::Placement;
+use crate::net::cluster::pick_slot;
 use crate::net::peer::{connect_retry, PeerConn};
-use crate::net::wire::{self, FrameKind, Hello};
+use crate::net::wire::{self, FrameKind, Hello, NodeState};
 use crate::runtime::{Ranker, SimdRanker};
 use crate::stages::{BiState, DpState};
 use crate::util::cli::Args;
@@ -58,23 +75,34 @@ enum Ev {
     Done(u32),
     Flush(u32),
     StateReq,
+    Ping,
+    Membership { epoch: u64, table: Vec<(bool, String)> },
+    Restore { epoch: u64, dump: Vec<u8> },
+    PersistReq { epoch: u64, path: String },
     Shutdown,
     Closed { driver: bool, err: String },
     Fatal(String),
 }
 
-/// CLI entry: `parlsh worker [--listen=ADDR] [--set net.*=...]`.
+/// CLI entry: `parlsh worker [--listen=ADDR | --join=ADDR] [--shard=PATH]
+/// [--set net.*=...]`. `--join` is `--listen` under its discovery-mode
+/// name: a worker bound at a `[net] hosts` table address, waiting for the
+/// driver to find it instead of being spawned by it. `--shard` reloads a
+/// `persist::save_shard` file before the handshake so a restarted worker
+/// can rejoin a session without a state transfer (fenced by config digest
+/// + epoch on the driver side).
 pub fn run(args: &Args) -> Result<()> {
     let cfg = Config::load(args)?;
     let listen = args
-        .opt("listen")
+        .opt("join")
+        .or_else(|| args.opt("listen"))
         .map(str::to_string)
         .unwrap_or_else(|| cfg.sock.listen.clone());
-    serve(&listen, &cfg.sock)
+    serve(&listen, &cfg.sock, args.opt("shard"))
 }
 
 /// Bind, announce, and dispatch until `Shutdown` (or a fatal error).
-pub fn serve(listen: &str, sock: &SocketConfig) -> Result<()> {
+pub fn serve(listen: &str, sock: &SocketConfig, shard: Option<&str>) -> Result<()> {
     let listener =
         TcpListener::bind(listen).with_context(|| format!("worker bind {listen}"))?;
     let addr = listener.local_addr()?;
@@ -91,7 +119,7 @@ pub fn serve(listen: &str, sock: &SocketConfig) -> Result<()> {
     let (tx, rx) = mpsc::sync_channel::<Ev>(sock.queue_frames.max(1));
     let max_frame = sock.max_frame_bytes;
     std::thread::spawn(move || accept_loop(listener, tx, max_frame));
-    dispatch(rx, sock.clone())
+    dispatch(rx, sock.clone(), shard)
 }
 
 fn accept_loop(listener: TcpListener, tx: SyncSender<Ev>, max_frame: usize) {
@@ -165,6 +193,19 @@ fn reader_rest(mut stream: TcpStream, tx: SyncSender<Ev>, max_frame: usize, from
                         Err(e) => Ev::Fatal(format!("bad flush frame: {e}")),
                     },
                     FrameKind::StateReq => Ev::StateReq,
+                    FrameKind::Ping => Ev::Ping,
+                    FrameKind::Membership => match wire::decode_membership(&f.payload) {
+                        Ok((epoch, table)) => Ev::Membership { epoch, table },
+                        Err(e) => Ev::Fatal(format!("bad membership frame: {e}")),
+                    },
+                    FrameKind::Restore => match wire::decode_restore(&f.payload) {
+                        Ok((epoch, dump)) => Ev::Restore { epoch, dump: dump.to_vec() },
+                        Err(e) => Ev::Fatal(format!("bad restore frame: {e}")),
+                    },
+                    FrameKind::PersistReq => match wire::decode_persist_req(&f.payload) {
+                        Ok((epoch, path)) => Ev::PersistReq { epoch, path },
+                        Err(e) => Ev::Fatal(format!("bad persist frame: {e}")),
+                    },
                     FrameKind::Shutdown => Ev::Shutdown,
                     other => Ev::Fatal(format!("unexpected frame {other:?}")),
                 };
@@ -205,7 +246,7 @@ impl Drop for StopGuard {
     }
 }
 
-fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
+fn dispatch(rx: Receiver<Ev>, sock: SocketConfig, shard: Option<&str>) -> Result<()> {
     // Await the handshake before anything else; the driver holds the
     // workload back until every worker replied HelloOk, so no peer can
     // reach us with messages before our state exists.
@@ -217,22 +258,25 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
     };
 
     let placement = Placement::new(&hello.cluster);
-    let my = hello.node;
-    let n_workers = placement.total_nodes() - 1;
-    if (my as usize) >= n_workers {
-        bail!("assigned node {my} out of range (0..{n_workers})");
+    let my = hello.node; // slot id, replica-major (dataflow::Placement)
+    let n_slots = placement.total_slots();
+    if (my as usize) >= n_slots {
+        bail!("assigned slot {my} out of range (0..{n_slots})");
     }
-    if hello.peers.len() != n_workers {
-        bail!("peer table has {} entries, expected {n_workers}", hello.peers.len());
+    if hello.peers.len() != n_slots {
+        bail!("peer table has {} entries, expected {n_slots}", hello.peers.len());
     }
+    let my_logical = placement.node_of_slot(my);
+    let route = hello.cluster.replica_route;
     let dim = hello.dim as usize;
     let agg = hello.stream.agg_bytes;
 
-    // The set of stage copies this node hosts, per the shared placement.
+    // The set of stage copies this slot hosts: its logical node's share of
+    // the placement (every replica slot of a node hosts identical copies).
     let mut bis: Vec<BiState> = Vec::new();
     let mut bi_idx: HashMap<u16, usize> = HashMap::new();
     for c in 0..placement.bi_copies as u16 {
-        if placement.node_of(StageKind::Bi, c) == my {
+        if placement.node_of(StageKind::Bi, c) == my_logical {
             bi_idx.insert(c, bis.len());
             bis.push(BiState::new(c, placement.ag_copies, hello.stream.max_candidates));
         }
@@ -240,13 +284,34 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
     let mut dps: Vec<DpState> = Vec::new();
     let mut dp_idx: HashMap<u16, usize> = HashMap::new();
     for c in 0..placement.dp_copies as u16 {
-        if placement.node_of(StageKind::Dp, c) == my {
+        if placement.node_of(StageKind::Dp, c) == my_logical {
             dp_idx.insert(c, dps.len());
             // Per-query plans: the ranking depth k now arrives on every
             // CandidateReq (wire v3), so the DP store needs no frozen k.
             dps.push(DpState::new(c, dim, placement.ag_copies, hello.stream.dedup));
         }
     }
+
+    // A restarted worker reloads its shard before answering the handshake
+    // and announces the shard's epoch; the driver fences it (digest +
+    // epoch, `net::cluster::validate_join`) before admitting any traffic.
+    // A missing/unreadable/mismatched file means "join empty" (epoch 0) —
+    // the driver then restores us from a live sibling replica.
+    let mut epoch: u64 = 0;
+    if let Some(path) = shard {
+        match persist::load_shard(path, hello.digest) {
+            Ok((shard_epoch, state)) => {
+                replay_state(&state, &mut bis, &bi_idx, &mut dps, &dp_idx)
+                    .with_context(|| format!("replay shard {path}"))?;
+                epoch = shard_epoch;
+                eprintln!("worker slot {my}: reloaded shard {path} at epoch {epoch}");
+            }
+            Err(e) => {
+                eprintln!("worker slot {my}: shard {path} unusable ({e}); joining empty");
+            }
+        }
+    }
+
     // Workers rank with the SIMD tier — bit-identical to the scalar
     // oracle and therefore to the inline differential baseline
     // (DESIGN.md §Transports, §Kernels).
@@ -257,10 +322,12 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
     let mut driver = PeerConn::new(driver_stream, agg);
     driver.send_now(&wire::encode_frame(
         FrameKind::HelloOk,
-        &wire::encode_hello_ok(my, hello.digest),
+        &wire::encode_hello_ok(my, hello.digest, epoch),
     ))?;
 
-    let mut peers: Vec<Option<PeerConn>> = (0..n_workers).map(|_| None).collect();
+    let mut peers: Vec<Option<PeerConn>> = (0..n_slots).map(|_| None).collect();
+    let mut addrs: Vec<String> = hello.peers.clone();
+    let mut live: Vec<bool> = vec![true; n_slots];
     let mut meter = fresh_meter(agg);
     let mut queue: VecDeque<(Dest, Msg)> = VecDeque::new();
     let mut scratch: Vec<(Dest, Msg)> = Vec::new();
@@ -272,9 +339,7 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
                 // Idle: everything queued so far must reach the wire before
                 // we block, or closed-loop admission would deadlock.
                 driver.flush()?;
-                for p in peers.iter_mut().flatten() {
-                    p.flush()?;
-                }
+                flush_peers(&mut peers, &mut live, my);
                 match rx.recv() {
                     Ok(ev) => ev,
                     Err(_) => bail!("event channel closed"),
@@ -294,7 +359,9 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
                     &ranker,
                     &placement,
                     my,
-                    &hello.peers,
+                    route,
+                    &addrs,
+                    &mut live,
                     &sock,
                     agg,
                     &mut driver,
@@ -309,9 +376,7 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
                 }
             }
             Ev::Flush(seq) => {
-                for p in peers.iter_mut().flatten() {
-                    p.flush()?;
-                }
+                flush_peers(&mut peers, &mut live, my);
                 meter.flush();
                 // Ship (and reset) the phase work counters of every hosted
                 // copy alongside the meter, so driver-side work accounting
@@ -336,11 +401,56 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig) -> Result<()> {
                     &wire::encode_state_dump(&bis, &dps),
                 ))?;
             }
+            Ev::Ping => {
+                // Liveness probe: answer immediately (ahead of any queued
+                // stage traffic) with our epoch, so the driver's failure
+                // detector sees both "alive" and "in sync".
+                driver.send_now(&wire::encode_frame(
+                    FrameKind::Pong,
+                    &wire::encode_epoch(epoch),
+                ))?;
+            }
+            Ev::Membership { epoch: e, table } => {
+                if table.len() != n_slots {
+                    bail!("membership table has {} slots, expected {n_slots}", table.len());
+                }
+                epoch = e;
+                for (slot, (is_live, addr)) in table.into_iter().enumerate() {
+                    // A changed address (rejoined replica on a fresh OS
+                    // port) or a death both invalidate a cached connection.
+                    if addrs[slot] != addr || !is_live {
+                        peers[slot] = None;
+                    }
+                    addrs[slot] = addr;
+                    // Never mark ourselves dead: if the driver still talks
+                    // to us, we serve (our entry flips back on rejoin).
+                    live[slot] = is_live || slot == my as usize;
+                }
+            }
+            Ev::Restore { epoch: e, dump } => {
+                // Replay a sibling replica's state dump into this (fresh)
+                // worker, adopt the driver's epoch, and acknowledge.
+                let state = wire::decode_state_dump(&dump)?;
+                replay_state(&state, &mut bis, &bi_idx, &mut dps, &dp_idx)
+                    .with_context(|| format!("restore into slot {my}"))?;
+                epoch = e;
+                driver.send_now(&wire::encode_frame(
+                    FrameKind::RestoreOk,
+                    &wire::encode_slot_ack(my),
+                ))?;
+            }
+            Ev::PersistReq { epoch: e, path } => {
+                persist::save_shard(&path, e, hello.digest, &bis, &dps)
+                    .with_context(|| format!("persist slot {my} to {path}"))?;
+                epoch = e;
+                driver.send_now(&wire::encode_frame(
+                    FrameKind::PersistOk,
+                    &wire::encode_slot_ack(my),
+                ))?;
+            }
             Ev::Shutdown => {
                 driver.flush()?;
-                for p in peers.iter_mut().flatten() {
-                    p.flush()?;
-                }
+                flush_peers(&mut peers, &mut live, my);
                 guard.disarm();
                 return Ok(());
             }
@@ -362,8 +472,87 @@ fn fresh_meter(agg: usize) -> TrafficMeter {
     m
 }
 
+/// Flush every live peer connection; a flush failure marks that slot dead
+/// locally (dropping the buffered frames) instead of killing the worker —
+/// the driver detects the crash on its own connection and retargets the
+/// affected queries.
+fn flush_peers(peers: &mut [Option<PeerConn>], live: &mut [bool], my: u16) {
+    for (slot, conn) in peers.iter_mut().enumerate() {
+        let Some(p) = conn else { continue };
+        if let Err(e) = p.flush() {
+            eprintln!("worker slot {my}: peer slot {slot} flush failed ({e}); marking dead");
+            *conn = None;
+            live[slot] = false;
+        }
+    }
+}
+
+/// Replay a decoded [`NodeState`] (shard file or `Restore` frame) into the
+/// hosted stage copies. Only copies this slot actually hosts are legal —
+/// anything else means the dump came from a different placement.
+fn replay_state(
+    state: &NodeState,
+    bis: &mut [BiState],
+    bi_idx: &HashMap<u16, usize>,
+    dps: &mut [DpState],
+    dp_idx: &HashMap<u16, usize>,
+) -> Result<()> {
+    for (copy, buckets) in &state.bis {
+        let &i = bi_idx
+            .get(copy)
+            .with_context(|| format!("restored BI copy {copy} not hosted here"))?;
+        for (key, refs) in buckets {
+            for &(id, dp) in refs {
+                bis[i].on_index_ref(*key, id, dp);
+            }
+        }
+    }
+    for (copy, objs) in &state.dps {
+        let &i = dp_idx
+            .get(copy)
+            .with_context(|| format!("restored DP copy {copy} not hosted here"))?;
+        for (id, v) in objs {
+            dps[i].on_store(*id, v);
+        }
+    }
+    Ok(())
+}
+
+/// Resolve an emission's destination to one worker slot: the logical
+/// node's live replicas (ascending slot order — the canonical order every
+/// router shares), then the deterministic per-query pick. `None` means no
+/// replica survives; the caller drops the frame and lets the driver's
+/// failure detector degrade or retarget the query.
+fn route_slot(
+    placement: &Placement,
+    route: ReplicaRoute,
+    live: &[bool],
+    node: u16,
+    m: &Msg,
+) -> Option<u16> {
+    let slots: Vec<u16> = (0..placement.replication)
+        .map(|r| placement.slot_of(node, r))
+        .filter(|&s| live[s as usize])
+        .collect();
+    if slots.is_empty() {
+        return None;
+    }
+    match m {
+        // Per-query hops pin to one replica per logical node — every
+        // sender agrees because the pick is a pure function of the same
+        // inputs (net::cluster::replica).
+        Msg::CandidateReq { qid, v, .. } | Msg::Query { qid, v, .. } => {
+            Some(pick_slot(route, &slots, *qid, v))
+        }
+        // Anything else a worker emits toward a worker node would be
+        // build-path (driver-originated in this dataflow); lowest live
+        // replica, deterministically.
+        _ => Some(slots[0]),
+    }
+}
+
 /// Process queued local deliveries to quiescence, routing emissions by
-/// placement (local re-queue / driver / lazily-dialed peer).
+/// placement + live mask (local re-queue / driver / lazily-dialed peer).
 #[allow(clippy::too_many_arguments)]
 fn drain(
     queue: &mut VecDeque<(Dest, Msg)>,
@@ -374,7 +563,9 @@ fn drain(
     ranker: &dyn Ranker,
     placement: &Placement,
     my: u16,
+    route: ReplicaRoute,
     addrs: &[String],
+    live: &mut [bool],
     sock: &SocketConfig,
     agg: usize,
     driver: &mut PeerConn,
@@ -387,30 +578,50 @@ fn drain(
             StageKind::Bi => {
                 let &i = bi_idx
                     .get(&dest.copy)
-                    .with_context(|| format!("BI copy {} not hosted on node {my}", dest.copy))?;
+                    .with_context(|| format!("BI copy {} not hosted on slot {my}", dest.copy))?;
                 BiHandler { bi: &mut bis[i] }.on_msg(msg, scratch);
             }
             StageKind::Dp => {
                 let &i = dp_idx
                     .get(&dest.copy)
-                    .with_context(|| format!("DP copy {} not hosted on node {my}", dest.copy))?;
+                    .with_context(|| format!("DP copy {} not hosted on slot {my}", dest.copy))?;
                 DpHandler { dp: &mut dps[i], ranker: Some(ranker) }.on_msg(msg, scratch);
             }
-            other => bail!("stage {other:?} routed to worker node {my}"),
+            other => bail!("stage {other:?} routed to worker slot {my}"),
         }
         for (d, m) in scratch.drain(..) {
             let node = placement.node_of(d.stage, d.copy);
-            if node == my {
-                // Same-node delivery: free, like the in-process executors.
+            if node == placement.head_node {
+                let frame = wire::stage_frame(d, &m);
+                meter.send(my, node, frame.len());
+                driver.send(&frame)?;
+                continue;
+            }
+            let Some(slot) = route_slot(placement, route, live, node, &m) else {
+                // No live replica: drop — the driver fails or retargets
+                // the query itself when it notices the dead node.
+                eprintln!(
+                    "worker slot {my}: no live replica for node {node}, dropping {:?} emission",
+                    d.stage
+                );
+                continue;
+            };
+            if slot == my {
+                // Same-slot delivery: free, like the in-process executors.
                 meter.send(my, my, 0);
                 queue.push_back((d, m));
             } else {
                 let frame = wire::stage_frame(d, &m);
-                meter.send(my, node, frame.len());
-                if node == placement.head_node {
-                    driver.send(&frame)?;
-                } else {
-                    peer_conn(peers, node, my, addrs, sock, agg)?.send(&frame)?;
+                meter.send(my, slot, frame.len());
+                let sent = peer_conn(peers, slot, my, addrs, sock, agg)
+                    .and_then(|p| p.send(&frame).map_err(anyhow::Error::from));
+                if let Err(e) = sent {
+                    // Dead peer: never fatal here. Drop the frame and mark
+                    // the slot dead so later picks avoid it; the driver
+                    // owns retargeting the queries this frame served.
+                    eprintln!("worker slot {my}: send to slot {slot} failed ({e}); marking dead");
+                    peers[slot as usize] = None;
+                    live[slot as usize] = false;
                 }
             }
         }
@@ -418,26 +629,26 @@ fn drain(
     Ok(())
 }
 
-/// Fetch (dialing on first use) the connection to another worker node.
+/// Fetch (dialing on first use) the connection to another worker slot.
 fn peer_conn<'p>(
     peers: &'p mut [Option<PeerConn>],
-    node: u16,
+    slot: u16,
     my: u16,
     addrs: &[String],
     sock: &SocketConfig,
     agg: usize,
 ) -> Result<&'p mut PeerConn> {
-    let slot = &mut peers[node as usize];
-    if slot.is_none() {
-        let stream = connect_retry(&addrs[node as usize], sock.connect_retries, sock.retry_ms)
-            .with_context(|| format!("node {my} dialing node {node} at {}", addrs[node as usize]))?;
+    let entry = &mut peers[slot as usize];
+    if entry.is_none() {
+        let stream = connect_retry(&addrs[slot as usize], sock.connect_retries, sock.retry_ms)
+            .with_context(|| format!("slot {my} dialing slot {slot} at {}", addrs[slot as usize]))?;
         stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).ok();
         let mut pc = PeerConn::new(stream, agg);
         pc.send_now(&wire::encode_frame(
             FrameKind::PeerHello,
             &wire::encode_peer_hello(my),
         ))?;
-        *slot = Some(pc);
+        *entry = Some(pc);
     }
-    Ok(slot.as_mut().unwrap())
+    Ok(entry.as_mut().unwrap())
 }

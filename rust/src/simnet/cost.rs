@@ -144,6 +144,7 @@ mod tests {
             cores_per_node: 4,
             ag_copies: 1,
             per_core_copies: false,
+            ..Default::default()
         })
     }
 

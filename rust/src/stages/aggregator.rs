@@ -123,6 +123,14 @@ impl AgState {
     pub fn stuck_queries(&self) -> Vec<u32> {
         self.pending.keys().copied().collect()
     }
+
+    /// Drop any partial reduction state for a cancelled query. The qid
+    /// becomes reusable (a later run may legally announce a fresh
+    /// `QueryMeta` under it); unknown qids are a no-op, so callers can
+    /// purge every AG copy without tracking which one owned the query.
+    pub fn abort_query(&mut self, qid: u32) {
+        self.pending.remove(&qid);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,328 @@
+//! Replicated, self-healing worker topology (DESIGN.md §Cluster topology):
+//! the chaos differential. With `cluster.replication = 2` every logical
+//! BI/DP node is served by two worker processes; killing one mid-stream
+//! must leave the answer stream bit-identical to the inline oracle (the
+//! driver retargets in-flight queries to the surviving replica), and the
+//! dead slot must rejoin the *same* session afterwards — restored from a
+//! live sibling's `StateDump`, or fast-pathed from a persisted shard
+//! (`coordinator/persist`), with stale shards fenced by epoch as a typed
+//! [`WireError`].
+//!
+//! Topology: 1 BI node + 2 DP nodes, replication 2 → 6 worker slots plus
+//! this test process as the head node (7 OS processes). The discovery test
+//! starts its own `parlsh worker --join` fleet out of band and hands the
+//! session a `[net] hosts` table instead of letting it spawn children.
+
+use parlsh::config::{Config, ReplicaRoute};
+use parlsh::coordinator::session::IndexSession;
+use parlsh::coordinator::{build_index, build_index_on, search, search_on};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::data::Dataset;
+use parlsh::net::wire::{self, FrameKind, WireError};
+use parlsh::net::NetSession;
+use parlsh::runtime::{Ranker, ScalarHasher, ScalarRanker};
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::TcpListener;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+fn cluster_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 };
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.cluster.ag_copies = 1;
+    cfg.cluster.replication = 2;
+    cfg.cluster.replica_route = ReplicaRoute::RoundRobin;
+    cfg.stream.inflight = 0;
+    cfg.data.n = 1_200;
+    cfg
+}
+
+fn small_world(cfg: &Config, queries: usize) -> (Dataset, Dataset, ScalarHasher, ScalarRanker) {
+    let ds = synthesize(SynthSpec { n: cfg.data.n, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let ranker = ScalarRanker { dim: ds.dim };
+    (ds, qs, ScalarHasher { family }, ranker)
+}
+
+/// The replication oracle runs inline with `replication = 1`: replicas
+/// hold byte-identical shards and a query only ever consults one replica
+/// per logical node, so the replicated answer must match it exactly.
+fn oracle_cfg(cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.cluster.replication = 1;
+    c
+}
+
+/// Kill one replica mid-stream: every submitted query still completes,
+/// bit-identical to the inline oracle, with at least one query retargeted;
+/// the dead slot then rejoins the same session via a sibling `StateDump`.
+#[test]
+fn kill_replica_mid_stream_differential_and_rejoin() {
+    let cfg = cluster_cfg();
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 120);
+    let ranker: Arc<dyn Ranker> = Arc::new(ranker);
+
+    let mut oracle_cluster = build_index(&oracle_cfg(&cfg), &ds, &hasher);
+    let oracle = search(&mut oracle_cluster, &qs, &hasher, ranker.as_ref());
+    let want: HashMap<u32, &Vec<(f32, u32)>> =
+        oracle.results.iter().map(|(qid, hits)| (*qid, hits)).collect();
+
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let sess = NetSession::launch_with_bin(Path::new(bin), &cfg, ds.dim).expect("launch");
+    let mut net_cluster = build_index_on(sess.executor(), &cfg, &ds, &hasher);
+
+    // Open-loop serving stream: submit half the load, kill one replica of
+    // logical node 1 (slot 1; its sibling is slot 4), submit the rest.
+    // The first 60 queries' ingress precedes the socket-close event in the
+    // driver's FIFO, and any of them whose candidate hop targeted slot 1
+    // can only complete through a retarget — so at least one must retry.
+    {
+        let session =
+            IndexSession::attach(sess.executor(), &mut net_cluster, &hasher, Some(ranker.clone()));
+        for qi in 0..60 {
+            session.submit(qs.get(qi));
+        }
+        sess.kill_worker(1).expect("kill replica slot 1");
+        for qi in 60..qs.len() {
+            session.submit(qs.get(qi));
+        }
+        let got = session.drain();
+        assert_eq!(got.len(), qs.len(), "every query must survive the replica loss");
+        for (ticket, hits) in &got {
+            assert_eq!(
+                Some(&hits),
+                want.get(&(ticket.0 as u32)),
+                "query {} diverged from the oracle after the kill",
+                ticket.0
+            );
+        }
+        let stats = session.close();
+        assert_eq!(stats.queries_completed, qs.len() as u64);
+        assert!(
+            stats.queries_retargeted >= 1,
+            "the kill landed mid-stream; some in-flight query must have been retargeted"
+        );
+    }
+    assert!(!sess.is_live(1), "the stream must have detected the death");
+    assert_eq!(sess.n_dead(), 1);
+
+    // Self-healing rejoin: no shard on disk, so the fresh worker joins at
+    // epoch 0 and is restored from its live sibling's StateDump.
+    sess.heal_worker(1).expect("heal slot 1");
+    assert!(sess.is_live(1));
+    assert_eq!(sess.n_dead(), 0);
+
+    // The restored replica is byte-identical to its sibling (slots 1 and 4
+    // serve the same logical node in the replica-major layout).
+    let state = sess.fetch_state().expect("fetch state");
+    assert_eq!(state.len(), 6, "one dump per live slot");
+    let by_slot: HashMap<u16, &wire::NodeState> =
+        state.iter().map(|(slot, ns)| (*slot, ns)).collect();
+    assert_eq!(by_slot[&1].bis, by_slot[&4].bis, "restored BI state diverged");
+    assert_eq!(by_slot[&1].dps, by_slot[&4].dps, "restored DP state diverged");
+
+    // And the healed fleet still answers exactly like the oracle.
+    let again = search_on(sess.executor(), &mut net_cluster, &qs, &hasher, ranker.as_ref());
+    assert_eq!(oracle.results, again.results, "post-heal search diverged");
+
+    sess.shutdown().expect("clean shutdown");
+}
+
+/// Persist-aware rejoin: a current shard fast-paths the handshake, a stale
+/// shard is fenced as a typed `WireError::EpochFenced` (and the session
+/// keeps serving on the survivor), and deleting it falls back to restore.
+#[test]
+fn persisted_shard_fast_path_and_stale_epoch_fence() {
+    let mut cfg = cluster_cfg();
+    let shard_dir = std::env::temp_dir()
+        .join(format!("parlsh-shards-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg.sock.shard_dir = shard_dir.clone();
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 12);
+
+    let mut oracle_cluster = build_index(&oracle_cfg(&cfg), &ds, &hasher);
+    let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let sess = NetSession::launch_with_bin(Path::new(bin), &cfg, ds.dim).expect("launch");
+    let mut net_cluster = build_index_on(sess.executor(), &cfg, &ds, &hasher);
+    let built_epoch = sess.epoch();
+    assert!(built_epoch >= 1, "the build is a completed write phase");
+
+    let paths = sess.persist_shards().expect("persist shards");
+    assert_eq!(paths.len(), 6, "one shard file per live slot");
+    for p in &paths {
+        assert!(Path::new(p).exists(), "missing shard file {p}");
+    }
+
+    // Fast path: the respawned worker reloads its shard, answers with the
+    // current epoch, and rejoins without a state transfer.
+    sess.kill_worker(1).expect("kill");
+    sess.heal_worker(1).expect("fast-path heal");
+    assert!(sess.is_live(1));
+    let out = search_on(sess.executor(), &mut net_cluster, &qs, &hasher, &ranker);
+    assert_eq!(oracle.results, out.results, "fast-path rejoin diverged");
+
+    // Grow the index: a second completed write phase bumps the epoch, so
+    // the shard files on disk are now one epoch behind.
+    let ds2 = synthesize(SynthSpec {
+        n: 300,
+        clusters: 40,
+        seed: 99,
+        ..Default::default()
+    });
+    let r1 = net_cluster.insert_objects_on(sess.executor(), ds2.as_flat(), ds2.len(), &hasher);
+    let r2 = oracle_cluster.insert_objects_on(
+        &parlsh::dataflow::exec::InlineExecutor,
+        ds2.as_flat(),
+        ds2.len(),
+        &hasher,
+    );
+    assert_eq!(r1, r2, "inline and socket inserts must assign the same ids");
+    assert!(sess.epoch() > built_epoch, "insert must bump the session epoch");
+
+    // Stale-shard rejoin is fenced: typed rejection, slot stays dead,
+    // session keeps serving on the surviving replica.
+    sess.kill_worker(1).expect("kill again");
+    let err = sess.heal_worker(1).expect_err("stale shard must be fenced");
+    assert!(
+        format!("{err:#}").contains("rejoin rejected"),
+        "unexpected heal error: {err:#}"
+    );
+    assert!(
+        matches!(err.downcast_ref::<WireError>(), Some(WireError::EpochFenced { .. })),
+        "fencing must surface as a typed WireError: {err:#}"
+    );
+    assert!(!sess.is_live(1));
+    let oracle2 = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+    let degraded = search_on(sess.executor(), &mut net_cluster, &qs, &hasher, &ranker);
+    assert_eq!(oracle2.results, degraded.results, "degraded serving diverged");
+
+    // Without the stale file the worker joins empty (epoch 0) and takes
+    // the restore path instead.
+    std::fs::remove_file(&paths[1]).expect("drop stale shard");
+    sess.heal_worker(1).expect("restore-path heal");
+    assert!(sess.is_live(1));
+    assert_eq!(sess.n_dead(), 0);
+    let healed = search_on(sess.executor(), &mut net_cluster, &qs, &hasher, &ranker);
+    assert_eq!(oracle2.results, healed.results, "post-restore search diverged");
+
+    sess.shutdown().expect("clean shutdown");
+    std::fs::remove_dir_all(&shard_dir).ok();
+}
+
+/// Spawn one out-of-band `parlsh worker --join` process bound on loopback
+/// and return it plus its announced address.
+fn spawn_join_worker(bin: &str) -> (Child, String) {
+    let mut child = Command::new(bin)
+        .arg("worker")
+        .arg("--join=127.0.0.1:0")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn joined worker");
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    std::io::BufRead::read_line(&mut std::io::BufReader::new(stdout), &mut line)
+        .expect("read announce");
+    let addr = line
+        .trim()
+        .strip_prefix("PARLSH_WORKER_LISTEN ")
+        .expect("announce line")
+        .to_string();
+    (child, addr)
+}
+
+/// Discovery membership: workers started out of band (`--join`) are found
+/// through the `[net] hosts` table, the full build+search differential
+/// holds, and every externally-owned process still exits 0 on shutdown.
+#[test]
+fn hosts_table_discovers_out_of_band_workers() {
+    let cfg_shape = cluster_cfg();
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let mut fleet: Vec<Child> = Vec::new();
+    let mut addrs: Vec<String> = Vec::new();
+    for _ in 0..6 {
+        let (child, addr) = spawn_join_worker(bin);
+        fleet.push(child);
+        addrs.push(addr);
+    }
+    let mut cfg = cfg_shape;
+    cfg.sock.hosts = addrs.join(",");
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 10);
+
+    let mut oracle_cluster = build_index(&oracle_cfg(&cfg), &ds, &hasher);
+    let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+    let sess = NetSession::launch_with_bin(Path::new(bin), &cfg, ds.dim).expect("discover fleet");
+    assert!(
+        sess.kill_worker(0).is_err(),
+        "hosts mode owns no processes; chaos kills are the operator's job"
+    );
+    let mut net_cluster = build_index_on(sess.executor(), &cfg, &ds, &hasher);
+    let out = search_on(sess.executor(), &mut net_cluster, &qs, &hasher, &ranker);
+    assert_eq!(oracle.results, out.results, "discovered fleet diverged");
+    sess.shutdown().expect("clean shutdown");
+
+    // The session sent Shutdown but the processes are ours: every joined
+    // worker must exit 0.
+    for (slot, mut child) in fleet.into_iter().enumerate() {
+        let status = child.wait().expect("join worker");
+        assert!(status.success(), "joined worker {slot} exited with {status}");
+    }
+}
+
+/// A hostile (or misconfigured) host that answers the handshake with the
+/// wrong config digest is rejected at launch — the typed digest check, at
+/// the wire level, against a fake worker this test scripts by hand.
+#[test]
+fn hostile_digest_rejected_at_launch() {
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let (real_child, real_addr) = spawn_join_worker(bin);
+
+    // The impostor: accepts the driver's connection, reads its Hello, and
+    // echoes a HelloOk whose digest disagrees by one bit.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind impostor");
+    let hostile_addr = listener.local_addr().expect("impostor addr").to_string();
+    let impostor = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().expect("accept driver");
+        let frame = wire::read_frame(&mut conn, 64 << 20).expect("read hello");
+        assert_eq!(frame.kind, FrameKind::Hello);
+        let hello = wire::decode_hello(&frame.payload).expect("decode hello");
+        let ok = wire::encode_frame(
+            FrameKind::HelloOk,
+            &wire::encode_hello_ok(hello.node, hello.digest ^ 1, 0),
+        );
+        conn.write_all(&ok).expect("send tampered ack");
+        conn.flush().ok();
+    });
+
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 };
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 1;
+    cfg.cluster.ag_copies = 1;
+    cfg.sock.hosts = format!("{real_addr},{hostile_addr}");
+
+    let err = NetSession::launch_with_bin(Path::new(bin), &cfg, 128)
+        .err()
+        .expect("tampered digest must fail the launch");
+    assert!(
+        format!("{err:#}").contains("rejected at launch"),
+        "unexpected launch error: {err:#}"
+    );
+    impostor.join().expect("impostor thread");
+
+    // The genuine worker is ours to reap; the failed launch never adopted it.
+    let mut real_child = real_child;
+    real_child.kill().ok();
+    real_child.wait().ok();
+}

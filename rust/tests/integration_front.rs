@@ -433,7 +433,7 @@ fn raw_handshake(addr: &str) -> TcpStream {
     let hello = wire::decode_hello(&f.payload).expect("decode hello");
     let ok = wire::encode_frame(
         wire::FrameKind::HelloOk,
-        &wire::encode_hello_ok(hello.node, hello.digest),
+        &wire::encode_hello_ok(hello.node, hello.digest, hello.epoch),
     );
     s.write_all(&ok).expect("send HelloOk");
     s
@@ -481,7 +481,7 @@ fn hostile_frames_get_typed_rejections_and_the_server_keeps_serving() {
             let hello = wire::decode_hello(&f.payload).expect("decode hello");
             let ok = wire::encode_frame(
                 wire::FrameKind::HelloOk,
-                &wire::encode_hello_ok(hello.node, hello.digest ^ 1),
+                &wire::encode_hello_ok(hello.node, hello.digest ^ 1, hello.epoch),
             );
             s.write_all(&ok).expect("send tampered HelloOk");
             let reason = read_goodbye(&mut s);
