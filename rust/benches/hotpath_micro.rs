@@ -14,10 +14,14 @@ use parlsh::core::lsh::{HashFamily, LshParams};
 use parlsh::core::multiprobe::probe_sequence;
 use parlsh::core::topk::TopK;
 use parlsh::data::sqdist;
+use parlsh::dataflow::message::{Dest, Msg};
 use parlsh::metrics::Table;
 use parlsh::runtime::{kernels, Hasher, Ranker, ScalarHasher, ScalarRanker, SimdHasher, SimdRanker};
+use parlsh::stages::BiState;
+use parlsh::store::{BucketDirectory, SeenFilter};
 use parlsh::util::rng::Rng;
 use parlsh::util::timer::bench_loop;
+use std::collections::HashMap;
 
 fn main() {
     let mut rng = Rng::new(42);
@@ -155,6 +159,102 @@ fn main() {
         std::hint::black_box(tk.len());
     });
     row("topk push", 10_000, per, 10_000);
+
+    // --- bucket lookup+scan: scattered HashMap vs arena directory ---
+    // The storage-engine claim (DESIGN.md §Storage engine): binary search
+    // on a sorted key table + a contiguous slice scan vs hashing into
+    // scattered per-bucket heap allocations, on a BI-sized shard.
+    let n_buckets = 1usize << 15;
+    let refs_per = 8usize;
+    let bkey = |b: usize| (b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut map: HashMap<u64, Vec<(u32, u16)>> = HashMap::new();
+    let mut dir = BucketDirectory::new();
+    for b in 0..n_buckets {
+        for r in 0..refs_per {
+            let id = (b * refs_per + r) as u32;
+            map.entry(bkey(b)).or_default().push((id, 0));
+            dir.insert(bkey(b), id, 0);
+        }
+    }
+    dir.compact();
+    let batch = 1024usize;
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    let per = bench_loop(secs, 8, || {
+        for c in 0..batch {
+            let key = bkey((i + c * 7919) % n_buckets);
+            if let Some(refs) = map.get(&key) {
+                for &(id, _) in refs {
+                    acc += id as u64;
+                }
+            }
+        }
+        i += 13;
+    });
+    std::hint::black_box(acc);
+    row("bucket lookup+scan (hashmap)", batch, per, batch);
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    let per = bench_loop(secs, 8, || {
+        for c in 0..batch {
+            let key = bkey((i + c * 7919) % n_buckets);
+            if let Some((refs, _summary)) = dir.lookup(key) {
+                for &(id, _) in refs {
+                    acc += id as u64;
+                }
+            }
+        }
+        i += 13;
+    });
+    std::hint::black_box(acc);
+    row("bucket lookup+scan (arena)", batch, per, batch);
+
+    // --- per-query seen-bitmap (the HashSet-dedup replacement) ---
+    let mut filter = SeenFilter::default();
+    filter.configure(dir.id_space(), dir.chunk_shift(), dir.chunk_caps());
+    let n_ids = 8192usize;
+    let ids: Vec<u32> = (0..n_ids)
+        .map(|_| rng.below((n_buckets * refs_per) as u64) as u32)
+        .collect();
+    let per = bench_loop(secs.min(0.2), 8, || {
+        filter.begin_query();
+        let mut fresh = 0usize;
+        for &id in &ids {
+            fresh += filter.insert(id) as usize;
+        }
+        std::hint::black_box(fresh);
+    });
+    row("bitmap filter insert", n_ids, per, n_ids);
+
+    // --- BI multiprobe with bucket-level pruning engaged ---
+    // 512 ids shared by 64 probed buckets: after the first bucket's scan
+    // every id chunk saturates, so the remaining 63 probes skip whole —
+    // the archived row's op label carries the measured skip count (the
+    // bucket_skipped > 0 acceptance evidence).
+    let mut bi = BiState::new(0, 1, 0);
+    for id in 0..512u32 {
+        for b in 0..64u64 {
+            bi.on_index_ref(b, id, 0);
+        }
+    }
+    let probes: Vec<(u8, u64)> = (0..64).map(|b| (0u8, b as u64)).collect();
+    let qv: std::sync::Arc<[f32]> = vec![0f32; dim].into();
+    let mut emitted: Vec<(Dest, Msg)> = Vec::new();
+    let mut qid = 0u32;
+    bi.on_query(qid, &probes, &qv, 10, &mut emitted);
+    let skipped_per_query = bi.work.bucket_skipped;
+    let per = bench_loop(secs.min(0.2), 8, || {
+        qid += 1;
+        emitted.clear();
+        bi.on_query(qid, &probes, &qv, 10, &mut emitted);
+        std::hint::black_box(emitted.len());
+    });
+    row(
+        &format!("bi multiprobe (bucket_skipped={skipped_per_query}/query)"),
+        probes.len(),
+        per,
+        probes.len(),
+    );
 
     println!("== hot-path microbenchmarks (dispatch tier: {tier}) ==");
     table.print();

@@ -307,9 +307,15 @@ impl Cluster {
         let mut out = Vec::new();
         out.push((StageKind::Qr, 0, *head_extra));
         for bi in &mut self.bis {
+            // bytes_resident is a gauge over current state, not a phase
+            // delta: refresh it at the take point. On the socket transport
+            // the local copy is empty and the worker's FlushAck gauge (max-
+            // merged by absorb_remote_work) already sits in `bi.work`.
+            bi.work.bytes_resident = bi.work.bytes_resident.max(bi.bytes_resident());
             out.push((StageKind::Bi, bi.copy, std::mem::take(&mut bi.work)));
         }
         for dp in &mut self.dps {
+            dp.work.bytes_resident = dp.work.bytes_resident.max(dp.bytes_resident());
             out.push((StageKind::Dp, dp.copy, std::mem::take(&mut dp.work)));
         }
         for ag in &mut self.ags {
@@ -578,17 +584,12 @@ mod tests {
         // BI copy consumes the single IR source in emission order on either
         // transport.
         for (a, b) in inline_cluster.bis.iter().zip(&threaded_cluster.bis) {
-            let sa: Vec<(u64, Vec<(u32, u16)>)> = a
-                .buckets_snapshot()
-                .into_iter()
-                .map(|(k, v)| (k, v.clone()))
-                .collect();
-            let sb: Vec<(u64, Vec<(u32, u16)>)> = b
-                .buckets_snapshot()
-                .into_iter()
-                .map(|(k, v)| (k, v.clone()))
-                .collect();
-            assert_eq!(sa, sb, "BI copy {} diverged", a.copy);
+            assert_eq!(
+                a.buckets_snapshot(),
+                b.buckets_snapshot(),
+                "BI copy {} diverged",
+                a.copy
+            );
         }
         for (a, b) in inline_cluster.dps.iter().zip(&threaded_cluster.dps) {
             assert_eq!(

@@ -93,7 +93,7 @@ pub fn save(cluster: &Cluster, path: &str) -> Result<()> {
         for (key, refs) in buckets {
             w_u64(&mut w, key)?;
             w_u32(&mut w, refs.len() as u32)?;
-            for &(id, dp) in refs {
+            for (id, dp) in refs {
                 w_u32(&mut w, id)?;
                 w.write_all(&dp.to_le_bytes())?;
             }
@@ -449,12 +449,7 @@ mod tests {
             assert_eq!(st.bis.len(), bis.len());
             for (bi, (copy, buckets)) in bis.iter().zip(&st.bis) {
                 assert_eq!(bi.copy, *copy);
-                let snap: Vec<(u64, Vec<(u32, u16)>)> = bi
-                    .buckets_snapshot()
-                    .into_iter()
-                    .map(|(k, refs)| (k, refs.clone()))
-                    .collect();
-                assert_eq!(&snap, buckets);
+                assert_eq!(&bi.buckets_snapshot(), buckets);
             }
             assert_eq!(st.dps.len(), dps.len());
             for (dp, (copy, objs)) in dps.iter().zip(&st.dps) {

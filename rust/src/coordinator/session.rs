@@ -897,11 +897,17 @@ impl<'s> IndexSession<'s> {
                 work.push((StageKind::Qr, 0u16, head));
                 for slot in &os.bis {
                     let s = slot.lock().unwrap_or_else(|p| p.into_inner());
-                    work.push((StageKind::Bi, s.copy, s.work));
+                    // The memory gauge reads current state at snapshot
+                    // time (max keeps any remote gauge absorbed earlier).
+                    let mut w = s.work;
+                    w.bytes_resident = w.bytes_resident.max(s.bytes_resident());
+                    work.push((StageKind::Bi, s.copy, w));
                 }
                 for slot in &os.dps {
                     let s = slot.lock().unwrap_or_else(|p| p.into_inner());
-                    work.push((StageKind::Dp, s.copy, s.work));
+                    let mut w = s.work;
+                    w.bytes_resident = w.bytes_resident.max(s.bytes_resident());
+                    work.push((StageKind::Dp, s.copy, w));
                 }
                 for slot in &os.ags {
                     let s = slot.lock().unwrap_or_else(|p| p.into_inner());
@@ -911,10 +917,14 @@ impl<'s> IndexSession<'s> {
             None => {
                 work.push((StageKind::Qr, 0u16, inner.head_work));
                 for bi in &c.bis {
-                    work.push((StageKind::Bi, bi.copy, bi.work));
+                    let mut w = bi.work;
+                    w.bytes_resident = w.bytes_resident.max(bi.bytes_resident());
+                    work.push((StageKind::Bi, bi.copy, w));
                 }
                 for dp in &c.dps {
-                    work.push((StageKind::Dp, dp.copy, dp.work));
+                    let mut w = dp.work;
+                    w.bytes_resident = w.bytes_resident.max(dp.bytes_resident());
+                    work.push((StageKind::Dp, dp.copy, w));
                 }
                 for ag in &c.ags {
                     work.push((StageKind::Ag, ag.copy, ag.work));
@@ -953,10 +963,15 @@ impl<'s> IndexSession<'s> {
                 let mut out = vec![(StageKind::Qr, 0u16, head)];
                 for slot in &os.bis {
                     let mut s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    // refresh the memory gauge at the take point
+                    s.work.bytes_resident =
+                        s.work.bytes_resident.max(s.bytes_resident());
                     out.push((StageKind::Bi, s.copy, std::mem::take(&mut s.work)));
                 }
                 for slot in &os.dps {
                     let mut s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    s.work.bytes_resident =
+                        s.work.bytes_resident.max(s.bytes_resident());
                     out.push((StageKind::Dp, s.copy, std::mem::take(&mut s.work)));
                 }
                 for slot in &os.ags {

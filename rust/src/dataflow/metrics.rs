@@ -197,10 +197,22 @@ pub struct WorkStats {
     pub dists_pruned: u64,
     /// Candidates skipped by duplicate elimination.
     pub dup_skipped: u64,
+    /// Whole buckets skipped at BI without scanning their references —
+    /// revisited probe keys plus bitmap chunk-saturation skips (see
+    /// DESIGN.md §Storage engine). The references they would have scanned
+    /// are charged to `dup_skipped`, so that counter stays comparable
+    /// across transports and across the skip being on or off.
+    pub bucket_skipped: u64,
     /// Vectors stored (index build).
     pub objects_stored: u64,
     /// Top-k reduction pushes at AG.
     pub reduce_pushes: u64,
+    /// Bytes resident in this copy's storage engine (BI directory +
+    /// filter, DP flat store + row index). A *gauge*, not a counter:
+    /// [`WorkStats::add`] merges it by max, so summing per-copy stats
+    /// reports the largest single copy, and repeated flushes from the
+    /// same copy don't double-count.
+    pub bytes_resident: u64,
 }
 
 impl WorkStats {
@@ -212,8 +224,11 @@ impl WorkStats {
         self.dists_computed += other.dists_computed;
         self.dists_pruned += other.dists_pruned;
         self.dup_skipped += other.dup_skipped;
+        self.bucket_skipped += other.bucket_skipped;
         self.objects_stored += other.objects_stored;
         self.reduce_pushes += other.reduce_pushes;
+        // gauge: the high-water mark survives, sums would double-count
+        self.bytes_resident = self.bytes_resident.max(other.bytes_resident);
     }
 }
 
@@ -336,13 +351,22 @@ mod tests {
     fn workstats_add() {
         let mut w = WorkStats::default();
         w.dists_computed = 5;
+        w.bucket_skipped = 1;
+        w.bytes_resident = 900;
         let mut o = WorkStats::default();
         o.dists_computed = 7;
         o.dists_pruned = 3;
         o.hash_vectors = 2;
+        o.bucket_skipped = 4;
+        o.bytes_resident = 300;
         w.add(&o);
         assert_eq!(w.dists_computed, 12);
         assert_eq!(w.dists_pruned, 3);
         assert_eq!(w.hash_vectors, 2);
+        assert_eq!(w.bucket_skipped, 5);
+        // bytes_resident is a gauge: max, not sum
+        assert_eq!(w.bytes_resident, 900);
+        w.add(&o);
+        assert_eq!(w.bytes_resident, 900, "re-adding must not inflate the gauge");
     }
 }

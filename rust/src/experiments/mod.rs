@@ -542,6 +542,7 @@ pub fn executor_comparison() -> Table {
         "p99 ms",
         "recall",
         "pruned",
+        "mem",
     ]);
     let rows: [(&str, &dyn Executor, usize); 3] = [
         ("inline", &InlineExecutor, 0),
@@ -563,6 +564,14 @@ pub fn executor_comparison() -> Table {
         // Early-abandoned candidates (SimdRanker's partial-sum bound);
         // identical across executors because per-message rank inputs are.
         let pruned: u64 = out.work.iter().map(|(_, _, w)| w.dists_pruned).sum();
+        // Exact storage-engine residency: largest single copy (the
+        // bytes_resident gauge max-merges, it never sums).
+        let mem: u64 = out
+            .work
+            .iter()
+            .map(|(_, _, w)| w.bytes_resident)
+            .max()
+            .unwrap_or(0);
         let label = if inflight > 0 {
             format!("{name} W={inflight}")
         } else {
@@ -576,6 +585,7 @@ pub fn executor_comparison() -> Table {
             format!("{:.2}", lat.p99_ms),
             format!("{recall:.3}"),
             format!("{pruned}"),
+            format!("{:.1} MiB", mem as f64 / (1024.0 * 1024.0)),
         ]);
     }
     table

@@ -44,6 +44,10 @@
 //!   ([`net::front`]): `parlsh serve --listen` multiplexes external
 //!   clients onto one resident session, `parlsh query --connect` (or the
 //!   [`net::front::Client`] struct) drives it (DESIGN.md §Front door);
+//! * [`store`] — the cache-conscious storage engine under BI and DP: the
+//!   arena bucket directory, the exact per-query candidate bitmap behind
+//!   bucket-level pruning, and the SoA row index (DESIGN.md §Storage
+//!   engine);
 //! * [`simnet`] — the calibrated cluster cost model standing in for the
 //!   paper's 60-node InfiniBand testbed (see DESIGN.md §Substitutions);
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
@@ -66,6 +70,7 @@ pub mod partition;
 pub mod runtime;
 pub mod simnet;
 pub mod stages;
+pub mod store;
 pub mod util;
 
 pub use config::Config;

@@ -40,17 +40,17 @@ use std::fmt;
 use std::io::Read;
 use std::sync::Arc;
 
-// v5: replicated cluster topology (DESIGN.md §Cluster topology). `Hello`
-// carries the session epoch, `HelloOk` echoes the rejoiner's shard epoch,
-// the config block covers `cluster.{replication,replica_route}`, and seven
-// control kinds are added: Ping/Pong (liveness), Restore/RestoreOk (shard
-// transfer into a rejoined worker), Membership (live mask + addresses),
-// PersistReq/PersistOk (shard checkpoint to disk). (v4 added the
-// `dists_pruned` WorkStats counter, 67 → 75 bytes per FlushAck entry;
-// v3 added per-query search plans — QueryVec carries QueryOptions,
-// Query/CandidateReq/QueryMeta carry the resolved k; v2 added per-copy
-// WorkStats to FlushAck.)
-pub const WIRE_VERSION: u8 = 5;
+// v6: storage-engine counters — FlushAck work entries gain the
+// `bucket_skipped` counter and the `bytes_resident` gauge, 75 → 91 bytes
+// per entry (DESIGN.md §Storage engine). (v5 added the replicated cluster
+// topology — session epochs on Hello/HelloOk, the
+// `cluster.{replication,replica_route}` config block, and seven control
+// kinds: Ping/Pong, Restore/RestoreOk, Membership, PersistReq/PersistOk;
+// v4 added the `dists_pruned` WorkStats counter, 67 → 75 bytes per
+// FlushAck entry; v3 added per-query search plans — QueryVec carries
+// QueryOptions, Query/CandidateReq/QueryMeta carry the resolved k; v2
+// added per-copy WorkStats to FlushAck.)
+pub const WIRE_VERSION: u8 = 6;
 pub const MAGIC: u16 = 0x504C;
 pub const HEADER_LEN: usize = 12;
 
@@ -975,8 +975,10 @@ pub fn encode_flush_ack(
             w.dists_computed,
             w.dists_pruned,
             w.dup_skipped,
+            w.bucket_skipped,
             w.objects_stored,
             w.reduce_pushes,
+            w.bytes_resident,
         ] {
             put_u64(&mut p, v);
         }
@@ -1003,7 +1005,7 @@ pub fn decode_flush_ack(
         let bytes = rd.u64()?;
         meter.add_link(src, dst, packets, bytes);
     }
-    let n_work = rd.len_prefix(75)?; // 1 (stage) + 2 (copy) + 9 u64 counters
+    let n_work = rd.len_prefix(91)?; // 1 (stage) + 2 (copy) + 11 u64 counters
     let mut work = Vec::with_capacity(n_work);
     for _ in 0..n_work {
         let stage = StageKind::from_code(rd.u8()?)
@@ -1017,8 +1019,10 @@ pub fn decode_flush_ack(
             dists_computed: rd.u64()?,
             dists_pruned: rd.u64()?,
             dup_skipped: rd.u64()?,
+            bucket_skipped: rd.u64()?,
             objects_stored: rd.u64()?,
             reduce_pushes: rd.u64()?,
+            bytes_resident: rd.u64()?,
         };
         work.push((stage, copy, w));
     }
@@ -1517,12 +1521,25 @@ mod tests {
             (
                 StageKind::Bi,
                 2u16,
-                WorkStats { bucket_lookups: 7, candidates_routed: 19, dup_skipped: 3, ..Default::default() },
+                WorkStats {
+                    bucket_lookups: 7,
+                    candidates_routed: 19,
+                    dup_skipped: 3,
+                    bucket_skipped: 2,
+                    bytes_resident: 4096,
+                    ..Default::default()
+                },
             ),
             (
                 StageKind::Dp,
                 5u16,
-                WorkStats { dists_computed: 123, dists_pruned: 31, objects_stored: 44, ..Default::default() },
+                WorkStats {
+                    dists_computed: 123,
+                    dists_pruned: 31,
+                    objects_stored: 44,
+                    bytes_resident: 1 << 33, // gauges are full u64s on the wire
+                    ..Default::default()
+                },
             ),
         ];
         let p = encode_flush_ack(42, &m, &work);

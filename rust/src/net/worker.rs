@@ -40,8 +40,11 @@
 //!
 //! Shutdown is typed both ways: a `Shutdown` frame exits cleanly; any
 //! failure path fires a drop-guard that sends the driver a `Stopped` frame
-//! (the socket rendition of the threaded executor's drop-guard), so the
-//! driver's admission loop can never hang on a dead worker.
+//! (the socket rendition of the threaded executor's drop-guard) carrying
+//! the failure's rendered cause — e.g. a duplicate `StoreObject` surfaces
+//! as a typed [`crate::store::StoreError`] through this path instead of a
+//! panic — so the driver's admission loop can never hang on a dead worker
+//! and its error report names the actual invariant that broke.
 
 use crate::config::{Config, ReplicaRoute, SocketConfig};
 use crate::coordinator::persist;
@@ -223,9 +226,13 @@ fn reader_rest(mut stream: TcpStream, tx: SyncSender<Ev>, max_frame: usize, from
 }
 
 /// Drop-guard: tells the driver this worker is dying (fires on unwind and
-/// on error returns; disarmed only by a clean `Shutdown`).
+/// on error returns; disarmed only by a clean `Shutdown`). Error paths
+/// that know *why* record it in `reason` before returning, so the
+/// driver's `Stopped` report names the broken invariant (a duplicate
+/// store, a bad frame) instead of a generic epitaph.
 struct StopGuard {
     conn: Option<TcpStream>,
+    reason: String,
 }
 
 impl StopGuard {
@@ -237,10 +244,8 @@ impl StopGuard {
 impl Drop for StopGuard {
     fn drop(&mut self) {
         if let Some(conn) = &mut self.conn {
-            let frame = wire::encode_frame(
-                FrameKind::Stopped,
-                &wire::encode_stopped("worker dispatch terminated"),
-            );
+            let frame =
+                wire::encode_frame(FrameKind::Stopped, &wire::encode_stopped(&self.reason));
             let _ = conn.write_all(&frame);
         }
     }
@@ -317,7 +322,10 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig, shard: Option<&str>) -> Result
     // (DESIGN.md §Transports, §Kernels).
     let ranker = SimdRanker { dim };
 
-    let mut guard = StopGuard { conn: driver_stream.try_clone().ok() };
+    let mut guard = StopGuard {
+        conn: driver_stream.try_clone().ok(),
+        reason: "worker dispatch terminated".to_string(),
+    };
     driver_stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).ok();
     let mut driver = PeerConn::new(driver_stream, agg);
     driver.send_now(&wire::encode_frame(
@@ -350,7 +358,7 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig, shard: Option<&str>) -> Result
         match ev {
             Ev::Msg(dest, msg) => {
                 queue.push_back((dest, msg));
-                drain(
+                let drained = drain(
                     &mut queue,
                     &mut bis,
                     &bi_idx,
@@ -368,7 +376,13 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig, shard: Option<&str>) -> Result
                     &mut peers,
                     &mut meter,
                     &mut scratch,
-                )?;
+                );
+                if let Err(e) = drained {
+                    // Record the cause (e.g. a typed StoreError on a buggy
+                    // replica fan-out) so the Stopped frame carries it.
+                    guard.reason = format!("{e:#}");
+                    return Err(e);
+                }
             }
             Ev::Done(qid) => {
                 for dp in dps.iter_mut() {
@@ -384,9 +398,13 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig, shard: Option<&str>) -> Result
                 // §Transports; the simnet cost model consumes these).
                 let mut work: Vec<(StageKind, u16, WorkStats)> = Vec::new();
                 for bi in bis.iter_mut() {
+                    // Refresh the memory gauge right before the take: the
+                    // counters are phase deltas, the gauge is current state.
+                    bi.work.bytes_resident = bi.bytes_resident();
                     work.push((StageKind::Bi, bi.copy, std::mem::take(&mut bi.work)));
                 }
                 for dp in dps.iter_mut() {
+                    dp.work.bytes_resident = dp.bytes_resident();
                     work.push((StageKind::Dp, dp.copy, std::mem::take(&mut dp.work)));
                 }
                 driver.send_now(&wire::encode_frame(
@@ -431,8 +449,12 @@ fn dispatch(rx: Receiver<Ev>, sock: SocketConfig, shard: Option<&str>) -> Result
                 // Replay a sibling replica's state dump into this (fresh)
                 // worker, adopt the driver's epoch, and acknowledge.
                 let state = wire::decode_state_dump(&dump)?;
-                replay_state(&state, &mut bis, &bi_idx, &mut dps, &dp_idx)
-                    .with_context(|| format!("restore into slot {my}"))?;
+                if let Err(err) = replay_state(&state, &mut bis, &bi_idx, &mut dps, &dp_idx)
+                    .with_context(|| format!("restore into slot {my}"))
+                {
+                    guard.reason = format!("{err:#}");
+                    return Err(err);
+                }
                 epoch = e;
                 driver.send_now(&wire::encode_frame(
                     FrameKind::RestoreOk,
@@ -512,7 +534,9 @@ fn replay_state(
             .get(copy)
             .with_context(|| format!("restored DP copy {copy} not hosted here"))?;
         for (id, v) in objs {
-            dps[i].on_store(*id, v);
+            dps[i]
+                .try_store(*id, v)
+                .with_context(|| format!("replaying DP copy {copy}"))?;
         }
     }
     Ok(())
@@ -585,7 +609,16 @@ fn drain(
                 let &i = dp_idx
                     .get(&dest.copy)
                     .with_context(|| format!("DP copy {} not hosted on slot {my}", dest.copy))?;
-                DpHandler { dp: &mut dps[i], ranker: Some(ranker) }.on_msg(msg, scratch);
+                // Stores go through the fallible path: a duplicate id is a
+                // replica fan-out bug, and on this transport it must stop
+                // the worker with a typed Stopped frame, not a panic.
+                match msg {
+                    Msg::StoreObject { id, v } => dps[i]
+                        .try_store(id, &v)
+                        .with_context(|| format!("DP copy {} on slot {my}", dest.copy))?,
+                    other => DpHandler { dp: &mut dps[i], ranker: Some(ranker) }
+                        .on_msg(other, scratch),
+                }
             }
             other => bail!("stage {other:?} routed to worker slot {my}"),
         }

@@ -333,6 +333,30 @@ impl Ranker for SimdRanker {
         }
         (tk.into_sorted(), pruned)
     }
+
+    fn rank_rows(
+        &self,
+        q: &[f32],
+        store: &[f32],
+        dim: usize,
+        rows: &[u32],
+        k: usize,
+    ) -> (Vec<(f32, u32)>, u64) {
+        // Identical per-candidate sequence to rank_pruned over a gathered
+        // tile — same kernels, same bound evolution — just reading each
+        // row out of the flat store in place.
+        debug_assert_eq!(dim, self.dim);
+        let mut tk = TopK::new(k);
+        let mut pruned = 0u64;
+        for (i, &r) in rows.iter().enumerate() {
+            let at = r as usize * dim;
+            match sqdist_pruned(q, &store[at..at + dim], tk.threshold()) {
+                Some(d) => tk.push(d, i as u32),
+                None => pruned += 1,
+            }
+        }
+        (tk.into_sorted(), pruned)
+    }
 }
 
 #[cfg(test)]
@@ -635,6 +659,37 @@ mod tests {
             let (hits, pruned) = simd.rank_pruned(&q, &cands, n, k);
             assert_eq!(hits, oracle);
             assert!(pruned <= n as u64);
+        });
+    }
+
+    #[test]
+    fn rank_rows_matches_gathered_rank_pruned() {
+        // The SoA DP hot path: ranking row indices in place must be
+        // bit-identical — hits AND pruned count — to gathering those rows
+        // into a tile and ranking that, on every impl (scattered row
+        // order and repeated rows included).
+        check("kernels-rank-rows-differential", 40, |g| {
+            let dim = g.usize_in(1, 24);
+            let stored = g.usize_in(1, 40);
+            let store = g.vec_f32(stored * dim, -5.0, 5.0);
+            let q = g.vec_f32(dim, -5.0, 5.0);
+            let n = g.usize_in(0, 30);
+            let rows: Vec<u32> =
+                (0..n).map(|_| g.usize_in(0, stored - 1) as u32).collect();
+            let k = g.usize_in(0, 12);
+            let mut gathered = Vec::with_capacity(n * dim);
+            for &r in &rows {
+                let at = r as usize * dim;
+                gathered.extend_from_slice(&store[at..at + dim]);
+            }
+            let simd = SimdRanker { dim };
+            let want = simd.rank_pruned(&q, &gathered, n, k);
+            assert_eq!(simd.rank_rows(&q, &store, dim, &rows, k), want);
+            let scalar = ScalarRanker { dim };
+            let scalar_want = scalar.rank_pruned(&q, &gathered, n, k);
+            assert_eq!(scalar.rank_rows(&q, &store, dim, &rows, k), scalar_want);
+            // and the scalar path agrees with SIMD on the hits themselves
+            assert_eq!(scalar_want.0, want.0);
         });
     }
 

@@ -63,6 +63,32 @@ pub trait Ranker: Send + Sync {
     ) -> (Vec<(f32, u32)>, u64) {
         (self.rank(q, cands, n, k), 0)
     }
+
+    /// Rank candidates addressed as *row indices* into a flat SoA `store`
+    /// (`rows[i]` names the vector at `store[rows[i]*dim..]`): the DP hot
+    /// path after the storage-engine refactor (DESIGN.md §Storage engine),
+    /// where candidate vectors are read in place instead of being copied
+    /// into a gather buffer first. Returned `(sqdist, local_index)` pairs
+    /// index into `rows`; the second element counts early-abandoned
+    /// candidates, exactly as in [`Self::rank_pruned`]. Must be
+    /// bit-identical to gathering the rows and calling `rank_pruned` — the
+    /// default does literally that, so existing implementations stay valid
+    /// oracles.
+    fn rank_rows(
+        &self,
+        q: &[f32],
+        store: &[f32],
+        dim: usize,
+        rows: &[u32],
+        k: usize,
+    ) -> (Vec<(f32, u32)>, u64) {
+        let mut gathered = Vec::with_capacity(rows.len() * dim);
+        for &r in rows {
+            let at = r as usize * dim;
+            gathered.extend_from_slice(&store[at..at + dim]);
+        }
+        self.rank_pruned(q, &gathered, rows.len(), k)
+    }
 }
 
 /// Scalar hasher backed by the sampled family (same math as the artifact).
@@ -120,6 +146,25 @@ impl Ranker for ScalarRanker {
         }
         tk.into_sorted()
     }
+
+    fn rank_rows(
+        &self,
+        q: &[f32],
+        store: &[f32],
+        dim: usize,
+        rows: &[u32],
+        k: usize,
+    ) -> (Vec<(f32, u32)>, u64) {
+        // Same sqdist/TopK sequence as gather-then-rank, reading each row
+        // in place — bit-identical by construction, no copy.
+        debug_assert_eq!(dim, self.dim);
+        let mut tk = TopK::new(k);
+        for (i, &r) in rows.iter().enumerate() {
+            let at = r as usize * dim;
+            tk.push(sqdist(q, &store[at..at + dim]), i as u32);
+        }
+        (tk.into_sorted(), 0)
+    }
 }
 
 /// Hybrid ranker: SIMD heap top-k below `threshold` candidates, compiled
@@ -168,6 +213,27 @@ impl Ranker for HybridRanker {
         } else {
             // the artifact ranks the whole tile at once — nothing abandons
             (self.engine.rank(q, cands, n, k), 0)
+        }
+    }
+
+    fn rank_rows(
+        &self,
+        q: &[f32],
+        store: &[f32],
+        dim: usize,
+        rows: &[u32],
+        k: usize,
+    ) -> (Vec<(f32, u32)>, u64) {
+        if rows.len() < self.threshold {
+            self.scalar.rank_rows(q, store, dim, rows, k)
+        } else {
+            // the PJRT artifact wants a contiguous tile — gather for it
+            let mut gathered = Vec::with_capacity(rows.len() * dim);
+            for &r in rows {
+                let at = r as usize * dim;
+                gathered.extend_from_slice(&store[at..at + dim]);
+            }
+            (self.engine.rank(q, &gathered, rows.len(), k), 0)
         }
     }
 }

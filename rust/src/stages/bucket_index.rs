@@ -1,33 +1,50 @@
-//! Bucket Index (BI): stores the distributed hash tables as
-//! `bucket key → [(object id, DP copy)]` and, per query, turns probe visits
-//! into per-DP candidate requests — paper message (iv).
+//! Bucket Index (BI): stores the distributed hash tables and, per query,
+//! turns probe visits into per-DP candidate requests — paper message (iv).
 //!
 //! Buckets hold *references only* (id + DP copy); the data objects live in
 //! exactly one DP copy each, which is the paper's no-replication invariant.
+//! The bucket store is a [`crate::store::BucketDirectory`]: a sorted key
+//! table over one contiguous refs arena, so a probe is a binary search
+//! plus a cache-line-friendly slice scan instead of chasing
+//! `HashMap<u64, Vec<_>>` heap nodes. Live inserts land in the
+//! directory's overlay and compact at the first query after the barrier
+//! (DESIGN.md §Storage engine).
+//!
 //! Candidate ids retrieved from multiple probed buckets are deduplicated
-//! and grouped per DP copy so each DP receives at most one message per
-//! (query, BI) pair — the BI-side half of duplicate elimination.
+//! through an exact [`crate::store::SeenFilter`] bitmap and grouped per DP
+//! copy so each DP receives at most one message per (query, BI) pair —
+//! the BI-side half of duplicate elimination. On top of it rides
+//! bucket-level pruning (Jafari et al., arXiv 1912.07101): a probed
+//! bucket whose references are *provably* all seen this query — its key
+//! was already probed, or every id chunk its summary touches is saturated
+//! — is skipped whole (`WorkStats::bucket_skipped`) with its references
+//! charged to `dup_skipped` exactly as the scan would have, so routed
+//! candidates and work accounting stay bit-identical to the unfiltered
+//! scan.
 
 use crate::dataflow::message::{Dest, Msg};
 use crate::dataflow::metrics::WorkStats;
 use crate::partition::ag_map;
 use crate::stages::Emit;
-use std::collections::HashMap;
+use crate::store::{BucketDirectory, SeenFilter};
 use std::sync::Arc;
 
 #[derive(Default)]
 pub struct BiState {
     pub copy: u16,
     /// The shard of every hash table whose bucket keys map here.
-    buckets: HashMap<u64, Vec<(u32, u16)>>,
+    dir: BucketDirectory,
     pub n_ag: usize,
     /// Cap on candidates routed per query at this BI (0 = unlimited).
     pub max_candidates: usize,
     pub work: WorkStats,
-    /// §Perf: per-query scratch reused across queries — dedup set plus a
-    /// dense per-DP grouping (indexed by DP copy) so the hot path allocates
-    /// only the outgoing id vectors it actually sends.
-    seen_scratch: std::collections::HashSet<u32>,
+    /// Per-query exact seen-bitmap + chunk saturation (dedup and
+    /// bucket-skip decisions); reconfigured at every compaction.
+    seen: SeenFilter,
+    /// §Perf: per-query scratch reused across queries — probed-key list
+    /// (revisit skips) plus a dense per-DP grouping (indexed by DP copy)
+    /// so the hot path allocates only the outgoing id vectors it sends.
+    probed_scratch: Vec<u64>,
     by_dp_scratch: Vec<Vec<u32>>,
     touched_dps: Vec<u16>,
 }
@@ -36,34 +53,40 @@ impl BiState {
     pub fn new(copy: u16, n_ag: usize, max_candidates: usize) -> BiState {
         BiState {
             copy,
-            buckets: HashMap::new(),
+            dir: BucketDirectory::new(),
             n_ag,
             max_candidates,
             work: WorkStats::default(),
-            seen_scratch: std::collections::HashSet::new(),
+            seen: SeenFilter::default(),
+            probed_scratch: Vec::new(),
             by_dp_scratch: Vec::new(),
             touched_dps: Vec::new(),
         }
     }
 
     pub fn bucket_count(&self) -> usize {
-        self.buckets.len()
+        self.dir.bucket_count()
     }
 
     pub fn reference_count(&self) -> usize {
-        self.buckets.values().map(|v| v.len()).sum()
+        self.dir.reference_count()
     }
 
     /// Index-build message (ii).
     pub fn on_index_ref(&mut self, key: u64, id: u32, dp: u16) {
-        self.buckets.entry(key).or_default().push((id, dp));
+        self.dir.insert(key, id, dp);
     }
 
-    /// Deterministic snapshot of all buckets (persistence); sorted by key.
-    pub fn buckets_snapshot(&self) -> Vec<(u64, &Vec<(u32, u16)>)> {
-        let mut out: Vec<_> = self.buckets.iter().map(|(k, v)| (*k, v)).collect();
-        out.sort_by_key(|(k, _)| *k);
-        out
+    /// Deterministic snapshot of all buckets (persistence/state dumps);
+    /// sorted by key, refs in insertion order — valid in any phase.
+    pub fn buckets_snapshot(&self) -> Vec<(u64, Vec<(u32, u16)>)> {
+        self.dir.snapshot()
+    }
+
+    /// Exact bytes resident in this copy's index state (arena directory +
+    /// seen bitmaps) — the `WorkStats::bytes_resident` gauge input.
+    pub fn bytes_resident(&self) -> u64 {
+        (self.dir.bytes_resident() + self.seen.bytes_resident()) as u64
     }
 
     /// Search message (iii) → emits (iv) + AG completion meta. `k` is the
@@ -77,31 +100,54 @@ impl BiState {
         k: u32,
         out: Emit,
     ) {
+        // Lazy barrier compaction: inserts since the last query fold into
+        // the arena now, and the seen filter adopts the new chunk
+        // capacities. Queries never run against a dirty overlay.
+        if self.dir.needs_compact() {
+            self.dir.compact();
+            self.seen
+                .configure(self.dir.id_space(), self.dir.chunk_shift(), self.dir.chunk_caps());
+        }
         // Gather candidates over all probed buckets, dedup by id, group by
         // DP copy. Scratch structures are reused across queries (§Perf).
-        self.seen_scratch.clear();
+        self.seen.begin_query();
+        self.probed_scratch.clear();
         self.touched_dps.clear();
         let mut routed = 0usize;
         'outer: for &(_table, key) in probes {
             self.work.bucket_lookups += 1;
-            if let Some(refs) = self.buckets.get(&key) {
-                for &(id, dp) in refs {
-                    if !self.seen_scratch.insert(id) {
-                        self.work.dup_skipped += 1;
-                        continue;
-                    }
-                    let slot = dp as usize;
-                    if slot >= self.by_dp_scratch.len() {
-                        self.by_dp_scratch.resize_with(slot + 1, Vec::new);
-                    }
-                    if self.by_dp_scratch[slot].is_empty() {
-                        self.touched_dps.push(dp);
-                    }
-                    self.by_dp_scratch[slot].push(id);
-                    routed += 1;
-                    if self.max_candidates > 0 && routed >= self.max_candidates {
-                        break 'outer;
-                    }
+            let Some((refs, summary)) = self.dir.lookup(key) else {
+                continue;
+            };
+            if self.probed_scratch.contains(&key) || self.seen.all_seen(summary) {
+                // Bucket-level pruning: every reference here is provably
+                // already seen this query (the key was already probed, or
+                // all its id chunks are saturated), so skip the scan and
+                // charge `dup_skipped` exactly as the scan would have.
+                // Sound against the routing cap too: a cap break exits the
+                // whole probe loop, so a skippable bucket can only follow
+                // fully-scanned ones.
+                self.work.bucket_skipped += 1;
+                self.work.dup_skipped += refs.len() as u64;
+                continue;
+            }
+            self.probed_scratch.push(key);
+            for &(id, dp) in refs {
+                if !self.seen.insert(id) {
+                    self.work.dup_skipped += 1;
+                    continue;
+                }
+                let slot = dp as usize;
+                if slot >= self.by_dp_scratch.len() {
+                    self.by_dp_scratch.resize_with(slot + 1, Vec::new);
+                }
+                if self.by_dp_scratch[slot].is_empty() {
+                    self.touched_dps.push(dp);
+                }
+                self.by_dp_scratch[slot].push(id);
+                routed += 1;
+                if self.max_candidates > 0 && routed >= self.max_candidates {
+                    break 'outer;
                 }
             }
         }
@@ -192,6 +238,83 @@ mod tests {
         assert_eq!(ids, vec![9]);
         assert_eq!(bi.work.dup_skipped, 1);
         assert_eq!(bi.work.candidates_routed, 1);
+        // the second bucket was skipped whole: id 9's chunk saturated
+        // after the first bucket's scan
+        assert_eq!(bi.work.bucket_skipped, 1);
+    }
+
+    #[test]
+    fn revisited_probe_key_skips_the_bucket() {
+        let mut bi = BiState::new(0, 1, 0);
+        bi.on_index_ref(100, 1, 0);
+        bi.on_index_ref(100, 2, 0);
+        // ids 3 and 64 keep chunk saturation out of play (id 3 shares id
+        // 2's chunk but is never seen; id 64 widens the id space so
+        // chunks span 2 ids) — the skip below is the revisit rule alone.
+        bi.on_index_ref(300, 3, 0);
+        bi.on_index_ref(400, 64, 0);
+        let mut out = Vec::new();
+        // two tables probing the SAME key: the revisit is skipped whole
+        bi.on_query(1, &[(0, 100), (1, 100)], &arcv(), 5, &mut out);
+        assert_eq!(bi.work.bucket_lookups, 2);
+        assert_eq!(bi.work.bucket_skipped, 1);
+        // both refs of the revisited bucket charge dup_skipped, exactly
+        // like the pre-bitmap scan did
+        assert_eq!(bi.work.dup_skipped, 2);
+        assert_eq!(bi.work.candidates_routed, 2);
+    }
+
+    #[test]
+    fn skipping_never_changes_routed_candidates() {
+        // Differential: same probe sequence against a store where every
+        // bucket holds every id — the skip path engages heavily and the
+        // routed id set must equal the unskipped reference (all ids once).
+        let mut bi = BiState::new(0, 1, 0);
+        for key in 0..8u64 {
+            for id in 0..16u32 {
+                bi.on_index_ref(key, id, (id % 3) as u16);
+            }
+        }
+        let probes: Vec<(u8, u64)> = (0..8).map(|t| (t as u8, t as u64)).collect();
+        let mut out = Vec::new();
+        bi.on_query(1, &probes, &arcv(), 5, &mut out);
+        let mut ids: Vec<u32> = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::CandidateReq { ids, .. } => Some(ids.clone()),
+                _ => None,
+            })
+            .flatten()
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..16).collect::<Vec<u32>>());
+        assert_eq!(bi.work.candidates_routed, 16);
+        // buckets 1..8 are saturated after bucket 0's scan
+        assert_eq!(bi.work.bucket_skipped, 7);
+        assert_eq!(bi.work.dup_skipped, 7 * 16);
+    }
+
+    #[test]
+    fn insert_mid_stream_recompacts_before_the_next_query() {
+        let mut bi = BiState::new(0, 1, 0);
+        bi.on_index_ref(100, 1, 0);
+        let mut out = Vec::new();
+        bi.on_query(1, &[(0, 100)], &arcv(), 5, &mut out);
+        // live insert after a query: overlay until the next probe
+        bi.on_index_ref(100, 2, 0);
+        bi.on_index_ref(500, 3, 1);
+        out.clear();
+        bi.on_query(2, &[(0, 100), (1, 500)], &arcv(), 5, &mut out);
+        let mut ids: Vec<u32> = out
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::CandidateReq { ids, .. } => Some(ids.clone()),
+                _ => None,
+            })
+            .flatten()
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3]);
     }
 
     #[test]
@@ -219,5 +342,13 @@ mod tests {
         let mut out = Vec::new();
         bi.on_query(1, &[(0, 5), (1, 6), (2, 7)], &arcv(), 5, &mut out);
         assert_eq!(bi.work.bucket_lookups, 3);
+    }
+
+    #[test]
+    fn bytes_resident_is_nonzero_once_indexed() {
+        let mut bi = BiState::new(0, 1, 0);
+        assert_eq!(bi.bytes_resident(), 0);
+        bi.on_index_ref(100, 1, 0);
+        assert!(bi.bytes_resident() > 0);
     }
 }

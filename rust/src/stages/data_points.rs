@@ -2,20 +2,29 @@
 //! replication — each object lives on exactly one DP copy), ranks candidate
 //! ids against queries, and emits DP-local top-k results — paper message (v).
 //!
+//! The object store is SoA: vectors live in one flat [`Dataset`] and the
+//! global id → local row map is a [`crate::store::RowIndex`] — two sorted
+//! parallel arrays plus a dense-id presence bitmap, compacted lazily at
+//! the first candidate request after a build/insert barrier (DESIGN.md
+//! §Storage engine). A duplicate store is a *typed*
+//! [`StoreError`] ([`DpState::try_store`]) so transports can stop cleanly
+//! through their existing `Stopped` paths instead of crashing a worker
+//! process; [`DpState::on_store`] keeps the panicking contract for the
+//! inline oracle.
+//!
 //! Duplicate elimination (paper §V-C): the same object can be requested by
 //! several BI copies (it appears in buckets of different tables that hash to
 //! different BIs). A per-query seen-set skips recomputing those distances;
 //! entries are evicted FIFO once `seen_cap` queries are tracked.
 //!
-//! The distance + top-k computation goes through the [`Ranker`]. Candidate
-//! vectors are gathered into one reused contiguous buffer so the ranker
-//! scans cache-line-friendly blocks, and ranking goes through
-//! [`Ranker::rank_pruned`]: the production [`crate::runtime::SimdRanker`]
-//! threads the running k-th-best bound through the distance loop and
-//! early-abandons candidates whose partial sum already exceeds it
-//! (`dists_pruned` counts those), while the compiled PJRT `rank` artifact
-//! (via `HybridRanker`) ranks whole tiles above its size threshold. All
-//! tiers return bit-identical hits (DESIGN.md §Kernels).
+//! The distance + top-k computation goes through [`Ranker::rank_rows`]:
+//! candidate *row indices* are gathered (not the vectors themselves) and
+//! the ranker reads rows straight out of the flat store — no intermediate
+//! copy ahead of the SIMD kernels. The production
+//! [`crate::runtime::SimdRanker`] threads the running k-th-best bound
+//! through the distance loop and early-abandons candidates whose partial
+//! sum already exceeds it (`dists_pruned` counts those). All tiers return
+//! bit-identical hits (DESIGN.md §Kernels).
 
 use crate::data::Dataset;
 use crate::dataflow::message::{Dest, Msg};
@@ -23,15 +32,16 @@ use crate::dataflow::metrics::WorkStats;
 use crate::partition::ag_map;
 use crate::runtime::Ranker;
 use crate::stages::Emit;
+use crate::store::{RowIndex, StoreError};
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 pub struct DpState {
     pub copy: u16,
-    /// Local partition of the reference dataset.
+    /// Local partition of the reference dataset (flat SoA rows).
     store: Dataset,
-    /// Global object id → local row.
-    rows: HashMap<u32, u32>,
+    /// Global object id → local row (sorted arrays + presence bitmap).
+    index: RowIndex,
     /// Per-query ids already ranked here (duplicate elimination).
     seen: HashMap<u32, HashSet<u32>>,
     seen_order: VecDeque<u32>,
@@ -39,8 +49,8 @@ pub struct DpState {
     pub n_ag: usize,
     pub dedup: bool,
     pub work: WorkStats,
-    /// Scratch buffer for gathered candidate vectors (hot-path, reused).
-    gather: Vec<f32>,
+    /// Scratch for gathered candidate rows/ids (hot-path, reused).
+    gather_rows: Vec<u32>,
     gather_ids: Vec<u32>,
 }
 
@@ -49,14 +59,14 @@ impl DpState {
         DpState {
             copy,
             store: Dataset::new(dim),
-            rows: HashMap::new(),
+            index: RowIndex::new(),
             seen: HashMap::new(),
             seen_order: VecDeque::new(),
             seen_cap: 8192,
             n_ag,
             dedup,
             work: WorkStats::default(),
-            gather: Vec::new(),
+            gather_rows: Vec::new(),
             gather_ids: Vec::new(),
         }
     }
@@ -65,28 +75,48 @@ impl DpState {
         self.store.len()
     }
 
-    /// Index-build message (i).
-    pub fn on_store(&mut self, id: u32, v: &[f32]) {
+    /// Index-build message (i), fallible: a duplicate id is a replica
+    /// fan-out / partitioning bug upstream, surfaced as a typed error so
+    /// the socket worker can terminate through its `Stopped` path.
+    pub fn try_store(&mut self, id: u32, v: &[f32]) -> Result<(), StoreError> {
         let row = self.store.len() as u32;
-        let prev = self.rows.insert(id, row);
-        assert!(prev.is_none(), "object {id} stored twice (replication bug)");
+        if !self.index.insert(id, row) {
+            return Err(StoreError::DuplicateObject { dp: self.copy, id });
+        }
         self.store.push(v);
         self.work.objects_stored += 1;
+        Ok(())
+    }
+
+    /// Panicking rendition of [`Self::try_store`] for contexts where a
+    /// routing-invariant violation is a programming error to surface
+    /// loudly (the inline oracle; the threaded executor converts the
+    /// panic into its typed `Stopped` event at join).
+    pub fn on_store(&mut self, id: u32, v: &[f32]) {
+        if let Err(e) = self.try_store(id, v) {
+            panic!("{e}");
+        }
     }
 
     pub fn get_object(&self, id: u32) -> Option<&[f32]> {
-        self.rows.get(&id).map(|&r| self.store.get(r as usize))
+        self.index.row_of(id).map(|r| self.store.get(r as usize))
     }
 
-    /// Deterministic snapshot of stored objects (persistence); sorted by id.
+    /// Deterministic snapshot of stored objects (persistence/state dumps);
+    /// sorted by id — valid in any phase.
     pub fn objects_snapshot(&self) -> Vec<(u32, &[f32])> {
-        let mut out: Vec<(u32, &[f32])> = self
-            .rows
-            .iter()
-            .map(|(&id, &row)| (id, self.store.get(row as usize)))
-            .collect();
-        out.sort_by_key(|(id, _)| *id);
-        out
+        self.index
+            .entries()
+            .into_iter()
+            .map(|(id, row)| (id, self.store.get(row as usize)))
+            .collect()
+    }
+
+    /// Exact bytes resident in this copy's store (flat vectors + row
+    /// index) — the `WorkStats::bytes_resident` gauge input.
+    pub fn bytes_resident(&self) -> u64 {
+        (self.store.as_flat().len() * std::mem::size_of::<f32>()
+            + self.index.bytes_resident()) as u64
     }
 
     /// Search message (iv) → emits (v). `k` is the *query's* resolved
@@ -101,8 +131,12 @@ impl DpState {
         ranker: &dyn Ranker,
         out: Emit,
     ) {
-        let dim = self.store.dim;
-        self.gather.clear();
+        // Lazy barrier compaction (mirrors the BI directory): restore
+        // O(log n) row lookups after a build/insert appended rows.
+        if self.index.needs_compact() {
+            self.index.compact();
+        }
+        self.gather_rows.clear();
         self.gather_ids.clear();
         if self.dedup {
             if !self.seen.contains_key(&qid) {
@@ -120,22 +154,20 @@ impl DpState {
                     self.work.dup_skipped += 1;
                     continue;
                 }
-                let Some(&row) = self.rows.get(&id) else {
+                let Some(row) = self.index.row_of(id) else {
                     // Reference to an object this DP never stored: routing
                     // invariant broken upstream.
                     panic!("DP {} asked for unknown object {id}", self.copy);
                 };
-                self.gather
-                    .extend_from_slice(self.store.get(row as usize));
+                self.gather_rows.push(row);
                 self.gather_ids.push(id);
             }
         } else {
             for &id in ids {
-                let Some(&row) = self.rows.get(&id) else {
+                let Some(row) = self.index.row_of(id) else {
                     panic!("DP {} asked for unknown object {id}", self.copy);
                 };
-                self.gather
-                    .extend_from_slice(self.store.get(row as usize));
+                self.gather_rows.push(row);
                 self.gather_ids.push(id);
             }
         }
@@ -144,8 +176,13 @@ impl DpState {
         let hits: Vec<(f32, u32)> = if n == 0 {
             Vec::new()
         } else {
-            debug_assert_eq!(self.gather.len(), n * dim);
-            let (hits, pruned) = ranker.rank_pruned(q, &self.gather, n, k);
+            let (hits, pruned) = ranker.rank_rows(
+                q,
+                self.store.as_flat(),
+                self.store.dim,
+                &self.gather_rows,
+                k,
+            );
             self.work.dists_pruned += pruned;
             hits.into_iter()
                 .map(|(d, local)| (d, self.gather_ids[local as usize]))
@@ -261,6 +298,17 @@ mod tests {
     }
 
     #[test]
+    fn double_store_is_a_typed_error() {
+        let mut dp = dp();
+        let err = dp.try_store(10, &[0.0; 4]).unwrap_err();
+        assert_eq!(err, StoreError::DuplicateObject { dp: 0, id: 10 });
+        // nothing was stored; the original object is intact
+        assert_eq!(dp.object_count(), 3);
+        assert_eq!(dp.get_object(10), Some([0.0f32; 4].as_slice()));
+        assert_eq!(dp.work.objects_stored, 3);
+    }
+
+    #[test]
     #[should_panic(expected = "stored twice")]
     fn double_store_is_a_replication_bug() {
         let mut dp = dp();
@@ -274,6 +322,24 @@ mod tests {
         let ranker = ScalarRanker { dim: 4 };
         let mut out = Vec::new();
         dp.on_candidates(1, &[999], &q(), 2, &ranker, &mut out);
+    }
+
+    #[test]
+    fn insert_mid_stream_rows_visible_after_recompaction() {
+        let mut dp = dp();
+        let ranker = ScalarRanker { dim: 4 };
+        let mut out = Vec::new();
+        dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
+        // live insert after a query: staged until the next request
+        dp.on_store(13, &[2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(dp.get_object(13), Some([2.0f32, 0.0, 0.0, 0.0].as_slice()));
+        dp.on_candidates(2, &[12, 13], &q(), 2, &ranker, &mut out);
+        match &out[1].1 {
+            Msg::LocalTopK { hits, .. } => {
+                assert_eq!(hits.as_slice(), &[(4.0, 13), (25.0, 12)]);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -300,5 +366,12 @@ mod tests {
         dp.on_candidates(1, &[10], &q(), 2, &ranker, &mut out);
         assert_eq!(dp.work.dup_skipped, 0);
         assert_eq!(dp.work.dists_computed, 2);
+    }
+
+    #[test]
+    fn bytes_resident_counts_rows_and_index() {
+        let dp = dp();
+        // at least the 3 stored 4-dim vectors
+        assert!(dp.bytes_resident() >= (3 * 4 * 4) as u64);
     }
 }

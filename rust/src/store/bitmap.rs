@@ -1,0 +1,239 @@
+//! Per-query candidate bitmap: the BI-side half of bucket-level pruning
+//! (Jafari et al., arXiv 1912.07101), made *exact* so results never change.
+//!
+//! Object ids are dense (`0..indexed_objects`), so a per-query seen-set
+//! can be a flat bitmap instead of a `HashSet`. Each 64-bit word carries a
+//! generation stamp — `begin_query` is O(1), not O(words): a word whose
+//! stamp is stale reads as all-unseen and is lazily reset on first touch.
+//!
+//! On top of the bitmap sits *chunk saturation*: the id space is split
+//! into at most 64 chunks (the same chunking as
+//! [`crate::store::BucketDirectory`]'s per-bucket summaries), and the
+//! filter counts distinct seen ids per chunk against the directory's
+//! per-chunk capacities. Once a chunk's count reaches its capacity, every
+//! id the directory could reference in that chunk has been seen, and the
+//! chunk's bit sets in `saturated`. A probed bucket whose summary is
+//! covered by `saturated` ([`SeenFilter::all_seen`]) can then be skipped
+//! *whole*: every one of its references is provably already seen this
+//! query, so the skip drops no candidate the scan would have kept and the
+//! scan's `dup_skipped` accounting can be charged exactly. No false
+//! positives, no probabilistic argument — see DESIGN.md §Storage engine.
+
+use std::mem::size_of;
+
+/// Generation-stamped exact seen-bitmap with chunk-saturation tracking.
+/// Configure it from the owning directory after every compaction
+/// (capacities change when the arena does), call [`Self::begin_query`] per
+/// query, then [`Self::insert`] per scanned reference.
+#[derive(Clone, Debug, Default)]
+pub struct SeenFilter {
+    /// Seen bits, valid only where `word_gen` matches `gen`.
+    words: Vec<u64>,
+    word_gen: Vec<u32>,
+    /// Distinct seen ids per chunk, valid only where `chunk_gen` matches.
+    chunk_seen: Vec<u32>,
+    chunk_gen: Vec<u32>,
+    /// Distinct ids the directory references per chunk (from
+    /// `BucketDirectory::chunk_caps` at the last compaction).
+    chunk_caps: Vec<u32>,
+    /// Chunks whose every referencable id has been seen this query.
+    saturated: u64,
+    chunk_shift: u32,
+    gen: u32,
+}
+
+impl SeenFilter {
+    /// (Re)size for a directory's id space and adopt its chunk geometry
+    /// and capacities. Invalidates all per-query state — call only at
+    /// compaction barriers, never mid-query.
+    pub fn configure(&mut self, id_space: u32, chunk_shift: u32, caps: &[u32]) {
+        let words = (id_space as usize).div_ceil(64);
+        self.words.clear();
+        self.words.resize(words, 0);
+        self.word_gen.clear();
+        self.word_gen.resize(words, 0);
+        self.chunk_seen.clear();
+        self.chunk_seen.resize(caps.len(), 0);
+        self.chunk_gen.clear();
+        self.chunk_gen.resize(caps.len(), 0);
+        self.chunk_caps.clear();
+        self.chunk_caps.extend_from_slice(caps);
+        self.chunk_shift = chunk_shift;
+        self.saturated = 0;
+        self.gen = 0;
+    }
+
+    /// Start a fresh query: O(1) — bump the generation instead of zeroing
+    /// the bitmap (with a full re-stamp on the rare u32 wrap).
+    pub fn begin_query(&mut self) {
+        if self.gen == u32::MAX {
+            self.word_gen.fill(0);
+            self.chunk_gen.fill(0);
+            self.gen = 0;
+        }
+        self.gen += 1;
+        self.saturated = 0;
+    }
+
+    /// Mark `id` seen; returns true iff it was NOT seen before this query
+    /// (`HashSet::insert` semantics). `id` must lie inside the configured
+    /// id space — bucket references always do.
+    #[inline]
+    pub fn insert(&mut self, id: u32) -> bool {
+        let (w, bit) = ((id / 64) as usize, 1u64 << (id % 64));
+        if self.word_gen[w] != self.gen {
+            self.word_gen[w] = self.gen;
+            self.words[w] = 0;
+        }
+        if self.words[w] & bit != 0 {
+            return false;
+        }
+        self.words[w] |= bit;
+        let c = (id >> self.chunk_shift) as usize;
+        if self.chunk_gen[c] != self.gen {
+            self.chunk_gen[c] = self.gen;
+            self.chunk_seen[c] = 0;
+        }
+        self.chunk_seen[c] += 1;
+        // A distinct-seen count can never exceed the chunk's capacity:
+        // every insertable id is referenced by the directory and therefore
+        // counted in the capacity.
+        if self.chunk_seen[c] == self.chunk_caps[c] {
+            self.saturated |= 1u64 << c;
+        }
+        true
+    }
+
+    /// True iff every id a bucket with this chunk `summary` can reference
+    /// has already been seen this query (all its chunks are saturated) —
+    /// the whole bucket may be skipped without scanning.
+    #[inline]
+    pub fn all_seen(&self, summary: u64) -> bool {
+        summary != 0 && summary & !self.saturated == 0
+    }
+
+    /// Exact bytes resident in the filter's bitmaps and counters.
+    pub fn bytes_resident(&self) -> usize {
+        self.words.len() * size_of::<u64>()
+            + self.word_gen.len() * size_of::<u32>()
+            + (self.chunk_seen.len() + self.chunk_gen.len() + self.chunk_caps.len())
+                * size_of::<u32>()
+    }
+
+    #[cfg(test)]
+    fn force_gen(&mut self, g: u32) {
+        self.gen = g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::BucketDirectory;
+    use crate::util::minitest::check;
+    use std::collections::HashSet;
+
+    /// Configure a filter straight from a compacted directory.
+    fn from_dir(dir: &BucketDirectory) -> SeenFilter {
+        let mut f = SeenFilter::default();
+        f.configure(dir.id_space(), dir.chunk_shift(), dir.chunk_caps());
+        f
+    }
+
+    #[test]
+    fn insert_matches_hashset_across_generations() {
+        check("store-bitmap-vs-hashset", 60, |g| {
+            let space = g.usize_in(1, 800) as u32;
+            let mut f = SeenFilter::default();
+            // a synthetic geometry: every id in one chunk-per-64 layout,
+            // capacities = full chunks so saturation can engage
+            let shift = 4u32;
+            let n_chunks = ((space - 1) >> shift) as usize + 1;
+            f.configure(space, shift, &vec![u32::MAX; n_chunks]);
+            for _query in 0..g.usize_in(1, 4) {
+                f.begin_query();
+                let mut model: HashSet<u32> = HashSet::new();
+                for _ in 0..g.usize_in(0, 120) {
+                    let id = g.usize_in(0, space as usize - 1) as u32;
+                    assert_eq!(f.insert(id), model.insert(id), "id {id}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn generation_wrap_resets_cleanly() {
+        let mut f = SeenFilter::default();
+        f.configure(100, 1, &[u32::MAX; 64]);
+        f.begin_query();
+        assert!(f.insert(5));
+        f.force_gen(u32::MAX);
+        // the wrap path must re-stamp, not leak old bits into gen 1
+        f.begin_query();
+        assert!(f.insert(5), "seen bit leaked across a generation wrap");
+        assert!(!f.insert(5));
+    }
+
+    #[test]
+    fn saturation_skip_is_exact_never_a_false_positive() {
+        // The safety property behind WorkStats::bucket_skipped: whenever
+        // all_seen(summary) says a bucket may be skipped, every id in that
+        // bucket is ALREADY in the seen set — the skip can never drop a
+        // candidate the scan would have routed.
+        check("store-bitmap-saturation-safety", 60, |g| {
+            let mut dir = BucketDirectory::new();
+            let n_refs = g.usize_in(1, 300);
+            let id_top = g.usize_in(1, 400);
+            for _ in 0..n_refs {
+                dir.insert(
+                    g.usize_in(0, 9) as u64,
+                    g.usize_in(0, id_top) as u32,
+                    (g.usize_in(0, 3)) as u16,
+                );
+            }
+            dir.compact();
+            let mut f = from_dir(&dir);
+            f.begin_query();
+            let snap = dir.snapshot();
+            let mut seen: HashSet<u32> = HashSet::new();
+            // insert a random prefix of a random traversal of the refs
+            for (key, refs) in &snap {
+                if g.bool() {
+                    for &(id, _) in refs {
+                        f.insert(id);
+                        seen.insert(id);
+                    }
+                }
+                let (_, summary) = dir.lookup(*key).unwrap();
+                if f.all_seen(summary) {
+                    for &(id, _) in refs {
+                        assert!(
+                            seen.contains(&id),
+                            "skip would drop unseen id {id} in bucket {key}"
+                        );
+                    }
+                }
+            }
+            // completeness: after inserting EVERY referenced id, every
+            // non-empty bucket is skippable
+            for (_, refs) in &snap {
+                for &(id, _) in refs {
+                    f.insert(id);
+                }
+            }
+            for (key, refs) in &snap {
+                let (_, summary) = dir.lookup(*key).unwrap();
+                assert!(!refs.is_empty());
+                assert!(f.all_seen(summary), "fully-seen bucket {key} not skippable");
+            }
+        });
+    }
+
+    #[test]
+    fn empty_summary_never_skips() {
+        let mut f = SeenFilter::default();
+        f.configure(10, 0, &[1; 10]);
+        f.begin_query();
+        assert!(!f.all_seen(0));
+    }
+}

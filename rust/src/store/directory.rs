@@ -1,0 +1,389 @@
+//! Arena bucket directory: the BI bucket store as three parallel flat
+//! arrays instead of a `HashMap<u64, Vec<(u32, u16)>>` of heap nodes.
+//!
+//! Layout (DESIGN.md §Storage engine):
+//!
+//! ```text
+//! keys:      [ k0 | k1 | k2 | ... ]          sorted u64 bucket keys
+//! spans:     [ (0,3) | (3,1) | (4,2) | ...]  (offset, len) into the arena
+//! summaries: [ s0 | s1 | s2 | ... ]          per-bucket id-chunk bitmaps
+//! arena:     [ r r r | r | r r | ... ]       one contiguous (id, dp) pool
+//! ```
+//!
+//! A probe is `keys.binary_search` + one contiguous `arena` slice scan —
+//! no per-bucket allocations, no pointer chasing. Live inserts go to a
+//! mutable `overlay` map and are merged into the arena by [`compact`]
+//! (called lazily at the first lookup after an insert/finish barrier, so
+//! the read path always sees the flat layout). Per-bucket *insertion
+//! order* — the ordering every snapshot consumer (PLSH/PLSD persist,
+//! `StateDump` wire frames, the differential tests) asserts — is
+//! preserved across compactions because the arena is append-ordered and
+//! overlay refs are strictly newer than arena refs.
+//!
+//! Each bucket also carries a `u64` *chunk summary*: bit `c` is set iff
+//! the bucket references an id in chunk `c` of the dense id space
+//! (`id >> chunk_shift`). Together with the per-chunk distinct-id
+//! capacities ([`chunk_caps`]) recomputed at compaction, this is the
+//! bucket-level metadata behind the exact skip test in
+//! [`crate::store::SeenFilter::all_seen`].
+//!
+//! [`compact`]: BucketDirectory::compact
+//! [`chunk_caps`]: BucketDirectory::chunk_caps
+
+use std::collections::HashMap;
+use std::mem::size_of;
+
+/// Sorted-key + refs-arena bucket store with an insert overlay. See the
+/// module docs for the layout.
+#[derive(Clone, Debug, Default)]
+pub struct BucketDirectory {
+    /// Sorted bucket keys, parallel to `spans` and `summaries`.
+    keys: Vec<u64>,
+    /// `(offset, len)` of each bucket's refs inside `arena`.
+    spans: Vec<(u32, u32)>,
+    /// Per-bucket id-chunk bitmaps (`1 << (id >> chunk_shift)` OR-ed over
+    /// the bucket's refs).
+    summaries: Vec<u64>,
+    /// One contiguous `(object id, DP copy)` pool, bucket-major in key
+    /// order, insertion-ordered within a bucket.
+    arena: Vec<(u32, u16)>,
+    /// Refs inserted since the last compaction, insertion-ordered per key.
+    overlay: HashMap<u64, Vec<(u32, u16)>>,
+    overlay_refs: usize,
+    /// Distinct ids this directory references per id chunk — the
+    /// saturation capacities for [`crate::store::SeenFilter`].
+    chunk_caps: Vec<u32>,
+    /// Chunk width exponent: ids map to chunk `id >> chunk_shift`; chosen
+    /// at compaction so at most 64 chunks cover the id space.
+    chunk_shift: u32,
+    /// One past the largest id in the arena (0 when empty).
+    id_space: u32,
+}
+
+impl BucketDirectory {
+    pub fn new() -> BucketDirectory {
+        BucketDirectory::default()
+    }
+
+    /// Insert one reference (index-build / live-insert path). Goes to the
+    /// overlay; [`Self::compact`] folds it into the arena at the barrier.
+    pub fn insert(&mut self, key: u64, id: u32, dp: u16) {
+        self.overlay.entry(key).or_default().push((id, dp));
+        self.overlay_refs += 1;
+    }
+
+    /// True when inserts are pending and lookups would miss them — the
+    /// caller must [`Self::compact`] before probing.
+    pub fn needs_compact(&self) -> bool {
+        !self.overlay.is_empty()
+    }
+
+    /// Distinct bucket keys (arena + overlay).
+    pub fn bucket_count(&self) -> usize {
+        self.keys.len()
+            + self
+                .overlay
+                .keys()
+                .filter(|k| self.keys.binary_search(k).is_err())
+                .count()
+    }
+
+    /// Total references held (arena + overlay).
+    pub fn reference_count(&self) -> usize {
+        self.arena.len() + self.overlay_refs
+    }
+
+    /// One past the largest id in the arena (0 when empty); the bitmap
+    /// width for [`crate::store::SeenFilter::configure`].
+    pub fn id_space(&self) -> u32 {
+        self.id_space
+    }
+
+    pub fn chunk_shift(&self) -> u32 {
+        self.chunk_shift
+    }
+
+    /// Distinct-id capacity of each chunk (recomputed at compaction).
+    pub fn chunk_caps(&self) -> &[u32] {
+        &self.chunk_caps
+    }
+
+    /// Probe one bucket: binary search + contiguous slice. Returns the
+    /// refs span and the bucket's chunk summary. Only valid on a
+    /// compacted directory (the overlay would be invisible here).
+    #[inline]
+    pub fn lookup(&self, key: u64) -> Option<(&[(u32, u16)], u64)> {
+        debug_assert!(
+            self.overlay.is_empty(),
+            "lookup on a dirty directory (compact at the barrier first)"
+        );
+        let i = self.keys.binary_search(&key).ok()?;
+        let (off, len) = self.spans[i];
+        Some((&self.arena[off as usize..(off + len) as usize], self.summaries[i]))
+    }
+
+    /// Owned snapshot of every bucket, sorted by key, refs in insertion
+    /// order — valid in any phase (merges the overlay on the fly without
+    /// mutating, so mid-build persist/`StateDump` calls see live inserts).
+    pub fn snapshot(&self) -> Vec<(u64, Vec<(u32, u16)>)> {
+        let mut extra: Vec<u64> = self.overlay.keys().copied().collect();
+        extra.sort_unstable();
+        let mut out = Vec::with_capacity(self.keys.len() + extra.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.keys.len() || j < extra.len() {
+            let key = match (self.keys.get(i), extra.get(j)) {
+                (Some(&a), Some(&b)) => a.min(b),
+                (Some(&a), None) => a,
+                (None, Some(&b)) => b,
+                (None, None) => break,
+            };
+            let mut refs: Vec<(u32, u16)> = Vec::new();
+            if i < self.keys.len() && self.keys[i] == key {
+                let (off, len) = self.spans[i];
+                refs.extend_from_slice(&self.arena[off as usize..(off + len) as usize]);
+                i += 1;
+            }
+            if j < extra.len() && extra[j] == key {
+                // Overlay refs are strictly newer than arena refs, so
+                // arena-then-overlay is insertion order.
+                refs.extend_from_slice(&self.overlay[&key]);
+                j += 1;
+            }
+            out.push((key, refs));
+        }
+        out
+    }
+
+    /// Merge the overlay into the arena and rebuild the chunk metadata.
+    /// Returns whether anything changed. O(refs) plus one sort over the
+    /// overlay's keys — a barrier-time cost, never on the probe path.
+    pub fn compact(&mut self) -> bool {
+        if self.overlay.is_empty() {
+            return false;
+        }
+        let snap = self.snapshot();
+        self.keys.clear();
+        self.spans.clear();
+        self.arena.clear();
+        self.arena.reserve(snap.iter().map(|(_, r)| r.len()).sum());
+        for (key, refs) in &snap {
+            let off = self.arena.len() as u32;
+            self.arena.extend_from_slice(refs);
+            self.keys.push(*key);
+            self.spans.push((off, refs.len() as u32));
+        }
+        self.overlay.clear();
+        self.overlay_refs = 0;
+        self.rebuild_chunks();
+        true
+    }
+
+    /// Recompute `id_space`, `chunk_shift`, `chunk_caps`, and every
+    /// bucket's summary from the (freshly compacted) arena.
+    fn rebuild_chunks(&mut self) {
+        let max_id = self.arena.iter().map(|&(id, _)| id).max();
+        self.id_space = max_id.map_or(0, |m| m + 1);
+        // Smallest shift with at most 64 chunks over [0, id_space).
+        let mut shift = 0u32;
+        while self.id_space > 0 && ((self.id_space - 1) >> shift) >= 64 {
+            shift += 1;
+        }
+        self.chunk_shift = shift;
+        let n_chunks = if self.id_space == 0 {
+            0
+        } else {
+            (((self.id_space - 1) >> shift) + 1) as usize
+        };
+        self.chunk_caps.clear();
+        self.chunk_caps.resize(n_chunks, 0);
+        let mut distinct = vec![0u64; self.id_space as usize / 64 + 1];
+        for &(id, _) in &self.arena {
+            let (w, bit) = ((id / 64) as usize, 1u64 << (id % 64));
+            if distinct[w] & bit == 0 {
+                distinct[w] |= bit;
+                self.chunk_caps[(id >> shift) as usize] += 1;
+            }
+        }
+        self.summaries.clear();
+        self.summaries.reserve(self.keys.len());
+        for &(off, len) in &self.spans {
+            let mut s = 0u64;
+            for &(id, _) in &self.arena[off as usize..(off + len) as usize] {
+                s |= 1u64 << (id >> shift);
+            }
+            self.summaries.push(s);
+        }
+    }
+
+    /// Exact bytes resident in this directory (arena, tables, overlay).
+    pub fn bytes_resident(&self) -> usize {
+        let mut b = self.keys.len() * size_of::<u64>()
+            + self.spans.len() * size_of::<(u32, u32)>()
+            + self.summaries.len() * size_of::<u64>()
+            + self.arena.len() * size_of::<(u32, u16)>()
+            + self.chunk_caps.len() * size_of::<u32>();
+        for refs in self.overlay.values() {
+            b += size_of::<u64>() + refs.len() * size_of::<(u32, u16)>();
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+
+    /// The reference model the arena layout must match bit-for-bit: the
+    /// HashMap-of-Vecs store `BiState` used before the refactor.
+    #[derive(Default)]
+    struct ModelStore {
+        buckets: HashMap<u64, Vec<(u32, u16)>>,
+    }
+
+    impl ModelStore {
+        fn insert(&mut self, key: u64, id: u32, dp: u16) {
+            self.buckets.entry(key).or_default().push((id, dp));
+        }
+        fn snapshot(&self) -> Vec<(u64, Vec<(u32, u16)>)> {
+            let mut out: Vec<_> =
+                self.buckets.iter().map(|(&k, v)| (k, v.clone())).collect();
+            out.sort_by_key(|(k, _)| *k);
+            out
+        }
+    }
+
+    #[test]
+    fn empty_directory() {
+        let mut d = BucketDirectory::new();
+        assert_eq!(d.bucket_count(), 0);
+        assert_eq!(d.reference_count(), 0);
+        assert!(!d.needs_compact());
+        assert!(!d.compact());
+        assert_eq!(d.lookup(42), None);
+        assert!(d.snapshot().is_empty());
+        assert_eq!(d.id_space(), 0);
+    }
+
+    #[test]
+    fn insertion_order_survives_compaction_rounds() {
+        let mut d = BucketDirectory::new();
+        d.insert(7, 3, 0);
+        d.insert(7, 1, 1);
+        d.compact();
+        // a second round appends *after* the arena refs of round one
+        d.insert(7, 2, 0);
+        d.insert(3, 9, 2);
+        let snap = d.snapshot(); // dirty snapshot sees the overlay
+        assert_eq!(snap, vec![(3, vec![(9, 2)]), (7, vec![(3, 0), (1, 1), (2, 0)])]);
+        d.compact();
+        assert_eq!(d.snapshot(), snap);
+        let (refs, _) = d.lookup(7).unwrap();
+        assert_eq!(refs, &[(3, 0), (1, 1), (2, 0)]);
+    }
+
+    #[test]
+    fn snapshots_bit_identical_to_hashmap_model() {
+        // The tentpole property: under random insert/compact/probe
+        // sequences the directory's snapshot equals the HashMap reference
+        // model's — same keys, same per-bucket insertion order.
+        check("store-directory-vs-model", 60, |g| {
+            let mut dir = BucketDirectory::new();
+            let mut model = ModelStore::default();
+            let n_keys = g.usize_in(1, 12);
+            let n_ops = g.usize_in(0, 120);
+            let mut next_id = 0u32;
+            let mut inserted = 0usize;
+            for _ in 0..n_ops {
+                match g.usize_in(0, 9) {
+                    // bias toward inserts; compact at random interior points
+                    0 => {
+                        dir.compact();
+                    }
+                    _ => {
+                        let key = (g.usize_in(0, n_keys - 1) as u64) * 1_000_003;
+                        let id = if g.bool() && next_id > 0 {
+                            // duplicate ids across buckets are legal
+                            g.usize_in(0, next_id as usize - 1) as u32
+                        } else {
+                            next_id += 1;
+                            next_id - 1
+                        };
+                        let dp = g.usize_in(0, 3) as u16;
+                        dir.insert(key, id, dp);
+                        model.insert(key, id, dp);
+                        inserted += 1;
+                    }
+                }
+                assert_eq!(dir.snapshot(), model.snapshot());
+            }
+            assert_eq!(dir.reference_count(), inserted);
+            assert_eq!(dir.bucket_count(), model.buckets.len());
+            // after the final compaction every lookup equals the model
+            dir.compact();
+            assert_eq!(dir.snapshot(), model.snapshot());
+            for (key, refs) in model.snapshot() {
+                let (got, _) = dir.lookup(key).unwrap();
+                assert_eq!(got, refs.as_slice());
+            }
+            assert_eq!(dir.lookup(u64::MAX), None);
+        });
+    }
+
+    #[test]
+    fn summaries_and_caps_describe_the_arena_exactly() {
+        check("store-directory-chunks", 40, |g| {
+            let mut dir = BucketDirectory::new();
+            let n = g.usize_in(1, 200);
+            let id_top = g.usize_in(1, 5000) as u32;
+            for _ in 0..n {
+                dir.insert(
+                    g.usize_in(0, 6) as u64 * 17,
+                    g.usize_in(0, id_top as usize) as u32,
+                    0,
+                );
+            }
+            dir.compact();
+            let shift = dir.chunk_shift();
+            let space = dir.id_space();
+            assert!(space >= 1);
+            // at most 64 chunks, and the shift is minimal
+            assert!(((space - 1) >> shift) < 64);
+            assert!(shift == 0 || ((space - 1) >> (shift - 1)) >= 64);
+            // caps: distinct ids per chunk over the whole arena
+            let mut distinct: Vec<std::collections::HashSet<u32>> =
+                vec![Default::default(); 64];
+            for (_, refs) in dir.snapshot() {
+                for (id, _) in refs {
+                    distinct[(id >> shift) as usize].insert(id);
+                }
+            }
+            for (c, &cap) in dir.chunk_caps().iter().enumerate() {
+                assert_eq!(cap as usize, distinct[c].len(), "chunk {c}");
+            }
+            // summaries: exactly the chunks each bucket touches
+            for (key, refs) in dir.snapshot() {
+                let (_, summary) = dir.lookup(key).unwrap();
+                let want = refs
+                    .iter()
+                    .fold(0u64, |s, &(id, _)| s | 1u64 << (id >> shift));
+                assert_eq!(summary, want, "key {key}");
+            }
+        });
+    }
+
+    #[test]
+    fn bytes_resident_tracks_growth() {
+        let mut d = BucketDirectory::new();
+        let empty = d.bytes_resident();
+        for i in 0..100 {
+            d.insert(i % 7, i as u32, 0);
+        }
+        let dirty = d.bytes_resident();
+        assert!(dirty > empty);
+        d.compact();
+        let compacted = d.bytes_resident();
+        // the arena share: 100 refs at 8 bytes each must be accounted
+        assert!(compacted >= 100 * size_of::<(u32, u16)>());
+    }
+}

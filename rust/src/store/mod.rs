@@ -1,0 +1,60 @@
+//! Cache-conscious storage engine for the index-owning stages (DESIGN.md
+//! §Storage engine).
+//!
+//! The paper's BI/DP decoupling exists because LSH's referential locality
+//! is terrible; this module gives each stage a layout that makes the most
+//! of what locality remains:
+//!
+//! * [`BucketDirectory`] — the BI bucket store: a sorted key table plus one
+//!   contiguous `(id, dp)` refs arena addressed by `(offset, len)` spans,
+//!   with a mutable overlay for live inserts that compacts into the arena
+//!   at the insert/finish barriers. A probe is a binary search plus a
+//!   contiguous slice scan — zero per-bucket `Vec`s, zero pointer chasing.
+//! * [`SeenFilter`] — the per-query candidate bitmap behind the BI-side
+//!   bucket pruning (Jafari et al., arXiv 1912.07101): an *exact*
+//!   generation-stamped seen-bitmap over the dense id space, plus
+//!   per-chunk saturation tracking that lets whole probed buckets be
+//!   skipped when every reference is provably already seen
+//!   (`WorkStats::bucket_skipped`). No false positives, by construction —
+//!   results stay bit-identical to the unfiltered scan.
+//! * [`RowIndex`] — the DP id→row map as a sorted SoA index over the flat
+//!   `Dataset` rows (no per-id `HashMap` nodes), with an O(1) dense-id
+//!   presence bitmap for eager duplicate detection.
+//!
+//! All three follow the same lifecycle: cheap appends while an index phase
+//! is open, one compaction at the phase barrier (lazily, on the first
+//! probe after the barrier), read-optimized layout in between. Snapshots
+//! (`persist`, `StateDump`) merge the overlay on the fly so they are valid
+//! in *any* phase and keep the historical orderings bit-for-bit.
+
+pub mod bitmap;
+pub mod directory;
+pub mod rows;
+
+pub use bitmap::SeenFilter;
+pub use directory::BucketDirectory;
+pub use rows::RowIndex;
+
+use std::fmt;
+
+/// Typed storage-contract violations, surfaced through the transports'
+/// existing `Stopped` paths instead of crashing a worker process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// The same object id was routed to one DP copy twice — a replica
+    /// fan-out / partitioning bug upstream (the paper's no-replication
+    /// invariant: each object lives on exactly one DP copy).
+    DuplicateObject { dp: u16, id: u32 },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::DuplicateObject { dp, id } => {
+                write!(f, "object {id} stored twice at DP {dp} (replication bug)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}

@@ -1,0 +1,202 @@
+//! SoA row index for the DP object store: global object id → local row of
+//! the flat `Dataset`, as two parallel sorted arrays instead of a
+//! `HashMap<u32, u32>` of heap nodes.
+//!
+//! Same lifecycle as the bucket directory: stores append to a staged tail
+//! in O(1), one merge-compaction at the phase barrier (lazily, at the
+//! first candidate request after a build/insert), binary-search lookups on
+//! the sorted arrays in between. Duplicate detection must stay *eager* —
+//! a double store is a replication bug the transports surface as a typed
+//! [`crate::store::StoreError`] the moment it happens — so membership is
+//! tracked in an O(1) dense-id presence bitmap, independent of the sorted
+//! arrays' compaction state.
+
+use std::mem::size_of;
+
+/// Sorted id→row index with an append-staged tail and an O(1) presence
+/// bitmap over the dense id space.
+#[derive(Clone, Debug, Default)]
+pub struct RowIndex {
+    /// Sorted object ids, parallel to `rows` (the compacted part).
+    ids: Vec<u32>,
+    rows: Vec<u32>,
+    /// `(id, row)` pairs appended since the last compaction.
+    staged: Vec<(u32, u32)>,
+    /// Presence bitmap over `0..=max stored id` — eager duplicate checks.
+    present: Vec<u64>,
+}
+
+impl RowIndex {
+    pub fn new() -> RowIndex {
+        RowIndex::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len() + self.staged.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// O(1): is `id` stored here (compacted or staged)?
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        let w = (id / 64) as usize;
+        w < self.present.len() && self.present[w] & (1u64 << (id % 64)) != 0
+    }
+
+    /// Record `id` at `row`. Returns false — and stores nothing — if the
+    /// id is already present (the caller surfaces the typed error).
+    pub fn insert(&mut self, id: u32, row: u32) -> bool {
+        let (w, bit) = ((id / 64) as usize, 1u64 << (id % 64));
+        if w >= self.present.len() {
+            self.present.resize(w + 1, 0);
+        }
+        if self.present[w] & bit != 0 {
+            return false;
+        }
+        self.present[w] |= bit;
+        self.staged.push((id, row));
+        true
+    }
+
+    /// True when staged entries are pending: lookups still work (they fall
+    /// back to scanning the staged tail) but the caller should
+    /// [`Self::compact`] at the barrier to restore O(log n) lookups.
+    pub fn needs_compact(&self) -> bool {
+        !self.staged.is_empty()
+    }
+
+    /// Merge the staged tail into the sorted arrays: one sort of the tail
+    /// plus a linear two-way merge — a barrier-time cost.
+    pub fn compact(&mut self) {
+        if self.staged.is_empty() {
+            return;
+        }
+        let mut tail = std::mem::take(&mut self.staged);
+        tail.sort_unstable_by_key(|&(id, _)| id);
+        let mut ids = Vec::with_capacity(self.ids.len() + tail.len());
+        let mut rows = Vec::with_capacity(ids.capacity());
+        let (mut i, mut j) = (0, 0);
+        while i < self.ids.len() || j < tail.len() {
+            let take_old = match (self.ids.get(i), tail.get(j)) {
+                (Some(&a), Some(&(b, _))) => a < b, // ids are unique
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_old {
+                ids.push(self.ids[i]);
+                rows.push(self.rows[i]);
+                i += 1;
+            } else {
+                ids.push(tail[j].0);
+                rows.push(tail[j].1);
+                j += 1;
+            }
+        }
+        self.ids = ids;
+        self.rows = rows;
+    }
+
+    /// The row storing `id`: binary search on the compacted arrays, then a
+    /// staged-tail scan (empty on the hot path — compaction runs at the
+    /// phase barrier before queries).
+    #[inline]
+    pub fn row_of(&self, id: u32) -> Option<u32> {
+        if let Ok(i) = self.ids.binary_search(&id) {
+            return Some(self.rows[i]);
+        }
+        self.staged
+            .iter()
+            .find(|&&(sid, _)| sid == id)
+            .map(|&(_, row)| row)
+    }
+
+    /// Owned `(id, row)` entries sorted by id, valid in any phase (merges
+    /// the staged tail on the fly) — the snapshot/persist ordering.
+    pub fn entries(&self) -> Vec<(u32, u32)> {
+        let mut out: Vec<(u32, u32)> = self
+            .ids
+            .iter()
+            .copied()
+            .zip(self.rows.iter().copied())
+            .chain(self.staged.iter().copied())
+            .collect();
+        out.sort_unstable_by_key(|&(id, _)| id);
+        out
+    }
+
+    /// Exact bytes resident in the index (arrays, staged tail, bitmap).
+    pub fn bytes_resident(&self) -> usize {
+        (self.ids.len() + self.rows.len()) * size_of::<u32>()
+            + self.staged.len() * size_of::<(u32, u32)>()
+            + self.present.len() * size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+    use std::collections::HashMap;
+
+    #[test]
+    fn empty_index() {
+        let r = RowIndex::new();
+        assert!(r.is_empty());
+        assert!(!r.contains(0));
+        assert_eq!(r.row_of(7), None);
+        assert!(r.entries().is_empty());
+    }
+
+    #[test]
+    fn duplicate_insert_is_rejected_eagerly() {
+        let mut r = RowIndex::new();
+        assert!(r.insert(9, 0));
+        assert!(!r.insert(9, 1), "staged duplicate must be caught");
+        r.compact();
+        assert!(!r.insert(9, 2), "compacted duplicate must be caught");
+        assert_eq!(r.row_of(9), Some(0));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn matches_hashmap_model_under_random_ops() {
+        // The reference model: the HashMap<u32, u32> DpState carried
+        // before the refactor. Lookups must agree in every compaction
+        // state; entries() must be the id-sorted snapshot ordering.
+        check("store-rows-vs-model", 60, |g| {
+            let mut idx = RowIndex::new();
+            let mut model: HashMap<u32, u32> = HashMap::new();
+            let mut next_row = 0u32;
+            for _ in 0..g.usize_in(0, 150) {
+                if g.usize_in(0, 9) == 0 {
+                    idx.compact();
+                } else {
+                    let id = g.usize_in(0, 300) as u32;
+                    let fresh = idx.insert(id, next_row);
+                    assert_eq!(fresh, !model.contains_key(&id), "id {id}");
+                    if fresh {
+                        model.insert(id, next_row);
+                        next_row += 1;
+                    }
+                }
+                // membership + lookups agree in dirty AND compacted states
+                let probe = g.usize_in(0, 310) as u32;
+                assert_eq!(idx.contains(probe), model.contains_key(&probe));
+                assert_eq!(idx.row_of(probe), model.get(&probe).copied());
+            }
+            assert_eq!(idx.len(), model.len());
+            let mut want: Vec<(u32, u32)> =
+                model.iter().map(|(&id, &row)| (id, row)).collect();
+            want.sort_unstable_by_key(|&(id, _)| id);
+            assert_eq!(idx.entries(), want);
+            idx.compact();
+            assert_eq!(idx.entries(), want);
+            for (id, row) in want {
+                assert_eq!(idx.row_of(id), Some(row));
+            }
+        });
+    }
+}

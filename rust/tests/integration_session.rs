@@ -7,7 +7,11 @@
 //!   state-identical to building over the concatenated dataset;
 //! * the acceptance path — build → insert → search in ONE session over ONE
 //!   worker launch (no re-handshake), answers matching the oracle and
-//!   worker state matching the inline build per bucket.
+//!   worker state matching the inline build per bucket;
+//! * the storage-engine differential — query, insert mid-stream, query
+//!   again, each round bit-identical to a fresh build over the dataset the
+//!   index held at that point, on the inline, threaded AND socket
+//!   transports (the arena/overlay re-compaction contract).
 
 use parlsh::config::Config;
 use parlsh::coordinator::session::IndexSession;
@@ -338,12 +342,12 @@ fn socket_session_build_insert_search_without_rehandshake() {
         }
     }
     for bi in &oracle_cluster.bis {
-        let want: Vec<(u64, Vec<(u32, u16)>)> = bi
-            .buckets_snapshot()
-            .into_iter()
-            .map(|(k, v)| (k, v.clone()))
-            .collect();
-        assert_eq!(remote_bis[&bi.copy], want, "BI copy {} diverged", bi.copy);
+        assert_eq!(
+            remote_bis[&bi.copy],
+            bi.buckets_snapshot(),
+            "BI copy {} diverged",
+            bi.copy
+        );
     }
     let mut stored = 0usize;
     for dp in &oracle_cluster.dps {
@@ -417,5 +421,58 @@ fn socket_streaming_admission_matches_oracle_interleaved() {
             "stream barrier lost the remote work counters"
         );
     }
+    net.shutdown().expect("clean shutdown");
+}
+
+/// The storage-engine differential (DESIGN.md §Storage engine): the first
+/// query round compacts the arena directory and the DP row index; the
+/// insert then lands refs in the mutable overlay and rows in the staged
+/// tail; the second round forces the lazy re-compaction merge on every
+/// copy. Each round must be bit-identical to a fresh build over the
+/// dataset the index held at that point.
+fn assert_insert_mid_stream_matches_fresh_builds(exec: &dyn Executor, cfg: &Config) {
+    let (ds1, _, hasher, ranker) = small_world(cfg, 1);
+    let ds2 = synthesize(SynthSpec { n: 250, clusters: 10, seed: 55, ..Default::default() });
+    let both = concat(&ds1, &ds2);
+    let (qs, _) = distorted_queries(&both, 10, 3.0, 11);
+
+    let mut pre_cluster = build_index(cfg, &ds1, &hasher);
+    let pre = search(&mut pre_cluster, &qs, &hasher, &ranker);
+    let mut post_cluster = build_index(cfg, &both, &hasher);
+    let post = search(&mut post_cluster, &qs, &hasher, &ranker);
+
+    let mut cluster = parlsh::coordinator::build_index_on(exec, cfg, &ds1, &hasher);
+    let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
+    let check_round = |oracle: &[Vec<(f32, u32)>], label: &str| {
+        let tickets: Vec<parlsh::QueryTicket> =
+            (0..qs.len()).map(|qi| session.submit(qs.get(qi))).collect();
+        let by_ticket: HashMap<u64, Vec<(f32, u32)>> =
+            session.drain().into_iter().map(|(t, hits)| (t.0, hits)).collect();
+        for (qi, t) in tickets.iter().enumerate() {
+            assert_eq!(by_ticket[&t.0], oracle[qi], "{label}: query {qi} diverged");
+        }
+    };
+    check_round(&pre.results, "pre-insert round");
+    assert_eq!(session.insert(&ds2), ds1.len() as u32..both.len() as u32);
+    check_round(&post.results, "post-insert round");
+    session.close();
+}
+
+#[test]
+fn insert_mid_stream_compaction_differential_inline() {
+    assert_insert_mid_stream_matches_fresh_builds(&InlineExecutor, &session_cfg());
+}
+
+#[test]
+fn insert_mid_stream_compaction_differential_threaded() {
+    assert_insert_mid_stream_matches_fresh_builds(&ThreadedExecutor, &session_cfg());
+}
+
+#[test]
+fn insert_mid_stream_compaction_differential_socket() {
+    let cfg = session_cfg();
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    assert_insert_mid_stream_matches_fresh_builds(net.executor(), &cfg);
     net.shutdown().expect("clean shutdown");
 }
