@@ -219,6 +219,40 @@ impl Default for FrontConfig {
     }
 }
 
+/// Multi-tenant QoS settings (`crate::qos`, DESIGN.md §QoS scheduler):
+/// weighted fair queueing over tag classes at session admission, plus
+/// mmLSH-style adaptive per-query probe budgets. Driver-side policy —
+/// none of these keys enter the wire handshake digest.
+#[derive(Clone, Debug)]
+pub struct QosConfig {
+    /// Tag weight classes, `"gold:4,silver:2,*:1"`: wire tag id `i+1` is
+    /// the i-th named class; `*` (default weight 1) catches tag 0 and
+    /// unknown ids. Empty = QoS off (admission stays tenant-blind).
+    pub tags: String,
+    /// Resolve `probes = 0` plans adaptively from each query's
+    /// perturbation-score profile instead of the config `lsh.t` (Jafari
+    /// et al., arXiv 2003.06415). Explicit per-query `probes` values are
+    /// always honored as-is.
+    pub adaptive_probes: bool,
+    /// Fraction of the pooled perturbation score mass the adaptive
+    /// budget keeps, in (0, 1]. Higher = deeper probing.
+    pub adaptive_quantile: f64,
+    /// Per-table ceiling on an adaptive budget (also clamped to the
+    /// global 2^16 plan ceiling).
+    pub adaptive_max: usize,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            tags: String::new(),
+            adaptive_probes: false,
+            adaptive_quantile: 0.5,
+            adaptive_max: 64,
+        }
+    }
+}
+
 /// Dataset configuration.
 #[derive(Clone, Debug)]
 pub struct DataConfig {
@@ -303,6 +337,7 @@ pub struct Config {
     pub net: NetParams,
     pub sock: SocketConfig,
     pub front: FrontConfig,
+    pub qos: QosConfig,
     pub data: DataConfig,
     pub stream: StreamConfig,
     pub runtime: RuntimeConfig,
@@ -347,6 +382,12 @@ impl Config {
             max_conns: doc.usize_or("front.max_conns", c.front.max_conns),
             egress_cap: doc.usize_or("front.egress_cap", c.front.egress_cap),
         };
+        c.qos = QosConfig {
+            tags: doc.str_or("qos.tags", &c.qos.tags),
+            adaptive_probes: doc.bool_or("qos.adaptive_probes", c.qos.adaptive_probes),
+            adaptive_quantile: doc.f64_or("qos.adaptive_quantile", c.qos.adaptive_quantile),
+            adaptive_max: doc.usize_or("qos.adaptive_max", c.qos.adaptive_max),
+        };
         c.data = DataConfig {
             source: doc.str_or("data.source", &c.data.source),
             n: doc.usize_or("data.n", c.data.n),
@@ -378,6 +419,18 @@ impl Config {
                 "L*M = {} exceeds the artifact projection bank (256)",
                 c.lsh.projections()
             ));
+        }
+        // [qos] validation: a bad tag spec or quantile should fail at load
+        // time, not at the first admission.
+        crate::qos::TagTable::parse(&c.qos.tags).map_err(|e| anyhow!(e))?;
+        if !(c.qos.adaptive_quantile > 0.0 && c.qos.adaptive_quantile <= 1.0) {
+            return Err(anyhow!(
+                "qos.adaptive_quantile = {} must be in (0, 1]",
+                c.qos.adaptive_quantile
+            ));
+        }
+        if c.qos.adaptive_max == 0 {
+            return Err(anyhow!("qos.adaptive_max must be >= 1"));
         }
         Ok(c)
     }
@@ -473,6 +526,33 @@ mod tests {
         assert_eq!(c.front.egress_cap, 65536);
         // the front door listens on the shared [net] listen key
         assert_eq!(c.sock.listen, "127.0.0.1:7471");
+    }
+
+    #[test]
+    fn qos_config_parses_and_validates() {
+        let c = Config::default();
+        assert!(c.qos.tags.is_empty());
+        assert!(!c.qos.adaptive_probes);
+        assert!((c.qos.adaptive_quantile - 0.5).abs() < 1e-12);
+        assert_eq!(c.qos.adaptive_max, 64);
+        let doc = Doc::parse(
+            "[qos]\ntags = \"gold:4,silver:2,*:1\"\nadaptive_probes = true\nadaptive_quantile = 0.8\nadaptive_max = 32\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.qos.tags, "gold:4,silver:2,*:1");
+        assert!(c.qos.adaptive_probes);
+        assert!((c.qos.adaptive_quantile - 0.8).abs() < 1e-12);
+        assert_eq!(c.qos.adaptive_max, 32);
+        // hostile specs fail at load time, not at first admission
+        let doc = Doc::parse("[qos]\ntags = \"gold:0\"\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+        let doc = Doc::parse("[qos]\nadaptive_quantile = 0.0\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+        let doc = Doc::parse("[qos]\nadaptive_quantile = 1.5\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+        let doc = Doc::parse("[qos]\nadaptive_max = 0\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
     }
 
     #[test]

@@ -64,6 +64,22 @@
 //! lane's in-flight tickets: the pipeline completes them, the session
 //! discards them on arrival, and the window share returns immediately.
 //!
+//! Multi-tenant QoS (DESIGN.md §QoS scheduler): when `[qos] tags`
+//! configures weight classes, *every* submit path — plain, batch, and
+//! lanes — additionally gates on the submitting tag's weighted-fair
+//! share of the `pending_cap` window ([`crate::qos::TagTable::share`]).
+//! Idle classes' shares are borrowed (work-conserving — a lone class
+//! gets the whole window), and a saturating class parks at its share
+//! while lighter classes keep their reserved slice. Per-class
+//! submitted/completed counts, latency, and attributed work land in
+//! [`SessionStats::per_tag`]. With `[qos] adaptive_probes`, a plan that
+//! leaves `probes = 0` resolves its per-table budget from the query's
+//! own perturbation-score profile at submit time
+//! ([`crate::qos::adaptive_probes`], after mmLSH) and stamps it into
+//! the wire plan as an explicit value — transports stay bit-identical
+//! to the inline oracle because the resolved budget, not the policy,
+//! rides the wire.
+//!
 //! Memory stays bounded on a resident session: per-query latency is
 //! folded into a [`LatencySummary`] (exact mean/max + fixed reservoir for
 //! percentiles) instead of a per-ticket vector, the in-flight ticket map
@@ -78,9 +94,10 @@ use crate::dataflow::exec::{
     AgHandler, BiHandler, DpHandler, Executor, StageHandler, StageHandlers, StreamCompletion,
     StreamConfig, StreamRun,
 };
-use crate::dataflow::message::{Msg, QueryOptions, StageKind};
+use crate::dataflow::message::{Msg, QueryOptions, StageKind, MAX_QUERY_PROBES};
 use crate::dataflow::metrics::{TrafficMeter, WorkStats};
 use crate::metrics::LatencySummary;
+use crate::qos::{self, TagAccount, TagStats, TagTable};
 use crate::runtime::{Hasher, Ranker};
 use crate::stages::aggregator::QueryResult;
 use crate::stages::{AgState, BiState, DpState, Emit, QueryReceiver};
@@ -137,6 +154,14 @@ pub struct SessionStats {
     /// mid-stream worker death (socket transport with replication > 1;
     /// always 0 elsewhere). Folded in at stream barriers.
     pub queries_retargeted: u64,
+    /// Per-tag-class QoS rows (DESIGN.md §QoS scheduler): one row per
+    /// configured `[qos] tags` class plus the trailing `*` catch-all —
+    /// the catch-all alone when QoS is unconfigured (then it simply
+    /// restates the session totals). Latency is pipeline service time
+    /// per class; `work` is delta-attributed at completion (exact under
+    /// the inline oracle, arrival-order approximate under concurrency)
+    /// and only collected when `[qos] tags` is configured.
+    pub per_tag: Vec<TagStats>,
 }
 
 // ---------------------------------------------------- owned stage handlers
@@ -284,6 +309,20 @@ struct Inner<'c> {
     /// Queries re-dispatched to a surviving replica after a mid-stream
     /// worker death (socket transport; folded in at stream barriers).
     retargeted: u64,
+    /// Parsed `[qos] tags` classes, frozen at attach (inert when the
+    /// spec is empty — every gate degenerates to a no-op comparison).
+    qos: TagTable,
+    /// Per-class serving accounts, indexed by class (catch-all last).
+    tag_accounts: Vec<TagAccount>,
+    /// Per-class outstanding (admitted, not yet completed) counts — the
+    /// live input to the weighted-fair [`TagTable::share`] rule.
+    tag_outstanding: Vec<u64>,
+    /// Merged live work at the last completion: the base against which
+    /// the next completion's work delta is attributed to its class. A
+    /// `take_work` reset can drop the live totals below this base; the
+    /// delta then saturates to zero until work catches up (per-tag work
+    /// is an attribution aid — session totals stay authoritative).
+    tag_work_base: WorkStats,
 }
 
 impl Inner<'_> {
@@ -304,6 +343,23 @@ impl Inner<'_> {
             "completion overflowed its plan's k"
         );
         self.completed += 1;
+        // Per-tag accounting: return the class's window share and charge
+        // everything the pipeline did since the previous completion to
+        // this ticket's class — exact under the inline oracle (one query
+        // in flight), an arrival-order approximation under concurrency;
+        // socket-remote counters only land at stream barriers.
+        let class = self.qos.class_of(opts.tag);
+        self.tag_outstanding[class] = self.tag_outstanding[class].saturating_sub(1);
+        if self.qos.is_enabled() {
+            // Only pay the per-completion slot sweep when `[qos] tags`
+            // is configured — without classes the catch-all row would
+            // just restate the session-wide work totals.
+            let live = self.merged_live_work();
+            let delta = live.delta_since(&self.tag_work_base);
+            self.tag_accounts[class].work.add(&delta);
+            self.tag_work_base = live;
+        }
+        self.tag_accounts[class].completed += 1;
         if lane != 0 {
             match self.lanes.get_mut(&lane) {
                 Some(held) => *held = held.saturating_sub(1),
@@ -314,7 +370,57 @@ impl Inner<'_> {
             }
         }
         self.latency.record(c.secs);
+        self.tag_accounts[class].latency.record(c.secs);
         Some((lane, (QueryTicket(t), opts, c.hits, c.secs)))
+    }
+
+    /// Sum of all work done so far as visible from this session right
+    /// now: head QR work plus every per-copy counter (live stream slots
+    /// while a stream is open, the cluster's stage states otherwise).
+    /// The per-tag attribution base — see `tag_work_base`.
+    fn merged_live_work(&self) -> WorkStats {
+        let mut w = self.head_work;
+        match &self.stream {
+            Some(os) => {
+                {
+                    let qw = os.qr_work.lock().unwrap_or_else(|p| p.into_inner());
+                    w.add(&qw);
+                }
+                for slot in &os.bis {
+                    let s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    w.add(&s.work);
+                }
+                for slot in &os.dps {
+                    let s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    w.add(&s.work);
+                }
+                for slot in &os.ags {
+                    let s = slot.lock().unwrap_or_else(|p| p.into_inner());
+                    w.add(&s.work);
+                }
+            }
+            None => {
+                for bi in &self.cluster.bis {
+                    w.add(&bi.work);
+                }
+                for dp in &self.cluster.dps {
+                    w.add(&dp.work);
+                }
+                for ag in &self.cluster.ags {
+                    w.add(&ag.work);
+                }
+            }
+        }
+        w
+    }
+
+    /// Does `tag`'s class have room under its weighted-fair share of
+    /// the backpressure window right now? Always true without `[qos]
+    /// tags` (inert table) or without a `pending_cap`.
+    fn tag_has_room(&self, tag: u32) -> bool {
+        let class = self.qos.class_of(tag);
+        let cap = self.cluster.cfg.stream.pending_cap;
+        (self.tag_outstanding[class] as usize) < self.qos.share(cap, class, &self.tag_outstanding)
     }
 
     /// Issue the next ticket and admit the query into the open stream —
@@ -336,6 +442,14 @@ impl Inner<'_> {
         echo: QueryOptions,
         lane: u32,
     ) -> Option<QueryTicket> {
+        // The tag's weighted-fair share gates admission before the
+        // executor window does: a saturating class is declined here while
+        // lighter classes keep their reserved slice of `pending_cap`.
+        // Nothing is consumed on decline — same retry contract as a full
+        // window.
+        if !self.tag_has_room(echo.tag) {
+            return None;
+        }
         let t = self.next_ticket;
         let qid = t as u32;
         let msg = Msg::QueryVec { qid, raw, v, opts };
@@ -347,6 +461,9 @@ impl Inner<'_> {
                 if lane != 0 {
                     *self.lanes.get_mut(&lane).expect("submit on a closed lane") += 1;
                 }
+                let class = self.qos.class_of(echo.tag);
+                self.tag_outstanding[class] += 1;
+                self.tag_accounts[class].submitted += 1;
                 Some(QueryTicket(t))
             }
             Err(_) => None,
@@ -379,6 +496,9 @@ pub struct IndexSession<'s> {
     /// The index's LSH params, frozen at attach — the defaulting source
     /// for per-query [`QueryOptions`] resolution.
     lsh: LshParams,
+    /// mmLSH adaptive probing policy, frozen at attach:
+    /// `Some((quantile, t_max))` when `[qos] adaptive_probes` is set.
+    adaptive: Option<(f64, usize)>,
     inner: Mutex<Inner<'s>>,
 }
 
@@ -394,11 +514,23 @@ impl<'s> IndexSession<'s> {
     ) -> IndexSession<'s> {
         let agg = cluster.cfg.stream.agg_bytes;
         let lsh = cluster.cfg.lsh;
+        // `Config::from_doc` validated the spec; a hand-built config with
+        // a broken spec degrades to the inert table (QoS off), never a
+        // panic inside attach.
+        let tag_table = TagTable::parse(&cluster.cfg.qos.tags).unwrap_or_default();
+        let n_classes = tag_table.n_classes();
+        let adaptive = cluster.cfg.qos.adaptive_probes.then(|| {
+            (
+                cluster.cfg.qos.adaptive_quantile,
+                cluster.cfg.qos.adaptive_max.min(MAX_QUERY_PROBES),
+            )
+        });
         IndexSession {
             exec,
             hasher,
             ranker,
             lsh,
+            adaptive,
             inner: Mutex::new(Inner {
                 cluster,
                 stream: None,
@@ -413,6 +545,10 @@ impl<'s> IndexSession<'s> {
                 search_meter: TrafficMeter::new(agg),
                 completed: 0,
                 retargeted: 0,
+                qos: tag_table,
+                tag_accounts: vec![TagAccount::default(); n_classes],
+                tag_outstanding: vec![0; n_classes],
+                tag_work_base: WorkStats::default(),
             }),
         }
     }
@@ -436,6 +572,25 @@ impl<'s> IndexSession<'s> {
             tables: opts.tables_in(self.lsh.l) as u32,
             tag: opts.tag,
         }
+    }
+
+    /// Resolve an mmLSH-style adaptive probe budget (DESIGN.md §QoS
+    /// scheduler) for one hashed query: when `[qos] adaptive_probes` is
+    /// on and the caller left `probes = 0` (inherit), the per-table
+    /// budget comes from the query's own perturbation-score profile
+    /// ([`qos::adaptive_probes`]) instead of the configured `lsh.t`. The
+    /// budget is stamped into BOTH the wire plan and the recv-side echo
+    /// as an explicit value, so the Query Receiver's resolution — and
+    /// with it every transport — replays the same plan bit-identically.
+    /// Explicit budgets (`probes != 0`) are always honored unchanged.
+    fn stamp_adaptive(&self, raw: &[f32], opts: &mut QueryOptions, echo: &mut QueryOptions) {
+        let Some((quantile, t_max)) = self.adaptive else { return };
+        if opts.probes != 0 {
+            return;
+        }
+        let t = qos::adaptive_probes(raw, self.lsh.m, echo.tables as usize, t_max, quantile);
+        opts.probes = t as u32;
+        echo.probes = t as u32;
     }
 
     fn lock(&self) -> MutexGuard<'_, Inner<'s>> {
@@ -508,11 +663,6 @@ impl<'s> IndexSession<'s> {
         let Some(os) = inner.stream.take() else { return };
         let OpenStream { run, bis, dps, ags, qr_work } = os;
         let report = run.finish();
-        for c in report.unclaimed {
-            if let Some(e) = inner.note_completion(c) {
-                inner.done.push_back(e);
-            }
-        }
         inner.search_meter.merge(&report.meter);
         inner.retargeted += report.retargeted;
         let qw = {
@@ -527,6 +677,14 @@ impl<'s> IndexSession<'s> {
         inner.cluster.dps = dps.into_iter().map(reclaim).collect();
         inner.cluster.ags = ags.into_iter().map(reclaim).collect();
         inner.cluster.absorb_remote_work(&report.work);
+        // Account the barrier's unclaimed completions only now, with the
+        // states (and any socket-remote counters) back in the cluster, so
+        // per-tag work attribution sees the full barrier totals.
+        for c in report.unclaimed {
+            if let Some(e) = inner.note_completion(c) {
+                inner.done.push_back(e);
+            }
+        }
         debug_assert!(
             inner.tickets.is_empty(),
             "stream barrier left tickets outstanding"
@@ -568,8 +726,10 @@ impl<'s> IndexSession<'s> {
             self.ranker.is_some(),
             "IndexSession::submit on a session attached without a ranker"
         );
-        let echo = self.resolve(opts);
+        let mut opts = opts;
+        let mut echo = self.resolve(opts);
         let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
+        self.stamp_adaptive(&raw, &mut opts, &mut echo);
         let v: Arc<[f32]> = q.into();
         loop {
             {
@@ -599,20 +759,26 @@ impl<'s> IndexSession<'s> {
             self.ranker.is_some(),
             "IndexSession::try_submit on a session attached without a ranker"
         );
-        let echo = self.resolve(opts);
-        // Probe the window before paying for the hash: a caller polling
-        // try_submit against a full window must not recompute projections
-        // on every declined attempt. The probe is advisory — the final
-        // try_submit below still decides.
+        let mut opts = opts;
+        let mut echo = self.resolve(opts);
+        // Probe the window (and the tag's weighted-fair share) before
+        // paying for the hash: a caller polling try_submit against a full
+        // window must not recompute projections on every declined
+        // attempt. The probe is advisory — the final try_submit below
+        // still decides.
         {
             let mut inner = self.lock();
             self.open_stream_locked(&mut inner);
+            if !inner.tag_has_room(echo.tag) {
+                return None;
+            }
             let os = inner.stream.as_mut().expect("stream just opened");
             if !os.run.can_submit() {
                 return None;
             }
         }
         let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
+        self.stamp_adaptive(&raw, &mut opts, &mut echo);
         let v: Arc<[f32]> = q.into();
         let mut inner = self.lock();
         self.open_stream_locked(&mut inner);
@@ -656,7 +822,11 @@ impl<'s> IndexSession<'s> {
                 while i < queries.len() {
                     let raw: Arc<[f32]> = raws[i * p..(i + 1) * p].into();
                     let v: Arc<[f32]> = queries.get(i).into();
-                    if inner.try_submit_one(raw, v, opts, echo, 0).is_none() {
+                    // adaptive budgets are per *query*, so each item of
+                    // the batch stamps its own copy of the shared plan
+                    let (mut q_opts, mut q_echo) = (opts, echo);
+                    self.stamp_adaptive(&raw, &mut q_opts, &mut q_echo);
+                    if inner.try_submit_one(raw, v, q_opts, q_echo, 0).is_none() {
                         break;
                     }
                     i += 1;
@@ -717,14 +887,18 @@ impl<'s> IndexSession<'s> {
             self.ranker.is_some(),
             "IndexSession::try_submit_lane on a session attached without a ranker"
         );
-        let echo = self.resolve(opts);
-        // Probe share + window before paying for the hash (advisory; the
-        // final try_submit_one below still decides).
+        let mut opts = opts;
+        let mut echo = self.resolve(opts);
+        // Probe lane share + tag share + window before paying for the
+        // hash (advisory; the final try_submit_one below still decides).
         {
             let mut inner = self.lock();
             self.open_stream_locked(&mut inner);
             let held = *inner.lanes.get(&lane).expect("submit on an unopened lane");
             if held >= inner.lane_share() {
+                return None;
+            }
+            if !inner.tag_has_room(echo.tag) {
                 return None;
             }
             let os = inner.stream.as_mut().expect("stream just opened");
@@ -733,6 +907,7 @@ impl<'s> IndexSession<'s> {
             }
         }
         let raw: Arc<[f32]> = self.hasher.proj_batch(q, 1).into();
+        self.stamp_adaptive(&raw, &mut opts, &mut echo);
         let v: Arc<[f32]> = q.into();
         let mut inner = self.lock();
         self.open_stream_locked(&mut inner);
@@ -931,6 +1106,21 @@ impl<'s> IndexSession<'s> {
                 }
             }
         }
+        let per_tag = inner
+            .tag_accounts
+            .iter()
+            .enumerate()
+            .map(|(class, a)| TagStats {
+                name: inner.qos.class_name(class).to_string(),
+                tag: inner.qos.canonical_tag(class),
+                weight: inner.qos.weight(class),
+                submitted: a.submitted,
+                completed: a.completed,
+                outstanding: inner.tag_outstanding[class],
+                latency: a.latency.clone(),
+                work: a.work,
+            })
+            .collect();
         SessionStats {
             build_meter: c.build_meter.clone(),
             search_meter: inner.search_meter.clone(),
@@ -941,6 +1131,7 @@ impl<'s> IndexSession<'s> {
             queries_evicted: inner.evicted,
             objects_indexed: c.indexed_objects as u64,
             queries_retargeted: inner.retargeted,
+            per_tag,
         }
     }
 
@@ -1450,5 +1641,125 @@ mod tests {
         let stats = session.close();
         assert_eq!(stats.queries_completed, 3);
         assert_eq!(stats.queries_evicted, 2);
+    }
+
+    #[test]
+    fn wfq_admission_reserves_share_for_light_tags() {
+        let mut cfg = small_cfg();
+        cfg.stream.pending_cap = 4;
+        cfg.qos.tags = "gold:1,silver:1".to_string();
+        let (ds, _, hasher, _) = world(&cfg, 1_200, 1);
+        // exact duplicates: every query reaches a DP rank call, so the
+        // latch deterministically holds them in flight
+        let (qs, _) = distorted_queries(&ds, 8, 0.0, 21);
+        let open = Arc::new((Mutex::new(false), Condvar::new()));
+        let ranker: Arc<dyn Ranker> = Arc::new(LatchRanker {
+            inner: ScalarRanker { dim: ds.dim },
+            open: open.clone(),
+        });
+        let mut cluster = build_index(&cfg, &ds, &hasher);
+        let session =
+            IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, Some(ranker));
+        let gold = QueryOptions { tag: 1, ..QueryOptions::default() };
+        let silver = QueryOptions { tag: 2, ..QueryOptions::default() };
+        // gold is the only active class: it borrows silver's idle weight
+        // (share = the whole window) and admits
+        assert!(session.try_submit_with(qs.get(0), gold).is_some());
+        // both classes active: equal weights repartition to ceil(4/2) = 2
+        assert!(session.try_submit_with(qs.get(1), silver).is_some());
+        assert!(session.try_submit_with(qs.get(2), silver).is_some());
+        // the flooding class parks at ITS share while the global window
+        // still has room (3 of 4 held) — the WFQ gate, not pending_cap
+        assert!(
+            session.try_submit_with(qs.get(3), silver).is_none(),
+            "silver overran its weighted-fair share"
+        );
+        // ...and the light class still has its reserved slice
+        assert!(session.try_submit_with(qs.get(4), gold).is_some());
+        {
+            let (m, cv) = &*open;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let done = session.drain_full();
+        assert_eq!(done.len(), 4);
+        let stats = session.close();
+        let row = |name: &str| {
+            stats
+                .per_tag
+                .iter()
+                .find(|r| r.name == name)
+                .expect("per-tag row")
+                .clone()
+        };
+        assert_eq!((row("gold").submitted, row("gold").completed), (2, 2));
+        assert_eq!((row("silver").submitted, row("silver").completed), (2, 2));
+        assert_eq!(row("gold").latency.count, 2);
+        assert_eq!(row("silver").outstanding, 0);
+        assert_eq!(row("*").submitted, 0);
+        let attributed: u64 =
+            stats.per_tag.iter().map(|r| r.work.dists_computed).sum();
+        assert!(attributed > 0, "per-tag work attribution recorded nothing");
+    }
+
+    #[test]
+    fn adaptive_probe_budgets_echo_and_replay_identically() {
+        // With [qos] adaptive_probes on, a probes = 0 plan resolves per
+        // query from its perturbation-score profile; the echoed budget is
+        // an explicit plan that must (a) agree across transports and (b)
+        // replay bit-identically with the policy off.
+        let mut cfg = small_cfg();
+        cfg.qos.adaptive_probes = true;
+        cfg.qos.adaptive_quantile = 0.5;
+        cfg.qos.adaptive_max = 8;
+        cfg.lsh.t = 30; // a budget the adaptive clamp can never emit
+        let (ds, qs, hasher, ranker) = world(&cfg, 1_200, 10);
+        let run = |cfg: &Config, plan: &dyn Fn(usize) -> QueryOptions, exec: &dyn Executor| {
+            let mut cluster = build_index(cfg, &ds, &hasher);
+            let session =
+                IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
+            for qi in 0..qs.len() {
+                session.submit_with(qs.get(qi), plan(qi));
+            }
+            let out = session.drain_full();
+            session.close();
+            out
+        };
+        let inline = run(&cfg, &|_| QueryOptions::default(), &InlineExecutor);
+        let threaded = run(&cfg, &|_| QueryOptions::default(), &ThreadedExecutor);
+        // every budget resolved into [1, adaptive_max], below the config
+        // default — proof the adaptive path (not lsh.t) decided
+        for (_, opts, _, _) in &inline {
+            assert!(
+                (1..=8).contains(&opts.probes),
+                "budget {} escaped the adaptive clamp",
+                opts.probes
+            );
+        }
+        let strip = |v: &[Completion]| {
+            v.iter()
+                .map(|(t, o, h, _)| (t.0, *o, h.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            strip(&inline),
+            strip(&threaded),
+            "adaptive budgets broke transport identity"
+        );
+        // replay the echoed budgets as explicit plans with adaptive OFF:
+        // the stamped wire value is the whole policy
+        let mut fixed_cfg = cfg.clone();
+        fixed_cfg.qos.adaptive_probes = false;
+        let budgets: Vec<u32> = inline.iter().map(|(_, o, _, _)| o.probes).collect();
+        let replay = run(
+            &fixed_cfg,
+            &|qi| QueryOptions { probes: budgets[qi], ..QueryOptions::default() },
+            &InlineExecutor,
+        );
+        assert_eq!(
+            strip(&inline),
+            strip(&replay),
+            "echoed adaptive budget failed to replay as a fixed plan"
+        );
     }
 }

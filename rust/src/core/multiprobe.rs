@@ -8,6 +8,14 @@
 //! bucket holds near neighbors. Sets are enumerated in non-decreasing score
 //! order with the shift/expand min-heap over the 2M sorted boundary
 //! distances.
+//!
+//! Two consumers share this enumeration: `HashFamily::query_probes` walks
+//! the sets to produce the actual probe bucket keys, and the QoS
+//! scheduler's [`crate::qos::adaptive_probes`] pools the same
+//! [`set_score`]s across a query's tables to pick a *per-query* probe
+//! budget from its score profile (mmLSH; DESIGN.md §QoS scheduler) — so
+//! the budget policy and the probe walk always agree on what a
+//! perturbation costs.
 
 use crate::core::topk::OrderedF32;
 use std::collections::BinaryHeap;

@@ -230,11 +230,53 @@ impl WorkStats {
         // gauge: the high-water mark survives, sums would double-count
         self.bytes_resident = self.bytes_resident.max(other.bytes_resident);
     }
+
+    /// Counter growth since an earlier snapshot — the per-tag attribution
+    /// primitive (DESIGN.md §QoS scheduler): the session snapshots the
+    /// merged live work at each completion and charges the delta to the
+    /// completing ticket's tag class. Saturating, so a reset between
+    /// snapshots (`take_work`) degrades to zero instead of wrapping.
+    /// `bytes_resident` is a gauge and has no meaningful delta: the
+    /// current value is carried through unchanged.
+    pub fn delta_since(&self, prev: &WorkStats) -> WorkStats {
+        WorkStats {
+            hash_vectors: self.hash_vectors.saturating_sub(prev.hash_vectors),
+            probe_seqs: self.probe_seqs.saturating_sub(prev.probe_seqs),
+            bucket_lookups: self.bucket_lookups.saturating_sub(prev.bucket_lookups),
+            candidates_routed: self.candidates_routed.saturating_sub(prev.candidates_routed),
+            dists_computed: self.dists_computed.saturating_sub(prev.dists_computed),
+            dists_pruned: self.dists_pruned.saturating_sub(prev.dists_pruned),
+            dup_skipped: self.dup_skipped.saturating_sub(prev.dup_skipped),
+            bucket_skipped: self.bucket_skipped.saturating_sub(prev.bucket_skipped),
+            objects_stored: self.objects_stored.saturating_sub(prev.objects_stored),
+            reduce_pushes: self.reduce_pushes.saturating_sub(prev.reduce_pushes),
+            bytes_resident: self.bytes_resident,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn delta_since_subtracts_counters_and_carries_the_gauge() {
+        let mut prev = WorkStats { dists_computed: 10, dup_skipped: 3, ..Default::default() };
+        prev.bytes_resident = 500;
+        let mut cur = prev;
+        cur.dists_computed += 7;
+        cur.bucket_skipped += 2;
+        cur.bytes_resident = 800;
+        let d = cur.delta_since(&prev);
+        assert_eq!(d.dists_computed, 7);
+        assert_eq!(d.bucket_skipped, 2);
+        assert_eq!(d.dup_skipped, 0);
+        // gauge carried, not differenced
+        assert_eq!(d.bytes_resident, 800);
+        // a reset between snapshots saturates to zero instead of wrapping
+        let z = prev.delta_since(&cur);
+        assert_eq!(z.dists_computed, 0);
+    }
 
     #[test]
     fn local_messages_are_free() {

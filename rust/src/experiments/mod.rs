@@ -949,11 +949,65 @@ pub fn streaming_comparison(lambda: Option<f64>) -> anyhow::Result<(Table, Strin
         sess.shutdown()?;
     }
 
+    let slo = streaming_tag_slo(&cfg, &w, &b);
+    println!("== Per-tag SLO: mixed gold/silver tenants on one session ==");
+    slo.print();
+
     let json = format!(
-        "{{\"experiment\":\"streaming\",\"table\":{}}}\n",
-        table.to_json()
+        "{{\"experiment\":\"streaming\",\"table\":{},\"qos\":{{\"tags\":\"gold:2,silver:1\",\"table\":{}}}}}\n",
+        table.to_json(),
+        slo.to_json()
     );
     Ok((table, json))
+}
+
+/// The per-tag SLO table (`[qos] tags`, DESIGN.md §QoS scheduler): two
+/// tenants — gold (weight 2) and silver (weight 1) — interleave 2:1 on
+/// one resident threaded session under a bounded admission window, and
+/// the session's per-tag accounts render as SLO rows: counts, service
+/// latency percentiles straight off each class's `LatencySummary`
+/// reservoir (`quantile`), and the work attributed to the class.
+fn streaming_tag_slo(cfg: &Config, w: &World, b: &Backends) -> Table {
+    use crate::coordinator::build_index_on;
+    use crate::coordinator::session::IndexSession;
+    use crate::dataflow::exec::ThreadedExecutor;
+    use crate::dataflow::message::QueryOptions;
+
+    let mut cfg = cfg.clone();
+    cfg.qos.tags = "gold:2,silver:1".to_string();
+    cfg.stream.pending_cap = 16; // the WFQ shares need a window to split
+    let mut cluster = build_index_on(&ThreadedExecutor, &cfg, &w.data, b.hasher.as_ref());
+    let mut table = Table::new(&[
+        "tag", "weight", "submitted", "completed", "mean ms", "p50 ms", "p99 ms", "dists",
+    ]);
+    let session = IndexSession::attach(
+        &ThreadedExecutor,
+        &mut cluster,
+        b.hasher.as_ref(),
+        Some(b.ranker.clone()),
+    );
+    for qi in 0..w.queries.len() {
+        // 2:1 interleave matching the 2:1 weights
+        let tag = if qi % 3 < 2 { 1 } else { 2 };
+        session.submit_with(w.queries.get(qi), QueryOptions { tag, ..Default::default() });
+        // claim as we go so the run holds O(pending) state
+        while session.try_recv().is_some() {}
+    }
+    let _ = session.drain();
+    let stats = session.close();
+    for r in &stats.per_tag {
+        table.row(&[
+            r.name.clone(),
+            format!("{}", r.weight),
+            format!("{}", r.submitted),
+            format!("{}", r.completed),
+            format!("{:.2}", r.latency.stats().mean_ms),
+            format!("{:.2}", r.latency.quantile(50.0) * 1e3),
+            format!("{:.2}", r.latency.quantile(99.0) * 1e3),
+            format!("{}", r.work.dists_computed),
+        ]);
+    }
+    table
 }
 
 // ------------------------------------------------------------ front door
@@ -1143,11 +1197,17 @@ pub fn front_comparison() -> anyhow::Result<(Table, String)> {
 // ------------------------------------------------- resident probe sweep
 
 /// Per-query probe-budget sweep on ONE resident index (`parlsh experiment
-/// probes`): the per-query-plan redesign (`QueryOptions`) makes T a
-/// request-time knob, so the whole recall-vs-latency curve comes off a
-/// single session — no rebuild per point, unlike `multiprobe_sweep`
-/// (which also resamples nothing here: same family, same stores).
-pub fn probes_sweep_resident(ts: &[usize]) -> Table {
+/// probes`, `BENCH_probes.json`): the per-query-plan redesign
+/// (`QueryOptions`) makes T a request-time knob, so the whole
+/// recall-vs-latency curve comes off a single session — no rebuild per
+/// point, unlike `multiprobe_sweep` (which also resamples nothing here:
+/// same family, same stores). On top of the fixed-T rows, the sweep runs
+/// the mmLSH adaptive policy (`[qos] adaptive_probes`, DESIGN.md §QoS
+/// scheduler) at several quantiles: each query resolves its own budget
+/// from its perturbation-score profile, and the row reports the mean
+/// resolved T next to the recall/latency point — the adaptive-vs-fixed
+/// frontier.
+pub fn probes_sweep_resident(ts: &[usize]) -> (Table, String) {
     use crate::coordinator::build_index_on;
     use crate::coordinator::session::IndexSession;
     use crate::dataflow::exec::ThreadedExecutor;
@@ -1160,41 +1220,68 @@ pub fn probes_sweep_resident(ts: &[usize]) -> Table {
     let w = world(&cfg);
     let b = backends(&cfg, w.data.dim);
     let mut cluster = build_index_on(&ThreadedExecutor, &cfg, &w.data, b.hasher.as_ref());
-    let mut table = Table::new(&["T (per-query)", "recall", "mean ms", "p99 ms", "q/s"]);
-    {
+    let mut table =
+        Table::new(&["plan", "mean T", "recall", "mean ms", "p99 ms", "q/s"]);
+
+    // One sweep point on a resident session: submit the whole set under
+    // `opts`, fold the completions into (recall, latency, mean echoed T).
+    let mut point = |cluster: &mut Cluster, opts: QueryOptions, label: String| {
         let session = IndexSession::attach(
             &ThreadedExecutor,
-            &mut cluster,
+            cluster,
             b.hasher.as_ref(),
             Some(b.ranker.clone()),
         );
-        for &t in ts {
-            let t0 = std::time::Instant::now();
-            let opts = QueryOptions { probes: t as u32, ..Default::default() };
-            let range = session.submit_batch_with(&w.queries, opts);
-            let done = session.drain_full();
-            let wall = t0.elapsed().as_secs_f64();
-            let mut retrieved: Vec<Vec<u32>> = vec![Vec::new(); w.queries.len()];
-            let mut lat = Vec::with_capacity(done.len());
-            for (ticket, echo, hits, secs) in &done {
-                debug_assert_eq!(echo.probes as usize, t, "option echo lost the plan");
-                let qi = (ticket.0 - range.start) as usize;
-                retrieved[qi] = hits.iter().map(|&(_, id)| id).collect();
-                lat.push(*secs);
-            }
-            let recall = recall_at_k(&retrieved, &w.gt);
-            let st = crate::metrics::latency_stats(&lat);
-            table.row(&[
-                format!("{t}"),
-                format!("{recall:.3}"),
-                format!("{:.2}", st.mean_ms),
-                format!("{:.2}", st.p99_ms),
-                format!("{:.1}", w.queries.len() as f64 / wall.max(1e-9)),
-            ]);
-        }
+        let t0 = std::time::Instant::now();
+        let range = session.submit_batch_with(&w.queries, opts);
+        let done = session.drain_full();
+        let wall = t0.elapsed().as_secs_f64();
         session.close();
+        let mut retrieved: Vec<Vec<u32>> = vec![Vec::new(); w.queries.len()];
+        let mut lat = Vec::with_capacity(done.len());
+        let mut budget_sum = 0u64;
+        for (ticket, echo, hits, secs) in &done {
+            debug_assert!(echo.probes >= 1, "option echo lost the plan");
+            budget_sum += echo.probes as u64;
+            let qi = (ticket.0 - range.start) as usize;
+            retrieved[qi] = hits.iter().map(|&(_, id)| id).collect();
+            lat.push(*secs);
+        }
+        let mean_t = budget_sum as f64 / done.len().max(1) as f64;
+        let recall = recall_at_k(&retrieved, &w.gt);
+        let st = crate::metrics::latency_stats(&lat);
+        table.row(&[
+            label,
+            format!("{mean_t:.1}"),
+            format!("{recall:.3}"),
+            format!("{:.2}", st.mean_ms),
+            format!("{:.2}", st.p99_ms),
+            format!("{:.1}", w.queries.len() as f64 / wall.max(1e-9)),
+        ]);
+    };
+
+    // fixed-T frontier: every query runs the same explicit budget
+    for &t in ts {
+        let opts = QueryOptions { probes: t as u32, ..Default::default() };
+        point(&mut cluster, opts, format!("fixed T={t}"));
     }
-    table
+    // adaptive frontier: probes = 0 + [qos] adaptive_probes resolves a
+    // per-query budget; the policy is session-side, so flipping it
+    // between sessions reuses the same resident stores
+    let t_max = ts.iter().copied().max().unwrap_or(16).max(2);
+    for &q in &[25.0f64, 50.0, 75.0] {
+        cluster.cfg.qos.adaptive_probes = true;
+        cluster.cfg.qos.adaptive_quantile = q / 100.0;
+        cluster.cfg.qos.adaptive_max = t_max;
+        point(&mut cluster, QueryOptions::default(), format!("adaptive q={q:.0}%"));
+    }
+    cluster.cfg.qos.adaptive_probes = false;
+
+    let json = format!(
+        "{{\"experiment\":\"probes\",\"adaptive_max\":{t_max},\"table\":{}}}\n",
+        table.to_json()
+    );
+    (table, json)
 }
 
 // -------------------------------------------------------- bench history

@@ -48,6 +48,10 @@
 //!   arena bucket directory, the exact per-query candidate bitmap behind
 //!   bucket-level pruning, and the SoA row index (DESIGN.md §Storage
 //!   engine);
+//! * [`qos`] — the multi-tenant scheduler (DESIGN.md §QoS scheduler):
+//!   `[qos] tags` weight classes with weighted-fair admission shares over
+//!   `stream.pending_cap`, per-tag latency/work accounting in
+//!   [`SessionStats`], and mmLSH-style adaptive per-query probe budgets;
 //! * [`simnet`] — the calibrated cluster cost model standing in for the
 //!   paper's 60-node InfiniBand testbed (see DESIGN.md §Substitutions);
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
@@ -67,6 +71,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod net;
 pub mod partition;
+pub mod qos;
 pub mod runtime;
 pub mod simnet;
 pub mod stages;

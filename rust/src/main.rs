@@ -11,7 +11,7 @@
 //! parlsh worker  --listen=ADDR                    socket-transport worker
 //! parlsh experiment <id>                          regenerate a paper table
 //!        ids: datasets fig3 fig4 table2 table3 fig5 fig6 ablation
-//!             executors net streaming front history all
+//!             executors probes net streaming front history all
 //! parlsh calibrate                                measure cost-model consts
 //! ```
 
@@ -119,6 +119,8 @@ USAGE:
                                      print completions with the option
                                      echo; --synth=N sends N deterministic
                                      synthetic queries (--seed=S);
+                                     --tag=NAME stamps every query with a
+                                     `[qos] tags` class (or a numeric id);
                                      --shutdown asks the server to drain
                                      and exit cleanly afterwards
   parlsh worker --listen=ADDR        host a worker slot's stage copies
@@ -132,18 +134,24 @@ USAGE:
                                      and wait to be discovered by a driver
                                      whose `[net] hosts` table lists it
   parlsh experiment <datasets|fig3|fig4|table2|table3|fig5|fig6|ablation|executors|probes|net|streaming|front|history|all>
-                                     (`executors`/`net`/`streaming`/`front`
-                                     also write BENCH_*.json and archive
-                                     them under bench_history/ keyed by git
-                                     SHA; `history` diffs the archived
-                                     runs; `probes` sweeps the per-query
-                                     probe budget T on ONE resident index
-                                     — no rebuild per point; `streaming`
-                                     adds an open-loop Poisson arrival
-                                     row, rate set by --lambda=Q_PER_SEC
-                                     (default 200); `front` sweeps client
-                                     count × backing executor through real
-                                     TCP with fairness spread; `net`,
+                                     (`executors`/`probes`/`net`/
+                                     `streaming`/`front` also write
+                                     BENCH_*.json and archive them under
+                                     bench_history/ keyed by git SHA;
+                                     `history` diffs the archived runs;
+                                     `probes` sweeps the per-query probe
+                                     budget T on ONE resident index — no
+                                     rebuild per point — then adds mmLSH
+                                     adaptive-budget rows ([qos]
+                                     adaptive_probes) for the fixed-vs-
+                                     adaptive frontier; `streaming` adds
+                                     an open-loop Poisson arrival row,
+                                     rate set by --lambda=Q_PER_SEC
+                                     (default 200), plus a per-tag SLO
+                                     table under mixed gold/silver QoS
+                                     tenants; `front` sweeps client count
+                                     × backing executor through real TCP
+                                     with fairness spread; `net`,
                                      `streaming` and `front` spawn
                                      processes/threads and are not part
                                      of `all`)
@@ -162,6 +170,17 @@ prefix any line with k=.. t=.. l=.. tag=.. tokens to override the plan
 for that one query:  `k=3 t=8 0.1 0.2 ...`. Results print with the
 per-ticket option echo. (--queries files with any other extension keep
 the binary behavior: .bvecs as bytes, everything else as fvecs.)
+
+Multi-tenant QoS: --set qos.tags=\"gold:4,silver:2,*:1\" names weighted
+tag classes; admission then partitions stream.pending_cap by weighted
+fair queueing over the *active* classes (idle weight is borrowed), and
+`serve`/`query` accept --tag=NAME (or a numeric id) to place a run's
+queries in a class. Per-tag SLO rows (submitted/completed, latency
+percentiles, distance work) print at session close. With --set
+qos.adaptive_probes=true, queries that don't pin an explicit probe
+budget (probes = 0) resolve a per-query T from their own perturbation-
+score profile (mmLSH), tuned by qos.adaptive_quantile / qos.adaptive_max
+— the echoed plan records the resolved budget.
 
 Env: PARLSH_N, PARLSH_Q scale experiments; PARLSH_SCALAR=1 forces the
 scalar path (no PJRT artifacts); PARLSH_FORCE_SCALAR=1 pins the SIMD
@@ -343,7 +362,44 @@ fn serve_front(
         "latency ms: mean {:.2} p50 {:.2} p90 {:.2} p99 {:.2} max {:.2}",
         lat.mean_ms, lat.p50_ms, lat.p90_ms, lat.p99_ms, lat.max_ms
     );
+    print_per_tag(&fs.per_tag);
     Ok(())
+}
+
+/// Resolve a `--tag=NAME` flag against the `[qos] tags` spec: numeric ids
+/// pass through untouched, `*` is the catch-all (0), and class names map
+/// to their 1-based wire id. No flag → tag 0.
+fn resolve_tag_flag(args: &Args, tags_spec: &str) -> Result<u32> {
+    match args.opt("tag") {
+        Some(s) => {
+            let tags = parlsh::qos::TagTable::parse(tags_spec).map_err(|e| anyhow!(e))?;
+            tags.resolve_tag(s).map_err(|e| anyhow!(e))
+        }
+        None => Ok(0),
+    }
+}
+
+/// Print the per-tag SLO rows ([`parlsh::qos::TagStats`]) of a serving
+/// run. Quiet when QoS is unconfigured (only the `*` catch-all exists).
+fn print_per_tag(per_tag: &[parlsh::qos::TagStats]) {
+    if per_tag.len() <= 1 {
+        return;
+    }
+    println!("per-tag SLO ([qos] tags):");
+    for r in per_tag {
+        let ls = r.latency.stats();
+        println!(
+            "  {:<10} w={:<3} submitted {:>6} completed {:>6} | ms mean {:.2} p50 {:.2} p99 {:.2} | dists {}",
+            r.name,
+            r.weight,
+            r.submitted,
+            r.completed,
+            ls.mean_ms,
+            ls.p50_ms,
+            ls.p99_ms,
+            r.work.dists_computed,
+        );
+    }
 }
 
 /// Print one front-door completion with its per-query plan echo (the
@@ -374,11 +430,16 @@ fn cmd_query(args: &Args) -> Result<()> {
     let Some(addr) = args.opt("connect") else {
         bail!("`parlsh query` needs --connect=ADDR (a `parlsh serve --listen` server)");
     };
+    // --tag=NAME resolves against the *client's* `[qos] tags` spec
+    // (--config/--set, defaults otherwise). QoS is driver-side policy and
+    // not digest-covered, so pass the server's spec here for names to line
+    // up; bare numeric ids always pass through even with no spec at hand.
+    let tag_spec = Config::load(args)?.qos.tags;
     let base = QueryOptions {
         k: args.opt_usize("k", 0).map_err(|e| anyhow!(e))? as u32,
         probes: args.opt_usize("probes", 0).map_err(|e| anyhow!(e))? as u32,
         tables: args.opt_usize("tables", 0).map_err(|e| anyhow!(e))? as u32,
-        tag: args.opt_usize("tag", 0).map_err(|e| anyhow!(e))? as u32,
+        tag: resolve_tag_flag(args, &tag_spec)?,
     };
     let window = args.opt_usize("window", 32).map_err(|e| anyhow!(e))?.max(1);
     let retries = args.opt_usize("retries", 400).map_err(|e| anyhow!(e))?;
@@ -575,11 +636,13 @@ fn serve_session(
     let window = cfg.stream.inflight;
     // The serving run's default plan: --k/--probes/--tables override the
     // config per run (0 = inherit); per-line prefixes override per query.
+    // --tag=NAME resolves against the `[qos] tags` classes (numeric ids
+    // pass through) and rides on every query of the run.
     let base = QueryOptions {
         k: args.opt_usize("k", 0).map_err(|e| anyhow!(e))? as u32,
         probes: args.opt_usize("probes", 0).map_err(|e| anyhow!(e))? as u32,
         tables: args.opt_usize("tables", 0).map_err(|e| anyhow!(e))? as u32,
-        tag: 0,
+        tag: resolve_tag_flag(args, &cfg.qos.tags)?,
     };
     let mut cluster = Cluster::empty(cfg, dim);
     let session =
@@ -669,6 +732,7 @@ fn serve_session(
         "latency ms: mean {:.2} p50 {:.2} p90 {:.2} p99 {:.2} max {:.2}",
         lat.mean_ms, lat.p50_ms, lat.p90_ms, lat.p99_ms, lat.max_ms
     );
+    print_per_tag(&stats.per_tag);
     if transport == "socket" {
         // Socket meters carry measured frame bytes (PR 2), not the model.
         println!(
@@ -689,7 +753,9 @@ fn serve_session(
         );
     }
     if synthetic {
-        if base == QueryOptions::default() {
+        // The tag only routes QoS accounting — it never changes retrieval,
+        // so a --tag-only run still scores recall against ground truth.
+        if QueryOptions { tag: 0, ..base } == QueryOptions::default() {
             // Tickets are issued in submission order, so they line up
             // with gt (computed at the config's k).
             let recall = recall_at_k(&retrieved, &w.gt);
@@ -768,8 +834,12 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 println!("(wrote BENCH_executors.json; archived {archived})");
             }
             "probes" => {
-                println!("== Per-query probe sweep on one resident index (QueryOptions) ==");
-                exp::probes_sweep_resident(&[1, 4, 8, 16, 30, 60]).print();
+                println!("== Per-query probe sweep on one resident index (fixed T vs adaptive) ==");
+                let (t, json) = exp::probes_sweep_resident(&[1, 4, 8, 16, 30, 60]);
+                t.print();
+                std::fs::write("BENCH_probes.json", json)?;
+                let archived = exp::archive_bench("BENCH_probes.json")?;
+                println!("(wrote BENCH_probes.json; archived {archived})");
             }
             "net" => {
                 println!("== Socket transport: obj_map strategies by real wire bytes ==");

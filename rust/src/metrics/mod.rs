@@ -100,6 +100,20 @@ impl LatencySummary {
         }
     }
 
+    /// One reservoir percentile, in **seconds** (the raw unit `record`
+    /// takes): `q` in [0, 100], e.g. `quantile(99.0)` for p99. Exact
+    /// while `count` ≤ the reservoir size, an estimate beyond. The
+    /// single shared percentile primitive — experiment code that needs
+    /// p50/p99 off a summary calls this instead of hand-rolling sort +
+    /// index math over raw sample vectors.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mut s = self.reservoir.clone();
+        percentile(&mut s, q)
+    }
+
     /// Percentile/mean snapshot: mean and max are exact, percentiles come
     /// from the reservoir (exact too while `count` ≤ the reservoir size).
     pub fn stats(&self) -> LatencyStats {
@@ -441,6 +455,20 @@ mod tests {
         let s = LatencySummary::new();
         assert_eq!(s.stats().mean_ms, 0.0);
         assert_eq!(s.count, 0);
+        assert_eq!(s.quantile(99.0), 0.0);
+    }
+
+    #[test]
+    fn quantile_matches_stats_and_stays_in_seconds() {
+        let mut s = LatencySummary::new();
+        for i in 1..=200 {
+            s.record(i as f64 / 1000.0);
+        }
+        let st = s.stats();
+        // same reservoir, same percentile math — only the unit differs
+        assert!((s.quantile(50.0) * 1e3 - st.p50_ms).abs() < 1e-9);
+        assert!((s.quantile(99.0) * 1e3 - st.p99_ms).abs() < 1e-9);
+        assert!(s.quantile(0.0) <= s.quantile(100.0));
     }
 
     #[test]

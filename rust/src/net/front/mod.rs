@@ -18,7 +18,13 @@
 //! ([`IndexSession::open_lane`]), bounding it to its fair share of
 //! `stream.pending_cap`, and the loop admits parked queries round-robin
 //! across connections — no client starves while another streams at full
-//! rate. A disconnect mid-stream closes the lane: in-flight tickets are
+//! rate. With `[qos] tags` configured the session additionally gates
+//! each submission on its tag's weighted-fair share (DESIGN.md §QoS
+//! scheduler) — lanes bound *connections*, tags bound *tenants*, and a
+//! flooding tag parks at its share even across many connections. The
+//! per-tag SLO rows land in [`FrontStats::per_tag`] at shutdown.
+//!
+//! A disconnect mid-stream closes the lane: in-flight tickets are
 //! orphaned (completed by the pipeline, discarded on arrival), the
 //! window share returns to survivors immediately, and the eviction is
 //! logged. Queries decoded but not yet admitted when a client vanishes
@@ -40,6 +46,7 @@ use crate::config::Config;
 use crate::coordinator::session::IndexSession;
 use crate::dataflow::message::{Msg, StageKind};
 use crate::net::wire::{self, Frame, FrameKind, Hello};
+use crate::qos::TagStats;
 use anyhow::Result;
 use conn::{Conn, Phase, ReadOutcome};
 use std::collections::{HashMap, VecDeque};
@@ -55,7 +62,7 @@ const BUSY_TICK_MS: i32 = 1;
 
 /// Counters the serve loop reports when it exits (tests and the CLI
 /// assert on these).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct FrontStats {
     pub accepted: u64,
     /// Accepts refused over `front.max_conns` (typed notice, then close).
@@ -67,6 +74,10 @@ pub struct FrontStats {
     /// Connections evicted: protocol violations, handshake mismatches,
     /// slow-client egress overflow, or disconnects with work in flight.
     pub evictions: u64,
+    /// Per-tag-class SLO rows snapshotted from the session at shutdown
+    /// (the catch-all `*` row alone when `[qos] tags` is unset) — see
+    /// `SessionStats::per_tag`.
+    pub per_tag: Vec<TagStats>,
 }
 
 /// What handling one decoded frame asks the loop to do.
@@ -364,6 +375,7 @@ pub fn serve(
         c.begin_close("front server shutdown");
         let _ = c.write_ready(); // best effort; the frame is small
     }
+    stats.per_tag = session.stats().per_tag;
     Ok(stats)
 }
 

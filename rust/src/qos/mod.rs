@@ -1,0 +1,451 @@
+//! Multi-tenant QoS: tag classes, weighted-fair admission shares, and
+//! mmLSH-style adaptive probe budgets (DESIGN.md §QoS scheduler).
+//!
+//! Every query plan already carries a `tag` (`QueryOptions.tag`, echoed per
+//! ticket since the per-query-plan PR); this module is what finally
+//! *consumes* it. Three pieces:
+//!
+//! - [`TagTable`]: the parsed `[qos] tags = "gold:4,silver:2,*:1"` spec.
+//!   Named classes get weights; `*` is the catch-all for tag 0 and unknown
+//!   ids. An empty spec parses to an **inert** table whose shares are
+//!   unbounded — QoS off costs nothing and changes nothing.
+//! - [`TagTable::share`]: weighted fair queueing over `stream.pending_cap`.
+//!   The share is computed against the *active* classes only (outstanding
+//!   work, plus the requester), so an idle class's weight is borrowed by
+//!   whoever is running — work-conserving: a lone flooder gets the whole
+//!   cap, but the moment a second class shows up the cap re-partitions by
+//!   weight and the flooder parks at its share.
+//! - [`adaptive_probes`]: the mmLSH budget rule (Jafari et al., arXiv
+//!   2003.06415). Instead of a fixed per-table `T`, pick each query's
+//!   budget from its own perturbation-score profile: pool the
+//!   [`probe_sequence`] set scores across the query's tables, keep the
+//!   cheap prefix holding `adaptive_quantile` of the cumulative score
+//!   mass, and spread it back over the tables. Queries whose fractional
+//!   coordinates sit near bucket boundaries (cheap, promising probes) get
+//!   deeper budgets than queries centered in their buckets — a better
+//!   recall/latency frontier at the same total work.
+//!
+//! The scheduler is *driver-side policy*: nothing here rides the wire or
+//! the config digest. Adaptive budgets are resolved once at submission and
+//! stamped into the wire plan as an explicit `probes` value, so the Query
+//! Receiver's resolution — and therefore every transport — stays
+//! bit-identical to the inline oracle by construction.
+
+use crate::core::multiprobe::{probe_sequence, set_score};
+use crate::dataflow::metrics::WorkStats;
+use crate::metrics::LatencySummary;
+
+/// Parsed `[qos] tags` spec: named weight classes plus the `*` catch-all.
+///
+/// Wire tag ids map to classes positionally: tag `i + 1` is the `i`-th
+/// named class in spec order; tag 0 and any id past the named classes fall
+/// into the catch-all (class index [`TagTable::n_classes`]` - 1`). The
+/// default-constructed table is *inert*: [`TagTable::share`] returns
+/// `usize::MAX` so admission gates compile to a no-op comparison.
+#[derive(Clone, Debug, Default)]
+pub struct TagTable {
+    /// Named classes in spec order; wire tag `i + 1` selects `classes[i]`.
+    classes: Vec<(String, u32)>,
+    /// Weight of the `*` catch-all class (tag 0 / unknown ids).
+    default_weight: u32,
+    /// True only for a non-empty spec: the WFQ gates engage.
+    enabled: bool,
+}
+
+impl TagTable {
+    /// Parse a `"name:weight,name:weight,*:weight"` spec. Weights are
+    /// positive integers (`name` alone means weight 1); `*` sets the
+    /// catch-all weight (1 if absent). Empty spec → inert table.
+    pub fn parse(spec: &str) -> Result<TagTable, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(TagTable::default());
+        }
+        let mut classes: Vec<(String, u32)> = Vec::new();
+        let mut default_weight: Option<u32> = None;
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (name, weight) = match entry.split_once(':') {
+                Some((n, w)) => {
+                    let w: u32 = w.trim().parse().map_err(|e| {
+                        format!("[qos] tags entry `{entry}`: bad weight: {e}")
+                    })?;
+                    (n.trim(), w)
+                }
+                None => (entry, 1),
+            };
+            if weight == 0 {
+                return Err(format!("[qos] tags entry `{entry}`: weight must be >= 1"));
+            }
+            if name == "*" {
+                if default_weight.replace(weight).is_some() {
+                    return Err("[qos] tags: duplicate `*` entry".into());
+                }
+            } else {
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+                {
+                    return Err(format!(
+                        "[qos] tags entry `{entry}`: class names are alphanumeric/_/- (or `*`)"
+                    ));
+                }
+                if classes.iter().any(|(n, _)| n == name) {
+                    return Err(format!("[qos] tags: duplicate class `{name}`"));
+                }
+                classes.push((name.to_string(), weight));
+            }
+        }
+        Ok(TagTable {
+            classes,
+            default_weight: default_weight.unwrap_or(1),
+            enabled: true,
+        })
+    }
+
+    /// True when parsed from a non-empty spec (the WFQ gates engage).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Number of classes including the `*` catch-all (always last).
+    pub fn n_classes(&self) -> usize {
+        self.classes.len() + 1
+    }
+
+    /// Class index of a wire tag id (0 / unknown → the catch-all).
+    pub fn class_of(&self, tag: u32) -> usize {
+        let i = tag as usize;
+        if i >= 1 && i <= self.classes.len() {
+            i - 1
+        } else {
+            self.classes.len()
+        }
+    }
+
+    /// Display name of a class (`"*"` for the catch-all).
+    pub fn class_name(&self, class: usize) -> &str {
+        self.classes.get(class).map_or("*", |(n, _)| n.as_str())
+    }
+
+    /// Canonical wire tag id of a class (0 for the catch-all).
+    pub fn canonical_tag(&self, class: usize) -> u32 {
+        if class < self.classes.len() {
+            class as u32 + 1
+        } else {
+            0
+        }
+    }
+
+    /// Weight of a class.
+    pub fn weight(&self, class: usize) -> u32 {
+        self.classes
+            .get(class)
+            .map_or(self.default_weight, |&(_, w)| w)
+    }
+
+    /// Resolve a CLI `--tag=NAME` value: numeric ids pass through as-is,
+    /// otherwise the name is looked up in the class table.
+    pub fn resolve_tag(&self, s: &str) -> Result<u32, String> {
+        if let Ok(n) = s.parse::<u32>() {
+            return Ok(n);
+        }
+        if s == "*" {
+            return Ok(0);
+        }
+        match self.classes.iter().position(|(n, _)| n == s) {
+            Some(i) => Ok(i as u32 + 1),
+            None => {
+                let known: Vec<&str> =
+                    self.classes.iter().map(|(n, _)| n.as_str()).collect();
+                Err(format!(
+                    "unknown tag class `{s}` ([qos] tags names: {})",
+                    if known.is_empty() { "<none>".into() } else { known.join(", ") }
+                ))
+            }
+        }
+    }
+
+    /// The weighted-fair share of `cap` a class may hold outstanding,
+    /// given per-class outstanding counts: `max(1, ceil(cap * w(class) /
+    /// Σ w(active)))` where the active set is every class with outstanding
+    /// work plus the requester itself. Idle weight is borrowed — a lone
+    /// active class gets the whole cap — and every class's share is at
+    /// least 1, so nobody can be starved outright. Inert table or
+    /// uncapped stream (`cap == 0`) → `usize::MAX`.
+    pub fn share(&self, cap: usize, class: usize, outstanding: &[u64]) -> usize {
+        if !self.enabled || cap == 0 {
+            return usize::MAX;
+        }
+        let w = self.weight(class) as usize;
+        let mut sum = 0usize;
+        for c in 0..self.n_classes() {
+            if c == class || outstanding.get(c).copied().unwrap_or(0) > 0 {
+                sum += self.weight(c) as usize;
+            }
+        }
+        (cap * w).div_ceil(sum).max(1)
+    }
+}
+
+/// Per-class serving account: admission counters plus the latency and
+/// work attribution that [`crate::coordinator::session::SessionStats`]
+/// surfaces as the per-tag SLO rows.
+#[derive(Clone, Debug, Default)]
+pub struct TagAccount {
+    /// Queries admitted under this class.
+    pub submitted: u64,
+    /// Tickets completed (orphaned lane tickets count as completed work
+    /// but skip the latency summary, mirroring the session-wide rule).
+    pub completed: u64,
+    /// Pipeline service time per completed ticket (submit → completion
+    /// inside the pipeline; admission parking is *not* included — see
+    /// DESIGN.md §QoS scheduler on why queueing fairness is asserted by
+    /// wall-clock at the client instead).
+    pub latency: LatencySummary,
+    /// Work counters delta-attributed at completion time from the live
+    /// in-process stage slots. Exact under the inline oracle (one query
+    /// in flight); an approximation under concurrency, and on the socket
+    /// transport remote work only lands at the finish barrier — the
+    /// session-wide totals remain the authoritative sum.
+    pub work: WorkStats,
+}
+
+/// One rendered per-tag SLO row (a snapshot of a [`TagAccount`] plus its
+/// identity), as surfaced by `SessionStats::per_tag` / `FrontStats`.
+#[derive(Clone, Debug)]
+pub struct TagStats {
+    /// Class display name (`"*"` for the catch-all).
+    pub name: String,
+    /// Canonical wire tag id (0 for the catch-all).
+    pub tag: u32,
+    /// Configured WFQ weight.
+    pub weight: u32,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Still in the pipeline when the snapshot was taken.
+    pub outstanding: u64,
+    pub latency: LatencySummary,
+    pub work: WorkStats,
+}
+
+/// mmLSH-style adaptive per-table probe budget (Jafari et al., arXiv
+/// 2003.06415) from a query's raw projections.
+///
+/// For each of the query's `tables`, the fractional parts of its `m` raw
+/// coordinates (the same `raw - floor(raw)` recipe as
+/// `HashFamily::query_probes`) feed [`probe_sequence`]`(fracs, t_max)`;
+/// every perturbation set's [`set_score`] — the Lv et al. proxy for the
+/// probability the perturbed bucket holds a true neighbor (lower is
+/// better) — is pooled across tables and sorted ascending. The budget
+/// keeps the cheap prefix whose cumulative score stays within `quantile`
+/// of the total mass, spreads it back over the tables, and adds the home
+/// bucket: `T = ceil(kept / tables) + 1`, clamped to `[1, t_max]`.
+///
+/// Deterministic in its inputs (stable sort, fixed f64 accumulation
+/// order), so a budget resolved at submission and stamped into the wire
+/// plan reproduces exactly on replay.
+pub fn adaptive_probes(
+    raw: &[f32],
+    m: usize,
+    tables: usize,
+    t_max: usize,
+    quantile: f64,
+) -> usize {
+    let t_max = t_max.max(1);
+    let tables = tables.max(1);
+    if t_max == 1 {
+        return 1;
+    }
+    debug_assert!(raw.len() >= tables * m, "raw projections shorter than L'*M");
+    let mut scores: Vec<f32> = Vec::with_capacity(tables * (t_max - 1));
+    for table in 0..tables {
+        let raw_t = &raw[table * m..(table + 1) * m];
+        // identical fractional-part recipe to HashFamily::query_probes so
+        // the scored sets are exactly the sets QR will later walk
+        let fracs: Vec<f32> = raw_t.iter().map(|f| f - f.floor() as i32 as f32).collect();
+        for set in probe_sequence(&fracs, t_max) {
+            scores.push(set_score(&set, &fracs));
+        }
+    }
+    scores.sort_by(|a, b| a.total_cmp(b));
+    let total: f64 = scores.iter().map(|&s| s as f64).sum();
+    let cutoff = quantile.clamp(0.0, 1.0) * total;
+    let mut acc = 0f64;
+    let mut kept = 0usize;
+    for &s in &scores {
+        acc += s as f64;
+        if acc > cutoff {
+            break;
+        }
+        kept += 1;
+    }
+    (kept.div_ceil(tables) + 1).clamp(1, t_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+
+    fn gold_silver() -> TagTable {
+        TagTable::parse("gold:4,silver:2,*:1").unwrap()
+    }
+
+    #[test]
+    fn parse_maps_names_weights_and_catchall() {
+        let t = gold_silver();
+        assert!(t.is_enabled());
+        assert_eq!(t.n_classes(), 3);
+        assert_eq!((t.class_name(0), t.weight(0)), ("gold", 4));
+        assert_eq!((t.class_name(1), t.weight(1)), ("silver", 2));
+        assert_eq!((t.class_name(2), t.weight(2)), ("*", 1));
+        // wire ids: 1-based into the named classes, everything else → *
+        assert_eq!(t.class_of(1), 0);
+        assert_eq!(t.class_of(2), 1);
+        assert_eq!(t.class_of(0), 2);
+        assert_eq!(t.class_of(99), 2);
+        assert_eq!(t.canonical_tag(0), 1);
+        assert_eq!(t.canonical_tag(2), 0);
+    }
+
+    #[test]
+    fn parse_rejects_hostile_specs() {
+        assert!(TagTable::parse("gold:0").is_err());
+        assert!(TagTable::parse("gold:4,gold:2").is_err());
+        assert!(TagTable::parse("*:1,*:2").is_err());
+        assert!(TagTable::parse("gold:abc").is_err());
+        assert!(TagTable::parse("bad name:1").is_err());
+        // bare name = weight 1; omitted * = weight 1
+        let t = TagTable::parse("gold").unwrap();
+        assert_eq!(t.weight(0), 1);
+        assert_eq!(t.weight(1), 1);
+    }
+
+    #[test]
+    fn empty_spec_is_inert() {
+        let t = TagTable::parse("").unwrap();
+        assert!(!t.is_enabled());
+        assert_eq!(t.n_classes(), 1);
+        assert_eq!(t.share(4, 0, &[100]), usize::MAX);
+        // and so is the uncapped stream even with classes configured
+        assert_eq!(gold_silver().share(0, 0, &[1, 1, 1]), usize::MAX);
+    }
+
+    #[test]
+    fn resolve_tag_accepts_numbers_names_and_star() {
+        let t = gold_silver();
+        assert_eq!(t.resolve_tag("silver").unwrap(), 2);
+        assert_eq!(t.resolve_tag("7").unwrap(), 7);
+        assert_eq!(t.resolve_tag("*").unwrap(), 0);
+        assert!(t.resolve_tag("bronze").is_err());
+        assert!(TagTable::parse("").unwrap().resolve_tag("bronze").is_err());
+    }
+
+    #[test]
+    fn share_borrows_idle_weight_and_repartitions_on_contention() {
+        let t = TagTable::parse("gold:1,silver:1").unwrap();
+        // lone active class borrows the whole cap (work-conserving)
+        assert_eq!(t.share(4, 0, &[0, 0, 0]), 4);
+        assert_eq!(t.share(4, 1, &[0, 0, 0]), 4);
+        // both named classes active: equal weights halve the cap
+        assert_eq!(t.share(4, 0, &[1, 1, 0]), 2);
+        assert_eq!(t.share(4, 1, &[1, 1, 0]), 2);
+        // weighted split: gold 3 : silver 1 over cap 4
+        let w = TagTable::parse("gold:3,silver:1").unwrap();
+        assert_eq!(w.share(4, 0, &[1, 1, 0]), 3);
+        assert_eq!(w.share(4, 1, &[1, 1, 0]), 1);
+        // the requester counts as active even at 0 outstanding
+        assert_eq!(w.share(4, 1, &[4, 0, 0]), 1);
+    }
+
+    #[test]
+    fn share_never_starves_a_class() {
+        check("share-floor", 60, |g| {
+            let t = TagTable::parse("a:7,b:3,c:1,*:2").unwrap();
+            let cap = g.usize_in(1, 12);
+            let out: Vec<u64> = (0..4).map(|_| g.usize_in(0, 5) as u64).collect();
+            for class in 0..t.n_classes() {
+                let s = t.share(cap, class, &out);
+                assert!(s >= 1, "share must be >= 1");
+                assert!(s <= cap.max(1), "share {s} exceeds cap {cap}");
+            }
+        });
+    }
+
+    #[test]
+    fn shares_of_active_classes_cover_the_cap() {
+        // Work conservation: when every class is active, the share sum is
+        // at least the cap (ceil rounding may overshoot, never undershoot).
+        check("share-cover", 60, |g| {
+            let t = TagTable::parse("a:4,b:2,*:1").unwrap();
+            let cap = g.usize_in(1, 16);
+            let out = [1u64, 1, 1];
+            let sum: usize = (0..3).map(|c| t.share(cap, c, &out)).sum();
+            assert!(sum >= cap, "active shares {sum} must cover cap {cap}");
+        });
+    }
+
+    fn ramp_raw(m: usize, tables: usize, spread: f32) -> Vec<f32> {
+        // fractional parts walk away from 0.5 (bucket center) as `spread`
+        // grows: larger spread → cheaper perturbations near the boundary
+        (0..m * tables)
+            .map(|i| {
+                let phase = (i as f32 * 0.37).sin() * spread;
+                3.0 + 0.5 + phase.clamp(-0.49, 0.49)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn adaptive_budget_bounds_and_determinism() {
+        check("adaptive-bounds", 40, |g| {
+            let m = g.usize_in(2, 8);
+            let tables = g.usize_in(1, 4);
+            let t_max = g.usize_in(1, 40);
+            let q = g.f32_in(0.0, 1.0) as f64;
+            let raw: Vec<f32> = (0..m * tables).map(|_| g.f32_in(-20.0, 20.0)).collect();
+            let t1 = adaptive_probes(&raw, m, tables, t_max, q);
+            assert!((1..=t_max.max(1)).contains(&t1));
+            assert_eq!(t1, adaptive_probes(&raw, m, tables, t_max, q));
+        });
+    }
+
+    #[test]
+    fn adaptive_budget_is_monotone_in_quantile() {
+        let raw = ramp_raw(8, 3, 0.4);
+        let mut last = 0usize;
+        for q in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+            let t = adaptive_probes(&raw, 8, 3, 32, q);
+            assert!(t >= last, "budget shrank as quantile grew: {t} < {last} at q={q}");
+            last = t;
+        }
+        // the full mass keeps every scored perturbation → the ceiling
+        assert_eq!(adaptive_probes(&raw, 8, 3, 32, 1.0), 32);
+    }
+
+    #[test]
+    fn boundary_queries_probe_deeper_than_centered_ones() {
+        // A query whose fracs hug the bucket boundary has many low-score
+        // perturbations — more of the mass fits under the quantile early,
+        // but the *count* kept under a mid quantile is larger for the
+        // centered query whose scores are all identical. What matters for
+        // the frontier is simply that the two profiles resolve different
+        // budgets — the fixed-T client can't express that.
+        let boundary = adaptive_probes(&ramp_raw(8, 2, 0.49), 8, 2, 24, 0.5);
+        let centered = adaptive_probes(&ramp_raw(8, 2, 0.0), 8, 2, 24, 0.5);
+        assert_ne!(boundary, centered, "distinct profiles should resolve distinct budgets");
+    }
+
+    #[test]
+    fn adaptive_budget_degenerate_inputs_stay_clamped() {
+        // t_max = 1 short-circuits to the home bucket
+        assert_eq!(adaptive_probes(&[0.5; 8], 4, 2, 1, 0.9), 1);
+        // zero tables is treated as 1 (same .max(1) rule as query_probes)
+        assert_eq!(adaptive_probes(&[0.5; 4], 4, 0, 1, 0.5), 1);
+    }
+}

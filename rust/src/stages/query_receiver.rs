@@ -8,6 +8,13 @@
 //! Probe-level aggregation (paper §IV-D): all probes of a query that route
 //! to the *same* BI copy travel in one `Msg::Query`, so the message count
 //! grows sublinearly in T.
+//!
+//! QR is deliberately *policy-free*: the QoS scheduler's adaptive probe
+//! budgets (`[qos] adaptive_probes`, DESIGN.md §QoS scheduler) are
+//! resolved at session admission and arrive here as an ordinary explicit
+//! `opts.probes` value, so this stage's resolution — and with it every
+//! transport replaying the same wire plan — stays bit-identical whether
+//! the budget came from the config, the caller, or the adaptive policy.
 
 use crate::core::lsh::HashFamily;
 use crate::dataflow::message::{Dest, Msg, QueryOptions};

@@ -6,6 +6,10 @@
 //! * fairness — a flooding client cannot starve a light one: the light
 //!   client's queries complete (bounded wait) while the hog saturates
 //!   the backpressure window, and both match the oracle;
+//! * QoS tags — with `[qos] tags` classes configured, a flooding *tag*
+//!   cannot starve a light tag either (WFQ at session admission, under
+//!   the per-conn fairness), on the threaded AND socket backings, with
+//!   the per-tag SLO rows in `FrontStats` accounting for every query;
 //! * disconnect robustness — a client killed mid-burst is evicted
 //!   (counted, in-flight work orphaned) and the survivors' results stay
 //!   bit-identical; the session keeps serving;
@@ -312,6 +316,115 @@ fn flooding_client_does_not_starve_a_light_one() {
     assert_eq!(stats.queries, (HOG + LIGHT) as u64);
     assert_eq!(stats.completions, (HOG + LIGHT) as u64);
     assert_eq!(stats.evictions, 0);
+}
+
+/// The QoS-tagged variant of the fairness scenario: the hog floods under
+/// the `flood` tag class and sits on its completions; the light tenant
+/// runs its queries under the `light` tag. WFQ at session admission caps
+/// the flooder at its share of `pending_cap`, so the light tag always
+/// finds room — asserted by the light client completing inside the read
+/// timeout and by the per-tag SLO rows in [`front::FrontStats`].
+fn assert_flooding_tag_does_not_starve_light_tag(exec: &dyn Executor, cfg: &Config) {
+    const HOG: usize = 32;
+    const LIGHT: usize = 5;
+    let (ds, qs, hasher, ranker) = small_world(cfg, HOG + LIGHT);
+    let plans: Vec<QueryOptions> = (0..HOG + LIGHT)
+        .map(|qi| QueryOptions {
+            tag: if qi < HOG { 1 } else { 2 },
+            ..Default::default()
+        })
+        .collect();
+    let oracle = inline_oracle(cfg, &ds, &qs, &hasher, &ranker, &plans);
+
+    let (stats, (hog_res, light_res)) =
+        serve_with(exec, cfg, &ds, &hasher, &ranker, |addr: &str| {
+            let gate = Barrier::new(2);
+            std::thread::scope(|s| {
+                let hog = s.spawn(|| -> anyhow::Result<Claimed> {
+                    let flood = || -> anyhow::Result<Client> {
+                        let mut c = Client::connect(addr)?;
+                        c.set_read_timeout(Some(CLAIM_TIMEOUT))?;
+                        for qi in 0..HOG {
+                            c.submit(qs.get(qi), plans[qi])?;
+                        }
+                        Ok(c)
+                    };
+                    let flooded = flood();
+                    gate.wait(); // flood is in; let the light tenant run
+                    gate.wait(); // light tenant finished
+                    let mut c = flooded?;
+                    let mut got = Vec::new();
+                    for _ in 0..HOG {
+                        let done = c.recv()?;
+                        got.push((done.qid as usize, done.hits));
+                    }
+                    Ok(got)
+                });
+                let light = s.spawn(|| -> anyhow::Result<Claimed> {
+                    gate.wait();
+                    let run = || -> anyhow::Result<Claimed> {
+                        let mut c = Client::connect(addr)?;
+                        c.set_read_timeout(Some(CLAIM_TIMEOUT))?;
+                        for qi in HOG..HOG + LIGHT {
+                            c.submit(qs.get(qi), plans[qi])?;
+                        }
+                        let mut got = Vec::new();
+                        for _ in 0..LIGHT {
+                            let done = c.recv()?;
+                            got.push((HOG + done.qid as usize, done.hits));
+                        }
+                        Ok(got)
+                    };
+                    let res = run();
+                    gate.wait();
+                    res
+                });
+                (hog.join().expect("hog thread"), light.join().expect("light thread"))
+            })
+        });
+
+    let light = light_res.expect("light tag starved or failed");
+    assert_eq!(light.len(), LIGHT);
+    for (qi, hits) in &light {
+        assert_eq!(hits, &oracle[*qi].1, "light-tag query {qi} diverged");
+    }
+    let hog = hog_res.expect("flooding tag failed");
+    assert_eq!(hog.len(), HOG);
+    for (qi, hits) in &hog {
+        assert_eq!(hits, &oracle[*qi].1, "flood-tag query {qi} diverged");
+    }
+    assert_eq!(stats.completions, (HOG + LIGHT) as u64);
+    assert_eq!(stats.evictions, 0);
+
+    // The per-tag SLO rows surfaced through FrontStats account for every
+    // query by class, nothing left outstanding, nothing bled into `*`.
+    let rows: std::collections::HashMap<&str, _> =
+        stats.per_tag.iter().map(|r| (r.name.as_str(), r)).collect();
+    assert_eq!(stats.per_tag.len(), 3, "flood, light and the catch-all");
+    assert_eq!((rows["flood"].submitted, rows["flood"].completed), (HOG as u64, HOG as u64));
+    assert_eq!((rows["light"].submitted, rows["light"].completed), (LIGHT as u64, LIGHT as u64));
+    assert_eq!(rows["light"].latency.count, LIGHT as u64);
+    assert_eq!(rows["flood"].outstanding + rows["light"].outstanding, 0);
+    assert_eq!(rows["*"].submitted, 0, "untagged class saw traffic from nowhere");
+}
+
+#[test]
+fn front_flooding_tag_does_not_starve_light_tag_threaded() {
+    let mut cfg = front_cfg();
+    cfg.qos.tags = "flood:1,light:1".into();
+    cfg.stream.pending_cap = 4;
+    assert_flooding_tag_does_not_starve_light_tag(&ThreadedExecutor, &cfg);
+}
+
+#[test]
+fn front_flooding_tag_does_not_starve_light_tag_socket() {
+    let mut cfg = front_cfg();
+    cfg.qos.tags = "flood:1,light:1".into();
+    cfg.stream.pending_cap = 4;
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    assert_flooding_tag_does_not_starve_light_tag(net.executor(), &cfg);
+    net.shutdown().expect("clean worker shutdown");
 }
 
 // -------------------------------------------------- disconnect mid-burst

@@ -1,0 +1,227 @@
+//! Multi-tenant QoS scheduler contracts (DESIGN.md §QoS scheduler):
+//!
+//! * mixed-tag differential — queries spread across gold/silver/catch-all
+//!   tag classes (WFQ gates engaged) produce per-ticket results and option
+//!   echoes bit-identical to the inline oracle on the threaded AND socket
+//!   transports, and the per-tag SLO rows account for every query;
+//! * starvation prevention — a flooding tag submitting concurrently with a
+//!   light tag cannot zero the light tag's share: both drain completely
+//!   (liveness) and the per-tag stats say so;
+//! * adaptive probing — with `[qos] adaptive_probes` on, per-query budgets
+//!   are resolved at submission and stamped into the wire plan, so the
+//!   socket transport replays the inline oracle exactly, echoes included.
+
+use parlsh::config::Config;
+use parlsh::coordinator::session::IndexSession;
+use parlsh::coordinator::{build_index, build_index_on, search};
+use parlsh::core::lsh::{HashFamily, LshParams};
+use parlsh::data::synth::{distorted_queries, synthesize, SynthSpec};
+use parlsh::data::Dataset;
+use parlsh::dataflow::exec::{Executor, InlineExecutor, ThreadedExecutor};
+use parlsh::net::NetSession;
+use parlsh::runtime::{Ranker, ScalarHasher, ScalarRanker};
+use parlsh::QueryOptions;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+fn qos_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.lsh = LshParams { l: 4, m: 8, w: 600.0, k: 5, t: 8, seed: 3 };
+    cfg.cluster.bi_nodes = 1;
+    cfg.cluster.dp_nodes = 2;
+    cfg.cluster.ag_copies = 2;
+    cfg.data.n = 1_000;
+    cfg.stream.pending_cap = 6;
+    cfg.qos.tags = "gold:4,silver:2,*:1".into();
+    cfg
+}
+
+fn small_world(
+    cfg: &Config,
+    queries: usize,
+) -> (Dataset, Dataset, ScalarHasher, Arc<dyn Ranker>) {
+    let ds = synthesize(SynthSpec { n: cfg.data.n, clusters: 40, ..Default::default() });
+    let (qs, _) = distorted_queries(&ds, queries, 4.0, 7);
+    let family = HashFamily::sample(ds.dim, cfg.lsh);
+    let ranker: Arc<dyn Ranker> = Arc::new(ScalarRanker { dim: ds.dim });
+    (ds, qs, ScalarHasher { family }, ranker)
+}
+
+/// Heterogeneous plans spread over the tag classes: gold (1), silver (2),
+/// the catch-all (0), and an unknown id (99 → catch-all).
+fn tagged_plan(qi: usize) -> QueryOptions {
+    QueryOptions {
+        k: [0u32, 3][qi % 2],
+        probes: [0u32, 1, 12][qi % 3],
+        tables: 0,
+        tag: [1u32, 2, 0, 99][qi % 4],
+    }
+}
+
+type FullRow = (QueryOptions, Vec<(f32, u32)>);
+
+/// Stream every query through one session on `exec` (submit in order,
+/// claim as they arrive), returning per-query rows plus the close stats.
+fn run_tagged_stream(
+    exec: &dyn Executor,
+    cfg: &Config,
+    ds: &Dataset,
+    qs: &Dataset,
+    hasher: &ScalarHasher,
+    ranker: &Arc<dyn Ranker>,
+) -> (Vec<FullRow>, parlsh::coordinator::session::SessionStats) {
+    let mut cluster = build_index_on(exec, cfg, ds, hasher);
+    let session = IndexSession::attach(exec, &mut cluster, hasher, Some(ranker.clone()));
+    let mut got: Vec<Option<FullRow>> = vec![None; qs.len()];
+    for qi in 0..qs.len() {
+        session.submit_with(qs.get(qi), tagged_plan(qi));
+        while let Some((t, o, h, _)) = session.try_recv_full() {
+            got[t.0 as usize] = Some((o, h));
+        }
+    }
+    for (t, o, h, _) in session.drain_full() {
+        got[t.0 as usize] = Some((o, h));
+    }
+    let stats = session.close();
+    (got.into_iter().map(|r| r.expect("query completed")).collect(), stats)
+}
+
+/// The mixed-tag differential: `exec` must replay the inline oracle per
+/// ticket (results AND option echoes, tags included) with the WFQ gates
+/// engaged, and the per-tag SLO rows must account for every query.
+fn assert_tagged_stream_matches_inline(exec: &dyn Executor, cfg: &Config) {
+    let (ds, qs, hasher, ranker) = small_world(cfg, 16);
+    let (oracle, _) = run_tagged_stream(&InlineExecutor, cfg, &ds, &qs, &hasher, &ranker);
+    let (got, stats) = run_tagged_stream(exec, cfg, &ds, &qs, &hasher, &ranker);
+    for (qi, (want, have)) in oracle.iter().zip(&got).enumerate() {
+        assert_eq!(have.0, want.0, "option echo diverged for query {qi}");
+        assert_eq!(have.1, want.1, "tagged query {qi} diverged from the inline oracle");
+        assert_eq!(have.0.tag, tagged_plan(qi).tag, "tag echo lost for query {qi}");
+    }
+
+    // 16 queries cycle the tags [gold, silver, *, unknown→*]: 4 + 4 + 8.
+    let rows: HashMap<&str, _> =
+        stats.per_tag.iter().map(|r| (r.name.as_str(), r)).collect();
+    assert_eq!(stats.per_tag.len(), 3, "gold, silver and the catch-all");
+    for (name, want) in [("gold", 4u64), ("silver", 4), ("*", 8)] {
+        let r = rows[name];
+        assert_eq!((r.submitted, r.completed), (want, want), "class {name} miscounted");
+        assert_eq!(r.outstanding, 0, "class {name} left queries in flight");
+        assert_eq!(r.latency.count, want, "class {name} latency rows miscounted");
+    }
+    assert!(rows["gold"].weight == 4 && rows["silver"].weight == 2 && rows["*"].weight == 1);
+}
+
+#[test]
+fn mixed_tags_match_inline_oracle_threaded() {
+    assert_tagged_stream_matches_inline(&ThreadedExecutor, &qos_cfg());
+}
+
+#[test]
+fn mixed_tags_match_inline_oracle_socket() {
+    let cfg = qos_cfg();
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    assert_tagged_stream_matches_inline(net.executor(), &cfg);
+    net.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn flooding_tag_cannot_starve_light_tag() {
+    // A flooder (32 queries, tag `flood`) and a light tenant (8 queries,
+    // tag `light`) submit concurrently against a tight pending cap. WFQ
+    // caps the flooder at its share, so the light tag always finds room:
+    // the test completing at all is the liveness assertion, and the
+    // per-tag rows prove nobody's work was dropped. Results still match
+    // the inline oracle per ticket — fairness never changes answers.
+    let mut cfg = qos_cfg();
+    cfg.qos.tags = "flood:1,light:1".into();
+    cfg.stream.pending_cap = 2;
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 40);
+    let mut oracle_cluster = build_index(&cfg, &ds, &hasher);
+    let oracle = search(&mut oracle_cluster, &qs, &hasher, &ranker);
+
+    let mut cluster = build_index(&cfg, &ds, &hasher);
+    let session =
+        IndexSession::attach(&ThreadedExecutor, &mut cluster, &hasher, Some(ranker.clone()));
+    let assignments: Vec<(usize, parlsh::QueryTicket)> = std::thread::scope(|s| {
+        let submit_range = |range: std::ops::Range<usize>, tag: u32| {
+            let session = &session;
+            let qs = &qs;
+            move || -> Vec<(usize, parlsh::QueryTicket)> {
+                range
+                    .map(|qi| {
+                        let opts = QueryOptions { tag, ..Default::default() };
+                        (qi, session.submit_with(qs.get(qi), opts))
+                    })
+                    .collect()
+            }
+        };
+        let flood = s.spawn(submit_range(0..32, 1));
+        let light = s.spawn(submit_range(32..40, 2));
+        let mut v = flood.join().expect("flooder");
+        v.extend(light.join().expect("light tenant"));
+        v
+    });
+
+    let by_ticket: HashMap<u64, Vec<(f32, u32)>> = session
+        .drain_full()
+        .into_iter()
+        .map(|(t, _, hits, _)| (t.0, hits))
+        .collect();
+    for (qi, t) in &assignments {
+        assert_eq!(by_ticket[&t.0], oracle.results[*qi], "query {qi} diverged under WFQ");
+    }
+    let stats = session.close();
+    let rows: HashMap<&str, _> =
+        stats.per_tag.iter().map(|r| (r.name.as_str(), r)).collect();
+    assert_eq!((rows["flood"].submitted, rows["flood"].completed), (32, 32));
+    assert_eq!((rows["light"].submitted, rows["light"].completed), (8, 8));
+    assert_eq!(rows["light"].outstanding, 0);
+    assert_eq!(rows["*"].submitted, 0, "untagged class saw traffic from nowhere");
+}
+
+#[test]
+fn adaptive_budgets_replay_identically_over_the_wire() {
+    // `[qos] adaptive_probes` resolves each query's probe budget at
+    // submission and stamps it into the wire plan, so the socket workers
+    // replay the inline oracle bit-identically — echoes included — and
+    // every echoed budget sits inside [1, adaptive_max], well under the
+    // config's T (proof the adaptive policy, not the default, picked it).
+    let mut cfg = qos_cfg();
+    cfg.lsh.t = 30;
+    cfg.qos.adaptive_probes = true;
+    cfg.qos.adaptive_quantile = 0.5;
+    cfg.qos.adaptive_max = 8;
+    let (ds, qs, hasher, ranker) = small_world(&cfg, 12);
+
+    let run = |exec: &dyn Executor| -> Vec<FullRow> {
+        let mut cluster = build_index_on(exec, &cfg, &ds, &hasher);
+        let session = IndexSession::attach(exec, &mut cluster, &hasher, Some(ranker.clone()));
+        for qi in 0..qs.len() {
+            session.submit_with(qs.get(qi), QueryOptions::default());
+        }
+        let mut got: Vec<Option<FullRow>> = vec![None; qs.len()];
+        for (t, o, h, _) in session.drain_full() {
+            got[t.0 as usize] = Some((o, h));
+        }
+        session.close();
+        got.into_iter().map(|r| r.expect("query completed")).collect()
+    };
+
+    let inline = run(&InlineExecutor);
+    for (qi, (o, _)) in inline.iter().enumerate() {
+        assert!(
+            (1..=8).contains(&o.probes),
+            "query {qi}: adaptive budget {} outside [1, adaptive_max]",
+            o.probes
+        );
+    }
+
+    let bin = env!("CARGO_BIN_EXE_parlsh");
+    let net = NetSession::launch_with_bin(Path::new(bin), &cfg, 128).expect("launch workers");
+    let socket = run(net.executor());
+    net.shutdown().expect("clean shutdown");
+    assert_eq!(inline, socket, "adaptive plans diverged between inline and socket");
+}
